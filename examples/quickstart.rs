@@ -1,0 +1,61 @@
+//! Quickstart: build a small graph, compute its top eigenvalues with the
+//! semi-external-memory eigensolver, and print the results.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use flasheigen::dense::DenseCtx;
+use flasheigen::eigen::{solve, EigenConfig, SpmmOperator, Which};
+use flasheigen::graph::gnm_undirected;
+use flasheigen::safs::{Safs, SafsConfig};
+use flasheigen::sparse::{build_matrix, BuildTarget, DEFAULT_TILE_DIM};
+use flasheigen::spmm::SpmmOpts;
+use flasheigen::util::rng::Rng;
+
+fn main() {
+    // 1. A random undirected graph: 50K vertices, 500K edges.
+    let mut rng = Rng::new(42);
+    let coo = gnm_undirected(50_000, 500_000, &mut rng);
+    println!("graph: |V|={} |E|={}", coo.n_rows, coo.nnz());
+
+    // 2. A simulated 24-SSD array behind SAFS, and the sparse-matrix
+    //    image stored on it (the semi-external-memory layout).
+    let fs = Safs::new(SafsConfig::default());
+    let matrix = build_matrix(&coo, DEFAULT_TILE_DIM, BuildTarget::Safs(&fs, "adj"));
+    println!(
+        "tile image on SSDs: {} ({} tile rows)",
+        flasheigen::util::humansize::fmt_bytes(matrix.storage_bytes()),
+        matrix.num_tile_rows()
+    );
+
+    // 3. The eigensolver: subspace on SSDs too (FE-SEM mode).
+    let ctx = DenseCtx::new(fs.clone(), /* external-memory */ true);
+    let op = SpmmOperator::new(matrix, SpmmOpts::default(), 4);
+    let cfg = EigenConfig {
+        nev: 4,
+        block_size: 2,
+        num_blocks: 12,
+        tol: 1e-8,
+        max_restarts: 200,
+        which: Which::LargestMagnitude,
+        seed: 7,
+        compute_eigenvectors: false,
+    };
+    let res = solve(&op, &ctx, &cfg);
+
+    println!("eigenvalues: {:?}", res.eigenvalues);
+    println!("residuals:   {:?}", res.residuals);
+    println!(
+        "converged={} after {} restarts, {} SpMM applies",
+        res.converged, res.restarts, res.operator_applies
+    );
+    let stats = fs.stats();
+    println!(
+        "SSD traffic: read {} write {} (balance skew {:.2})",
+        flasheigen::util::humansize::fmt_bytes(stats.bytes_read),
+        flasheigen::util::humansize::fmt_bytes(stats.bytes_written),
+        stats.skew()
+    );
+    assert!(res.converged, "quickstart should converge");
+}

@@ -1,0 +1,160 @@
+//! Spectral clustering (the paper's motivating application, §1): embed a
+//! stochastic-block-model graph with the top eigenvectors of its
+//! adjacency matrix, cluster the embedding with k-means, and measure the
+//! recovered community structure against ground truth.
+//!
+//! ```bash
+//! cargo run --release --example spectral_clustering
+//! ```
+
+use flasheigen::dense::DenseCtx;
+use flasheigen::eigen::{solve, EigenConfig, SpmmOperator, Which};
+use flasheigen::safs::{Safs, SafsConfig};
+use flasheigen::sparse::{build_matrix, BuildTarget, CooMatrix};
+use flasheigen::spmm::SpmmOpts;
+use flasheigen::util::rng::Rng;
+
+/// Stochastic block model: `k` communities of `size` vertices; edge
+/// probability `p_in` within and `p_out` across communities.
+fn sbm(k: usize, size: usize, p_in: f64, p_out: f64, rng: &mut Rng) -> CooMatrix {
+    let n = (k * size) as u64;
+    let mut coo = CooMatrix::new(n, n);
+    // Sparse sampling: expected degrees are small, so sample neighbors
+    // per vertex rather than all pairs.
+    for v in 0..n {
+        let comm = v as usize / size;
+        let d_in = (p_in * size as f64) as usize;
+        let d_out = (p_out * (n as usize - size) as f64) as usize;
+        for _ in 0..d_in {
+            let u = (comm * size) as u64 + rng.gen_range(size as u64);
+            if u != v {
+                coo.push(v as u32, u as u32);
+            }
+        }
+        for _ in 0..d_out {
+            let u = rng.gen_range(n);
+            if u as usize / size != comm {
+                coo.push(v as u32, u as u32);
+            }
+        }
+    }
+    coo.symmetrize();
+    coo
+}
+
+/// k-means on rows of an n×d embedding (a few Lloyd iterations).
+fn kmeans(data: &[f64], n: usize, d: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut centers: Vec<f64> = (0..k)
+        .flat_map(|_| {
+            let r = rng.gen_usize(n);
+            data[r * d..(r + 1) * d].to_vec()
+        })
+        .collect();
+    let mut assign = vec![0usize; n];
+    for _iter in 0..25 {
+        // Assign.
+        for i in 0..n {
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..k {
+                let dist: f64 = (0..d)
+                    .map(|j| (data[i * d + j] - centers[c * d + j]).powi(2))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            assign[i] = best.1;
+        }
+        // Update.
+        let mut sums = vec![0.0; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            counts[assign[i]] += 1;
+            for j in 0..d {
+                sums[assign[i] * d + j] += data[i * d + j];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for j in 0..d {
+                    centers[c * d + j] = sums[c * d + j] / counts[c] as f64;
+                }
+            }
+        }
+    }
+    assign
+}
+
+/// Clustering accuracy under the best label permutation (k small).
+fn accuracy(assign: &[usize], truth: &[usize], k: usize) -> f64 {
+    let mut perm: Vec<usize> = (0..k).collect();
+    let mut best = 0usize;
+    // Heap's algorithm over permutations (k ≤ 4 here).
+    fn permute(perm: &mut Vec<usize>, l: usize, assign: &[usize], truth: &[usize], best: &mut usize) {
+        if l == perm.len() {
+            let correct = assign
+                .iter()
+                .zip(truth)
+                .filter(|&(&a, &t)| perm[a] == t)
+                .count();
+            *best = (*best).max(correct);
+            return;
+        }
+        for i in l..perm.len() {
+            perm.swap(l, i);
+            permute(perm, l + 1, assign, truth, best);
+            perm.swap(l, i);
+        }
+    }
+    permute(&mut perm, 0, assign, truth, &mut best);
+    best as f64 / assign.len() as f64
+}
+
+fn main() {
+    let mut rng = Rng::new(123);
+    let (k, size) = (3usize, 4000usize);
+    let coo = sbm(k, size, 0.004, 0.0004, &mut rng);
+    let n = coo.n_rows as usize;
+    println!("SBM: {k} communities × {size} vertices, |E|={}", coo.nnz());
+
+    // Eigendecompose on the simulated SSD array (SEM mode).
+    let fs = Safs::new(SafsConfig::default());
+    let matrix = build_matrix(&coo, 4096, BuildTarget::Safs(&fs, "sbm"));
+    let ctx = DenseCtx::new(fs, true);
+    let op = SpmmOperator::new(matrix, SpmmOpts::default(), 4);
+    let cfg = EigenConfig {
+        nev: k,
+        block_size: k,
+        num_blocks: 10,
+        tol: 1e-7,
+        max_restarts: 300,
+        which: Which::LargestAlgebraic,
+        seed: 5,
+        compute_eigenvectors: true,
+    };
+    let res = solve(&op, &ctx, &cfg);
+    println!(
+        "top-{} eigenvalues: {:?} (converged={})",
+        k, res.eigenvalues, res.converged
+    );
+
+    // Embed: rows of the Ritz-vector block.
+    let blocks = res.eigenvectors.expect("eigenvectors");
+    let mut embedding = vec![0.0; n * k];
+    let mut col = 0usize;
+    for b in &blocks {
+        let cm = b.to_colmajor();
+        for j in 0..b.n_cols {
+            for i in 0..n {
+                embedding[i * k + col + j] = cm[j * n + i];
+            }
+        }
+        col += b.n_cols;
+    }
+
+    let assign = kmeans(&embedding, n, k, k, &mut rng);
+    let truth: Vec<usize> = (0..n).map(|v| v / size).collect();
+    let acc = accuracy(&assign, &truth, k);
+    println!("clustering accuracy vs planted communities: {:.1}%", 100.0 * acc);
+    assert!(acc > 0.9, "spectral clustering should recover the SBM communities");
+}

@@ -1,0 +1,79 @@
+"""AOT bridge: lower the L2 ops (with their L1 Pallas kernels inlined) to
+HLO **text** artifacts + a manifest the Rust runtime loads at startup.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # Rust-side data is f64
+
+from jax._src.lib import xla_client as xc
+
+from .model import OPS
+
+# Shape variants: rows = row-interval sizes the Rust DenseCtx uses;
+# m/b = TAS block widths.  The Rust dispatcher falls back to the native
+# kernel for any shape without an exact artifact.
+DEFAULT_ROWS = [16384, 65536]
+DEFAULT_WIDTHS = [1, 2, 4, 8]
+DTYPE = "float64"
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def variants(rows_list, widths):
+    for op in ("tsgemm", "gram"):
+        for rows in rows_list:
+            for m in widths:
+                for b in widths:
+                    yield op, rows, m, b
+    for rows in rows_list:
+        for b in widths:
+            yield "axpby", rows, 1, b
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--rows", type=int, nargs="*", default=DEFAULT_ROWS)
+    ap.add_argument("--widths", type=int, nargs="*", default=DEFAULT_WIDTHS)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "dtype": DTYPE, "artifacts": []}
+    for op, rows, m, b in variants(args.rows, args.widths):
+        fn, shapes = OPS[op]
+        example = shapes(rows, m, b, DTYPE)
+        text = to_hlo_text(fn, example)
+        name = f"{op}_r{rows}_m{m}_b{b}.hlo.txt"
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {"op": op, "rows": rows, "m": m, "b": b, "path": name}
+        )
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""L1 Pallas kernel: fused elementwise AXPBY for MvAddMv.
+
+``alpha * x + beta * y`` over one row interval (both operands in the
+flat column-major layout, seen here as a 1-D array).  Trivial compute,
+but it exercises the elementwise-kernel path end to end and fuses the
+two scales and the add into a single memory pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 65536
+
+
+def _kernel(ab_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = ab_ref[0] * x_ref[...] + ab_ref[1] * y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def axpby(x, y, alpha, beta, *, block=DEFAULT_BLOCK):
+    """Pallas fused ``alpha*x + beta*y`` over flat arrays."""
+    (n,) = x.shape
+    assert y.shape == (n,)
+    if n % block != 0:
+        block = n
+    ab = jnp.stack(
+        [jnp.asarray(alpha, x.dtype), jnp.asarray(beta, x.dtype)]
+    ).reshape((2,))
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(ab, x, y)

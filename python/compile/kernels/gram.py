@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: the Gram block of MvTransMv (op3).
+
+Computes ``GT + alpha * YT @ XT^T`` with XT:(m, rows), YT:(b, rows),
+GT:(b, m) — the transposed convention of ref.py.
+
+TPU mapping: the grid walks the `rows` axis; each step loads one
+(m, RB) block of XT and one (b, RB) block of YT into VMEM and
+accumulates into the (b, m) output block, which is *revisited* at every
+step (constant index_map) — the Pallas analogue of the paper's
+per-thread partial Gram matrices that are reduced at the end (§3.4.2).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_BLOCK = 4096
+
+
+def _kernel(alpha_ref, xt_ref, yt_ref, gt_ref, o_ref):
+    """Accumulating grid step: o += alpha * yt @ xt^T (init from gt)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = gt_ref[...]
+
+    o_ref[...] += alpha_ref[0] * jnp.dot(
+        yt_ref[...], xt_ref[...].T, preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def gram(xt, yt, gt, alpha, *, row_block=DEFAULT_ROW_BLOCK):
+    """Pallas Gram block: ``GT + alpha * YT @ XT^T``."""
+    m, rows = xt.shape
+    b, rows2 = yt.shape
+    assert rows == rows2, (xt.shape, yt.shape)
+    assert gt.shape == (b, m), (gt.shape, (b, m))
+    if rows % row_block != 0:
+        row_block = rows
+    grid = (rows // row_block,)
+    alpha_arr = jnp.asarray(alpha, dtype=gt.dtype).reshape((1,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((m, row_block), lambda i: (0, i)),
+            pl.BlockSpec((b, row_block), lambda i: (0, i)),
+            pl.BlockSpec((b, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), gt.dtype),
+        interpret=True,
+    )(alpha_arr, xt, yt, gt)

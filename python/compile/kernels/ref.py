@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+All arrays use the *transposed* convention shared with the Rust side:
+a column-major Rust buffer of an (rows x k) matrix is bit-identical to a
+row-major (k, rows) jax array, so no layout conversion ever happens at
+the FFI boundary.
+
+  * ``tsgemm_ref(xt, bt, ot)``  — op1 block: OT + BT @ XT
+      xt: (m, rows), bt: (b, m), ot: (b, rows)          -> (b, rows)
+  * ``gram_ref(xt, yt, gt, alpha)`` — op3 block: GT + alpha * YT @ XT^T
+      xt: (m, rows), yt: (b, rows), gt: (b, m), alpha: scalar -> (b, m)
+  * ``axpby_ref(x, y, alpha, beta)`` — elementwise alpha*x + beta*y
+"""
+
+import jax.numpy as jnp
+
+
+def tsgemm_ref(xt, bt, ot):
+    """OT + BT @ XT: the MvTimesMatAddMv row-interval block."""
+    return ot + jnp.matmul(bt, xt, preferred_element_type=ot.dtype)
+
+
+def gram_ref(xt, yt, gt, alpha):
+    """GT + alpha * YT @ XT^T: the MvTransMv row-interval block."""
+    return gt + alpha * jnp.matmul(yt, xt.T, preferred_element_type=gt.dtype)
+
+
+def axpby_ref(x, y, alpha, beta):
+    """alpha*x + beta*y: the MvAddMv row-interval block."""
+    return alpha * x + beta * y

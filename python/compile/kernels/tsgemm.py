@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: the tall-skinny GEMM block of MvTimesMatAddMv (op1).
+
+Computes ``OT + BT @ XT`` with XT:(m, rows), BT:(b, m), OT:(b, rows) —
+the transposed-convention layout shared with Rust (see ref.py).
+
+TPU mapping (DESIGN.md §2): the long `rows` axis is the grid; each step
+streams one (m, RB) block of XT and one (b, RB) block of OT HBM→VMEM
+while BT (tiny) stays resident in VMEM for the whole grid.  On this
+CPU-only image the kernel runs with ``interpret=True`` (a real TPU build
+would lower the same BlockSpecs through Mosaic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block length along the `rows` axis.  (b, RB) f64 output block at b=8 is
+# 256 KiB — comfortably inside a TPU core's ~16 MiB VMEM together with the
+# (m, RB) input block.
+DEFAULT_ROW_BLOCK = 4096
+
+
+def _kernel(xt_ref, bt_ref, ot_ref, o_ref):
+    """One grid step: o = ot + bt @ xt over a (·, RB) column block."""
+    o_ref[...] = ot_ref[...] + jnp.dot(
+        bt_ref[...], xt_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def tsgemm(xt, bt, ot, *, row_block=DEFAULT_ROW_BLOCK):
+    """Pallas tall-skinny GEMM: ``OT + BT @ XT``.
+
+    Requires ``rows % row_block == 0`` (the AOT variants are generated for
+    power-of-two interval sizes; odd tails fall back to the native Rust
+    kernel at dispatch time).
+    """
+    m, rows = xt.shape
+    b, m2 = bt.shape
+    assert m == m2, (xt.shape, bt.shape)
+    assert ot.shape == (b, rows), (ot.shape, (b, rows))
+    if rows % row_block != 0:
+        row_block = rows  # single block fallback (small test shapes)
+    grid = (rows // row_block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, row_block), lambda i: (0, i)),
+            pl.BlockSpec((b, m), lambda i: (0, 0)),
+            pl.BlockSpec((b, row_block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, row_block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, rows), ot.dtype),
+        interpret=True,
+    )(xt, bt, ot)

@@ -1,0 +1,77 @@
+"""L2: the jax compute graph for the eigensolver's dense block operations.
+
+The paper's "model" is not a neural network — the compute graph that runs
+per row interval on the eigensolver's hot path consists of the Table-1
+block operations.  Each op here is a jax function that calls the L1
+Pallas kernels; ``aot.py`` lowers them (one HLO artifact per shape
+variant) and the Rust runtime executes them through PJRT.
+
+Transposed convention (see kernels/ref.py): Rust's column-major interval
+buffers map 1:1 onto the row-major jax shapes used here.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.axpby import axpby
+from .kernels.gram import gram
+from .kernels.tsgemm import tsgemm
+
+
+def op_tsgemm(xt, bt, ot):
+    """MvTimesMatAddMv row-interval block: ``OT + BT @ XT``.
+
+    Returns a 1-tuple (the AOT bridge lowers with return_tuple=True).
+    """
+    return (tsgemm(xt, bt, ot),)
+
+
+def op_gram(xt, yt, gt, alpha):
+    """MvTransMv row-interval block: ``GT + alpha * YT @ XT^T``."""
+    return (gram(xt, yt, gt, alpha),)
+
+
+def op_axpby(x, y, alpha, beta):
+    """MvAddMv row-interval block: ``alpha*x + beta*y`` (flat)."""
+    return (axpby(x, y, alpha, beta),)
+
+
+def op_fused_normalize(xt, gt_chol_inv_t):
+    """Fused block normalization: ``R^{-T} @ XT`` (i.e. X := X·R^{-1} in
+    untransposed terms).  Used after the Cholesky of the Gram matrix; a
+    plain jnp matmul lowers into the same artifact set."""
+    return (jnp.matmul(gt_chol_inv_t, xt, preferred_element_type=xt.dtype),)
+
+
+#: (name, fn, example-shape builder) table used by aot.py.
+def shapes_tsgemm(rows, m, b, dtype):
+    return [
+        jnp.zeros((m, rows), dtype),
+        jnp.zeros((b, m), dtype),
+        jnp.zeros((b, rows), dtype),
+    ]
+
+
+def shapes_gram(rows, m, b, dtype):
+    return [
+        jnp.zeros((m, rows), dtype),
+        jnp.zeros((b, rows), dtype),
+        jnp.zeros((b, m), dtype),
+        jnp.zeros((), dtype),
+    ]
+
+
+def shapes_axpby(rows, m, b, dtype):
+    del m
+    return [
+        jnp.zeros((rows * b,), dtype),
+        jnp.zeros((rows * b,), dtype),
+        jnp.zeros((), dtype),
+        jnp.zeros((), dtype),
+    ]
+
+
+OPS = {
+    "tsgemm": (op_tsgemm, shapes_tsgemm),
+    "gram": (op_gram, shapes_gram),
+    "axpby": (op_axpby, shapes_axpby),
+}

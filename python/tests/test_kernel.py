@@ -1,0 +1,111 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is
+the core correctness signal for everything the Rust hot path executes.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.axpby import axpby
+from compile.kernels.gram import gram
+from compile.kernels.ref import axpby_ref, gram_ref, tsgemm_ref
+from compile.kernels.tsgemm import tsgemm
+
+DTYPES = [jnp.float32, jnp.float64]
+
+
+def rng_arrays(seed, shapes, dtype):
+    r = np.random.default_rng(seed)
+    return [jnp.asarray(r.standard_normal(s), dtype=dtype) for s in shapes]
+
+
+def tol(dtype):
+    return dict(rtol=1e-5, atol=1e-5) if dtype == jnp.float32 else dict(rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([1, 7, 128, 4096, 8192]),
+    m=st.integers(1, 8),
+    b=st.integers(1, 8),
+    dti=st.integers(0, 1),
+    seed=st.integers(0, 2**31),
+)
+def test_tsgemm_matches_ref(rows, m, b, dti, seed):
+    dtype = DTYPES[dti]
+    xt, bt, ot = rng_arrays(seed, [(m, rows), (b, m), (b, rows)], dtype)
+    out = tsgemm(xt, bt, ot)
+    np.testing.assert_allclose(out, tsgemm_ref(xt, bt, ot), **tol(dtype))
+    assert out.dtype == dtype
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([1, 5, 256, 4096, 12288]),
+    m=st.integers(1, 8),
+    b=st.integers(1, 8),
+    dti=st.integers(0, 1),
+    alpha=st.sampled_from([1.0, -0.5, 2.25]),
+    seed=st.integers(0, 2**31),
+)
+def test_gram_matches_ref(rows, m, b, dti, alpha, seed):
+    dtype = DTYPES[dti]
+    xt, yt, gt = rng_arrays(seed, [(m, rows), (b, rows), (b, m)], dtype)
+    out = gram(xt, yt, gt, alpha)
+    # Accumulation order differs between the grid loop and one big matmul;
+    # error grows with the reduction length, so scale tolerances with rows.
+    eps = 1e-7 if dtype == jnp.float32 else 1e-15
+    t = dict(rtol=1e4 * eps, atol=100 * eps * max(rows, 64))
+    np.testing.assert_allclose(out, gram_ref(xt, yt, gt, alpha), **t)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([1, 63, 65536, 131072 + 17]),
+    dti=st.integers(0, 1),
+    alpha=st.sampled_from([0.0, 1.0, -2.5]),
+    beta=st.sampled_from([0.0, 1.0, 0.125]),
+    seed=st.integers(0, 2**31),
+)
+def test_axpby_matches_ref(n, dti, alpha, beta, seed):
+    dtype = DTYPES[dti]
+    x, y = rng_arrays(seed, [(n,), (n,)], dtype)
+    out = axpby(x, y, alpha, beta)
+    np.testing.assert_allclose(out, axpby_ref(x, y, alpha, beta), **tol(dtype))
+
+
+def test_tsgemm_grid_multiblock_exact():
+    # rows a multiple of the block: exercises the real grid path.
+    rows, m, b = 8192, 4, 4
+    xt, bt, ot = rng_arrays(7, [(m, rows), (b, m), (b, rows)], jnp.float64)
+    out = tsgemm(xt, bt, ot, row_block=2048)
+    np.testing.assert_allclose(out, tsgemm_ref(xt, bt, ot), rtol=1e-12, atol=1e-12)
+
+
+def test_gram_accumulates_across_blocks():
+    rows, m, b = 16384, 3, 2
+    xt, yt, gt = rng_arrays(8, [(m, rows), (b, rows), (b, m)], jnp.float64)
+    out = gram(xt, yt, gt, 1.0, row_block=4096)
+    np.testing.assert_allclose(out, gram_ref(xt, yt, gt, 1.0), rtol=1e-10, atol=1e-10)
+
+
+def test_gram_alpha_zero_returns_gt():
+    xt, yt, gt = rng_arrays(9, [(2, 128), (2, 128), (2, 2)], jnp.float64)
+    out = gram(xt, yt, gt, 0.0)
+    np.testing.assert_allclose(out, gt, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_identity_tsgemm(dtype):
+    # BT = I ⇒ OT + XT.
+    rows = 512
+    xt, ot = rng_arrays(10, [(3, rows), (3, rows)], dtype)
+    bt = jnp.eye(3, dtype=dtype)
+    np.testing.assert_allclose(tsgemm(xt, bt, ot), ot + xt, **tol(dtype))

@@ -1,0 +1,116 @@
+"""L2 + AOT-bridge tests: op table shapes, HLO text emission, manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile.kernels.ref import gram_ref, tsgemm_ref
+from compile.model import OPS, op_fused_normalize
+
+
+def test_ops_table_shapes_lower():
+    for name, (fn, shapes) in OPS.items():
+        example = shapes(128, 2, 3, "float64")
+        out = fn(*example)
+        assert isinstance(out, tuple) and len(out) == 1, name
+
+
+def test_hlo_text_emission():
+    fn, shapes = OPS["tsgemm"]
+    text = aot.to_hlo_text(fn, shapes(4096, 2, 2, "float64"))
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # f64 arrays at the interface.
+    assert "f64[2,4096]" in text
+
+
+def test_hlo_is_deterministic():
+    fn, shapes = OPS["gram"]
+    a = aot.to_hlo_text(fn, shapes(4096, 2, 2, "float64"))
+    b = aot.to_hlo_text(fn, shapes(4096, 2, 2, "float64"))
+    assert a == b
+
+
+def test_variants_cover_requested_grid():
+    vs = list(aot.variants([16384], [1, 4]))
+    ops = {v[0] for v in vs}
+    assert ops == {"tsgemm", "gram", "axpby"}
+    # tsgemm: 1 rows × 2 m × 2 b = 4
+    assert sum(1 for v in vs if v[0] == "tsgemm") == 4
+    assert sum(1 for v in vs if v[0] == "axpby") == 2
+
+
+def test_fused_normalize_semantics():
+    r = np.random.default_rng(3)
+    x = jnp.asarray(r.standard_normal((4, 256)))  # XT: m=4, rows=256
+    rinv_t = jnp.asarray(np.triu(r.standard_normal((4, 4))).T)  # lower
+    (out,) = op_fused_normalize(x, rinv_t)
+    np.testing.assert_allclose(out, rinv_t @ x, rtol=1e-12)
+
+
+def test_aot_main_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--rows",
+            "4096",
+            "--widths",
+            "2",
+        ],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["dtype"] == "float64"
+    arts = manifest["artifacts"]
+    # tsgemm 1 + gram 1 + axpby 1 for a single rows/width point.
+    assert len(arts) == 3
+    for a in arts:
+        text = (out / a["path"]).read_text()
+        assert "HloModule" in text
+
+
+def test_transposed_convention_matches_colmajor():
+    """The documented Rust FFI convention: a column-major (rows×m) buffer
+    reinterpreted as a row-major (m, rows) array gives identical results
+    to the untransposed formulation."""
+    r = np.random.default_rng(11)
+    rows, m, b = 64, 3, 2
+    x = r.standard_normal((rows, m))  # logical X
+    bmat = r.standard_normal((m, b))  # logical B
+    c = r.standard_normal((rows, b))  # logical C
+    # Column-major flat buffers.
+    x_flat = np.asfortranarray(x).ravel(order="F")
+    c_flat = np.asfortranarray(c).ravel(order="F")
+    # Reinterpreted row-major transposes (what Rust hands to the HLO).
+    xt = jnp.asarray(x_flat.reshape(m, rows))
+    bt = jnp.asarray(np.asfortranarray(bmat).ravel(order="F").reshape(b, m))
+    ot = jnp.asarray(c_flat.reshape(b, rows))
+    out = np.asarray(tsgemm_ref(xt, bt, ot))
+    expect = c + x @ bmat
+    np.testing.assert_allclose(out.ravel(), np.asfortranarray(expect).ravel(order="F"), rtol=1e-12)
+
+    gt = jnp.zeros((b, m), dtype=jnp.float64)
+    yt = ot  # use C as the right operand Y
+    gout = np.asarray(gram_ref(xt, yt, gt, 1.0))
+    gexpect = x.T @ c  # m×b
+    np.testing.assert_allclose(
+        gout.ravel(), np.asfortranarray(gexpect).ravel(order="F"), rtol=1e-12
+    )

@@ -1,0 +1,59 @@
+//! Ablation (not in the paper): native Rust dense kernels vs the
+//! AOT-compiled JAX/Pallas artifacts through PJRT — the integration cost
+//! of the L2/L1 stack on the dense hot path.
+use flasheigen::dense::{mv_times_mat_add_mv, mv_trans_mv, tas::mv_random, DenseCtx, SmallMat, TasMatrix};
+use flasheigen::harness::report::{ratio, secs, Table};
+use flasheigen::harness::BenchCfg;
+use flasheigen::runtime::{find_artifacts_dir, XlaKernels};
+use flasheigen::safs::{Safs, SafsConfig};
+use flasheigen::util::timer::bench_mean;
+use std::sync::Arc;
+
+fn main() {
+    let cfg = BenchCfg::from_env();
+    let Some(dir) = find_artifacts_dir() else {
+        eprintln!("SKIP: artifacts/ not found; run `make artifacts`");
+        return;
+    };
+    let mut t = Table::new(
+        "Ablation: native kernels vs XLA/PJRT artifacts (op1 + op3)",
+        &["op", "m", "b", "native", "xla-pjrt", "native/xla"],
+    );
+    let n = 16384 * 8; // 8 full artifact-sized intervals
+    for &(m, b) in &[(4usize, 4usize), (8, 8), (16, 4)] {
+        let run = |xla: bool| -> (f64, f64) {
+            let fs = Safs::new(SafsConfig::untimed());
+            let kernels: Arc<dyn flasheigen::dense::DenseKernels> = if xla {
+                Arc::new(XlaKernels::load(&dir).expect("artifacts"))
+            } else {
+                Arc::new(flasheigen::dense::NativeKernels)
+            };
+            let ctx = DenseCtx::with(fs, false, 16384, cfg.threads, 8, 1, kernels);
+            let mats: Vec<TasMatrix> = (0..m / b.min(m))
+                .map(|i| {
+                    let x = TasMatrix::zeros(&ctx, n, b.min(m));
+                    mv_random(&x, i as u64);
+                    x
+                })
+                .collect();
+            let refs: Vec<&TasMatrix> = mats.iter().collect();
+            let bmat = SmallMat::from_fn(m, b, |r, c| ((r + c) % 5) as f64);
+            let cc = TasMatrix::zeros(&ctx, n, b);
+            let t1 = bench_mean(1, 3, || {
+                mv_times_mat_add_mv(1.0, &refs, &bmat, 0.0, &cc);
+            });
+            let y = TasMatrix::zeros(&ctx, n, b);
+            mv_random(&y, 99);
+            let t2 = bench_mean(1, 3, || {
+                let _ = mv_trans_mv(1.0, &refs, &y);
+            });
+            (t1, t2)
+        };
+        let (n1, n2) = run(false);
+        let (x1, x2) = run(true);
+        t.row(vec!["op1".into(), format!("{m}"), format!("{b}"), secs(n1), secs(x1), ratio(n1 / x1)]);
+        t.row(vec!["op3".into(), format!("{m}"), format!("{b}"), secs(n2), secs(x2), ratio(n2 / x2)]);
+    }
+    t.note("measures the PJRT dispatch cost (literal copies + execution) vs the native kernels");
+    t.print();
+}

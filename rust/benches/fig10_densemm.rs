@@ -1,0 +1,9 @@
+//! Figure 10: op1 (MvTimesMatAddMv) runtime across subspace sizes,
+//! FE-IM vs FE-EM vs in-memory MKL/Trilinos stand-ins.
+use flasheigen::harness::{fig10, BenchCfg};
+
+fn main() {
+    let cfg = BenchCfg::from_env();
+    let n = (60_000_000.0 * cfg.scale * 16.0) as usize;
+    fig10(&cfg, n.max(4096), 4, &[4, 8, 16, 32, 64, 128, 256, 512]).print();
+}

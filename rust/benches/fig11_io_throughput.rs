@@ -1,0 +1,9 @@
+//! Figure 11: average I/O throughput of external-memory dense matrix
+//! multiplication vs subspace size.
+use flasheigen::harness::{fig11, BenchCfg};
+
+fn main() {
+    let cfg = BenchCfg::from_env();
+    let n = (60_000_000.0 * cfg.scale * 16.0) as usize;
+    fig11(&cfg, n.max(4096), 4, &[4, 16, 64, 256]).print();
+}

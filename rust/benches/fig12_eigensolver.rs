@@ -1,0 +1,17 @@
+//! Figure 12: KrylovSchur eigensolver — Trilinos-like and FE-SEM
+//! relative to FE-IM across graphs and eigenvalue counts.
+use flasheigen::graph::Dataset;
+use flasheigen::harness::{fig12, BenchCfg};
+
+fn main() {
+    let mut cfg = BenchCfg::from_env();
+    // Larger graphs so the EM subspace streams at bandwidth (not
+    // latency); see EXPERIMENTS.md §Calibration.
+    cfg.scale *= 2.0;
+    fig12(
+        &cfg,
+        &[8, 16],
+        &[Dataset::Twitter, Dataset::Friendster, Dataset::Knn],
+    )
+    .print();
+}

@@ -1,0 +1,13 @@
+//! Figure 6: SpMM memory-optimization ablation (cumulative) on the
+//! Twitter and Friendster graphs for several dense-matrix widths.
+use flasheigen::graph::Dataset;
+use flasheigen::harness::{fig6, BenchCfg};
+
+fn main() {
+    let mut cfg = BenchCfg::from_env();
+    // SpMM cache behaviour needs graphs whose dense vectors exceed the
+    // CPU caches; run these figures at 8x the default dataset scale.
+    cfg.scale *= 8.0;
+    eprintln!("fig6: scale={:.2e} threads={} dilation={}", cfg.scale, cfg.threads, cfg.dilation);
+    fig6(&cfg, &[Dataset::Friendster, Dataset::Twitter], &[1, 4, 16]).print();
+}

@@ -1,0 +1,11 @@
+//! Figure 7: SpMM runtime — FE-IM vs FE-SEM vs MKL-like vs Trilinos-like
+//! on Friendster across dense-matrix widths.
+use flasheigen::harness::{fig7, BenchCfg};
+
+fn main() {
+    let mut cfg = BenchCfg::from_env();
+    // SpMM cache behaviour needs graphs whose dense vectors exceed the
+    // CPU caches; run these figures at 8x the default dataset scale.
+    cfg.scale *= 8.0;
+    fig7(&cfg, &[1, 2, 4, 8, 16]).print();
+}

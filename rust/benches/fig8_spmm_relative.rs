@@ -1,0 +1,11 @@
+//! Figure 8: sparse-multiply performance of Trilinos-like and FE-SEM
+//! relative to FE-IM (SpMV and SpMM b=4) per graph.
+use flasheigen::harness::{fig8, BenchCfg};
+
+fn main() {
+    let mut cfg = BenchCfg::from_env();
+    // SpMM cache behaviour needs graphs whose dense vectors exceed the
+    // CPU caches; run these figures at 8x the default dataset scale.
+    cfg.scale *= 8.0;
+    fig8(&cfg).print();
+}

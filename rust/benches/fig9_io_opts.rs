@@ -1,0 +1,10 @@
+//! Figure 9: I/O optimization ablation on external-memory dense matrix
+//! multiplication (MvTransMv form).
+use flasheigen::harness::{fig9, BenchCfg};
+
+fn main() {
+    let cfg = BenchCfg::from_env();
+    // Paper: n=60M scaled; m=64 vectors of width 4.
+    let n = (60_000_000.0 * cfg.scale * 16.0) as usize;
+    fig9(&cfg, n.max(4096), 64, 4).print();
+}

@@ -1,0 +1,7 @@
+//! Table 2: the graph datasets at bench scale (storage-format sizes).
+use flasheigen::harness::{table2, BenchCfg};
+
+fn main() {
+    let cfg = BenchCfg::from_env();
+    table2(&cfg).print();
+}

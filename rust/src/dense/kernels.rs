@@ -1,0 +1,154 @@
+//! Dense block-compute kernels — the seam between L3 and the AOT-compiled
+//! L2/L1 stack.
+//!
+//! The two hot per-row-interval computations of the subspace operations
+//! (§3.4: `MvTimesMatAddMv`'s tall-skinny GEMM and `MvTransMv`'s Gram
+//! block) are expressed behind this trait.  [`NativeKernels`] is the
+//! hand-written Rust implementation; `runtime::XlaKernels` dispatches the
+//! same calls to PJRT executables compiled from the JAX/Pallas artifacts
+//! when a matching shape variant exists.
+
+use super::small::SmallMat;
+
+/// Block kernels over column-major row-interval data.
+pub trait DenseKernels: Send + Sync {
+    /// `out(rows×b) += x(rows×m) · bmat(m×b)`, all column-major.
+    fn tsgemm(&self, x: &[f64], rows: usize, m: usize, bmat: &SmallMat, out: &mut [f64]);
+
+    /// `out(m×b) += alpha · xᵀ(m×rows) · y(rows×b)`, x/y column-major.
+    fn gram(&self, alpha: f64, x: &[f64], y: &[f64], rows: usize, m: usize, b: usize, out: &mut SmallMat);
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Hand-written Rust kernels (column-axpy formulation — the inner loops
+/// run down contiguous columns, which LLVM vectorizes).
+pub struct NativeKernels;
+
+impl DenseKernels for NativeKernels {
+    fn tsgemm(&self, x: &[f64], rows: usize, m: usize, bmat: &SmallMat, out: &mut [f64]) {
+        debug_assert_eq!(x.len(), rows * m);
+        debug_assert_eq!((bmat.rows, bmat.cols), (m, out.len() / rows.max(1)));
+        let b = bmat.cols;
+        for j in 0..b {
+            let out_col = &mut out[j * rows..(j + 1) * rows];
+            for k in 0..m {
+                let w = bmat.at(k, j);
+                if w == 0.0 {
+                    continue;
+                }
+                let x_col = &x[k * rows..(k + 1) * rows];
+                for i in 0..rows {
+                    out_col[i] += w * x_col[i];
+                }
+            }
+        }
+    }
+
+    fn gram(
+        &self,
+        alpha: f64,
+        x: &[f64],
+        y: &[f64],
+        rows: usize,
+        m: usize,
+        b: usize,
+        out: &mut SmallMat,
+    ) {
+        debug_assert_eq!(x.len(), rows * m);
+        debug_assert_eq!(y.len(), rows * b);
+        debug_assert_eq!((out.rows, out.cols), (m, b));
+        for j in 0..b {
+            let y_col = &y[j * rows..(j + 1) * rows];
+            for k in 0..m {
+                let x_col = &x[k * rows..(k + 1) * rows];
+                let mut acc = 0.0;
+                for i in 0..rows {
+                    acc += x_col[i] * y_col[i];
+                }
+                *out.at_mut(k, j) += alpha * acc;
+            }
+        }
+    }
+}
+
+/// Reference (naive) implementations used by tests to validate any
+/// `DenseKernels` implementation, including the XLA-backed one.
+pub mod reference {
+    use super::*;
+
+    pub fn tsgemm(x: &[f64], rows: usize, m: usize, bmat: &SmallMat, out: &mut [f64]) {
+        let b = bmat.cols;
+        for i in 0..rows {
+            for j in 0..b {
+                let mut acc = 0.0;
+                for k in 0..m {
+                    acc += x[k * rows + i] * bmat.at(k, j);
+                }
+                out[j * rows + i] += acc;
+            }
+        }
+    }
+
+    pub fn gram(
+        alpha: f64,
+        x: &[f64],
+        y: &[f64],
+        rows: usize,
+        m: usize,
+        b: usize,
+        out: &mut SmallMat,
+    ) {
+        for k in 0..m {
+            for j in 0..b {
+                let mut acc = 0.0;
+                for i in 0..rows {
+                    acc += x[k * rows + i] * y[j * rows + i];
+                }
+                *out.at_mut(k, j) += alpha * acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, run_prop};
+
+    #[test]
+    fn native_matches_reference() {
+        run_prop("native-kernels-vs-ref", 30, |g| {
+            let rows = g.usize_in(1, 200);
+            let m = g.usize_in(1, 12);
+            let b = g.usize_in(1, 8);
+            let x: Vec<f64> = g.vec_of(rows * m, |g| g.f64_in(-2.0, 2.0));
+            let y: Vec<f64> = g.vec_of(rows * b, |g| g.f64_in(-2.0, 2.0));
+            let bmat = SmallMat::from_fn(m, b, |r, c| ((r * 5 + c * 3) % 7) as f64 - 3.0);
+
+            let mut out1 = vec![0.5; rows * b];
+            let mut out2 = out1.clone();
+            NativeKernels.tsgemm(&x, rows, m, &bmat, &mut out1);
+            reference::tsgemm(&x, rows, m, &bmat, &mut out2);
+            assert_close(&out1, &out2, 1e-12, 1e-12, "tsgemm")?;
+
+            let mut g1 = SmallMat::from_fn(m, b, |_, _| 0.25);
+            let mut g2 = g1.clone();
+            NativeKernels.gram(1.5, &x, &y, rows, m, b, &mut g1);
+            reference::gram(1.5, &x, &y, rows, m, b, &mut g2);
+            assert_close(&g1.data, &g2.data, 1e-12, 1e-12, "gram")
+        });
+    }
+
+    #[test]
+    fn tsgemm_accumulates() {
+        let x = vec![1.0, 2.0]; // 2 rows, m=1
+        let bmat = SmallMat::from_rows(&[&[3.0]]);
+        let mut out = vec![10.0, 20.0];
+        NativeKernels.tsgemm(&x, 2, 1, &bmat, &mut out);
+        assert_eq!(out, vec![13.0, 26.0]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense-matrix subsystem (§3.4): small in-memory matrices, the TAS
+//! (tall-and-skinny) subspace matrices with SSD backing + caching, the
+//! Table-1 operation set, and the kernel seam to the AOT-compiled
+//! JAX/Pallas artifacts.
+
+pub mod kernels;
+pub mod ops;
+pub mod small;
+pub mod tas;
+
+pub use kernels::{DenseKernels, NativeKernels};
+pub use ops::{
+    clone_view, conv_layout_from_rowmajor, conv_layout_to_rowmajor, mv_add_mv, mv_dot,
+    mv_norm, mv_scale, mv_scale_diag, mv_times_mat_add_mv, mv_trans_mv, set_block, total_cols,
+};
+pub use small::SmallMat;
+pub use tas::{mv_random, DenseCtx, TasMatrix};

@@ -1,0 +1,578 @@
+//! The Table-1 dense-matrix operations required by the Anasazi
+//! eigensolvers (§3.4), over memory- or SSD-backed TAS matrices.
+//!
+//! Every operation parallelizes over row intervals (§3.4.2): a worker
+//! owns one interval at a time, reads the interval from all operand
+//! matrices (issuing the SSD reads asynchronously, all before the first
+//! wait), computes, and writes the output interval once.  Operations over
+//! *many* TAS matrices (`MvTimesMatAddMv`, `MvTransMv`) process the
+//! matrix list in groups of `ctx.group_size` so memory stays bounded by
+//! the group size, not the subspace size (§3.4.3, Figure 5); `MvTransMv`
+//! shares the right-operand interval across all groups (§3.4.4).
+
+use super::small::SmallMat;
+use super::tas::{DenseCtx, IntervalSet, TasMatrix};
+use crate::safs::BufferPool;
+use crate::spmm::{DenseBlock, SharedMut};
+use crate::util::threadpool::parallel_for;
+use std::sync::Arc;
+use std::sync::Mutex;
+
+/// Total width of a list of TAS matrices.
+pub fn total_cols(mats: &[&TasMatrix]) -> usize {
+    mats.iter().map(|m| m.n_cols).sum()
+}
+
+fn check_same_shape(mats: &[&TasMatrix]) {
+    if let Some(first) = mats.first() {
+        for m in mats {
+            assert_eq!(m.n_rows, first.n_rows, "row mismatch");
+            assert_eq!(m.interval_rows(), first.interval_rows(), "interval mismatch");
+        }
+    }
+}
+
+/// Per-worker buffer pools for one operation.
+fn make_pools(ctx: &DenseCtx) -> Vec<Mutex<BufferPool>> {
+    (0..ctx.threads.max(1))
+        .map(|_| Mutex::new(BufferPool::new(ctx.fs.cfg().use_buffer_pool)))
+        .collect()
+}
+
+/// op1 — `CC ← α · AA · B + β · CC` (AA: group of TAS matrices forming an
+/// n×m multivector; B: small m×b; CC: n×b).
+pub fn mv_times_mat_add_mv(
+    alpha: f64,
+    aa: &[&TasMatrix],
+    bsmall: &SmallMat,
+    beta: f64,
+    cc: &TasMatrix,
+) {
+    let ctx = cc.ctx().clone();
+    check_same_shape(aa);
+    assert_eq!(total_cols(aa), bsmall.rows, "inner dim");
+    assert_eq!(cc.n_cols, bsmall.cols, "output width");
+    if let Some(first) = aa.first() {
+        assert_eq!(first.n_rows, cc.n_rows);
+    }
+    // Fold alpha into the small operand once.
+    let mut bscaled = bsmall.clone();
+    bscaled.scale(alpha);
+
+    let pools = make_pools(&ctx);
+    parallel_for(cc.n_intervals(), ctx.threads, |iv, w| {
+        let mut pool = pools[w].lock().unwrap();
+        let rows = cc.interval_len(iv);
+        let b = cc.n_cols;
+        // Seed the accumulator with β·CC.
+        let mut out = vec![0.0; rows * b];
+        if beta != 0.0 {
+            let g = cc.load_interval(iv, &mut pool);
+            for (o, x) in out.iter_mut().zip(g.iter()) {
+                *o = beta * x;
+            }
+            g.recycle(&mut pool);
+        }
+        // Process the AA list in groups to bound memory (Fig. 5).
+        let mut col_off = 0usize;
+        for group in aa.chunks(ctx.group_size.max(1)) {
+            let set = IntervalSet::load(group, iv, &mut pool);
+            for (gi, m) in group.iter().enumerate() {
+                let bsub = bscaled.row_block(col_off, m.n_cols);
+                ctx.kernels.tsgemm(set.get(gi), rows, m.n_cols, &bsub, &mut out);
+                col_off += m.n_cols;
+            }
+            set.recycle(&mut pool);
+        }
+        cc.store_interval(iv, out);
+    });
+}
+
+/// op3 — `A ← α · t(AA) · BB` (result m×b, m = total width of AA).
+pub fn mv_trans_mv(alpha: f64, aa: &[&TasMatrix], bb: &TasMatrix) -> SmallMat {
+    let ctx = bb.ctx().clone();
+    check_same_shape(aa);
+    let m = total_cols(aa);
+    let b = bb.n_cols;
+    if let Some(first) = aa.first() {
+        assert_eq!(first.n_rows, bb.n_rows);
+    }
+    let pools = make_pools(&ctx);
+    // Per-worker partial results, reduced at the end (§3.4.2's two
+    // sub-operations).
+    let partials: Vec<Mutex<SmallMat>> = (0..ctx.threads.max(1))
+        .map(|_| Mutex::new(SmallMat::zeros(m, b)))
+        .collect();
+    parallel_for(bb.n_intervals(), ctx.threads, |iv, w| {
+        let mut pool = pools[w].lock().unwrap();
+        let rows = bb.interval_len(iv);
+        // Load the shared right operand once per interval (§3.4.4: cached
+        // locally, reused by every group) as owned data so group loads of
+        // an aliasing left operand cannot deadlock.
+        let y: Vec<f64> = {
+            let g = bb.load_interval(iv, &mut pool);
+            let v = g.to_vec();
+            g.recycle(&mut pool);
+            v
+        };
+        let mut partial = partials[w].lock().unwrap();
+        let mut col_off = 0usize;
+        for group in aa.chunks(ctx.group_size.max(1)) {
+            let set = IntervalSet::load(group, iv, &mut pool);
+            for (gi, mat) in group.iter().enumerate() {
+                // Accumulate into the right row block of the partial.
+                let mut sub = partial.row_block(col_off, mat.n_cols);
+                ctx.kernels
+                    .gram(alpha, set.get(gi), &y, rows, mat.n_cols, b, &mut sub);
+                partial.set_block(col_off, 0, &sub);
+                col_off += mat.n_cols;
+            }
+            set.recycle(&mut pool);
+        }
+    });
+    // Reduce.
+    let mut result = SmallMat::zeros(m, b);
+    for p in partials {
+        let p = p.into_inner().unwrap();
+        for (r, x) in result.data.iter_mut().zip(&p.data) {
+            *r += x;
+        }
+    }
+    result
+}
+
+/// Shared skeleton for unary elementwise operations: `BB[iv] = f(AA[iv])`.
+fn elementwise2(aa: &TasMatrix, bb: &TasMatrix, f: impl Fn(&[f64], &mut [f64]) + Sync) {
+    let ctx = bb.ctx().clone();
+    assert_eq!(aa.n_rows, bb.n_rows);
+    assert_eq!(aa.n_cols, bb.n_cols);
+    let pools = make_pools(&ctx);
+    parallel_for(aa.n_intervals(), ctx.threads, |iv, w| {
+        let mut pool = pools[w].lock().unwrap();
+        let g = aa.load_interval(iv, &mut pool);
+        let mut out = vec![0.0; g.len()];
+        f(&g, &mut out);
+        g.recycle(&mut pool);
+        bb.store_interval(iv, out);
+    });
+}
+
+/// MvScale1 — `BB ← α · AA`.
+pub fn mv_scale(alpha: f64, aa: &TasMatrix, bb: &TasMatrix) {
+    elementwise2(aa, bb, move |a, out| {
+        for (o, x) in out.iter_mut().zip(a.iter()) {
+            *o = alpha * x;
+        }
+    });
+}
+
+/// MvScale2 — `BB ← AA · diag(vec)` (column `j` scaled by `vec[j]`).
+pub fn mv_scale_diag(aa: &TasMatrix, diag: &[f64], bb: &TasMatrix) {
+    assert_eq!(diag.len(), aa.n_cols);
+    let diag = diag.to_vec();
+    let cols = aa.n_cols;
+    elementwise2(aa, bb, move |a, out| {
+        let rows = a.len() / cols;
+        for j in 0..cols {
+            let d = diag[j];
+            for i in 0..rows {
+                out[j * rows + i] = d * a[j * rows + i];
+            }
+        }
+    });
+}
+
+/// MvAddMv — `CC ← α · AA + β · BB`.
+pub fn mv_add_mv(alpha: f64, aa: &TasMatrix, beta: f64, bb: &TasMatrix, cc: &TasMatrix) {
+    let ctx = cc.ctx().clone();
+    assert_eq!(aa.n_rows, bb.n_rows);
+    assert_eq!(aa.n_cols, bb.n_cols);
+    assert_eq!(aa.n_cols, cc.n_cols);
+    let pools = make_pools(&ctx);
+    parallel_for(cc.n_intervals(), ctx.threads, |iv, w| {
+        let mut pool = pools[w].lock().unwrap();
+        let set = IntervalSet::load(&[aa, bb], iv, &mut pool);
+        let (a, b) = (set.get(0), set.get(1));
+        let mut out = vec![0.0; a.len()];
+        for i in 0..out.len() {
+            out[i] = alpha * a[i] + beta * b[i];
+        }
+        set.recycle(&mut pool);
+        cc.store_interval(iv, out);
+    });
+}
+
+/// MvDot — `vec[j] = t(AA[:,j]) · BB[:,j]`.
+pub fn mv_dot(aa: &TasMatrix, bb: &TasMatrix) -> Vec<f64> {
+    let ctx = aa.ctx().clone();
+    assert_eq!(aa.n_rows, bb.n_rows);
+    assert_eq!(aa.n_cols, bb.n_cols);
+    let cols = aa.n_cols;
+    let pools = make_pools(&ctx);
+    let partials: Vec<Mutex<Vec<f64>>> = (0..ctx.threads.max(1))
+        .map(|_| Mutex::new(vec![0.0; cols]))
+        .collect();
+    parallel_for(aa.n_intervals(), ctx.threads, |iv, w| {
+        let mut pool = pools[w].lock().unwrap();
+        let set = IntervalSet::load(&[aa, bb], iv, &mut pool);
+        let (a, b) = (set.get(0), set.get(1));
+        let rows = a.len() / cols;
+        let mut acc = partials[w].lock().unwrap();
+        for j in 0..cols {
+            let mut s = 0.0;
+            for i in 0..rows {
+                s += a[j * rows + i] * b[j * rows + i];
+            }
+            acc[j] += s;
+        }
+        drop(acc);
+        set.recycle(&mut pool);
+    });
+    let mut out = vec![0.0; cols];
+    for p in partials {
+        for (o, x) in out.iter_mut().zip(p.into_inner().unwrap()) {
+            *o += x;
+        }
+    }
+    out
+}
+
+/// MvNorm — column 2-norms of AA.
+pub fn mv_norm(aa: &TasMatrix) -> Vec<f64> {
+    mv_dot(aa, aa).into_iter().map(f64::sqrt).collect()
+}
+
+/// CloneView — materialize the selected columns as a new matrix.
+pub fn clone_view(aa: &TasMatrix, idxs: &[usize]) -> TasMatrix {
+    let ctx = aa.ctx().clone();
+    assert!(idxs.iter().all(|&i| i < aa.n_cols));
+    let out = TasMatrix::zeros(&ctx, aa.n_rows, idxs.len());
+    let idxs = idxs.to_vec();
+    let pools = make_pools(&ctx);
+    parallel_for(aa.n_intervals(), ctx.threads, |iv, w| {
+        let mut pool = pools[w].lock().unwrap();
+        let rows = aa.interval_len(iv);
+        let g = aa.load_interval(iv, &mut pool);
+        let mut data = vec![0.0; rows * idxs.len()];
+        for (jo, &ji) in idxs.iter().enumerate() {
+            data[jo * rows..(jo + 1) * rows].copy_from_slice(&g[ji * rows..(ji + 1) * rows]);
+        }
+        g.recycle(&mut pool);
+        out.store_interval(iv, data);
+    });
+    out
+}
+
+/// SetBlock — `AA[:, idxs] ← BB`.
+pub fn set_block(aa: &TasMatrix, idxs: &[usize], bb: &TasMatrix) {
+    let ctx = aa.ctx().clone();
+    assert_eq!(idxs.len(), bb.n_cols);
+    assert_eq!(aa.n_rows, bb.n_rows);
+    assert!(idxs.iter().all(|&i| i < aa.n_cols));
+    let idxs = idxs.to_vec();
+    let pools = make_pools(&ctx);
+    parallel_for(aa.n_intervals(), ctx.threads, |iv, w| {
+        let mut pool = pools[w].lock().unwrap();
+        let rows = aa.interval_len(iv);
+        let src: Vec<f64> = {
+            let g = bb.load_interval(iv, &mut pool);
+            let v = g.to_vec();
+            g.recycle(&mut pool);
+            v
+        };
+        aa.update_interval(iv, &mut pool, |data| {
+            for (jo, &ji) in idxs.iter().enumerate() {
+                data[ji * rows..(ji + 1) * rows]
+                    .copy_from_slice(&src[jo * rows..(jo + 1) * rows]);
+            }
+        });
+    });
+}
+
+/// ConvLayout — column-major TAS matrix → row-major [`DenseBlock`] for
+/// SpMM (§3.4: "converts a column-major matrix to a row-major matrix when
+/// it is passed to the SpMM operation").
+pub fn conv_layout_to_rowmajor(aa: &TasMatrix, tile_dim: usize, numa: bool) -> DenseBlock {
+    let ctx = aa.ctx().clone();
+    let mut db = DenseBlock::new(aa.n_rows, aa.n_cols, tile_dim, numa);
+    let shared = SharedMut::new(&mut db);
+    let pools = make_pools(&ctx);
+    let cols = aa.n_cols;
+    parallel_for(aa.n_intervals(), ctx.threads, |iv, w| {
+        let mut pool = pools[w].lock().unwrap();
+        let rows = aa.interval_len(iv);
+        let base = iv * aa.interval_rows();
+        let g = aa.load_interval(iv, &mut pool);
+        // Scatter row-chunks, splitting at DenseBlock interval boundaries.
+        let mut r = 0usize;
+        while r < rows {
+            let global = base + r;
+            let chunk = (shared.block().interval_rows - global % shared.block().interval_rows)
+                .min(rows - r);
+            // SAFETY: TAS intervals are disjoint row ranges across workers.
+            let dst = unsafe { shared.rows_mut(global, chunk) };
+            for i in 0..chunk {
+                for j in 0..cols {
+                    dst[i * cols + j] = g[j * rows + r + i];
+                }
+            }
+            r += chunk;
+        }
+        g.recycle(&mut pool);
+    });
+    db
+}
+
+/// ConvLayout (reverse) — row-major [`DenseBlock`] (e.g. SpMM output) →
+/// column-major TAS matrix in the context's backing mode.
+pub fn conv_layout_from_rowmajor(ctx: &Arc<DenseCtx>, db: &DenseBlock) -> TasMatrix {
+    let out = TasMatrix::zeros(ctx, db.n_rows, db.n_cols);
+    let cols = db.n_cols;
+    parallel_for(out.n_intervals(), ctx.threads, |iv, _| {
+        let rows = out.interval_len(iv);
+        let base = iv * out.interval_rows();
+        let mut data = vec![0.0; rows * cols];
+        let mut r = 0usize;
+        while r < rows {
+            let global = base + r;
+            let chunk = (db.interval_rows - global % db.interval_rows).min(rows - r);
+            let src = db.rows(global, chunk);
+            for i in 0..chunk {
+                for j in 0..cols {
+                    data[j * rows + r + i] = src[i * cols + j];
+                }
+            }
+            r += chunk;
+        }
+        out.store_interval(iv, data);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::tas::mv_random;
+    use crate::util::prop::{assert_close, run_prop};
+
+    /// Naive column-major reference of a TAS list as one n×m matrix.
+    fn concat_colmajor(mats: &[&TasMatrix]) -> (Vec<f64>, usize) {
+        let n = mats[0].n_rows;
+        let m = total_cols(mats);
+        let mut out = Vec::with_capacity(n * m);
+        for mat in mats {
+            out.extend(mat.to_colmajor());
+        }
+        (out, m)
+    }
+
+    fn ctxs() -> Vec<Arc<DenseCtx>> {
+        vec![DenseCtx::mem_for_tests(64), DenseCtx::em_for_tests(64)]
+    }
+
+    #[test]
+    fn op1_matches_reference() {
+        for ctx in ctxs() {
+            let n = 300;
+            let a0 = TasMatrix::from_fn(&ctx, n, 2, |r, c| ((r + c) % 5) as f64 - 2.0);
+            let a1 = TasMatrix::from_fn(&ctx, n, 3, |r, c| ((r * 2 + c) % 7) as f64);
+            let a2 = TasMatrix::from_fn(&ctx, n, 2, |r, c| (r % 3) as f64 * (c + 1) as f64);
+            let bsmall = SmallMat::from_fn(7, 4, |r, c| (r as f64 - c as f64) * 0.5);
+            let cc = TasMatrix::from_fn(&ctx, n, 4, |r, c| (r + 10 * c) as f64 * 0.01);
+
+            let (aa_cm, m) = concat_colmajor(&[&a0, &a1, &a2]);
+            let cc_before = cc.to_colmajor();
+            mv_times_mat_add_mv(2.0, &[&a0, &a1, &a2], &bsmall, 0.5, &cc);
+
+            // reference: cc = 2 * AA*B + 0.5 * cc
+            let mut expect = vec![0.0; n * 4];
+            for i in 0..n {
+                for j in 0..4 {
+                    let mut acc = 0.0;
+                    for k in 0..m {
+                        acc += aa_cm[k * n + i] * bsmall.at(k, j);
+                    }
+                    expect[j * n + i] = 2.0 * acc + 0.5 * cc_before[j * n + i];
+                }
+            }
+            assert_close(&cc.to_colmajor(), &expect, 1e-12, 1e-12, "op1").unwrap();
+        }
+    }
+
+    #[test]
+    fn op1_beta_zero_ignores_old_cc() {
+        let ctx = DenseCtx::mem_for_tests(32);
+        let a = TasMatrix::from_fn(&ctx, 100, 2, |r, _| r as f64);
+        let bsmall = SmallMat::identity(2);
+        let cc = TasMatrix::from_fn(&ctx, 100, 2, |_, _| f64::NAN); // must be overwritten
+        mv_times_mat_add_mv(1.0, &[&a], &bsmall, 0.0, &cc);
+        assert_close(&cc.to_colmajor(), &a.to_colmajor(), 1e-12, 1e-12, "id").unwrap();
+    }
+
+    #[test]
+    fn op3_matches_reference_including_aliasing() {
+        for ctx in ctxs() {
+            let n = 250;
+            let x = TasMatrix::from_fn(&ctx, n, 3, |r, c| ((r * 3 + c * 11) % 13) as f64 - 6.0);
+            let y = TasMatrix::from_fn(&ctx, n, 2, |r, c| ((r + c * 7) % 11) as f64 - 5.0);
+            // Including x itself in the left operand list (self-gram).
+            let g = mv_trans_mv(1.5, &[&x, &y, &x], &x);
+            let (aa_cm, m) = concat_colmajor(&[&x, &y, &x]);
+            let x_cm = x.to_colmajor();
+            let mut expect = SmallMat::zeros(m, 3);
+            for k in 0..m {
+                for j in 0..3 {
+                    let mut acc = 0.0;
+                    for i in 0..n {
+                        acc += aa_cm[k * n + i] * x_cm[j * n + i];
+                    }
+                    *expect.at_mut(k, j) = 1.5 * acc;
+                }
+            }
+            assert_close(&g.data, &expect.data, 1e-12, 1e-9, "op3").unwrap();
+        }
+    }
+
+    #[test]
+    fn scale_add_dot_norm() {
+        for ctx in ctxs() {
+            let n = 130;
+            let a = TasMatrix::from_fn(&ctx, n, 2, |r, c| (r + c) as f64);
+            let b = TasMatrix::from_fn(&ctx, n, 2, |r, c| (r as f64) - (c as f64));
+            let out = TasMatrix::zeros(&ctx, n, 2);
+
+            mv_scale(3.0, &a, &out);
+            let av = a.to_colmajor();
+            let ov = out.to_colmajor();
+            assert!(av.iter().zip(&ov).all(|(x, y)| (3.0 * x - y).abs() < 1e-12));
+
+            mv_scale_diag(&a, &[2.0, -1.0], &out);
+            let ov = out.to_colmajor();
+            for r in 0..n {
+                assert_eq!(ov[r], 2.0 * av[r]);
+                assert_eq!(ov[n + r], -av[n + r]);
+            }
+
+            mv_add_mv(2.0, &a, -1.0, &b, &out);
+            let bv = b.to_colmajor();
+            let ov = out.to_colmajor();
+            for i in 0..2 * n {
+                assert!((ov[i] - (2.0 * av[i] - bv[i])).abs() < 1e-12);
+            }
+
+            let dots = mv_dot(&a, &b);
+            let mut expect = vec![0.0; 2];
+            for j in 0..2 {
+                for r in 0..n {
+                    expect[j] += av[j * n + r] * bv[j * n + r];
+                }
+            }
+            assert_close(&dots, &expect, 1e-12, 1e-9, "dot").unwrap();
+
+            let norms = mv_norm(&a);
+            for j in 0..2 {
+                let e: f64 = (0..n).map(|r| av[j * n + r] * av[j * n + r]).sum();
+                assert!((norms[j] - e.sqrt()).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn clone_view_and_set_block() {
+        for ctx in ctxs() {
+            let n = 90;
+            let a = TasMatrix::from_fn(&ctx, n, 4, |r, c| (r * 10 + c) as f64);
+            let v = clone_view(&a, &[3, 1]);
+            assert_eq!(v.n_cols, 2);
+            assert_eq!(v.get(5, 0), 53.0);
+            assert_eq!(v.get(5, 1), 51.0);
+
+            let b = TasMatrix::from_fn(&ctx, n, 2, |r, c| -((r + c) as f64));
+            set_block(&a, &[0, 2], &b);
+            assert_eq!(a.get(7, 0), -7.0);
+            assert_eq!(a.get(7, 2), -8.0);
+            assert_eq!(a.get(7, 1), 71.0); // untouched
+        }
+    }
+
+    #[test]
+    fn conv_layout_roundtrip() {
+        for ctx in ctxs() {
+            let n = 210;
+            let a = TasMatrix::from_fn(&ctx, n, 3, |r, c| (r * 4 + c) as f64);
+            let db = conv_layout_to_rowmajor(&a, 16, true);
+            assert_eq!(db.row(7), &[28.0, 29.0, 30.0]);
+            let back = conv_layout_from_rowmajor(&ctx, &db);
+            assert_close(&back.to_colmajor(), &a.to_colmajor(), 0.0, 0.0, "conv").unwrap();
+        }
+    }
+
+    #[test]
+    fn group_size_invariance() {
+        // Same op3/op1 results regardless of group size (Fig. 5 splitting
+        // must be semantically invisible).
+        let n = 200;
+        let results: Vec<(Vec<f64>, Vec<f64>)> = [1usize, 2, 5, 100]
+            .iter()
+            .map(|&gs| {
+                let fs = crate::safs::Safs::new(crate::safs::SafsConfig::untimed());
+                let ctx = DenseCtx::with(
+                    fs,
+                    true,
+                    64,
+                    2,
+                    gs,
+                    1,
+                    Arc::new(crate::dense::kernels::NativeKernels),
+                );
+                let mats: Vec<TasMatrix> = (0..5)
+                    .map(|i| {
+                        let m = TasMatrix::zeros(&ctx, n, 2);
+                        mv_random(&m, 1000 + i);
+                        m
+                    })
+                    .collect();
+                let refs: Vec<&TasMatrix> = mats.iter().collect();
+                let y = TasMatrix::zeros(&ctx, n, 2);
+                mv_random(&y, 77);
+                let g = mv_trans_mv(1.0, &refs, &y);
+                let bsmall = SmallMat::from_fn(10, 2, |r, c| ((r + c) % 3) as f64);
+                let cc = TasMatrix::zeros(&ctx, n, 2);
+                mv_times_mat_add_mv(1.0, &refs, &bsmall, 0.0, &cc);
+                (g.data, cc.to_colmajor())
+            })
+            .collect();
+        for (g, c) in &results[1..] {
+            assert_close(g, &results[0].0, 1e-12, 1e-12, "op3 groups").unwrap();
+            assert_close(c, &results[0].1, 1e-12, 1e-12, "op1 groups").unwrap();
+        }
+    }
+
+    #[test]
+    fn prop_ops_mem_equals_em() {
+        run_prop("ops-mem-vs-em", 10, |g| {
+            let n = g.usize_in(1, 400);
+            let b = g.usize_in(1, 5);
+            let seed = g.u64();
+            let compute = |em: bool| {
+                let ctx = if em {
+                    DenseCtx::em_for_tests(96)
+                } else {
+                    DenseCtx::mem_for_tests(96)
+                };
+                let x = TasMatrix::zeros(&ctx, n, b);
+                let y = TasMatrix::zeros(&ctx, n, b);
+                mv_random(&x, seed);
+                mv_random(&y, seed ^ 1);
+                let gm = mv_trans_mv(1.0, &[&x], &y);
+                let out = TasMatrix::zeros(&ctx, n, b);
+                mv_times_mat_add_mv(1.0, &[&x], &SmallMat::identity(b), 0.0, &out);
+                let mut v = gm.data;
+                v.extend(out.to_colmajor());
+                v.extend(mv_norm(&y));
+                v
+            };
+            assert_close(&compute(false), &compute(true), 1e-12, 1e-12, "mem-vs-em")
+        });
+    }
+}

@@ -1,0 +1,311 @@
+//! Small in-memory dense matrices (column-major) and the BLAS/LAPACK-lite
+//! routines the eigensolver needs on them: GEMM, Cholesky, triangular
+//! solves.  "Small" = subspace-sized (m ≤ a few hundred), never
+//! graph-sized; these all run in one thread.
+
+/// Column-major `rows × cols` matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SmallMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl SmallMat {
+    pub fn zeros(rows: usize, cols: usize) -> SmallMat {
+        SmallMat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> SmallMat {
+        let mut m = SmallMat::zeros(n, n);
+        for i in 0..n {
+            *m.at_mut(i, i) = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> SmallMat {
+        let mut m = SmallMat::zeros(rows, cols);
+        for c in 0..cols {
+            for r in 0..rows {
+                *m.at_mut(r, c) = f(r, c);
+            }
+        }
+        m
+    }
+
+    /// Row-major construction helper (tests, literals).
+    pub fn from_rows(rows: &[&[f64]]) -> SmallMat {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        SmallMat::from_fn(r, c, |i, j| rows[i][j])
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[c * self.rows + r]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[c * self.rows + r]
+    }
+
+    /// Column `c` as a slice.
+    pub fn col(&self, c: usize) -> &[f64] {
+        &self.data[c * self.rows..(c + 1) * self.rows]
+    }
+
+    pub fn col_mut(&mut self, c: usize) -> &mut [f64] {
+        &mut self.data[c * self.rows..(c + 1) * self.rows]
+    }
+
+    pub fn transpose(&self) -> SmallMat {
+        SmallMat::from_fn(self.cols, self.rows, |r, c| self.at(c, r))
+    }
+
+    /// Copy of rows `[r0, r0+nr)` (used to split the small operand across
+    /// TAS groups, Fig. 5).
+    pub fn row_block(&self, r0: usize, nr: usize) -> SmallMat {
+        SmallMat::from_fn(nr, self.cols, |r, c| self.at(r0 + r, c))
+    }
+
+    /// Copy of columns `[c0, c0+nc)`.
+    pub fn col_block(&self, c0: usize, nc: usize) -> SmallMat {
+        SmallMat::from_fn(self.rows, nc, |r, c| self.at(r, c0 + c))
+    }
+
+    /// Write `src` into rows starting at `r0`, cols starting at `c0`.
+    pub fn set_block(&mut self, r0: usize, c0: usize, src: &SmallMat) {
+        for c in 0..src.cols {
+            for r in 0..src.rows {
+                *self.at_mut(r0 + r, c0 + c) = src.at(r, c);
+            }
+        }
+    }
+
+    /// `C = alpha * A(^T?) * B(^T?) + beta * C`.
+    pub fn gemm(
+        alpha: f64,
+        a: &SmallMat,
+        ta: bool,
+        b: &SmallMat,
+        tb: bool,
+        beta: f64,
+        c: &mut SmallMat,
+    ) {
+        let (am, ak) = if ta { (a.cols, a.rows) } else { (a.rows, a.cols) };
+        let (bk, bn) = if tb { (b.cols, b.rows) } else { (b.rows, b.cols) };
+        assert_eq!(ak, bk, "gemm inner dims");
+        assert_eq!((c.rows, c.cols), (am, bn), "gemm output dims");
+        for j in 0..bn {
+            for i in 0..am {
+                let mut acc = 0.0;
+                for k in 0..ak {
+                    let av = if ta { a.at(k, i) } else { a.at(i, k) };
+                    let bv = if tb { b.at(j, k) } else { b.at(k, j) };
+                    acc += av * bv;
+                }
+                let e = c.at_mut(i, j);
+                *e = alpha * acc + beta * *e;
+            }
+        }
+    }
+
+    /// `C = A * B` convenience.
+    pub fn matmul(a: &SmallMat, b: &SmallMat) -> SmallMat {
+        let mut c = SmallMat::zeros(a.rows, b.cols);
+        SmallMat::gemm(1.0, a, false, b, false, 0.0, &mut c);
+        c
+    }
+
+    pub fn scale(&mut self, alpha: f64) {
+        self.data.iter_mut().for_each(|x| *x *= alpha);
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &SmallMat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Cholesky factorization `A = R^T R` (R upper triangular) of a
+    /// symmetric positive-definite matrix.  Returns `None` if a pivot
+    /// drops below `eps` (rank deficiency — the caller reorthogonalizes
+    /// differently in that case).
+    pub fn cholesky_upper(&self, eps: f64) -> Option<SmallMat> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut r = SmallMat::zeros(n, n);
+        for j in 0..n {
+            let mut d = self.at(j, j);
+            for k in 0..j {
+                d -= r.at(k, j) * r.at(k, j);
+            }
+            if d <= eps {
+                return None;
+            }
+            let dj = d.sqrt();
+            *r.at_mut(j, j) = dj;
+            for i in j + 1..n {
+                let mut v = self.at(j, i);
+                for k in 0..j {
+                    v -= r.at(k, j) * r.at(k, i);
+                }
+                *r.at_mut(j, i) = v / dj;
+            }
+        }
+        Some(r)
+    }
+
+    /// Solve `X * R = B` for X where R is upper triangular (used for
+    /// `X := X R^{-1}` block normalization).  Overwrites `b` in place;
+    /// `b` is `rows × n`, R is `n × n`.
+    pub fn solve_xr_upper(b: &mut SmallMat, r: &SmallMat) {
+        let n = r.rows;
+        assert_eq!(b.cols, n);
+        for j in 0..n {
+            // X[:, j] = (B[:, j] - sum_{k<j} X[:,k] R[k,j]) / R[j,j]
+            for k in 0..j {
+                let rkj = r.at(k, j);
+                if rkj != 0.0 {
+                    for i in 0..b.rows {
+                        let xk = b.at(i, k);
+                        *b.at_mut(i, j) -= xk * rkj;
+                    }
+                }
+            }
+            let rjj = r.at(j, j);
+            for i in 0..b.rows {
+                *b.at_mut(i, j) /= rjj;
+            }
+        }
+    }
+
+    /// Inverse of an upper-triangular matrix.
+    pub fn inv_upper(r: &SmallMat) -> SmallMat {
+        let n = r.rows;
+        let mut inv = SmallMat::identity(n);
+        SmallMat::solve_xr_upper(&mut inv, r);
+        inv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn gemm_matches_manual() {
+        let a = SmallMat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let b = SmallMat::from_rows(&[&[1.0, 0.0, 2.0], &[0.0, 1.0, 1.0]]);
+        let c = SmallMat::matmul(&a, &b);
+        let expect = SmallMat::from_rows(&[&[1.0, 2.0, 4.0], &[3.0, 4.0, 10.0], &[5.0, 6.0, 16.0]]);
+        assert_eq!(c, expect);
+    }
+
+    #[test]
+    fn gemm_transposes() {
+        let a = SmallMat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = SmallMat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        // A^T * B
+        let mut c = SmallMat::zeros(2, 2);
+        SmallMat::gemm(1.0, &a, true, &b, false, 0.0, &mut c);
+        let expect = SmallMat::matmul(&a.transpose(), &b);
+        assert_eq!(c, expect);
+        // A * B^T with alpha/beta
+        let mut c = SmallMat::identity(2);
+        SmallMat::gemm(2.0, &a, false, &b, true, 3.0, &mut c);
+        let mut expect = SmallMat::matmul(&a, &b.transpose());
+        expect.scale(2.0);
+        *expect.at_mut(0, 0) += 3.0;
+        *expect.at_mut(1, 1) += 3.0;
+        assert!(c.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // A = M^T M + I is SPD.
+        let m = SmallMat::from_fn(5, 4, |r, c| ((r * 7 + c * 3) % 5) as f64 - 2.0);
+        let mut a = SmallMat::zeros(4, 4);
+        SmallMat::gemm(1.0, &m, true, &m, false, 0.0, &mut a);
+        for i in 0..4 {
+            *a.at_mut(i, i) += 1.0;
+        }
+        let r = a.cholesky_upper(1e-12).unwrap();
+        // R is upper triangular.
+        for c in 0..4 {
+            for rr in c + 1..4 {
+                assert_eq!(r.at(rr, c), 0.0);
+            }
+        }
+        let mut back = SmallMat::zeros(4, 4);
+        SmallMat::gemm(1.0, &r, true, &r, false, 0.0, &mut back);
+        assert!(a.max_abs_diff(&back) < 1e-10, "diff {}", a.max_abs_diff(&back));
+    }
+
+    #[test]
+    fn cholesky_rejects_rank_deficient() {
+        let a = SmallMat::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]); // rank 1
+        assert!(a.cholesky_upper(1e-12).is_none());
+    }
+
+    #[test]
+    fn solve_xr_and_inverse() {
+        let r = SmallMat::from_rows(&[&[2.0, 1.0, 3.0], &[0.0, 4.0, 5.0], &[0.0, 0.0, 6.0]]);
+        let x = SmallMat::from_fn(4, 3, |i, j| (i + j) as f64 + 1.0);
+        let b = SmallMat::matmul(&x, &r);
+        let mut solved = b.clone();
+        SmallMat::solve_xr_upper(&mut solved, &r);
+        assert!(solved.max_abs_diff(&x) < 1e-12);
+
+        let inv = SmallMat::inv_upper(&r);
+        let prod = SmallMat::matmul(&inv, &r);
+        assert!(prod.max_abs_diff(&SmallMat::identity(3)) < 1e-12);
+    }
+
+    #[test]
+    fn blocks() {
+        let a = SmallMat::from_fn(6, 4, |r, c| (10 * r + c) as f64);
+        let rb = a.row_block(2, 3);
+        assert_eq!(rb.at(0, 0), 20.0);
+        assert_eq!(rb.at(2, 3), 43.0);
+        let cb = a.col_block(1, 2);
+        assert_eq!(cb.at(0, 0), 1.0);
+        assert_eq!(cb.at(5, 1), 52.0);
+        let mut z = SmallMat::zeros(6, 4);
+        z.set_block(2, 0, &rb.row_block(0, 2));
+        assert_eq!(z.at(2, 0), 20.0);
+        assert_eq!(z.at(3, 3), 33.0);
+    }
+
+    #[test]
+    fn prop_cholesky_solve_roundtrip() {
+        run_prop("chol-solve", 30, |g| {
+            let n = g.usize_in(1, 12);
+            let vals = g.vec_of((n + 3) * n, |g| g.f64_in(-1.0, 1.0));
+            let m = SmallMat::from_fn(n + 3, n, |r, c| vals[c * (n + 3) + r]);
+            let mut a = SmallMat::zeros(n, n);
+            SmallMat::gemm(1.0, &m, true, &m, false, 0.0, &mut a);
+            for i in 0..n {
+                *a.at_mut(i, i) += 0.5;
+            }
+            let r = a.cholesky_upper(1e-14).ok_or("chol failed")?;
+            let mut back = SmallMat::zeros(n, n);
+            SmallMat::gemm(1.0, &r, true, &r, false, 0.0, &mut back);
+            if a.max_abs_diff(&back) > 1e-8 * (1.0 + a.fro_norm()) {
+                return Err(format!("recon err {}", a.max_abs_diff(&back)));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,322 @@
+//! Small dense symmetric eigensolver (the "solved by LAPACK" step (2) of
+//! Algorithm 1 — the projected m×m problem).
+//!
+//! Householder tridiagonalization (tred2) followed by implicit-shift QL
+//! iteration (tql2), with eigenvector accumulation — the classic
+//! EISPACK pair, adequate for m up to a few thousand.
+
+use crate::dense::SmallMat;
+
+/// Eigendecomposition of a symmetric matrix: returns (eigenvalues
+/// ascending, eigenvectors as columns of Q, A·Q[:,i] = λ_i·Q[:,i]).
+pub fn sym_eig(a: &SmallMat) -> (Vec<f64>, SmallMat) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    if n == 0 {
+        return (Vec::new(), SmallMat::zeros(0, 0));
+    }
+    let mut z = a.clone(); // will become the eigenvector matrix
+    let mut d = vec![0.0; n]; // diagonal
+    let mut e = vec![0.0; n]; // off-diagonal
+    tred2(&mut z, &mut d, &mut e);
+    tql2(&mut z, &mut d, &mut e);
+    // Sort ascending (tql2 output is nearly sorted but not guaranteed).
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let vals: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let mut q = SmallMat::zeros(n, n);
+    for (jo, &ji) in idx.iter().enumerate() {
+        q.col_mut(jo).copy_from_slice(z.col(ji));
+    }
+    (vals, q)
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form,
+/// accumulating the orthogonal transform in `z` (EISPACK tred2).
+fn tred2(z: &mut SmallMat, d: &mut [f64], e: &mut [f64]) {
+    let n = z.rows;
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += z.at(i, k).abs();
+            }
+            if scale == 0.0 {
+                e[i] = z.at(i, l);
+            } else {
+                for k in 0..=l {
+                    *z.at_mut(i, k) /= scale;
+                    h += z.at(i, k) * z.at(i, k);
+                }
+                let mut f = z.at(i, l);
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                *z.at_mut(i, l) = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    *z.at_mut(j, i) = z.at(i, j) / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z.at(j, k) * z.at(i, k);
+                    }
+                    for k in j + 1..=l {
+                        g += z.at(k, j) * z.at(i, k);
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z.at(i, j);
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z.at(i, j);
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let upd = f * e[k] + g * z.at(i, k);
+                        *z.at_mut(j, k) -= upd;
+                    }
+                }
+            }
+        } else {
+            e[i] = z.at(i, l);
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z.at(i, k) * z.at(k, j);
+                }
+                for k in 0..i {
+                    let upd = g * z.at(k, i);
+                    *z.at_mut(k, j) -= upd;
+                }
+            }
+        }
+        d[i] = z.at(i, i);
+        *z.at_mut(i, i) = 1.0;
+        for j in 0..i {
+            *z.at_mut(j, i) = 0.0;
+            *z.at_mut(i, j) = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL iteration on a symmetric tridiagonal matrix,
+/// accumulating eigenvectors (EISPACK tql2).
+fn tql2(z: &mut SmallMat, d: &mut [f64], e: &mut [f64]) {
+    let n = z.rows;
+    if n == 1 {
+        return;
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find a small off-diagonal to split at.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter < 50, "tql2: too many iterations");
+            // Form shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r.abs() } else { -r.abs() });
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate the rotation in the eigenvector matrix.
+                for k in 0..n {
+                    f = z.at(k, i + 1);
+                    *z.at_mut(k, i + 1) = s * z.at(k, i) + c * f;
+                    *z.at_mut(k, i) = c * z.at(k, i) - s * f;
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+/// Eigenvalue selection criteria (the `which` of ARPACK/Anasazi).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Which {
+    /// Largest magnitude.
+    LargestMagnitude,
+    /// Largest algebraic.
+    LargestAlgebraic,
+    /// Smallest algebraic.
+    SmallestAlgebraic,
+}
+
+impl Which {
+    /// Indices of `vals` ordered best-first under this criterion.
+    pub fn order(&self, vals: &[f64]) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..vals.len()).collect();
+        match self {
+            Which::LargestMagnitude => {
+                idx.sort_by(|&i, &j| vals[j].abs().partial_cmp(&vals[i].abs()).unwrap())
+            }
+            Which::LargestAlgebraic => {
+                idx.sort_by(|&i, &j| vals[j].partial_cmp(&vals[i]).unwrap())
+            }
+            Which::SmallestAlgebraic => {
+                idx.sort_by(|&i, &j| vals[i].partial_cmp(&vals[j]).unwrap())
+            }
+        }
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    fn check_decomposition(a: &SmallMat, vals: &[f64], q: &SmallMat, tol: f64) {
+        let n = a.rows;
+        // Orthonormality.
+        let mut qtq = SmallMat::zeros(n, n);
+        SmallMat::gemm(1.0, q, true, q, false, 0.0, &mut qtq);
+        assert!(
+            qtq.max_abs_diff(&SmallMat::identity(n)) < tol,
+            "Q not orthonormal: {}",
+            qtq.max_abs_diff(&SmallMat::identity(n))
+        );
+        // A Q = Q Λ.
+        let aq = SmallMat::matmul(a, q);
+        let mut ql = q.clone();
+        for j in 0..n {
+            for i in 0..n {
+                *ql.at_mut(i, j) *= vals[j];
+            }
+        }
+        assert!(aq.max_abs_diff(&ql) < tol, "AQ != QΛ: {}", aq.max_abs_diff(&ql));
+        // Ascending.
+        assert!(vals.windows(2).all(|w| w[0] <= w[1] + 1e-12));
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = SmallMat::from_rows(&[&[3.0, 0.0], &[0.0, -1.0]]);
+        let (vals, q) = sym_eig(&a);
+        assert!((vals[0] + 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+        check_decomposition(&a, &vals, &q, 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → 1, 3.
+        let a = SmallMat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let (vals, q) = sym_eig(&a);
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+        check_decomposition(&a, &vals, &q, 1e-10);
+    }
+
+    #[test]
+    fn path_graph_spectrum() {
+        // Path P_n adjacency: eigenvalues 2cos(kπ/(n+1)), k=1..n.
+        let n = 12;
+        let mut a = SmallMat::zeros(n, n);
+        for i in 0..n - 1 {
+            *a.at_mut(i, i + 1) = 1.0;
+            *a.at_mut(i + 1, i) = 1.0;
+        }
+        let (vals, q) = sym_eig(&a);
+        let mut expect: Vec<f64> = (1..=n)
+            .map(|k| 2.0 * (k as f64 * std::f64::consts::PI / (n as f64 + 1.0)).cos())
+            .collect();
+        expect.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (v, e) in vals.iter().zip(&expect) {
+            assert!((v - e).abs() < 1e-10, "{v} vs {e}");
+        }
+        check_decomposition(&a, &vals, &q, 1e-9);
+    }
+
+    #[test]
+    fn repeated_eigenvalues() {
+        // I_4 has eigenvalue 1 ×4.
+        let a = SmallMat::identity(4);
+        let (vals, q) = sym_eig(&a);
+        assert!(vals.iter().all(|v| (v - 1.0).abs() < 1e-12));
+        check_decomposition(&a, &vals, &q, 1e-10);
+    }
+
+    #[test]
+    fn prop_random_symmetric() {
+        run_prop("sym-eig-random", 20, |g| {
+            let n = g.usize_in(1, 30);
+            let mut rng = Rng::new(g.u64());
+            let mut vals = vec![0.0; n * n];
+            for v in vals.iter_mut() {
+                *v = rng.gen_f64_range(-1.0, 1.0);
+            }
+            let m = SmallMat::from_fn(n, n, |r, c| vals[c * n + r]);
+            let mut a = SmallMat::zeros(n, n);
+            SmallMat::gemm(0.5, &m, false, &m, true, 0.0, &mut a);
+            let at = a.transpose();
+            SmallMat::gemm(0.5, &at, false, &SmallMat::identity(n), false, 0.5, &mut a.clone());
+            // a is already symmetric by construction (M Mᵀ scaled).
+            let (vals, q) = sym_eig(&a);
+            let aq = SmallMat::matmul(&a, &q);
+            for j in 0..n {
+                for i in 0..n {
+                    let expect = vals[j] * q.at(i, j);
+                    if (aq.at(i, j) - expect).abs() > 1e-8 * (1.0 + a.fro_norm()) {
+                        return Err(format!("AQ mismatch at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn which_ordering() {
+        let vals = [-5.0, 1.0, 3.0, -2.0];
+        assert_eq!(Which::LargestMagnitude.order(&vals), vec![0, 2, 3, 1]);
+        assert_eq!(Which::LargestAlgebraic.order(&vals), vec![2, 1, 3, 0]);
+        assert_eq!(Which::SmallestAlgebraic.order(&vals), vec![0, 3, 1, 2]);
+    }
+}

@@ -1,0 +1,458 @@
+//! Block Krylov–Schur eigensolver (§3.1, Algorithm 1).
+//!
+//! For symmetric operators Krylov–Schur reduces to thick-restarted block
+//! Lanczos (Stewart 2002; Wu & Simon): expand a block Krylov basis with
+//! full CGS2 reorthogonalization, project to a small symmetric matrix T,
+//! solve T densely, and on restart *keep* the best k Ritz vectors plus
+//! the residual block — the Schur/arrow structure of T carries the
+//! coupling.  All tall operations are the Table-1 MultiVec ops, so the
+//! solver runs unchanged over in-memory (FE-IM) or SSD-backed (FE-EM)
+//! subspaces.
+//!
+//! The invariant maintained between steps, with `V = [V₀ … V_{p-1}]` the
+//! non-residual blocks (total width m), `V_p` the residual block and `R`
+//! the last normalization factor:
+//!
+//! ```text
+//! A·V = V·T + V_p·R·Eᵀ      (E = last b columns)
+//! ```
+
+use super::dense_eig::{sym_eig, Which};
+use super::operator::Operator;
+use super::ortho::{normalize_block, ortho_against};
+use crate::dense::{mv_times_mat_add_mv, tas::mv_random, DenseCtx, SmallMat, TasMatrix};
+use std::sync::Arc;
+
+#[derive(Clone, Debug)]
+pub struct EigenConfig {
+    /// Number of eigenvalues wanted.
+    pub nev: usize,
+    /// Block size b (vectors updated together, §3.1).
+    pub block_size: usize,
+    /// Number of blocks NB; subspace size m = b·NB.
+    pub num_blocks: usize,
+    /// Relative residual tolerance: ‖Ax−θx‖ ≤ tol·max(|θ|, 1).
+    pub tol: f64,
+    pub max_restarts: usize,
+    pub which: Which,
+    pub seed: u64,
+    pub compute_eigenvectors: bool,
+}
+
+impl EigenConfig {
+    /// The paper's §4.3 defaults: block 1 and 2·nev blocks for small nev.
+    pub fn paper_defaults(nev: usize) -> EigenConfig {
+        EigenConfig {
+            nev,
+            block_size: if nev >= 16 { 4 } else { 1 },
+            num_blocks: if nev >= 16 { nev } else { 2 * nev },
+            tol: 1e-8,
+            max_restarts: 120,
+            which: Which::LargestMagnitude,
+            seed: 0xE16E,
+            compute_eigenvectors: false,
+        }
+    }
+}
+
+pub struct EigenResult {
+    pub eigenvalues: Vec<f64>,
+    pub residuals: Vec<f64>,
+    pub converged: bool,
+    pub restarts: usize,
+    pub operator_applies: u64,
+    /// Worst top-nev residual after each restart (convergence curve).
+    pub history: Vec<f64>,
+    /// Ritz vectors (nev columns in ≤b-wide blocks) if requested.
+    pub eigenvectors: Option<Vec<TasMatrix>>,
+}
+
+/// Solve for the `cfg.nev` eigenpairs of a symmetric `op`.
+pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> EigenResult {
+    let n = op.dim();
+    let b = cfg.block_size.max(1);
+    assert!(cfg.nev >= 1);
+    let m_max = (b * cfg.num_blocks.max(2)).min(n);
+    assert!(
+        m_max >= cfg.nev + b,
+        "subspace {m_max} too small for nev {} with block {b}",
+        cfg.nev
+    );
+
+    // Tiny problems: the Krylov basis would span ℝⁿ — solve densely via
+    // operator applications on identity blocks.
+    if n <= m_max + b {
+        return solve_dense_fallback(op, ctx, cfg);
+    }
+
+    // --- initialization ---
+    let v0 = TasMatrix::zeros(ctx, n, b);
+    mv_random(&v0, cfg.seed);
+    normalize_block(&v0, &[], cfg.seed ^ 1);
+    let mut basis: Vec<TasMatrix> = vec![v0];
+    let mut t = SmallMat::zeros(0, 0); // projected matrix over non-residual blocks
+    let mut last_r = SmallMat::identity(b);
+    let mut history = Vec::new();
+
+    for restart in 0..=cfg.max_restarts {
+        // --- expand until the subspace is full ---
+        while t.rows + basis.last().unwrap().n_cols <= m_max {
+            let vp = basis.last().unwrap();
+            let w = op.apply(ctx, vp);
+            let refs: Vec<&TasMatrix> = basis.iter().collect();
+            let c = ortho_against(&refs, &w);
+            let (r, _) = normalize_block(&w, &refs, cfg.seed ^ (0x100 + t.rows as u64));
+            // Residual block joins T; its column block is c.
+            let bw = vp.n_cols;
+            let new_m = t.rows + bw;
+            let mut t_new = SmallMat::zeros(new_m, new_m);
+            t_new.set_block(0, 0, &t);
+            // Row block = cᵀ first, then the column block = c; they
+            // overlap in the bottom-right bw×bw, which the averaging
+            // below symmetrizes against rounding.
+            for i in 0..bw {
+                for j in 0..new_m {
+                    *t_new.at_mut(new_m - bw + i, j) = c.at(j, i);
+                }
+            }
+            t_new.set_block(0, new_m - bw, &c);
+            for i in 0..new_m {
+                for j in 0..i {
+                    let avg = 0.5 * (t_new.at(i, j) + t_new.at(j, i));
+                    *t_new.at_mut(i, j) = avg;
+                    *t_new.at_mut(j, i) = avg;
+                }
+            }
+            t = t_new;
+            last_r = r;
+            basis.push(w);
+        }
+
+        // --- solve the projected problem and test convergence ---
+        let m = t.rows;
+        let (theta, u) = sym_eig(&t);
+        let order = cfg.which.order(&theta);
+        let bw = b; // last non-residual block always has width b here
+        let res = |i: usize| -> f64 {
+            // ‖R · u_i[last block rows]‖₂
+            let mut s = 0.0;
+            for r in 0..bw {
+                let mut acc = 0.0;
+                for k in 0..bw {
+                    acc += last_r.at(r, k) * u.at(m - bw + k, order[i]);
+                }
+                s += acc * acc;
+            }
+            s.sqrt()
+        };
+        let worst = (0..cfg.nev.min(m)).map(res).fold(0.0f64, f64::max);
+        history.push(worst);
+        let tolerance =
+            |i: usize| cfg.tol * theta[order[i]].abs().max(1.0);
+        let converged =
+            cfg.nev <= m && (0..cfg.nev).all(|i| res(i) <= tolerance(i));
+
+        if converged || restart == cfg.max_restarts {
+            let eigenvalues: Vec<f64> = (0..cfg.nev.min(m)).map(|i| theta[order[i]]).collect();
+            let residuals: Vec<f64> = (0..cfg.nev.min(m)).map(res).collect();
+            let eigenvectors = cfg.compute_eigenvectors.then(|| {
+                let cols: Vec<usize> = (0..cfg.nev.min(m)).map(|i| order[i]).collect();
+                ritz_vectors(&basis[..basis.len() - 1], &u, &cols, ctx, b)
+            });
+            return EigenResult {
+                eigenvalues,
+                residuals,
+                converged,
+                restarts: restart,
+                operator_applies: op.applies(),
+                history,
+                eigenvectors,
+            };
+        }
+
+        // --- thick restart: keep k Ritz vectors + residual block ---
+        let keep = (cfg.nev + b).max(m / 2).min(m - b);
+        let cols: Vec<usize> = (0..keep).map(|i| order[i]).collect();
+        let mut new_basis = ritz_vectors(&basis[..basis.len() - 1], &u, &cols, ctx, b);
+        let residual = basis.pop().unwrap();
+        drop(basis); // old blocks freed (files deleted) before the new grow
+        new_basis.push(residual);
+        basis = new_basis;
+        // T' = diag(θ_keep); the coupling S reappears via the next
+        // expansion's full projection.
+        let mut t_new = SmallMat::zeros(keep, keep);
+        for (i, &ci) in cols.iter().enumerate() {
+            *t_new.at_mut(i, i) = theta[ci];
+        }
+        t = t_new;
+    }
+    unreachable!()
+}
+
+/// `Y = V · U[:, cols]`, returned as blocks of width ≤ `b`.
+fn ritz_vectors(
+    v: &[TasMatrix],
+    u: &SmallMat,
+    cols: &[usize],
+    ctx: &Arc<DenseCtx>,
+    b: usize,
+) -> Vec<TasMatrix> {
+    let refs: Vec<&TasMatrix> = v.iter().collect();
+    let m: usize = refs.iter().map(|x| x.n_cols).sum();
+    let n = refs[0].n_rows;
+    let mut out = Vec::with_capacity(cols.len().div_ceil(b));
+    let mut j = 0;
+    while j < cols.len() {
+        let w = b.min(cols.len() - j);
+        let mut usub = SmallMat::zeros(m, w);
+        for (jj, &cj) in cols[j..j + w].iter().enumerate() {
+            for i in 0..m {
+                *usub.at_mut(i, jj) = u.at(i, cj);
+            }
+        }
+        let y = TasMatrix::zeros(ctx, n, w);
+        mv_times_mat_add_mv(1.0, &refs, &usub, 0.0, &y);
+        out.push(y);
+        j += w;
+    }
+    out
+}
+
+/// Dense fallback for problems small enough that the Krylov basis would
+/// span the whole space: apply the operator to identity blocks to
+/// materialize A, then solve directly.
+fn solve_dense_fallback(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> EigenResult {
+    let n = op.dim();
+    let mut a = SmallMat::zeros(n, n);
+    let bsz = cfg.block_size.max(1).min(n);
+    let mut c0 = 0;
+    while c0 < n {
+        let w = bsz.min(n - c0);
+        let e = TasMatrix::from_fn(ctx, n, w, |r, c| if r == c0 + c { 1.0 } else { 0.0 });
+        let y = op.apply(ctx, &e);
+        let ycm = y.to_colmajor();
+        for c in 0..w {
+            for r in 0..n {
+                *a.at_mut(r, c0 + c) = ycm[c * n + r];
+            }
+        }
+        c0 += w;
+    }
+    let (vals, q) = sym_eig(&a);
+    let order = cfg.which.order(&vals);
+    let nev = cfg.nev.min(n);
+    let eigenvalues: Vec<f64> = (0..nev).map(|i| vals[order[i]]).collect();
+    let eigenvectors = cfg.compute_eigenvectors.then(|| {
+        let mut blocks = Vec::new();
+        let mut j = 0;
+        while j < nev {
+            let w = cfg.block_size.max(1).min(nev - j);
+            let cols: Vec<usize> = (j..j + w).map(|i| order[i]).collect();
+            blocks.push(TasMatrix::from_fn(ctx, n, w, |r, c| q.at(r, cols[c])));
+            j += w;
+        }
+        blocks
+    });
+    EigenResult {
+        eigenvalues,
+        residuals: vec![0.0; nev],
+        converged: true,
+        restarts: 0,
+        operator_applies: op.applies(),
+        history: vec![0.0],
+        eigenvectors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eigen::operator::SpmmOperator;
+    use crate::graph::gnm_undirected;
+    use crate::sparse::{build_mem, CooMatrix};
+    use crate::spmm::SpmmOpts;
+    use crate::util::rng::Rng;
+
+    /// Dense reference spectrum of a COO graph.
+    fn dense_spectrum(coo: &CooMatrix) -> Vec<f64> {
+        let n = coo.n_rows as usize;
+        let mut a = SmallMat::zeros(n, n);
+        for (i, &(r, c)) in coo.entries.iter().enumerate() {
+            let v = coo.values.as_ref().map(|v| v[i] as f64).unwrap_or(1.0);
+            *a.at_mut(r as usize, c as usize) = v;
+        }
+        sym_eig(&a).0
+    }
+
+    fn cycle_graph(n: u64) -> CooMatrix {
+        let mut coo = CooMatrix::new(n, n);
+        for v in 0..n {
+            coo.push(v as u32, ((v + 1) % n) as u32);
+        }
+        coo.symmetrize();
+        coo
+    }
+
+    #[test]
+    fn cycle_graph_largest_eigenvalue_is_two() {
+        // C_n adjacency: eigenvalues 2cos(2πk/n); largest = 2.
+        let coo = cycle_graph(100);
+        let op = SpmmOperator::new(build_mem(&coo), SpmmOpts::default(), 2);
+        let ctx = DenseCtx::mem_for_tests(128);
+        let cfg = EigenConfig {
+            nev: 4,
+            block_size: 2,
+            num_blocks: 16,
+            tol: 1e-9,
+            max_restarts: 400,
+            which: Which::LargestAlgebraic,
+            seed: 3,
+            compute_eigenvectors: true,
+        };
+        let res = solve(&op, &ctx, &cfg);
+        assert!(res.converged, "history: {:?}", res.history);
+        assert!((res.eigenvalues[0] - 2.0).abs() < 1e-7, "{:?}", res.eigenvalues);
+        // Next eigenvalues: 2cos(2π/n) twice (degenerate pair).
+        let e1 = 2.0 * (2.0 * std::f64::consts::PI / 100.0).cos();
+        assert!((res.eigenvalues[1] - e1).abs() < 1e-6);
+        assert!((res.eigenvalues[2] - e1).abs() < 1e-6);
+
+        // Residual invariant via the operator itself.
+        let x = res.eigenvectors.as_ref().unwrap();
+        let refs: Vec<&TasMatrix> = x.iter().collect();
+        let y = op.apply(&ctx, refs[0]);
+        let xv = refs[0].to_colmajor();
+        let yv = y.to_colmajor();
+        for j in 0..refs[0].n_cols {
+            let theta = res.eigenvalues[j];
+            let err: f64 = (0..100)
+                .map(|i| (yv[j * 100 + i] - theta * xv[j * 100 + i]).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            assert!(err < 1e-6, "residual col {j}: {err}");
+        }
+    }
+
+    #[test]
+    fn random_graph_matches_dense_reference() {
+        let mut rng = Rng::new(9);
+        let coo = gnm_undirected(120, 400, &mut rng);
+        let spectrum = dense_spectrum(&coo);
+        let op = SpmmOperator::new(build_mem(&coo), SpmmOpts::default(), 2);
+        let ctx = DenseCtx::mem_for_tests(64);
+        let cfg = EigenConfig {
+            nev: 6,
+            block_size: 3,
+            num_blocks: 8,
+            tol: 1e-9,
+            max_restarts: 300,
+            which: Which::LargestMagnitude,
+            seed: 5,
+            compute_eigenvectors: false,
+        };
+        let res = solve(&op, &ctx, &cfg);
+        assert!(res.converged, "history {:?}", res.history);
+        let mut expect: Vec<f64> = spectrum.clone();
+        expect.sort_by(|a, b| b.abs().partial_cmp(&a.abs()).unwrap());
+        for i in 0..6 {
+            assert!(
+                (res.eigenvalues[i].abs() - expect[i].abs()).abs() < 1e-6,
+                "ev {i}: {} vs {}",
+                res.eigenvalues[i],
+                expect[i]
+            );
+        }
+    }
+
+    #[test]
+    fn em_and_im_agree() {
+        let mut rng = Rng::new(10);
+        let coo = gnm_undirected(150, 600, &mut rng);
+        let run = |em: bool| {
+            let ctx = if em {
+                DenseCtx::em_for_tests(64)
+            } else {
+                DenseCtx::mem_for_tests(64)
+            };
+            let op = SpmmOperator::new(build_mem(&coo), SpmmOpts::default(), 2);
+            let cfg = EigenConfig {
+                nev: 4,
+                block_size: 2,
+                num_blocks: 8,
+                tol: 1e-8,
+                max_restarts: 300,
+                which: Which::LargestMagnitude,
+                seed: 6,
+                compute_eigenvectors: false,
+            };
+            solve(&op, &ctx, &cfg)
+        };
+        let im = run(false);
+        let em = run(true);
+        assert!(im.converged && em.converged);
+        for (a, b) in im.eigenvalues.iter().zip(&em.eigenvalues) {
+            assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dense_fallback_small_problem() {
+        let coo = cycle_graph(12);
+        let op = SpmmOperator::new(build_mem(&coo), SpmmOpts::default(), 1);
+        let ctx = DenseCtx::mem_for_tests(32);
+        let cfg = EigenConfig {
+            nev: 3,
+            block_size: 2,
+            num_blocks: 8, // m_max=16 > n=12 → dense path
+            tol: 1e-9,
+            max_restarts: 10,
+            which: Which::LargestAlgebraic,
+            seed: 8,
+            compute_eigenvectors: true,
+        };
+        let res = solve(&op, &ctx, &cfg);
+        assert!(res.converged);
+        assert!((res.eigenvalues[0] - 2.0).abs() < 1e-10);
+        assert_eq!(res.eigenvectors.as_ref().unwrap().len(), 2); // 2+1 cols
+    }
+
+    #[test]
+    fn weighted_graph() {
+        let mut rng = Rng::new(11);
+        let mut coo = CooMatrix::new(100, 100);
+        for _ in 0..300 {
+            let r = rng.gen_range(100) as u32;
+            let c = rng.gen_range(100) as u32;
+            if r != c {
+                coo.push_weighted(r, c, rng.gen_f64_range(0.1, 1.0) as f32);
+            }
+        }
+        coo.sort_dedup();
+        coo.symmetrize();
+        let spectrum = dense_spectrum(&coo);
+        let op = SpmmOperator::new(build_mem(&coo), SpmmOpts::default(), 1);
+        let ctx = DenseCtx::mem_for_tests(64);
+        let cfg = EigenConfig {
+            nev: 3,
+            block_size: 2,
+            num_blocks: 15,
+            tol: 1e-8,
+            max_restarts: 400,
+            which: Which::LargestMagnitude,
+            seed: 12,
+            compute_eigenvectors: false,
+        };
+        let res = solve(&op, &ctx, &cfg);
+        assert!(res.converged, "{:?}", res.history);
+        let mut expect = spectrum;
+        expect.sort_by(|a, b| b.abs().partial_cmp(&a.abs()).unwrap());
+        for i in 0..3 {
+            assert!(
+                (res.eigenvalues[i].abs() - expect[i].abs()).abs() < 1e-6,
+                "{:?} vs {:?}",
+                res.eigenvalues,
+                &expect[..3]
+            );
+        }
+    }
+}

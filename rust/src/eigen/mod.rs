@@ -1,0 +1,14 @@
+//! The Block Krylov–Schur eigensolver and SVD driver — the Anasazi role
+//! of the paper, built entirely on the Table-1 MultiVec operations so it
+//! runs unchanged over in-memory or SSD-backed subspaces.
+
+pub mod dense_eig;
+pub mod krylov_schur;
+pub mod operator;
+pub mod ortho;
+pub mod svd;
+
+pub use dense_eig::{sym_eig, Which};
+pub use krylov_schur::{solve, EigenConfig, EigenResult};
+pub use operator::{CsrMode, CsrOperator, GramOperator, Operator, SpmmOperator};
+pub use svd::{build_gram_operator, svd, SvdResult};

@@ -1,0 +1,253 @@
+//! Linear operators: the `A·X` the eigensolver applies each iteration.
+//!
+//! `SpmmOperator` wraps a (symmetric) sparse matrix image and performs
+//! ConvLayout → SpMM → ConvLayout, exactly the paper's data path: the
+//! subspace lives column-major (on SSDs in EM mode), SpMM wants row-major
+//! in RAM (§3.4's `ConvLayout`).  `GramOperator` applies `Aᵀ(A·X)` for
+//! singular value decomposition of directed graphs (§4.3.2).
+
+use crate::dense::{conv_layout_from_rowmajor, conv_layout_to_rowmajor, DenseCtx, TasMatrix};
+use crate::metrics::{Counter, PhaseTimers};
+use crate::sparse::SparseMatrix;
+use crate::spmm::{spmm, SpmmOpts};
+use std::sync::Arc;
+
+pub trait Operator: Sync {
+    fn dim(&self) -> usize;
+    /// `Y = A·X` (returns a fresh TAS matrix in `ctx`'s backing mode).
+    fn apply(&self, ctx: &Arc<DenseCtx>, x: &TasMatrix) -> TasMatrix;
+    fn applies(&self) -> u64;
+}
+
+/// `A·X` via the SpMM engine.  The matrix must be symmetric for
+/// eigensolving (undirected graphs); use [`GramOperator`] otherwise.
+pub struct SpmmOperator {
+    pub matrix: SparseMatrix,
+    pub opts: SpmmOpts,
+    pub threads: usize,
+    pub timers: Arc<PhaseTimers>,
+    count: Counter,
+}
+
+impl SpmmOperator {
+    pub fn new(matrix: SparseMatrix, opts: SpmmOpts, threads: usize) -> SpmmOperator {
+        assert_eq!(matrix.n_rows, matrix.n_cols, "eigenproblem needs square A");
+        SpmmOperator {
+            matrix,
+            opts,
+            threads,
+            timers: Arc::new(PhaseTimers::new()),
+            count: Counter::default(),
+        }
+    }
+}
+
+impl Operator for SpmmOperator {
+    fn dim(&self) -> usize {
+        self.matrix.n_rows as usize
+    }
+
+    fn apply(&self, ctx: &Arc<DenseCtx>, x: &TasMatrix) -> TasMatrix {
+        self.count.inc();
+        let input = self.timers.scope("conv_layout", || {
+            conv_layout_to_rowmajor(x, self.matrix.tile_dim, self.opts.numa)
+        });
+        let mut output = crate::spmm::DenseBlock::new(
+            self.matrix.n_rows as usize,
+            x.n_cols,
+            self.matrix.tile_dim,
+            self.opts.numa,
+        );
+        self.timers.scope("spmm", || {
+            spmm(&self.matrix, &input, &mut output, &self.opts, self.threads)
+        });
+        self.timers
+            .scope("conv_layout", || conv_layout_from_rowmajor(ctx, &output))
+    }
+
+    fn applies(&self) -> u64 {
+        self.count.get()
+    }
+}
+
+/// How the CSR baseline operator multiplies (models the comparators of
+/// §4: Trilinos traverses the matrix once per dense column; "MKL-like"
+/// is a straightforward row-parallel CSR SpMM).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CsrMode {
+    TrilinosLike,
+    MklLike,
+}
+
+/// `A·X` via a CSR baseline kernel — used by the Fig. 12 comparison as
+/// the "original Trilinos KrylovSchur" stand-in.
+pub struct CsrOperator {
+    pub csr: crate::sparse::CsrMatrix,
+    pub mode: CsrMode,
+    pub threads: usize,
+    pub timers: Arc<PhaseTimers>,
+    count: Counter,
+}
+
+impl CsrOperator {
+    pub fn new(csr: crate::sparse::CsrMatrix, mode: CsrMode, threads: usize) -> CsrOperator {
+        assert_eq!(csr.n_rows, csr.n_cols);
+        CsrOperator { csr, mode, threads, timers: Arc::new(PhaseTimers::new()), count: Counter::default() }
+    }
+}
+
+impl Operator for CsrOperator {
+    fn dim(&self) -> usize {
+        self.csr.n_rows as usize
+    }
+
+    fn apply(&self, ctx: &Arc<DenseCtx>, x: &TasMatrix) -> TasMatrix {
+        self.count.inc();
+        let input = self
+            .timers
+            .scope("conv_layout", || conv_layout_to_rowmajor(x, 16, true));
+        let mut output =
+            crate::spmm::DenseBlock::new(self.dim(), x.n_cols, 16, true);
+        self.timers.scope("spmm", || match self.mode {
+            CsrMode::TrilinosLike => {
+                crate::spmm::spmm_trilinos_like(&self.csr, &input, &mut output, self.threads)
+            }
+            CsrMode::MklLike => {
+                crate::spmm::spmm_csr(&self.csr, &input, &mut output, self.threads, true)
+            }
+        });
+        self.timers
+            .scope("conv_layout", || conv_layout_from_rowmajor(ctx, &output))
+    }
+
+    fn applies(&self) -> u64 {
+        self.count.get()
+    }
+}
+
+/// `AᵀA·X` — the normal-equations operator whose eigenpairs give the
+/// singular values/right singular vectors of a (rectangular or
+/// unsymmetric) A.
+pub struct GramOperator {
+    pub a: SparseMatrix,
+    pub at: SparseMatrix,
+    pub opts: SpmmOpts,
+    pub threads: usize,
+    pub timers: Arc<PhaseTimers>,
+    count: Counter,
+}
+
+impl GramOperator {
+    pub fn new(a: SparseMatrix, at: SparseMatrix, opts: SpmmOpts, threads: usize) -> GramOperator {
+        assert_eq!(a.n_rows, at.n_cols);
+        assert_eq!(a.n_cols, at.n_rows);
+        GramOperator {
+            a,
+            at,
+            opts,
+            threads,
+            timers: Arc::new(PhaseTimers::new()),
+            count: Counter::default(),
+        }
+    }
+}
+
+impl Operator for GramOperator {
+    fn dim(&self) -> usize {
+        self.a.n_cols as usize
+    }
+
+    fn apply(&self, ctx: &Arc<DenseCtx>, x: &TasMatrix) -> TasMatrix {
+        self.count.inc();
+        let input = self.timers.scope("conv_layout", || {
+            conv_layout_to_rowmajor(x, self.a.tile_dim, self.opts.numa)
+        });
+        let mut mid = crate::spmm::DenseBlock::new(
+            self.a.n_rows as usize,
+            x.n_cols,
+            self.a.tile_dim,
+            self.opts.numa,
+        );
+        self.timers
+            .scope("spmm", || spmm(&self.a, &input, &mut mid, &self.opts, self.threads));
+        let mut out = crate::spmm::DenseBlock::new(
+            self.at.n_rows as usize,
+            x.n_cols,
+            self.at.tile_dim,
+            self.opts.numa,
+        );
+        self.timers
+            .scope("spmm", || spmm(&self.at, &mid, &mut out, &self.opts, self.threads));
+        self.timers
+            .scope("conv_layout", || conv_layout_from_rowmajor(ctx, &out))
+    }
+
+    fn applies(&self) -> u64 {
+        self.count.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{build_mem, CooMatrix};
+    use crate::util::prop::assert_close;
+
+    #[test]
+    fn spmm_operator_matches_dense() {
+        // Symmetric 5-vertex graph.
+        let mut coo = CooMatrix::new(5, 5);
+        for &(r, c) in &[(0u32, 1u32), (1, 2), (2, 3), (3, 4), (0, 4)] {
+            coo.push(r, c);
+        }
+        coo.symmetrize();
+        let op = SpmmOperator::new(build_mem(&coo), SpmmOpts::default(), 2);
+        let ctx = DenseCtx::mem_for_tests(64);
+        let x = TasMatrix::from_fn(&ctx, 5, 2, |r, c| (r + 1) as f64 * (c + 1) as f64);
+        let y = op.apply(&ctx, &x);
+        // dense reference
+        let xv = x.to_colmajor();
+        let mut expect = vec![0.0; 10];
+        for &(r, c) in &coo.entries {
+            for j in 0..2 {
+                expect[j * 5 + r as usize] += xv[j * 5 + c as usize];
+            }
+        }
+        assert_close(&y.to_colmajor(), &expect, 1e-12, 1e-12, "op").unwrap();
+        assert_eq!(op.applies(), 1);
+    }
+
+    #[test]
+    fn gram_operator_is_ata() {
+        let mut coo = CooMatrix::new(4, 4);
+        for &(r, c) in &[(0u32, 1u32), (1, 2), (3, 0), (2, 2)] {
+            coo.push(r, c);
+        }
+        coo.sort_dedup();
+        let a = build_mem(&coo);
+        let at = build_mem(&coo.transpose());
+        let op = GramOperator::new(a, at, SpmmOpts::default(), 1);
+        let ctx = DenseCtx::mem_for_tests(64);
+        let x = TasMatrix::from_fn(&ctx, 4, 1, |r, _| r as f64 + 1.0);
+        let y = op.apply(&ctx, &x);
+        // Dense AᵀA x.
+        let mut ad = vec![vec![0.0f64; 4]; 4];
+        for &(r, c) in &coo.entries {
+            ad[r as usize][c as usize] = 1.0;
+        }
+        let xv = x.to_colmajor();
+        let mut ax = vec![0.0; 4];
+        for r in 0..4 {
+            for c in 0..4 {
+                ax[r] += ad[r][c] * xv[c];
+            }
+        }
+        let mut expect = vec![0.0; 4];
+        for r in 0..4 {
+            for c in 0..4 {
+                expect[c] += ad[r][c] * ax[r];
+            }
+        }
+        assert_close(&y.to_colmajor(), &expect, 1e-12, 1e-12, "ata").unwrap();
+    }
+}

@@ -1,0 +1,154 @@
+//! Block (re)orthogonalization (the step the paper attributes most of the
+//! eigensolver's dense-matrix traffic to).
+//!
+//! Classical Gram–Schmidt done twice (CGS2, "twice is enough") against
+//! the whole existing basis, expressed entirely in the Table-1 operations
+//! `MvTransMv` (op3) and `MvTimesMatAddMv` (op1) — so in EM mode every
+//! sweep streams the full subspace from the SSD array, which is exactly
+//! why reorthogonalization dominates the paper's runtime at large nev.
+
+use crate::dense::{mv_times_mat_add_mv, mv_trans_mv, tas::mv_random, SmallMat, TasMatrix};
+
+/// Project `x` against the orthonormal basis blocks (`x -= V·(Vᵀx)`),
+/// twice.  Returns the accumulated coefficients `C = Vᵀx` (m×b) from the
+/// first pass plus the correction of the second (needed to extend the
+/// projected matrix T).
+pub fn ortho_against(basis: &[&TasMatrix], x: &TasMatrix) -> SmallMat {
+    if basis.is_empty() {
+        return SmallMat::zeros(0, x.n_cols);
+    }
+    // Pass 1.
+    let c1 = mv_trans_mv(1.0, basis, x);
+    mv_times_mat_add_mv(-1.0, basis, &c1, 1.0, x);
+    // Pass 2 (correction for the rounding of pass 1).
+    let c2 = mv_trans_mv(1.0, basis, x);
+    mv_times_mat_add_mv(-1.0, basis, &c2, 1.0, x);
+    // Total coefficients.
+    let mut c = c1;
+    for (a, b) in c.data.iter_mut().zip(&c2.data) {
+        *a += b;
+    }
+    c
+}
+
+/// Orthonormalize the columns of `x` in place via Cholesky QR
+/// (`G = XᵀX = RᵀR`, `X := X·R⁻¹`), retried once for stability.
+/// Returns `R` (b×b upper triangular) such that `X_old = X_new · R`.
+///
+/// On rank deficiency (Cholesky breakdown) the offending block is
+/// refreshed with random vectors, re-projected against `basis`, and the
+/// corresponding rows of R are zero — the standard restart treatment.
+pub fn normalize_block(x: &TasMatrix, basis: &[&TasMatrix], seed: u64) -> (SmallMat, bool) {
+    let b = x.n_cols;
+    let mut r_total = SmallMat::identity(b);
+    let mut replaced = false;
+    for attempt in 0..3 {
+        let g = mv_trans_mv(1.0, &[x], x);
+        // Breakdown tolerance relative to the largest diagonal.
+        let dmax = (0..b).map(|i| g.at(i, i)).fold(0.0f64, f64::max);
+        match g.cholesky_upper(1e-14 * dmax.max(1e-300)) {
+            Some(r) => {
+                // X := X · R⁻¹  (op1 with the inverse; in-place via alias).
+                let rinv = SmallMat::inv_upper(&r);
+                mv_times_mat_add_mv(1.0, &[x], &rinv, 0.0, x);
+                // R_total := R · R_total.
+                r_total = SmallMat::matmul(&r, &r_total);
+                if attempt == 0 {
+                    // One refinement pass tightens orthonormality.
+                    continue;
+                }
+                return (r_total, replaced);
+            }
+            None => {
+                // Rank deficient: replace with fresh random vectors,
+                // project against everything, and try again.
+                replaced = true;
+                mv_random(x, seed.wrapping_add(attempt as u64 + 1));
+                ortho_against(basis, x);
+                r_total = SmallMat::zeros(b, b); // old block contributes nothing
+            }
+        }
+    }
+    panic!("normalize_block: persistent rank deficiency");
+}
+
+/// Max |VᵢᵀVⱼ - δᵢⱼ| over all basis blocks — test/diagnostic invariant.
+pub fn orthonormality_error(blocks: &[&TasMatrix]) -> f64 {
+    if blocks.is_empty() {
+        return 0.0;
+    }
+    let mut worst = 0.0f64;
+    for (i, x) in blocks.iter().enumerate() {
+        let g = mv_trans_mv(1.0, blocks, x);
+        let row_off: usize = blocks[..i].iter().map(|m| m.n_cols).sum();
+        for r in 0..g.rows {
+            for c in 0..x.n_cols {
+                let expect = if r == row_off + c { 1.0 } else { 0.0 };
+                worst = worst.max((g.at(r, c) - expect).abs());
+            }
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::DenseCtx;
+
+    #[test]
+    fn normalize_gives_orthonormal_columns() {
+        for em in [false, true] {
+            let ctx = if em {
+                DenseCtx::em_for_tests(64)
+            } else {
+                DenseCtx::mem_for_tests(64)
+            };
+            let x = TasMatrix::from_fn(&ctx, 300, 3, |r, c| {
+                ((r * (c + 1)) % 17) as f64 - 8.0 + 0.1 * c as f64
+            });
+            let before = x.to_colmajor();
+            let (r, replaced) = normalize_block(&x, &[], 1);
+            assert!(!replaced);
+            assert!(orthonormality_error(&[&x]) < 1e-12);
+            // X_old = X_new R.
+            let xnew = x.to_colmajor();
+            let n = 300;
+            for j in 0..3 {
+                for i in 0..n {
+                    let mut acc = 0.0;
+                    for k in 0..3 {
+                        acc += xnew[k * n + i] * r.at(k, j);
+                    }
+                    assert!(
+                        (acc - before[j * n + i]).abs() < 1e-9,
+                        "reconstruction ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ortho_against_makes_blocks_orthogonal() {
+        let ctx = DenseCtx::mem_for_tests(64);
+        let v = TasMatrix::from_fn(&ctx, 200, 2, |r, c| ((r + c * 3) % 7) as f64);
+        normalize_block(&v, &[], 2);
+        let x = TasMatrix::from_fn(&ctx, 200, 2, |r, c| ((r * 2 + c) % 5) as f64 + 0.3);
+        ortho_against(&[&v], &x);
+        let g = mv_trans_mv(1.0, &[&v], &x);
+        assert!(g.data.iter().all(|&e| e.abs() < 1e-12), "VᵀX != 0: {:?}", g.data);
+        normalize_block(&x, &[&v], 3);
+        assert!(orthonormality_error(&[&v, &x]) < 1e-12);
+    }
+
+    #[test]
+    fn rank_deficient_block_gets_replaced() {
+        let ctx = DenseCtx::mem_for_tests(64);
+        // Two identical columns → rank 1.
+        let x = TasMatrix::from_fn(&ctx, 150, 2, |r, _| (r % 13) as f64 + 1.0);
+        let (_r, replaced) = normalize_block(&x, &[], 7);
+        assert!(replaced);
+        assert!(orthonormality_error(&[&x]) < 1e-10);
+    }
+}

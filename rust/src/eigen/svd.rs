@@ -1,0 +1,183 @@
+//! Singular value decomposition for directed graphs (§4.3.2).
+//!
+//! The paper's page graph is directed, so its adjacency matrix is
+//! asymmetric and FlashEigen performs SVD instead of eigendecomposition.
+//! We compute the eigenpairs of the symmetric PSD operator `AᵀA` with the
+//! Block Krylov–Schur solver: singular values are the square roots of its
+//! eigenvalues and the Ritz vectors are right singular vectors.
+
+use super::dense_eig::Which;
+use super::krylov_schur::{solve, EigenConfig, EigenResult};
+use super::operator::GramOperator;
+use crate::dense::{DenseCtx, TasMatrix};
+use crate::sparse::{build_matrix, BuildTarget, CooMatrix, SparseMatrix};
+use crate::spmm::SpmmOpts;
+use std::sync::Arc;
+
+pub struct SvdResult {
+    pub singular_values: Vec<f64>,
+    pub converged: bool,
+    pub restarts: usize,
+    pub operator_applies: u64,
+    pub right_vectors: Option<Vec<TasMatrix>>,
+    pub history: Vec<f64>,
+}
+
+/// Compute the top `cfg.nev` singular values of the operator `AᵀA`
+/// packaged in `op`.
+pub fn svd(op: &GramOperator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> SvdResult {
+    // AᵀA is PSD: largest-magnitude == largest-algebraic; use LA for
+    // cleaner selection.
+    let cfg = EigenConfig { which: Which::LargestAlgebraic, ..cfg.clone() };
+    let res: EigenResult = solve(op, ctx, &cfg);
+    SvdResult {
+        singular_values: res
+            .eigenvalues
+            .iter()
+            .map(|&l| l.max(0.0).sqrt())
+            .collect(),
+        converged: res.converged,
+        restarts: res.restarts,
+        operator_applies: res.operator_applies,
+        right_vectors: res.eigenvectors,
+        history: res.history,
+    }
+}
+
+/// Build the `A`/`Aᵀ` images for an edge list and return the Gram
+/// operator (both images in memory or both on SSDs).
+pub fn build_gram_operator(
+    coo: &CooMatrix,
+    tile_dim: usize,
+    fs: Option<&Arc<crate::safs::Safs>>,
+    opts: SpmmOpts,
+    threads: usize,
+) -> GramOperator {
+    let (a, at): (SparseMatrix, SparseMatrix) = match fs {
+        Some(fs) => (
+            build_matrix(coo, tile_dim, BuildTarget::Safs(fs, "svd-a")),
+            build_matrix(&coo.transpose(), tile_dim, BuildTarget::Safs(fs, "svd-at")),
+        ),
+        None => (
+            build_matrix(coo, tile_dim, BuildTarget::Mem),
+            build_matrix(&coo.transpose(), tile_dim, BuildTarget::Mem),
+        ),
+    };
+    GramOperator::new(a, at, opts, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::SmallMat;
+    use crate::eigen::dense_eig::sym_eig;
+    use crate::util::rng::Rng;
+
+    /// Dense reference singular values (via eig of AᵀA).
+    fn dense_svd(coo: &CooMatrix) -> Vec<f64> {
+        let n = coo.n_cols as usize;
+        let nr = coo.n_rows as usize;
+        let mut a = SmallMat::zeros(nr, n);
+        for (i, &(r, c)) in coo.entries.iter().enumerate() {
+            let v = coo.values.as_ref().map(|v| v[i] as f64).unwrap_or(1.0);
+            *a.at_mut(r as usize, c as usize) = v;
+        }
+        let mut ata = SmallMat::zeros(n, n);
+        SmallMat::gemm(1.0, &a, true, &a, false, 0.0, &mut ata);
+        let (vals, _) = sym_eig(&ata);
+        let mut svs: Vec<f64> = vals.iter().map(|&l| l.max(0.0).sqrt()).collect();
+        svs.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        svs
+    }
+
+    #[test]
+    fn directed_graph_singular_values_match_dense() {
+        let mut rng = Rng::new(21);
+        let mut coo = CooMatrix::new(140, 140);
+        for _ in 0..700 {
+            let r = rng.gen_range(140) as u32;
+            let c = rng.gen_range(140) as u32;
+            if r != c {
+                coo.push(r, c);
+            }
+        }
+        coo.sort_dedup();
+        let expect = dense_svd(&coo);
+
+        let ctx = DenseCtx::mem_for_tests(64);
+        let op = build_gram_operator(&coo, 64, None, SpmmOpts::default(), 2);
+        let cfg = EigenConfig {
+            nev: 5,
+            block_size: 2,
+            num_blocks: 10,
+            tol: 1e-9,
+            max_restarts: 300,
+            which: Which::LargestAlgebraic,
+            seed: 31,
+            compute_eigenvectors: true,
+        };
+        let res = svd(&op, &ctx, &cfg);
+        assert!(res.converged, "{:?}", res.history);
+        for i in 0..5 {
+            assert!(
+                (res.singular_values[i] - expect[i]).abs() < 1e-5 * expect[0].max(1.0),
+                "sv {i}: {} vs {}",
+                res.singular_values[i],
+                expect[i]
+            );
+        }
+        // Right singular vectors: ‖A v‖ = σ.
+        let v = &res.right_vectors.as_ref().unwrap()[0];
+        let input = crate::dense::conv_layout_to_rowmajor(v, 64, true);
+        let mut out = crate::spmm::DenseBlock::new(140, v.n_cols, 64, true);
+        crate::spmm::spmm(&op.a, &input, &mut out, &SpmmOpts::default(), 1);
+        let av = out.to_vec();
+        for j in 0..v.n_cols {
+            let norm: f64 = (0..140)
+                .map(|i| av[i * v.n_cols + j] * av[i * v.n_cols + j])
+                .sum::<f64>()
+                .sqrt();
+            assert!(
+                (norm - res.singular_values[j]).abs() < 1e-5 * expect[0],
+                "‖Av‖ {} vs σ {}",
+                norm,
+                res.singular_values[j]
+            );
+        }
+    }
+
+    #[test]
+    fn em_svd_matches_im() {
+        let mut rng = Rng::new(22);
+        let mut coo = CooMatrix::new(200, 200);
+        for _ in 0..900 {
+            coo.push(rng.gen_range(200) as u32, rng.gen_range(200) as u32);
+        }
+        coo.sort_dedup();
+        let cfg = EigenConfig {
+            nev: 3,
+            block_size: 2,
+            num_blocks: 8,
+            tol: 1e-8,
+            max_restarts: 200,
+            which: Which::LargestAlgebraic,
+            seed: 33,
+            compute_eigenvectors: false,
+        };
+        let im = {
+            let ctx = DenseCtx::mem_for_tests(64);
+            let op = build_gram_operator(&coo, 64, None, SpmmOpts::default(), 2);
+            svd(&op, &ctx, &cfg)
+        };
+        let em = {
+            let ctx = DenseCtx::em_for_tests(64);
+            let op =
+                build_gram_operator(&coo, 64, Some(&ctx.fs), SpmmOpts::default(), 2);
+            svd(&op, &ctx, &cfg)
+        };
+        assert!(im.converged && em.converged);
+        for (a, b) in im.singular_values.iter().zip(&em.singular_values) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+}

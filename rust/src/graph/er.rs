@@ -1,0 +1,52 @@
+//! Erdős–Rényi G(n, m) generator — used by tests and as an unstructured
+//! control workload.
+
+use crate::sparse::CooMatrix;
+use crate::util::rng::Rng;
+
+/// Directed G(n, m): `m` distinct uniformly random edges, no self loops.
+pub fn gnm(n: u64, m: u64, rng: &mut Rng) -> CooMatrix {
+    assert!(m <= n * (n - 1));
+    let mut coo = CooMatrix::new(n, n);
+    coo.entries.reserve(m as usize);
+    while (coo.entries.len() as u64) < m {
+        let need = m as usize - coo.entries.len();
+        for _ in 0..need + need / 8 + 1 {
+            let r = rng.gen_range(n) as u32;
+            let c = rng.gen_range(n) as u32;
+            if r != c {
+                coo.push(r, c);
+            }
+        }
+        coo.sort_dedup();
+    }
+    coo.entries.truncate(m as usize);
+    coo
+}
+
+/// Undirected (symmetric) G(n, m).
+pub fn gnm_undirected(n: u64, m: u64, rng: &mut Rng) -> CooMatrix {
+    let mut coo = gnm(n, m, rng);
+    coo.symmetrize();
+    coo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_edge_count() {
+        let mut rng = Rng::new(10);
+        let g = gnm(100, 500, &mut rng);
+        assert_eq!(g.nnz(), 500);
+        assert!(g.entries.iter().all(|&(r, c)| r != c));
+    }
+
+    #[test]
+    fn undirected_is_symmetric() {
+        let mut rng = Rng::new(11);
+        let g = gnm_undirected(50, 100, &mut rng);
+        assert!(g.is_symmetric());
+    }
+}

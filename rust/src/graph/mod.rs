@@ -1,0 +1,14 @@
+//! Synthetic graph generators standing in for the paper's Table-2
+//! datasets (see DESIGN.md §1 for the substitution argument).
+
+pub mod datasets;
+pub mod er;
+pub mod knn;
+pub mod rmat;
+pub mod webgraph;
+
+pub use datasets::Dataset;
+pub use er::{gnm, gnm_undirected};
+pub use knn::knn;
+pub use rmat::{out_degrees, rmat, RmatParams};
+pub use webgraph::{locality_fraction, webgraph, WebGraphParams};

@@ -1,0 +1,122 @@
+//! R-MAT recursive-matrix graph generator (Chakrabarti et al.).
+//!
+//! Produces the power-law degree distributions of the paper's social
+//! graphs (Twitter, Friendster).  The standard Graph500 parameters
+//! (a,b,c,d) = (0.57, 0.19, 0.19, 0.05) are the default.
+
+use crate::sparse::CooMatrix;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        RmatParams { a: 0.57, b: 0.19, c: 0.19 }
+    }
+}
+
+/// Generate a directed R-MAT graph with `n` vertices (rounded up to a
+/// power of two internally, then clipped) and ~`m` edges (duplicates are
+/// removed, so the final count is slightly lower).
+pub fn rmat(n: u64, m: u64, params: RmatParams, rng: &mut Rng) -> CooMatrix {
+    assert!(n >= 2);
+    let levels = 64 - (n - 1).leading_zeros();
+    let mut coo = CooMatrix::new(n, n);
+    coo.entries.reserve(m as usize);
+    // Slightly perturb quadrant probabilities per level ("smoothing"), as
+    // Graph500 does, to avoid exact self-similarity artifacts.  Duplicate
+    // edges are frequent in R-MAT; dedup periodically until the *distinct*
+    // edge count reaches the target.
+    let mut next_dedup = m as usize;
+    loop {
+        if coo.entries.len() >= next_dedup {
+            coo.sort_dedup();
+            if coo.entries.len() as u64 >= m {
+                break;
+            }
+            let missing = m as usize - coo.entries.len();
+            next_dedup = coo.entries.len() + missing + missing / 4 + 16;
+        }
+        let (mut r, mut c) = (0u64, 0u64);
+        for _ in 0..levels {
+            r <<= 1;
+            c <<= 1;
+            let u = rng.gen_f64();
+            let noise = 0.95 + 0.1 * rng.gen_f64();
+            let a = params.a * noise;
+            let b = params.b * noise;
+            let cq = params.c * noise;
+            if u < a {
+                // top-left
+            } else if u < a + b {
+                c |= 1;
+            } else if u < a + b + cq {
+                r |= 1;
+            } else {
+                r |= 1;
+                c |= 1;
+            }
+        }
+        if r < n && c < n && r != c {
+            coo.push(r as u32, c as u32);
+        }
+    }
+    coo
+}
+
+/// Degree statistics helper (used by tests and Table 2 reporting).
+pub fn out_degrees(coo: &CooMatrix) -> Vec<u32> {
+    let mut deg = vec![0u32; coo.n_rows as usize];
+    for &(r, _) in &coo.entries {
+        deg[r as usize] += 1;
+    }
+    deg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_scale() {
+        let mut rng = Rng::new(1);
+        let g = rmat(10_000, 80_000, RmatParams::default(), &mut rng);
+        assert_eq!(g.n_rows, 10_000);
+        assert!(g.nnz() >= 80_000);
+        assert!(g.nnz() < 90_000);
+        // sorted + deduped
+        assert!(g.entries.windows(2).all(|w| w[0] < w[1]));
+        // no self loops
+        assert!(g.entries.iter().all(|&(r, c)| r != c));
+    }
+
+    #[test]
+    fn degree_distribution_is_skewed() {
+        let mut rng = Rng::new(2);
+        let g = rmat(8_192, 80_000, RmatParams::default(), &mut rng);
+        let mut deg = out_degrees(&g);
+        deg.sort_unstable_by(|a, b| b.cmp(a));
+        let mean = g.nnz() as f64 / g.n_rows as f64;
+        // Power law: max degree far above the mean; many zero-degree
+        // vertices.
+        assert!(
+            (deg[0] as f64) > 10.0 * mean,
+            "max {} mean {mean}",
+            deg[0]
+        );
+        let zeros = deg.iter().filter(|&&d| d == 0).count();
+        assert!(zeros > g.n_rows as usize / 20, "zeros {zeros}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = rmat(1000, 5000, RmatParams::default(), &mut Rng::new(7));
+        let b = rmat(1000, 5000, RmatParams::default(), &mut Rng::new(7));
+        assert_eq!(a.entries, b.entries);
+    }
+}

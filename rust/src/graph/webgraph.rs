@@ -1,0 +1,123 @@
+//! Domain-clustered web-graph generator.
+//!
+//! Stands in for the paper's "Page" graph (Web Data Commons hyperlink
+//! graph, 3.4B vertices / 129B edges): a **directed** graph whose vertices
+//! are clustered by domain — most hyperlinks stay within a domain, which
+//! is what gives the paper "good CPU cache hit rates in sparse matrix
+//! dense matrix multiplication".  Cross-domain links target a power-law
+//! choice of hub domains.
+
+use crate::sparse::CooMatrix;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct WebGraphParams {
+    /// Mean pages per domain.
+    pub mean_domain: u64,
+    /// Probability an out-link stays inside its domain.
+    pub intra_prob: f64,
+    /// Mean out-degree.
+    pub mean_out_degree: f64,
+}
+
+impl Default for WebGraphParams {
+    fn default() -> Self {
+        WebGraphParams { mean_domain: 4096, intra_prob: 0.8, mean_out_degree: 38.0 }
+    }
+}
+
+/// Generate a directed, domain-clustered web-like graph with `n` vertices.
+pub fn webgraph(n: u64, params: WebGraphParams, rng: &mut Rng) -> CooMatrix {
+    assert!(n >= 2);
+    // Carve vertices into contiguous domains of geometric-ish sizes.
+    let mut domains: Vec<(u64, u64)> = Vec::new(); // (start, len)
+    let mut pos = 0u64;
+    while pos < n {
+        // Sizes spread around the mean (×0.25..×4, log-uniform-ish).
+        let factor = 2f64.powf(rng.gen_f64_range(-2.0, 2.0));
+        let len = ((params.mean_domain as f64 * factor) as u64).clamp(1, n - pos);
+        domains.push((pos, len));
+        pos += len;
+    }
+    // Power-law popularity over domains for cross-domain targets: pick a
+    // Zipf-ish domain via inverse-power sampling.
+    let ndom = domains.len();
+    let pick_domain = |rng: &mut Rng| -> usize {
+        let u = rng.gen_f64().max(1e-12);
+        let z = (u.powf(-0.6) - 1.0) as usize; // heavy tail
+        z.min(ndom - 1)
+    };
+
+    let m_target = (n as f64 * params.mean_out_degree) as usize;
+    let mut coo = CooMatrix::new(n, n);
+    coo.entries.reserve(m_target);
+    for (di, &(start, len)) in domains.iter().enumerate() {
+        for v in start..start + len {
+            // Out-degree varies per page, mildly skewed.
+            let d = (params.mean_out_degree * rng.gen_f64_range(0.2, 1.8)) as usize;
+            for _ in 0..d {
+                let target = if rng.gen_bool(params.intra_prob) {
+                    // In-domain link: local navigation.
+                    start + rng.gen_range(len)
+                } else {
+                    // Cross-domain link to a popular domain.
+                    let (ts, tl) = domains[(di + 1 + pick_domain(rng)) % ndom];
+                    ts + rng.gen_range(tl)
+                };
+                if target != v {
+                    coo.push(v as u32, target as u32);
+                }
+            }
+        }
+    }
+    coo.sort_dedup();
+    coo
+}
+
+/// Fraction of edges whose endpoints are within `radius` of each other —
+/// a locality measure used to check the clustering property.
+pub fn locality_fraction(coo: &CooMatrix, radius: u64) -> f64 {
+    if coo.entries.is_empty() {
+        return 0.0;
+    }
+    let close = coo
+        .entries
+        .iter()
+        .filter(|&&(r, c)| (r as i64 - c as i64).unsigned_abs() <= radius)
+        .count();
+    close as f64 / coo.entries.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn is_directed_and_clustered() {
+        let mut rng = Rng::new(8);
+        let p = WebGraphParams { mean_domain: 256, intra_prob: 0.85, mean_out_degree: 20.0 };
+        let g = webgraph(20_000, p, &mut rng);
+        assert!(!g.is_symmetric());
+        // Most edges should be "local" (within ~2 domain diameters).
+        let loc = locality_fraction(&g, 1024);
+        assert!(loc > 0.6, "locality {loc}");
+        // Compare against an unclustered control.
+        let ctrl = crate::graph::rmat::rmat(
+            20_000,
+            g.nnz() as u64,
+            crate::graph::rmat::RmatParams::default(),
+            &mut rng,
+        );
+        let ctrl_loc = locality_fraction(&ctrl, 1024);
+        assert!(loc > 2.0 * ctrl_loc, "web {loc} vs rmat {ctrl_loc}");
+    }
+
+    #[test]
+    fn mean_degree_near_target() {
+        let mut rng = Rng::new(9);
+        let p = WebGraphParams { mean_domain: 512, intra_prob: 0.8, mean_out_degree: 15.0 };
+        let g = webgraph(10_000, p, &mut rng);
+        let mean = g.nnz() as f64 / g.n_rows as f64;
+        assert!((10.0..20.0).contains(&mean), "mean {mean}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Evaluation harness: regenerates every table and figure of the paper
+//! (§4) against the scaled, simulated testbed (see scenarios.rs for the
+//! scaling model).
+
+pub mod figures;
+pub mod report;
+pub mod scenarios;
+
+pub use figures::{
+    fig10, fig11, fig12, fig6, fig7, fig8, fig9, run_eigensolver, table2, table3, EigenRun,
+};
+pub use report::Table;
+pub use scenarios::BenchCfg;

@@ -1,0 +1,165 @@
+//! Shared scenario builders for the evaluation harness.
+//!
+//! **Scaling model.**  The paper's testbed is 48 Xeon cores against a
+//! 24-SSD array (12 GB/s read / 10 GB/s write); the paper's SEM SpMM runs
+//! at ≈60% of IM when I/O-bound, i.e. their IM engine consumed ≈7.2 GB/s
+//! of image against 12 GB/s of array.  On this single-core box the IM
+//! engine processes its (scaled, partly cache-resident) image at
+//! ≈1.4 GB/s, so preserving the paper's compute:I/O *ratio* requires an
+//! array of 12 × (1.4/7.2) ≈ 2.4 GB/s — device bandwidth divided by a
+//! calibrated `dilation` (default 5; measured calibration recorded in
+//! EXPERIMENTS.md §Calibration).  Per-request latency does NOT dilate
+//! (requests shrink with the dataset, keeping latency's relative weight),
+//! while the modeled context-switch cost dilates with bandwidth so the
+//! Fig. 9 overhead ratios survive scaling.  Dataset sizes shrink by
+//! `scale` (default 1/4096), and the striping unit shrinks proportionally
+//! so small images still spread across all 24 devices.
+
+use crate::dense::{DenseCtx, DenseKernels, NativeKernels};
+use crate::graph::Dataset;
+use crate::metrics::MemTracker;
+use crate::safs::{Safs, SafsConfig, WaitMode};
+use crate::sparse::{build_matrix_opts, BuildTarget, CooMatrix, SparseMatrix};
+use std::sync::Arc;
+
+/// Bench configuration (env-overridable so `cargo bench` can be tuned).
+#[derive(Clone, Debug)]
+pub struct BenchCfg {
+    /// Dataset scale relative to Table 2 (FLASHEIGEN_SCALE).
+    pub scale: f64,
+    /// Worker threads (FLASHEIGEN_THREADS).
+    pub threads: usize,
+    /// Device time dilation (FLASHEIGEN_DILATION); 48 ≙ paper testbed.
+    pub dilation: f64,
+    /// Tile dimension for bench-scale matrices.
+    pub tile_dim: usize,
+    /// Row-interval size for dense matrices.  131072 rows ≈ 1 MiB per
+    /// column — scaled-down from the paper's "tens of MB" intervals so
+    /// EM dense reads are bandwidth- not latency-bound.  (Use 16384 for
+    /// XLA-artifact-matched runs.)
+    pub interval_rows: usize,
+    pub seed: u64,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        BenchCfg {
+            scale: 1.0 / 4096.0,
+            threads: 4,
+            dilation: 5.0,
+            tile_dim: 4096,
+            interval_rows: 131072,
+            seed: 0xBE9C,
+        }
+    }
+}
+
+impl BenchCfg {
+    pub fn from_env() -> BenchCfg {
+        let mut c = BenchCfg::default();
+        let getf = |k: &str| std::env::var(k).ok().and_then(|v| v.parse::<f64>().ok());
+        if let Some(v) = getf("FLASHEIGEN_SCALE") {
+            c.scale = v;
+        }
+        if let Some(v) = getf("FLASHEIGEN_THREADS") {
+            c.threads = v as usize;
+        }
+        if let Some(v) = getf("FLASHEIGEN_DILATION") {
+            c.dilation = v;
+        }
+        c
+    }
+
+    /// The paper-array SAFS config under this dilation.
+    pub fn safs_config(&self) -> SafsConfig {
+        SafsConfig {
+            num_ssds: 24,
+            read_bps: 500.0e6 / self.dilation,
+            write_bps: 420.0e6 / self.dilation,
+            latency: 100e-6,
+            // Stripe unit shrunk with dataset scale so small images still
+            // spread over the array; kernel max request matches.
+            stripe_block: 256 << 10,
+            max_io_size: 256 << 10,
+            io_threads: 1,
+            wait_mode: WaitMode::Polling,
+            diff_stripe_order: true,
+            use_buffer_pool: true,
+            throttle: true,
+            io_scale: 1.0,
+            ctx_switch_cost: 15e-6 * self.dilation,
+        }
+    }
+
+    pub fn timed_safs(&self) -> Arc<Safs> {
+        Safs::new(self.safs_config())
+    }
+
+    /// Generate a Table-2 dataset at bench scale.
+    pub fn gen(&self, ds: Dataset) -> CooMatrix {
+        ds.generate(self.scale, self.seed)
+    }
+
+    pub fn build_im(&self, coo: &CooMatrix) -> SparseMatrix {
+        build_matrix_opts(coo, self.tile_dim, BuildTarget::Mem, true)
+    }
+
+    pub fn build_sem(&self, coo: &CooMatrix, fs: &Arc<Safs>, name: &str) -> SparseMatrix {
+        build_matrix_opts(coo, self.tile_dim, BuildTarget::Safs(fs, name), true)
+    }
+
+    /// Dense context (FE-IM or FE-EM) over the given SAFS.  The §3.4.4
+    /// cache depth defaults to 1 (the paper's "most recent matrix") and
+    /// can be tuned with FLASHEIGEN_CACHE_SLOTS (see EXPERIMENTS.md §Perf).
+    pub fn dense_ctx(
+        &self,
+        fs: Arc<Safs>,
+        em: bool,
+        kernels: Arc<dyn DenseKernels>,
+    ) -> Arc<DenseCtx> {
+        let slots = std::env::var("FLASHEIGEN_CACHE_SLOTS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(1);
+        let group = std::env::var("FLASHEIGEN_GROUP_SIZE")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(8);
+        DenseCtx::with(fs, em, self.interval_rows, self.threads, group, slots, kernels)
+    }
+
+    pub fn dense_ctx_native(&self, fs: Arc<Safs>, em: bool) -> Arc<DenseCtx> {
+        self.dense_ctx(fs, em, Arc::new(NativeKernels))
+    }
+}
+
+/// The memory model reported in tables: peak tracked allocations.
+pub fn fmt_mem(mem: &MemTracker) -> String {
+    crate::util::humansize::fmt_bytes(mem.peak())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_free_defaults() {
+        let c = BenchCfg::default();
+        let sc = c.safs_config();
+        // 24 devices at 500/5 MB/s = 2.4 GB/s aggregate read.
+        assert!((sc.read_bps * 24.0 - 2.4e9).abs() / 2.4e9 < 0.01);
+        assert!((sc.latency - 100e-6).abs() < 1e-9); // NOT dilated
+    }
+
+    #[test]
+    fn builders_work_tiny() {
+        let mut c = BenchCfg::default();
+        c.scale = 1e-5;
+        let coo = c.gen(Dataset::Twitter);
+        let im = c.build_im(&coo);
+        assert_eq!(im.nnz, coo.nnz() as u64);
+        let fs = c.timed_safs();
+        let sem = c.build_sem(&coo, &fs, "t");
+        assert!(sem.is_external());
+    }
+}

@@ -1,0 +1,37 @@
+//! # FlashEigen-RS
+//!
+//! A reproduction of *“An SSD-based eigensolver for spectral analysis on
+//! billion-node graphs”* (Zheng et al., 2016) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The library computes a few eigenvalues/eigenvectors (or singular
+//! values) of very large sparse graphs with the **semi-external-memory**
+//! strategy of the paper: the sparse matrix and the whole Krylov vector
+//! subspace live on a (simulated) SSD array behind the SAFS user-space
+//! filesystem, while only the active dense block is held in RAM.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`safs`] — user-space filesystem over a simulated SSD array.
+//! * [`sparse`] — the tiled SCSR+COO on-SSD sparse matrix image.
+//! * [`graph`] — synthetic graph generators standing in for Table 2.
+//! * [`spmm`] — in-memory and semi-external sparse × dense multiply.
+//! * [`dense`] — tall-and-skinny dense matrices and the Anasazi Table-1
+//!   operation set, in memory and on SSDs.
+//! * [`runtime`] — PJRT bridge: loads the AOT-compiled JAX/Pallas HLO
+//!   artifacts and dispatches dense block compute to them.
+//! * [`eigen`] — Block Krylov–Schur eigensolver and SVD built on the
+//!   above.
+//! * [`harness`] — regenerates every figure and table of the paper's
+//!   evaluation.
+
+pub mod dense;
+pub mod eigen;
+pub mod graph;
+pub mod harness;
+pub mod metrics;
+pub mod runtime;
+pub mod safs;
+pub mod sparse;
+pub mod spmm;
+pub mod util;

@@ -1,0 +1,333 @@
+//! FlashEigen-RS command-line interface (the L3 leader entrypoint).
+//!
+//! ```text
+//! flasheigen eigen   --graph friendster --nev 8 [--sem] [--xla] ...
+//! flasheigen svd     --graph page --nev 8 [--sem] ...
+//! flasheigen spmm    --graph twitter --cols 4 [--sem]
+//! flasheigen figures --exp fig6|fig7|fig8|fig9|fig10|fig11|fig12|table2|table3|all
+//! flasheigen info
+//! ```
+
+use flasheigen::dense::NativeKernels;
+use flasheigen::eigen::{solve, EigenConfig, SpmmOperator, Which};
+use flasheigen::graph::Dataset;
+use flasheigen::harness::{self, BenchCfg};
+use flasheigen::runtime::{find_artifacts_dir, XlaKernels};
+use flasheigen::spmm::{spmm, DenseBlock, SpmmOpts};
+use flasheigen::util::cli::Args;
+use flasheigen::util::humansize::fmt_bytes;
+use flasheigen::util::timer::{fmt_secs, time_it};
+use std::sync::Arc;
+
+const USAGE: &str = "\
+flasheigen — SSD-based eigensolver for spectral analysis on billion-node graphs
+
+USAGE:
+  flasheigen <command> [options]
+
+COMMANDS:
+  eigen     compute eigenvalues of a (symmetrized) graph
+  svd       compute singular values of a directed graph (AᵀA operator)
+  spmm      run one sparse × dense multiplication and report stats
+  figures   regenerate the paper's tables/figures (--exp <id>|all)
+  info      print build/runtime information
+
+COMMON OPTIONS:
+  --graph <twitter|friendster|knn|page>   dataset (default friendster)
+  --scale <f>        dataset scale vs Table 2 (default 1/4096)
+  --nev <k>          eigen/singular values to compute (default 8)
+  --block <b>        block size (default per §4.3)
+  --nblocks <NB>     subspace blocks (default per §4.3)
+  --tol <t>          residual tolerance (default 1e-6)
+  --threads <t>      worker threads (default 4)
+  --dilation <d>     device time dilation (default 48; see DESIGN.md)
+  --sem              semi-external mode (matrix + subspace on SSDs)
+  --xla              dispatch dense kernels to the AOT JAX/Pallas artifacts
+  --cols <b>         dense-matrix width for spmm (default 4)
+  --exp <id>         figure/table id for `figures`
+  --seed <s>         RNG seed
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = match Args::parse(
+        &argv[1..],
+        &[
+            "graph", "scale", "nev", "block", "nblocks", "tol", "threads", "dilation",
+            "cols", "exp", "seed",
+        ],
+    ) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match cmd.as_str() {
+        "eigen" => cmd_eigen(&args, false),
+        "svd" => cmd_eigen(&args, true),
+        "spmm" => cmd_spmm(&args),
+        "figures" => cmd_figures(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn bench_cfg(args: &Args) -> Result<BenchCfg, String> {
+    let mut cfg = BenchCfg::from_env();
+    cfg.scale = args.get_f64("scale", cfg.scale)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
+    cfg.dilation = args.get_f64("dilation", cfg.dilation)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    Ok(cfg)
+}
+
+fn dataset(args: &Args) -> Result<Dataset, String> {
+    let name = args.get_or("graph", "friendster");
+    Dataset::from_name(name).ok_or_else(|| format!("unknown graph '{name}'"))
+}
+
+fn cmd_eigen(args: &Args, as_svd: bool) -> i32 {
+    let run = || -> Result<(), String> {
+        let cfg = bench_cfg(args)?;
+        let ds = dataset(args)?;
+        let nev = args.get_usize("nev", 8)?;
+        let sem = args.flag("sem");
+        let use_xla = args.flag("xla");
+
+        eprintln!(
+            "generating {} at scale {:.2e} (seed {})...",
+            ds.name(),
+            cfg.scale,
+            cfg.seed
+        );
+        let (coo, gen_secs) = time_it(|| cfg.gen(ds));
+        eprintln!(
+            "  |V|={} |E|={} ({})",
+            coo.n_rows,
+            coo.nnz(),
+            fmt_secs(gen_secs)
+        );
+
+        let defaults = EigenConfig::paper_defaults(nev);
+        let ecfg = EigenConfig {
+            nev,
+            block_size: args.get_usize("block", defaults.block_size)?,
+            num_blocks: args.get_usize("nblocks", defaults.num_blocks)?,
+            tol: args.get_f64("tol", 1e-6)?,
+            max_restarts: 500,
+            which: if as_svd { Which::LargestAlgebraic } else { Which::LargestMagnitude },
+            seed: cfg.seed,
+            compute_eigenvectors: false,
+        };
+        let fs = cfg.timed_safs();
+        let kernels: Arc<dyn flasheigen::dense::DenseKernels> = if use_xla {
+            let dir = find_artifacts_dir().ok_or("artifacts/ not found (run `make artifacts`)")?;
+            Arc::new(XlaKernels::load(&dir)?)
+        } else {
+            Arc::new(NativeKernels)
+        };
+        let ctx = cfg.dense_ctx(fs.clone(), sem, kernels);
+        let mode = if sem { "FE-SEM" } else { "FE-IM" };
+        eprintln!(
+            "solving: {} nev={nev} b={} NB={} tol={:.0e} dense-kernels={}",
+            mode, ecfg.block_size, ecfg.num_blocks, ecfg.tol, ctx.kernels.name()
+        );
+
+        let before = fs.stats();
+        if as_svd {
+            let op = flasheigen::eigen::build_gram_operator(
+                &coo,
+                cfg.tile_dim,
+                sem.then_some(&fs),
+                SpmmOpts::default(),
+                cfg.threads,
+            );
+            let (res, secs) = time_it(|| flasheigen::eigen::svd(&op, &ctx, &ecfg));
+            println!("singular values: {:?}", res.singular_values);
+            println!(
+                "converged={} restarts={} operator applies={} runtime={}",
+                res.converged,
+                res.restarts,
+                res.operator_applies,
+                fmt_secs(secs)
+            );
+        } else {
+            let mut coo = coo;
+            if ds.directed() {
+                eprintln!("  (directed graph symmetrized for eigendecomposition; use `svd` for singular values)");
+                coo.symmetrize();
+            }
+            let matrix = if sem {
+                cfg.build_sem(&coo, &fs, "eigen-a")
+            } else {
+                cfg.build_im(&coo)
+            };
+            let op = SpmmOperator::new(matrix, SpmmOpts::default(), cfg.threads);
+            let (res, secs) = time_it(|| solve(&op, &ctx, &ecfg));
+            println!("eigenvalues: {:?}", res.eigenvalues);
+            println!("residuals:   {:?}", res.residuals);
+            println!(
+                "converged={} restarts={} operator applies={} runtime={}",
+                res.converged,
+                res.restarts,
+                res.operator_applies,
+                fmt_secs(secs)
+            );
+            println!("spmm/conv breakdown:\n{}", op.timers.report());
+        }
+        let delta = fs.stats().delta_since(&before);
+        println!(
+            "peak tracked memory: {} | SSD read {} write {}",
+            fmt_bytes(ctx.mem.peak()),
+            fmt_bytes(delta.bytes_read),
+            fmt_bytes(delta.bytes_written)
+        );
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_spmm(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let cfg = bench_cfg(args)?;
+        let ds = dataset(args)?;
+        let b = args.get_usize("cols", 4)?;
+        let sem = args.flag("sem");
+        let coo = cfg.gen(ds);
+        let fs = cfg.timed_safs();
+        let matrix = if sem {
+            cfg.build_sem(&coo, &fs, "spmm-a")
+        } else {
+            cfg.build_im(&coo)
+        };
+        let n = coo.n_rows as usize;
+        let input =
+            DenseBlock::from_fn(n, b, cfg.tile_dim, true, |r, c| ((r + c) % 13) as f64 - 6.0);
+        let mut output = DenseBlock::new(n, b, cfg.tile_dim, true);
+        let before = fs.stats();
+        let (stats, secs) =
+            time_it(|| spmm(&matrix, &input, &mut output, &SpmmOpts::default(), cfg.threads));
+        let delta = fs.stats().delta_since(&before);
+        println!(
+            "{} spmm: |V|={} |E|={} b={b} image={} runtime={} ({}/s) partitions={} stolen={} read={}",
+            if sem { "SEM" } else { "IM" },
+            coo.n_rows,
+            coo.nnz(),
+            fmt_bytes(matrix.storage_bytes()),
+            fmt_secs(secs),
+            fmt_bytes((matrix.storage_bytes() as f64 / secs) as u64),
+            stats.partitions,
+            stats.stolen,
+            fmt_bytes(delta.bytes_read),
+        );
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_figures(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let cfg = bench_cfg(args)?;
+        let exp = args.get_or("exp", "all");
+        let dense_n = ((60_000_000.0 * cfg.scale * 16.0) as usize).max(4096);
+        let all = exp == "all";
+        let mut ran = false;
+        if all || exp == "table2" {
+            harness::table2(&cfg).print();
+            ran = true;
+        }
+        if all || exp == "fig6" {
+            harness::fig6(&cfg, &[Dataset::Friendster, Dataset::Twitter], &[1, 4, 16]).print();
+            ran = true;
+        }
+        if all || exp == "fig7" {
+            harness::fig7(&cfg, &[1, 2, 4, 8, 16]).print();
+            ran = true;
+        }
+        if all || exp == "fig8" {
+            harness::fig8(&cfg).print();
+            ran = true;
+        }
+        if all || exp == "fig9" {
+            harness::fig9(&cfg, dense_n, 64, 4).print();
+            ran = true;
+        }
+        if all || exp == "fig10" {
+            harness::fig10(&cfg, dense_n, 4, &[4, 8, 16, 32, 64, 128, 256, 512]).print();
+            ran = true;
+        }
+        if all || exp == "fig11" {
+            harness::fig11(&cfg, dense_n, 4, &[4, 16, 64, 256]).print();
+            ran = true;
+        }
+        if all || exp == "fig12" {
+            harness::fig12(&cfg, &[8, 16], &[Dataset::Twitter, Dataset::Friendster, Dataset::Knn])
+                .print();
+            ran = true;
+        }
+        if all || exp == "table3" {
+            let mut c = cfg.clone();
+            c.scale /= 4.0;
+            harness::table3(&c, 8).print();
+            ran = true;
+        }
+        if !ran {
+            return Err(format!("unknown experiment '{exp}'"));
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("flasheigen {} — FlashEigen reproduction", env!("CARGO_PKG_VERSION"));
+    println!("artifacts dir: {:?}", find_artifacts_dir());
+    match find_artifacts_dir().map(|d| XlaKernels::load(&d)) {
+        Some(Ok(k)) => println!("xla runtime: ok ({} artifacts)", k.num_artifacts()),
+        Some(Err(e)) => println!("xla runtime: FAILED: {e}"),
+        None => println!("xla runtime: artifacts not found (run `make artifacts`)"),
+    }
+    let cfg = BenchCfg::from_env();
+    println!(
+        "bench defaults: scale={:.2e} threads={} dilation={} (array: {}/s read)",
+        cfg.scale,
+        cfg.threads,
+        cfg.dilation,
+        fmt_bytes(cfg.safs_config().aggregate_read_bps() as u64)
+    );
+    0
+}

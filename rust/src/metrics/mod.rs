@@ -1,0 +1,155 @@
+//! Lightweight runtime metrics: atomic counters and per-phase wall-clock
+//! accumulators.  The eigensolver uses these to report the paper's
+//! breakdown (SpMM time vs reorthogonalization time, bytes read/written,
+//! memory model) and the bench harness uses them for figure rows.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A monotonically increasing counter, safe to bump from worker threads.
+#[derive(Default, Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Accumulates wall-clock seconds per named phase.
+#[derive(Default)]
+pub struct PhaseTimers {
+    phases: Mutex<BTreeMap<String, f64>>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and accumulate it under `phase`.
+    pub fn scope<T>(&self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let r = f();
+        self.add(phase, t.elapsed().as_secs_f64());
+        r
+    }
+
+    pub fn add(&self, phase: &str, secs: f64) {
+        let mut m = self.phases.lock().unwrap();
+        *m.entry(phase.to_string()).or_insert(0.0) += secs;
+    }
+
+    pub fn get(&self, phase: &str) -> f64 {
+        self.phases.lock().unwrap().get(phase).copied().unwrap_or(0.0)
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, f64> {
+        self.phases.lock().unwrap().clone()
+    }
+
+    pub fn reset(&self) {
+        self.phases.lock().unwrap().clear();
+    }
+
+    /// Render a sorted "phase: seconds (pct)" report.
+    pub fn report(&self) -> String {
+        let snap = self.snapshot();
+        let total: f64 = snap.values().sum();
+        let mut rows: Vec<(&String, &f64)> = snap.iter().collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(a.1).unwrap());
+        let mut out = String::new();
+        for (name, secs) in rows {
+            let pct = if total > 0.0 { 100.0 * secs / total } else { 0.0 };
+            out.push_str(&format!("  {name:<28} {secs:>10.3}s  {pct:>5.1}%\n"));
+        }
+        out
+    }
+}
+
+/// Tracker for the peak "would-be" resident memory of the eigensolver's
+/// explicit allocations (dense matrices, buffers).  The paper reports
+/// "120GB memory" for the page graph; we track our modeled footprint the
+/// same way: every large allocation registers/unregisters its size.
+#[derive(Default, Debug)]
+pub struct MemTracker {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl MemTracker {
+    pub fn alloc(&self, bytes: u64) {
+        let cur = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(cur, Ordering::Relaxed);
+    }
+    pub fn free(&self, bytes: u64) {
+        self.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
+    pub fn current(&self) -> u64 {
+        self.current.load(Ordering::Relaxed)
+    }
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+    pub fn reset(&self) {
+        self.current.store(0, Ordering::Relaxed);
+        self.peak.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates_across_threads() {
+        let c = Counter::default();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+        c.reset();
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let t = PhaseTimers::new();
+        t.scope("spmm", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        t.scope("spmm", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        t.add("ortho", 1.5);
+        assert!(t.get("spmm") >= 0.004);
+        assert_eq!(t.get("ortho"), 1.5);
+        let rep = t.report();
+        assert!(rep.contains("ortho"));
+        assert!(rep.contains("spmm"));
+    }
+
+    #[test]
+    fn mem_tracker_peak() {
+        let m = MemTracker::default();
+        m.alloc(100);
+        m.alloc(50);
+        m.free(100);
+        m.alloc(10);
+        assert_eq!(m.current(), 60);
+        assert_eq!(m.peak(), 150);
+    }
+}

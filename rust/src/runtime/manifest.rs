@@ -1,0 +1,94 @@
+//! Parsing of `artifacts/manifest.json` written by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled shape variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub op: String,
+    pub rows: usize,
+    pub m: usize,
+    pub b: usize,
+    pub path: PathBuf,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dtype: String,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("float64")
+            .to_string();
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or("manifest: missing artifacts")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            artifacts.push(ArtifactMeta {
+                op: a
+                    .get("op")
+                    .and_then(Json::as_str)
+                    .ok_or("artifact: missing op")?
+                    .to_string(),
+                rows: a.get("rows").and_then(Json::as_usize).ok_or("missing rows")?,
+                m: a.get("m").and_then(Json::as_usize).ok_or("missing m")?,
+                b: a.get("b").and_then(Json::as_usize).ok_or("missing b")?,
+                path: dir.join(a.get("path").and_then(Json::as_str).ok_or("missing path")?),
+            });
+        }
+        Ok(Manifest { dtype, artifacts })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("read manifest: {e}"))?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn find(&self, op: &str, rows: usize, m: usize, b: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.op == op && a.rows == rows && a.m == m && a.b == b)
+    }
+}
+
+/// Default artifacts directory: `$FLASHEIGEN_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("FLASHEIGEN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest() {
+        let text = r#"{"version":1,"dtype":"float64","artifacts":[
+            {"op":"tsgemm","rows":16384,"m":2,"b":4,"path":"tsgemm_r16384_m2_b4.hlo.txt"}
+        ]}"#;
+        let m = Manifest::parse(text, Path::new("/x")).unwrap();
+        assert_eq!(m.dtype, "float64");
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("tsgemm", 16384, 2, 4).unwrap();
+        assert_eq!(a.path, PathBuf::from("/x/tsgemm_r16384_m2_b4.hlo.txt"));
+        assert!(m.find("tsgemm", 16384, 2, 5).is_none());
+        assert!(m.find("gram", 16384, 2, 4).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"artifacts":[{"op":"x"}]}"#, Path::new(".")).is_err());
+    }
+}

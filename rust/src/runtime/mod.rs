@@ -1,0 +1,9 @@
+//! PJRT runtime bridge: manifest parsing, lazy compilation of the
+//! AOT-lowered JAX/Pallas HLO artifacts, and the XLA-backed
+//! [`crate::dense::DenseKernels`] implementation used on the hot path.
+
+pub mod manifest;
+pub mod xla;
+
+pub use manifest::{ArtifactMeta, Manifest};
+pub use xla::{find_artifacts_dir, XlaKernels};

@@ -1,0 +1,197 @@
+//! PJRT runtime: loads the HLO-text artifacts and executes them on the
+//! CPU PJRT client from the L3 hot path.
+//!
+//! Executables are compiled lazily per shape variant and cached.  The
+//! `xla` crate's handle types wrap raw C pointers and are `!Send`/`!Sync`;
+//! the PJRT CPU client itself is thread-safe, but we take the
+//! conservative route: all client/executable access is serialized behind
+//! one mutex ([`SharedRt`]), which costs nothing on this single-core
+//! testbed and keeps the unsafe surface to one documented impl.
+
+use super::manifest::{ArtifactMeta, Manifest};
+use crate::dense::kernels::{DenseKernels, NativeKernels};
+use crate::dense::SmallMat;
+use crate::metrics::Counter;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+struct RtInner {
+    client: xla::PjRtClient,
+    cache: HashMap<(String, usize, usize, usize), xla::PjRtLoadedExecutable>,
+}
+
+/// The serialized PJRT state.
+///
+/// SAFETY: `PjRtClient`/`PjRtLoadedExecutable` wrap PJRT C-API handles.
+/// The PJRT CPU plugin is documented thread-safe for compilation and
+/// execution; every access here additionally goes through the outer
+/// `Mutex`, so only one thread touches the handles at a time.
+struct SharedRt(Mutex<RtInner>);
+unsafe impl Send for SharedRt {}
+unsafe impl Sync for SharedRt {}
+
+/// Dispatch + execution statistics (for the integration-cost ablation).
+#[derive(Default)]
+pub struct DispatchStats {
+    pub xla_calls: Counter,
+    pub native_calls: Counter,
+}
+
+/// The XLA-backed implementation of [`DenseKernels`].
+///
+/// Calls with an exact AOT shape variant run through PJRT; anything else
+/// (odd tail intervals, unusual widths) falls back to the native Rust
+/// kernels, so correctness never depends on the artifact set.
+pub struct XlaKernels {
+    rt: SharedRt,
+    manifest: Manifest,
+    fallback: NativeKernels,
+    pub stats: DispatchStats,
+}
+
+impl XlaKernels {
+    /// Load the manifest from `dir` and connect the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<XlaKernels, String> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu: {e:?}"))?;
+        Ok(XlaKernels {
+            rt: SharedRt(Mutex::new(RtInner { client, cache: HashMap::new() })),
+            manifest,
+            fallback: NativeKernels,
+            stats: DispatchStats::default(),
+        })
+    }
+
+    pub fn load_default() -> Result<XlaKernels, String> {
+        Self::load(&super::manifest::default_dir())
+    }
+
+    pub fn num_artifacts(&self) -> usize {
+        self.manifest.artifacts.len()
+    }
+
+    fn find(&self, op: &str, rows: usize, m: usize, b: usize) -> Option<ArtifactMeta> {
+        self.manifest.find(op, rows, m, b).cloned()
+    }
+
+    /// Run one artifact with the given literal inputs; returns the f64
+    /// payload of the 1-tuple result.
+    fn run(
+        &self,
+        meta: &ArtifactMeta,
+        key: (String, usize, usize, usize),
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<f64>, String> {
+        let mut rt = self.rt.0.lock().unwrap();
+        if !rt.cache.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(&meta.path)
+                .map_err(|e| format!("load {}: {e:?}", meta.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = rt
+                .client
+                .compile(&comp)
+                .map_err(|e| format!("compile {}: {e:?}", meta.path.display()))?;
+            rt.cache.insert(key.clone(), exe);
+        }
+        let exe = rt.cache.get(&key).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| format!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("to_literal: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| format!("tuple: {e:?}"))?;
+        out.to_vec::<f64>().map_err(|e| format!("to_vec: {e:?}"))
+    }
+}
+
+impl DenseKernels for XlaKernels {
+    fn tsgemm(&self, x: &[f64], rows: usize, m: usize, bmat: &SmallMat, out: &mut [f64]) {
+        let b = bmat.cols;
+        if let Some(meta) = self.find("tsgemm", rows, m, b) {
+            // Column-major Rust buffers are bit-identical to the
+            // transposed row-major jax arrays (see python/compile/model.py).
+            let make = || -> Result<Vec<f64>, String> {
+                let xt = lit2(x, m, rows)?;
+                let bt = lit2(&bmat.data, b, m)?;
+                let ot = lit2(out, b, rows)?;
+                self.run(&meta, ("tsgemm".into(), rows, m, b), &[xt, bt, ot])
+            };
+            match make() {
+                Ok(result) => {
+                    out.copy_from_slice(&result);
+                    self.stats.xla_calls.inc();
+                    return;
+                }
+                Err(e) => {
+                    // Fall back but surface the problem once.
+                    eprintln!("xla tsgemm failed ({e}); falling back to native");
+                }
+            }
+        }
+        self.stats.native_calls.inc();
+        self.fallback.tsgemm(x, rows, m, bmat, out);
+    }
+
+    fn gram(
+        &self,
+        alpha: f64,
+        x: &[f64],
+        y: &[f64],
+        rows: usize,
+        m: usize,
+        b: usize,
+        out: &mut SmallMat,
+    ) {
+        if let Some(meta) = self.find("gram", rows, m, b) {
+            let make = || -> Result<Vec<f64>, String> {
+                let xt = lit2(x, m, rows)?;
+                let yt = lit2(y, b, rows)?;
+                let gt = lit2(&out.data, b, m)?;
+                let al = xla::Literal::scalar(alpha);
+                self.run(&meta, ("gram".into(), rows, m, b), &[xt, yt, gt, al])
+            };
+            match make() {
+                Ok(result) => {
+                    out.data.copy_from_slice(&result);
+                    self.stats.xla_calls.inc();
+                    return;
+                }
+                Err(e) => eprintln!("xla gram failed ({e}); falling back to native"),
+            }
+        }
+        self.stats.native_calls.inc();
+        self.fallback.gram(alpha, x, y, rows, m, b, out);
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+fn lit2(data: &[f64], d0: usize, d1: usize) -> Result<xla::Literal, String> {
+    debug_assert_eq!(data.len(), d0 * d1);
+    xla::Literal::vec1(data)
+        .reshape(&[d0 as i64, d1 as i64])
+        .map_err(|e| format!("reshape: {e:?}"))
+}
+
+/// Locate the artifacts dir for tests/benches: walks up from CWD.
+pub fn find_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("FLASHEIGEN_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

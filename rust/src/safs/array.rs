@@ -1,0 +1,131 @@
+//! The SSD array: a set of simulated devices plus aggregate statistics.
+
+use super::config::SafsConfig;
+use super::device::SimSsd;
+use std::sync::Arc;
+
+/// Snapshot of aggregate I/O statistics across the array.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IoStats {
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub read_reqs: u64,
+    pub write_reqs: u64,
+    /// Per-device bytes (read, written) — used to check striping balance.
+    pub per_device: Vec<(u64, u64)>,
+}
+
+impl IoStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_read + self.bytes_written
+    }
+
+    /// Max/mean ratio of per-device traffic: 1.0 = perfectly balanced.
+    pub fn skew(&self) -> f64 {
+        if self.per_device.is_empty() {
+            return 1.0;
+        }
+        let totals: Vec<u64> = self.per_device.iter().map(|(r, w)| r + w).collect();
+        let max = *totals.iter().max().unwrap() as f64;
+        let mean = totals.iter().sum::<u64>() as f64 / totals.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Difference of two snapshots (for measuring one operation).
+    pub fn delta_since(&self, earlier: &IoStats) -> IoStats {
+        IoStats {
+            bytes_read: self.bytes_read - earlier.bytes_read,
+            bytes_written: self.bytes_written - earlier.bytes_written,
+            read_reqs: self.read_reqs - earlier.read_reqs,
+            write_reqs: self.write_reqs - earlier.write_reqs,
+            per_device: self
+                .per_device
+                .iter()
+                .zip(earlier.per_device.iter())
+                .map(|((r, w), (er, ew))| (r - er, w - ew))
+                .collect(),
+        }
+    }
+}
+
+pub struct SsdArray {
+    pub cfg: SafsConfig,
+    pub devices: Vec<Arc<SimSsd>>,
+}
+
+impl SsdArray {
+    pub fn new(cfg: SafsConfig) -> SsdArray {
+        let devices = (0..cfg.num_ssds).map(|i| Arc::new(SimSsd::new(i))).collect();
+        SsdArray { cfg, devices }
+    }
+
+    pub fn device(&self, i: usize) -> &Arc<SimSsd> {
+        &self.devices[i % self.devices.len()]
+    }
+
+    pub fn stats(&self) -> IoStats {
+        let per_device: Vec<(u64, u64)> = self
+            .devices
+            .iter()
+            .map(|d| (d.stats.bytes_read.get(), d.stats.bytes_written.get()))
+            .collect();
+        IoStats {
+            bytes_read: per_device.iter().map(|(r, _)| r).sum(),
+            bytes_written: per_device.iter().map(|(_, w)| w).sum(),
+            read_reqs: self.devices.iter().map(|d| d.stats.read_reqs.get()).sum(),
+            write_reqs: self.devices.iter().map(|d| d.stats.write_reqs.get()).sum(),
+            per_device,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_stats() {
+        let arr = SsdArray::new(SafsConfig::untimed());
+        arr.device(0).reserve(&arr.cfg, 100, false);
+        arr.device(1).reserve(&arr.cfg, 200, true);
+        let s = arr.stats();
+        assert_eq!(s.bytes_read, 100);
+        assert_eq!(s.bytes_written, 200);
+        assert_eq!(s.read_reqs, 1);
+        assert_eq!(s.write_reqs, 1);
+        assert_eq!(s.total_bytes(), 300);
+    }
+
+    #[test]
+    fn skew_detects_imbalance() {
+        let mut cfg = SafsConfig::untimed();
+        cfg.num_ssds = 4;
+        let arr = SsdArray::new(cfg);
+        for _ in 0..4 {
+            arr.device(0).reserve(&arr.cfg, 1000, false);
+        }
+        let skewed = arr.stats().skew();
+        assert!(skewed > 3.9, "skew={skewed}");
+        for d in 1..4 {
+            for _ in 0..4 {
+                arr.device(d).reserve(&arr.cfg, 1000, false);
+            }
+        }
+        let balanced = arr.stats().skew();
+        assert!((balanced - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delta() {
+        let arr = SsdArray::new(SafsConfig::untimed());
+        arr.device(0).reserve(&arr.cfg, 100, false);
+        let s1 = arr.stats();
+        arr.device(0).reserve(&arr.cfg, 50, false);
+        let d = arr.stats().delta_since(&s1);
+        assert_eq!(d.bytes_read, 50);
+    }
+}

@@ -1,0 +1,123 @@
+//! SAFS configuration.
+//!
+//! The defaults model the paper's testbed: 24 OCZ Intrepid 3000 SSDs
+//! (~500 MB/s read, ~420 MB/s write each; 12 GB/s aggregate read) behind a
+//! user-space filesystem that stripes each file across all devices with a
+//! per-file random striping order (§3.2).  `io_scale` shrinks simulated
+//! transfer times so scaled-down experiments finish quickly while keeping
+//! the RAM:SSD bandwidth *ratio* (the quantity the paper's results depend
+//! on) configurable and documented.
+
+/// Completion-wait strategy for asynchronous I/O (§3.2: worker threads
+/// poll for completions instead of sleeping to avoid context switches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WaitMode {
+    /// Park on a condvar; each wakeup models/costs a thread context switch.
+    Blocking,
+    /// Spin (with `yield_now`) until the simulated completion deadline.
+    Polling,
+}
+
+/// Full SAFS + simulated-SSD-array configuration.
+#[derive(Clone, Debug)]
+pub struct SafsConfig {
+    /// Number of simulated SSD devices in the array.
+    pub num_ssds: usize,
+    /// Per-device sequential read bandwidth, bytes/sec.
+    pub read_bps: f64,
+    /// Per-device sequential write bandwidth, bytes/sec.
+    pub write_bps: f64,
+    /// Fixed per-request service latency, seconds.
+    pub latency: f64,
+    /// Stripe-block size: unit of placement across devices.
+    pub stripe_block: usize,
+    /// Maximum size of a single device I/O; larger requests are split
+    /// (the paper's "max block size in the kernel", Fig. 9: 8 MB).
+    pub max_io_size: usize,
+    /// Number of I/O submission threads (paper: one per NUMA node).
+    pub io_threads: usize,
+    /// Completion-wait strategy.
+    pub wait_mode: WaitMode,
+    /// Use a different random striping order per file (Fig. 9 "diff strip").
+    pub diff_stripe_order: bool,
+    /// Reuse pre-populated per-thread I/O buffers (Fig. 9 "buf pool").
+    pub use_buffer_pool: bool,
+    /// Simulate device timing at all.  `false` turns SAFS into a plain
+    /// in-memory store (used by unit tests that only check data paths).
+    pub throttle: bool,
+    /// Multiplier on device bandwidth (sim-speed knob; 1.0 = paper-like).
+    pub io_scale: f64,
+    /// Modeled cost of one thread context switch, seconds.  Charged per
+    /// blocking wakeup; the paper's Fig. 9 shows this overhead matters at
+    /// 10 GB/s.
+    pub ctx_switch_cost: f64,
+}
+
+impl Default for SafsConfig {
+    fn default() -> Self {
+        SafsConfig {
+            num_ssds: 24,
+            read_bps: 500.0e6,
+            write_bps: 420.0e6,
+            latency: 100e-6,
+            stripe_block: 8 << 20,
+            max_io_size: 8 << 20,
+            io_threads: 1,
+            wait_mode: WaitMode::Polling,
+            diff_stripe_order: true,
+            use_buffer_pool: true,
+            throttle: true,
+            io_scale: 1.0,
+            ctx_switch_cost: 15e-6,
+        }
+    }
+}
+
+impl SafsConfig {
+    /// A configuration with timing simulation disabled — pure in-memory
+    /// data paths, for correctness tests.
+    pub fn untimed() -> Self {
+        SafsConfig { throttle: false, ..Default::default() }
+    }
+
+    /// Paper-like array but with bandwidth scaled by `scale` (>1 = faster
+    /// simulated devices, i.e. shorter waits).
+    pub fn scaled(scale: f64) -> Self {
+        SafsConfig { io_scale: scale, ..Default::default() }
+    }
+
+    /// Effective per-device bandwidth for a request kind, bytes/sec.
+    pub fn effective_bps(&self, write: bool) -> f64 {
+        (if write { self.write_bps } else { self.read_bps }) * self.io_scale
+    }
+
+    /// Aggregate array read bandwidth, bytes/sec.
+    pub fn aggregate_read_bps(&self) -> f64 {
+        self.effective_bps(false) * self.num_ssds as f64
+    }
+
+    /// Aggregate array write bandwidth, bytes/sec.
+    pub fn aggregate_write_bps(&self) -> f64 {
+        self.effective_bps(true) * self.num_ssds as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_array() {
+        let c = SafsConfig::default();
+        assert_eq!(c.num_ssds, 24);
+        // 24 * 500MB/s = 12GB/s aggregate read as in §4.
+        assert!((c.aggregate_read_bps() - 12.0e9).abs() < 1e6);
+        assert!((c.aggregate_write_bps() - 10.08e9).abs() < 1e7);
+    }
+
+    #[test]
+    fn scaling() {
+        let c = SafsConfig::scaled(2.0);
+        assert!((c.effective_bps(false) - 1.0e9).abs() < 1.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! SAFS — the user-space filesystem substrate (paper §3.2), simulated.
+//!
+//! The paper runs on 24 physical SSDs behind the SAFS user-space
+//! filesystem.  This module reproduces SAFS's *design* — striping with
+//! per-file random orders, asynchronous I/O with polling completion,
+//! per-thread buffer pools, large kernel request sizes — against an array
+//! of **simulated** devices whose bandwidth/latency are configurable
+//! (DESIGN.md §1 explains why the simulation preserves the paper's
+//! behaviour).  All higher layers (sparse matrix image, external-memory
+//! dense matrices) do their I/O exclusively through [`Safs`].
+
+pub mod array;
+pub mod buffer_pool;
+pub mod config;
+pub mod device;
+pub mod file;
+pub mod io;
+pub mod stripe;
+
+pub use array::{IoStats, SsdArray};
+pub use buffer_pool::BufferPool;
+pub use config::{SafsConfig, WaitMode};
+pub use file::{FileHandle, SafsFile};
+pub use io::{IoEngine, IoTicket};
+pub use stripe::StripeMap;
+
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+/// The filesystem: file namespace + device array + I/O engine.
+pub struct Safs {
+    engine: IoEngine,
+    files: RwLock<HashMap<String, FileHandle>>,
+    rng: Mutex<Rng>,
+}
+
+impl Safs {
+    pub fn new(cfg: SafsConfig) -> Arc<Safs> {
+        let array = Arc::new(SsdArray::new(cfg));
+        Arc::new(Safs {
+            engine: IoEngine::new(array),
+            files: RwLock::new(HashMap::new()),
+            rng: Mutex::new(Rng::new(0x5AF5_u64)),
+        })
+    }
+
+    pub fn cfg(&self) -> &SafsConfig {
+        &self.engine.array().cfg
+    }
+
+    pub fn array(&self) -> &Arc<SsdArray> {
+        self.engine.array()
+    }
+
+    pub fn stats(&self) -> IoStats {
+        self.engine.array().stats()
+    }
+
+    /// Create (or truncate) a file.  Striping order is random per file
+    /// unless the config requests the identity-order baseline.
+    pub fn create(&self, name: &str) -> FileHandle {
+        let cfg = self.cfg();
+        let stripe = if cfg.diff_stripe_order {
+            StripeMap::random(cfg.num_ssds, cfg.stripe_block, &mut self.rng.lock().unwrap())
+        } else {
+            StripeMap::identity(cfg.num_ssds, cfg.stripe_block)
+        };
+        let file: FileHandle = Arc::new(SafsFile::new(name, stripe));
+        self.files.write().unwrap().insert(name.to_string(), file.clone());
+        file
+    }
+
+    pub fn open(&self, name: &str) -> Option<FileHandle> {
+        self.files.read().unwrap().get(name).cloned()
+    }
+
+    pub fn delete(&self, name: &str) -> bool {
+        self.files.write().unwrap().remove(name).is_some()
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.files.read().unwrap().contains_key(name)
+    }
+
+    pub fn list(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.files.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Total bytes of storage allocated across all files.
+    pub fn allocated(&self) -> u64 {
+        self.files.read().unwrap().values().map(|f| f.allocated()).sum()
+    }
+
+    // ---- async I/O (the hot path) ----
+
+    pub fn read_async(&self, file: FileHandle, offset: u64, buf: Vec<u8>) -> IoTicket {
+        self.engine.read(file, offset, buf)
+    }
+
+    pub fn write_async(&self, file: FileHandle, offset: u64, buf: Vec<u8>) -> IoTicket {
+        self.engine.write(file, offset, buf)
+    }
+
+    // ---- sync convenience wrappers ----
+
+    pub fn read_sync(&self, file: &FileHandle, offset: u64, len: usize) -> Vec<u8> {
+        self.read_async(file.clone(), offset, vec![0u8; len]).wait()
+    }
+
+    pub fn write_sync(&self, file: &FileHandle, offset: u64, data: Vec<u8>) -> Vec<u8> {
+        self.write_async(file.clone(), offset, data).wait()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn namespace_create_open_delete() {
+        let fs = Safs::new(SafsConfig::untimed());
+        assert!(fs.open("a").is_none());
+        let f = fs.create("a");
+        assert!(fs.exists("a"));
+        assert_eq!(fs.open("a").unwrap().name, f.name);
+        assert_eq!(fs.list(), vec!["a"]);
+        assert!(fs.delete("a"));
+        assert!(!fs.exists("a"));
+        assert!(!fs.delete("a"));
+    }
+
+    #[test]
+    fn create_truncates() {
+        let fs = Safs::new(SafsConfig::untimed());
+        let f = fs.create("a");
+        fs.write_sync(&f, 0, vec![1u8; 100]);
+        assert_eq!(fs.open("a").unwrap().size(), 100);
+        let f2 = fs.create("a");
+        assert_eq!(f2.size(), 0);
+    }
+
+    #[test]
+    fn sync_roundtrip() {
+        let fs = Safs::new(SafsConfig::untimed());
+        let f = fs.create("m");
+        let data: Vec<u8> = (0..10_000).map(|i| (i * 7 % 256) as u8).collect();
+        fs.write_sync(&f, 123, data.clone());
+        let out = fs.read_sync(&f, 123, data.len());
+        assert_eq!(out, data);
+        let s = fs.stats();
+        assert_eq!(s.bytes_written, 10_000);
+        assert_eq!(s.bytes_read, 10_000);
+    }
+
+    #[test]
+    fn distinct_files_get_distinct_orders() {
+        let fs = Safs::new(SafsConfig::untimed());
+        let a = fs.create("a");
+        let b = fs.create("b");
+        let same = (0..24).all(|i| a.stripe.device_for(i) == b.stripe.device_for(i));
+        assert!(!same, "two files should not share a striping order");
+    }
+
+    #[test]
+    fn identity_mode_shares_order() {
+        let mut cfg = SafsConfig::untimed();
+        cfg.diff_stripe_order = false;
+        let fs = Safs::new(cfg);
+        let a = fs.create("a");
+        let b = fs.create("b");
+        assert!((0..24).all(|i| a.stripe.device_for(i) == b.stripe.device_for(i)));
+    }
+}

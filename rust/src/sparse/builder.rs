@@ -1,0 +1,375 @@
+//! COO edge lists and conversion to the tiled SCSR+COO image.
+
+use super::matrix::{assemble_tile_row, SparseMatrix, Storage, TileRowMeta};
+use super::tile::{DEFAULT_TILE_DIM, MAX_TILE_DIM};
+use crate::safs::Safs;
+use std::sync::Arc;
+
+/// An edge list / COO sparse matrix.  The staging format produced by the
+/// graph generators and converted into the tile image.
+#[derive(Clone, Debug, Default)]
+pub struct CooMatrix {
+    pub n_rows: u64,
+    pub n_cols: u64,
+    pub entries: Vec<(u32, u32)>,
+    /// `None` = unweighted (all values 1.0).
+    pub values: Option<Vec<f32>>,
+}
+
+impl CooMatrix {
+    pub fn new(n_rows: u64, n_cols: u64) -> CooMatrix {
+        CooMatrix { n_rows, n_cols, entries: Vec::new(), values: None }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn push(&mut self, r: u32, c: u32) {
+        debug_assert!(self.values.is_none());
+        self.entries.push((r, c));
+    }
+
+    pub fn push_weighted(&mut self, r: u32, c: u32, w: f32) {
+        self.entries.push((r, c));
+        self.values.get_or_insert_with(Vec::new).push(w);
+    }
+
+    /// Sort by (row, col) and remove duplicate coordinates (keeping the
+    /// first value).  Generators may emit duplicates (R-MAT does).
+    pub fn sort_dedup(&mut self) {
+        match &mut self.values {
+            None => {
+                self.entries.sort_unstable();
+                self.entries.dedup();
+            }
+            Some(vals) => {
+                let mut idx: Vec<u32> = (0..self.entries.len() as u32).collect();
+                idx.sort_unstable_by_key(|&i| self.entries[i as usize]);
+                let mut entries = Vec::with_capacity(self.entries.len());
+                let mut values = Vec::with_capacity(vals.len());
+                for &i in &idx {
+                    let e = self.entries[i as usize];
+                    if entries.last() != Some(&e) {
+                        entries.push(e);
+                        values.push(vals[i as usize]);
+                    }
+                }
+                self.entries = entries;
+                *vals = values;
+            }
+        }
+    }
+
+    /// Transposed copy (for SVD: we need images of both A and Aᵀ).
+    pub fn transpose(&self) -> CooMatrix {
+        let mut t = CooMatrix {
+            n_rows: self.n_cols,
+            n_cols: self.n_rows,
+            entries: self.entries.iter().map(|&(r, c)| (c, r)).collect(),
+            values: self.values.clone(),
+        };
+        t.sort_dedup();
+        t
+    }
+
+    /// Make symmetric by adding the reverse of every edge (undirected
+    /// graphs: Friendster, the KNN graph).
+    ///
+    /// Weighted edges are canonicalized per undirected pair — when the
+    /// input contains both orientations (possibly with different
+    /// weights), the value of the lexicographically-first occurrence of
+    /// the canonical `(min,max)` pair wins for *both* directions, so the
+    /// result satisfies `A[r,c] == A[c,r]` exactly.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.n_rows, self.n_cols);
+        // Canonical undirected edges: (min, max, value, original index).
+        let mut canon: Vec<(u32, u32, u32)> = self
+            .entries
+            .iter()
+            .enumerate()
+            .map(|(i, &(r, c))| (r.min(c), r.max(c), i as u32))
+            .collect();
+        canon.sort_unstable();
+        let mut entries = Vec::with_capacity(canon.len() * 2);
+        let mut values = self.values.as_ref().map(|_| Vec::with_capacity(canon.len() * 2));
+        let mut last: Option<(u32, u32)> = None;
+        for &(a, b, i) in &canon {
+            if last == Some((a, b)) {
+                continue; // duplicate undirected edge: first value wins
+            }
+            last = Some((a, b));
+            let v = self.values.as_ref().map(|vs| vs[i as usize]);
+            entries.push((a, b));
+            if let (Some(values), Some(v)) = (&mut values, v) {
+                values.push(v);
+            }
+            if a != b {
+                entries.push((b, a));
+                if let (Some(values), Some(v)) = (&mut values, v) {
+                    values.push(v);
+                }
+            }
+        }
+        self.entries = entries;
+        self.values = values;
+        self.sort_dedup();
+    }
+
+    /// Is entry (r,c) present iff (c,r) is?  (test invariant)
+    pub fn is_symmetric(&self) -> bool {
+        let set: std::collections::HashSet<(u32, u32)> = self.entries.iter().copied().collect();
+        self.entries.iter().all(|&(r, c)| set.contains(&(c, r)))
+    }
+}
+
+/// Where to put the built image.
+pub enum BuildTarget<'a> {
+    Mem,
+    Safs(&'a Arc<Safs>, &'a str),
+}
+
+/// Convert a COO matrix to the tiled SCSR+COO image (§3.3.1).
+///
+/// `coo` does not need to be pre-sorted; a (tile-row, tile-col, row, col)
+/// sort happens internally.  Duplicate coordinates must already have been
+/// removed (`sort_dedup`).
+pub fn build_matrix(coo: &CooMatrix, tile_dim: usize, target: BuildTarget) -> SparseMatrix {
+    build_matrix_opts(coo, tile_dim, target, true)
+}
+
+/// [`build_matrix`] with the COO-hybrid tile encoding optionally disabled
+/// (the Fig. 6 "SCSR-only" baseline).
+pub fn build_matrix_opts(
+    coo: &CooMatrix,
+    tile_dim: usize,
+    target: BuildTarget,
+    coo_hybrid: bool,
+) -> SparseMatrix {
+    assert!(tile_dim > 0 && tile_dim <= MAX_TILE_DIM);
+    let td = tile_dim as u64;
+    let num_tile_rows = (coo.n_rows.max(1) as usize + tile_dim - 1) / tile_dim;
+
+    // Sort entry *indices* by (tile_row, tile_col, row, col) so values can
+    // be gathered without materialising a combined array.
+    let mut idx: Vec<u32> = (0..coo.entries.len() as u32).collect();
+    idx.sort_unstable_by_key(|&i| {
+        let (r, c) = coo.entries[i as usize];
+        (r as u64 / td, c as u64 / td, r, c)
+    });
+
+    let has_values = coo.values.is_some();
+    let mut image: Vec<u8> = Vec::new(); // used for Mem target
+    let mut index: Vec<TileRowMeta> = Vec::with_capacity(num_tile_rows);
+    let mut offset = 0u64;
+
+    let file = match &target {
+        BuildTarget::Safs(fs, name) => Some(fs.create(name)),
+        BuildTarget::Mem => None,
+    };
+
+    let mut pos = 0usize;
+    for tr in 0..num_tile_rows {
+        let mut tiles: Vec<(u32, Vec<u8>)> = Vec::new();
+        let mut row_nnz = 0u64;
+        // Consume all entries in this tile row.
+        while pos < idx.len() {
+            let (r, _) = coo.entries[idx[pos] as usize];
+            if r as u64 / td != tr as u64 {
+                break;
+            }
+            // Consume one tile.
+            let (_, c0) = coo.entries[idx[pos] as usize];
+            let tile_col = c0 as u64 / td;
+            let mut local: Vec<(u16, u16)> = Vec::new();
+            let mut local_vals: Vec<f32> = Vec::new();
+            while pos < idx.len() {
+                let i = idx[pos] as usize;
+                let (r, c) = coo.entries[i];
+                if r as u64 / td != tr as u64 || c as u64 / td != tile_col {
+                    break;
+                }
+                local.push(((r as u64 % td) as u16, (c as u64 % td) as u16));
+                if let Some(vals) = &coo.values {
+                    local_vals.push(vals[i]);
+                }
+                pos += 1;
+            }
+            row_nnz += local.len() as u64;
+            let payload = super::tile::encode_tile_opts(
+                &local,
+                has_values.then_some(&local_vals[..]),
+                tile_dim,
+                coo_hybrid,
+            );
+            tiles.push((tile_col as u32, payload));
+        }
+        let row_image = assemble_tile_row(&tiles);
+        let len = row_image.len() as u32;
+        match (&target, &file) {
+            (BuildTarget::Mem, _) => image.extend_from_slice(&row_image),
+            (BuildTarget::Safs(fs, _), Some(f)) => {
+                fs.write_async(f.clone(), offset, row_image).wait();
+            }
+            _ => unreachable!(),
+        }
+        index.push(TileRowMeta { offset, len, nnz: row_nnz });
+        offset += len as u64;
+    }
+
+    let storage = match target {
+        BuildTarget::Mem => Storage::Mem(Arc::new(image)),
+        BuildTarget::Safs(fs, _) => Storage::Safs { fs: fs.clone(), file: file.unwrap() },
+    };
+    SparseMatrix {
+        n_rows: coo.n_rows,
+        n_cols: coo.n_cols,
+        nnz: coo.entries.len() as u64,
+        tile_dim,
+        has_values,
+        index,
+        storage,
+    }
+}
+
+/// Convenience: build in memory with the default 16K tile.
+pub fn build_mem(coo: &CooMatrix) -> SparseMatrix {
+    build_matrix(coo, DEFAULT_TILE_DIM, BuildTarget::Mem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::safs::SafsConfig;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, n: u64, nnz: usize, weighted: bool) -> CooMatrix {
+        let mut coo = CooMatrix::new(n, n);
+        for _ in 0..nnz {
+            let r = rng.gen_range(n) as u32;
+            let c = rng.gen_range(n) as u32;
+            if weighted {
+                coo.push_weighted(r, c, (r % 17) as f32 + 0.25);
+            } else {
+                coo.push(r, c);
+            }
+        }
+        coo.sort_dedup();
+        coo
+    }
+
+    #[test]
+    fn roundtrip_mem_small_tiles() {
+        let mut rng = Rng::new(1);
+        let coo = random_coo(&mut rng, 100, 400, false);
+        let m = build_matrix(&coo, 16, BuildTarget::Mem);
+        assert_eq!(m.nnz, coo.nnz() as u64);
+        assert_eq!(m.num_tile_rows(), 7); // ceil(100/16)
+        let triples = m.to_triples();
+        let expect: Vec<(u64, u64, f32)> = coo
+            .entries
+            .iter()
+            .map(|&(r, c)| (r as u64, c as u64, 1.0))
+            .collect();
+        assert_eq!(triples, expect);
+    }
+
+    #[test]
+    fn roundtrip_weighted() {
+        let mut rng = Rng::new(2);
+        let coo = random_coo(&mut rng, 200, 1000, true);
+        let m = build_matrix(&coo, 64, BuildTarget::Mem);
+        let triples = m.to_triples();
+        let vals = coo.values.as_ref().unwrap();
+        for (i, &(r, c)) in coo.entries.iter().enumerate() {
+            assert_eq!(triples[i], (r as u64, c as u64, vals[i]));
+        }
+    }
+
+    #[test]
+    fn roundtrip_safs() {
+        let fs = Safs::new(SafsConfig::untimed());
+        let mut rng = Rng::new(3);
+        let coo = random_coo(&mut rng, 300, 2000, false);
+        let m = build_matrix(&coo, 32, BuildTarget::Safs(&fs, "spm"));
+        assert!(m.is_external());
+        assert_eq!(m.to_triples().len(), coo.nnz());
+        // The image actually went to the array.
+        assert!(fs.stats().bytes_written as usize >= m.storage_bytes() as usize);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(4);
+        let coo = random_coo(&mut rng, 50, 200, false);
+        let t = coo.transpose();
+        let tt = t.transpose();
+        assert_eq!(coo.entries, tt.entries);
+    }
+
+    #[test]
+    fn symmetrize_makes_symmetric() {
+        let mut rng = Rng::new(5);
+        let mut coo = random_coo(&mut rng, 80, 300, true);
+        assert!(!coo.is_symmetric());
+        coo.symmetrize();
+        assert!(coo.is_symmetric());
+        // Values must be symmetric too: A[r,c] == A[c,r].
+        let vals = coo.values.as_ref().unwrap();
+        let map: std::collections::HashMap<(u32, u32), f32> =
+            coo.entries.iter().copied().zip(vals.iter().copied()).collect();
+        for (&(r, c), &v) in coo.entries.iter().zip(vals.iter()) {
+            assert_eq!(map[&(c, r)], v, "asymmetric value at ({r},{c})");
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let coo = CooMatrix::new(10, 10);
+        let m = build_mem(&coo);
+        assert_eq!(m.nnz, 0);
+        assert!(m.to_triples().is_empty());
+    }
+
+    #[test]
+    fn storage_smaller_than_csr8() {
+        // The paper's motivation: SCSR+COO beats 8-byte-index CSR on very
+        // sparse graphs.  CSR-with-8-byte-indices ≈ 8*nnz + 8*n bytes.
+        let mut rng = Rng::new(6);
+        let n = 60_000u64;
+        let coo = random_coo(&mut rng, n, 200_000, false);
+        let m = build_matrix(&coo, DEFAULT_TILE_DIM, BuildTarget::Mem);
+        let csr8 = 8 * coo.nnz() as u64 + 8 * n;
+        assert!(
+            m.storage_bytes() < csr8 / 2,
+            "tile image {} vs csr8 {}",
+            m.storage_bytes(),
+            csr8
+        );
+    }
+
+    #[test]
+    fn prop_build_roundtrip() {
+        run_prop("build-roundtrip", 25, |g| {
+            let n = g.usize_in(1, 400) as u64;
+            let nnz = g.usize_in(0, 2000);
+            let tile = *g.choose(&[8usize, 16, 100, 1024]);
+            let weighted = g.bool();
+            let mut rng = Rng::new(g.u64());
+            let coo = random_coo(&mut rng, n, nnz, weighted);
+            let m = build_matrix(&coo, tile, BuildTarget::Mem);
+            let triples = m.to_triples();
+            if triples.len() != coo.nnz() {
+                return Err(format!("nnz {} vs {}", triples.len(), coo.nnz()));
+            }
+            for (i, &(r, c)) in coo.entries.iter().enumerate() {
+                let v = coo.values.as_ref().map(|v| v[i]).unwrap_or(1.0);
+                if triples[i] != (r as u64, c as u64, v) {
+                    return Err(format!("triple {i}: {:?}", triples[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+}

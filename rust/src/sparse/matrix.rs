@@ -1,0 +1,210 @@
+//! The on-SSD sparse-matrix image (§3.3.1, Figure 2).
+//!
+//! Tiles are organised in **tile rows**; each tile row is one contiguous
+//! byte range — the unit of I/O for semi-external-memory SpMM — and a
+//! small in-RAM **matrix index** records where each tile row lives so
+//! partitions can be fetched independently (and in parallel).
+//!
+//! Byte layout of one tile row (4-byte aligned):
+//!
+//! ```text
+//! u32 ntiles, u32 pad
+//! per tile: u32 tile_col, u32 payload_len, payload…(4-byte aligned)
+//! ```
+
+use super::tile::TileView;
+use crate::safs::{FileHandle, Safs};
+use std::sync::Arc;
+
+/// Index entry for one tile row: where it lives in the image.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TileRowMeta {
+    pub offset: u64,
+    pub len: u32,
+    pub nnz: u64,
+}
+
+/// Where the image bytes live.
+pub enum Storage {
+    /// Fully in memory (the FE-IM configurations).
+    Mem(Arc<Vec<u8>>),
+    /// On the SSD array behind SAFS (the FE-SEM configurations).
+    Safs { fs: Arc<Safs>, file: FileHandle },
+}
+
+/// A sparse matrix in the FlashEigen tile format.
+pub struct SparseMatrix {
+    pub n_rows: u64,
+    pub n_cols: u64,
+    pub nnz: u64,
+    pub tile_dim: usize,
+    pub has_values: bool,
+    /// One entry per tile row; kept in RAM during multiplication (§3.3.1:
+    /// "the matrix index requires a very small storage size").
+    pub index: Vec<TileRowMeta>,
+    pub storage: Storage,
+}
+
+impl SparseMatrix {
+    pub fn num_tile_rows(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Total bytes of the tile image.
+    pub fn storage_bytes(&self) -> u64 {
+        self.index.iter().map(|m| m.len as u64).sum()
+    }
+
+    pub fn is_external(&self) -> bool {
+        matches!(self.storage, Storage::Safs { .. })
+    }
+
+    /// Rows covered by tile row `i`: `[start, end)`.
+    pub fn tile_row_range(&self, i: usize) -> (u64, u64) {
+        let start = (i * self.tile_dim) as u64;
+        (start, (start + self.tile_dim as u64).min(self.n_rows))
+    }
+
+    /// Borrow the bytes of tile row `i` if the image is in memory.
+    pub fn tile_row_mem(&self, i: usize) -> Option<&[u8]> {
+        match &self.storage {
+            Storage::Mem(buf) => {
+                let m = self.index[i];
+                Some(&buf[m.offset as usize..m.offset as usize + m.len as usize])
+            }
+            Storage::Safs { .. } => None,
+        }
+    }
+
+    /// Synchronously read tile row `i` into `buf` (resized as needed).
+    /// Works for both storage kinds; the SEM engine uses async reads via
+    /// the SAFS handle instead.
+    pub fn read_tile_row(&self, i: usize, buf: &mut Vec<u8>) {
+        let m = self.index[i];
+        match &self.storage {
+            Storage::Mem(image) => {
+                buf.clear();
+                buf.extend_from_slice(
+                    &image[m.offset as usize..m.offset as usize + m.len as usize],
+                );
+            }
+            Storage::Safs { fs, file } => {
+                buf.resize(m.len as usize, 0);
+                let data = fs
+                    .read_async(file.clone(), m.offset, std::mem::take(buf))
+                    .wait();
+                *buf = data;
+            }
+        }
+    }
+
+    /// SAFS handle for SEM streaming (None when in memory).
+    pub fn safs_handle(&self) -> Option<(&Arc<Safs>, &FileHandle)> {
+        match &self.storage {
+            Storage::Safs { fs, file } => Some((fs, file)),
+            Storage::Mem(_) => None,
+        }
+    }
+
+    /// Sum of all values (debug/metrics; 1.0 per entry when unweighted).
+    pub fn value_sum(&self) -> f64 {
+        let mut total = 0.0f64;
+        let mut buf = Vec::new();
+        for i in 0..self.num_tile_rows() {
+            self.read_tile_row(i, &mut buf);
+            for (_, view) in TileRowView::new(&buf, self.has_values) {
+                view.for_each(|_, _, v| total += v as f64);
+            }
+        }
+        total
+    }
+
+    /// Collect all nonzeros as global (row, col, value) triples — test
+    /// helper, O(nnz) memory.
+    pub fn to_triples(&self) -> Vec<(u64, u64, f32)> {
+        let mut out = Vec::with_capacity(self.nnz as usize);
+        let mut buf = Vec::new();
+        for i in 0..self.num_tile_rows() {
+            let row_base = (i * self.tile_dim) as u64;
+            self.read_tile_row(i, &mut buf);
+            for (tile_col, view) in TileRowView::new(&buf, self.has_values) {
+                let col_base = tile_col as u64 * self.tile_dim as u64;
+                view.for_each(|r, c, v| out.push((row_base + r as u64, col_base + c as u64, v)));
+            }
+        }
+        out.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+        out
+    }
+}
+
+/// Iterator over the tiles of one tile-row byte image, yielding
+/// `(tile_col, TileView)`.
+pub struct TileRowView<'a> {
+    bytes: &'a [u8],
+    has_values: bool,
+    remaining: usize,
+    pos: usize,
+}
+
+impl<'a> TileRowView<'a> {
+    pub fn new(bytes: &'a [u8], has_values: bool) -> TileRowView<'a> {
+        let ntiles = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        TileRowView { bytes, has_values, remaining: ntiles, pos: 8 }
+    }
+}
+
+impl<'a> Iterator for TileRowView<'a> {
+    type Item = (u32, TileView<'a>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let tile_col =
+            u32::from_le_bytes(self.bytes[self.pos..self.pos + 4].try_into().unwrap());
+        let len =
+            u32::from_le_bytes(self.bytes[self.pos + 4..self.pos + 8].try_into().unwrap())
+                as usize;
+        let payload = &self.bytes[self.pos + 8..self.pos + 8 + len];
+        self.pos += 8 + len;
+        Some((tile_col, TileView::parse(payload, self.has_values)))
+    }
+}
+
+/// Assemble a tile-row byte image from encoded tiles.
+pub fn assemble_tile_row(tiles: &[(u32, Vec<u8>)]) -> Vec<u8> {
+    let total: usize = tiles.iter().map(|(_, p)| 8 + p.len()).sum();
+    let mut out = Vec::with_capacity(8 + total);
+    out.extend_from_slice(&(tiles.len() as u32).to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    for (col, payload) in tiles {
+        debug_assert_eq!(payload.len() % 4, 0);
+        out.extend_from_slice(&col.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(payload);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::tile::encode_tile;
+
+    #[test]
+    fn tile_row_view_iterates_tiles() {
+        let t0 = encode_tile(&[(0, 1), (0, 2)], None, 16);
+        let t1 = encode_tile(&[(3, 3)], None, 16);
+        let row = assemble_tile_row(&[(0, t0), (5, t1)]);
+        let tiles: Vec<(u32, usize)> =
+            TileRowView::new(&row, false).map(|(c, v)| (c, v.nnz())).collect();
+        assert_eq!(tiles, vec![(0, 2), (5, 1)]);
+    }
+
+    #[test]
+    fn empty_tile_row() {
+        let row = assemble_tile_row(&[]);
+        assert_eq!(TileRowView::new(&row, false).count(), 0);
+    }
+}

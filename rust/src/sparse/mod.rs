@@ -1,0 +1,12 @@
+//! Sparse-matrix formats: the FlashEigen tile image (SCSR+COO, §3.3.1)
+//! and the CSR baseline.
+
+pub mod builder;
+pub mod csr;
+pub mod matrix;
+pub mod tile;
+
+pub use builder::{build_matrix, build_matrix_opts, build_mem, BuildTarget, CooMatrix};
+pub use csr::CsrMatrix;
+pub use matrix::{SparseMatrix, Storage, TileRowMeta, TileRowView};
+pub use tile::{TileView, DEFAULT_TILE_DIM, MAX_TILE_DIM};

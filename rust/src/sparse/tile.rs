@@ -1,0 +1,359 @@
+//! The tile format (§3.3.1, Figures 2–3).
+//!
+//! Non-zero entries are stored in square tiles of at most 32K×32K
+//! (16K×16K by default) so the dense-matrix rows touched by one tile fit
+//! in CPU cache.  Inside a tile the paper combines two encodings:
+//!
+//! * **SCSR** (Super Compressed Row Storage) for rows with ≥2 entries: a
+//!   stream of `u16` words where a word with the MSB set starts a new row
+//!   (low 15 bits = row index within the tile) and words with the MSB
+//!   clear are column indices within the tile.
+//! * **COO** for single-entry rows (most rows of a very sparse power-law
+//!   tile): `(u16 row, u16 col)` pairs, stored behind the SCSR region,
+//!   avoiding the end-of-row conditional per nonzero.
+//!
+//! Optional `f32` values (weighted graphs) are stored together at the end
+//! of the tile, SCSR entries first then COO entries, in encoding order.
+//!
+//! Byte layout of one encoded tile (little-endian, 4-byte aligned):
+//!
+//! ```text
+//! u32 scsr_words   # of u16 words in the SCSR stream
+//! u32 coo_count    # of COO (row,col) pairs
+//! u16 × scsr_words SCSR stream (padded with one zero word to 4B align)
+//! (u16,u16) × coo_count
+//! f32 × nnz        only if the matrix stores values
+//! ```
+
+/// Maximum tile dimension representable: the MSB of a `u16` flags a row
+/// header, leaving 15 bits → 32768.
+pub const MAX_TILE_DIM: usize = 1 << 15;
+
+/// Default tile dimension (§3.3.1: 16K balances storage size against
+/// adaptability to different dense-matrix widths).
+pub const DEFAULT_TILE_DIM: usize = 16 * 1024;
+
+const ROW_FLAG: u16 = 0x8000;
+
+/// Encode one tile from its nonzeros, which MUST be sorted by (row, col)
+/// and lie within `[0, dim)²`.  `values` must be `None` or aligned with
+/// `entries`.  Returns the encoded bytes (4-byte aligned length).
+pub fn encode_tile(entries: &[(u16, u16)], values: Option<&[f32]>, dim: usize) -> Vec<u8> {
+    encode_tile_opts(entries, values, dim, true)
+}
+
+/// [`encode_tile`] with the COO hybrid optionally disabled — the
+/// "SCSR-only" baseline of the Fig. 6 ablation stores single-entry rows
+/// as one-header-one-column SCSR rows instead.
+pub fn encode_tile_opts(
+    entries: &[(u16, u16)],
+    values: Option<&[f32]>,
+    dim: usize,
+    coo_hybrid: bool,
+) -> Vec<u8> {
+    assert!(dim <= MAX_TILE_DIM);
+    if let Some(v) = values {
+        assert_eq!(v.len(), entries.len());
+    }
+    debug_assert!(entries.windows(2).all(|w| w[0] < w[1]), "entries must be sorted+unique");
+    debug_assert!(entries
+        .iter()
+        .all(|&(r, c)| (r as usize) < dim && (c as usize) < dim));
+
+    // Pass 1: which rows are single-entry (→ COO)?
+    let mut scsr_words = 0usize;
+    let mut coo_count = 0usize;
+    let mut i = 0;
+    while i < entries.len() {
+        let row = entries[i].0;
+        let mut j = i;
+        while j < entries.len() && entries[j].0 == row {
+            j += 1;
+        }
+        let len = j - i;
+        if len == 1 && coo_hybrid {
+            coo_count += 1;
+        } else {
+            scsr_words += 1 + len; // header + cols
+        }
+        i = j;
+    }
+    let scsr_padded = (scsr_words + 1) & !1; // pad to 4-byte boundary
+    let mut bytes = Vec::with_capacity(
+        8 + scsr_padded * 2
+            + coo_count * 4
+            + if values.is_some() { entries.len() * 4 } else { 0 },
+    );
+    bytes.extend_from_slice(&(scsr_words as u32).to_le_bytes());
+    bytes.extend_from_slice(&(coo_count as u32).to_le_bytes());
+
+    // Pass 2: SCSR stream, collecting value order as we go.
+    let mut value_order: Vec<u32> = Vec::with_capacity(if values.is_some() {
+        entries.len()
+    } else {
+        0
+    });
+    let mut coo_pairs: Vec<(u16, u16, u32)> = Vec::with_capacity(coo_count);
+    let mut i = 0;
+    while i < entries.len() {
+        let row = entries[i].0;
+        let mut j = i;
+        while j < entries.len() && entries[j].0 == row {
+            j += 1;
+        }
+        if j - i == 1 && coo_hybrid {
+            coo_pairs.push((row, entries[i].1, i as u32));
+        } else {
+            bytes.extend_from_slice(&(row | ROW_FLAG).to_le_bytes());
+            for k in i..j {
+                bytes.extend_from_slice(&entries[k].1.to_le_bytes());
+                if values.is_some() {
+                    value_order.push(k as u32);
+                }
+            }
+        }
+        i = j;
+    }
+    if scsr_words % 2 == 1 {
+        bytes.extend_from_slice(&0u16.to_le_bytes()); // alignment pad
+    }
+    for &(r, c, k) in &coo_pairs {
+        bytes.extend_from_slice(&r.to_le_bytes());
+        bytes.extend_from_slice(&c.to_le_bytes());
+        if values.is_some() {
+            value_order.push(k);
+        }
+    }
+    if let Some(vals) = values {
+        for &k in &value_order {
+            bytes.extend_from_slice(&vals[k as usize].to_le_bytes());
+        }
+    }
+    debug_assert_eq!(bytes.len() % 4, 0);
+    bytes
+}
+
+/// Zero-copy view over an encoded tile.
+pub struct TileView<'a> {
+    /// SCSR stream: row headers (MSB set) + column indices.
+    pub scsr: &'a [u16],
+    /// COO pairs, flattened: `[r0, c0, r1, c1, ...]`.
+    pub coo: &'a [u16],
+    /// Values in encoding order (SCSR first, then COO); empty if the
+    /// matrix is unweighted.
+    pub values: &'a [f32],
+}
+
+impl<'a> TileView<'a> {
+    /// Parse an encoded tile.  `has_values` must match the encoder.
+    pub fn parse(bytes: &'a [u8], has_values: bool) -> TileView<'a> {
+        let scsr_words = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        let coo_count = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let scsr_padded = (scsr_words + 1) & !1;
+        let scsr_end = 8 + scsr_padded * 2;
+        let coo_end = scsr_end + coo_count * 4;
+        let scsr = cast_u16(&bytes[8..8 + scsr_words * 2]);
+        let coo = cast_u16(&bytes[scsr_end..coo_end]);
+        let values = if has_values {
+            let nnz = count_scsr_cols(scsr) + coo_count;
+            cast_f32(&bytes[coo_end..coo_end + nnz * 4])
+        } else {
+            &[]
+        };
+        TileView { scsr, coo, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        count_scsr_cols(self.scsr) + self.coo.len() / 2
+    }
+
+    /// Visit every nonzero as (row, col, value); value is 1.0 when the
+    /// tile is unweighted.  Iteration order = encoding order (matches
+    /// `self.values`).
+    pub fn for_each(&self, mut f: impl FnMut(u16, u16, f32)) {
+        let mut vi = 0usize;
+        let val = |vi: usize| -> f32 {
+            if self.values.is_empty() {
+                1.0
+            } else {
+                self.values[vi]
+            }
+        };
+        let mut row = 0u16;
+        for &w in self.scsr {
+            if w & ROW_FLAG != 0 {
+                row = w & !ROW_FLAG;
+            } else {
+                f(row, w, val(vi));
+                vi += 1;
+            }
+        }
+        for pair in self.coo.chunks_exact(2) {
+            f(pair[0], pair[1], val(vi));
+            vi += 1;
+        }
+    }
+
+    /// Collect all nonzeros sorted by (row, col) — test/debug helper.
+    pub fn to_sorted_triples(&self) -> Vec<(u16, u16, f32)> {
+        let mut out = Vec::with_capacity(self.nnz());
+        self.for_each(|r, c, v| out.push((r, c, v)));
+        out.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        out
+    }
+}
+
+fn count_scsr_cols(scsr: &[u16]) -> usize {
+    scsr.iter().filter(|&&w| w & ROW_FLAG == 0).count()
+}
+
+/// Cast a little-endian byte slice to `&[u16]`.  Panics on misalignment —
+/// the encoder guarantees 2-byte alignment of the SCSR/COO regions
+/// relative to a 4-byte-aligned tile start.
+pub fn cast_u16(bytes: &[u8]) -> &[u16] {
+    assert_eq!(bytes.len() % 2, 0);
+    assert_eq!(bytes.as_ptr() as usize % 2, 0, "tile misaligned");
+    // SAFETY: alignment and length checked; u16 has no invalid bit
+    // patterns; we only ever build these from LE-encoded data on LE hosts
+    // (x86_64/aarch64 targets).
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const u16, bytes.len() / 2) }
+}
+
+/// Cast a little-endian byte slice to `&[f32]` (4-byte aligned).
+pub fn cast_f32(bytes: &[u8]) -> &[f32] {
+    assert_eq!(bytes.len() % 4, 0);
+    assert_eq!(bytes.as_ptr() as usize % 4, 0, "tile misaligned");
+    // SAFETY: as above; all bit patterns are valid f32s.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    fn roundtrip(entries: &[(u16, u16)], values: Option<&[f32]>) {
+        let bytes = encode_tile(entries, values, MAX_TILE_DIM);
+        let view = TileView::parse(&bytes, values.is_some());
+        assert_eq!(view.nnz(), entries.len());
+        let triples = view.to_sorted_triples();
+        for (i, &(r, c)) in entries.iter().enumerate() {
+            assert_eq!((triples[i].0, triples[i].1), (r, c));
+            let expect = values.map(|v| v[i]).unwrap_or(1.0);
+            assert_eq!(triples[i].2, expect);
+        }
+    }
+
+    #[test]
+    fn empty_tile() {
+        roundtrip(&[], None);
+    }
+
+    #[test]
+    fn single_entry_rows_use_coo() {
+        let entries = [(0u16, 5u16), (3, 1), (7, 7)];
+        let bytes = encode_tile(&entries, None, 16);
+        let view = TileView::parse(&bytes, false);
+        assert_eq!(view.scsr.len(), 0);
+        assert_eq!(view.coo.len(), 6);
+        roundtrip(&entries, None);
+    }
+
+    #[test]
+    fn multi_entry_rows_use_scsr() {
+        let entries = [(2u16, 1u16), (2, 3), (2, 9)];
+        let bytes = encode_tile(&entries, None, 16);
+        let view = TileView::parse(&bytes, false);
+        assert_eq!(view.scsr.len(), 4); // 1 header + 3 cols
+        assert_eq!(view.scsr[0], 2 | ROW_FLAG);
+        assert_eq!(view.coo.len(), 0);
+        roundtrip(&entries, None);
+    }
+
+    #[test]
+    fn hybrid_rows() {
+        let entries = [(0u16, 0u16), (1, 2), (1, 4), (5, 0), (9, 1), (9, 2), (9, 3)];
+        roundtrip(&entries, None);
+        let bytes = encode_tile(&entries, None, 16);
+        let view = TileView::parse(&bytes, false);
+        // rows 1 (2 entries) and 9 (3 entries) in SCSR; rows 0,5 in COO.
+        assert_eq!(view.coo.len() / 2, 2);
+        assert_eq!(count_scsr_cols(view.scsr), 5);
+    }
+
+    #[test]
+    fn values_follow_encoding_order() {
+        let entries = [(0u16, 0u16), (1, 2), (1, 4)];
+        let vals = [10.0f32, 20.0, 30.0];
+        roundtrip(&entries, Some(&vals));
+        let bytes = encode_tile(&entries, Some(&vals), 16);
+        let view = TileView::parse(&bytes, true);
+        // SCSR row 1 first (vals 20,30), then COO row 0 (val 10).
+        assert_eq!(view.values, &[20.0, 30.0, 10.0]);
+    }
+
+    #[test]
+    fn max_row_and_col_indices() {
+        let m = (MAX_TILE_DIM - 1) as u16;
+        roundtrip(&[(m, 0), (m, m)], None);
+        roundtrip(&[(m, m)], None);
+    }
+
+    #[test]
+    fn alignment_is_4_bytes() {
+        for n in 0..20u16 {
+            let entries: Vec<(u16, u16)> = (0..n).map(|i| (i / 3, i % 3 + (i / 3) * 4)).collect();
+            let mut sorted = entries.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            let bytes = encode_tile(&sorted, None, MAX_TILE_DIM);
+            assert_eq!(bytes.len() % 4, 0);
+        }
+    }
+
+    #[test]
+    fn scsr_only_mode_has_no_coo() {
+        let entries = [(0u16, 5u16), (3, 1), (7, 7)];
+        let bytes = encode_tile_opts(&entries, None, 16, false);
+        let view = TileView::parse(&bytes, false);
+        assert_eq!(view.coo.len(), 0);
+        assert_eq!(view.scsr.len(), 6); // 3 × (header + col)
+        assert_eq!(view.to_sorted_triples().len(), 3);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_tiles() {
+        run_prop("tile-roundtrip", 60, |g| {
+            let dim = *g.choose(&[4usize, 64, 1024, MAX_TILE_DIM]);
+            let n = g.usize_in(0, 500);
+            let mut entries: Vec<(u16, u16)> = (0..n)
+                .map(|_| {
+                    (
+                        g.usize_in(0, dim - 1) as u16,
+                        g.usize_in(0, dim - 1) as u16,
+                    )
+                })
+                .collect();
+            entries.sort_unstable();
+            entries.dedup();
+            let weighted = g.bool();
+            let vals: Vec<f32> = entries.iter().map(|&(r, c)| (r as f32) + 0.5 * c as f32).collect();
+            let bytes = encode_tile(&entries, weighted.then_some(&vals[..]), dim);
+            let view = TileView::parse(&bytes, weighted);
+            let triples = view.to_sorted_triples();
+            if triples.len() != entries.len() {
+                return Err(format!("nnz {} != {}", triples.len(), entries.len()));
+            }
+            for (i, &(r, c)) in entries.iter().enumerate() {
+                if (triples[i].0, triples[i].1) != (r, c) {
+                    return Err(format!("entry {i} mismatch"));
+                }
+                let expect = if weighted { vals[i] } else { 1.0 };
+                if triples[i].2 != expect {
+                    return Err(format!("value {i} mismatch"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,211 @@
+//! Baseline SpMM implementations.
+//!
+//! * [`spmm_csr`] — row-parallel CSR SpMM: the starting point of the
+//!   Fig. 6 ablation (and with `vectorize`, the "MKL-like" comparator of
+//!   Figs. 7/8: a straightforward well-parallelized CSR kernel).
+//! * [`spmm_trilinos_like`] — models Trilinos/Epetra behaviour the paper
+//!   describes: "sparse matrix in Trilinos is not optimized for the dense
+//!   matrix with more than one column" — it performs `b` independent
+//!   SpMV passes over the matrix, paying the matrix traversal once per
+//!   column.
+
+use super::dense_block::{DenseBlock, SharedMut};
+use crate::sparse::CsrMatrix;
+use crate::util::threadpool::{parallel_for, split_ranges};
+
+/// Rows per parallel chunk for CSR kernels.
+const CSR_CHUNK: usize = 4096;
+
+/// Row-parallel CSR SpMM: `out = A × in`.  `vectorize` picks the
+/// width-specialized inner loops (the "MKL-like" configuration); without
+/// it this is the plain CSR baseline of Fig. 6.
+pub fn spmm_csr(
+    a: &CsrMatrix,
+    input: &DenseBlock,
+    output: &mut DenseBlock,
+    threads: usize,
+    vectorize: bool,
+) {
+    assert_eq!(input.n_rows as u64, a.n_cols);
+    assert_eq!(output.n_rows as u64, a.n_rows);
+    let b = input.n_cols;
+    assert_eq!(b, output.n_cols);
+    output.fill(0.0);
+    let n = a.n_rows as usize;
+    let chunks = split_ranges(n, n.div_ceil(CSR_CHUNK).max(1));
+    let out = SharedMut::new(output);
+    parallel_for(chunks.len(), threads, |ci, _| {
+        let (lo, hi) = chunks[ci];
+        for r in lo..hi {
+            // SAFETY: chunks are disjoint row ranges. Rows are fetched one
+            // at a time so interval crossing cannot occur.
+            let out_row = unsafe { out.rows_mut(r, 1) };
+            let cols = a.row(r);
+            let vals = a.row_values(r);
+            if vectorize {
+                match b {
+                    1 => csr_row_fixed::<1>(cols, vals, input, out_row),
+                    2 => csr_row_fixed::<2>(cols, vals, input, out_row),
+                    4 => csr_row_fixed::<4>(cols, vals, input, out_row),
+                    8 => csr_row_fixed::<8>(cols, vals, input, out_row),
+                    16 => csr_row_fixed::<16>(cols, vals, input, out_row),
+                    _ => csr_row_dyn(cols, vals, input, out_row, b),
+                }
+            } else {
+                csr_row_dyn(cols, vals, input, out_row, b);
+            }
+        }
+    });
+}
+
+fn csr_row_fixed<const B: usize>(
+    cols: &[u32],
+    vals: Option<&[f32]>,
+    input: &DenseBlock,
+    out_row: &mut [f64],
+) {
+    match vals {
+        None => {
+            for &c in cols {
+                let inp = input.row(c as usize);
+                for k in 0..B {
+                    out_row[k] += inp[k];
+                }
+            }
+        }
+        Some(vals) => {
+            for (i, &c) in cols.iter().enumerate() {
+                let v = vals[i] as f64;
+                let inp = input.row(c as usize);
+                for k in 0..B {
+                    out_row[k] += v * inp[k];
+                }
+            }
+        }
+    }
+}
+
+fn csr_row_dyn(
+    cols: &[u32],
+    vals: Option<&[f32]>,
+    input: &DenseBlock,
+    out_row: &mut [f64],
+    b: usize,
+) {
+    for (i, &c) in cols.iter().enumerate() {
+        let v = vals.map(|v| v[i] as f64).unwrap_or(1.0);
+        let inp = input.row(c as usize);
+        for k in 0..b {
+            out_row[k] += v * inp[k];
+        }
+    }
+}
+
+/// Trilinos-style SpMM: one full SpMV sweep per dense column.
+pub fn spmm_trilinos_like(
+    a: &CsrMatrix,
+    input: &DenseBlock,
+    output: &mut DenseBlock,
+    threads: usize,
+) {
+    assert_eq!(input.n_rows as u64, a.n_cols);
+    assert_eq!(output.n_rows as u64, a.n_rows);
+    let b = input.n_cols;
+    output.fill(0.0);
+    let n = a.n_rows as usize;
+    let chunks = split_ranges(n, n.div_ceil(CSR_CHUNK).max(1));
+    let out = SharedMut::new(output);
+    for col in 0..b {
+        parallel_for(chunks.len(), threads, |ci, _| {
+            let (lo, hi) = chunks[ci];
+            for r in lo..hi {
+                // SAFETY: disjoint row chunks per worker.
+                let out_row = unsafe { out.rows_mut(r, 1) };
+                let cols = a.row(r);
+                let vals = a.row_values(r);
+                let mut acc = 0.0f64;
+                for (i, &c) in cols.iter().enumerate() {
+                    let v = vals.map(|v| v[i] as f64).unwrap_or(1.0);
+                    acc += v * input.row(c as usize)[col];
+                }
+                out_row[col] = acc;
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+    use crate::util::rng::Rng;
+
+    fn random_graph(rng: &mut Rng, n: u64, nnz: usize, weighted: bool) -> CooMatrix {
+        let mut coo = CooMatrix::new(n, n);
+        for _ in 0..nnz {
+            let (r, c) = (rng.gen_range(n) as u32, rng.gen_range(n) as u32);
+            if weighted {
+                coo.push_weighted(r, c, rng.gen_f64_range(0.5, 1.5) as f32);
+            } else {
+                coo.push(r, c);
+            }
+        }
+        coo.sort_dedup();
+        coo
+    }
+
+    fn spmm_ref(coo: &CooMatrix, input: &[f64], b: usize) -> Vec<f64> {
+        let mut out = vec![0.0; coo.n_rows as usize * b];
+        for (i, &(r, c)) in coo.entries.iter().enumerate() {
+            let v = coo.values.as_ref().map(|v| v[i] as f64).unwrap_or(1.0);
+            for k in 0..b {
+                out[r as usize * b + k] += v * input[c as usize * b + k];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn csr_baseline_matches_reference() {
+        let mut rng = Rng::new(30);
+        for weighted in [false, true] {
+            let coo = random_graph(&mut rng, 400, 3000, weighted);
+            let csr = CsrMatrix::from_coo(&coo);
+            for b in [1usize, 3, 4, 16] {
+                for numa in [false, true] {
+                    for vec in [false, true] {
+                        let input = DenseBlock::from_fn(400, b, 64, numa, |r, c| {
+                            (r % 7) as f64 - c as f64
+                        });
+                        let mut output = DenseBlock::new(400, b, 64, numa);
+                        spmm_csr(&csr, &input, &mut output, 3, vec);
+                        let expect = spmm_ref(&coo, &input.to_vec(), b);
+                        crate::util::prop::assert_close(
+                            &output.to_vec(),
+                            &expect,
+                            1e-9,
+                            1e-9,
+                            "csr",
+                        )
+                        .unwrap();
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trilinos_like_matches_reference() {
+        let mut rng = Rng::new(31);
+        let coo = random_graph(&mut rng, 300, 2500, true);
+        let csr = CsrMatrix::from_coo(&coo);
+        for b in [1usize, 4] {
+            let input = DenseBlock::from_fn(300, b, 64, true, |r, c| (r + 2 * c) as f64);
+            let mut output = DenseBlock::new(300, b, 64, true);
+            spmm_trilinos_like(&csr, &input, &mut output, 2);
+            let expect = spmm_ref(&coo, &input.to_vec(), b);
+            crate::util::prop::assert_close(&output.to_vec(), &expect, 1e-9, 1e-9, "tri")
+                .unwrap();
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Row-major dense matrices for SpMM (§3.3.2, Figure 4a).
+//!
+//! The input/output dense matrices of SpMM are tall-and-skinny and stored
+//! **row-major**, partitioned horizontally into row intervals that are
+//! distributed across (simulated) NUMA nodes.  The interval size is a
+//! multiple of the sparse matrix's tile dimension so one tile's
+//! multiplication touches rows of a single interval only.
+
+use std::cell::UnsafeCell;
+
+/// Physical layout of the backing storage.
+enum Layout {
+    /// One contiguous allocation — the no-NUMA baseline.
+    Contiguous(UnsafeCell<Vec<f64>>),
+    /// One allocation per row interval ("per NUMA node" arenas).
+    Intervals(Vec<UnsafeCell<Vec<f64>>>),
+}
+
+/// A row-major tall-and-skinny dense matrix.
+pub struct DenseBlock {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Rows per interval; multiple of the paired sparse matrix's tile dim.
+    pub interval_rows: usize,
+    data: Layout,
+}
+
+// SAFETY: concurrent mutation only happens through `SharedMut`, whose
+// construction requires `&mut DenseBlock` and whose contract demands
+// disjoint row ranges per thread.
+unsafe impl Sync for DenseBlock {}
+
+impl DenseBlock {
+    /// Target interval size: 64K rows (× 8B × b cols ⇒ a few MB, the
+    /// paper's "tens of megabytes" unit at larger b).
+    pub const TARGET_INTERVAL_ROWS: usize = 64 * 1024;
+
+    /// Pick an interval size: the smallest multiple of `tile_dim` that
+    /// reaches the target (or covers the matrix).
+    pub fn pick_interval_rows(n_rows: usize, tile_dim: usize) -> usize {
+        let target = Self::TARGET_INTERVAL_ROWS.min(n_rows.max(1));
+        tile_dim * target.div_ceil(tile_dim)
+    }
+
+    pub fn new_numa(n_rows: usize, n_cols: usize, tile_dim: usize) -> DenseBlock {
+        let interval_rows = Self::pick_interval_rows(n_rows, tile_dim);
+        let n_intervals = n_rows.max(1).div_ceil(interval_rows);
+        let intervals = (0..n_intervals)
+            .map(|i| {
+                let rows = interval_rows.min(n_rows - i * interval_rows);
+                UnsafeCell::new(vec![0.0f64; rows * n_cols])
+            })
+            .collect();
+        DenseBlock { n_rows, n_cols, interval_rows, data: Layout::Intervals(intervals) }
+    }
+
+    pub fn new_contiguous(n_rows: usize, n_cols: usize, tile_dim: usize) -> DenseBlock {
+        let interval_rows = Self::pick_interval_rows(n_rows, tile_dim);
+        DenseBlock {
+            n_rows,
+            n_cols,
+            interval_rows,
+            data: Layout::Contiguous(UnsafeCell::new(vec![0.0f64; n_rows * n_cols])),
+        }
+    }
+
+    /// Construct with the layout chosen by the NUMA optimization flag.
+    pub fn new(n_rows: usize, n_cols: usize, tile_dim: usize, numa: bool) -> DenseBlock {
+        if numa {
+            Self::new_numa(n_rows, n_cols, tile_dim)
+        } else {
+            Self::new_contiguous(n_rows, n_cols, tile_dim)
+        }
+    }
+
+    pub fn num_intervals(&self) -> usize {
+        match &self.data {
+            Layout::Contiguous(_) => 1,
+            Layout::Intervals(v) => v.len(),
+        }
+    }
+
+    fn slice(&self) -> &[f64] {
+        match &self.data {
+            Layout::Contiguous(v) => unsafe { &*v.get() },
+            Layout::Intervals(_) => panic!("contiguous access on interval layout"),
+        }
+    }
+
+    /// Read-only view of rows `[start, start+len)`, which must not cross
+    /// an interval boundary in the interval layout.
+    pub fn rows(&self, start: usize, len: usize) -> &[f64] {
+        debug_assert!(start + len <= self.n_rows);
+        match &self.data {
+            Layout::Contiguous(_) => {
+                &self.slice()[start * self.n_cols..(start + len) * self.n_cols]
+            }
+            Layout::Intervals(v) => {
+                let iv = start / self.interval_rows;
+                debug_assert!(
+                    len == 0 || (start + len - 1) / self.interval_rows == iv,
+                    "row range [{start}, {}) crosses interval boundary",
+                    start + len
+                );
+                let base = start - iv * self.interval_rows;
+                let data = unsafe { &*v[iv].get() };
+                &data[base * self.n_cols..(base + len) * self.n_cols]
+            }
+        }
+    }
+
+    /// One logical row.
+    pub fn row(&self, r: usize) -> &[f64] {
+        self.rows(r, 1)
+    }
+
+    pub fn set_row(&mut self, r: usize, vals: &[f64]) {
+        assert_eq!(vals.len(), self.n_cols);
+        let cols = self.n_cols;
+        match &mut self.data {
+            Layout::Contiguous(v) => {
+                v.get_mut()[r * cols..(r + 1) * cols].copy_from_slice(vals)
+            }
+            Layout::Intervals(v) => {
+                let iv = r / self.interval_rows;
+                let base = r - iv * self.interval_rows;
+                v[iv].get_mut()[base * cols..(base + 1) * cols].copy_from_slice(vals);
+            }
+        }
+    }
+
+    pub fn fill(&mut self, x: f64) {
+        match &mut self.data {
+            Layout::Contiguous(v) => v.get_mut().fill(x),
+            Layout::Intervals(v) => v.iter_mut().for_each(|iv| iv.get_mut().fill(x)),
+        }
+    }
+
+    /// Full contents as one row-major vector (test/interop helper).
+    pub fn to_vec(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.n_rows * self.n_cols);
+        let mut r = 0;
+        while r < self.n_rows {
+            let len = (self.interval_rows - r % self.interval_rows).min(self.n_rows - r);
+            out.extend_from_slice(self.rows(r, len));
+            r += len;
+        }
+        out
+    }
+
+    pub fn from_fn(
+        n_rows: usize,
+        n_cols: usize,
+        tile_dim: usize,
+        numa: bool,
+        f: impl Fn(usize, usize) -> f64,
+    ) -> DenseBlock {
+        let mut m = Self::new(n_rows, n_cols, tile_dim, numa);
+        let mut row = vec![0.0; n_cols];
+        for r in 0..n_rows {
+            for (c, val) in row.iter_mut().enumerate() {
+                *val = f(r, c);
+            }
+            m.set_row(r, &row);
+        }
+        m
+    }
+}
+
+/// Shared-mutable view for parallel writers.
+///
+/// Construction takes `&mut DenseBlock`, proving exclusivity; workers then
+/// promise (unsafe) that the row ranges they write are pairwise disjoint —
+/// which the SpMM partitioning guarantees structurally, since a partition
+/// owns a contiguous range of tile rows.
+pub struct SharedMut<'a> {
+    block: &'a DenseBlock,
+}
+
+impl<'a> SharedMut<'a> {
+    pub fn new(block: &'a mut DenseBlock) -> SharedMut<'a> {
+        SharedMut { block }
+    }
+
+    pub fn block(&self) -> &DenseBlock {
+        self.block
+    }
+
+    /// Mutable view of rows `[start, start+len)` (same interval-crossing
+    /// rule as [`DenseBlock::rows`]).
+    ///
+    /// # Safety
+    /// Callers must guarantee no other thread concurrently accesses any
+    /// row in the range.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn rows_mut(&self, start: usize, len: usize) -> &mut [f64] {
+        let cols = self.block.n_cols;
+        match &self.block.data {
+            Layout::Contiguous(v) => {
+                let data = &mut *v.get();
+                &mut data[start * cols..(start + len) * cols]
+            }
+            Layout::Intervals(v) => {
+                let iv = start / self.block.interval_rows;
+                debug_assert!(
+                    len == 0 || (start + len - 1) / self.block.interval_rows == iv
+                );
+                let base = start - iv * self.block.interval_rows;
+                let data = &mut *v[iv].get();
+                &mut data[base * cols..(base + len) * cols]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_sizing() {
+        assert_eq!(DenseBlock::pick_interval_rows(1000, 16), 1008);
+        assert_eq!(DenseBlock::pick_interval_rows(1 << 20, 16384), 65536);
+        assert_eq!(DenseBlock::pick_interval_rows(10, 16), 16);
+    }
+
+    #[test]
+    fn set_get_roundtrip_both_layouts() {
+        for numa in [false, true] {
+            let mut m = DenseBlock::new(100, 3, 16, numa);
+            for r in 0..100 {
+                m.set_row(r, &[r as f64, 2.0 * r as f64, -1.0]);
+            }
+            for r in 0..100 {
+                assert_eq!(m.row(r), &[r as f64, 2.0 * r as f64, -1.0]);
+            }
+            assert_eq!(m.to_vec().len(), 300);
+            assert_eq!(m.num_intervals(), if numa { 1 } else { 1 });
+        }
+    }
+
+    #[test]
+    fn multiple_intervals() {
+        // 100 rows, tile 16 → interval = 112? No: target=min(64K,100)=100,
+        // interval = 16*ceil(100/16) = 112 ≥ 100 → 1 interval. Force more:
+        let mut m = DenseBlock::new_numa(200_000, 2, 16384);
+        assert_eq!(m.interval_rows, 65536);
+        assert_eq!(m.num_intervals(), 4);
+        m.set_row(199_999, &[5.0, 6.0]);
+        m.set_row(65_536, &[7.0, 8.0]);
+        assert_eq!(m.row(199_999), &[5.0, 6.0]);
+        assert_eq!(m.row(65_536), &[7.0, 8.0]);
+        assert_eq!(m.to_vec().len(), 400_000);
+    }
+
+    #[test]
+    fn shared_mut_disjoint_parallel_writes() {
+        let mut m = DenseBlock::new_numa(1000, 2, 16);
+        let w = SharedMut::new(&mut m);
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let w = &w;
+                s.spawn(move || {
+                    // Rows [t*250, t*250+16) stay within one interval
+                    // (interval_rows = 1008 ≥ 1000 → single interval).
+                    let rows = unsafe { w.rows_mut(t * 250, 16) };
+                    rows.fill(t as f64 + 1.0);
+                });
+            }
+        });
+        for t in 0..4 {
+            assert_eq!(m.row(t * 250), &[t as f64 + 1.0, t as f64 + 1.0]);
+        }
+    }
+
+    #[test]
+    fn from_fn_matches() {
+        let m = DenseBlock::from_fn(37, 4, 16, true, |r, c| (r * 10 + c) as f64);
+        assert_eq!(m.row(36)[3], 363.0);
+        assert_eq!(m.to_vec()[0..4], [0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn crossing_interval_panics_in_debug() {
+        let m = DenseBlock::new_numa(200_000, 1, 16384);
+        let _ = m.rows(65_530, 100); // crosses the 65536 boundary
+    }
+}

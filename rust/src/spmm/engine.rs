@@ -1,0 +1,385 @@
+//! The SpMM engine (§3.3.3): `output = A × input` with A in the tile
+//! image (in memory or on SSDs) and the dense matrices in memory.
+//!
+//! * Parallelization: contiguous tile-row partitions, owned per worker
+//!   with work stealing.
+//! * Cache use: tiles are processed in super tiles — column-major order
+//!   within a partition — so the input rows of a tile column stay in
+//!   cache across the partition's tile rows.
+//! * Semi-external memory: each worker streams its partitions from SAFS
+//!   asynchronously, keeping `PREFETCH_DEPTH` partitions in flight and
+//!   overlapping I/O with multiplication.
+
+use super::dense_block::{DenseBlock, SharedMut};
+use super::kernel::multiply_tile;
+use super::opts::SpmmOpts;
+use super::super_tile::partition_tile_rows;
+use crate::safs::BufferPool;
+use crate::sparse::{SparseMatrix, TileRowView};
+use crate::util::threadpool::OwnedQueues;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Partitions each worker keeps in flight in SEM mode (compute the head
+/// while the tail is being read).
+const PREFETCH_DEPTH: usize = 2;
+
+#[derive(Debug, Default, Clone)]
+pub struct SpmmRunStats {
+    pub partitions: usize,
+    pub stolen: usize,
+}
+
+/// `output = matrix × input`.  `input` must have `matrix.n_cols` rows and
+/// `output` `matrix.n_rows` rows, with equal widths.  Both dense blocks
+/// must be laid out with the matrix's tile dimension.
+pub fn spmm(
+    matrix: &SparseMatrix,
+    input: &DenseBlock,
+    output: &mut DenseBlock,
+    opts: &SpmmOpts,
+    threads: usize,
+) -> SpmmRunStats {
+    assert_eq!(input.n_rows as u64, matrix.n_cols, "input rows");
+    assert_eq!(output.n_rows as u64, matrix.n_rows, "output rows");
+    assert_eq!(input.n_cols, output.n_cols, "widths");
+    assert_eq!(input.interval_rows % matrix.tile_dim, 0, "input interval alignment");
+    assert_eq!(output.interval_rows % matrix.tile_dim, 0, "output interval alignment");
+    output.fill(0.0);
+
+    let parts = partition_tile_rows(
+        matrix.num_tile_rows(),
+        matrix.tile_dim,
+        input.n_cols,
+        opts.super_tile,
+        threads,
+    );
+    let out = SharedMut::new(output);
+    let queues = OwnedQueues::new(parts.len(), threads.max(1));
+    let stolen = AtomicUsize::new(0);
+    let ranges = crate::util::threadpool::split_ranges(parts.len(), threads.max(1));
+
+    std::thread::scope(|s| {
+        for w in 0..threads.max(1) {
+            let parts = &parts;
+            let queues = &queues;
+            let out = &out;
+            let stolen = &stolen;
+            let own = ranges[w];
+            s.spawn(move || {
+                let mut local_buf: Vec<f64> = Vec::new();
+                let pop = |queues: &OwnedQueues| {
+                    if opts.work_steal {
+                        queues.pop(w)
+                    } else {
+                        queues.pop_own(w)
+                    }
+                };
+                match matrix.safs_handle() {
+                    None => {
+                        // In-memory: direct slices.
+                        while let Some(pi) = pop(queues) {
+                            if !(own.0 <= pi && pi < own.1) {
+                                stolen.fetch_add(1, Ordering::Relaxed);
+                            }
+                            let part = parts[pi];
+                            let images: Vec<&[u8]> = (part.0..part.1)
+                                .map(|tr| matrix.tile_row_mem(tr).unwrap())
+                                .collect();
+                            multiply_partition(
+                                matrix, part, &images, input, out, opts, &mut local_buf,
+                            );
+                        }
+                    }
+                    Some((fs, file)) => {
+                        // Semi-external: pipelined async reads.
+                        let mut pool = BufferPool::new(fs.cfg().use_buffer_pool);
+                        let mut pending: VecDeque<(usize, crate::safs::IoTicket)> =
+                            VecDeque::new();
+                        loop {
+                            while pending.len() < PREFETCH_DEPTH {
+                                match pop(queues) {
+                                    Some(pi) => {
+                                        if !(own.0 <= pi && pi < own.1) {
+                                            stolen.fetch_add(1, Ordering::Relaxed);
+                                        }
+                                        let part = parts[pi];
+                                        let (off, len) = part_byte_range(matrix, part);
+                                        let buf = pool.get(len);
+                                        let ticket =
+                                            fs.read_async(file.clone(), off, buf);
+                                        pending.push_back((pi, ticket));
+                                    }
+                                    None => break,
+                                }
+                            }
+                            let Some((pi, ticket)) = pending.pop_front() else { break };
+                            let buf = ticket.wait();
+                            let part = parts[pi];
+                            let base = matrix.index[part.0].offset;
+                            let images: Vec<&[u8]> = (part.0..part.1)
+                                .map(|tr| {
+                                    let m = matrix.index[tr];
+                                    let s = (m.offset - base) as usize;
+                                    &buf[s..s + m.len as usize]
+                                })
+                                .collect();
+                            multiply_partition(
+                                matrix, part, &images, input, out, opts, &mut local_buf,
+                            );
+                            pool.put(buf);
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    SpmmRunStats { partitions: parts.len(), stolen: stolen.load(Ordering::Relaxed) }
+}
+
+/// Contiguous byte range of a partition's tile rows in the image file.
+fn part_byte_range(matrix: &SparseMatrix, part: (usize, usize)) -> (u64, usize) {
+    let off = matrix.index[part.0].offset;
+    let end = matrix.index[part.1 - 1].offset + matrix.index[part.1 - 1].len as u64;
+    (off, (end - off) as usize)
+}
+
+/// Multiply all tiles of one partition (a contiguous range of tile rows)
+/// with the input block.  Output rows of the partition are exclusively
+/// owned by the calling worker.
+fn multiply_partition(
+    matrix: &SparseMatrix,
+    part: (usize, usize),
+    row_images: &[&[u8]],
+    input: &DenseBlock,
+    out: &SharedMut,
+    opts: &SpmmOpts,
+    local_buf: &mut Vec<f64>,
+) {
+    let td = matrix.tile_dim;
+    let b = input.n_cols;
+    let part_row_start = part.0 * td;
+    let part_rows = ((part.1 * td).min(matrix.n_rows as usize)) - part_row_start;
+
+    // Decode each tile row's tile list: (tile_col, payload-range).
+    let rows: Vec<Vec<(u32, crate::sparse::TileView)>> = row_images
+        .iter()
+        .map(|img| TileRowView::new(img, matrix.has_values).collect())
+        .collect();
+
+    // The output target: either a thread-local accumulation buffer
+    // (Local write opt) or the shared output rows directly.
+    if opts.local_write {
+        local_buf.clear();
+        local_buf.resize(part_rows * b, 0.0);
+    }
+
+    let mut process_tile = |tr_in_part: usize, tile_col: u32, view: &crate::sparse::TileView| {
+        let in_start = tile_col as usize * td;
+        let in_len = td.min(input.n_rows - in_start);
+        let in_rows = input.rows(in_start, in_len);
+        if opts.local_write {
+            let base = tr_in_part * td * b;
+            let out_rows_len = td.min(part_rows - tr_in_part * td) * b;
+            let out_rows = &mut local_buf[base..base + out_rows_len];
+            multiply_tile(view, in_rows, out_rows, b, opts.vectorize);
+        } else {
+            let out_start = (part.0 + tr_in_part) * td;
+            let out_len = td.min(matrix.n_rows as usize - out_start);
+            // SAFETY: this partition exclusively owns these output rows.
+            let out_rows = unsafe { out.rows_mut(out_start, out_len) };
+            multiply_tile(view, in_rows, out_rows, b, opts.vectorize);
+        }
+    };
+
+    if opts.super_tile && rows.len() > 1 {
+        // Column-major (super-tile) order: k-way merge by tile_col so the
+        // input rows of one tile column stay hot across all tile rows.
+        let mut cursors = vec![0usize; rows.len()];
+        loop {
+            let mut next: Option<(u32, usize)> = None;
+            for (ri, row) in rows.iter().enumerate() {
+                if cursors[ri] < row.len() {
+                    let col = row[cursors[ri]].0;
+                    if next.map_or(true, |(c, _)| col < c) {
+                        next = Some((col, ri));
+                    }
+                }
+            }
+            let Some((_, ri)) = next else { break };
+            let (col, ref view) = rows[ri][cursors[ri]];
+            process_tile(ri, col, view);
+            cursors[ri] += 1;
+        }
+    } else {
+        // Row-major order.
+        for (ri, row) in rows.iter().enumerate() {
+            for (col, view) in row {
+                process_tile(ri, *col, view);
+            }
+        }
+    }
+
+    if opts.local_write {
+        // Copy the accumulated partition output to the shared matrix, one
+        // tile row at a time (each stays within one interval).
+        for tr_in_part in 0..row_images.len() {
+            let out_start = (part.0 + tr_in_part) * td;
+            let out_len = td.min(matrix.n_rows as usize - out_start);
+            // SAFETY: exclusive ownership as above.
+            let dst = unsafe { out.rows_mut(out_start, out_len) };
+            let src = &local_buf[tr_in_part * td * b..tr_in_part * td * b + out_len * b];
+            dst.copy_from_slice(src);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::safs::{Safs, SafsConfig};
+    use crate::sparse::{build_matrix_opts, BuildTarget, CooMatrix};
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    /// Naive reference: out = A * in over COO triples.
+    pub fn spmm_ref(coo: &CooMatrix, input: &[f64], b: usize) -> Vec<f64> {
+        let mut out = vec![0.0; coo.n_rows as usize * b];
+        for (i, &(r, c)) in coo.entries.iter().enumerate() {
+            let v = coo.values.as_ref().map(|v| v[i] as f64).unwrap_or(1.0);
+            for k in 0..b {
+                out[r as usize * b + k] += v * input[c as usize * b + k];
+            }
+        }
+        out
+    }
+
+    fn random_graph(rng: &mut Rng, n: u64, nnz: usize, weighted: bool) -> CooMatrix {
+        let mut coo = CooMatrix::new(n, n);
+        for _ in 0..nnz {
+            let r = rng.gen_range(n) as u32;
+            let c = rng.gen_range(n) as u32;
+            if weighted {
+                coo.push_weighted(r, c, rng.gen_f64_range(0.1, 2.0) as f32);
+            } else {
+                coo.push(r, c);
+            }
+        }
+        coo.sort_dedup();
+        coo
+    }
+
+    fn check(coo: &CooMatrix, tile: usize, b: usize, opts: &SpmmOpts, threads: usize, sem: bool) {
+        let fs = Safs::new(SafsConfig::untimed());
+        let m = if sem {
+            build_matrix_opts(coo, tile, BuildTarget::Safs(&fs, "m"), opts.scsr_coo)
+        } else {
+            build_matrix_opts(coo, tile, BuildTarget::Mem, opts.scsr_coo)
+        };
+        let n = coo.n_rows as usize;
+        let input =
+            DenseBlock::from_fn(n, b, tile, opts.numa, |r, c| ((r * 31 + c * 7) % 13) as f64 - 6.0);
+        let mut output = DenseBlock::new(n, b, tile, opts.numa);
+        spmm(&m, &input, &mut output, opts, threads);
+        let expect = spmm_ref(coo, &input.to_vec(), b);
+        assert_eq!(output.to_vec(), expect, "tile={tile} b={b} sem={sem} {opts:?}");
+    }
+
+    #[test]
+    fn im_matches_reference_all_opt_stages() {
+        let mut rng = Rng::new(20);
+        let coo = random_graph(&mut rng, 500, 3000, false);
+        for (_, opts) in SpmmOpts::stages() {
+            if !opts.cache_block {
+                continue; // CSR stages tested in baseline.rs
+            }
+            check(&coo, 64, 4, &opts, 3, false);
+        }
+    }
+
+    #[test]
+    fn sem_matches_reference() {
+        let mut rng = Rng::new(21);
+        let coo = random_graph(&mut rng, 700, 5000, true);
+        check(&coo, 128, 4, &SpmmOpts::default(), 3, true);
+    }
+
+    #[test]
+    fn various_widths() {
+        let mut rng = Rng::new(22);
+        let coo = random_graph(&mut rng, 300, 2000, false);
+        for b in [1usize, 2, 3, 4, 8, 16] {
+            check(&coo, 64, b, &SpmmOpts::default(), 2, false);
+            check(&coo, 64, b, &SpmmOpts::default(), 2, true);
+        }
+    }
+
+    #[test]
+    fn rectangular_matrix() {
+        let mut rng = Rng::new(23);
+        let mut coo = CooMatrix::new(400, 250);
+        for _ in 0..1500 {
+            coo.push(rng.gen_range(400) as u32, rng.gen_range(250) as u32);
+        }
+        coo.sort_dedup();
+        let m = build_matrix_opts(&coo, 64, BuildTarget::Mem, true);
+        let input = DenseBlock::from_fn(250, 2, 64, true, |r, c| (r + c) as f64);
+        let mut output = DenseBlock::new(400, 2, 64, true);
+        spmm(&m, &input, &mut output, &SpmmOpts::default(), 2);
+        assert_eq!(output.to_vec(), spmm_ref(&coo, &input.to_vec(), 2));
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        let coo = CooMatrix::new(10, 10);
+        check(&coo, 16, 2, &SpmmOpts::default(), 2, false);
+        let mut one = CooMatrix::new(1, 1);
+        one.push(0, 0);
+        one.sort_dedup();
+        check(&one, 16, 1, &SpmmOpts::default(), 1, false);
+    }
+
+    #[test]
+    fn sem_reads_the_whole_image_once() {
+        let mut rng = Rng::new(24);
+        let coo = random_graph(&mut rng, 2000, 20_000, false);
+        let fs = Safs::new(SafsConfig::untimed());
+        let m = build_matrix_opts(&coo, 256, BuildTarget::Safs(&fs, "m"), true);
+        let before = fs.stats();
+        let input = DenseBlock::from_fn(2000, 4, 256, true, |r, _| r as f64);
+        let mut output = DenseBlock::new(2000, 4, 256, true);
+        spmm(&m, &input, &mut output, &SpmmOpts::default(), 2);
+        let delta = fs.stats().delta_since(&before);
+        assert_eq!(delta.bytes_read, m.storage_bytes());
+        assert_eq!(delta.bytes_written, 0, "SpMM must not write to SSDs");
+    }
+
+    #[test]
+    fn prop_spmm_equals_reference() {
+        run_prop("spmm-vs-ref", 15, |g| {
+            let n = g.usize_in(1, 600) as u64;
+            let nnz = g.usize_in(0, 4000);
+            let tile = *g.choose(&[16usize, 64, 256]);
+            let b = *g.choose(&[1usize, 2, 4, 5, 8]);
+            let threads = g.usize_in(1, 4);
+            let weighted = g.bool();
+            let sem = g.bool();
+            let mut rng = Rng::new(g.u64());
+            let coo = random_graph(&mut rng, n, nnz, weighted);
+            let fs = Safs::new(SafsConfig::untimed());
+            let m = if sem {
+                build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "m"), true)
+            } else {
+                build_matrix_opts(&coo, tile, BuildTarget::Mem, true)
+            };
+            let input = DenseBlock::from_fn(n as usize, b, tile, true, |r, c| {
+                ((r * 17 + c) % 19) as f64 - 9.0
+            });
+            let mut output = DenseBlock::new(n as usize, b, tile, true);
+            spmm(&m, &input, &mut output, &SpmmOpts::default(), threads);
+            let expect = spmm_ref(&coo, &input.to_vec(), b);
+            crate::util::prop::assert_close(&output.to_vec(), &expect, 1e-12, 1e-12, "spmm")
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Sparse × dense matrix multiplication (§3.3): the semi-external-memory
+//! engine with the paper's full optimization set, plus in-memory and
+//! baseline configurations for the evaluation figures.
+
+pub mod baseline;
+pub mod dense_block;
+pub mod engine;
+pub mod kernel;
+pub mod opts;
+pub mod super_tile;
+
+pub use baseline::{spmm_csr, spmm_trilinos_like};
+pub use dense_block::{DenseBlock, SharedMut};
+pub use engine::{spmm, SpmmRunStats};
+pub use opts::SpmmOpts;

@@ -1,0 +1,102 @@
+//! SpMM optimization flags — the knobs of the paper's Figure-6 ablation.
+//!
+//! The paper applies its memory optimizations incrementally:
+//! CSR baseline → +NUMA → +cache blocking (tiles) → +super tiles →
+//! +vectorization → +local write buffer → +SCSR/COO hybrid.  Each flag
+//! here can be toggled independently; [`SpmmOpts::stages`] returns the
+//! cumulative sequence used by the Fig. 6 bench.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpmmOpts {
+    /// Partition the dense matrices across (simulated) NUMA nodes instead
+    /// of one contiguous allocation.
+    pub numa: bool,
+    /// Use the tiled matrix image (cache blocking) instead of CSR.
+    pub cache_block: bool,
+    /// Group tiles from multiple tile rows into super tiles sized to the
+    /// CPU cache at runtime.
+    pub super_tile: bool,
+    /// Width-specialized (vectorizable) inner kernels.
+    pub vectorize: bool,
+    /// Accumulate each partition's output in a thread-local buffer and
+    /// write it out once.
+    pub local_write: bool,
+    /// The matrix image stores single-entry rows in the COO region
+    /// (affects image *construction*; see `build_matrix_opts`).
+    pub scsr_coo: bool,
+    /// Steal partitions from other workers when idle (§3.3.3 load
+    /// balancing; on by default and not part of the Fig. 6 sequence).
+    pub work_steal: bool,
+}
+
+impl Default for SpmmOpts {
+    /// All optimizations on — the configuration FlashEigen runs with.
+    fn default() -> Self {
+        SpmmOpts {
+            numa: true,
+            cache_block: true,
+            super_tile: true,
+            vectorize: true,
+            local_write: true,
+            scsr_coo: true,
+            work_steal: true,
+        }
+    }
+}
+
+impl SpmmOpts {
+    /// The CSR starting point of the ablation.
+    pub fn baseline() -> SpmmOpts {
+        SpmmOpts {
+            numa: false,
+            cache_block: false,
+            super_tile: false,
+            vectorize: false,
+            local_write: false,
+            scsr_coo: false,
+            work_steal: true,
+        }
+    }
+
+    /// The cumulative stages of Figure 6, with their paper labels.
+    pub fn stages() -> Vec<(&'static str, SpmmOpts)> {
+        let mut o = SpmmOpts::baseline();
+        let mut stages = vec![("CSR", o)];
+        o.numa = true;
+        stages.push(("+NUMA", o));
+        o.cache_block = true;
+        stages.push(("+Cache blocking", o));
+        o.super_tile = true;
+        stages.push(("+Super tile", o));
+        o.vectorize = true;
+        stages.push(("+Vec", o));
+        o.local_write = true;
+        stages.push(("+Local write", o));
+        o.scsr_coo = true;
+        stages.push(("+SCSR+COO", o));
+        stages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_are_cumulative_and_end_at_default() {
+        let stages = SpmmOpts::stages();
+        assert_eq!(stages.len(), 7);
+        assert_eq!(stages[0].1, SpmmOpts::baseline());
+        assert_eq!(stages.last().unwrap().1, SpmmOpts::default());
+        // Each stage only adds flags.
+        let count = |o: &SpmmOpts| {
+            [o.numa, o.cache_block, o.super_tile, o.vectorize, o.local_write, o.scsr_coo]
+                .iter()
+                .filter(|&&b| b)
+                .count()
+        };
+        for w in stages.windows(2) {
+            assert_eq!(count(&w[1].1), count(&w[0].1) + 1);
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Runtime super-tile sizing (§3.3.3).
+//!
+//! A *super tile* groups tiles from several consecutive tile rows so that
+//! the dense-matrix rows they touch fill (but do not overflow) the CPU
+//! cache shared by the worker threads.  The tile image is built with a
+//! small fixed tile (16K), and the engine picks the super-tile height at
+//! runtime from (i) the dense-matrix width, (ii) the cache size and
+//! (iii) the number of threads sharing it.
+
+/// Modeled shared-cache capacity (L3).  Configurable for tests.
+pub const DEFAULT_CACHE_BYTES: usize = 16 << 20;
+
+/// Number of consecutive tile rows per partition / super tile.
+///
+/// One super-tile step holds in cache: the *output* rows of `h` tile rows
+/// (`h * tile_dim * b` f64s) plus the *input* rows of the current tile
+/// column (`tile_dim * b` f64s).
+pub fn super_tile_height(
+    tile_dim: usize,
+    b: usize,
+    cache_bytes: usize,
+    threads_sharing: usize,
+) -> usize {
+    let share = cache_bytes / threads_sharing.max(1);
+    let per_tile_row = tile_dim * b * 8;
+    // h * per_tile_row (output) + per_tile_row (input) <= share
+    let h = share / per_tile_row;
+    h.saturating_sub(1).clamp(1, 64)
+}
+
+/// Partition the matrix's tile rows into super-tile-height chunks.
+pub fn partition_tile_rows(
+    num_tile_rows: usize,
+    tile_dim: usize,
+    b: usize,
+    super_tile: bool,
+    threads: usize,
+) -> Vec<(usize, usize)> {
+    let h = if super_tile {
+        super_tile_height(tile_dim, b, DEFAULT_CACHE_BYTES, threads)
+    } else {
+        1
+    };
+    let mut parts = Vec::with_capacity(num_tile_rows.div_ceil(h));
+    let mut start = 0;
+    while start < num_tile_rows {
+        let end = (start + h).min(num_tile_rows);
+        parts.push((start, end));
+        start = end;
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn height_shrinks_with_width_and_threads() {
+        let h1 = super_tile_height(16384, 1, DEFAULT_CACHE_BYTES, 1);
+        let h4 = super_tile_height(16384, 4, DEFAULT_CACHE_BYTES, 1);
+        let h16 = super_tile_height(16384, 16, DEFAULT_CACHE_BYTES, 1);
+        assert!(h1 >= h4 && h4 >= h16, "{h1} {h4} {h16}");
+        let h4t8 = super_tile_height(16384, 4, DEFAULT_CACHE_BYTES, 8);
+        assert!(h4t8 <= h4);
+        assert!(h4t8 >= 1);
+    }
+
+    #[test]
+    fn partitions_cover_everything() {
+        for st in [false, true] {
+            let parts = partition_tile_rows(103, 1024, 4, st, 4);
+            assert_eq!(parts[0].0, 0);
+            assert_eq!(parts.last().unwrap().1, 103);
+            for w in parts.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn no_super_tile_means_one_row_parts() {
+        let parts = partition_tile_rows(5, 16384, 4, false, 4);
+        assert_eq!(parts.len(), 5);
+        assert!(parts.iter().all(|(s, e)| e - s == 1));
+    }
+}

@@ -1,0 +1,165 @@
+//! Tiny command-line argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys that take values — anything else starting with `--`
+    /// is treated as a boolean flag.
+    known_value_keys: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv`, treating the listed keys as value-taking options.
+    pub fn parse(argv: &[String], value_keys: &[&str]) -> Result<Args, String> {
+        let mut args = Args {
+            known_value_keys: value_keys.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    let (k, v) = rest.split_at(eq);
+                    args.options.insert(k.to_string(), v[1..].to_string());
+                } else if args.known_value_keys.iter().any(|k| k == rest) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("option --{rest} expects a value"))?;
+                    args.options.insert(rest.to_string(), v.clone());
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_scaled_usize(v)
+                .ok_or_else(|| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        Ok(self.get_usize(name, default as usize)? as u64)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| format!("--{name}: expected float, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated integer list, e.g. `--cols 1,2,4,8`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    parse_scaled_usize(p.trim())
+                        .ok_or_else(|| format!("--{name}: bad integer '{p}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Parse an integer with optional `k`/`m`/`g` suffix (binary multiples),
+/// e.g. `16k` → 16384.  Used throughout the CLI for sizes and counts.
+pub fn parse_scaled_usize(s: &str) -> Option<usize> {
+    let s = s.trim();
+    if s.is_empty() {
+        return None;
+    }
+    let (num, mult) = match s.chars().last().unwrap().to_ascii_lowercase() {
+        'k' => (&s[..s.len() - 1], 1usize << 10),
+        'm' => (&s[..s.len() - 1], 1usize << 20),
+        'g' => (&s[..s.len() - 1], 1usize << 30),
+        _ => (s, 1),
+    };
+    // Allow float prefixes like "1.5m".
+    if num.contains('.') {
+        let f = num.parse::<f64>().ok()?;
+        if f < 0.0 {
+            return None;
+        }
+        Some((f * mult as f64) as usize)
+    } else {
+        num.parse::<usize>().ok().map(|n| n * mult)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            &sv(&["graph", "--nev", "8", "--sem", "--block=4", "out.bin"]),
+            &["nev"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["graph", "out.bin"]);
+        assert_eq!(a.get("nev"), Some("8"));
+        assert_eq!(a.get("block"), Some("4"));
+        assert!(a.flag("sem"));
+        assert!(!a.flag("im"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--nev"]), &["nev"]).is_err());
+    }
+
+    #[test]
+    fn scaled_integers() {
+        assert_eq!(parse_scaled_usize("16k"), Some(16384));
+        assert_eq!(parse_scaled_usize("2M"), Some(2 << 20));
+        assert_eq!(parse_scaled_usize("1.5k"), Some(1536));
+        assert_eq!(parse_scaled_usize("123"), Some(123));
+        assert_eq!(parse_scaled_usize("x"), None);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(&sv(&["--cols", "1,2,4,16k"]), &["cols"]).unwrap();
+        assert_eq!(
+            a.get_usize_list("cols", &[]).unwrap(),
+            vec![1, 2, 4, 16384]
+        );
+        assert_eq!(a.get_usize_list("other", &[7]).unwrap(), vec![7]);
+    }
+}

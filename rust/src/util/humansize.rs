@@ -1,0 +1,43 @@
+//! Byte-size formatting (for I/O stats: "145TB read, 4TB write" etc.).
+
+/// Format a byte count with binary units.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 7] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB", "EiB"];
+    if b < 1024 {
+        return format!("{b}B");
+    }
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2}{}", UNITS[u])
+}
+
+/// Format a throughput in bytes/sec.
+pub fn fmt_throughput(bytes: u64, secs: f64) -> String {
+    if secs <= 0.0 {
+        return "inf".to_string();
+    }
+    format!("{}/s", fmt_bytes((bytes as f64 / secs) as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.00KiB");
+        assert!(fmt_bytes(3 << 30).starts_with("3.00GiB"));
+        assert!(fmt_bytes(145 * (1 << 40)).contains("TiB"));
+    }
+
+    #[test]
+    fn throughput() {
+        assert_eq!(fmt_throughput(2048, 2.0), "1.00KiB/s");
+        assert_eq!(fmt_throughput(1, 0.0), "inf");
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch (the offline registry ships no
+//! rand/rayon/serde/clap/criterion/proptest — see DESIGN.md §1).
+
+pub mod cli;
+pub mod humansize;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,128 @@
+//! Mini property-based testing substrate (`proptest` is unavailable
+//! offline).
+//!
+//! A property is a closure over a [`Gen`] (a seeded random source with
+//! convenience generators); [`run_prop`] executes it for a configurable
+//! number of cases and reports the failing seed so a failure reproduces
+//! deterministically with `FLASHEIGEN_PROP_SEED=<seed>`.
+
+use super::rng::Rng;
+
+/// Random-case generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size hint that grows across cases, so early cases are small (a poor
+    /// man's replacement for shrinking: small counterexamples are tried
+    /// first).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.gen_usize(hi - lo + 1)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.gen_f64_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.gen_bool(0.5)
+    }
+
+    /// A vector of length `len` with elements drawn by `f`.
+    pub fn vec_of<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Finite f64s in a reasonable numeric range (no NaN/inf/subnormals).
+    pub fn finite_f64(&mut self) -> f64 {
+        let mag = self.rng.gen_f64_range(-6.0, 6.0);
+        let sign = if self.rng.gen_bool(0.5) { 1.0 } else { -1.0 };
+        sign * 10f64.powf(mag) * self.rng.gen_f64_range(0.1, 1.0)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.gen_usize(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of the property.  The property returns
+/// `Err(msg)` (or panics) to signal failure.
+pub fn run_prop(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let base_seed: u64 = std::env::var("FLASHEIGEN_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF1A5_4E16);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut gen = Gen {
+            rng: Rng::new(seed),
+            size: 1 + case * 4 / cases.max(1) * 8 + case.min(32),
+        };
+        if let Err(msg) = prop(&mut gen) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}): {msg}\n\
+                 reproduce with FLASHEIGEN_PROP_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+/// Assert two f64 slices are close (relative + absolute tolerance), with a
+/// useful failure message.  Shared by numeric tests everywhere.
+pub fn assert_close(a: &[f64], b: &[f64], rtol: f64, atol: f64, ctx: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{ctx}: length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * x.abs().max(y.abs());
+        if (x - y).abs() > tol {
+            return Err(format!(
+                "{ctx}: element {i} differs: {x} vs {y} (|Δ|={} > tol={tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trivial_property_passes() {
+        run_prop("reverse-reverse", 50, |g| {
+            let n = g.usize_in(0, 100);
+            let v = g.vec_of(n, |g| g.u64());
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if v == w {
+                Ok(())
+            } else {
+                Err("reverse twice != id".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        run_prop("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_checks() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9, 1e-9, "t").is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 1e-3, "t").is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, 1e-3, "t").is_err());
+    }
+}

@@ -1,0 +1,272 @@
+//! Worker-pool / parallel-for substrate with work stealing.
+//!
+//! `rayon` is not available offline; the paper's execution model is also
+//! more specific than rayon's: each worker thread *owns* a contiguous range
+//! of partitions (tile rows of the sparse matrix, row intervals of a dense
+//! matrix) and steals from other workers only once its own range is
+//! exhausted (§3.3.3 "load balancing").  [`OwnedQueues`] implements exactly
+//! that; [`parallel_for`] is the convenience wrapper used by every matrix
+//! operation in the repository.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Per-thread owned ranges with stealing.
+///
+/// Items `0..n` are split into `t` contiguous chunks, one per worker.  Each
+/// worker pops from the front of its own chunk; when empty it scans other
+/// workers round-robin and steals from the *back* of the victim's chunk to
+/// minimise contention with the owner.
+///
+/// Head and tail are packed into ONE atomic per range and claimed with a
+/// single CAS: with separate atomics, the owner (CAS on head) and a thief
+/// (CAS on tail) can both claim the final remaining item — a real race
+/// this repository's property tests caught in the wild.
+pub struct OwnedQueues {
+    /// `(head << 32) | tail` per worker; the worker owns `head..tail`.
+    ranges: Vec<AtomicU64>,
+    n_items: usize,
+}
+
+#[inline]
+fn pack(head: usize, tail: usize) -> u64 {
+    ((head as u64) << 32) | tail as u64
+}
+
+#[inline]
+fn unpack(v: u64) -> (usize, usize) {
+    ((v >> 32) as usize, (v & 0xFFFF_FFFF) as usize)
+}
+
+impl OwnedQueues {
+    pub fn new(n_items: usize, n_workers: usize) -> OwnedQueues {
+        assert!(n_workers > 0);
+        assert!(n_items < u32::MAX as usize, "item count exceeds packing width");
+        let per = n_items / n_workers;
+        let extra = n_items % n_workers;
+        let mut ranges = Vec::with_capacity(n_workers);
+        let mut start = 0usize;
+        for w in 0..n_workers {
+            let len = per + usize::from(w < extra);
+            ranges.push(AtomicU64::new(pack(start, start + len)));
+            start += len;
+        }
+        debug_assert_eq!(start, n_items);
+        OwnedQueues { ranges, n_items }
+    }
+
+    /// Pop the next item for `worker`, stealing if its own range is empty.
+    /// Returns `None` when no work remains anywhere.
+    pub fn pop(&self, worker: usize) -> Option<usize> {
+        if let Some(i) = self.pop_own(worker) {
+            return Some(i);
+        }
+        let t = self.ranges.len();
+        for d in 1..t {
+            let victim = (worker + d) % t;
+            if let Some(i) = self.steal_from(victim) {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Pop from the front of the worker's own range (CAS loop).
+    pub fn pop_own(&self, worker: usize) -> Option<usize> {
+        let range = &self.ranges[worker];
+        loop {
+            let v = range.load(Ordering::Acquire);
+            let (h, t) = unpack(v);
+            if h >= t {
+                return None;
+            }
+            if range
+                .compare_exchange_weak(v, pack(h + 1, t), Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Some(h);
+            }
+        }
+    }
+
+    /// Steal from the back of a victim's range.
+    fn steal_from(&self, victim: usize) -> Option<usize> {
+        let range = &self.ranges[victim];
+        loop {
+            let v = range.load(Ordering::Acquire);
+            let (h, t) = unpack(v);
+            if h >= t {
+                return None;
+            }
+            if range
+                .compare_exchange_weak(v, pack(h, t - 1), Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Some(t - 1);
+            }
+        }
+    }
+}
+
+/// Statistics from one parallel run, used by the load-balancing ablations.
+#[derive(Debug, Default, Clone)]
+pub struct ParallelStats {
+    /// Items processed per worker.
+    pub per_worker: Vec<usize>,
+    /// Of those, items stolen from another worker's range.
+    pub stolen: usize,
+}
+
+/// Run `f(item, worker)` over items `0..n_items` on `n_workers` threads
+/// with owned-range + stealing scheduling.  Panics in workers propagate.
+pub fn parallel_for<F>(n_items: usize, n_workers: usize, f: F) -> ParallelStats
+where
+    F: Fn(usize, usize) + Sync,
+{
+    parallel_for_opt(n_items, n_workers, true, f)
+}
+
+/// Like [`parallel_for`], but stealing can be disabled to reproduce the
+/// paper's static-partitioning baseline (Fig. 6 load-balancing ablation).
+pub fn parallel_for_opt<F>(n_items: usize, n_workers: usize, steal: bool, f: F) -> ParallelStats
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n_items == 0 {
+        return ParallelStats { per_worker: vec![0; n_workers], ..Default::default() };
+    }
+    if n_workers == 1 {
+        for i in 0..n_items {
+            f(i, 0);
+        }
+        return ParallelStats { per_worker: vec![n_items], stolen: 0 };
+    }
+    let queues = OwnedQueues::new(n_items, n_workers);
+    let stolen = AtomicUsize::new(0);
+    let counts: Vec<AtomicUsize> = (0..n_workers).map(|_| AtomicUsize::new(0)).collect();
+    std::thread::scope(|s| {
+        for w in 0..n_workers {
+            let queues = &queues;
+            let f = &f;
+            let stolen = &stolen;
+            let counts = &counts;
+            s.spawn(move || {
+                let owned = own_range(queues.n_items, counts.len(), w);
+                loop {
+                    let item = if steal {
+                        queues.pop(w)
+                    } else {
+                        queues.pop_own(w)
+                    };
+                    let Some(i) = item else { break };
+                    // Track steals: an item is stolen if it fell outside
+                    // the worker's original static range.
+                    if !(owned.0 <= i && i < owned.1) {
+                        stolen.fetch_add(1, Ordering::Relaxed);
+                    }
+                    counts[w].fetch_add(1, Ordering::Relaxed);
+                    f(i, w);
+                }
+            });
+        }
+    });
+    ParallelStats {
+        per_worker: counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+        stolen: stolen.load(Ordering::Relaxed),
+    }
+}
+
+/// The static range worker `w` originally owned for `n` items, `t` workers.
+fn own_range(n: usize, t: usize, w: usize) -> (usize, usize) {
+    let per = n / t;
+    let extra = n % t;
+    let start = w * per + w.min(extra);
+    let len = per + usize::from(w < extra);
+    (start, start + len)
+}
+
+/// Split `0..n` into `chunks` contiguous (start, end) ranges.
+pub fn split_ranges(n: usize, chunks: usize) -> Vec<(usize, usize)> {
+    (0..chunks).map(|w| own_range(n, chunks, w)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn all_items_processed_exactly_once() {
+        for &(n, t) in &[(0usize, 3usize), (1, 4), (17, 4), (1000, 7), (64, 1)] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            parallel_for(n, t, |i, _| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "item {i} for n={n},t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn stealing_balances_skewed_work() {
+        // First quarter of items are 100x heavier; with stealing the
+        // remaining workers should pick up the slack (all items done).
+        let n = 64;
+        let done = AtomicUsize::new(0);
+        let stats = parallel_for(n, 4, |i, _| {
+            let spins = if i < n / 4 { 20_000 } else { 200 };
+            let mut x = i as u64;
+            for _ in 0..spins {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            std::hint::black_box(x);
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(done.load(Ordering::Relaxed), n);
+        assert_eq!(stats.per_worker.iter().sum::<usize>(), n);
+    }
+
+    #[test]
+    fn no_steal_mode_processes_everything() {
+        let n = 100;
+        let done = AtomicUsize::new(0);
+        let stats = parallel_for_opt(n, 3, false, |_, _| {
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(done.load(Ordering::Relaxed), n);
+        assert_eq!(stats.stolen, 0);
+    }
+
+    #[test]
+    fn last_item_claimed_exactly_once_under_contention() {
+        // Regression for the owner/thief double-claim race on the final
+        // item of a range: hammer tiny queues from many threads.
+        for round in 0..200 {
+            let n = 1 + round % 3;
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            let q = OwnedQueues::new(n, 4);
+            std::thread::scope(|s| {
+                for w in 0..4 {
+                    let q = &q;
+                    let hits = &hits;
+                    s.spawn(move || {
+                        while let Some(i) = q.pop(w) {
+                            hits[i].fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "item {i} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_ranges_cover() {
+        let rs = split_ranges(10, 3);
+        assert_eq!(rs, vec![(0, 4), (4, 7), (7, 10)]);
+        let rs = split_ranges(2, 5);
+        assert_eq!(rs.iter().map(|(a, b)| b - a).sum::<usize>(), 2);
+    }
+}

@@ -1,0 +1,170 @@
+//! End-to-end eigensolver validation on realistic (scaled Table-2)
+//! workloads, including the XLA-kernel configuration when artifacts are
+//! present.
+
+use flasheigen::dense::DenseCtx;
+use flasheigen::eigen::{
+    build_gram_operator, solve, svd, EigenConfig, SpmmOperator, Which,
+};
+use flasheigen::graph::Dataset;
+use flasheigen::runtime::{find_artifacts_dir, XlaKernels};
+use flasheigen::safs::{Safs, SafsConfig};
+use flasheigen::sparse::{build_matrix, BuildTarget};
+use flasheigen::spmm::SpmmOpts;
+use std::sync::Arc;
+
+/// 8 eigenvalues of a scaled Friendster in full SEM mode — the paper's
+/// primary workload shape.
+#[test]
+fn friendster_sem_eight_eigenvalues() {
+    let coo = Dataset::Friendster.generate(4e-5, 7);
+    let fs = Safs::new(SafsConfig::untimed());
+    let matrix = build_matrix(&coo, 1024, BuildTarget::Safs(&fs, "a"));
+    let ctx = DenseCtx::with(
+        fs,
+        true,
+        2048,
+        4,
+        8,
+        1,
+        Arc::new(flasheigen::dense::NativeKernels),
+    );
+    let op = SpmmOperator::new(matrix, SpmmOpts::default(), 4);
+    let cfg = EigenConfig {
+        nev: 8,
+        block_size: 1,
+        num_blocks: 16,
+        tol: 1e-6,
+        max_restarts: 500,
+        which: Which::LargestMagnitude,
+        seed: 1,
+        compute_eigenvectors: false,
+    };
+    let res = solve(&op, &ctx, &cfg);
+    assert!(res.converged, "history {:?}", res.history);
+    assert_eq!(res.eigenvalues.len(), 8);
+    // Power-law graph: dominant eigenvalue well separated, ≥ sqrt(dmax).
+    assert!(res.eigenvalues[0].abs() > 2.0);
+    for w in res.eigenvalues.windows(2) {
+        assert!(w[0].abs() >= w[1].abs() - 1e-9, "LM ordering");
+    }
+}
+
+/// SVD of the scaled directed page graph (the Table-3 workload) in SEM
+/// mode: converges, read-dominated I/O.
+#[test]
+fn page_svd_end_to_end() {
+    let coo = Dataset::Page.generate(2e-6, 5);
+    let fs = Safs::new(SafsConfig::untimed());
+    let op = build_gram_operator(&coo, 1024, Some(&fs), SpmmOpts::default(), 3);
+    let ctx = DenseCtx::with(
+        fs.clone(),
+        true,
+        2048,
+        3,
+        8,
+        1,
+        Arc::new(flasheigen::dense::NativeKernels),
+    );
+    let cfg = EigenConfig {
+        nev: 4,
+        block_size: 2,
+        num_blocks: 8,
+        tol: 1e-6,
+        max_restarts: 300,
+        which: Which::LargestAlgebraic,
+        seed: 2,
+        compute_eigenvectors: false,
+    };
+    let before = fs.stats();
+    let res = svd(&op, &ctx, &cfg);
+    let delta = fs.stats().delta_since(&before);
+    assert!(res.converged, "history {:?}", res.history);
+    assert!(res.singular_values.iter().all(|&s| s >= 0.0));
+    assert!(
+        res.singular_values.windows(2).all(|w| w[0] >= w[1] - 1e-9),
+        "descending: {:?}",
+        res.singular_values
+    );
+    assert!(delta.bytes_read > delta.bytes_written, "read-dominated");
+}
+
+/// The same eigenproblem through native and XLA dense kernels must agree
+/// (requires `make artifacts`; skips otherwise).
+#[test]
+fn xla_and_native_kernels_agree_on_eigenvalues() {
+    let Some(dir) = find_artifacts_dir() else {
+        eprintln!("SKIP: artifacts not found");
+        return;
+    };
+    let coo = Dataset::Twitter.generate(2e-5, 3);
+    let mut coo = coo;
+    coo.symmetrize();
+    let run = |xla: bool| {
+        let fs = Safs::new(SafsConfig::untimed());
+        let matrix = build_matrix(&coo, 1024, BuildTarget::Safs(&fs, "a"));
+        let kernels: Arc<dyn flasheigen::dense::DenseKernels> = if xla {
+            Arc::new(XlaKernels::load(&dir).unwrap())
+        } else {
+            Arc::new(flasheigen::dense::NativeKernels)
+        };
+        // interval_rows = 16384 matches the artifact variants.
+        let ctx = DenseCtx::with(fs, true, 16384, 2, 8, 1, kernels);
+        let op = SpmmOperator::new(matrix, SpmmOpts::default(), 2);
+        let cfg = EigenConfig {
+            nev: 4,
+            block_size: 2,
+            num_blocks: 10,
+            tol: 1e-7,
+            max_restarts: 300,
+            which: Which::LargestMagnitude,
+            seed: 4,
+            compute_eigenvectors: false,
+        };
+        solve(&op, &ctx, &cfg)
+    };
+    let native = run(false);
+    let xla = run(true);
+    assert!(native.converged && xla.converged);
+    for (a, b) in native.eigenvalues.iter().zip(&xla.eigenvalues) {
+        assert!(
+            (a - b).abs() < 1e-6 * a.abs().max(1.0),
+            "native {a} vs xla {b}"
+        );
+    }
+}
+
+/// Weighted KNN-style graph end to end (weights flow through the tile
+/// image, SpMM and the solver).
+#[test]
+fn knn_weighted_eigenvalues() {
+    let coo = Dataset::Knn.generate(6e-7, 11);
+    assert!(coo.values.is_some());
+    let fs = Safs::new(SafsConfig::untimed());
+    let matrix = build_matrix(&coo, 512, BuildTarget::Safs(&fs, "knn"));
+    let ctx = DenseCtx::with(
+        fs,
+        true,
+        1024,
+        2,
+        8,
+        1,
+        Arc::new(flasheigen::dense::NativeKernels),
+    );
+    let op = SpmmOperator::new(matrix, SpmmOpts::default(), 2);
+    let cfg = EigenConfig {
+        nev: 4,
+        block_size: 2,
+        num_blocks: 12,
+        tol: 1e-6,
+        max_restarts: 400,
+        which: Which::LargestMagnitude,
+        seed: 6,
+        compute_eigenvectors: false,
+    };
+    let res = solve(&op, &ctx, &cfg);
+    assert!(res.converged, "history {:?}", res.history);
+    // Weighted adjacency with weights ≤ 1: spectral radius ≤ max weighted
+    // degree, and > mean weight.
+    assert!(res.eigenvalues[0] > 0.1);
+}

@@ -1,0 +1,218 @@
+//! Cross-module integration tests: the full pipeline (generator → tile
+//! image on SAFS → SEM SpMM → EM dense ops → eigensolver) composed in
+//! various configurations, with invariants checked at the seams.
+
+use flasheigen::dense::{
+    conv_layout_from_rowmajor, conv_layout_to_rowmajor, mv_norm, mv_trans_mv, DenseCtx,
+    TasMatrix,
+};
+use flasheigen::eigen::{solve, EigenConfig, SpmmOperator, Which};
+use flasheigen::graph::{gnm_undirected, Dataset};
+use flasheigen::harness::BenchCfg;
+use flasheigen::safs::{Safs, SafsConfig};
+use flasheigen::sparse::{build_matrix, BuildTarget};
+use flasheigen::spmm::{spmm, DenseBlock, SpmmOpts};
+use flasheigen::util::prop::assert_close;
+use flasheigen::util::rng::Rng;
+
+/// IM and SEM SpMM must agree bit-for-bit on every Table-2 dataset kind.
+#[test]
+fn sem_equals_im_on_all_datasets() {
+    for ds in Dataset::all() {
+        let coo = ds.generate(2e-5, 99);
+        let n = coo.n_rows as usize;
+        let fs = Safs::new(SafsConfig::untimed());
+        let im = build_matrix(&coo, 512, BuildTarget::Mem);
+        let sem = build_matrix(&coo, 512, BuildTarget::Safs(&fs, "a"));
+        let input = DenseBlock::from_fn(n, 4, 512, true, |r, c| ((r * 7 + c) % 23) as f64 - 11.0);
+        let mut out_im = DenseBlock::new(n, 4, 512, true);
+        let mut out_sem = DenseBlock::new(n, 4, 512, true);
+        spmm(&im, &input, &mut out_im, &SpmmOpts::default(), 3);
+        spmm(&sem, &input, &mut out_sem, &SpmmOpts::default(), 3);
+        assert_eq!(out_im.to_vec(), out_sem.to_vec(), "{}", ds.name());
+    }
+}
+
+/// The eigensolver produces identical eigenvalues whatever the storage
+/// mode or thread count.
+#[test]
+fn eigensolver_storage_and_threads_invariance() {
+    let mut rng = Rng::new(5);
+    let coo = gnm_undirected(400, 2500, &mut rng);
+    let cfg = EigenConfig {
+        nev: 4,
+        block_size: 2,
+        num_blocks: 12,
+        tol: 1e-9,
+        max_restarts: 300,
+        which: Which::LargestMagnitude,
+        seed: 42,
+        compute_eigenvectors: false,
+    };
+    let mut results = Vec::new();
+    for (em, threads) in [(false, 1), (false, 4), (true, 2), (true, 4)] {
+        let fs = Safs::new(SafsConfig::untimed());
+        let matrix = if em {
+            build_matrix(&coo, 128, BuildTarget::Safs(&fs, "a"))
+        } else {
+            build_matrix(&coo, 128, BuildTarget::Mem)
+        };
+        let ctx = DenseCtx::with(
+            fs,
+            em,
+            256,
+            threads,
+            4,
+            1,
+            std::sync::Arc::new(flasheigen::dense::NativeKernels),
+        );
+        let op = SpmmOperator::new(matrix, SpmmOpts::default(), threads);
+        let res = solve(&op, &ctx, &cfg);
+        assert!(res.converged);
+        results.push(res.eigenvalues);
+    }
+    for r in &results[1..] {
+        assert_close(r, &results[0], 1e-9, 1e-9, "invariance").unwrap();
+    }
+}
+
+/// The §3.4.4 matrix cache must not change results, only I/O.
+#[test]
+fn matrix_cache_changes_io_not_results() {
+    let mut rng = Rng::new(6);
+    let coo = gnm_undirected(300, 1800, &mut rng);
+    let run = |cache_slots: usize| {
+        let fs = Safs::new(SafsConfig::untimed());
+        let matrix = build_matrix(&coo, 128, BuildTarget::Safs(&fs, "a"));
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            256,
+            2,
+            4,
+            cache_slots,
+            std::sync::Arc::new(flasheigen::dense::NativeKernels),
+        );
+        let op = SpmmOperator::new(matrix, SpmmOpts::default(), 2);
+        let cfg = EigenConfig {
+            nev: 3,
+            block_size: 1,
+            num_blocks: 10,
+            tol: 1e-8,
+            max_restarts: 300,
+            which: Which::LargestMagnitude,
+            seed: 9,
+            compute_eigenvectors: false,
+        };
+        let res = solve(&op, &ctx, &cfg);
+        (res.eigenvalues, fs.stats().bytes_written)
+    };
+    let (ev_nocache, wr_nocache) = run(0);
+    let (ev_cache, wr_cache) = run(2);
+    assert_close(&ev_cache, &ev_nocache, 1e-9, 1e-9, "cache invariance").unwrap();
+    assert!(
+        wr_cache < wr_nocache,
+        "caching must reduce SSD writes: {wr_cache} vs {wr_nocache}"
+    );
+}
+
+/// ConvLayout round trip composed with SpMM: (TAS → row-major → SpMM →
+/// TAS) is consistent with direct norms/grams of the result.
+#[test]
+fn conv_layout_spmm_composition() {
+    let mut rng = Rng::new(7);
+    let coo = gnm_undirected(500, 3000, &mut rng);
+    let matrix = build_matrix(&coo, 128, BuildTarget::Mem);
+    let ctx = DenseCtx::mem_for_tests(256);
+    let x = TasMatrix::from_fn(&ctx, 500, 3, |r, c| ((r * 5 + c * 3) % 19) as f64 - 9.0);
+    let rm = conv_layout_to_rowmajor(&x, 128, true);
+    let mut out = DenseBlock::new(500, 3, 128, true);
+    spmm(&matrix, &rm, &mut out, &SpmmOpts::default(), 2);
+    let y = conv_layout_from_rowmajor(&ctx, &out);
+    let norms = mv_norm(&y);
+    let out_v = out.to_vec();
+    for j in 0..3 {
+        let direct: f64 = (0..500).map(|i| out_v[i * 3 + j].powi(2)).sum::<f64>().sqrt();
+        assert!((norms[j] - direct).abs() < 1e-9);
+    }
+    // Self-gram is symmetric PSD.
+    let g = mv_trans_mv(1.0, &[&y], &y);
+    for i in 0..3 {
+        for j in 0..3 {
+            assert!((g.at(i, j) - g.at(j, i)).abs() < 1e-9);
+        }
+        assert!(g.at(i, i) >= 0.0);
+    }
+}
+
+/// Timed SAFS runs produce the same numerics as untimed (timing never
+/// leaks into data).
+#[test]
+fn throttling_does_not_change_results() {
+    let mut rng = Rng::new(8);
+    let coo = gnm_undirected(300, 2000, &mut rng);
+    let bench = BenchCfg {
+        scale: 1e-5,
+        threads: 2,
+        dilation: 2.0,
+        tile_dim: 128,
+        interval_rows: 256,
+        seed: 3,
+    };
+    let run = |timed: bool| {
+        let fs = if timed {
+            bench.timed_safs()
+        } else {
+            Safs::new(SafsConfig::untimed())
+        };
+        let matrix = build_matrix(&coo, 128, BuildTarget::Safs(&fs, "a"));
+        let ctx = bench.dense_ctx_native(fs, true);
+        let op = SpmmOperator::new(matrix, SpmmOpts::default(), 2);
+        let cfg = EigenConfig {
+            nev: 2,
+            block_size: 2,
+            num_blocks: 8,
+            tol: 1e-8,
+            max_restarts: 200,
+            which: Which::LargestMagnitude,
+            seed: 4,
+            compute_eigenvectors: false,
+        };
+        solve(&op, &ctx, &cfg).eigenvalues
+    };
+    assert_close(&run(true), &run(false), 1e-12, 1e-12, "throttle").unwrap();
+}
+
+/// Subspace files are cleaned up when the solver finishes (TAS matrices
+/// delete their SAFS files on drop).
+#[test]
+fn subspace_files_are_cleaned_up() {
+    let mut rng = Rng::new(10);
+    let coo = gnm_undirected(300, 1500, &mut rng);
+    let fs = Safs::new(SafsConfig::untimed());
+    let matrix = build_matrix(&coo, 128, BuildTarget::Safs(&fs, "adj"));
+    let ctx = DenseCtx::with(
+        fs.clone(),
+        true,
+        256,
+        2,
+        4,
+        1,
+        std::sync::Arc::new(flasheigen::dense::NativeKernels),
+    );
+    let op = SpmmOperator::new(matrix, SpmmOpts::default(), 2);
+    let cfg = EigenConfig {
+        nev: 2,
+        block_size: 1,
+        num_blocks: 8,
+        tol: 1e-7,
+        max_restarts: 200,
+        which: Which::LargestMagnitude,
+        seed: 11,
+        compute_eigenvectors: false,
+    };
+    let res = solve(&op, &ctx, &cfg);
+    assert!(res.converged);
+    // Only the adjacency image should remain.
+    assert_eq!(fs.list(), vec!["adj".to_string()]);
+}

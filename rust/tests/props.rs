@@ -1,0 +1,234 @@
+//! Property-based tests over coordinator invariants: routing of items to
+//! workers, batching/partitioning, and state management (what `proptest`
+//! would cover, via the in-tree `util::prop` substrate).
+
+use flasheigen::dense::{mv_norm, mv_scale, mv_trans_mv, tas::mv_random, DenseCtx, TasMatrix};
+use flasheigen::eigen::sym_eig;
+use flasheigen::graph::{gnm, gnm_undirected};
+use flasheigen::safs::{Safs, SafsConfig, StripeMap};
+use flasheigen::sparse::{build_matrix, build_matrix_opts, BuildTarget, CsrMatrix};
+use flasheigen::spmm::{spmm, spmm_csr, DenseBlock, SpmmOpts};
+use flasheigen::util::prop::{assert_close, run_prop};
+use flasheigen::util::rng::Rng;
+use flasheigen::util::threadpool::{parallel_for, split_ranges};
+
+#[test]
+fn prop_owned_queue_routing_complete_and_unique() {
+    run_prop("routing", 40, |g| {
+        let n = g.usize_in(0, 500);
+        let t = g.usize_in(1, 8);
+        let hits: Vec<std::sync::atomic::AtomicU32> =
+            (0..n).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+        parallel_for(n, t, |i, _| {
+            hits[i].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            if h.load(std::sync::atomic::Ordering::Relaxed) != 1 {
+                return Err(format!("item {i} routed {} times", h.load(std::sync::atomic::Ordering::Relaxed)));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_split_ranges_partition() {
+    run_prop("split-ranges", 60, |g| {
+        let n = g.usize_in(0, 10_000);
+        let k = g.usize_in(1, 64);
+        let rs = split_ranges(n, k);
+        let mut pos = 0;
+        for (s, e) in rs {
+            if s != pos || e < s {
+                return Err(format!("bad range ({s},{e}) at {pos}"));
+            }
+            pos = e;
+        }
+        if pos != n {
+            return Err(format!("covered {pos} of {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stripe_covers_all_devices_evenly() {
+    run_prop("stripe-balance", 30, |g| {
+        let devices = g.usize_in(1, 32);
+        let mut rng = Rng::new(g.u64());
+        let s = StripeMap::random(devices, 4096, &mut rng);
+        let mut counts = vec![0usize; devices];
+        let blocks = devices * 64;
+        for b in 0..blocks as u64 {
+            counts[s.device_for(b)] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        if max - min > 1 {
+            return Err(format!("imbalance {min}..{max} over {devices} devices"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_safs_write_read_any_alignment() {
+    run_prop("safs-rw", 25, |g| {
+        let mut cfg = SafsConfig::untimed();
+        cfg.num_ssds = g.usize_in(1, 8);
+        cfg.stripe_block = *g.choose(&[64usize, 1000, 4096]);
+        cfg.max_io_size = *g.choose(&[128usize, 1 << 20]);
+        cfg.io_threads = g.usize_in(0, 3);
+        let fs = Safs::new(cfg);
+        let f = fs.create("x");
+        let off = g.usize_in(0, 10_000) as u64;
+        let len = g.usize_in(1, 20_000);
+        let data: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
+        fs.write_sync(&f, off, data.clone());
+        let out = fs.read_sync(&f, off, len);
+        if out != data {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmm_linear_in_input() {
+    // A(x + αy) = Ax + αAy — linearity through the whole tiled engine.
+    run_prop("spmm-linear", 10, |g| {
+        let n = g.usize_in(2, 400) as u64;
+        let mut rng = Rng::new(g.u64());
+        let coo = gnm(n, (n * 3).min(n * (n - 1)), &mut rng);
+        let m = build_matrix(&coo, 64, BuildTarget::Mem);
+        let nn = n as usize;
+        let alpha = g.f64_in(-2.0, 2.0);
+        let x = DenseBlock::from_fn(nn, 2, 64, true, |r, c| ((r + c) % 7) as f64);
+        let y = DenseBlock::from_fn(nn, 2, 64, true, |r, c| ((r * 3 + c) % 5) as f64);
+        let combo = DenseBlock::from_fn(nn, 2, 64, true, |r, c| {
+            ((r + c) % 7) as f64 + alpha * ((r * 3 + c) % 5) as f64
+        });
+        let mut ax = DenseBlock::new(nn, 2, 64, true);
+        let mut ay = DenseBlock::new(nn, 2, 64, true);
+        let mut acombo = DenseBlock::new(nn, 2, 64, true);
+        let opts = SpmmOpts::default();
+        spmm(&m, &x, &mut ax, &opts, 2);
+        spmm(&m, &y, &mut ay, &opts, 2);
+        spmm(&m, &combo, &mut acombo, &opts, 2);
+        let expect: Vec<f64> = ax
+            .to_vec()
+            .iter()
+            .zip(ay.to_vec().iter())
+            .map(|(a, b)| a + alpha * b)
+            .collect();
+        assert_close(&acombo.to_vec(), &expect, 1e-9, 1e-9, "linearity")
+    });
+}
+
+#[test]
+fn prop_tiled_equals_csr_all_encodings() {
+    run_prop("tiled-vs-csr", 10, |g| {
+        let n = g.usize_in(2, 500) as u64;
+        let mut rng = Rng::new(g.u64());
+        let coo = gnm(n, (n * 4).min(n * (n - 1)), &mut rng);
+        let csr = CsrMatrix::from_coo(&coo);
+        let coo_hybrid = g.bool();
+        let tile = *g.choose(&[32usize, 128]);
+        let tiled = build_matrix_opts(&coo, tile, BuildTarget::Mem, coo_hybrid);
+        let nn = n as usize;
+        let b = g.usize_in(1, 6);
+        let input = DenseBlock::from_fn(nn, b, tile, true, |r, c| ((r * 11 + c) % 13) as f64 - 6.0);
+        let mut out_csr = DenseBlock::new(nn, b, tile, true);
+        let mut out_tiled = DenseBlock::new(nn, b, tile, true);
+        spmm_csr(&csr, &input, &mut out_csr, 2, g.bool());
+        spmm(&tiled, &input, &mut out_tiled, &SpmmOpts::default(), 2);
+        assert_close(&out_tiled.to_vec(), &out_csr.to_vec(), 1e-9, 1e-9, "formats")
+    });
+}
+
+#[test]
+fn prop_gram_matrix_psd_and_symmetric() {
+    run_prop("gram-psd", 10, |g| {
+        let n = g.usize_in(4, 300);
+        let b = g.usize_in(1, 4);
+        let em = g.bool();
+        let ctx = if em {
+            DenseCtx::em_for_tests(64)
+        } else {
+            DenseCtx::mem_for_tests(64)
+        };
+        let x = TasMatrix::zeros(&ctx, n, b);
+        mv_random(&x, g.u64());
+        let gm = mv_trans_mv(1.0, &[&x], &x);
+        for i in 0..b {
+            for j in 0..b {
+                if (gm.at(i, j) - gm.at(j, i)).abs() > 1e-10 {
+                    return Err("not symmetric".into());
+                }
+            }
+        }
+        let (vals, _) = sym_eig(&gm);
+        if vals.iter().any(|&v| v < -1e-9) {
+            return Err(format!("negative eigenvalue {vals:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scale_scales_norms() {
+    run_prop("scale-norm", 15, |g| {
+        let n = g.usize_in(1, 500);
+        let alpha = g.f64_in(-3.0, 3.0);
+        let ctx = DenseCtx::mem_for_tests(128);
+        let x = TasMatrix::zeros(&ctx, n, 2);
+        mv_random(&x, g.u64());
+        let y = TasMatrix::zeros(&ctx, n, 2);
+        mv_scale(alpha, &x, &y);
+        let nx = mv_norm(&x);
+        let ny = mv_norm(&y);
+        for j in 0..2 {
+            if (ny[j] - alpha.abs() * nx[j]).abs() > 1e-9 * (1.0 + nx[j]) {
+                return Err(format!("‖αx‖ != |α|‖x‖ at col {j}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eigenvalues_within_gershgorin() {
+    // All Ritz values of an adjacency matrix lie within [-Δ, Δ] where Δ
+    // is the max degree (Gershgorin / spectral radius bound).
+    run_prop("gershgorin", 5, |g| {
+        let n = g.usize_in(50, 200) as u64;
+        let mut rng = Rng::new(g.u64());
+        let coo = gnm_undirected(n, n * 2, &mut rng);
+        let max_deg = {
+            let mut d = vec![0u32; n as usize];
+            for &(r, _) in &coo.entries {
+                d[r as usize] += 1;
+            }
+            *d.iter().max().unwrap() as f64
+        };
+        let matrix = build_matrix(&coo, 64, BuildTarget::Mem);
+        let ctx = DenseCtx::mem_for_tests(128);
+        let op = flasheigen::eigen::SpmmOperator::new(matrix, SpmmOpts::default(), 2);
+        let cfg = flasheigen::eigen::EigenConfig {
+            nev: 2,
+            block_size: 2,
+            num_blocks: 8,
+            tol: 1e-6,
+            max_restarts: 150,
+            which: flasheigen::eigen::Which::LargestMagnitude,
+            seed: g.u64(),
+            compute_eigenvectors: false,
+        };
+        let res = flasheigen::eigen::solve(&op, &ctx, &cfg);
+        for &ev in &res.eigenvalues {
+            if ev.abs() > max_deg + 1e-6 {
+                return Err(format!("eigenvalue {ev} outside Gershgorin bound {max_deg}"));
+            }
+        }
+        Ok(())
+    });
+}

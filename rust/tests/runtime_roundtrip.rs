@@ -1,0 +1,130 @@
+//! End-to-end AOT bridge test: JAX/Pallas-lowered HLO artifacts loaded
+//! and executed through the PJRT CPU client must match the native Rust
+//! kernels (same f64 math up to XLA reduction order — tolerances tiny).
+//!
+//! Requires `make artifacts` to have run (skips with a message if not).
+
+use flasheigen::dense::kernels::{DenseKernels, NativeKernels};
+use flasheigen::dense::SmallMat;
+use flasheigen::runtime::{find_artifacts_dir, XlaKernels};
+use flasheigen::util::prop::assert_close;
+use flasheigen::util::rng::Rng;
+
+fn kernels() -> Option<XlaKernels> {
+    let dir = match find_artifacts_dir() {
+        Some(d) => d,
+        None => {
+            eprintln!("SKIP: artifacts/ not found; run `make artifacts`");
+            return None;
+        }
+    };
+    Some(XlaKernels::load(&dir).expect("load artifacts"))
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect()
+}
+
+#[test]
+fn xla_tsgemm_matches_native_on_artifact_shapes() {
+    let Some(xk) = kernels() else { return };
+    let mut rng = Rng::new(42);
+    for &(rows, m, b) in &[
+        (16384usize, 1usize, 1usize),
+        (16384, 4, 4),
+        (16384, 8, 2),
+        (65536, 2, 4),
+    ] {
+        let x = rand_vec(&mut rng, rows * m);
+        let bmat = SmallMat::from_fn(m, b, |r, c| ((r * 3 + c) % 5) as f64 - 2.0);
+        let mut out_xla = rand_vec(&mut rng, rows * b);
+        let mut out_native = out_xla.clone();
+        xk.tsgemm(&x, rows, m, &bmat, &mut out_xla);
+        NativeKernels.tsgemm(&x, rows, m, &bmat, &mut out_native);
+        assert_close(&out_xla, &out_native, 1e-12, 1e-12, "tsgemm").unwrap();
+    }
+    assert!(xk.stats.xla_calls.get() >= 4, "artifact dispatch did not happen");
+    assert_eq!(xk.stats.native_calls.get(), 0);
+}
+
+#[test]
+fn xla_gram_matches_native_on_artifact_shapes() {
+    let Some(xk) = kernels() else { return };
+    let mut rng = Rng::new(43);
+    for &(rows, m, b, alpha) in &[
+        (16384usize, 2usize, 2usize, 1.0f64),
+        (16384, 4, 8, -0.5),
+        (65536, 8, 8, 2.0),
+    ] {
+        let x = rand_vec(&mut rng, rows * m);
+        let y = rand_vec(&mut rng, rows * b);
+        let mut g_xla = SmallMat::from_fn(m, b, |r, c| (r + c) as f64 * 0.1);
+        let mut g_native = g_xla.clone();
+        xk.gram(alpha, &x, &y, rows, m, b, &mut g_xla);
+        NativeKernels.gram(alpha, &x, &y, rows, m, b, &mut g_native);
+        // Different accumulation order (XLA reduces blockwise): tolerance
+        // scales with the reduction length.
+        assert_close(&g_xla.data, &g_native.data, 1e-10, 1e-12 * rows as f64, "gram").unwrap();
+    }
+    assert!(xk.stats.xla_calls.get() >= 3);
+}
+
+#[test]
+fn unknown_shapes_fall_back_to_native() {
+    let Some(xk) = kernels() else { return };
+    let mut rng = Rng::new(44);
+    // rows=1000 is not an artifact variant.
+    let (rows, m, b) = (1000usize, 3usize, 3usize);
+    let x = rand_vec(&mut rng, rows * m);
+    let bmat = SmallMat::identity(3);
+    let mut out = vec![0.0; rows * b];
+    xk.tsgemm(&x, rows, m, &bmat, &mut out);
+    assert_close(&out, &x, 0.0, 0.0, "identity fallback").unwrap();
+    assert_eq!(xk.stats.xla_calls.get(), 0);
+    assert_eq!(xk.stats.native_calls.get(), 1);
+}
+
+#[test]
+fn dense_ops_work_with_xla_kernels_end_to_end() {
+    use flasheigen::dense::{mv_times_mat_add_mv, mv_trans_mv, DenseCtx, TasMatrix};
+    use flasheigen::safs::{Safs, SafsConfig};
+    use std::sync::Arc;
+
+    let Some(xk) = kernels() else { return };
+    let fs = Safs::new(SafsConfig::untimed());
+    // interval_rows = 16384 matches the artifact `rows` so every full
+    // interval dispatches to XLA.
+    let ctx = DenseCtx::with(fs, true, 16384, 2, 4, 1, Arc::new(xk));
+    let n = 16384 * 2 + 100; // two full intervals + a native-fallback tail
+    let x = TasMatrix::from_fn(&ctx, n, 4, |r, c| ((r % 97) as f64 - 48.0) * 0.01 + c as f64);
+    let y = TasMatrix::from_fn(&ctx, n, 4, |r, c| ((r % 89) as f64) * 0.01 - c as f64);
+
+    let g = mv_trans_mv(1.0, &[&x], &y);
+
+    // Reference with native kernels on a separate (in-memory) context.
+    let fs2 = Safs::new(SafsConfig::untimed());
+    let ctx2 = DenseCtx::with(
+        fs2,
+        false,
+        16384,
+        2,
+        4,
+        1,
+        Arc::new(flasheigen::dense::NativeKernels),
+    );
+    let x2 = TasMatrix::from_fn(&ctx2, n, 4, |r, c| ((r % 97) as f64 - 48.0) * 0.01 + c as f64);
+    let y2 = TasMatrix::from_fn(&ctx2, n, 4, |r, c| ((r % 89) as f64) * 0.01 - c as f64);
+    let g2 = mv_trans_mv(1.0, &[&x2], &y2);
+    assert_close(&g.data, &g2.data, 1e-9, 1e-6, "op3 xla-vs-native").unwrap();
+
+    let cc = TasMatrix::zeros(&ctx, n, 4);
+    mv_times_mat_add_mv(1.0, &[&x], &SmallMat::identity(4), 0.0, &cc);
+    assert_close(
+        &cc.to_colmajor(),
+        &x.to_colmajor(),
+        1e-12,
+        1e-12,
+        "op1 identity",
+    )
+    .unwrap();
+}
