@@ -15,6 +15,10 @@ fn main() {
         eprintln!("SKIP: artifacts/ not found; run `make artifacts`");
         return;
     };
+    if let Err(e) = XlaKernels::load(&dir) {
+        eprintln!("SKIP: {e}");
+        return;
+    }
     let mut t = Table::new(
         "Ablation: native kernels vs XLA/PJRT artifacts (op1 + op3)",
         &["op", "m", "b", "native", "xla-pjrt", "native/xla"],

@@ -1,10 +1,12 @@
 //! Figure 9: I/O optimization ablation on external-memory dense matrix
-//! multiplication (MvTransMv form).
-use flasheigen::harness::{fig9, BenchCfg};
+//! multiplication (MvTransMv form), plus the §3.4 lazy-evaluation
+//! fusion ablation on CGS2 reorthogonalization (Figure 9b).
+use flasheigen::harness::{fig9, fig9_fusion, BenchCfg};
 
 fn main() {
     let cfg = BenchCfg::from_env();
     // Paper: n=60M scaled; m=64 vectors of width 4.
     let n = (60_000_000.0 * cfg.scale * 16.0) as usize;
     fig9(&cfg, n.max(4096), 64, 4).print();
+    fig9_fusion(&cfg, n.max(4096), 64, 4).print();
 }

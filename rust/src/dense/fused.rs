@@ -1,0 +1,711 @@
+//! Lazy-evaluation fused pipelines over TAS matrices (§3.4 "lazy
+//! evaluation" / SEM-SpMM-style operation fusion).
+//!
+//! The eager Table-1 operations in [`super::ops`] each stream their full
+//! operands through SAFS independently, so a chain of k MultiVec ops over
+//! an SSD-backed subspace costs k complete read passes (and up to k write
+//! passes).  A [`FusedPipeline`] instead *records* a chain of operations
+//! as a small expression DAG and executes it with one call to
+//! [`FusedPipeline::materialize`], which walks each row interval exactly
+//! once:
+//!
+//! 1. every distinct operand matrix's interval is loaded **once** (all
+//!    SSD reads issued asynchronously before the first wait),
+//! 2. the whole chain is applied in RAM, later steps seeing the values
+//!    produced by earlier steps of the same pipeline,
+//! 3. each mutated matrix's interval is written back **once**.
+//!
+//! Reductions (`gram`, `dot`/`norm`) accumulate into per-worker partials
+//! and become available after `materialize` returns.  A step that needs
+//! a *completed* reduction (e.g. the CGS2 projection update needs the
+//! full coefficient matrix `c = Vᵀx`) therefore belongs in the *next*
+//! pipeline — the reduction barrier is explicit in caller code, never
+//! hidden.  `eigen::ortho` composes two pipelines into a CGS2 round that
+//! reads the subspace once per round instead of twice (see there for the
+//! BCGS2-PIP reformulation).
+//!
+//! Memory: one walk holds one row interval of every distinct operand per
+//! worker (the eager path's §3.4.3 group bound applies per step; a fused
+//! walk's bound is the pipeline's total distinct width).  Pipelines over
+//! very wide operand sets should be split by the caller; the eigensolver
+//! chains stay within a few hundred columns.
+//!
+//! ```
+//! # use flasheigen::dense::{DenseCtx, TasMatrix, SmallMat, FusedPipeline};
+//! # let ctx = DenseCtx::mem_for_tests(64);
+//! # let v = TasMatrix::from_fn(&ctx, 100, 2, |r, c| (r + c) as f64);
+//! # let x = TasMatrix::from_fn(&ctx, 100, 2, |r, _| r as f64);
+//! let mut p = FusedPipeline::new(x.ctx());
+//! let h = p.gram(1.0, &[&v], &x);        // c = Vᵀx   (reduction)
+//! let results = p.materialize();          // one walk over V and x
+//! let c = results.gram(h);
+//! let mut p2 = FusedPipeline::new(x.ctx());
+//! p2.gemm_update(-1.0, &[&v], c.clone(), 1.0, &x); // x -= V·c
+//! p2.materialize();                       // one walk, one write pass
+//! ```
+
+use super::ops::{make_pools, total_cols};
+use super::small::SmallMat;
+use super::tas::{DenseCtx, Fetch, IntervalGuard, TasMatrix};
+use crate::util::threadpool::parallel_for;
+use std::sync::{Arc, Mutex};
+
+/// Handle to a deferred `gram` reduction result.
+#[derive(Clone, Copy, Debug)]
+pub struct GramHandle(usize);
+
+/// Handle to a deferred `dot`/`norm` reduction result.
+#[derive(Clone, Copy, Debug)]
+pub struct DotHandle(usize);
+
+/// One recorded operation.  Matrices are indices into the pipeline's
+/// distinct-operand registry, so aliasing handles resolve to one load.
+enum Step {
+    /// `target ← Σ aa·bsmall + beta·target` (op1; `bsmall` pre-scaled by
+    /// the caller's alpha at record time).
+    Gemm { aa: Vec<usize>, bsmall: SmallMat, beta: f64, target: usize },
+    /// `target ← alpha·x + beta·y` (MvAddMv; also MvScale1 with y = x,
+    /// beta = 0).
+    Axpby { alpha: f64, x: usize, beta: f64, y: usize, target: usize },
+    /// `target ← src · diag(d)` (MvScale2).
+    ScaleDiag { diag: Vec<f64>, src: usize, target: usize },
+    /// `grams[out] += alpha · aaᵀ · bb` (op3 reduction).
+    Gram { alpha: f64, aa: Vec<usize>, bb: usize, out: usize },
+    /// `dots[out][j] += Σ_i a[i,j]·b[i,j]` (MvDot reduction).
+    Dot { a: usize, b: usize, out: usize },
+}
+
+impl Step {
+    /// Operand indices read by this step (used by the load planner).
+    fn reads(&self) -> Vec<usize> {
+        match self {
+            Step::Gemm { aa, beta, target, .. } => {
+                let mut r = aa.clone();
+                if *beta != 0.0 {
+                    r.push(*target);
+                }
+                r
+            }
+            Step::Axpby { x, beta, y, .. } => {
+                // beta = 0 (pure scale) never reads y — don't load it.
+                if *beta != 0.0 {
+                    vec![*x, *y]
+                } else {
+                    vec![*x]
+                }
+            }
+            Step::ScaleDiag { src, .. } => vec![*src],
+            Step::Gram { aa, bb, .. } => {
+                let mut r = aa.clone();
+                r.push(*bb);
+                r
+            }
+            Step::Dot { a, b, .. } => vec![*a, *b],
+        }
+    }
+
+    /// Operand index written by this step, if any.
+    fn writes(&self) -> Option<usize> {
+        match self {
+            Step::Gemm { target, .. }
+            | Step::Axpby { target, .. }
+            | Step::ScaleDiag { target, .. } => Some(*target),
+            Step::Gram { .. } | Step::Dot { .. } => None,
+        }
+    }
+}
+
+/// A recorded chain of MultiVec operations, executed by one interval walk.
+pub struct FusedPipeline<'a> {
+    ctx: Arc<DenseCtx>,
+    /// Distinct physical matrices touched by the chain.
+    mats: Vec<&'a TasMatrix>,
+    steps: Vec<Step>,
+    gram_shapes: Vec<(usize, usize)>,
+    dot_lens: Vec<usize>,
+}
+
+/// Reduction results of one materialized pipeline.
+pub struct FusedResults {
+    grams: Vec<SmallMat>,
+    dots: Vec<Vec<f64>>,
+}
+
+impl FusedResults {
+    pub fn gram(&self, h: GramHandle) -> &SmallMat {
+        &self.grams[h.0]
+    }
+
+    pub fn take_gram(&mut self, h: GramHandle) -> SmallMat {
+        std::mem::replace(&mut self.grams[h.0], SmallMat::zeros(0, 0))
+    }
+
+    pub fn dot(&self, h: DotHandle) -> &[f64] {
+        &self.dots[h.0]
+    }
+
+    /// Column 2-norms from a `norm` (self-dot) reduction.
+    pub fn norms(&self, h: DotHandle) -> Vec<f64> {
+        self.dots[h.0].iter().map(|&x| x.max(0.0).sqrt()).collect()
+    }
+}
+
+impl<'a> FusedPipeline<'a> {
+    pub fn new(ctx: &Arc<DenseCtx>) -> FusedPipeline<'a> {
+        FusedPipeline {
+            ctx: ctx.clone(),
+            mats: Vec::new(),
+            steps: Vec::new(),
+            gram_shapes: Vec::new(),
+            dot_lens: Vec::new(),
+        }
+    }
+
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Register a matrix, deduplicating by physical storage.
+    fn reg(&mut self, m: &'a TasMatrix) -> usize {
+        assert!(
+            Arc::ptr_eq(m.ctx(), &self.ctx),
+            "pipeline operands must share one DenseCtx"
+        );
+        if let Some(first) = self.mats.first() {
+            assert_eq!(m.n_rows, first.n_rows, "fused operand row mismatch");
+            assert_eq!(
+                m.interval_rows(),
+                first.interval_rows(),
+                "fused operand interval mismatch"
+            );
+        }
+        match self.mats.iter().position(|d| d.shares_storage(m)) {
+            Some(i) => i,
+            None => {
+                self.mats.push(m);
+                self.mats.len() - 1
+            }
+        }
+    }
+
+    /// op1 — record `target ← alpha·AA·bsmall + beta·target`.
+    pub fn gemm_update(
+        &mut self,
+        alpha: f64,
+        aa: &[&'a TasMatrix],
+        bsmall: SmallMat,
+        beta: f64,
+        target: &'a TasMatrix,
+    ) {
+        assert_eq!(total_cols(aa), bsmall.rows, "fused gemm inner dim");
+        assert_eq!(target.n_cols, bsmall.cols, "fused gemm output width");
+        let aa: Vec<usize> = aa.iter().map(|m| self.reg(m)).collect();
+        let target = self.reg(target);
+        let mut bs = bsmall;
+        bs.scale(alpha);
+        self.steps.push(Step::Gemm { aa, bsmall: bs, beta, target });
+    }
+
+    /// MvAddMv — record `target ← alpha·x + beta·y`.
+    pub fn axpby(
+        &mut self,
+        alpha: f64,
+        x: &'a TasMatrix,
+        beta: f64,
+        y: &'a TasMatrix,
+        target: &'a TasMatrix,
+    ) {
+        assert_eq!(x.n_cols, y.n_cols, "fused axpby width");
+        assert_eq!(x.n_cols, target.n_cols, "fused axpby output width");
+        let (x, y, target) = (self.reg(x), self.reg(y), self.reg(target));
+        self.steps.push(Step::Axpby { alpha, x, beta, y, target });
+    }
+
+    /// MvScale1 — record `target ← alpha·src`.
+    pub fn scale(&mut self, alpha: f64, src: &'a TasMatrix, target: &'a TasMatrix) {
+        self.axpby(alpha, src, 0.0, src, target);
+    }
+
+    /// MvScale2 — record `target ← src · diag(d)` (e.g. column
+    /// normalization by reciprocal norms).
+    pub fn scale_diag(&mut self, diag: &[f64], src: &'a TasMatrix, target: &'a TasMatrix) {
+        assert_eq!(diag.len(), src.n_cols, "fused scale_diag width");
+        assert_eq!(src.n_cols, target.n_cols, "fused scale_diag output width");
+        let (src, target) = (self.reg(src), self.reg(target));
+        self.steps.push(Step::ScaleDiag { diag: diag.to_vec(), src, target });
+    }
+
+    /// op3 — record the reduction `alpha · AAᵀ · bb`; the result reflects
+    /// any updates recorded earlier in this pipeline.
+    pub fn gram(&mut self, alpha: f64, aa: &[&'a TasMatrix], bb: &'a TasMatrix) -> GramHandle {
+        let shape = (total_cols(aa), bb.n_cols);
+        let aa: Vec<usize> = aa.iter().map(|m| self.reg(m)).collect();
+        let bb = self.reg(bb);
+        let out = self.gram_shapes.len();
+        self.gram_shapes.push(shape);
+        self.steps.push(Step::Gram { alpha, aa, bb, out });
+        GramHandle(out)
+    }
+
+    /// MvDot — record the columnwise inner-product reduction.
+    pub fn dot(&mut self, a: &'a TasMatrix, b: &'a TasMatrix) -> DotHandle {
+        assert_eq!(a.n_cols, b.n_cols, "fused dot width");
+        let (a, b) = (self.reg(a), self.reg(b));
+        let out = self.dot_lens.len();
+        self.dot_lens.push(self.mats[a].n_cols);
+        self.steps.push(Step::Dot { a, b, out });
+        DotHandle(out)
+    }
+
+    /// MvNorm — record the column-norm reduction (read back with
+    /// [`FusedResults::norms`]).
+    pub fn norm(&mut self, a: &'a TasMatrix) -> DotHandle {
+        self.dot(a, a)
+    }
+
+    /// Execute the chain with a single walk over the row intervals.
+    pub fn materialize(self) -> FusedResults {
+        let ctx = self.ctx.clone();
+        let zero_grams = || -> Vec<SmallMat> {
+            self.gram_shapes.iter().map(|&(r, c)| SmallMat::zeros(r, c)).collect()
+        };
+        let zero_dots =
+            || -> Vec<Vec<f64>> { self.dot_lens.iter().map(|&l| vec![0.0; l]).collect() };
+        if self.mats.is_empty() {
+            return FusedResults { grams: zero_grams(), dots: zero_dots() };
+        }
+
+        // Load plan: an operand needs its prior contents only if some
+        // step reads it before the chain has fully overwritten it.
+        let n_mats = self.mats.len();
+        let mut needs_load = vec![false; n_mats];
+        let mut written = vec![false; n_mats];
+        for step in &self.steps {
+            for r in step.reads() {
+                if !written[r] {
+                    needs_load[r] = true;
+                }
+            }
+            if let Some(t) = step.writes() {
+                written[t] = true;
+            }
+        }
+
+        struct Acc {
+            grams: Vec<SmallMat>,
+            dots: Vec<Vec<f64>>,
+        }
+        let workers = ctx.threads.max(1);
+        let accs: Vec<Mutex<Acc>> = (0..workers)
+            .map(|_| Mutex::new(Acc { grams: zero_grams(), dots: zero_dots() }))
+            .collect();
+        let pools = make_pools(&ctx);
+        let n_intervals = self.mats[0].n_intervals();
+
+        parallel_for(n_intervals, ctx.threads, |iv, w| {
+            let mut pool = pools[w].lock().unwrap();
+            let rows = self.mats[0].interval_len(iv);
+            // Issue every SSD read of this interval before waiting on any
+            // (keeps all devices of the array busy, §3.4.3).
+            let fetches: Vec<Option<Fetch>> = self
+                .mats
+                .iter()
+                .enumerate()
+                .map(|(i, m)| needs_load[i].then(|| m.fetch_interval(iv, &mut pool)))
+                .collect();
+            let mut guards: Vec<Option<IntervalGuard>> =
+                fetches.into_iter().map(|f| f.map(Fetch::finish)).collect();
+            // Written matrices compute in working buffers; copying out
+            // releases resident guards up front so the final store never
+            // contends with our own slot locks.
+            let mut work: Vec<Option<Vec<f64>>> = vec![None; n_mats];
+            for i in 0..n_mats {
+                if written[i] {
+                    work[i] = Some(match guards[i].take() {
+                        Some(g) => {
+                            let v = g.to_vec();
+                            g.recycle(&mut pool);
+                            v
+                        }
+                        None => vec![0.0; rows * self.mats[i].n_cols],
+                    });
+                }
+            }
+
+            for step in &self.steps {
+                match step {
+                    Step::Gemm { aa, bsmall, beta, target } => {
+                        let b = bsmall.cols;
+                        let mut out = vec![0.0; rows * b];
+                        {
+                            let view = |i: usize| {
+                                work[i].as_deref().unwrap_or_else(|| guards[i].as_deref().unwrap())
+                            };
+                            if *beta != 0.0 {
+                                for (o, &x) in out.iter_mut().zip(view(*target)) {
+                                    *o = beta * x;
+                                }
+                            }
+                            let mut col_off = 0usize;
+                            for &ai in aa {
+                                let m = self.mats[ai].n_cols;
+                                let bsub = bsmall.row_block(col_off, m);
+                                ctx.kernels.tsgemm(view(ai), rows, m, &bsub, &mut out);
+                                col_off += m;
+                            }
+                        }
+                        work[*target] = Some(out);
+                    }
+                    Step::Axpby { alpha, x, beta, y, target } => {
+                        let cols = self.mats[*target].n_cols;
+                        let mut out = vec![0.0; rows * cols];
+                        {
+                            let view = |i: usize| {
+                                work[i].as_deref().unwrap_or_else(|| guards[i].as_deref().unwrap())
+                            };
+                            let xs = view(*x);
+                            // beta = 0: y was never loaded (see
+                            // Step::reads); pass x, axpby_into ignores it.
+                            let ys = if *beta != 0.0 { view(*y) } else { xs };
+                            ctx.kernels.axpby_into(*alpha, xs, *beta, ys, &mut out);
+                        }
+                        work[*target] = Some(out);
+                    }
+                    Step::ScaleDiag { diag, src, target } => {
+                        let cols = self.mats[*target].n_cols;
+                        let mut out = vec![0.0; rows * cols];
+                        {
+                            let view = |i: usize| {
+                                work[i].as_deref().unwrap_or_else(|| guards[i].as_deref().unwrap())
+                            };
+                            ctx.kernels.scale_diag_into(diag, view(*src), &mut out);
+                        }
+                        work[*target] = Some(out);
+                    }
+                    Step::Gram { alpha, aa, bb, out } => {
+                        let view = |i: usize| {
+                            work[i].as_deref().unwrap_or_else(|| guards[i].as_deref().unwrap())
+                        };
+                        let bcols = self.mats[*bb].n_cols;
+                        let mut acc = accs[w].lock().unwrap();
+                        let gm = &mut acc.grams[*out];
+                        let mut col_off = 0usize;
+                        for &ai in aa {
+                            let m = self.mats[ai].n_cols;
+                            let mut sub = gm.row_block(col_off, m);
+                            ctx.kernels.gram(*alpha, view(ai), view(*bb), rows, m, bcols, &mut sub);
+                            gm.set_block(col_off, 0, &sub);
+                            col_off += m;
+                        }
+                    }
+                    Step::Dot { a, b, out } => {
+                        let view = |i: usize| {
+                            work[i].as_deref().unwrap_or_else(|| guards[i].as_deref().unwrap())
+                        };
+                        let (av, bv) = (view(*a), view(*b));
+                        let cols = self.mats[*a].n_cols;
+                        let mut acc = accs[w].lock().unwrap();
+                        let d = &mut acc.dots[*out];
+                        for j in 0..cols {
+                            let mut s = 0.0;
+                            for i in 0..rows {
+                                s += av[j * rows + i] * bv[j * rows + i];
+                            }
+                            d[j] += s;
+                        }
+                    }
+                }
+            }
+
+            // One write per mutated matrix per interval.
+            for i in 0..n_mats {
+                if let Some(data) = work[i].take() {
+                    self.mats[i].store_interval(iv, data);
+                }
+            }
+            for g in guards.into_iter().flatten() {
+                g.recycle(&mut pool);
+            }
+        });
+
+        // Reduce per-worker partials.
+        let mut grams = zero_grams();
+        let mut dots = zero_dots();
+        for acc in accs {
+            let acc = acc.into_inner().unwrap();
+            for (g, p) in grams.iter_mut().zip(acc.grams) {
+                for (x, y) in g.data.iter_mut().zip(&p.data) {
+                    *x += y;
+                }
+            }
+            for (d, p) in dots.iter_mut().zip(acc.dots) {
+                for (x, y) in d.iter_mut().zip(&p) {
+                    *x += y;
+                }
+            }
+        }
+        FusedResults { grams, dots }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::ops::{mv_add_mv, mv_dot, mv_norm, mv_times_mat_add_mv, mv_trans_mv};
+    use crate::dense::tas::mv_random;
+    use crate::util::prop::assert_close;
+
+    fn ctxs() -> Vec<Arc<DenseCtx>> {
+        vec![DenseCtx::mem_for_tests(64), DenseCtx::em_for_tests(64)]
+    }
+
+    #[test]
+    fn fused_gemm_matches_eager_op1() {
+        for ctx in ctxs() {
+            let n = 300;
+            let a0 = TasMatrix::from_fn(&ctx, n, 2, |r, c| ((r + c) % 5) as f64 - 2.0);
+            let a1 = TasMatrix::from_fn(&ctx, n, 3, |r, c| ((r * 2 + c) % 7) as f64);
+            let bsmall = SmallMat::from_fn(5, 2, |r, c| (r as f64 - c as f64) * 0.5);
+            let seed_cc = |_: usize, c: usize| 0.01 * (c + 1) as f64;
+            let cc_eager = TasMatrix::from_fn(&ctx, n, 2, seed_cc);
+            let cc_fused = TasMatrix::from_fn(&ctx, n, 2, seed_cc);
+
+            mv_times_mat_add_mv(2.0, &[&a0, &a1], &bsmall, 0.5, &cc_eager);
+            let mut p = FusedPipeline::new(&ctx);
+            p.gemm_update(2.0, &[&a0, &a1], bsmall.clone(), 0.5, &cc_fused);
+            p.materialize();
+            assert_close(
+                &cc_fused.to_colmajor(),
+                &cc_eager.to_colmajor(),
+                1e-13,
+                1e-13,
+                "fused op1",
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn fused_chain_later_steps_see_earlier_updates() {
+        for ctx in ctxs() {
+            let n = 200;
+            let x = TasMatrix::from_fn(&ctx, n, 2, |r, c| ((r * 3 + c) % 11) as f64 - 5.0);
+            let y = TasMatrix::from_fn(&ctx, n, 2, |r, c| ((r + 7 * c) % 13) as f64 - 6.0);
+            let t = TasMatrix::zeros(&ctx, n, 2);
+
+            // Eager reference: t = 2x - y; g = xᵀt; d = t·t.
+            let t_ref = TasMatrix::zeros(&ctx, n, 2);
+            mv_add_mv(2.0, &x, -1.0, &y, &t_ref);
+            let g_ref = mv_trans_mv(1.0, &[&x], &t_ref);
+            let d_ref = mv_dot(&t_ref, &t_ref);
+            let nrm_ref = mv_norm(&t_ref);
+
+            let mut p = FusedPipeline::new(&ctx);
+            p.axpby(2.0, &x, -1.0, &y, &t);
+            let hg = p.gram(1.0, &[&x], &t); // must see the updated t
+            let hd = p.dot(&t, &t);
+            let hn = p.norm(&t);
+            let res = p.materialize();
+
+            assert_close(&res.gram(hg).data, &g_ref.data, 1e-12, 1e-12, "chain gram").unwrap();
+            assert_close(res.dot(hd), &d_ref, 1e-12, 1e-9, "chain dot").unwrap();
+            assert_close(&res.norms(hn), &nrm_ref, 1e-12, 1e-9, "chain norm").unwrap();
+            assert_close(&t.to_colmajor(), &t_ref.to_colmajor(), 0.0, 0.0, "chain target")
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn fused_scale_variants_match_eager() {
+        for ctx in ctxs() {
+            let n = 150;
+            let a = TasMatrix::from_fn(&ctx, n, 3, |r, c| (r + c) as f64);
+            let out_f = TasMatrix::zeros(&ctx, n, 3);
+            let out_e = TasMatrix::zeros(&ctx, n, 3);
+
+            let mut p = FusedPipeline::new(&ctx);
+            p.scale(-1.5, &a, &out_f);
+            p.materialize();
+            crate::dense::ops::mv_scale(-1.5, &a, &out_e);
+            assert_close(&out_f.to_colmajor(), &out_e.to_colmajor(), 0.0, 0.0, "scale").unwrap();
+
+            let diag = [2.0, -3.0, 0.5];
+            let mut p = FusedPipeline::new(&ctx);
+            p.scale_diag(&diag, &a, &out_f);
+            p.materialize();
+            crate::dense::ops::mv_scale_diag(&a, &diag, &out_e);
+            assert_close(&out_f.to_colmajor(), &out_e.to_colmajor(), 0.0, 0.0, "scale_diag")
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn axpby_beta_zero_skips_loading_y() {
+        // beta = 0 with a DISTINCT y: y must be neither read from SSD
+        // nor touched (its values may be garbage).
+        let fs = crate::safs::Safs::new(crate::safs::SafsConfig::untimed());
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            64,
+            2,
+            3,
+            0,
+            Arc::new(crate::dense::kernels::NativeKernels),
+        );
+        let n = 200;
+        let a = TasMatrix::from_fn(&ctx, n, 2, |r, _| r as f64);
+        let y = TasMatrix::from_fn(&ctx, n, 2, |_, _| f64::NAN);
+        let t = TasMatrix::zeros(&ctx, n, 2);
+        let before = fs.stats();
+        let mut p = FusedPipeline::new(&ctx);
+        p.axpby(2.0, &a, 0.0, &y, &t);
+        p.materialize();
+        let delta = fs.stats().delta_since(&before);
+        let mat_bytes = (n * 2 * 8) as u64;
+        assert_eq!(delta.bytes_read, mat_bytes, "only a is read");
+        assert_eq!(t.get(10, 0), 20.0);
+        assert!(t.to_colmajor().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fused_gemm_handles_target_aliasing() {
+        // X := X·R (target appears in the operand list) — the
+        // normalization chain's shape.
+        for ctx in ctxs() {
+            let n = 130;
+            let mk = |ctx: &Arc<DenseCtx>| {
+                let x = TasMatrix::zeros(ctx, n, 3);
+                mv_random(&x, 77);
+                x
+            };
+            let x_eager = mk(&ctx);
+            let x_fused = mk(&ctx);
+            let r = SmallMat::from_fn(3, 3, |i, j| if i <= j { (i + j + 1) as f64 } else { 0.0 });
+            mv_times_mat_add_mv(1.0, &[&x_eager], &r, 0.0, &x_eager);
+            let mut p = FusedPipeline::new(&ctx);
+            p.gemm_update(1.0, &[&x_fused], r.clone(), 0.0, &x_fused);
+            p.materialize();
+            assert_close(
+                &x_fused.to_colmajor(),
+                &x_eager.to_colmajor(),
+                0.0,
+                0.0,
+                "aliased gemm",
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn fused_beta_zero_overwrites_garbage_target() {
+        let ctx = DenseCtx::mem_for_tests(32);
+        let a = TasMatrix::from_fn(&ctx, 100, 2, |r, _| r as f64);
+        let cc = TasMatrix::from_fn(&ctx, 100, 2, |_, _| f64::NAN);
+        let mut p = FusedPipeline::new(&ctx);
+        p.gemm_update(1.0, &[&a], SmallMat::identity(2), 0.0, &cc);
+        p.materialize();
+        assert_close(&cc.to_colmajor(), &a.to_colmajor(), 1e-12, 1e-12, "beta0").unwrap();
+    }
+
+    #[test]
+    fn one_walk_reads_each_operand_interval_once() {
+        // Write-through EM (cache disabled): every load hits the array,
+        // so bytes_read measures the walk's read passes exactly.
+        let fs = crate::safs::Safs::new(crate::safs::SafsConfig::untimed());
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            64,
+            2,
+            3,
+            0,
+            Arc::new(crate::dense::kernels::NativeKernels),
+        );
+        let n = 500;
+        let b = 2;
+        let p_blocks: Vec<TasMatrix> = (0..4)
+            .map(|i| {
+                let m = TasMatrix::zeros(&ctx, n, b);
+                mv_random(&m, 300 + i);
+                m
+            })
+            .collect();
+        let refs: Vec<&TasMatrix> = p_blocks.iter().collect();
+        let x = TasMatrix::zeros(&ctx, n, b);
+        mv_random(&x, 9);
+
+        let subspace_bytes = (4 * n * b * 8) as u64;
+        let x_bytes = (n * b * 8) as u64;
+
+        // Two reductions over the same operands in one pipeline: the
+        // operands must still be read once each.
+        let before = fs.stats();
+        let mut p = FusedPipeline::new(&ctx);
+        let _c = p.gram(1.0, &refs, &x);
+        for &blk in &refs {
+            let _ = p.gram(1.0, &refs, blk);
+        }
+        p.materialize();
+        let delta = fs.stats().delta_since(&before);
+        assert_eq!(delta.bytes_read, subspace_bytes + x_bytes, "single read pass");
+        assert_eq!(delta.bytes_written, 0);
+
+        // Eager equivalent: one op3 per reduction → five full passes.
+        let before = fs.stats();
+        let _ = mv_trans_mv(1.0, &refs, &x);
+        for &blk in &refs {
+            let _ = mv_trans_mv(1.0, &refs, blk);
+        }
+        let delta_eager = fs.stats().delta_since(&before);
+        assert!(
+            delta_eager.bytes_read >= 5 * subspace_bytes,
+            "eager should re-read per op: {}",
+            delta_eager.bytes_read
+        );
+    }
+
+    #[test]
+    fn fused_update_writes_each_target_interval_once() {
+        let fs = crate::safs::Safs::new(crate::safs::SafsConfig::untimed());
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            64,
+            2,
+            3,
+            0,
+            Arc::new(crate::dense::kernels::NativeKernels),
+        );
+        let n = 400;
+        let v = TasMatrix::zeros(&ctx, n, 3);
+        mv_random(&v, 5);
+        let x = TasMatrix::zeros(&ctx, n, 3);
+        mv_random(&x, 6);
+        let c = SmallMat::from_fn(3, 3, |r, q| ((r + q) % 3) as f64 * 0.1);
+
+        let before = fs.stats();
+        let mut p = FusedPipeline::new(&ctx);
+        p.gemm_update(-1.0, &[&v], c.clone(), 1.0, &x);
+        let _g = p.gram(1.0, &[&v], &x); // post-update gram, same walk
+        p.materialize();
+        let delta = fs.stats().delta_since(&before);
+        let mat_bytes = (n * 3 * 8) as u64;
+        assert_eq!(delta.bytes_read, 2 * mat_bytes, "v and x read once each");
+        assert_eq!(delta.bytes_written, mat_bytes, "x written once");
+    }
+
+    #[test]
+    fn empty_pipeline_and_empty_operand_lists() {
+        let ctx = DenseCtx::mem_for_tests(32);
+        let res = FusedPipeline::new(&ctx).materialize();
+        assert!(res.grams.is_empty() && res.dots.is_empty());
+
+        // Empty AA list: gemm degenerates to target ← beta·target.
+        let t = TasMatrix::from_fn(&ctx, 50, 2, |r, _| r as f64);
+        let mut p = FusedPipeline::new(&ctx);
+        p.gemm_update(1.0, &[], SmallMat::zeros(0, 2), 0.5, &t);
+        p.materialize();
+        assert_eq!(t.get(10, 0), 5.0);
+    }
+}

@@ -18,6 +18,41 @@ pub trait DenseKernels: Send + Sync {
     /// `out(m×b) += alpha · xᵀ(m×rows) · y(rows×b)`, x/y column-major.
     fn gram(&self, alpha: f64, x: &[f64], y: &[f64], rows: usize, m: usize, b: usize, out: &mut SmallMat);
 
+    /// `out[i] = alpha·x[i] + beta·y[i]` — the elementwise building
+    /// block of the fused pipeline's `axpby`/`scale` steps.  Default
+    /// implementation is adequate everywhere; backends may override it
+    /// (the JAX/Pallas artifact set has a matching `axpby` kernel).
+    fn axpby_into(&self, alpha: f64, x: &[f64], beta: f64, y: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len(), out.len());
+        if beta == 0.0 {
+            // Pure scale: skip the y term entirely so uninitialized /
+            // non-finite y values can never leak in as 0·NaN.
+            for (o, &xv) in out.iter_mut().zip(x) {
+                *o = alpha * xv;
+            }
+        } else {
+            for i in 0..out.len() {
+                out[i] = alpha * x[i] + beta * y[i];
+            }
+        }
+    }
+
+    /// `out[:, j] = diag[j] · x[:, j]` over column-major interval data
+    /// (MvScale2's per-interval block).
+    fn scale_diag_into(&self, diag: &[f64], x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), out.len());
+        let cols = diag.len();
+        let rows = if cols == 0 { 0 } else { x.len() / cols };
+        for (j, &d) in diag.iter().enumerate() {
+            let src = &x[j * rows..(j + 1) * rows];
+            let dst = &mut out[j * rows..(j + 1) * rows];
+            for i in 0..rows {
+                dst[i] = d * src[i];
+            }
+        }
+    }
+
     /// Human-readable name for reports.
     fn name(&self) -> &'static str {
         "native"
@@ -141,6 +176,18 @@ mod tests {
             reference::gram(1.5, &x, &y, rows, m, b, &mut g2);
             assert_close(&g1.data, &g2.data, 1e-12, 1e-12, "gram")
         });
+    }
+
+    #[test]
+    fn axpby_and_scale_diag_defaults() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = vec![10.0, 20.0, 30.0, 40.0];
+        let mut out = vec![0.0; 4];
+        NativeKernels.axpby_into(2.0, &x, -1.0, &y, &mut out);
+        assert_eq!(out, vec![-8.0, -16.0, -24.0, -32.0]);
+        // 2 rows × 2 cols column-major, diag scaling.
+        NativeKernels.scale_diag_into(&[3.0, -1.0], &x, &mut out);
+        assert_eq!(out, vec![3.0, 6.0, -3.0, -4.0]);
     }
 
     #[test]

@@ -1,13 +1,16 @@
 //! Dense-matrix subsystem (§3.4): small in-memory matrices, the TAS
 //! (tall-and-skinny) subspace matrices with SSD backing + caching, the
-//! Table-1 operation set, and the kernel seam to the AOT-compiled
-//! JAX/Pallas artifacts.
+//! Table-1 operation set (eager reference implementations plus the
+//! lazy-evaluation fused pipeline), and the kernel seam to the
+//! AOT-compiled JAX/Pallas artifacts.
 
+pub mod fused;
 pub mod kernels;
 pub mod ops;
 pub mod small;
 pub mod tas;
 
+pub use fused::{DotHandle, FusedPipeline, FusedResults, GramHandle};
 pub use kernels::{DenseKernels, NativeKernels};
 pub use ops::{
     clone_view, conv_layout_from_rowmajor, conv_layout_to_rowmajor, mv_add_mv, mv_dot,

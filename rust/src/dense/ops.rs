@@ -23,7 +23,7 @@ pub fn total_cols(mats: &[&TasMatrix]) -> usize {
     mats.iter().map(|m| m.n_cols).sum()
 }
 
-fn check_same_shape(mats: &[&TasMatrix]) {
+pub(crate) fn check_same_shape(mats: &[&TasMatrix]) {
     if let Some(first) = mats.first() {
         for m in mats {
             assert_eq!(m.n_rows, first.n_rows, "row mismatch");
@@ -33,7 +33,7 @@ fn check_same_shape(mats: &[&TasMatrix]) {
 }
 
 /// Per-worker buffer pools for one operation.
-fn make_pools(ctx: &DenseCtx) -> Vec<Mutex<BufferPool>> {
+pub(crate) fn make_pools(ctx: &DenseCtx) -> Vec<Mutex<BufferPool>> {
     (0..ctx.threads.max(1))
         .map(|_| Mutex::new(BufferPool::new(ctx.fs.cfg().use_buffer_pool)))
         .collect()

@@ -10,7 +10,7 @@
 //! SSD writes during reorthogonalization.
 
 use super::kernels::{DenseKernels, NativeKernels};
-use crate::metrics::MemTracker;
+use crate::metrics::{MemTracker, PhaseIo};
 use crate::safs::{BufferPool, FileHandle, Safs, SafsConfig};
 use crate::util::rng::Rng;
 use std::collections::VecDeque;
@@ -46,6 +46,14 @@ pub struct DenseCtx {
     pub cache_slots: usize,
     pub kernels: Arc<dyn DenseKernels>,
     pub mem: Arc<MemTracker>,
+    /// Per-phase SAFS byte accounting (the solver scopes its spmm /
+    /// ortho / restart sections through this).
+    pub io_phases: PhaseIo,
+    /// When set, the eigensolver layers route their MultiVec chains
+    /// through the §3.4 lazy-evaluation pipeline
+    /// ([`crate::dense::fused`]) instead of the eager Table-1 ops.  The
+    /// eager path stays available as the reference implementation.
+    fused: AtomicBool,
     ids: AtomicU64,
     lru: Mutex<VecDeque<Weak<MatInner>>>,
 }
@@ -65,6 +73,8 @@ impl DenseCtx {
             cache_slots: 1,
             kernels: Arc::new(NativeKernels),
             mem: Arc::new(MemTracker::default()),
+            io_phases: PhaseIo::new(),
+            fused: AtomicBool::new(false),
             ids: AtomicU64::new(1),
             lru: Mutex::new(VecDeque::new()),
         })
@@ -89,6 +99,8 @@ impl DenseCtx {
             cache_slots,
             kernels,
             mem: Arc::new(MemTracker::default()),
+            io_phases: PhaseIo::new(),
+            fused: AtomicBool::new(false),
             ids: AtomicU64::new(1),
             lru: Mutex::new(VecDeque::new()),
         })
@@ -103,6 +115,18 @@ impl DenseCtx {
     pub fn em_for_tests(interval_rows: usize) -> Arc<DenseCtx> {
         let fs = Safs::new(SafsConfig::untimed());
         DenseCtx::with(fs, true, interval_rows, 2, 3, 1, Arc::new(NativeKernels))
+    }
+
+    /// Whether the eigensolver layers should use the §3.4
+    /// lazy-evaluation fused pipeline.
+    pub fn is_fused(&self) -> bool {
+        self.fused.load(Ordering::Relaxed)
+    }
+
+    /// Toggle the fused pipeline (runtime-switchable so ablations can
+    /// compare both paths over one context).
+    pub fn set_fused(&self, on: bool) {
+        self.fused.store(on, Ordering::Relaxed);
     }
 
     fn next_id(&self) -> u64 {
@@ -205,6 +229,26 @@ pub struct TasMatrix {
 impl TasMatrix {
     /// Allocate a zero matrix in the context's backing mode.
     pub fn zeros(ctx: &Arc<DenseCtx>, n_rows: usize, n_cols: usize) -> TasMatrix {
+        Self::zeros_impl(ctx, n_rows, n_cols, true)
+    }
+
+    /// Like [`TasMatrix::zeros`], but for a matrix whose every interval
+    /// will be fully overwritten before being read (a fused-pipeline
+    /// target): the EM allocation is left *clean*, so a cache eviction
+    /// before the overwrite flushes nothing, and no zero-fill is
+    /// materialized on SSD.  Reads of never-written ranges still return
+    /// zeros (SAFS files are sparse), so this is safe even if some
+    /// interval is read before being stored.
+    pub fn zeros_for_overwrite(ctx: &Arc<DenseCtx>, n_rows: usize, n_cols: usize) -> TasMatrix {
+        Self::zeros_impl(ctx, n_rows, n_cols, false)
+    }
+
+    fn zeros_impl(
+        ctx: &Arc<DenseCtx>,
+        n_rows: usize,
+        n_cols: usize,
+        materialize_zeros: bool,
+    ) -> TasMatrix {
         let id = ctx.next_id();
         let interval_rows = ctx.interval_rows;
         let n_intervals = n_rows.max(1).div_ceil(interval_rows);
@@ -222,7 +266,7 @@ impl TasMatrix {
                 }
             })
             .collect();
-        if em && !resident {
+        if em && !resident && materialize_zeros {
             // Materialize zeros on SSD so later partial reads see zeros.
             for iv in 0..n_intervals {
                 let len = interval_rows.min(n_rows - iv * interval_rows) * n_cols;
@@ -244,7 +288,7 @@ impl TasMatrix {
             file,
             slots,
             resident: AtomicBool::new(resident),
-            dirty: AtomicBool::new(resident && em),
+            dirty: AtomicBool::new(resident && em && materialize_zeros),
             fs: ctx.fs.clone(),
             mem: ctx.mem.clone(),
         });
@@ -280,6 +324,13 @@ impl TasMatrix {
 
     pub fn same_data(&self, other: &TasMatrix) -> bool {
         Arc::ptr_eq(&self.inner, &other.inner) || self.data_id == other.data_id
+    }
+
+    /// True when both handles refer to the same physical storage (the
+    /// aliasing test the fused pipeline uses to load each operand's
+    /// interval exactly once).
+    pub fn shares_storage(&self, other: &TasMatrix) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
     }
 
     /// Force-flush resident data to the backing file (EM only).

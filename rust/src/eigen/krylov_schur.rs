@@ -19,8 +19,10 @@
 
 use super::dense_eig::{sym_eig, Which};
 use super::operator::Operator;
-use super::ortho::{normalize_block, ortho_against};
-use crate::dense::{mv_times_mat_add_mv, tas::mv_random, DenseCtx, SmallMat, TasMatrix};
+use super::ortho::{normalize_block, ortho_normalize};
+use crate::dense::{
+    mv_times_mat_add_mv, tas::mv_random, DenseCtx, FusedPipeline, SmallMat, TasMatrix,
+};
 use std::sync::Arc;
 
 #[derive(Clone, Debug)]
@@ -88,7 +90,7 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
     // --- initialization ---
     let v0 = TasMatrix::zeros(ctx, n, b);
     mv_random(&v0, cfg.seed);
-    normalize_block(&v0, &[], cfg.seed ^ 1);
+    ctx.io_phases.scope(&ctx.fs, "ortho", || normalize_block(&v0, &[], cfg.seed ^ 1));
     let mut basis: Vec<TasMatrix> = vec![v0];
     let mut t = SmallMat::zeros(0, 0); // projected matrix over non-residual blocks
     let mut last_r = SmallMat::identity(b);
@@ -98,10 +100,13 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
         // --- expand until the subspace is full ---
         while t.rows + basis.last().unwrap().n_cols <= m_max {
             let vp = basis.last().unwrap();
-            let w = op.apply(ctx, vp);
+            let w = ctx.io_phases.scope(&ctx.fs, "spmm", || op.apply(ctx, vp));
             let refs: Vec<&TasMatrix> = basis.iter().collect();
-            let c = ortho_against(&refs, &w);
-            let (r, _) = normalize_block(&w, &refs, cfg.seed ^ (0x100 + t.rows as u64));
+            // CGS2 + Cholesky-QR as one chain (fused mode streams the
+            // subspace once per CGS2 round; eager is the reference).
+            let (c, r, _) = ctx.io_phases.scope(&ctx.fs, "ortho", || {
+                ortho_normalize(&refs, &w, cfg.seed ^ (0x100 + t.rows as u64))
+            });
             // Residual block joins T; its column block is c.
             let bw = vp.n_cols;
             let new_m = t.rows + bw;
@@ -157,7 +162,9 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
             let residuals: Vec<f64> = (0..cfg.nev.min(m)).map(res).collect();
             let eigenvectors = cfg.compute_eigenvectors.then(|| {
                 let cols: Vec<usize> = (0..cfg.nev.min(m)).map(|i| order[i]).collect();
-                ritz_vectors(&basis[..basis.len() - 1], &u, &cols, ctx, b)
+                ctx.io_phases.scope(&ctx.fs, "restart", || {
+                    ritz_vectors(&basis[..basis.len() - 1], &u, &cols, ctx, b)
+                })
             });
             return EigenResult {
                 eigenvalues,
@@ -173,7 +180,9 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
         // --- thick restart: keep k Ritz vectors + residual block ---
         let keep = (cfg.nev + b).max(m / 2).min(m - b);
         let cols: Vec<usize> = (0..keep).map(|i| order[i]).collect();
-        let mut new_basis = ritz_vectors(&basis[..basis.len() - 1], &u, &cols, ctx, b);
+        let mut new_basis = ctx.io_phases.scope(&ctx.fs, "restart", || {
+            ritz_vectors(&basis[..basis.len() - 1], &u, &cols, ctx, b)
+        });
         let residual = basis.pop().unwrap();
         drop(basis); // old blocks freed (files deleted) before the new grow
         new_basis.push(residual);
@@ -190,6 +199,14 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
 }
 
 /// `Y = V · U[:, cols]`, returned as blocks of width ≤ `b`.
+///
+/// In fused mode every output block's op1 is recorded into ONE pipeline,
+/// so the old basis streams from the SSDs once for the whole restart
+/// instead of once per Ritz block (the dominant restart traffic for
+/// large `keep`).  Caveat: the single walk holds one interval of the
+/// whole basis plus all output blocks per worker, ~1.5× the subspace
+/// width — fine at this repo's scales; the ROADMAP's "group-bounded
+/// fused walks" item covers paper-scale widths.
 fn ritz_vectors(
     v: &[TasMatrix],
     u: &SmallMat,
@@ -200,22 +217,51 @@ fn ritz_vectors(
     let refs: Vec<&TasMatrix> = v.iter().collect();
     let m: usize = refs.iter().map(|x| x.n_cols).sum();
     let n = refs[0].n_rows;
-    let mut out = Vec::with_capacity(cols.len().div_ceil(b));
-    let mut j = 0;
-    while j < cols.len() {
-        let w = b.min(cols.len() - j);
+    let usub_for = |j: usize, w: usize| -> SmallMat {
         let mut usub = SmallMat::zeros(m, w);
         for (jj, &cj) in cols[j..j + w].iter().enumerate() {
             for i in 0..m {
                 *usub.at_mut(i, jj) = u.at(i, cj);
             }
         }
-        let y = TasMatrix::zeros(ctx, n, w);
-        mv_times_mat_add_mv(1.0, &refs, &usub, 0.0, &y);
-        out.push(y);
-        j += w;
+        usub
+    };
+    let mut outs = Vec::with_capacity(cols.len().div_ceil(b.max(1)));
+    if ctx.is_fused() {
+        // Record every block's op1 into ONE pipeline: the old basis
+        // streams from the SSDs once for the whole restart.
+        let mut usubs = Vec::with_capacity(outs.capacity());
+        let mut j = 0;
+        while j < cols.len() {
+            let w = b.min(cols.len() - j);
+            usubs.push(usub_for(j, w));
+            // Clean allocation: pre-creating all blocks evicts the
+            // earlier ones through the cache, and a dirty zero block
+            // would flush a full interval set of zeros the pipeline is
+            // about to overwrite.
+            outs.push(TasMatrix::zeros_for_overwrite(ctx, n, w));
+            j += w;
+        }
+        let mut p = FusedPipeline::new(ctx);
+        for (y, usub) in outs.iter().zip(usubs) {
+            p.gemm_update(1.0, &refs, usub, 0.0, y);
+        }
+        p.materialize();
+    } else {
+        // Eager reference: allocate-and-fill one block at a time (the
+        // seed behaviour, which keeps each new block cache-resident
+        // while its op1 runs).
+        let mut j = 0;
+        while j < cols.len() {
+            let w = b.min(cols.len() - j);
+            let usub = usub_for(j, w);
+            let y = TasMatrix::zeros(ctx, n, w);
+            mv_times_mat_add_mv(1.0, &refs, &usub, 0.0, &y);
+            outs.push(y);
+            j += w;
+        }
     }
-    out
+    outs
 }
 
 /// Dense fallback for problems small enough that the Krylov basis would
@@ -393,6 +439,69 @@ mod tests {
         for (a, b) in im.eigenvalues.iter().zip(&em.eigenvalues) {
             assert!((a - b).abs() < 1e-7, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn fused_pipeline_matches_eager_solver() {
+        let mut rng = Rng::new(12);
+        let coo = gnm_undirected(150, 600, &mut rng);
+        let run = |fused: bool, em: bool| {
+            let ctx = if em {
+                DenseCtx::em_for_tests(64)
+            } else {
+                DenseCtx::mem_for_tests(64)
+            };
+            ctx.set_fused(fused);
+            let op = SpmmOperator::new(build_mem(&coo), SpmmOpts::default(), 2);
+            let cfg = EigenConfig {
+                nev: 4,
+                block_size: 2,
+                num_blocks: 8,
+                tol: 1e-8,
+                max_restarts: 300,
+                which: Which::LargestMagnitude,
+                seed: 6,
+                compute_eigenvectors: true,
+            };
+            solve(&op, &ctx, &cfg)
+        };
+        let eager = run(false, false);
+        assert!(eager.converged);
+        for &(fused, em) in &[(true, false), (true, true)] {
+            let res = run(fused, em);
+            assert!(res.converged, "fused={fused} em={em}: {:?}", res.history);
+            for (a, b) in eager.eigenvalues.iter().zip(&res.eigenvalues) {
+                assert!((a - b).abs() < 1e-7, "fused={fused} em={em}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn solver_reports_per_phase_io() {
+        let mut rng = Rng::new(13);
+        let coo = gnm_undirected(200, 900, &mut rng);
+        let ctx = DenseCtx::em_for_tests(64);
+        ctx.set_fused(true);
+        let op = SpmmOperator::new(build_mem(&coo), SpmmOpts::default(), 2);
+        let cfg = EigenConfig {
+            nev: 3,
+            block_size: 1,
+            num_blocks: 8,
+            tol: 1e-7,
+            max_restarts: 300,
+            which: Which::LargestMagnitude,
+            seed: 14,
+            compute_eigenvectors: true,
+        };
+        let res = solve(&op, &ctx, &cfg);
+        assert!(res.converged);
+        let phases = ctx.io_phases.snapshot();
+        assert!(
+            phases.get("ortho").map_or(0, |s| s.bytes_read) > 0,
+            "ortho phase unaccounted: {phases:?}"
+        );
+        assert!(phases.contains_key("spmm"), "{phases:?}");
+        assert!(phases.contains_key("restart"), "{phases:?}");
     }
 
     #[test]

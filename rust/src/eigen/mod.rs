@@ -11,4 +11,8 @@ pub mod svd;
 pub use dense_eig::{sym_eig, Which};
 pub use krylov_schur::{solve, EigenConfig, EigenResult};
 pub use operator::{CsrMode, CsrOperator, GramOperator, Operator, SpmmOperator};
+pub use ortho::{
+    normalize_block, ortho_against, ortho_normalize, ortho_normalize_with,
+    orthonormality_error,
+};
 pub use svd::{build_gram_operator, svd, SvdResult};

@@ -2,18 +2,50 @@
 //! eigensolver's dense-matrix traffic to).
 //!
 //! Classical Gram–Schmidt done twice (CGS2, "twice is enough") against
-//! the whole existing basis, expressed entirely in the Table-1 operations
-//! `MvTransMv` (op3) and `MvTimesMatAddMv` (op1) — so in EM mode every
-//! sweep streams the full subspace from the SSD array, which is exactly
-//! why reorthogonalization dominates the paper's runtime at large nev.
+//! the whole existing basis.  Two implementations share every public
+//! entry point, selected by [`crate::dense::DenseCtx::is_fused`]:
+//!
+//! * **Eager reference** — the seed implementation, expressed op-by-op in
+//!   the Table-1 operations `MvTransMv` (op3) and `MvTimesMatAddMv`
+//!   (op1).  In EM mode every op streams the full subspace from the SSD
+//!   array, so one CGS2 round reads the basis **four** times (two
+//!   projections, each gram + update).
+//! * **Fused pipeline** (§3.4 lazy evaluation) — a BCGS2-PIP
+//!   reformulation over [`crate::dense::FusedPipeline`].  Round 1 is one
+//!   streaming pass computing both `c₁ = Vᵀx` and the basis Gram
+//!   `G = VᵀV`; the second-projection coefficients follow without
+//!   touching the subspace again as `c₂ = c₁ − G·c₁` (≡ `Vᵀ(x − V·c₁)`
+//!   in exact arithmetic).  Round 2 is one pass applying the combined
+//!   update `x ← x − V·(c₁+c₂)` and, fused into the same walk, the
+//!   post-update Gram `xᵀx` that seeds the Cholesky-QR normalization.
+//!   The subspace is read **once per round** — half the eager traffic —
+//!   and the normalization's first gram pass disappears entirely.
+//!
+//! The PIP form trades flops for I/O: recomputing `G = VᵀV` costs
+//! `O(n·m²)` per expansion step vs the eager path's `O(n·m·b)`, which is
+//! the right trade whenever the subspace streams from SSDs (the
+//! configuration the paper optimizes).  Caching `G` across expansion
+//! steps (it only grows by one block per step) is a ROADMAP item.
 
-use crate::dense::{mv_times_mat_add_mv, mv_trans_mv, tas::mv_random, SmallMat, TasMatrix};
+use crate::dense::{
+    mv_times_mat_add_mv, mv_trans_mv, tas::mv_random, total_cols, FusedPipeline, GramHandle,
+    SmallMat, TasMatrix,
+};
 
 /// Project `x` against the orthonormal basis blocks (`x -= V·(Vᵀx)`),
 /// twice.  Returns the accumulated coefficients `C = Vᵀx` (m×b) from the
 /// first pass plus the correction of the second (needed to extend the
-/// projected matrix T).
+/// projected matrix T).  Dispatches on [`crate::dense::DenseCtx::is_fused`].
 pub fn ortho_against(basis: &[&TasMatrix], x: &TasMatrix) -> SmallMat {
+    if x.ctx().is_fused() {
+        ortho_fused_impl(basis, x, false).0
+    } else {
+        ortho_against_eager(basis, x)
+    }
+}
+
+/// The eager op-by-op CGS2 reference implementation.
+pub fn ortho_against_eager(basis: &[&TasMatrix], x: &TasMatrix) -> SmallMat {
     if basis.is_empty() {
         return SmallMat::zeros(0, x.n_cols);
     }
@@ -31,6 +63,67 @@ pub fn ortho_against(basis: &[&TasMatrix], x: &TasMatrix) -> SmallMat {
     c
 }
 
+/// The fused-pipeline CGS2: one subspace read per round.
+pub fn ortho_against_fused(basis: &[&TasMatrix], x: &TasMatrix) -> SmallMat {
+    ortho_fused_impl(basis, x, false).0
+}
+
+/// Shared fused CGS2 core.  When `want_gram` is set, the round-2 walk
+/// additionally accumulates the post-update Gram `xᵀx` (the input to the
+/// downstream Cholesky-QR) at zero extra I/O.
+fn ortho_fused_impl(
+    basis: &[&TasMatrix],
+    x: &TasMatrix,
+    want_gram: bool,
+) -> (SmallMat, Option<SmallMat>) {
+    let ctx = x.ctx().clone();
+    if basis.is_empty() {
+        let g = want_gram.then(|| {
+            let mut p = FusedPipeline::new(&ctx);
+            let h = p.gram(1.0, &[x], x);
+            let mut res = p.materialize();
+            res.take_gram(h)
+        });
+        return (SmallMat::zeros(0, x.n_cols), g);
+    }
+    let m = total_cols(basis);
+
+    // Round 1: one streaming pass over [V, x] yields c1 = Vᵀx AND
+    // G = VᵀV (every interval of every operand read exactly once).
+    let (c1, g) = {
+        let mut p = FusedPipeline::new(&ctx);
+        let hc = p.gram(1.0, basis, x);
+        let hg: Vec<GramHandle> = basis.iter().map(|&blk| p.gram(1.0, basis, blk)).collect();
+        let mut res = p.materialize();
+        let c1 = res.take_gram(hc);
+        let mut g = SmallMat::zeros(m, m);
+        let mut col = 0usize;
+        for (hb, blk) in hg.into_iter().zip(basis) {
+            let gb = res.take_gram(hb); // m × blk.n_cols
+            g.set_block(0, col, &gb);
+            col += blk.n_cols;
+        }
+        (c1, g)
+    };
+
+    // c2 = c1 − G·c1 — the PIP form of the second projection's
+    // coefficients; c = c1 + c2 is the combined correction.
+    let mut c2 = c1.clone();
+    SmallMat::gemm(-1.0, &g, false, &c1, false, 1.0, &mut c2);
+    let mut c = c1;
+    for (a, b) in c.data.iter_mut().zip(&c2.data) {
+        *a += b;
+    }
+
+    // Round 2: one pass applies x ← x − V·c and (optionally) the
+    // post-update Gram for normalization, fused into the same walk.
+    let mut p = FusedPipeline::new(&ctx);
+    p.gemm_update(-1.0, basis, c.clone(), 1.0, x);
+    let hg = want_gram.then(|| p.gram(1.0, &[x], x));
+    let mut res = p.materialize();
+    (c, hg.map(|h| res.take_gram(h)))
+}
+
 /// Orthonormalize the columns of `x` in place via Cholesky QR
 /// (`G = XᵀX = RᵀR`, `X := X·R⁻¹`), retried once for stability.
 /// Returns `R` (b×b upper triangular) such that `X_old = X_new · R`.
@@ -38,7 +131,21 @@ pub fn ortho_against(basis: &[&TasMatrix], x: &TasMatrix) -> SmallMat {
 /// On rank deficiency (Cholesky breakdown) the offending block is
 /// refreshed with random vectors, re-projected against `basis`, and the
 /// corresponding rows of R are zero — the standard restart treatment.
+/// Dispatches on [`crate::dense::DenseCtx::is_fused`].
 pub fn normalize_block(x: &TasMatrix, basis: &[&TasMatrix], seed: u64) -> (SmallMat, bool) {
+    if x.ctx().is_fused() {
+        normalize_block_fused(x, basis, seed, None)
+    } else {
+        normalize_block_eager(x, basis, seed)
+    }
+}
+
+/// Eager reference normalization (the seed implementation).
+pub fn normalize_block_eager(
+    x: &TasMatrix,
+    basis: &[&TasMatrix],
+    seed: u64,
+) -> (SmallMat, bool) {
     let b = x.n_cols;
     let mut r_total = SmallMat::identity(b);
     let mut replaced = false;
@@ -64,12 +171,90 @@ pub fn normalize_block(x: &TasMatrix, basis: &[&TasMatrix], seed: u64) -> (Small
                 // project against everything, and try again.
                 replaced = true;
                 mv_random(x, seed.wrapping_add(attempt as u64 + 1));
-                ortho_against(basis, x);
+                ortho_against_eager(basis, x);
                 r_total = SmallMat::zeros(b, b); // old block contributes nothing
             }
         }
     }
     panic!("normalize_block: persistent rank deficiency");
+}
+
+/// Fused normalization: each round's `X := X·R⁻¹` update and the next
+/// round's Gram `XᵀX` run in one interval walk, so a normalization round
+/// costs one pass over `x` instead of two.  `first_gram` lets the caller
+/// hand in a Gram already accumulated by a preceding fused walk
+/// (see [`ortho_normalize`]).
+fn normalize_block_fused(
+    x: &TasMatrix,
+    basis: &[&TasMatrix],
+    seed: u64,
+    first_gram: Option<SmallMat>,
+) -> (SmallMat, bool) {
+    let ctx = x.ctx().clone();
+    let b = x.n_cols;
+    let mut r_total = SmallMat::identity(b);
+    let mut replaced = false;
+    let mut gram = first_gram;
+    for attempt in 0..3 {
+        let g = match gram.take() {
+            Some(g) => g,
+            None => {
+                let mut p = FusedPipeline::new(&ctx);
+                let h = p.gram(1.0, &[x], x);
+                let mut res = p.materialize();
+                res.take_gram(h)
+            }
+        };
+        let dmax = (0..b).map(|i| g.at(i, i)).fold(0.0f64, f64::max);
+        match g.cholesky_upper(1e-14 * dmax.max(1e-300)) {
+            Some(r) => {
+                let rinv = SmallMat::inv_upper(&r);
+                let refine = attempt == 0;
+                let mut p = FusedPipeline::new(&ctx);
+                p.gemm_update(1.0, &[x], rinv, 0.0, x);
+                let h = refine.then(|| p.gram(1.0, &[x], x));
+                let mut res = p.materialize();
+                r_total = SmallMat::matmul(&r, &r_total);
+                if let Some(h) = h {
+                    gram = Some(res.take_gram(h));
+                    continue;
+                }
+                return (r_total, replaced);
+            }
+            None => {
+                replaced = true;
+                mv_random(x, seed.wrapping_add(attempt as u64 + 1));
+                ortho_against_fused(basis, x);
+                r_total = SmallMat::zeros(b, b);
+            }
+        }
+    }
+    panic!("normalize_block: persistent rank deficiency");
+}
+
+/// The solver's per-block expansion chain: CGS2-project `x` against
+/// `basis`, then Cholesky-QR-normalize it in place.  Returns
+/// `(c, r, replaced)` — the projection coefficients, the normalization
+/// factor, and whether a rank-deficient block was replaced.
+///
+/// In fused mode the whole chain costs two subspace read passes (round 1
+/// and round 2 of CGS2) plus per-round single passes over `x` for the
+/// normalization — the round-2 walk already accumulates the first
+/// normalization Gram.  The eager path is the op-by-op reference.
+pub fn ortho_normalize(
+    basis: &[&TasMatrix],
+    x: &TasMatrix,
+    seed: u64,
+) -> (SmallMat, SmallMat, bool) {
+    if x.ctx().is_fused() {
+        let (c, g) = ortho_fused_impl(basis, x, true);
+        let (r, replaced) = normalize_block_fused(x, basis, seed, g);
+        (c, r, replaced)
+    } else {
+        let c = ortho_against_eager(basis, x);
+        let (r, replaced) = normalize_block_eager(x, basis, seed);
+        (c, r, replaced)
+    }
 }
 
 /// Max |VᵢᵀVⱼ - δᵢⱼ| over all basis blocks — test/diagnostic invariant.
@@ -91,6 +276,23 @@ pub fn orthonormality_error(blocks: &[&TasMatrix]) -> f64 {
     worst
 }
 
+/// Convenience for tests/benches: a context-flag-independent handle to
+/// run one full CGS2 + normalize chain and return the same tuple as
+/// [`ortho_normalize`], forcing the given path.
+pub fn ortho_normalize_with(
+    basis: &[&TasMatrix],
+    x: &TasMatrix,
+    seed: u64,
+    fused: bool,
+) -> (SmallMat, SmallMat, bool) {
+    let ctx = x.ctx().clone();
+    let was = ctx.is_fused();
+    ctx.set_fused(fused);
+    let out = ortho_normalize(basis, x, seed);
+    ctx.set_fused(was);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,31 +301,34 @@ mod tests {
     #[test]
     fn normalize_gives_orthonormal_columns() {
         for em in [false, true] {
-            let ctx = if em {
-                DenseCtx::em_for_tests(64)
-            } else {
-                DenseCtx::mem_for_tests(64)
-            };
-            let x = TasMatrix::from_fn(&ctx, 300, 3, |r, c| {
-                ((r * (c + 1)) % 17) as f64 - 8.0 + 0.1 * c as f64
-            });
-            let before = x.to_colmajor();
-            let (r, replaced) = normalize_block(&x, &[], 1);
-            assert!(!replaced);
-            assert!(orthonormality_error(&[&x]) < 1e-12);
-            // X_old = X_new R.
-            let xnew = x.to_colmajor();
-            let n = 300;
-            for j in 0..3 {
-                for i in 0..n {
-                    let mut acc = 0.0;
-                    for k in 0..3 {
-                        acc += xnew[k * n + i] * r.at(k, j);
+            for fused in [false, true] {
+                let ctx = if em {
+                    DenseCtx::em_for_tests(64)
+                } else {
+                    DenseCtx::mem_for_tests(64)
+                };
+                ctx.set_fused(fused);
+                let x = TasMatrix::from_fn(&ctx, 300, 3, |r, c| {
+                    ((r * (c + 1)) % 17) as f64 - 8.0 + 0.1 * c as f64
+                });
+                let before = x.to_colmajor();
+                let (r, replaced) = normalize_block(&x, &[], 1);
+                assert!(!replaced);
+                assert!(orthonormality_error(&[&x]) < 1e-12);
+                // X_old = X_new R.
+                let xnew = x.to_colmajor();
+                let n = 300;
+                for j in 0..3 {
+                    for i in 0..n {
+                        let mut acc = 0.0;
+                        for k in 0..3 {
+                            acc += xnew[k * n + i] * r.at(k, j);
+                        }
+                        assert!(
+                            (acc - before[j * n + i]).abs() < 1e-9,
+                            "reconstruction ({i},{j}) em={em} fused={fused}"
+                        );
                     }
-                    assert!(
-                        (acc - before[j * n + i]).abs() < 1e-9,
-                        "reconstruction ({i},{j})"
-                    );
                 }
             }
         }
@@ -131,24 +336,64 @@ mod tests {
 
     #[test]
     fn ortho_against_makes_blocks_orthogonal() {
-        let ctx = DenseCtx::mem_for_tests(64);
-        let v = TasMatrix::from_fn(&ctx, 200, 2, |r, c| ((r + c * 3) % 7) as f64);
-        normalize_block(&v, &[], 2);
-        let x = TasMatrix::from_fn(&ctx, 200, 2, |r, c| ((r * 2 + c) % 5) as f64 + 0.3);
-        ortho_against(&[&v], &x);
-        let g = mv_trans_mv(1.0, &[&v], &x);
-        assert!(g.data.iter().all(|&e| e.abs() < 1e-12), "VᵀX != 0: {:?}", g.data);
-        normalize_block(&x, &[&v], 3);
-        assert!(orthonormality_error(&[&v, &x]) < 1e-12);
+        for fused in [false, true] {
+            let ctx = DenseCtx::mem_for_tests(64);
+            ctx.set_fused(fused);
+            let v = TasMatrix::from_fn(&ctx, 200, 2, |r, c| ((r + c * 3) % 7) as f64);
+            normalize_block(&v, &[], 2);
+            let x = TasMatrix::from_fn(&ctx, 200, 2, |r, c| ((r * 2 + c) % 5) as f64 + 0.3);
+            ortho_against(&[&v], &x);
+            let g = mv_trans_mv(1.0, &[&v], &x);
+            assert!(
+                g.data.iter().all(|&e| e.abs() < 1e-12),
+                "VᵀX != 0 (fused={fused}): {:?}",
+                g.data
+            );
+            normalize_block(&x, &[&v], 3);
+            assert!(orthonormality_error(&[&v, &x]) < 1e-12);
+        }
     }
 
     #[test]
     fn rank_deficient_block_gets_replaced() {
+        for fused in [false, true] {
+            let ctx = DenseCtx::mem_for_tests(64);
+            ctx.set_fused(fused);
+            // Two identical columns → rank 1.
+            let x = TasMatrix::from_fn(&ctx, 150, 2, |r, _| (r % 13) as f64 + 1.0);
+            let (_r, replaced) = normalize_block(&x, &[], 7);
+            assert!(replaced, "fused={fused}");
+            assert!(orthonormality_error(&[&x]) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fused_cgs2_matches_eager_reference() {
         let ctx = DenseCtx::mem_for_tests(64);
-        // Two identical columns → rank 1.
-        let x = TasMatrix::from_fn(&ctx, 150, 2, |r, _| (r % 13) as f64 + 1.0);
-        let (_r, replaced) = normalize_block(&x, &[], 7);
-        assert!(replaced);
-        assert!(orthonormality_error(&[&x]) < 1e-10);
+        // An orthonormal two-block basis.
+        let v0 = TasMatrix::from_fn(&ctx, 400, 2, |r, c| ((r * 3 + c) % 11) as f64 - 5.0);
+        normalize_block_eager(&v0, &[], 1);
+        let v1 = TasMatrix::from_fn(&ctx, 400, 2, |r, c| ((r * 7 + 5 * c) % 13) as f64 - 6.0);
+        ortho_against_eager(&[&v0], &v1);
+        normalize_block_eager(&v1, &[&v0], 2);
+        let basis = [&v0, &v1];
+
+        let mkx = || TasMatrix::from_fn(&ctx, 400, 2, |r, c| ((r * 5 + c) % 17) as f64 - 8.0);
+        let xe = mkx();
+        let xf = mkx();
+        let (ce, re, _) = ortho_normalize_with(&basis, &xe, 9, false);
+        let (cf, rf, _) = ortho_normalize_with(&basis, &xf, 9, true);
+        crate::util::prop::assert_close(&ce.data, &cf.data, 1e-12, 1e-12, "c").unwrap();
+        crate::util::prop::assert_close(&re.data, &rf.data, 1e-12, 1e-12, "r").unwrap();
+        crate::util::prop::assert_close(
+            &xe.to_colmajor(),
+            &xf.to_colmajor(),
+            1e-12,
+            1e-12,
+            "x",
+        )
+        .unwrap();
+        // Both paths end orthonormal against the basis.
+        assert!(orthonormality_error(&[&v0, &v1, &xf]) < 1e-12);
     }
 }

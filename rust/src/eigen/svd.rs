@@ -5,6 +5,12 @@
 //! We compute the eigenpairs of the symmetric PSD operator `AᵀA` with the
 //! Block Krylov–Schur solver: singular values are the square roots of its
 //! eigenvalues and the Ritz vectors are right singular vectors.
+//!
+//! The dense update chains (reorthogonalization, restart) run through
+//! whichever path the context selects — the eager Table-1 reference ops
+//! or the §3.4 fused lazy-evaluation pipeline
+//! ([`crate::dense::DenseCtx::set_fused`]); the SVD driver itself is
+//! path-agnostic.
 
 use super::dense_eig::Which;
 use super::krylov_schur::{solve, EigenConfig, EigenResult};
@@ -143,6 +149,41 @@ mod tests {
                 norm,
                 res.singular_values[j]
             );
+        }
+    }
+
+    #[test]
+    fn fused_em_svd_matches_eager_im() {
+        let mut rng = Rng::new(23);
+        let mut coo = CooMatrix::new(160, 160);
+        for _ in 0..700 {
+            coo.push(rng.gen_range(160) as u32, rng.gen_range(160) as u32);
+        }
+        coo.sort_dedup();
+        let cfg = EigenConfig {
+            nev: 3,
+            block_size: 2,
+            num_blocks: 8,
+            tol: 1e-8,
+            max_restarts: 200,
+            which: Which::LargestAlgebraic,
+            seed: 41,
+            compute_eigenvectors: false,
+        };
+        let eager_im = {
+            let ctx = DenseCtx::mem_for_tests(64);
+            let op = build_gram_operator(&coo, 64, None, SpmmOpts::default(), 2);
+            svd(&op, &ctx, &cfg)
+        };
+        let fused_em = {
+            let ctx = DenseCtx::em_for_tests(64);
+            ctx.set_fused(true);
+            let op = build_gram_operator(&coo, 64, Some(&ctx.fs), SpmmOpts::default(), 2);
+            svd(&op, &ctx, &cfg)
+        };
+        assert!(eager_im.converged && fused_em.converged);
+        for (a, b) in eager_im.singular_values.iter().zip(&fused_em.singular_values) {
+            assert!((a - b).abs() < 1e-6 * a.max(1.0), "{a} vs {b}");
         }
     }
 

@@ -9,9 +9,12 @@ use crate::dense::{
     mv_times_mat_add_mv, mv_trans_mv, tas::mv_random, DenseCtx, NativeKernels, SmallMat,
     TasMatrix,
 };
-use crate::eigen::{solve, CsrMode, CsrOperator, EigenConfig, Operator, SpmmOperator, Which};
+use crate::eigen::{
+    ortho_normalize, solve, CsrMode, CsrOperator, EigenConfig, Operator, SpmmOperator, Which,
+};
 use crate::graph::Dataset;
-use crate::safs::{Safs, SafsConfig, WaitMode};
+use crate::safs::{IoStats, Safs, SafsConfig, WaitMode};
+use std::collections::BTreeMap;
 use crate::sparse::{build_matrix_opts, BuildTarget, CooMatrix, CsrMatrix};
 use crate::spmm::{spmm, spmm_csr, spmm_trilinos_like, DenseBlock, SpmmOpts};
 use crate::util::humansize::{fmt_bytes, fmt_throughput};
@@ -242,6 +245,81 @@ pub fn fig9(cfg: &BenchCfg, n: usize, m: usize, b: usize) -> Table {
     t
 }
 
+// ------------------------------------------------------------- Fig 9b
+
+/// Measure one full CGS2 + Cholesky-QR chain (§3.4's dominant
+/// reorthogonalization workload) over an EM subspace of `m/b` streamed
+/// basis blocks, in eager and fused mode.  Returns
+/// `(label, runtime_secs, io_delta)` rows — the raw data behind
+/// [`fig9_fusion`], also used by the I/O-accounting regression tests.
+pub fn fig9_fusion_data(
+    cfg: &BenchCfg,
+    n: usize,
+    m: usize,
+    b: usize,
+) -> Vec<(&'static str, f64, IoStats)> {
+    assert_eq!(m % b, 0, "m must be a multiple of b");
+    let mut rows = Vec::new();
+    for (label, fused) in [("eager (op-by-op)", false), ("fused (lazy eval)", true)] {
+        let fs = Safs::new(cfg.safs_config());
+        // cache_slots = 1: only the newest block is resident, the basis
+        // streams from the array — the paper's §3.4.4 configuration.
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            cfg.interval_rows,
+            cfg.threads,
+            8,
+            1,
+            Arc::new(NativeKernels),
+        );
+        ctx.set_fused(fused);
+        let mats: Vec<TasMatrix> = (0..m / b)
+            .map(|i| {
+                let x = TasMatrix::zeros(&ctx, n, b);
+                mv_random(&x, 500 + i as u64);
+                x
+            })
+            .collect();
+        let refs: Vec<&TasMatrix> = mats.iter().collect();
+        let x = TasMatrix::zeros(&ctx, n, b);
+        mv_random(&x, 77);
+        let before = fs.stats();
+        let (_, el) = time_it(|| {
+            let _ = ortho_normalize(&refs, &x, 1234);
+        });
+        rows.push((label, el, fs.stats().delta_since(&before)));
+    }
+    rows
+}
+
+/// Figure 9b (beyond the paper): the §3.4 lazy-evaluation ablation —
+/// eager op-by-op CGS2 vs the fused single-pass-per-round pipeline, on
+/// the same EM dense-matrix configuration as Figure 9.
+pub fn fig9_fusion(cfg: &BenchCfg, n: usize, m: usize, b: usize) -> Table {
+    let mut t = Table::new(
+        "Figure 9b: lazy-evaluation fusion on EM CGS2 reorthogonalization",
+        &["path", "runtime", "read", "written", "total", "bytes vs eager"],
+    );
+    let rows = fig9_fusion_data(cfg, n, m, b);
+    let base = rows[0].2.total_bytes().max(1);
+    for (label, el, io) in &rows {
+        t.row(vec![
+            (*label).into(),
+            secs(*el),
+            fmt_bytes(io.bytes_read),
+            fmt_bytes(io.bytes_written),
+            fmt_bytes(io.total_bytes()),
+            ratio(io.total_bytes() as f64 / base as f64),
+        ]);
+    }
+    t.note(format!(
+        "n={n}, m={m}, b={b}; fused CGS2 streams the subspace once per round (2 reads total) \
+         vs 4 for eager, and the normalization grams ride along in the same walks"
+    ));
+    t
+}
+
 // ----------------------------------------------------------- Fig 10 / 11
 
 /// Single-threaded dense comparators for op1 (stand-ins for MKL/Trilinos
@@ -361,6 +439,9 @@ pub struct EigenRun {
     pub bytes_read: u64,
     pub bytes_written: u64,
     pub eigenvalues: Vec<f64>,
+    /// Per-phase SAFS traffic (spmm / ortho / restart) from
+    /// [`crate::metrics::PhaseIo`].
+    pub phase_io: BTreeMap<String, IoStats>,
 }
 
 /// Run the Block KrylovSchur solver in one of the Fig. 12 modes.
@@ -368,7 +449,7 @@ pub fn run_eigensolver(
     cfg: &BenchCfg,
     coo: &CooMatrix,
     nev: usize,
-    mode: &str, // "fe-im" | "fe-sem" | "trilinos"
+    mode: &str, // "fe-im" | "fe-sem" | "fe-sem-fused" | "trilinos"
 ) -> EigenRun {
     // §4.3 parameter choices.
     let (b, nb) = if nev >= 16 { (4, nev) } else { (1, 2 * nev) };
@@ -388,7 +469,7 @@ pub fn run_eigensolver(
             Box::new(SpmmOperator::new(cfg.build_im(coo), SpmmOpts::default(), cfg.threads)),
             cfg.dense_ctx_native(fs.clone(), false),
         ),
-        "fe-sem" => (
+        "fe-sem" | "fe-sem-fused" => (
             Box::new(SpmmOperator::new(
                 cfg.build_sem(coo, &fs, "eigen-a"),
                 SpmmOpts::default(),
@@ -408,6 +489,7 @@ pub fn run_eigensolver(
         ),
         _ => panic!("unknown mode {mode}"),
     };
+    ctx.set_fused(mode == "fe-sem-fused");
     let before = fs.stats();
     let (res, runtime) = time_it(|| solve(op.as_ref(), &ctx, &ecfg));
     let delta = fs.stats().delta_since(&before);
@@ -420,6 +502,7 @@ pub fn run_eigensolver(
         bytes_read: delta.bytes_read,
         bytes_written: delta.bytes_written,
         eigenvalues: res.eigenvalues,
+        phase_io: ctx.io_phases.snapshot(),
     }
 }
 
@@ -429,8 +512,8 @@ pub fn fig12(cfg: &BenchCfg, nevs: &[usize], datasets: &[Dataset]) -> Table {
     let mut t = Table::new(
         "Figure 12: eigensolver performance relative to FE-IM KrylovSchur",
         &[
-            "graph", "nev", "FE-IM", "Trilinos", "FE-SEM", "Tri/IM", "SEM/IM", "SEM mem",
-            "IM mem",
+            "graph", "nev", "FE-IM", "Trilinos", "FE-SEM", "FE-SEM-fused", "Tri/IM",
+            "SEM/IM", "fused bytes/SEM", "SEM mem", "IM mem",
         ],
     );
     for &ds in datasets {
@@ -442,20 +525,26 @@ pub fn fig12(cfg: &BenchCfg, nevs: &[usize], datasets: &[Dataset]) -> Table {
             let im = run_eigensolver(cfg, &coo, nev, "fe-im");
             let tri = run_eigensolver(cfg, &coo, nev, "trilinos");
             let sem = run_eigensolver(cfg, &coo, nev, "fe-sem");
+            let semf = run_eigensolver(cfg, &coo, nev, "fe-sem-fused");
+            let sem_bytes = (sem.bytes_read + sem.bytes_written).max(1);
+            let semf_bytes = semf.bytes_read + semf.bytes_written;
             t.row(vec![
                 ds.name().into(),
                 format!("{nev}"),
                 secs(im.runtime),
                 secs(tri.runtime),
                 secs(sem.runtime),
+                secs(semf.runtime),
                 ratio(im.runtime / tri.runtime),
                 ratio(im.runtime / sem.runtime),
+                ratio(semf_bytes as f64 / sem_bytes as f64),
                 fmt_bytes(sem.peak_mem),
                 fmt_bytes(im.peak_mem),
             ]);
         }
     }
     t.note("paper shape: FE-SEM ≥ 0.4 of FE-IM (≈0.5 for small nev); FE-IM beats Trilinos; SEM memory ≈ flat in nev");
+    t.note("FE-SEM-fused: §3.4 lazy-evaluation pipeline; 'fused bytes/SEM' < 1.0 shows the I/O saving");
     t
 }
 
@@ -566,6 +655,21 @@ mod tests {
     fn fig9_smoke() {
         let t = fig9(&tiny_cfg(), 1000, 8, 2);
         assert_eq!(t.rows.len(), 6);
+    }
+
+    #[test]
+    fn fig9_fusion_smoke_and_saving() {
+        let rows = fig9_fusion_data(&tiny_cfg(), 2000, 8, 2);
+        assert_eq!(rows.len(), 2);
+        let (eager, fused) = (&rows[0].2, &rows[1].2);
+        assert!(
+            fused.total_bytes() < eager.total_bytes(),
+            "fusion must reduce SAFS bytes: {} vs {}",
+            fused.total_bytes(),
+            eager.total_bytes()
+        );
+        let t = fig9_fusion(&tiny_cfg(), 2000, 8, 2);
+        assert_eq!(t.rows.len(), 2);
     }
 
     #[test]

@@ -42,6 +42,8 @@ COMMON OPTIONS:
   --threads <t>      worker threads (default 4)
   --dilation <d>     device time dilation (default 48; see DESIGN.md)
   --sem              semi-external mode (matrix + subspace on SSDs)
+  --fused            route MultiVec chains through the lazy-evaluation
+                     fused pipeline (one subspace pass per CGS2 round)
   --xla              dispatch dense kernels to the AOT JAX/Pallas artifacts
   --cols <b>         dense-matrix width for spmm (default 4)
   --exp <id>         figure/table id for `figures`
@@ -143,10 +145,16 @@ fn cmd_eigen(args: &Args, as_svd: bool) -> i32 {
             Arc::new(NativeKernels)
         };
         let ctx = cfg.dense_ctx(fs.clone(), sem, kernels);
+        ctx.set_fused(args.flag("fused"));
         let mode = if sem { "FE-SEM" } else { "FE-IM" };
         eprintln!(
-            "solving: {} nev={nev} b={} NB={} tol={:.0e} dense-kernels={}",
-            mode, ecfg.block_size, ecfg.num_blocks, ecfg.tol, ctx.kernels.name()
+            "solving: {} nev={nev} b={} NB={} tol={:.0e} dense-kernels={} multivec={}",
+            mode,
+            ecfg.block_size,
+            ecfg.num_blocks,
+            ecfg.tol,
+            ctx.kernels.name(),
+            if ctx.is_fused() { "fused" } else { "eager" }
         );
 
         let before = fs.stats();
@@ -198,6 +206,7 @@ fn cmd_eigen(args: &Args, as_svd: bool) -> i32 {
             fmt_bytes(delta.bytes_read),
             fmt_bytes(delta.bytes_written)
         );
+        println!("per-phase SSD traffic:\n{}", ctx.io_phases.report());
         Ok(())
     };
     match run() {
@@ -278,6 +287,7 @@ fn cmd_figures(args: &Args) -> i32 {
         }
         if all || exp == "fig9" {
             harness::fig9(&cfg, dense_n, 64, 4).print();
+            harness::fig9_fusion(&cfg, dense_n, 64, 4).print();
             ran = true;
         }
         if all || exp == "fig10" {

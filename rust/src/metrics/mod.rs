@@ -1,8 +1,10 @@
-//! Lightweight runtime metrics: atomic counters and per-phase wall-clock
-//! accumulators.  The eigensolver uses these to report the paper's
-//! breakdown (SpMM time vs reorthogonalization time, bytes read/written,
-//! memory model) and the bench harness uses them for figure rows.
+//! Lightweight runtime metrics: atomic counters, per-phase wall-clock
+//! accumulators, and per-phase SAFS I/O accumulators.  The eigensolver
+//! uses these to report the paper's breakdown (SpMM time vs
+//! reorthogonalization time, bytes read/written, memory model) and the
+//! bench harness uses them for figure rows.
 
+use crate::safs::IoStats;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -78,6 +80,74 @@ impl PhaseTimers {
     }
 }
 
+/// Accumulates SAFS I/O deltas per named solver phase (spmm / ortho /
+/// restart / …), the I/O analogue of [`PhaseTimers`].  A phase is
+/// measured by snapshotting [`crate::safs::Safs::stats`] around the
+/// phase's work ([`IoStats::delta_since`]) and folding the delta in; the
+/// harness reads the totals to report the paper-style per-phase byte
+/// breakdown (§3.4's claim that reorthogonalization dominates traffic).
+///
+/// Scopes must not nest over the same filesystem — nested scopes would
+/// double-count the inner phase's bytes.
+#[derive(Default)]
+pub struct PhaseIo {
+    phases: Mutex<BTreeMap<String, IoStats>>,
+}
+
+impl PhaseIo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f` and attribute the I/O it causes on `fs` to `phase`.
+    pub fn scope<T>(&self, fs: &crate::safs::Safs, phase: &str, f: impl FnOnce() -> T) -> T {
+        let before = fs.stats();
+        let r = f();
+        self.add(phase, &fs.stats().delta_since(&before));
+        r
+    }
+
+    /// Fold a pre-measured delta into `phase`.
+    pub fn add(&self, phase: &str, delta: &IoStats) {
+        let mut m = self.phases.lock().unwrap();
+        m.entry(phase.to_string()).or_default().accumulate(delta);
+    }
+
+    pub fn get(&self, phase: &str) -> IoStats {
+        self.phases.lock().unwrap().get(phase).cloned().unwrap_or_default()
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, IoStats> {
+        self.phases.lock().unwrap().clone()
+    }
+
+    pub fn reset(&self) {
+        self.phases.lock().unwrap().clear();
+    }
+
+    /// Render a sorted "phase: read/written" report.
+    pub fn report(&self) -> String {
+        let snap = self.snapshot();
+        let total: u64 = snap.values().map(|s| s.total_bytes()).sum();
+        let mut rows: Vec<(&String, &IoStats)> = snap.iter().collect();
+        rows.sort_by_key(|(_, s)| std::cmp::Reverse(s.total_bytes()));
+        let mut out = String::new();
+        for (name, s) in rows {
+            let pct = if total > 0 {
+                100.0 * s.total_bytes() as f64 / total as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "  {name:<28} read {:>10}  written {:>10}  {pct:>5.1}%\n",
+                crate::util::humansize::fmt_bytes(s.bytes_read),
+                crate::util::humansize::fmt_bytes(s.bytes_written)
+            ));
+        }
+        out
+    }
+}
+
 /// Tracker for the peak "would-be" resident memory of the eigensolver's
 /// explicit allocations (dense matrices, buffers).  The paper reports
 /// "120GB memory" for the page graph; we track our modeled footprint the
@@ -140,6 +210,30 @@ mod tests {
         let rep = t.report();
         assert!(rep.contains("ortho"));
         assert!(rep.contains("spmm"));
+    }
+
+    #[test]
+    fn phase_io_accumulates_per_phase() {
+        use crate::safs::{Safs, SafsConfig};
+        let fs = Safs::new(SafsConfig::untimed());
+        let io = PhaseIo::new();
+        let f = fs.create("x");
+        io.scope(&fs, "write", || {
+            fs.write_sync(&f, 0, vec![0u8; 1000]);
+        });
+        io.scope(&fs, "read", || {
+            let _ = fs.read_sync(&f, 0, 500);
+        });
+        io.scope(&fs, "write", || {
+            fs.write_sync(&f, 0, vec![0u8; 200]);
+        });
+        assert_eq!(io.get("write").bytes_written, 1200);
+        assert_eq!(io.get("write").bytes_read, 0);
+        assert_eq!(io.get("read").bytes_read, 500);
+        assert_eq!(io.snapshot().len(), 2);
+        assert!(io.report().contains("write"));
+        io.reset();
+        assert_eq!(io.get("write").bytes_written, 0);
     }
 
     #[test]

@@ -68,6 +68,29 @@ pub fn default_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
+/// Locate the artifacts dir for tests/benches: `$FLASHEIGEN_ARTIFACTS` if
+/// it holds a manifest, else walk up from CWD looking for `artifacts/`.
+/// Lives here (not in the PJRT module) so both the real and the stub
+/// runtime builds share one lookup.
+pub fn find_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("FLASHEIGEN_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,9 +1,20 @@
 //! PJRT runtime bridge: manifest parsing, lazy compilation of the
 //! AOT-lowered JAX/Pallas HLO artifacts, and the XLA-backed
 //! [`crate::dense::DenseKernels`] implementation used on the hot path.
+//!
+//! The PJRT binding crate is only available online, so the real bridge is
+//! gated behind the `xla` cargo feature; without it, [`XlaKernels`] is a
+//! stub whose `load` reports the missing feature and every caller falls
+//! back to the native kernels (the CLI prints the error, tests skip).
 
 pub mod manifest;
+
+#[cfg(feature = "xla")]
 pub mod xla;
 
-pub use manifest::{ArtifactMeta, Manifest};
-pub use xla::{find_artifacts_dir, XlaKernels};
+#[cfg(not(feature = "xla"))]
+#[path = "xla_stub.rs"]
+pub mod xla;
+
+pub use manifest::{find_artifacts_dir, ArtifactMeta, Manifest};
+pub use xla::XlaKernels;

@@ -13,7 +13,7 @@ use crate::dense::kernels::{DenseKernels, NativeKernels};
 use crate::dense::SmallMat;
 use crate::metrics::Counter;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::Mutex;
 
 struct RtInner {
@@ -176,22 +176,3 @@ fn lit2(data: &[f64], d0: usize, d1: usize) -> Result<xla::Literal, String> {
         .map_err(|e| format!("reshape: {e:?}"))
 }
 
-/// Locate the artifacts dir for tests/benches: walks up from CWD.
-pub fn find_artifacts_dir() -> Option<PathBuf> {
-    if let Ok(p) = std::env::var("FLASHEIGEN_ARTIFACTS") {
-        let p = PathBuf::from(p);
-        if p.join("manifest.json").exists() {
-            return Some(p);
-        }
-    }
-    let mut dir = std::env::current_dir().ok()?;
-    loop {
-        let cand = dir.join("artifacts");
-        if cand.join("manifest.json").exists() {
-            return Some(cand);
-        }
-        if !dir.pop() {
-            return None;
-        }
-    }
-}

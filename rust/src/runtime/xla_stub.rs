@@ -1,0 +1,70 @@
+//! Offline stand-in for the PJRT runtime (built without the `xla`
+//! feature).
+//!
+//! The API mirrors `runtime/xla.rs` exactly so callers compile unchanged:
+//! [`XlaKernels::load`] always fails with an explanatory message, the CLI
+//! surfaces it, and tests/benches that need artifact dispatch skip.  If a
+//! stub instance is ever constructed anyway, the [`DenseKernels`] impl
+//! forwards every call to the native kernels, so correctness never
+//! depends on the feature.
+
+use crate::dense::kernels::{DenseKernels, NativeKernels};
+use crate::dense::SmallMat;
+use crate::metrics::Counter;
+use std::path::Path;
+
+/// Dispatch + execution statistics (mirrors the real bridge).
+#[derive(Default)]
+pub struct DispatchStats {
+    pub xla_calls: Counter,
+    pub native_calls: Counter,
+}
+
+/// Stub kernels: same surface as the PJRT-backed implementation.
+pub struct XlaKernels {
+    fallback: NativeKernels,
+    pub stats: DispatchStats,
+}
+
+impl XlaKernels {
+    /// Always fails: the PJRT bindings are not compiled in.
+    pub fn load(_dir: &Path) -> Result<XlaKernels, String> {
+        Err("built without the `xla` cargo feature: PJRT dispatch is \
+             unavailable in this build; dense kernels run natively"
+            .into())
+    }
+
+    pub fn load_default() -> Result<XlaKernels, String> {
+        Self::load(Path::new("."))
+    }
+
+    pub fn num_artifacts(&self) -> usize {
+        0
+    }
+}
+
+impl DenseKernels for XlaKernels {
+    fn tsgemm(&self, x: &[f64], rows: usize, m: usize, bmat: &SmallMat, out: &mut [f64]) {
+        self.stats.native_calls.inc();
+        self.fallback.tsgemm(x, rows, m, bmat, out);
+    }
+
+    fn gram(
+        &self,
+        alpha: f64,
+        x: &[f64],
+        y: &[f64],
+        rows: usize,
+        m: usize,
+        b: usize,
+        out: &mut SmallMat,
+    ) {
+        self.stats.native_calls.inc();
+        self.fallback.gram(alpha, x, y, rows, m, b, out);
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-stub"
+    }
+}
+

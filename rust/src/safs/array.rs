@@ -35,6 +35,22 @@ impl IoStats {
         }
     }
 
+    /// Add another snapshot/delta into this one (the reduction used by
+    /// per-phase accounting, [`crate::metrics::PhaseIo`]).
+    pub fn accumulate(&mut self, other: &IoStats) {
+        self.bytes_read += other.bytes_read;
+        self.bytes_written += other.bytes_written;
+        self.read_reqs += other.read_reqs;
+        self.write_reqs += other.write_reqs;
+        if self.per_device.len() < other.per_device.len() {
+            self.per_device.resize(other.per_device.len(), (0, 0));
+        }
+        for (i, (r, w)) in other.per_device.iter().enumerate() {
+            self.per_device[i].0 += r;
+            self.per_device[i].1 += w;
+        }
+    }
+
     /// Difference of two snapshots (for measuring one operation).
     pub fn delta_since(&self, earlier: &IoStats) -> IoStats {
         IoStats {

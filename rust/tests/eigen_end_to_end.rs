@@ -97,6 +97,10 @@ fn xla_and_native_kernels_agree_on_eigenvalues() {
         eprintln!("SKIP: artifacts not found");
         return;
     };
+    if let Err(e) = XlaKernels::load(&dir) {
+        eprintln!("SKIP: {e}");
+        return;
+    }
     let coo = Dataset::Twitter.generate(2e-5, 3);
     let mut coo = coo;
     coo.symmetrize();

@@ -2,8 +2,12 @@
 //! workers, batching/partitioning, and state management (what `proptest`
 //! would cover, via the in-tree `util::prop` substrate).
 
-use flasheigen::dense::{mv_norm, mv_scale, mv_trans_mv, tas::mv_random, DenseCtx, TasMatrix};
-use flasheigen::eigen::sym_eig;
+use flasheigen::dense::{
+    mv_add_mv, mv_dot, mv_norm, mv_scale, mv_times_mat_add_mv, mv_trans_mv, tas::mv_random,
+    DenseCtx, FusedPipeline, NativeKernels, SmallMat, TasMatrix,
+};
+use flasheigen::eigen::ortho::{normalize_block_eager, ortho_against_eager};
+use flasheigen::eigen::{ortho_normalize_with, sym_eig};
 use flasheigen::graph::{gnm, gnm_undirected};
 use flasheigen::safs::{Safs, SafsConfig, StripeMap};
 use flasheigen::sparse::{build_matrix, build_matrix_opts, BuildTarget, CsrMatrix};
@@ -11,6 +15,7 @@ use flasheigen::spmm::{spmm, spmm_csr, DenseBlock, SpmmOpts};
 use flasheigen::util::prop::{assert_close, run_prop};
 use flasheigen::util::rng::Rng;
 use flasheigen::util::threadpool::{parallel_for, split_ranges};
+use std::sync::Arc;
 
 #[test]
 fn prop_owned_queue_routing_complete_and_unique() {
@@ -190,6 +195,131 @@ fn prop_scale_scales_norms() {
             if (ny[j] - alpha.abs() * nx[j]).abs() > 1e-9 * (1.0 + nx[j]) {
                 return Err(format!("‖αx‖ != |α|‖x‖ at col {j}"));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_pipeline_matches_eager_ops() {
+    // A randomized op chain (axpby → op1 → gram → dot) through the fused
+    // pipeline must reproduce the eager Table-1 reference within 1e-12,
+    // on both backings.
+    run_prop("fused-vs-eager-ops", 10, |g| {
+        let n = g.usize_in(2, 400);
+        let b = g.usize_in(1, 4);
+        let p_blocks = g.usize_in(1, 4);
+        let em = g.bool();
+        let seed = g.u64();
+        let alpha = g.f64_in(-2.0, 2.0);
+        let beta = g.f64_in(-2.0, 2.0);
+        let ctx = if em {
+            DenseCtx::em_for_tests(96)
+        } else {
+            DenseCtx::mem_for_tests(96)
+        };
+        let mats: Vec<TasMatrix> = (0..p_blocks)
+            .map(|i| {
+                let m = TasMatrix::zeros(&ctx, n, b);
+                mv_random(&m, seed ^ (i as u64 + 1));
+                m
+            })
+            .collect();
+        let refs: Vec<&TasMatrix> = mats.iter().collect();
+        let x = TasMatrix::zeros(&ctx, n, b);
+        mv_random(&x, seed ^ 0x100);
+        let y = TasMatrix::zeros(&ctx, n, b);
+        mv_random(&y, seed ^ 0x200);
+        let bsmall =
+            SmallMat::from_fn(p_blocks * b, b, |r, c| ((r * 3 + c) % 7) as f64 - 3.0);
+
+        // Eager reference chain.
+        let t_e = TasMatrix::zeros(&ctx, n, b);
+        mv_add_mv(alpha, &x, beta, &y, &t_e);
+        mv_times_mat_add_mv(1.5, &refs, &bsmall, 0.5, &t_e);
+        let g_e = mv_trans_mv(1.0, &refs, &t_e);
+        let d_e = mv_dot(&t_e, &x);
+
+        // Same chain as one fused walk.
+        let t_f = TasMatrix::zeros(&ctx, n, b);
+        let mut p = FusedPipeline::new(&ctx);
+        p.axpby(alpha, &x, beta, &y, &t_f);
+        p.gemm_update(1.5, &refs, bsmall.clone(), 0.5, &t_f);
+        let hg = p.gram(1.0, &refs, &t_f);
+        let hd = p.dot(&t_f, &x);
+        let res = p.materialize();
+
+        assert_close(&t_f.to_colmajor(), &t_e.to_colmajor(), 1e-12, 1e-12, "target")?;
+        assert_close(&res.gram(hg).data, &g_e.data, 1e-12, 1e-9, "gram")?;
+        assert_close(res.dot(hd), &d_e, 1e-12, 1e-9, "dot")
+    });
+}
+
+#[test]
+fn prop_fused_cgs2_matches_eager_reference() {
+    // Full CGS2 + Cholesky-QR chain: fused (BCGS2-PIP) vs eager within
+    // 1e-12 on randomized shapes against an orthonormal basis.
+    run_prop("fused-cgs2-vs-eager", 8, |g| {
+        let b = g.usize_in(1, 3);
+        let p_blocks = g.usize_in(1, 3);
+        // Keep the basis well-conditioned: n well above the subspace.
+        let n = g.usize_in(8 * (p_blocks + 1) * b, 400usize.max(8 * (p_blocks + 1) * b + 1));
+        let seed = g.u64();
+        let ctx = DenseCtx::mem_for_tests(64);
+        let mut basis: Vec<TasMatrix> = Vec::new();
+        for i in 0..p_blocks {
+            let v = TasMatrix::zeros(&ctx, n, b);
+            mv_random(&v, seed ^ (i as u64 + 1));
+            let refs: Vec<&TasMatrix> = basis.iter().collect();
+            ortho_against_eager(&refs, &v);
+            normalize_block_eager(&v, &refs, seed ^ 0x99);
+            basis.push(v);
+        }
+        let refs: Vec<&TasMatrix> = basis.iter().collect();
+        let xe = TasMatrix::zeros(&ctx, n, b);
+        mv_random(&xe, seed ^ 0x55);
+        let xf = TasMatrix::zeros(&ctx, n, b);
+        mv_random(&xf, seed ^ 0x55);
+        let (ce, re, _) = ortho_normalize_with(&refs, &xe, 3, false);
+        let (cf, rf, _) = ortho_normalize_with(&refs, &xf, 3, true);
+        assert_close(&ce.data, &cf.data, 1e-12, 1e-12, "coefficients")?;
+        assert_close(&re.data, &rf.data, 1e-12, 1e-12, "r factor")?;
+        assert_close(&xe.to_colmajor(), &xf.to_colmajor(), 1e-12, 1e-12, "projected x")
+    });
+}
+
+#[test]
+fn prop_fused_im_em_bit_for_bit() {
+    // With one worker (deterministic reduction order) the fused pipeline
+    // must produce IDENTICAL bits over memory- and SSD-backed subspaces:
+    // the EM byte roundtrip is lossless and the arithmetic identical.
+    run_prop("fused-im-em-bitwise", 10, |g| {
+        let n = g.usize_in(1, 400);
+        let b = g.usize_in(1, 4);
+        let seed = g.u64();
+        let compute = |em: bool| -> Vec<f64> {
+            let fs = Safs::new(SafsConfig::untimed());
+            let ctx = DenseCtx::with(fs, em, 96, 1, 3, 1, Arc::new(NativeKernels));
+            ctx.set_fused(true);
+            let x = TasMatrix::zeros(&ctx, n, b);
+            let y = TasMatrix::zeros(&ctx, n, b);
+            mv_random(&x, seed);
+            mv_random(&y, seed ^ 1);
+            let t = TasMatrix::zeros(&ctx, n, b);
+            let mut p = FusedPipeline::new(&ctx);
+            p.axpby(1.25, &x, -0.5, &y, &t);
+            let hg = p.gram(2.0, &[&x], &t);
+            let hd = p.dot(&t, &y);
+            let res = p.materialize();
+            let mut v = t.to_colmajor();
+            v.extend_from_slice(&res.gram(hg).data);
+            v.extend_from_slice(res.dot(hd));
+            v
+        };
+        let im = compute(false);
+        let em = compute(true);
+        if im != em {
+            return Err("FE-IM vs FE-EM fused results are not bit-for-bit".into());
         }
         Ok(())
     });

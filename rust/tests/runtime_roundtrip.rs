@@ -18,7 +18,19 @@ fn kernels() -> Option<XlaKernels> {
             return None;
         }
     };
-    Some(XlaKernels::load(&dir).expect("load artifacts"))
+    match XlaKernels::load(&dir) {
+        Ok(k) => Some(k),
+        // Stub build: PJRT dispatch is compiled out — skip quietly.
+        #[cfg(not(feature = "xla"))]
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            None
+        }
+        // Real build: artifacts are present but broken — that is a
+        // genuine failure, not a skip.
+        #[cfg(feature = "xla")]
+        Err(e) => panic!("artifacts present but failed to load: {e}"),
+    }
 }
 
 fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
