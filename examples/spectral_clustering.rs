@@ -90,7 +90,13 @@ fn accuracy(assign: &[usize], truth: &[usize], k: usize) -> f64 {
     let mut perm: Vec<usize> = (0..k).collect();
     let mut best = 0usize;
     // Heap's algorithm over permutations (k ≤ 4 here).
-    fn permute(perm: &mut Vec<usize>, l: usize, assign: &[usize], truth: &[usize], best: &mut usize) {
+    fn permute(
+        perm: &mut Vec<usize>,
+        l: usize,
+        assign: &[usize],
+        truth: &[usize],
+        best: &mut usize,
+    ) {
         if l == perm.len() {
             let correct = assign
                 .iter()

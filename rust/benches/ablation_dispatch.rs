@@ -1,7 +1,9 @@
 //! Ablation (not in the paper): native Rust dense kernels vs the
 //! AOT-compiled JAX/Pallas artifacts through PJRT — the integration cost
 //! of the L2/L1 stack on the dense hot path.
-use flasheigen::dense::{mv_times_mat_add_mv, mv_trans_mv, tas::mv_random, DenseCtx, SmallMat, TasMatrix};
+use flasheigen::dense::{
+    mv_times_mat_add_mv, mv_trans_mv, tas::mv_random, DenseCtx, SmallMat, TasMatrix,
+};
 use flasheigen::harness::report::{ratio, secs, Table};
 use flasheigen::harness::BenchCfg;
 use flasheigen::runtime::{find_artifacts_dir, XlaKernels};
@@ -55,8 +57,22 @@ fn main() {
         };
         let (n1, n2) = run(false);
         let (x1, x2) = run(true);
-        t.row(vec!["op1".into(), format!("{m}"), format!("{b}"), secs(n1), secs(x1), ratio(n1 / x1)]);
-        t.row(vec!["op3".into(), format!("{m}"), format!("{b}"), secs(n2), secs(x2), ratio(n2 / x2)]);
+        t.row(vec![
+            "op1".into(),
+            format!("{m}"),
+            format!("{b}"),
+            secs(n1),
+            secs(x1),
+            ratio(n1 / x1),
+        ]);
+        t.row(vec![
+            "op3".into(),
+            format!("{m}"),
+            format!("{b}"),
+            secs(n2),
+            secs(x2),
+            ratio(n2 / x2),
+        ]);
     }
     t.note("measures the PJRT dispatch cost (literal copies + execution) vs the native kernels");
     t.print();

@@ -1,7 +1,8 @@
 //! Figure 9: I/O optimization ablation on external-memory dense matrix
 //! multiplication (MvTransMv form), plus the §3.4 lazy-evaluation
-//! fusion ablation on CGS2 reorthogonalization (Figure 9b).
-use flasheigen::harness::{fig9, fig9_fusion, BenchCfg};
+//! fusion ablation on CGS2 reorthogonalization (Figure 9b) and the
+//! streamed SpMM operator boundary ablation (Figure 9c).
+use flasheigen::harness::{fig9, fig9_fusion, fig9_stream, BenchCfg};
 
 fn main() {
     let cfg = BenchCfg::from_env();
@@ -9,4 +10,7 @@ fn main() {
     let n = (60_000_000.0 * cfg.scale * 16.0) as usize;
     fig9(&cfg, n.max(4096), 64, 4).print();
     fig9_fusion(&cfg, n.max(4096), 64, 4).print();
+    // 16x the base scale so the subspace spans several row intervals —
+    // streaming is the identity transformation on a single interval.
+    fig9_stream(&cfg, 16.0, 4).print();
 }

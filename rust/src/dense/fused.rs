@@ -9,8 +9,9 @@
 //! [`FusedPipeline::materialize`], which walks each row interval exactly
 //! once:
 //!
-//! 1. every distinct operand matrix's interval is loaded **once** (all
-//!    SSD reads issued asynchronously before the first wait),
+//! 1. every distinct operand matrix's interval is loaded **once** per
+//!    walk (all SSD reads of a load batch issued asynchronously before
+//!    the first wait),
 //! 2. the whole chain is applied in RAM, later steps seeing the values
 //!    produced by earlier steps of the same pipeline,
 //! 3. each mutated matrix's interval is written back **once**.
@@ -24,11 +25,35 @@
 //! reads the subspace once per round instead of twice (see there for the
 //! BCGS2-PIP reformulation).
 //!
-//! Memory: one walk holds one row interval of every distinct operand per
-//! worker (the eager path's §3.4.3 group bound applies per step; a fused
-//! walk's bound is the pipeline's total distinct width).  Pipelines over
-//! very wide operand sets should be split by the caller; the eigensolver
-//! chains stay within a few hundred columns.
+//! # Streamed operands
+//!
+//! A pipeline can also *source* a matrix from an [`IntervalProducer`]
+//! ([`FusedPipeline::source`]): during the walk the producer is asked for
+//! each interval's contents, which then feed the rest of the chain and
+//! are written to the target matrix once — no intermediate on-SSD round
+//! trip.  This is how the SpMM operator boundary streams
+//! ([`crate::spmm::StreamedSpmm`]): the sparse multiply's output rows
+//! flow straight into the consuming reorthogonalization walk.
+//! Constraint: a producer must not read matrices that the same walk
+//! holds as loaded operands at the time the source runs; source steps
+//! execute first in their phase and hold no operand guards, so this only
+//! matters for producers sourced *after* reads of long-lived operands.
+//!
+//! # Memory (§3.4.3 group bound)
+//!
+//! The walk executes the chain in *phases* (split at write→read
+//! dependencies).  Within a phase, operands that are only read through
+//! the many-matrix side of `gemm`/`gram` are loaded in **chunks of
+//! `ctx.group_size`** and released as soon as the chunk's contributions
+//! are applied — the Figure-5 group bound.  Operands used as a reduction
+//! right-hand side, an elementwise input, or across several phases stay
+//! loaded for exactly their live range (and are still read only once per
+//! walk).  Peak per-worker footprint is therefore
+//! `group_size + #pinned + #written` intervals rather than one interval
+//! of *every* distinct operand; the eigensolver's chains keep the pinned
+//! and written sets to a few block-width matrices.  All working buffers
+//! register with `ctx.mem`, so [`crate::metrics::PhaseIo::scope_tracked`]
+//! can report the per-phase peak.
 //!
 //! ```
 //! # use flasheigen::dense::{DenseCtx, TasMatrix, SmallMat, FusedPipeline};
@@ -47,6 +72,7 @@
 use super::ops::{make_pools, total_cols};
 use super::small::SmallMat;
 use super::tas::{DenseCtx, Fetch, IntervalGuard, TasMatrix};
+use crate::metrics::MemTracker;
 use crate::util::threadpool::parallel_for;
 use std::sync::{Arc, Mutex};
 
@@ -57,6 +83,17 @@ pub struct GramHandle(usize);
 /// Handle to a deferred `dot`/`norm` reduction result.
 #[derive(Clone, Copy, Debug)]
 pub struct DotHandle(usize);
+
+/// A source of column-major interval data for a pipeline target whose
+/// contents are *computed* during the walk instead of loaded — e.g. the
+/// SpMM engine streaming `A·X` straight into the consuming chain.
+///
+/// `produce` is called concurrently for different intervals from the
+/// walk's worker threads and must return exactly `rows × n_cols` values
+/// (column-major) for the target's interval `iv`.
+pub trait IntervalProducer: Sync {
+    fn produce(&self, iv: usize, rows: usize) -> Vec<f64>;
+}
 
 /// One recorded operation.  Matrices are indices into the pipeline's
 /// distinct-operand registry, so aliasing handles resolve to one load.
@@ -73,6 +110,8 @@ enum Step {
     Gram { alpha: f64, aa: Vec<usize>, bb: usize, out: usize },
     /// `dots[out][j] += Σ_i a[i,j]·b[i,j]` (MvDot reduction).
     Dot { a: usize, b: usize, out: usize },
+    /// `target ← producer(iv)` — a streamed operand (§3.4 SpMM fusion).
+    Source { target: usize, producer: usize },
 }
 
 impl Step {
@@ -101,6 +140,7 @@ impl Step {
                 r
             }
             Step::Dot { a, b, .. } => vec![*a, *b],
+            Step::Source { .. } => Vec::new(),
         }
     }
 
@@ -109,7 +149,8 @@ impl Step {
         match self {
             Step::Gemm { target, .. }
             | Step::Axpby { target, .. }
-            | Step::ScaleDiag { target, .. } => Some(*target),
+            | Step::ScaleDiag { target, .. }
+            | Step::Source { target, .. } => Some(*target),
             Step::Gram { .. } | Step::Dot { .. } => None,
         }
     }
@@ -121,6 +162,7 @@ pub struct FusedPipeline<'a> {
     /// Distinct physical matrices touched by the chain.
     mats: Vec<&'a TasMatrix>,
     steps: Vec<Step>,
+    producers: Vec<Box<dyn IntervalProducer + 'a>>,
     gram_shapes: Vec<(usize, usize)>,
     dot_lens: Vec<usize>,
 }
@@ -150,12 +192,167 @@ impl FusedResults {
     }
 }
 
+/// The static execution plan of one pipeline: write→read dependency
+/// phases plus, per phase, which operands are pinned (loaded for their
+/// whole live range) and which stream through `group_size`-bounded
+/// chunks.
+struct Plan {
+    /// Step indices per phase.
+    phases: Vec<Vec<usize>>,
+    /// Whether an operand's prior contents must be loaded at walk start
+    /// (written matrices) or at its first phase (read-only matrices).
+    needs_load: Vec<bool>,
+    written: Vec<bool>,
+    /// Per phase: read-only operands streamed through chunked loads
+    /// (first-appearance order over the phase's `aa` lists).
+    grouped: Vec<Vec<usize>>,
+    /// Per phase × operand: membership in `grouped[phase]`.
+    is_grouped: Vec<Vec<bool>>,
+    /// Per phase: read-only operands to load up-front at phase start.
+    pinned_loads: Vec<Vec<usize>>,
+    /// Per phase: operands whose live range ends here (release after).
+    releases: Vec<Vec<usize>>,
+}
+
+impl Plan {
+    fn build(steps: &[Step], n_mats: usize) -> Plan {
+        let mut needs_load = vec![false; n_mats];
+        let mut written = vec![false; n_mats];
+        for step in steps {
+            for r in step.reads() {
+                if !written[r] {
+                    needs_load[r] = true;
+                }
+            }
+            if let Some(t) = step.writes() {
+                written[t] = true;
+            }
+        }
+
+        // Split at write→read, write→write AND read→write dependencies.
+        // RAW/WAW need no explanation; WAR must also split because the
+        // walk does not execute a phase strictly in step order — Source
+        // steps run first (to hold no operand guards during produce) and
+        // grouped gram/gemm contributions run in the trailing chunk loop,
+        // so a same-phase writer would expose its new value to an earlier
+        // reader's chunked contributions.  (A step's own
+        // read-modify-write, e.g. gemm with beta≠0, is not a conflict.)
+        let mut phases: Vec<Vec<usize>> = Vec::new();
+        {
+            let mut cur: Vec<usize> = Vec::new();
+            let mut dirty = vec![false; n_mats];
+            let mut read_here = vec![false; n_mats];
+            for (si, step) in steps.iter().enumerate() {
+                let war = step.writes().map_or(false, |t| read_here[t]);
+                let conflict = war
+                    || step.reads().iter().any(|&r| dirty[r])
+                    || step.writes().map_or(false, |t| dirty[t]);
+                if conflict {
+                    phases.push(std::mem::take(&mut cur));
+                    dirty.iter_mut().for_each(|d| *d = false);
+                    read_here.iter_mut().for_each(|d| *d = false);
+                }
+                cur.push(si);
+                for r in step.reads() {
+                    read_here[r] = true;
+                }
+                if let Some(t) = step.writes() {
+                    dirty[t] = true;
+                }
+            }
+            if !cur.is_empty() {
+                phases.push(cur);
+            }
+        }
+        let n_phases = phases.len();
+
+        // Read liveness of the read-only operands over the phases.
+        let mut first_read = vec![usize::MAX; n_mats];
+        let mut last_read = vec![0usize; n_mats];
+        for (p, ph) in phases.iter().enumerate() {
+            for &si in ph {
+                for r in steps[si].reads() {
+                    if written[r] {
+                        continue;
+                    }
+                    if first_read[r] == usize::MAX {
+                        first_read[r] = p;
+                    }
+                    last_read[r] = p;
+                }
+            }
+        }
+
+        let mut grouped = vec![Vec::new(); n_phases];
+        let mut is_grouped = vec![vec![false; n_mats]; n_phases];
+        let mut pinned_loads = vec![Vec::new(); n_phases];
+        let mut releases = vec![Vec::new(); n_phases];
+        for (p, ph) in phases.iter().enumerate() {
+            // aa-membership in first-appearance order, and "pinned" use
+            // (reduction right operand, elementwise input, …).
+            let mut aa_seen = vec![false; n_mats];
+            let mut aa_order: Vec<usize> = Vec::new();
+            let mut pinned_use = vec![false; n_mats];
+            for &si in ph {
+                match &steps[si] {
+                    Step::Gemm { aa, .. } | Step::Gram { aa, .. } => {
+                        for &a in aa {
+                            if !aa_seen[a] {
+                                aa_seen[a] = true;
+                                aa_order.push(a);
+                            }
+                        }
+                        if let Step::Gram { bb, .. } = &steps[si] {
+                            pinned_use[*bb] = true;
+                        }
+                    }
+                    Step::Axpby { x, beta, y, .. } => {
+                        pinned_use[*x] = true;
+                        if *beta != 0.0 {
+                            pinned_use[*y] = true;
+                        }
+                    }
+                    Step::ScaleDiag { src, .. } => pinned_use[*src] = true,
+                    Step::Dot { a, b, .. } => {
+                        pinned_use[*a] = true;
+                        pinned_use[*b] = true;
+                    }
+                    Step::Source { .. } => {}
+                }
+            }
+            // Groupable: aa-only within this phase AND the phase covers
+            // the operand's whole live range — otherwise it must persist.
+            for &a in &aa_order {
+                if !written[a] && !pinned_use[a] && first_read[a] == p && last_read[a] == p {
+                    is_grouped[p][a] = true;
+                    grouped[p].push(a);
+                }
+            }
+            for i in 0..n_mats {
+                if written[i] || is_grouped[p][i] {
+                    continue;
+                }
+                let read_here = aa_seen[i] || pinned_use[i];
+                if read_here && first_read[i] == p {
+                    pinned_loads[p].push(i);
+                }
+                if read_here && last_read[i] == p {
+                    releases[p].push(i);
+                }
+            }
+        }
+
+        Plan { phases, needs_load, written, grouped, is_grouped, pinned_loads, releases }
+    }
+}
+
 impl<'a> FusedPipeline<'a> {
     pub fn new(ctx: &Arc<DenseCtx>) -> FusedPipeline<'a> {
         FusedPipeline {
             ctx: ctx.clone(),
             mats: Vec::new(),
             steps: Vec::new(),
+            producers: Vec::new(),
             gram_shapes: Vec::new(),
             dot_lens: Vec::new(),
         }
@@ -263,6 +460,18 @@ impl<'a> FusedPipeline<'a> {
         self.dot(a, a)
     }
 
+    /// Record a **streamed operand**: during the walk, `target`'s
+    /// interval contents come from `producer` (and are written to
+    /// `target` once) instead of being loaded.  Later steps of the
+    /// pipeline see the produced values — the SpMM→consumer fusion of
+    /// the §3.4 operator boundary.
+    pub fn source(&mut self, target: &'a TasMatrix, producer: Box<dyn IntervalProducer + 'a>) {
+        let target = self.reg(target);
+        let producer_idx = self.producers.len();
+        self.producers.push(producer);
+        self.steps.push(Step::Source { target, producer: producer_idx });
+    }
+
     /// Execute the chain with a single walk over the row intervals.
     pub fn materialize(self) -> FusedResults {
         let ctx = self.ctx.clone();
@@ -275,21 +484,8 @@ impl<'a> FusedPipeline<'a> {
             return FusedResults { grams: zero_grams(), dots: zero_dots() };
         }
 
-        // Load plan: an operand needs its prior contents only if some
-        // step reads it before the chain has fully overwritten it.
         let n_mats = self.mats.len();
-        let mut needs_load = vec![false; n_mats];
-        let mut written = vec![false; n_mats];
-        for step in &self.steps {
-            for r in step.reads() {
-                if !written[r] {
-                    needs_load[r] = true;
-                }
-            }
-            if let Some(t) = step.writes() {
-                written[t] = true;
-            }
-        }
+        let plan = Plan::build(&self.steps, n_mats);
 
         struct Acc {
             grams: Vec<SmallMat>,
@@ -301,130 +497,306 @@ impl<'a> FusedPipeline<'a> {
             .collect();
         let pools = make_pools(&ctx);
         let n_intervals = self.mats[0].n_intervals();
+        let group = ctx.group_size.max(1);
+        let mem: &MemTracker = &ctx.mem;
 
         parallel_for(n_intervals, ctx.threads, |iv, w| {
             let mut pool = pools[w].lock().unwrap();
             let rows = self.mats[0].interval_len(iv);
-            // Issue every SSD read of this interval before waiting on any
-            // (keeps all devices of the array busy, §3.4.3).
-            let fetches: Vec<Option<Fetch>> = self
-                .mats
-                .iter()
-                .enumerate()
-                .map(|(i, m)| needs_load[i].then(|| m.fetch_interval(iv, &mut pool)))
-                .collect();
-            let mut guards: Vec<Option<IntervalGuard>> =
-                fetches.into_iter().map(|f| f.map(Fetch::finish)).collect();
-            // Written matrices compute in working buffers; copying out
-            // releases resident guards up front so the final store never
-            // contends with our own slot locks.
-            let mut work: Vec<Option<Vec<f64>>> = vec![None; n_mats];
-            for i in 0..n_mats {
-                if written[i] {
-                    work[i] = Some(match guards[i].take() {
-                        Some(g) => {
-                            let v = g.to_vec();
-                            g.recycle(&mut pool);
-                            v
-                        }
-                        None => vec![0.0; rows * self.mats[i].n_cols],
-                    });
+
+            // Working buffers of the written matrices whose prior
+            // contents the chain reads, seeded in one batch of async
+            // loads (guards dropped before any store).  Targets that are
+            // overwritten before being read stay `None` until their
+            // first write step installs a fresh buffer.
+            let mut work: Vec<Option<Vec<f64>>> = (0..n_mats).map(|_| None).collect();
+            let mut work_bytes = vec![0u64; n_mats];
+            {
+                let fetches: Vec<Option<Fetch>> = (0..n_mats)
+                    .map(|i| {
+                        (plan.written[i] && plan.needs_load[i])
+                            .then(|| self.mats[i].fetch_interval(iv, &mut pool))
+                    })
+                    .collect();
+                for (i, f) in fetches.into_iter().enumerate() {
+                    let Some(f) = f else { continue };
+                    let g = f.finish();
+                    let data = g.to_vec();
+                    g.recycle(&mut pool);
+                    work_bytes[i] = (data.len() * 8) as u64;
+                    mem.alloc(work_bytes[i]);
+                    work[i] = Some(data);
                 }
             }
 
-            for step in &self.steps {
-                match step {
-                    Step::Gemm { aa, bsmall, beta, target } => {
-                        let b = bsmall.cols;
-                        let mut out = vec![0.0; rows * b];
-                        {
-                            let view = |i: usize| {
-                                work[i].as_deref().unwrap_or_else(|| guards[i].as_deref().unwrap())
-                            };
+            // Loaded read-only operands (guard per operand, held for the
+            // operand's live range only).
+            let mut guards: Vec<Option<IntervalGuard>> = (0..n_mats).map(|_| None).collect();
+            let mut guard_bytes = vec![0u64; n_mats];
+
+            // `work` overrides `guards` for written matrices.
+            fn view<'v, 'g>(
+                work: &'v [Option<Vec<f64>>],
+                guards: &'v [Option<IntervalGuard<'g>>],
+                i: usize,
+            ) -> &'v [f64] {
+                work[i].as_deref().unwrap_or_else(|| guards[i].as_deref().unwrap())
+            }
+
+            for (p, ph) in plan.phases.iter().enumerate() {
+                // 1. Streamed sources run first: they read nothing and
+                //    must not overlap operand guards (see module docs).
+                for &si in ph {
+                    if let Step::Source { target, producer } = &self.steps[si] {
+                        let data = self.producers[*producer].produce(iv, rows);
+                        assert_eq!(
+                            data.len(),
+                            rows * self.mats[*target].n_cols,
+                            "producer returned wrong interval size"
+                        );
+                        let bytes = (data.len() * 8) as u64;
+                        mem.alloc(bytes);
+                        if work[*target].is_some() {
+                            mem.free(work_bytes[*target]);
+                        }
+                        work_bytes[*target] = bytes;
+                        work[*target] = Some(data);
+                    }
+                }
+
+                // 2. Load this phase's pinned operands (batch-async).
+                {
+                    let fetches: Vec<(usize, Fetch)> = plan.pinned_loads[p]
+                        .iter()
+                        .map(|&i| (i, self.mats[i].fetch_interval(iv, &mut pool)))
+                        .collect();
+                    for (i, f) in fetches {
+                        let g = f.finish();
+                        if let IntervalGuard::Owned(b) = &g {
+                            guard_bytes[i] = b.len() as u64;
+                            mem.alloc(guard_bytes[i]);
+                        }
+                        guards[i] = Some(g);
+                    }
+                }
+
+                // 3. Non-chunked work: elementwise steps, reductions over
+                //    pinned operands, gemm seeding + non-grouped
+                //    contributions.  Grouped contributions follow in 4.
+                let mut gemm_acc: Vec<Option<Vec<f64>>> = (0..ph.len()).map(|_| None).collect();
+                for (k, &si) in ph.iter().enumerate() {
+                    match &self.steps[si] {
+                        Step::Source { .. } => {}
+                        Step::Gemm { aa, bsmall, beta, target } => {
+                            let b = bsmall.cols;
+                            let mut out = vec![0.0; rows * b];
                             if *beta != 0.0 {
-                                for (o, &x) in out.iter_mut().zip(view(*target)) {
+                                for (o, &x) in out.iter_mut().zip(view(&work, &guards, *target))
+                                {
                                     *o = beta * x;
                                 }
                             }
                             let mut col_off = 0usize;
                             for &ai in aa {
                                 let m = self.mats[ai].n_cols;
-                                let bsub = bsmall.row_block(col_off, m);
-                                ctx.kernels.tsgemm(view(ai), rows, m, &bsub, &mut out);
+                                if !plan.is_grouped[p][ai] {
+                                    let bsub = bsmall.row_block(col_off, m);
+                                    ctx.kernels.tsgemm(
+                                        view(&work, &guards, ai),
+                                        rows,
+                                        m,
+                                        &bsub,
+                                        &mut out,
+                                    );
+                                }
+                                col_off += m;
+                            }
+                            mem.alloc((out.len() * 8) as u64);
+                            gemm_acc[k] = Some(out);
+                        }
+                        Step::Axpby { alpha, x, beta, y, target } => {
+                            let cols = self.mats[*target].n_cols;
+                            let mut out = vec![0.0; rows * cols];
+                            {
+                                let xs = view(&work, &guards, *x);
+                                // beta = 0: y was never loaded (see
+                                // Step::reads); pass x, axpby_into
+                                // ignores it.
+                                let ys =
+                                    if *beta != 0.0 { view(&work, &guards, *y) } else { xs };
+                                ctx.kernels.axpby_into(*alpha, xs, *beta, ys, &mut out);
+                            }
+                            let bytes = (out.len() * 8) as u64;
+                            mem.alloc(bytes);
+                            if work[*target].is_some() {
+                                mem.free(work_bytes[*target]);
+                            }
+                            work_bytes[*target] = bytes;
+                            work[*target] = Some(out);
+                        }
+                        Step::ScaleDiag { diag, src, target } => {
+                            let cols = self.mats[*target].n_cols;
+                            let mut out = vec![0.0; rows * cols];
+                            ctx.kernels.scale_diag_into(
+                                diag,
+                                view(&work, &guards, *src),
+                                &mut out,
+                            );
+                            let bytes = (out.len() * 8) as u64;
+                            mem.alloc(bytes);
+                            if work[*target].is_some() {
+                                mem.free(work_bytes[*target]);
+                            }
+                            work_bytes[*target] = bytes;
+                            work[*target] = Some(out);
+                        }
+                        Step::Gram { alpha, aa, bb, out } => {
+                            let bcols = self.mats[*bb].n_cols;
+                            let mut acc = accs[w].lock().unwrap();
+                            let gm = &mut acc.grams[*out];
+                            let mut col_off = 0usize;
+                            for &ai in aa {
+                                let m = self.mats[ai].n_cols;
+                                if !plan.is_grouped[p][ai] {
+                                    let mut sub = gm.row_block(col_off, m);
+                                    ctx.kernels.gram(
+                                        *alpha,
+                                        view(&work, &guards, ai),
+                                        view(&work, &guards, *bb),
+                                        rows,
+                                        m,
+                                        bcols,
+                                        &mut sub,
+                                    );
+                                    gm.set_block(col_off, 0, &sub);
+                                }
                                 col_off += m;
                             }
                         }
-                        work[*target] = Some(out);
-                    }
-                    Step::Axpby { alpha, x, beta, y, target } => {
-                        let cols = self.mats[*target].n_cols;
-                        let mut out = vec![0.0; rows * cols];
-                        {
-                            let view = |i: usize| {
-                                work[i].as_deref().unwrap_or_else(|| guards[i].as_deref().unwrap())
-                            };
-                            let xs = view(*x);
-                            // beta = 0: y was never loaded (see
-                            // Step::reads); pass x, axpby_into ignores it.
-                            let ys = if *beta != 0.0 { view(*y) } else { xs };
-                            ctx.kernels.axpby_into(*alpha, xs, *beta, ys, &mut out);
-                        }
-                        work[*target] = Some(out);
-                    }
-                    Step::ScaleDiag { diag, src, target } => {
-                        let cols = self.mats[*target].n_cols;
-                        let mut out = vec![0.0; rows * cols];
-                        {
-                            let view = |i: usize| {
-                                work[i].as_deref().unwrap_or_else(|| guards[i].as_deref().unwrap())
-                            };
-                            ctx.kernels.scale_diag_into(diag, view(*src), &mut out);
-                        }
-                        work[*target] = Some(out);
-                    }
-                    Step::Gram { alpha, aa, bb, out } => {
-                        let view = |i: usize| {
-                            work[i].as_deref().unwrap_or_else(|| guards[i].as_deref().unwrap())
-                        };
-                        let bcols = self.mats[*bb].n_cols;
-                        let mut acc = accs[w].lock().unwrap();
-                        let gm = &mut acc.grams[*out];
-                        let mut col_off = 0usize;
-                        for &ai in aa {
-                            let m = self.mats[ai].n_cols;
-                            let mut sub = gm.row_block(col_off, m);
-                            ctx.kernels.gram(*alpha, view(ai), view(*bb), rows, m, bcols, &mut sub);
-                            gm.set_block(col_off, 0, &sub);
-                            col_off += m;
-                        }
-                    }
-                    Step::Dot { a, b, out } => {
-                        let view = |i: usize| {
-                            work[i].as_deref().unwrap_or_else(|| guards[i].as_deref().unwrap())
-                        };
-                        let (av, bv) = (view(*a), view(*b));
-                        let cols = self.mats[*a].n_cols;
-                        let mut acc = accs[w].lock().unwrap();
-                        let d = &mut acc.dots[*out];
-                        for j in 0..cols {
-                            let mut s = 0.0;
-                            for i in 0..rows {
-                                s += av[j * rows + i] * bv[j * rows + i];
+                        Step::Dot { a, b, out } => {
+                            let (av, bv) =
+                                (view(&work, &guards, *a), view(&work, &guards, *b));
+                            let cols = self.mats[*a].n_cols;
+                            let mut acc = accs[w].lock().unwrap();
+                            let d = &mut acc.dots[*out];
+                            for j in 0..cols {
+                                let mut s = 0.0;
+                                for i in 0..rows {
+                                    s += av[j * rows + i] * bv[j * rows + i];
+                                }
+                                d[j] += s;
                             }
-                            d[j] += s;
                         }
+                    }
+                }
+
+                // 4. Grouped operands stream through in chunks of
+                //    `group_size` (§3.4.3): load a chunk, apply every
+                //    step's contributions for it, release it.
+                for chunk in plan.grouped[p].chunks(group) {
+                    let fetches: Vec<(usize, Fetch)> = chunk
+                        .iter()
+                        .map(|&i| (i, self.mats[i].fetch_interval(iv, &mut pool)))
+                        .collect();
+                    for (i, f) in fetches {
+                        let g = f.finish();
+                        if let IntervalGuard::Owned(b) = &g {
+                            guard_bytes[i] = b.len() as u64;
+                            mem.alloc(guard_bytes[i]);
+                        }
+                        guards[i] = Some(g);
+                    }
+                    let in_chunk = |i: usize| chunk.contains(&i);
+                    for (k, &si) in ph.iter().enumerate() {
+                        match &self.steps[si] {
+                            Step::Gemm { aa, bsmall, .. } => {
+                                let out = gemm_acc[k].as_mut().unwrap();
+                                let mut col_off = 0usize;
+                                for &ai in aa {
+                                    let m = self.mats[ai].n_cols;
+                                    if plan.is_grouped[p][ai] && in_chunk(ai) {
+                                        let bsub = bsmall.row_block(col_off, m);
+                                        ctx.kernels.tsgemm(
+                                            view(&work, &guards, ai),
+                                            rows,
+                                            m,
+                                            &bsub,
+                                            out,
+                                        );
+                                    }
+                                    col_off += m;
+                                }
+                            }
+                            Step::Gram { alpha, aa, bb, out } => {
+                                let bcols = self.mats[*bb].n_cols;
+                                let mut acc = accs[w].lock().unwrap();
+                                let gm = &mut acc.grams[*out];
+                                let mut col_off = 0usize;
+                                for &ai in aa {
+                                    let m = self.mats[ai].n_cols;
+                                    if plan.is_grouped[p][ai] && in_chunk(ai) {
+                                        let mut sub = gm.row_block(col_off, m);
+                                        ctx.kernels.gram(
+                                            *alpha,
+                                            view(&work, &guards, ai),
+                                            view(&work, &guards, *bb),
+                                            rows,
+                                            m,
+                                            bcols,
+                                            &mut sub,
+                                        );
+                                        gm.set_block(col_off, 0, &sub);
+                                    }
+                                    col_off += m;
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                    for &i in chunk {
+                        if let Some(g) = guards[i].take() {
+                            g.recycle(&mut pool);
+                            mem.free(guard_bytes[i]);
+                            guard_bytes[i] = 0;
+                        }
+                    }
+                }
+
+                // 5. Install the finished gemm accumulators (step order).
+                for (k, &si) in ph.iter().enumerate() {
+                    if let Step::Gemm { target, .. } = &self.steps[si] {
+                        let out = gemm_acc[k].take().unwrap();
+                        if work[*target].is_some() {
+                            mem.free(work_bytes[*target]);
+                        }
+                        work_bytes[*target] = (out.len() * 8) as u64;
+                        work[*target] = Some(out);
+                    }
+                }
+
+                // 6. Release pinned operands whose live range ends here.
+                for &i in &plan.releases[p] {
+                    if let Some(g) = guards[i].take() {
+                        g.recycle(&mut pool);
+                        mem.free(guard_bytes[i]);
+                        guard_bytes[i] = 0;
                     }
                 }
             }
 
-            // One write per mutated matrix per interval.
+            // Defensive sweep, then one write per mutated matrix.
             for i in 0..n_mats {
-                if let Some(data) = work[i].take() {
-                    self.mats[i].store_interval(iv, data);
+                if let Some(g) = guards[i].take() {
+                    g.recycle(&mut pool);
+                    mem.free(guard_bytes[i]);
+                    guard_bytes[i] = 0;
                 }
             }
-            for g in guards.into_iter().flatten() {
-                g.recycle(&mut pool);
+            for i in 0..n_mats {
+                if let Some(data) = work[i].take() {
+                    mem.free(work_bytes[i]);
+                    self.mats[i].store_interval(iv, data);
+                }
             }
         });
 
@@ -707,5 +1079,196 @@ mod tests {
         p.gemm_update(1.0, &[], SmallMat::zeros(0, 2), 0.5, &t);
         p.materialize();
         assert_eq!(t.get(10, 0), 5.0);
+    }
+
+    /// A toy producer: interval data computed from (row, col).
+    struct FnProducer {
+        n_cols: usize,
+        interval_rows: usize,
+    }
+
+    impl IntervalProducer for FnProducer {
+        fn produce(&self, iv: usize, rows: usize) -> Vec<f64> {
+            let base = iv * self.interval_rows;
+            let mut data = vec![0.0; rows * self.n_cols];
+            for c in 0..self.n_cols {
+                for r in 0..rows {
+                    data[c * rows + r] = (base + r) as f64 - 10.0 * c as f64;
+                }
+            }
+            data
+        }
+    }
+
+    #[test]
+    fn sourced_operand_feeds_chain_and_is_stored_once() {
+        for ctx in ctxs() {
+            let n = 300;
+            let v = TasMatrix::from_fn(&ctx, n, 2, |r, c| ((r + 3 * c) % 7) as f64 - 3.0);
+            let w = TasMatrix::zeros_for_overwrite(&ctx, n, 2);
+            let reference = TasMatrix::from_fn(&ctx, n, 2, |r, c| r as f64 - 10.0 * c as f64);
+
+            let mut p = FusedPipeline::new(&ctx);
+            p.source(
+                &w,
+                Box::new(FnProducer { n_cols: 2, interval_rows: w.interval_rows() }),
+            );
+            let hg = p.gram(1.0, &[&v], &w); // must see the produced data
+            let res = p.materialize();
+
+            let g_ref = mv_trans_mv(1.0, &[&v], &reference);
+            assert_close(&res.gram(hg).data, &g_ref.data, 1e-12, 1e-9, "sourced gram").unwrap();
+            assert_close(
+                &w.to_colmajor(),
+                &reference.to_colmajor(),
+                0.0,
+                0.0,
+                "sourced target stored",
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn sourced_operand_never_reads_target_from_ssd() {
+        // Write-through EM: the sourced target must cost one write pass
+        // and zero reads (beyond the gram's left operand).
+        let fs = crate::safs::Safs::new(crate::safs::SafsConfig::untimed());
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            64,
+            2,
+            3,
+            0,
+            Arc::new(crate::dense::kernels::NativeKernels),
+        );
+        let n = 256;
+        let w = TasMatrix::zeros_for_overwrite(&ctx, n, 2);
+        let before = fs.stats();
+        let mut p = FusedPipeline::new(&ctx);
+        p.source(
+            &w,
+            Box::new(FnProducer { n_cols: 2, interval_rows: w.interval_rows() }),
+        );
+        let _ = p.norm(&w);
+        p.materialize();
+        let delta = fs.stats().delta_since(&before);
+        assert_eq!(delta.bytes_read, 0, "sourced target is never read back");
+        assert_eq!(delta.bytes_written, (n * 2 * 8) as u64, "one write pass");
+    }
+
+    #[test]
+    fn same_phase_war_reads_prior_values() {
+        // A gram recorded BEFORE an axpby that overwrites its right
+        // operand must see the PRIOR contents, even though grouped gram
+        // contributions execute in the trailing chunk loop (the planner
+        // must split the phase on the read→write dependency).
+        for ctx in ctxs() {
+            let n = 300;
+            let blocks: Vec<TasMatrix> = (0..5)
+                .map(|i| {
+                    let m = TasMatrix::zeros(&ctx, n, 2);
+                    mv_random(&m, 700 + i);
+                    m
+                })
+                .collect();
+            let refs: Vec<&TasMatrix> = blocks.iter().collect();
+            let y = TasMatrix::from_fn(&ctx, n, 2, |r, c| ((r + 3 * c) % 9) as f64 - 4.0);
+            let z = TasMatrix::from_fn(&ctx, n, 2, |r, c| ((r * 2 + c) % 7) as f64 - 3.0);
+
+            let g_ref = mv_trans_mv(1.0, &refs, &y); // over y's prior contents
+            let mut p = FusedPipeline::new(&ctx);
+            let hg = p.gram(1.0, &refs, &y);
+            p.axpby(2.0, &z, 0.0, &z, &y); // y ← 2z afterwards
+            let res = p.materialize();
+
+            assert_close(&res.gram(hg).data, &g_ref.data, 1e-12, 1e-9, "war gram").unwrap();
+            let zv = z.to_colmajor();
+            let yv = y.to_colmajor();
+            for (a, b) in yv.iter().zip(&zv) {
+                assert_eq!(*a, 2.0 * b, "y must hold the post-update values");
+            }
+        }
+    }
+
+    #[test]
+    fn cross_phase_operand_read_once() {
+        // v is a gemm operand in phase 1 and a gram operand in phase 2
+        // (the CGS2 round-2 shape): its guard must persist across the
+        // phase boundary — exactly one read.
+        let fs = crate::safs::Safs::new(crate::safs::SafsConfig::untimed());
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            64,
+            1,
+            2,
+            0,
+            Arc::new(crate::dense::kernels::NativeKernels),
+        );
+        let n = 320;
+        let v = TasMatrix::zeros(&ctx, n, 2);
+        mv_random(&v, 11);
+        let x = TasMatrix::zeros(&ctx, n, 2);
+        mv_random(&x, 12);
+        let before = fs.stats();
+        let mut p = FusedPipeline::new(&ctx);
+        p.gemm_update(-0.5, &[&v], SmallMat::identity(2), 1.0, &x);
+        let _g = p.gram(1.0, &[&v], &x); // reads v again, post-update x
+        p.materialize();
+        let delta = fs.stats().delta_since(&before);
+        let mat_bytes = (n * 2 * 8) as u64;
+        assert_eq!(delta.bytes_read, 2 * mat_bytes, "v and x each read once");
+    }
+
+    #[test]
+    fn group_chunking_bounds_walk_memory() {
+        // A wide gemm over 12 streamed blocks: with group_size = 2 the
+        // walk must hold far fewer operand intervals than with an
+        // effectively unbounded group, while producing identical values.
+        let run = |group: usize| -> (Vec<f64>, u64) {
+            let fs = crate::safs::Safs::new(crate::safs::SafsConfig::untimed());
+            let ctx = DenseCtx::with(
+                fs,
+                true,
+                64,
+                1,
+                group,
+                0,
+                Arc::new(crate::dense::kernels::NativeKernels),
+            );
+            let n = 640;
+            let mats: Vec<TasMatrix> = (0..12)
+                .map(|i| {
+                    let m = TasMatrix::zeros(&ctx, n, 2);
+                    mv_random(&m, 900 + i);
+                    m
+                })
+                .collect();
+            let refs: Vec<&TasMatrix> = mats.iter().collect();
+            let cc = TasMatrix::zeros(&ctx, n, 2);
+            let bsmall = SmallMat::from_fn(24, 2, |r, c| ((r * 5 + c) % 7) as f64 - 3.0);
+            ctx.mem.reset();
+            ctx.mem.begin_window();
+            let mut p = FusedPipeline::new(&ctx);
+            p.gemm_update(1.0, &refs, bsmall, 0.0, &cc);
+            p.materialize();
+            (cc.to_colmajor(), ctx.mem.window_peak())
+        };
+        let (vals_bounded, peak_bounded) = run(2);
+        let (vals_wide, peak_wide) = run(64);
+        assert_close(&vals_bounded, &vals_wide, 1e-12, 1e-12, "group invariance").unwrap();
+        assert!(
+            peak_bounded < peak_wide,
+            "group chunking must lower the walk's peak: {peak_bounded} vs {peak_wide}"
+        );
+        // Absolute §3.4.3 bound: chunk (2 operands) + output work buffer
+        // + slack, per worker — far below the 12-operand footprint.
+        let interval_bytes = (64 * 2 * 8) as u64;
+        assert!(
+            peak_bounded <= 6 * interval_bytes,
+            "bounded walk held {peak_bounded} bytes (> 6 intervals)"
+        );
     }
 }

@@ -16,7 +16,16 @@ pub trait DenseKernels: Send + Sync {
     fn tsgemm(&self, x: &[f64], rows: usize, m: usize, bmat: &SmallMat, out: &mut [f64]);
 
     /// `out(m×b) += alpha · xᵀ(m×rows) · y(rows×b)`, x/y column-major.
-    fn gram(&self, alpha: f64, x: &[f64], y: &[f64], rows: usize, m: usize, b: usize, out: &mut SmallMat);
+    fn gram(
+        &self,
+        alpha: f64,
+        x: &[f64],
+        y: &[f64],
+        rows: usize,
+        m: usize,
+        b: usize,
+        out: &mut SmallMat,
+    );
 
     /// `out[i] = alpha·x[i] + beta·y[i]` — the elementwise building
     /// block of the fused pipeline's `axpby`/`scale` steps.  Default

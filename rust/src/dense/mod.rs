@@ -10,7 +10,7 @@ pub mod ops;
 pub mod small;
 pub mod tas;
 
-pub use fused::{DotHandle, FusedPipeline, FusedResults, GramHandle};
+pub use fused::{DotHandle, FusedPipeline, FusedResults, GramHandle, IntervalProducer};
 pub use kernels::{DenseKernels, NativeKernels};
 pub use ops::{
     clone_view, conv_layout_from_rowmajor, conv_layout_to_rowmajor, mv_add_mv, mv_dot,

@@ -54,6 +54,12 @@ pub struct DenseCtx {
     /// ([`crate::dense::fused`]) instead of the eager Table-1 ops.  The
     /// eager path stays available as the reference implementation.
     fused: AtomicBool,
+    /// When set (with `fused`), operator applies use the streamed
+    /// ConvLayout→SpMM→ConvLayout boundary: the SpMM output flows
+    /// interval-by-interval into the consuming pipeline instead of
+    /// materializing full-height dense blocks
+    /// ([`crate::spmm::StreamedSpmm`]).
+    streamed: AtomicBool,
     ids: AtomicU64,
     lru: Mutex<VecDeque<Weak<MatInner>>>,
 }
@@ -75,6 +81,7 @@ impl DenseCtx {
             mem: Arc::new(MemTracker::default()),
             io_phases: PhaseIo::new(),
             fused: AtomicBool::new(false),
+            streamed: AtomicBool::new(false),
             ids: AtomicU64::new(1),
             lru: Mutex::new(VecDeque::new()),
         })
@@ -101,6 +108,7 @@ impl DenseCtx {
             mem: Arc::new(MemTracker::default()),
             io_phases: PhaseIo::new(),
             fused: AtomicBool::new(false),
+            streamed: AtomicBool::new(false),
             ids: AtomicU64::new(1),
             lru: Mutex::new(VecDeque::new()),
         })
@@ -127,6 +135,17 @@ impl DenseCtx {
     /// compare both paths over one context).
     pub fn set_fused(&self, on: bool) {
         self.fused.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether operator applies should use the streamed SpMM boundary
+    /// (only honoured in fused mode — the stream feeds a pipeline walk).
+    pub fn is_streamed(&self) -> bool {
+        self.streamed.load(Ordering::Relaxed)
+    }
+
+    /// Toggle the streamed operator boundary.
+    pub fn set_streamed(&self, on: bool) {
+        self.streamed.store(on, Ordering::Relaxed);
     }
 
     fn next_id(&self) -> u64 {

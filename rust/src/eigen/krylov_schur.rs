@@ -19,7 +19,9 @@
 
 use super::dense_eig::{sym_eig, Which};
 use super::operator::Operator;
-use super::ortho::{normalize_block, ortho_normalize};
+use super::ortho::{
+    expand_block_streamed, normalize_block, ortho_normalize_cached, BasisGramCache,
+};
 use crate::dense::{
     mv_times_mat_add_mv, tas::mv_random, DenseCtx, FusedPipeline, SmallMat, TasMatrix,
 };
@@ -90,23 +92,51 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
     // --- initialization ---
     let v0 = TasMatrix::zeros(ctx, n, b);
     mv_random(&v0, cfg.seed);
-    ctx.io_phases.scope(&ctx.fs, "ortho", || normalize_block(&v0, &[], cfg.seed ^ 1));
+    ctx.io_phases
+        .scope_tracked(&ctx.fs, &ctx.mem, "ortho", || normalize_block(&v0, &[], cfg.seed ^ 1));
     let mut basis: Vec<TasMatrix> = vec![v0];
     let mut t = SmallMat::zeros(0, 0); // projected matrix over non-residual blocks
     let mut last_r = SmallMat::identity(b);
     let mut history = Vec::new();
+    // Incremental basis Gram (§3.4): extended by one panel per
+    // expansion step, rebuilt group-bounded after each restart.
+    let mut gram_cache = BasisGramCache::new();
 
     for restart in 0..=cfg.max_restarts {
         // --- expand until the subspace is full ---
         while t.rows + basis.last().unwrap().n_cols <= m_max {
-            let vp = basis.last().unwrap();
-            let w = ctx.io_phases.scope(&ctx.fs, "spmm", || op.apply(ctx, vp));
+            let seed = cfg.seed ^ (0x100 + t.rows as u64);
             let refs: Vec<&TasMatrix> = basis.iter().collect();
-            // CGS2 + Cholesky-QR as one chain (fused mode streams the
-            // subspace once per CGS2 round; eager is the reference).
-            let (c, r, _) = ctx.io_phases.scope(&ctx.fs, "ortho", || {
-                ortho_normalize(&refs, &w, cfg.seed ^ (0x100 + t.rows as u64))
-            });
+            let vp = *refs.last().unwrap();
+            // Streamed operator boundary (§3.4): when fused + streamed,
+            // A·v_p is produced interval-by-interval inside the round-1
+            // ortho walk — no full-height intermediate, no on-SSD round
+            // trip of the new block (phase attribution handled inside
+            // expand_block_streamed).  Otherwise: eager apply, then the
+            // CGS2 + Cholesky-QR chain with the cached basis Gram.
+            let streamed = if ctx.is_fused() && ctx.is_streamed() {
+                op.streamed_producer(vp)
+            } else {
+                None
+            };
+            let (w, c, r) = match streamed {
+                Some(prod) => {
+                    let w = TasMatrix::zeros_for_overwrite(ctx, n, vp.n_cols);
+                    let (c, r, _) =
+                        expand_block_streamed(&refs, &w, prod, &mut gram_cache, seed);
+                    (w, c, r)
+                }
+                None => {
+                    let w = ctx
+                        .io_phases
+                        .scope_tracked(&ctx.fs, &ctx.mem, "spmm", || op.apply(ctx, vp));
+                    let (c, r, _) =
+                        ctx.io_phases.scope_tracked(&ctx.fs, &ctx.mem, "ortho", || {
+                            ortho_normalize_cached(&refs, &w, seed, &mut gram_cache)
+                        });
+                    (w, c, r)
+                }
+            };
             // Residual block joins T; its column block is c.
             let bw = vp.n_cols;
             let new_m = t.rows + bw;
@@ -162,7 +192,7 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
             let residuals: Vec<f64> = (0..cfg.nev.min(m)).map(res).collect();
             let eigenvectors = cfg.compute_eigenvectors.then(|| {
                 let cols: Vec<usize> = (0..cfg.nev.min(m)).map(|i| order[i]).collect();
-                ctx.io_phases.scope(&ctx.fs, "restart", || {
+                ctx.io_phases.scope_tracked(&ctx.fs, &ctx.mem, "restart", || {
                     ritz_vectors(&basis[..basis.len() - 1], &u, &cols, ctx, b)
                 })
             });
@@ -180,13 +210,15 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
         // --- thick restart: keep k Ritz vectors + residual block ---
         let keep = (cfg.nev + b).max(m / 2).min(m - b);
         let cols: Vec<usize> = (0..keep).map(|i| order[i]).collect();
-        let mut new_basis = ctx.io_phases.scope(&ctx.fs, "restart", || {
+        let mut new_basis = ctx.io_phases.scope_tracked(&ctx.fs, &ctx.mem, "restart", || {
             ritz_vectors(&basis[..basis.len() - 1], &u, &cols, ctx, b)
         });
         let residual = basis.pop().unwrap();
         drop(basis); // old blocks freed (files deleted) before the new grow
         new_basis.push(residual);
         basis = new_basis;
+        // The basis was replaced wholesale: the cached VᵀV is stale.
+        gram_cache.invalidate();
         // T' = diag(θ_keep); the coupling S reappears via the next
         // expansion's full projection.
         let mut t_new = SmallMat::zeros(keep, keep);
@@ -200,13 +232,14 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
 
 /// `Y = V · U[:, cols]`, returned as blocks of width ≤ `b`.
 ///
-/// In fused mode every output block's op1 is recorded into ONE pipeline,
-/// so the old basis streams from the SSDs once for the whole restart
-/// instead of once per Ritz block (the dominant restart traffic for
-/// large `keep`).  Caveat: the single walk holds one interval of the
-/// whole basis plus all output blocks per worker, ~1.5× the subspace
-/// width — fine at this repo's scales; the ROADMAP's "group-bounded
-/// fused walks" item covers paper-scale widths.
+/// In fused mode the output blocks are produced in **groups of
+/// `ctx.group_size`**: each group's op1s are recorded into one pipeline,
+/// whose walk streams the old basis once (group-bounded chunked operand
+/// loads) while holding only that group's output work buffers — the
+/// §3.4.3 bound.  Restart traffic is therefore ⌈blocks/group⌉ basis
+/// passes instead of one per Ritz block (eager) and peak memory stays
+/// `O(group)` intervals per worker instead of ~1.5× the subspace width
+/// (the pre-group-bound fused behaviour).
 fn ritz_vectors(
     v: &[TasMatrix],
     u: &SmallMat,
@@ -228,8 +261,9 @@ fn ritz_vectors(
     };
     let mut outs = Vec::with_capacity(cols.len().div_ceil(b.max(1)));
     if ctx.is_fused() {
-        // Record every block's op1 into ONE pipeline: the old basis
-        // streams from the SSDs once for the whole restart.
+        // Group-bounded restart: the blocks' op1s are recorded into one
+        // pipeline per `group_size` outputs, each walk streaming the old
+        // basis once through chunked loads.
         let mut usubs = Vec::with_capacity(outs.capacity());
         let mut j = 0;
         while j < cols.len() {
@@ -242,11 +276,15 @@ fn ritz_vectors(
             outs.push(TasMatrix::zeros_for_overwrite(ctx, n, w));
             j += w;
         }
-        let mut p = FusedPipeline::new(ctx);
-        for (y, usub) in outs.iter().zip(usubs) {
-            p.gemm_update(1.0, &refs, usub, 0.0, y);
+        let group = ctx.group_size.max(1);
+        let mut usubs_iter = usubs.into_iter();
+        for out_group in outs.chunks(group) {
+            let mut p = FusedPipeline::new(ctx);
+            for y in out_group {
+                p.gemm_update(1.0, &refs, usubs_iter.next().unwrap(), 0.0, y);
+            }
+            p.materialize();
         }
-        p.materialize();
     } else {
         // Eager reference: allocate-and-fill one block at a time (the
         // seed behaviour, which keeps each new block cache-resident
@@ -474,6 +512,76 @@ mod tests {
                 assert!((a - b).abs() < 1e-7, "fused={fused} em={em}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn streamed_solver_matches_eager() {
+        // Full streamed boundary (fused + streamed, tile dim dividing the
+        // interval) vs the eager reference, over both backings.
+        use crate::sparse::{build_matrix_opts, BuildTarget};
+        let mut rng = Rng::new(14);
+        let coo = gnm_undirected(220, 900, &mut rng);
+        let run = |fused: bool, streamed: bool, em: bool| {
+            let ctx = if em {
+                DenseCtx::em_for_tests(64)
+            } else {
+                DenseCtx::mem_for_tests(64)
+            };
+            ctx.set_fused(fused);
+            ctx.set_streamed(streamed);
+            let m = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);
+            let op = SpmmOperator::new(m, SpmmOpts::default(), 2);
+            let cfg = EigenConfig {
+                nev: 4,
+                block_size: 2,
+                num_blocks: 8,
+                tol: 1e-8,
+                max_restarts: 300,
+                which: Which::LargestMagnitude,
+                seed: 21,
+                compute_eigenvectors: false,
+            };
+            solve(&op, &ctx, &cfg)
+        };
+        let eager = run(false, false, false);
+        assert!(eager.converged, "{:?}", eager.history);
+        for &em in &[false, true] {
+            let res = run(true, true, em);
+            assert!(res.converged, "streamed em={em}: {:?}", res.history);
+            for (a, b) in eager.eigenvalues.iter().zip(&res.eigenvalues) {
+                assert!((a - b).abs() < 1e-7, "streamed em={em}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_solver_reports_phase_peaks() {
+        use crate::sparse::{build_matrix_opts, BuildTarget};
+        let mut rng = Rng::new(15);
+        let coo = gnm_undirected(500, 2500, &mut rng);
+        let ctx = DenseCtx::em_for_tests(64);
+        ctx.set_fused(true);
+        ctx.set_streamed(true);
+        let m = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);
+        let op = SpmmOperator::new(m, SpmmOpts::default(), 2);
+        let cfg = EigenConfig {
+            nev: 3,
+            block_size: 2,
+            num_blocks: 8,
+            tol: 1e-7,
+            max_restarts: 300,
+            which: Which::LargestMagnitude,
+            seed: 16,
+            compute_eigenvectors: false,
+        };
+        let res = solve(&op, &ctx, &cfg);
+        assert!(res.converged);
+        // Streamed expansion attributes the round-1 walk (SpMM + grams)
+        // to "spmm"; round 2 + normalization land in "ortho".
+        assert!(ctx.io_phases.get("spmm").bytes_read > 0);
+        assert!(ctx.io_phases.get("ortho").bytes_read > 0);
+        assert!(ctx.io_phases.dense_peak("spmm") > 0, "spmm peak dense untracked");
+        assert!(ctx.io_phases.dense_peak("ortho") > 0, "ortho peak dense untracked");
     }
 
     #[test]

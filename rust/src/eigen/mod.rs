@@ -12,7 +12,7 @@ pub use dense_eig::{sym_eig, Which};
 pub use krylov_schur::{solve, EigenConfig, EigenResult};
 pub use operator::{CsrMode, CsrOperator, GramOperator, Operator, SpmmOperator};
 pub use ortho::{
-    normalize_block, ortho_against, ortho_normalize, ortho_normalize_with,
-    orthonormality_error,
+    expand_block_streamed, normalize_block, ortho_against, ortho_normalize,
+    ortho_normalize_cached, ortho_normalize_with, orthonormality_error, BasisGramCache,
 };
 pub use svd::{build_gram_operator, svd, SvdResult};

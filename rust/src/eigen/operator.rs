@@ -3,13 +3,22 @@
 //! `SpmmOperator` wraps a (symmetric) sparse matrix image and performs
 //! ConvLayout → SpMM → ConvLayout, exactly the paper's data path: the
 //! subspace lives column-major (on SSDs in EM mode), SpMM wants row-major
-//! in RAM (§3.4's `ConvLayout`).  `GramOperator` applies `Aᵀ(A·X)` for
-//! singular value decomposition of directed graphs (§4.3.2).
+//! in RAM (§3.4's `ConvLayout`).  The eager `apply` materializes that
+//! chain as three full-height dense matrices; `apply_streamed` (and the
+//! lower-level [`Operator::streamed_producer`]) instead runs the fused
+//! interval-granular boundary of [`crate::spmm::StreamedSpmm`], where
+//! input intervals are gathered on demand and finished output row
+//! intervals flow straight into the consuming pipeline walk.
+//! `GramOperator` applies `Aᵀ(A·X)` for singular value decomposition of
+//! directed graphs (§4.3.2).
 
-use crate::dense::{conv_layout_from_rowmajor, conv_layout_to_rowmajor, DenseCtx, TasMatrix};
-use crate::metrics::{Counter, PhaseTimers};
+use crate::dense::{
+    conv_layout_from_rowmajor, conv_layout_to_rowmajor, DenseCtx, FusedPipeline,
+    IntervalProducer, TasMatrix,
+};
+use crate::metrics::{Counter, MemGuard, PhaseTimers};
 use crate::sparse::SparseMatrix;
-use crate::spmm::{spmm, SpmmOpts};
+use crate::spmm::{spmm, SpmmOpts, StreamedSpmm};
 use std::sync::Arc;
 
 pub trait Operator: Sync {
@@ -17,6 +26,43 @@ pub trait Operator: Sync {
     /// `Y = A·X` (returns a fresh TAS matrix in `ctx`'s backing mode).
     fn apply(&self, ctx: &Arc<DenseCtx>, x: &TasMatrix) -> TasMatrix;
     fn applies(&self) -> u64;
+
+    /// Streamed operator boundary (§3.4): a producer that computes `A·x`
+    /// one output row interval at a time for
+    /// [`FusedPipeline::source`], gathering `x`'s intervals on
+    /// demand.  `None` when the operator or layout cannot stream —
+    /// callers fall back to [`Operator::apply`].  A returned producer
+    /// counts as one operator application.
+    fn streamed_producer<'a>(
+        &'a self,
+        x: &'a TasMatrix,
+    ) -> Option<Box<dyn IntervalProducer + 'a>> {
+        let _ = x;
+        None
+    }
+
+    /// `Y = A·X` through the streamed boundary: the SpMM output flows
+    /// interval-by-interval into `Y`'s storage with no intermediate
+    /// full-height materialization.  Falls back to the eager
+    /// [`Operator::apply`] when streaming is unavailable — including
+    /// when `x` lives in a different context than the output (the
+    /// producer derives interval geometry from `x`, so the walk's
+    /// intervals must match).
+    fn apply_streamed(&self, ctx: &Arc<DenseCtx>, x: &TasMatrix) -> TasMatrix {
+        if !Arc::ptr_eq(ctx, x.ctx()) {
+            return self.apply(ctx, x);
+        }
+        match self.streamed_producer(x) {
+            Some(p) => {
+                let y = TasMatrix::zeros_for_overwrite(ctx, self.dim(), x.n_cols);
+                let mut pipe = FusedPipeline::new(ctx);
+                pipe.source(&y, p);
+                pipe.materialize();
+                y
+            }
+            None => self.apply(ctx, x),
+        }
+    }
 }
 
 /// `A·X` via the SpMM engine.  The matrix must be symmetric for
@@ -52,12 +98,14 @@ impl Operator for SpmmOperator {
         let input = self.timers.scope("conv_layout", || {
             conv_layout_to_rowmajor(x, self.matrix.tile_dim, self.opts.numa)
         });
+        let _mg_in = MemGuard::new(&ctx.mem, (input.n_rows * input.n_cols * 8) as u64);
         let mut output = crate::spmm::DenseBlock::new(
             self.matrix.n_rows as usize,
             x.n_cols,
             self.matrix.tile_dim,
             self.opts.numa,
         );
+        let _mg_out = MemGuard::new(&ctx.mem, (output.n_rows * output.n_cols * 8) as u64);
         self.timers.scope("spmm", || {
             spmm(&self.matrix, &input, &mut output, &self.opts, self.threads)
         });
@@ -67,6 +115,15 @@ impl Operator for SpmmOperator {
 
     fn applies(&self) -> u64 {
         self.count.get()
+    }
+
+    fn streamed_producer<'a>(
+        &'a self,
+        x: &'a TasMatrix,
+    ) -> Option<Box<dyn IntervalProducer + 'a>> {
+        let s = StreamedSpmm::new(&self.matrix, x, self.opts.vectorize)?;
+        self.count.inc();
+        Some(Box::new(s))
     }
 }
 
@@ -92,7 +149,13 @@ pub struct CsrOperator {
 impl CsrOperator {
     pub fn new(csr: crate::sparse::CsrMatrix, mode: CsrMode, threads: usize) -> CsrOperator {
         assert_eq!(csr.n_rows, csr.n_cols);
-        CsrOperator { csr, mode, threads, timers: Arc::new(PhaseTimers::new()), count: Counter::default() }
+        CsrOperator {
+            csr,
+            mode,
+            threads,
+            timers: Arc::new(PhaseTimers::new()),
+            count: Counter::default(),
+        }
     }
 }
 
@@ -106,8 +169,10 @@ impl Operator for CsrOperator {
         let input = self
             .timers
             .scope("conv_layout", || conv_layout_to_rowmajor(x, 16, true));
+        let _mg_in = MemGuard::new(&ctx.mem, (input.n_rows * input.n_cols * 8) as u64);
         let mut output =
             crate::spmm::DenseBlock::new(self.dim(), x.n_cols, 16, true);
+        let _mg_out = MemGuard::new(&ctx.mem, (output.n_rows * output.n_cols * 8) as u64);
         self.timers.scope("spmm", || match self.mode {
             CsrMode::TrilinosLike => {
                 crate::spmm::spmm_trilinos_like(&self.csr, &input, &mut output, self.threads)
@@ -162,12 +227,14 @@ impl Operator for GramOperator {
         let input = self.timers.scope("conv_layout", || {
             conv_layout_to_rowmajor(x, self.a.tile_dim, self.opts.numa)
         });
+        let _mg_in = MemGuard::new(&ctx.mem, (input.n_rows * input.n_cols * 8) as u64);
         let mut mid = crate::spmm::DenseBlock::new(
             self.a.n_rows as usize,
             x.n_cols,
             self.a.tile_dim,
             self.opts.numa,
         );
+        let _mg_mid = MemGuard::new(&ctx.mem, (mid.n_rows * mid.n_cols * 8) as u64);
         self.timers
             .scope("spmm", || spmm(&self.a, &input, &mut mid, &self.opts, self.threads));
         let mut out = crate::spmm::DenseBlock::new(
@@ -176,6 +243,7 @@ impl Operator for GramOperator {
             self.at.tile_dim,
             self.opts.numa,
         );
+        let _mg_out = MemGuard::new(&ctx.mem, (out.n_rows * out.n_cols * 8) as u64);
         self.timers
             .scope("spmm", || spmm(&self.at, &mid, &mut out, &self.opts, self.threads));
         self.timers
@@ -215,6 +283,66 @@ mod tests {
         }
         assert_close(&y.to_colmajor(), &expect, 1e-12, 1e-12, "op").unwrap();
         assert_eq!(op.applies(), 1);
+    }
+
+    #[test]
+    fn apply_streamed_matches_eager_apply() {
+        use crate::sparse::{build_matrix_opts, BuildTarget};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(55);
+        let mut coo = CooMatrix::new(300, 300);
+        for _ in 0..2000 {
+            coo.push(rng.gen_range(300) as u32, rng.gen_range(300) as u32);
+        }
+        coo.symmetrize();
+        for em in [false, true] {
+            let ctx = if em {
+                DenseCtx::em_for_tests(64)
+            } else {
+                DenseCtx::mem_for_tests(64)
+            };
+            // tile 32 divides the 64-row intervals → the layout streams.
+            let m = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);
+            let op = SpmmOperator::new(m, SpmmOpts::default(), 2);
+            let x = TasMatrix::from_fn(&ctx, 300, 2, |r, c| ((r * 3 + c) % 13) as f64 - 6.0);
+            let eager = op.apply(&ctx, &x);
+            let streamed = op.apply_streamed(&ctx, &x);
+            assert_close(
+                &streamed.to_colmajor(),
+                &eager.to_colmajor(),
+                0.0,
+                0.0,
+                "streamed apply",
+            )
+            .unwrap();
+            assert_eq!(op.applies(), 2, "producer counts as an apply");
+        }
+    }
+
+    #[test]
+    fn apply_streamed_falls_back_on_unaligned_layout() {
+        let mut coo = CooMatrix::new(50, 50);
+        for v in 0..50u32 {
+            coo.push(v, (v + 1) % 50);
+        }
+        coo.symmetrize();
+        let ctx = DenseCtx::mem_for_tests(96); // 96 % 64 != 0 → no stream
+        let op = SpmmOperator::new(
+            crate::sparse::build_matrix_opts(&coo, 64, crate::sparse::BuildTarget::Mem, true),
+            SpmmOpts::default(),
+            1,
+        );
+        let x = TasMatrix::from_fn(&ctx, 50, 2, |r, c| (r + c) as f64);
+        let eager = op.apply(&ctx, &x);
+        let streamed = op.apply_streamed(&ctx, &x); // falls back to eager
+        assert_close(
+            &streamed.to_colmajor(),
+            &eager.to_colmajor(),
+            0.0,
+            0.0,
+            "fallback",
+        )
+        .unwrap();
     }
 
     #[test]

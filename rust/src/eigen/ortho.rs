@@ -12,25 +12,94 @@
 //!   projections, each gram + update).
 //! * **Fused pipeline** (§3.4 lazy evaluation) — a BCGS2-PIP
 //!   reformulation over [`crate::dense::FusedPipeline`].  Round 1 is one
-//!   streaming pass computing both `c₁ = Vᵀx` and the basis Gram
-//!   `G = VᵀV`; the second-projection coefficients follow without
-//!   touching the subspace again as `c₂ = c₁ − G·c₁` (≡ `Vᵀ(x − V·c₁)`
-//!   in exact arithmetic).  Round 2 is one pass applying the combined
-//!   update `x ← x − V·(c₁+c₂)` and, fused into the same walk, the
-//!   post-update Gram `xᵀx` that seeds the Cholesky-QR normalization.
-//!   The subspace is read **once per round** — half the eager traffic —
-//!   and the normalization's first gram pass disappears entirely.
+//!   streaming pass computing `c₁ = Vᵀx` together with whatever part of
+//!   the basis Gram `G = VᵀV` is not already cached; the
+//!   second-projection coefficients follow without touching the subspace
+//!   again as `c₂ = c₁ − G·c₁` (≡ `Vᵀ(x − V·c₁)` in exact arithmetic).
+//!   Round 2 is one pass applying the combined update `x ← x − V·(c₁+c₂)`
+//!   and, fused into the same walk, the post-update Gram `xᵀx` that seeds
+//!   the Cholesky-QR normalization.  The subspace is read **once per
+//!   round** — half the eager traffic — and the normalization's first
+//!   gram pass disappears entirely.
 //!
-//! The PIP form trades flops for I/O: recomputing `G = VᵀV` costs
-//! `O(n·m²)` per expansion step vs the eager path's `O(n·m·b)`, which is
-//! the right trade whenever the subspace streams from SSDs (the
-//! configuration the paper optimizes).  Caching `G` across expansion
-//! steps (it only grows by one block per step) is a ROADMAP item.
+//! # The incremental basis Gram ([`BasisGramCache`])
+//!
+//! The PIP form needs `G = VᵀV`.  Recomputing it from scratch costs
+//! `O(n·m²)` flops per expansion step, but the basis only grows by one
+//! block per step — so the solver keeps a cache and each step extends it
+//! by the new block's panel `Vᵀv_new` (`O(n·m·b)` flops, folded into the
+//! round-1 walk at zero extra I/O).  After a restart the basis is
+//! replaced wholesale and the cache rebuilds with group-bounded pipelines
+//! (≤ `group_size` panel targets each) so even the rebuild never pins the
+//! whole basis per worker.
+//!
+//! # Streamed expansion ([`expand_block_streamed`])
+//!
+//! When the operator boundary streams
+//! ([`crate::eigen::Operator::streamed_producer`]), the round-1 walk
+//! *sources* the new block from the SpMM producer: `A·v_p` is computed
+//! one output interval at a time, feeds `c₁`/panel grams in the same
+//! walk, and is written to the block's storage once — no intermediate
+//! row-major materialization and no read-back of the block.  That walk
+//! (SpMM + round-1 grams) is attributed to the `spmm` I/O phase; the
+//! remaining passes (round 2, normalization) to `ortho`.
 
 use crate::dense::{
     mv_times_mat_add_mv, mv_trans_mv, tas::mv_random, total_cols, FusedPipeline, GramHandle,
-    SmallMat, TasMatrix,
+    IntervalProducer, SmallMat, TasMatrix,
 };
+
+/// Incrementally maintained basis Gram `G = VᵀV` (ROADMAP §3.4 item 2).
+///
+/// The cache identifies its contents by the basis blocks' `data_id`s: a
+/// call whose basis extends the cached prefix only computes the new
+/// blocks' panels; anything else (e.g. after a thick restart) rebuilds.
+pub struct BasisGramCache {
+    g: SmallMat,
+    ids: Vec<u64>,
+    cols: Vec<usize>,
+}
+
+impl Default for BasisGramCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BasisGramCache {
+    pub fn new() -> BasisGramCache {
+        BasisGramCache { g: SmallMat::zeros(0, 0), ids: Vec::new(), cols: Vec::new() }
+    }
+
+    /// Forget everything (call after a restart replaces the basis).
+    pub fn invalidate(&mut self) {
+        *self = BasisGramCache::new();
+    }
+
+    /// The cached basis Gram (valid for the basis of the last call).
+    pub fn gram(&self) -> &SmallMat {
+        &self.g
+    }
+
+    /// Number of cached blocks, if any prefix matches (0 otherwise).
+    fn matching_prefix(&self, basis: &[&TasMatrix]) -> usize {
+        if self.ids.len() > basis.len() {
+            return 0;
+        }
+        for (i, blk) in basis.iter().take(self.ids.len()).enumerate() {
+            if blk.data_id != self.ids[i] || blk.n_cols != self.cols[i] {
+                return 0;
+            }
+        }
+        self.ids.len()
+    }
+
+    fn store(&mut self, basis: &[&TasMatrix], g: SmallMat) {
+        self.ids = basis.iter().map(|b| b.data_id).collect();
+        self.cols = basis.iter().map(|b| b.n_cols).collect();
+        self.g = g;
+    }
+}
 
 /// Project `x` against the orthonormal basis blocks (`x -= V·(Vᵀx)`),
 /// twice.  Returns the accumulated coefficients `C = Vᵀx` (m×b) from the
@@ -38,7 +107,7 @@ use crate::dense::{
 /// projected matrix T).  Dispatches on [`crate::dense::DenseCtx::is_fused`].
 pub fn ortho_against(basis: &[&TasMatrix], x: &TasMatrix) -> SmallMat {
     if x.ctx().is_fused() {
-        ortho_fused_impl(basis, x, false).0
+        ortho_fused_impl(basis, x, false, None, None, false).0
     } else {
         ortho_against_eager(basis, x)
     }
@@ -65,63 +134,189 @@ pub fn ortho_against_eager(basis: &[&TasMatrix], x: &TasMatrix) -> SmallMat {
 
 /// The fused-pipeline CGS2: one subspace read per round.
 pub fn ortho_against_fused(basis: &[&TasMatrix], x: &TasMatrix) -> SmallMat {
-    ortho_fused_impl(basis, x, false).0
+    ortho_fused_impl(basis, x, false, None, None, false).0
 }
 
-/// Shared fused CGS2 core.  When `want_gram` is set, the round-2 walk
-/// additionally accumulates the post-update Gram `xᵀx` (the input to the
-/// downstream Cholesky-QR) at zero extra I/O.
-fn ortho_fused_impl(
-    basis: &[&TasMatrix],
-    x: &TasMatrix,
-    want_gram: bool,
-) -> (SmallMat, Option<SmallMat>) {
-    let ctx = x.ctx().clone();
-    if basis.is_empty() {
-        let g = want_gram.then(|| {
-            let mut p = FusedPipeline::new(&ctx);
-            let h = p.gram(1.0, &[x], x);
-            let mut res = p.materialize();
-            res.take_gram(h)
-        });
-        return (SmallMat::zeros(0, x.n_cols), g);
-    }
+/// Group-bounded rebuild of the basis Gram: panels computed in pipelines
+/// of ≤ `group_size` right-hand blocks each, so no walk pins more than
+/// two groups of intervals per worker (§3.4.3).  Reuses any cached
+/// prefix, and computes only the upper triangle — each block's panel
+/// multiplies against the basis prefix up to and including itself; the
+/// strict lower triangle is mirrored (G is symmetric), halving the
+/// rebuild flops.
+fn refresh_gram_cache(basis: &[&TasMatrix], cache: &mut BasisGramCache) {
+    let ctx = basis[0].ctx().clone();
     let m = total_cols(basis);
-
-    // Round 1: one streaming pass over [V, x] yields c1 = Vᵀx AND
-    // G = VᵀV (every interval of every operand read exactly once).
-    let (c1, g) = {
+    let cached_k = cache.matching_prefix(basis);
+    let cached_cols: usize = basis[..cached_k].iter().map(|b| b.n_cols).sum();
+    let mut g = SmallMat::zeros(m, m);
+    if cached_k > 0 {
+        g.set_block(0, 0, &cache.g);
+    }
+    let group = ctx.group_size.max(1);
+    let mut bi = cached_k; // absolute block index of the next panel
+    let mut col = cached_cols;
+    for chunk in basis[cached_k..].chunks(group) {
         let mut p = FusedPipeline::new(&ctx);
-        let hc = p.gram(1.0, basis, x);
-        let hg: Vec<GramHandle> = basis.iter().map(|&blk| p.gram(1.0, basis, blk)).collect();
+        let hs: Vec<GramHandle> = chunk
+            .iter()
+            .enumerate()
+            .map(|(j, &blk)| p.gram(1.0, &basis[..=bi + j], blk))
+            .collect();
         let mut res = p.materialize();
-        let c1 = res.take_gram(hc);
-        let mut g = SmallMat::zeros(m, m);
-        let mut col = 0usize;
-        for (hb, blk) in hg.into_iter().zip(basis) {
-            let gb = res.take_gram(hb); // m × blk.n_cols
+        for (h, blk) in hs.into_iter().zip(chunk) {
+            let gb = res.take_gram(h); // (cols through this block) × blk.n_cols
             g.set_block(0, col, &gb);
             col += blk.n_cols;
         }
-        (c1, g)
-    };
+        bi += chunk.len();
+    }
+    // Mirror the strict lower triangle from the computed upper triangle.
+    for i in 0..m {
+        for j in 0..i {
+            *g.at_mut(i, j) = g.at(j, i);
+        }
+    }
+    cache.store(basis, g);
+}
 
+/// PIP combination + round-2 update: given the basis Gram and `c₁`,
+/// apply `x ← x − V·(c₁ + c₂)` in one walk, optionally fusing the
+/// post-update Gram `xᵀx` into it.
+fn pip_and_round2(
+    basis: &[&TasMatrix],
+    x: &TasMatrix,
+    g: &SmallMat,
+    c1: SmallMat,
+    want_gram: bool,
+    split_phases: bool,
+) -> (SmallMat, Option<SmallMat>) {
+    let ctx = x.ctx().clone();
     // c2 = c1 − G·c1 — the PIP form of the second projection's
     // coefficients; c = c1 + c2 is the combined correction.
     let mut c2 = c1.clone();
-    SmallMat::gemm(-1.0, &g, false, &c1, false, 1.0, &mut c2);
+    SmallMat::gemm(-1.0, g, false, &c1, false, 1.0, &mut c2);
     let mut c = c1;
     for (a, b) in c.data.iter_mut().zip(&c2.data) {
         *a += b;
     }
-
-    // Round 2: one pass applies x ← x − V·c and (optionally) the
-    // post-update Gram for normalization, fused into the same walk.
     let mut p = FusedPipeline::new(&ctx);
     p.gemm_update(-1.0, basis, c.clone(), 1.0, x);
     let hg = want_gram.then(|| p.gram(1.0, &[x], x));
-    let mut res = p.materialize();
+    let mut res = if split_phases {
+        ctx.io_phases.scope_tracked(&ctx.fs, &ctx.mem, "ortho", || p.materialize())
+    } else {
+        p.materialize()
+    };
     (c, hg.map(|h| res.take_gram(h)))
+}
+
+/// One extra projection of `x` against `basis` reusing a ready Gram
+/// (used when a rank-deficient block is replaced: the basis — and hence
+/// `G` — is unchanged, so only `c₁` needs a fresh pass).
+fn project_against_with_gram(basis: &[&TasMatrix], x: &TasMatrix, g: &SmallMat) -> SmallMat {
+    let ctx = x.ctx().clone();
+    let c1 = {
+        let mut p = FusedPipeline::new(&ctx);
+        let h = p.gram(1.0, basis, x);
+        let mut res = p.materialize();
+        res.take_gram(h)
+    };
+    pip_and_round2(basis, x, g, c1, false, false).0
+}
+
+/// Shared fused CGS2 core.  `want_gram` fuses the post-update Gram `xᵀx`
+/// (the Cholesky-QR input) into the round-2 walk at zero extra I/O.
+/// `cache` enables the incremental basis Gram; `producer` sources `x`
+/// from a streamed operator apply in the round-1 walk; `split_phases`
+/// attributes the round-1 walk to the `spmm` I/O phase and the rest to
+/// `ortho` (used by [`expand_block_streamed`] — callers must then NOT
+/// wrap the call in an outer phase scope).
+fn ortho_fused_impl(
+    basis: &[&TasMatrix],
+    x: &TasMatrix,
+    want_gram: bool,
+    mut cache: Option<&mut BasisGramCache>,
+    producer: Option<Box<dyn IntervalProducer + '_>>,
+    split_phases: bool,
+) -> (SmallMat, Option<SmallMat>) {
+    let ctx = x.ctx().clone();
+    if basis.is_empty() {
+        let mut p = FusedPipeline::new(&ctx);
+        if let Some(prod) = producer {
+            p.source(x, prod);
+        }
+        let h = want_gram.then(|| p.gram(1.0, &[x], x));
+        if p.num_steps() > 0 {
+            let mut res = if split_phases {
+                ctx.io_phases.scope_tracked(&ctx.fs, &ctx.mem, "spmm", || p.materialize())
+            } else {
+                p.materialize()
+            };
+            return (SmallMat::zeros(0, x.n_cols), h.map(|hh| res.take_gram(hh)));
+        }
+        return (SmallMat::zeros(0, x.n_cols), None);
+    }
+    let m = total_cols(basis);
+
+    // A restart replaced several blocks at once: rebuild the cache with
+    // group-bounded pipelines instead of pinning every block in round 1.
+    if let Some(c) = cache.as_deref_mut() {
+        if basis.len() - c.matching_prefix(basis) > 1 {
+            if split_phases {
+                ctx.io_phases
+                    .scope_tracked(&ctx.fs, &ctx.mem, "ortho", || refresh_gram_cache(basis, c));
+            } else {
+                refresh_gram_cache(basis, c);
+            }
+        }
+    }
+    let cached_k = cache.as_deref().map_or(0, |c| c.matching_prefix(basis));
+    let cached_cols: usize = basis[..cached_k].iter().map(|b| b.n_cols).sum();
+
+    // Round 1: one streaming pass yields c1 = Vᵀx AND the uncached Gram
+    // panels (every interval of every operand read exactly once; with a
+    // warm cache only the newest block's panel is computed, and the rest
+    // of the basis streams through group-bounded chunks).  With a
+    // producer, the same walk also computes and stores x = A·v_p.
+    let (c1, g) = {
+        let mut p = FusedPipeline::new(&ctx);
+        if let Some(prod) = producer {
+            p.source(x, prod);
+        }
+        let hc = p.gram(1.0, basis, x);
+        let hg: Vec<GramHandle> =
+            basis[cached_k..].iter().map(|&blk| p.gram(1.0, basis, blk)).collect();
+        let mut res = if split_phases {
+            ctx.io_phases.scope_tracked(&ctx.fs, &ctx.mem, "spmm", || p.materialize())
+        } else {
+            p.materialize()
+        };
+        let c1 = res.take_gram(hc);
+        let mut g = SmallMat::zeros(m, m);
+        if cached_k > 0 {
+            g.set_block(0, 0, &cache.as_deref().unwrap().g);
+        }
+        let mut col = cached_cols;
+        for (hb, blk) in hg.into_iter().zip(&basis[cached_k..]) {
+            let gb = res.take_gram(hb); // m × blk.n_cols
+            g.set_block(0, col, &gb);
+            col += blk.n_cols;
+        }
+        // Panels fill full columns; mirror the bottom-left strip that
+        // the cached prefix doesn't cover (G is symmetric).
+        for i in cached_cols..m {
+            for j in 0..cached_cols {
+                *g.at_mut(i, j) = g.at(j, i);
+            }
+        }
+        (c1, g)
+    };
+    if let Some(c) = cache.as_deref_mut() {
+        c.store(basis, g.clone());
+    }
+
+    pip_and_round2(basis, x, &g, c1, want_gram, split_phases)
 }
 
 /// Orthonormalize the columns of `x` in place via Cholesky QR
@@ -134,7 +329,7 @@ fn ortho_fused_impl(
 /// Dispatches on [`crate::dense::DenseCtx::is_fused`].
 pub fn normalize_block(x: &TasMatrix, basis: &[&TasMatrix], seed: u64) -> (SmallMat, bool) {
     if x.ctx().is_fused() {
-        normalize_block_fused(x, basis, seed, None)
+        normalize_block_fused(x, basis, seed, None, None)
     } else {
         normalize_block_eager(x, basis, seed)
     }
@@ -182,13 +377,15 @@ pub fn normalize_block_eager(
 /// Fused normalization: each round's `X := X·R⁻¹` update and the next
 /// round's Gram `XᵀX` run in one interval walk, so a normalization round
 /// costs one pass over `x` instead of two.  `first_gram` lets the caller
-/// hand in a Gram already accumulated by a preceding fused walk
-/// (see [`ortho_normalize`]).
+/// hand in a Gram already accumulated by a preceding fused walk, and
+/// `basis_gram` lets the rank-deficiency path re-project with the cached
+/// `VᵀV` instead of recomputing it.
 fn normalize_block_fused(
     x: &TasMatrix,
     basis: &[&TasMatrix],
     seed: u64,
     first_gram: Option<SmallMat>,
+    basis_gram: Option<&SmallMat>,
 ) -> (SmallMat, bool) {
     let ctx = x.ctx().clone();
     let b = x.n_cols;
@@ -224,7 +421,14 @@ fn normalize_block_fused(
             None => {
                 replaced = true;
                 mv_random(x, seed.wrapping_add(attempt as u64 + 1));
-                ortho_against_fused(basis, x);
+                match basis_gram {
+                    Some(bg) if !basis.is_empty() => {
+                        let _ = project_against_with_gram(basis, x, bg);
+                    }
+                    _ => {
+                        ortho_against_fused(basis, x);
+                    }
+                }
                 r_total = SmallMat::zeros(b, b);
             }
         }
@@ -247,14 +451,59 @@ pub fn ortho_normalize(
     seed: u64,
 ) -> (SmallMat, SmallMat, bool) {
     if x.ctx().is_fused() {
-        let (c, g) = ortho_fused_impl(basis, x, true);
-        let (r, replaced) = normalize_block_fused(x, basis, seed, g);
+        let (c, g) = ortho_fused_impl(basis, x, true, None, None, false);
+        let (r, replaced) = normalize_block_fused(x, basis, seed, g, None);
         (c, r, replaced)
     } else {
         let c = ortho_against_eager(basis, x);
         let (r, replaced) = normalize_block_eager(x, basis, seed);
         (c, r, replaced)
     }
+}
+
+/// [`ortho_normalize`] with the incremental basis Gram: in fused mode
+/// the cache supplies `G = VᵀV` and is extended by the new blocks'
+/// panels instead of recomputing `O(n·m²)` from scratch each step.  In
+/// eager mode this is the plain reference chain (the cache is left
+/// untouched).
+pub fn ortho_normalize_cached(
+    basis: &[&TasMatrix],
+    x: &TasMatrix,
+    seed: u64,
+    cache: &mut BasisGramCache,
+) -> (SmallMat, SmallMat, bool) {
+    if x.ctx().is_fused() {
+        let (c, g) = ortho_fused_impl(basis, x, true, Some(&mut *cache), None, false);
+        let (r, replaced) = normalize_block_fused(x, basis, seed, g, Some(&cache.g));
+        (c, r, replaced)
+    } else {
+        let c = ortho_against_eager(basis, x);
+        let (r, replaced) = normalize_block_eager(x, basis, seed);
+        (c, r, replaced)
+    }
+}
+
+/// The streamed expansion step: `x` (an empty overwrite-target block) is
+/// *sourced* from `producer` — the operator's streamed `A·v_p` — inside
+/// the round-1 walk, which simultaneously computes the CGS2 `c₁` and the
+/// incremental Gram panel and stores `x` once.  The chain then proceeds
+/// as [`ortho_normalize_cached`].  I/O attribution: the round-1 walk is
+/// counted under the `spmm` phase, everything after under `ortho` — the
+/// caller must NOT wrap this call in an outer [`crate::metrics::PhaseIo`]
+/// scope.
+pub fn expand_block_streamed(
+    basis: &[&TasMatrix],
+    x: &TasMatrix,
+    producer: Box<dyn IntervalProducer + '_>,
+    cache: &mut BasisGramCache,
+    seed: u64,
+) -> (SmallMat, SmallMat, bool) {
+    let ctx = x.ctx().clone();
+    let (c, g) = ortho_fused_impl(basis, x, true, Some(&mut *cache), Some(producer), true);
+    let (r, replaced) = ctx.io_phases.scope_tracked(&ctx.fs, &ctx.mem, "ortho", || {
+        normalize_block_fused(x, basis, seed, g, Some(&cache.g))
+    });
+    (c, r, replaced)
 }
 
 /// Max |VᵢᵀVⱼ - δᵢⱼ| over all basis blocks — test/diagnostic invariant.
@@ -395,5 +644,84 @@ mod tests {
         .unwrap();
         // Both paths end orthonormal against the basis.
         assert!(orthonormality_error(&[&v0, &v1, &xf]) < 1e-12);
+    }
+
+    /// Build an orthonormal basis of `p` blocks incrementally with the
+    /// cache, checking at each step that the cached chain matches the
+    /// uncached fused chain on a twin context.
+    #[test]
+    fn cached_gram_matches_uncached_chain() {
+        let mk_ctx = || {
+            let ctx = DenseCtx::mem_for_tests(64);
+            ctx.set_fused(true);
+            ctx
+        };
+        let ctx_a = mk_ctx();
+        let ctx_b = mk_ctx();
+        let n = 350;
+        let b = 2;
+        let mut cache = BasisGramCache::new();
+        let mut basis_a: Vec<TasMatrix> = Vec::new();
+        let mut basis_b: Vec<TasMatrix> = Vec::new();
+        for step in 0..4u64 {
+            let f = move |r: usize, c: usize| ((r * (3 + step as usize) + 2 * c) % 19) as f64 - 9.0;
+            let xa = TasMatrix::from_fn(&ctx_a, n, b, f);
+            let xb = TasMatrix::from_fn(&ctx_b, n, b, f);
+            let refs_a: Vec<&TasMatrix> = basis_a.iter().collect();
+            let refs_b: Vec<&TasMatrix> = basis_b.iter().collect();
+            let (ca, ra, _) = ortho_normalize_cached(&refs_a, &xa, 100 + step, &mut cache);
+            let (cb, rb, _) = ortho_normalize(&refs_b, &xb, 100 + step);
+            crate::util::prop::assert_close(&ca.data, &cb.data, 1e-11, 1e-11, "c").unwrap();
+            crate::util::prop::assert_close(&ra.data, &rb.data, 1e-11, 1e-11, "r").unwrap();
+            crate::util::prop::assert_close(
+                &xa.to_colmajor(),
+                &xb.to_colmajor(),
+                1e-11,
+                1e-11,
+                "x",
+            )
+            .unwrap();
+            basis_a.push(xa);
+            basis_b.push(xb);
+        }
+        let refs_a: Vec<&TasMatrix> = basis_a.iter().collect();
+        assert!(orthonormality_error(&refs_a) < 1e-11);
+        // The cache tracks the full basis now.
+        assert_eq!(cache.matching_prefix(&refs_a), 4);
+    }
+
+    #[test]
+    fn cache_rebuilds_after_invalidation() {
+        let ctx = DenseCtx::mem_for_tests(64);
+        ctx.set_fused(true);
+        let n = 300;
+        let mut cache = BasisGramCache::new();
+        let mut basis: Vec<TasMatrix> = Vec::new();
+        for step in 0..3u64 {
+            let x = TasMatrix::from_fn(&ctx, n, 2, move |r, c| {
+                ((r * (step as usize + 2) + c * 5) % 23) as f64 - 11.0
+            });
+            let refs: Vec<&TasMatrix> = basis.iter().collect();
+            ortho_normalize_cached(&refs, &x, 7 + step, &mut cache);
+            basis.push(x);
+        }
+        // Simulate a restart: invalidate, then expand once more — the
+        // group-bounded rebuild must reproduce a consistent G.
+        cache.invalidate();
+        let x = TasMatrix::from_fn(&ctx, n, 2, |r, c| ((r * 13 + c) % 29) as f64 - 14.0);
+        let refs: Vec<&TasMatrix> = basis.iter().collect();
+        let (_, _, replaced) = ortho_normalize_cached(&refs, &x, 77, &mut cache);
+        assert!(!replaced);
+        basis.push(x);
+        let refs: Vec<&TasMatrix> = basis.iter().collect();
+        assert!(orthonormality_error(&refs) < 1e-11, "{}", orthonormality_error(&refs));
+        // The rebuilt + extended cache Gram ≈ identity (orthonormal basis).
+        let g = cache.gram();
+        for i in 0..g.rows {
+            for j in 0..g.cols {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((g.at(i, j) - expect).abs() < 1e-10, "G[{i}][{j}] = {}", g.at(i, j));
+            }
+        }
     }
 }

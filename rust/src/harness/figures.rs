@@ -49,7 +49,10 @@ pub fn table2(cfg: &BenchCfg) -> Table {
             fmt_bytes(csr8),
         ]);
     }
-    t.note(format!("scale = {:.2e} of Table 2; SCSR+COO image vs 8-byte-index CSR model", cfg.scale));
+    t.note(format!(
+        "scale = {:.2e} of Table 2; SCSR+COO image vs 8-byte-index CSR model",
+        cfg.scale
+    ));
     t
 }
 
@@ -96,7 +99,9 @@ pub fn fig6(cfg: &BenchCfg, datasets: &[Dataset], cols: &[usize]) -> Table {
             }
         }
     }
-    t.note("paper shape: all optimizations together = 2-4x over CSR; cache blocking strongest at small b");
+    t.note(
+        "paper shape: all opts together = 2-4x over CSR; cache blocking strongest at small b",
+    );
     t
 }
 
@@ -141,7 +146,9 @@ pub fn fig7(cfg: &BenchCfg, cols: &[usize]) -> Table {
             ratio(t_im / t_sem),
         ]);
     }
-    t.note("paper shape: SEM ≈ 60% of IM at b=1, gap narrows with b; FE beats MKL 2-3x and Trilinos");
+    t.note(
+        "paper shape: SEM ≈ 60% of IM at b=1, gap narrows with b; FE beats MKL 2-3x and Trilinos",
+    );
     t
 }
 
@@ -241,7 +248,9 @@ pub fn fig9(cfg: &BenchCfg, n: usize, m: usize, b: usize) -> Table {
         let base = *base_time.get_or_insert(t_run);
         t.row(vec![(*label).into(), secs(t_run), ratio(base / t_run)]);
     }
-    t.note(format!("n={n}, m={m}, b={b}; paper shape: buf pool + fewer I/O threads dominate; all together ≈ 4x"));
+    t.note(format!(
+        "n={n}, m={m}, b={b}; paper shape: buf pool + fewer I/O threads dominate; all together ≈ 4x"
+    ));
     t
 }
 
@@ -291,6 +300,83 @@ pub fn fig9_fusion_data(
         rows.push((label, el, fs.stats().delta_since(&before)));
     }
     rows
+}
+
+// ------------------------------------------------------------- Fig 9c
+
+/// Measure one operator apply (`W = A·X`) over an EM subspace in the
+/// eager ConvLayout→SpMM→ConvLayout path vs the streamed interval-
+/// granular boundary.  Write-through context (`cache_slots = 0`) so the
+/// eager path's intermediate round trips are visible as SAFS bytes.
+/// Returns `(label, runtime_secs, io_delta, peak_dense_bytes)` rows —
+/// the raw data behind [`fig9_stream`], also pinned by the
+/// I/O-accounting regression tests.
+pub fn fig9_stream_data(
+    cfg: &BenchCfg,
+    n_scale: f64,
+    b: usize,
+) -> Vec<(&'static str, f64, IoStats, u64)> {
+    let mut scaled = cfg.clone();
+    scaled.scale *= n_scale;
+    let mut coo = scaled.gen(Dataset::Friendster);
+    if Dataset::Friendster.directed() {
+        coo.symmetrize();
+    }
+    let mut rows = Vec::new();
+    for (label, streamed) in [("eager (3x full-height)", false), ("streamed (intervals)", true)]
+    {
+        let fs = Safs::new(scaled.safs_config());
+        // cache_slots = 0: the dense boundary's traffic is fully visible.
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            scaled.interval_rows,
+            scaled.threads,
+            8,
+            0,
+            Arc::new(NativeKernels),
+        );
+        let op = SpmmOperator::new(scaled.build_im(&coo), SpmmOpts::default(), scaled.threads);
+        let n = coo.n_rows as usize;
+        let x = TasMatrix::zeros(&ctx, n, b);
+        mv_random(&x, 4242);
+        let before = fs.stats();
+        ctx.mem.begin_window();
+        let (_, el) = time_it(|| {
+            let _w = if streamed { op.apply_streamed(&ctx, &x) } else { op.apply(&ctx, &x) };
+        });
+        rows.push((label, el, fs.stats().delta_since(&before), ctx.mem.window_peak()));
+    }
+    rows
+}
+
+/// Figure 9c (beyond the paper): the streamed operator boundary ablation
+/// — full-height eager ConvLayout→SpMM→ConvLayout vs the §3.4
+/// interval-granular streamed apply, reporting both SAFS bytes and the
+/// peak resident dense working set.
+pub fn fig9_stream(cfg: &BenchCfg, n_scale: f64, b: usize) -> Table {
+    let mut t = Table::new(
+        "Figure 9c: streamed SpMM operator boundary (EM subspace, write-through)",
+        &["path", "runtime", "read", "written", "total", "peak dense", "bytes vs eager"],
+    );
+    let rows = fig9_stream_data(cfg, n_scale, b);
+    let base = rows[0].2.total_bytes().max(1);
+    for (label, el, io, peak) in &rows {
+        t.row(vec![
+            (*label).into(),
+            secs(*el),
+            fmt_bytes(io.bytes_read),
+            fmt_bytes(io.bytes_written),
+            fmt_bytes(io.total_bytes()),
+            fmt_bytes(*peak),
+            ratio(io.total_bytes() as f64 / base as f64),
+        ]);
+    }
+    t.note(
+        "eager materializes 3 full-height dense matrices per apply; streamed gathers input \
+         intervals on demand and hands finished output intervals straight to the TAS layer",
+    );
+    t
 }
 
 /// Figure 9b (beyond the paper): the §3.4 lazy-evaluation ablation —
@@ -363,7 +449,9 @@ pub fn fig10(cfg: &BenchCfg, n: usize, b: usize, m_list: &[usize]) -> Table {
             ratio(t_em / t_im),
         ]);
     }
-    t.note("paper shape: FE-EM 3-6x slower than FE-IM (I/O bound); FE-IM competitive with MKL at larger m");
+    t.note(
+        "paper shape: FE-EM 3-6x slower than FE-IM (I/O bound); FE-IM close to MKL at larger m",
+    );
     t
 }
 
@@ -442,6 +530,8 @@ pub struct EigenRun {
     /// Per-phase SAFS traffic (spmm / ortho / restart) from
     /// [`crate::metrics::PhaseIo`].
     pub phase_io: BTreeMap<String, IoStats>,
+    /// Per-phase peak resident dense bytes (the §3.4.3 working set).
+    pub phase_dense_peaks: BTreeMap<String, u64>,
 }
 
 /// Run the Block KrylovSchur solver in one of the Fig. 12 modes.
@@ -489,7 +579,10 @@ pub fn run_eigensolver(
         ),
         _ => panic!("unknown mode {mode}"),
     };
+    // The fused mode also runs the streamed operator boundary (§3.4):
+    // SpMM output flows interval-by-interval into the ortho walk.
     ctx.set_fused(mode == "fe-sem-fused");
+    ctx.set_streamed(mode == "fe-sem-fused");
     let before = fs.stats();
     let (res, runtime) = time_it(|| solve(op.as_ref(), &ctx, &ecfg));
     let delta = fs.stats().delta_since(&before);
@@ -503,6 +596,7 @@ pub fn run_eigensolver(
         bytes_written: delta.bytes_written,
         eigenvalues: res.eigenvalues,
         phase_io: ctx.io_phases.snapshot(),
+        phase_dense_peaks: ctx.io_phases.dense_peaks_snapshot(),
     }
 }
 
@@ -669,6 +763,29 @@ mod tests {
             eager.total_bytes()
         );
         let t = fig9_fusion(&tiny_cfg(), 2000, 8, 2);
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn fig9_stream_smoke_strictly_fewer_bytes_and_memory() {
+        // Scale up so the subspace spans several intervals — streaming
+        // is the identity transformation on a single-interval matrix.
+        let rows = fig9_stream_data(&tiny_cfg(), 16.0, 4);
+        assert_eq!(rows.len(), 2);
+        let (eager, streamed) = (&rows[0], &rows[1]);
+        assert!(
+            streamed.2.total_bytes() < eager.2.total_bytes(),
+            "streamed must move strictly fewer bytes: {} vs {}",
+            streamed.2.total_bytes(),
+            eager.2.total_bytes()
+        );
+        assert!(
+            streamed.3 < eager.3,
+            "streamed peak dense {} must undercut eager {}",
+            streamed.3,
+            eager.3
+        );
+        let t = fig9_stream(&tiny_cfg(), 16.0, 4);
         assert_eq!(t.rows.len(), 2);
     }
 

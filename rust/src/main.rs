@@ -44,6 +44,10 @@ COMMON OPTIONS:
   --sem              semi-external mode (matrix + subspace on SSDs)
   --fused            route MultiVec chains through the lazy-evaluation
                      fused pipeline (one subspace pass per CGS2 round)
+  --streamed         stream the operator boundary: SpMM output flows
+                     interval-by-interval into the ortho walk instead of
+                     materializing full-height dense blocks (implies
+                     --fused)
   --xla              dispatch dense kernels to the AOT JAX/Pallas artifacts
   --cols <b>         dense-matrix width for spmm (default 4)
   --exp <id>         figure/table id for `figures`
@@ -145,16 +149,19 @@ fn cmd_eigen(args: &Args, as_svd: bool) -> i32 {
             Arc::new(NativeKernels)
         };
         let ctx = cfg.dense_ctx(fs.clone(), sem, kernels);
-        ctx.set_fused(args.flag("fused"));
+        let streamed = args.flag("streamed");
+        ctx.set_fused(args.flag("fused") || streamed);
+        ctx.set_streamed(streamed);
         let mode = if sem { "FE-SEM" } else { "FE-IM" };
         eprintln!(
-            "solving: {} nev={nev} b={} NB={} tol={:.0e} dense-kernels={} multivec={}",
+            "solving: {} nev={nev} b={} NB={} tol={:.0e} dense-kernels={} multivec={} operator={}",
             mode,
             ecfg.block_size,
             ecfg.num_blocks,
             ecfg.tol,
             ctx.kernels.name(),
-            if ctx.is_fused() { "fused" } else { "eager" }
+            if ctx.is_fused() { "fused" } else { "eager" },
+            if ctx.is_streamed() { "streamed" } else { "materialized" }
         );
 
         let before = fs.stats();
@@ -288,6 +295,9 @@ fn cmd_figures(args: &Args) -> i32 {
         if all || exp == "fig9" {
             harness::fig9(&cfg, dense_n, 64, 4).print();
             harness::fig9_fusion(&cfg, dense_n, 64, 4).print();
+            // 16x the base scale so the subspace spans several row
+            // intervals — streaming is the identity on one interval.
+            harness::fig9_stream(&cfg, 16.0, 4).print();
             ran = true;
         }
         if all || exp == "fig10" {

@@ -87,11 +87,20 @@ impl PhaseTimers {
 /// harness reads the totals to report the paper-style per-phase byte
 /// breakdown (§3.4's claim that reorthogonalization dominates traffic).
 ///
+/// Beyond SAFS bytes, a phase can also record the **peak resident dense
+/// bytes** observed while it ran ([`PhaseIo::scope_tracked`]): the
+/// high-water mark of a [`MemTracker`] over the scope, i.e. the §3.4.3
+/// working-set the phase actually held in RAM.  The eigensolver uses this
+/// to demonstrate that its streamed/fused walks stay within the
+/// `group_size`-intervals-per-worker bound instead of materializing
+/// full-height matrices.
+///
 /// Scopes must not nest over the same filesystem — nested scopes would
 /// double-count the inner phase's bytes.
 #[derive(Default)]
 pub struct PhaseIo {
     phases: Mutex<BTreeMap<String, IoStats>>,
+    dense_peaks: Mutex<BTreeMap<String, u64>>,
 }
 
 impl PhaseIo {
@@ -107,27 +116,64 @@ impl PhaseIo {
         r
     }
 
+    /// Like [`PhaseIo::scope`], but additionally records the peak
+    /// resident dense bytes (the `mem` tracker's high-water mark over the
+    /// scope) for `phase`.  Phase peaks fold by `max`, so the reported
+    /// value is the worst single invocation of the phase.
+    pub fn scope_tracked<T>(
+        &self,
+        fs: &crate::safs::Safs,
+        mem: &MemTracker,
+        phase: &str,
+        f: impl FnOnce() -> T,
+    ) -> T {
+        let before = fs.stats();
+        mem.begin_window();
+        let r = f();
+        self.add(phase, &fs.stats().delta_since(&before));
+        self.add_dense_peak(phase, mem.window_peak());
+        r
+    }
+
     /// Fold a pre-measured delta into `phase`.
     pub fn add(&self, phase: &str, delta: &IoStats) {
         let mut m = self.phases.lock().unwrap();
         m.entry(phase.to_string()).or_default().accumulate(delta);
     }
 
+    /// Fold a peak-resident-dense-bytes observation into `phase` (max).
+    pub fn add_dense_peak(&self, phase: &str, peak: u64) {
+        let mut m = self.dense_peaks.lock().unwrap();
+        let e = m.entry(phase.to_string()).or_insert(0);
+        *e = (*e).max(peak);
+    }
+
     pub fn get(&self, phase: &str) -> IoStats {
         self.phases.lock().unwrap().get(phase).cloned().unwrap_or_default()
+    }
+
+    /// Peak resident dense bytes recorded for `phase` (0 if untracked).
+    pub fn dense_peak(&self, phase: &str) -> u64 {
+        self.dense_peaks.lock().unwrap().get(phase).copied().unwrap_or(0)
     }
 
     pub fn snapshot(&self) -> BTreeMap<String, IoStats> {
         self.phases.lock().unwrap().clone()
     }
 
-    pub fn reset(&self) {
-        self.phases.lock().unwrap().clear();
+    pub fn dense_peaks_snapshot(&self) -> BTreeMap<String, u64> {
+        self.dense_peaks.lock().unwrap().clone()
     }
 
-    /// Render a sorted "phase: read/written" report.
+    pub fn reset(&self) {
+        self.phases.lock().unwrap().clear();
+        self.dense_peaks.lock().unwrap().clear();
+    }
+
+    /// Render a sorted "phase: read/written (+peak dense)" report.
     pub fn report(&self) -> String {
         let snap = self.snapshot();
+        let peaks = self.dense_peaks_snapshot();
         let total: u64 = snap.values().map(|s| s.total_bytes()).sum();
         let mut rows: Vec<(&String, &IoStats)> = snap.iter().collect();
         rows.sort_by_key(|(_, s)| std::cmp::Reverse(s.total_bytes()));
@@ -139,10 +185,17 @@ impl PhaseIo {
                 0.0
             };
             out.push_str(&format!(
-                "  {name:<28} read {:>10}  written {:>10}  {pct:>5.1}%\n",
+                "  {name:<28} read {:>10}  written {:>10}  {pct:>5.1}%",
                 crate::util::humansize::fmt_bytes(s.bytes_read),
                 crate::util::humansize::fmt_bytes(s.bytes_written)
             ));
+            if let Some(&p) = peaks.get(name) {
+                out.push_str(&format!(
+                    "  peak dense {:>10}",
+                    crate::util::humansize::fmt_bytes(p)
+                ));
+            }
+            out.push('\n');
         }
         out
     }
@@ -152,16 +205,24 @@ impl PhaseIo {
 /// explicit allocations (dense matrices, buffers).  The paper reports
 /// "120GB memory" for the page graph; we track our modeled footprint the
 /// same way: every large allocation registers/unregisters its size.
+///
+/// Besides the lifetime peak, the tracker keeps a **window** high-water
+/// mark: [`MemTracker::begin_window`] resets it to the current level and
+/// [`MemTracker::window_peak`] reads the maximum reached since — how
+/// [`PhaseIo::scope_tracked`] attributes peak resident dense bytes to one
+/// solver phase.  Windows must not overlap (phases are sequential).
 #[derive(Default, Debug)]
 pub struct MemTracker {
     current: AtomicU64,
     peak: AtomicU64,
+    window_peak: AtomicU64,
 }
 
 impl MemTracker {
     pub fn alloc(&self, bytes: u64) {
         let cur = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
         self.peak.fetch_max(cur, Ordering::Relaxed);
+        self.window_peak.fetch_max(cur, Ordering::Relaxed);
     }
     pub fn free(&self, bytes: u64) {
         self.current.fetch_sub(bytes, Ordering::Relaxed);
@@ -172,9 +233,40 @@ impl MemTracker {
     pub fn peak(&self) -> u64 {
         self.peak.load(Ordering::Relaxed)
     }
+    /// Start a fresh high-water window at the current level.
+    pub fn begin_window(&self) {
+        self.window_peak.store(self.current(), Ordering::Relaxed);
+    }
+    /// Peak level reached since the last [`MemTracker::begin_window`].
+    pub fn window_peak(&self) -> u64 {
+        self.window_peak.load(Ordering::Relaxed)
+    }
     pub fn reset(&self) {
         self.current.store(0, Ordering::Relaxed);
         self.peak.store(0, Ordering::Relaxed);
+        self.window_peak.store(0, Ordering::Relaxed);
+    }
+}
+
+/// RAII registration of one large transient allocation against a
+/// [`MemTracker`]: `alloc` on construction, `free` on drop.  Used by the
+/// streamed/fused walks so their working buffers show up in the modeled
+/// footprint the same way [`crate::dense::TasMatrix`] slots do.
+pub struct MemGuard<'a> {
+    mem: &'a MemTracker,
+    bytes: u64,
+}
+
+impl<'a> MemGuard<'a> {
+    pub fn new(mem: &'a MemTracker, bytes: u64) -> MemGuard<'a> {
+        mem.alloc(bytes);
+        MemGuard { mem, bytes }
+    }
+}
+
+impl Drop for MemGuard<'_> {
+    fn drop(&mut self) {
+        self.mem.free(self.bytes);
     }
 }
 
@@ -245,5 +337,49 @@ mod tests {
         m.alloc(10);
         assert_eq!(m.current(), 60);
         assert_eq!(m.peak(), 150);
+    }
+
+    #[test]
+    fn mem_tracker_window_peaks() {
+        let m = MemTracker::default();
+        m.alloc(100);
+        m.begin_window();
+        assert_eq!(m.window_peak(), 100);
+        m.alloc(40);
+        m.free(140);
+        m.begin_window();
+        m.alloc(5);
+        assert_eq!(m.window_peak(), 5);
+        assert_eq!(m.peak(), 140);
+    }
+
+    #[test]
+    fn mem_guard_frees_on_drop() {
+        let m = MemTracker::default();
+        {
+            let _g = MemGuard::new(&m, 77);
+            assert_eq!(m.current(), 77);
+        }
+        assert_eq!(m.current(), 0);
+        assert_eq!(m.peak(), 77);
+    }
+
+    #[test]
+    fn phase_io_tracks_dense_peaks() {
+        use crate::safs::{Safs, SafsConfig};
+        let fs = Safs::new(SafsConfig::untimed());
+        let io = PhaseIo::new();
+        let mem = MemTracker::default();
+        io.scope_tracked(&fs, &mem, "walk", || {
+            let _g = MemGuard::new(&mem, 1000);
+        });
+        io.scope_tracked(&fs, &mem, "walk", || {
+            let _g = MemGuard::new(&mem, 400);
+        });
+        assert_eq!(io.dense_peak("walk"), 1000, "peaks fold by max");
+        assert_eq!(io.dense_peak("other"), 0);
+        assert!(io.report().contains("peak dense"));
+        io.reset();
+        assert_eq!(io.dense_peak("walk"), 0);
     }
 }

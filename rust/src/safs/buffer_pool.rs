@@ -5,10 +5,23 @@
 //! 10 GB/s.  SAFS instead keeps previously allocated buffers and reuses
 //! them, resizing when a request needs a bigger one.  The pool is
 //! per-worker-thread so `get`/`put` take no locks.
+//!
+//! The free list is kept **sorted by capacity** so `get` binary-searches
+//! for the smallest sufficient buffer instead of scanning, and the pool
+//! bounds what it retains: total retained capacity is capped (so a long
+//! external-memory run does not pin peak-sized buffers forever) and a
+//! buffer returned with a capacity far above the observed demand
+//! high-water is shrunk before being kept.
 
 /// A pool of reusable byte buffers.  Create one per worker thread.
 pub struct BufferPool {
+    /// Free buffers sorted ascending by capacity.
     free: Vec<Vec<u8>>,
+    /// Total capacity currently retained in `free`.
+    retained: usize,
+    /// Largest length ever requested through `get` — the demand
+    /// high-water mark that oversized buffers are shrunk towards.
+    demand: usize,
     /// When `false`, the pool degenerates to plain allocation — the
     /// baseline of the Fig. 9 "buf pool" ablation.
     enabled: bool,
@@ -18,19 +31,30 @@ pub struct BufferPool {
 }
 
 impl BufferPool {
+    /// Maximum number of buffers kept on the free list.
+    pub const MAX_BUFFERS: usize = 32;
+    /// Maximum total capacity retained across the free list.
+    pub const MAX_RETAINED_BYTES: usize = 64 << 20;
+    /// A buffer whose capacity exceeds the demand high-water by this
+    /// factor is shrunk on `put` instead of being retained at full size.
+    pub const OVERSIZE_FACTOR: usize = 4;
+
     pub fn new(enabled: bool) -> BufferPool {
-        BufferPool { free: Vec::new(), enabled, hits: 0, misses: 0 }
+        BufferPool { free: Vec::new(), retained: 0, demand: 0, enabled, hits: 0, misses: 0 }
     }
 
     /// Get a buffer of exactly `len` bytes.  Contents are unspecified
     /// (callers always overwrite the full range — reads fill it, writers
     /// build it).
     pub fn get(&mut self, len: usize) -> Vec<u8> {
+        self.demand = self.demand.max(len);
         if self.enabled {
-            // Prefer the most recently returned buffer that is big enough;
-            // resize (grow) the largest one otherwise, as the paper does.
-            if let Some(pos) = self.free.iter().rposition(|b| b.capacity() >= len) {
-                let mut buf = self.free.swap_remove(pos);
+            // Smallest sufficient buffer, found by binary search over the
+            // capacity-sorted free list.
+            let idx = self.free.partition_point(|b| b.capacity() < len);
+            if idx < self.free.len() {
+                let mut buf = self.free.remove(idx);
+                self.retained -= buf.capacity();
                 // SAFETY: u8 needs no initialization and every caller
                 // overwrites [0, len) before reading (pread fills the whole
                 // range; write paths fill before submitting).
@@ -39,8 +63,14 @@ impl BufferPool {
                 return buf;
             }
             if let Some(mut buf) = self.free.pop() {
-                // Resize a previously allocated buffer that is too small.
-                buf.reserve(len.saturating_sub(buf.capacity()));
+                // No buffer is big enough: grow the largest one, as the
+                // paper does.  `reserve` is relative to the LENGTH, so
+                // clear first — reserving relative to capacity would
+                // under-allocate whenever len < capacity and the
+                // set_len below would run past the allocation.
+                self.retained -= buf.capacity();
+                buf.clear();
+                buf.reserve(len);
                 unsafe { buf.set_len(len) };
                 self.hits += 1;
                 return buf;
@@ -52,11 +82,31 @@ impl BufferPool {
         vec![0u8; len]
     }
 
-    /// Return a buffer to the pool.
-    pub fn put(&mut self, buf: Vec<u8>) {
-        if self.enabled && self.free.len() < 32 {
-            self.free.push(buf);
+    /// Return a buffer to the pool.  Grossly oversized buffers (relative
+    /// to the demand high-water) are shrunk first; buffers that would
+    /// push the pool past its retention caps are dropped — except that an
+    /// empty pool always retains the buffer, so a working set of one
+    /// giant buffer (the SEM engine's partition reads) keeps its
+    /// allocation even above the byte cap.
+    pub fn put(&mut self, mut buf: Vec<u8>) {
+        if !self.enabled || self.free.len() >= Self::MAX_BUFFERS {
+            return;
         }
+        if self.demand > 0 && buf.capacity() > Self::OVERSIZE_FACTOR * self.demand {
+            buf.truncate(self.demand);
+            buf.shrink_to(self.demand);
+        }
+        if !self.free.is_empty() && self.retained + buf.capacity() > Self::MAX_RETAINED_BYTES {
+            return;
+        }
+        let idx = self.free.partition_point(|b| b.capacity() < buf.capacity());
+        self.retained += buf.capacity();
+        self.free.insert(idx, buf);
+    }
+
+    /// Total capacity currently held on the free list.
+    pub fn retained_bytes(&self) -> usize {
+        self.retained
     }
 }
 
@@ -103,6 +153,52 @@ mod tests {
         for _ in 0..100 {
             p.put(vec![0u8; 8]);
         }
-        assert!(p.free.len() <= 32);
+        assert!(p.free.len() <= BufferPool::MAX_BUFFERS);
+    }
+
+    #[test]
+    fn best_fit_picks_smallest_sufficient() {
+        let mut p = BufferPool::new(true);
+        // Seed demand so the big buffers are not shrunk on put.
+        let _ = p.get(4096);
+        p.put(Vec::with_capacity(64));
+        p.put(Vec::with_capacity(4096));
+        p.put(Vec::with_capacity(512));
+        let b = p.get(100);
+        assert_eq!(b.capacity(), 512, "best fit, not most recent");
+        // The sorted order survives mixed puts.
+        let caps: Vec<usize> = p.free.iter().map(|b| b.capacity()).collect();
+        let mut sorted = caps.clone();
+        sorted.sort_unstable();
+        assert_eq!(caps, sorted);
+    }
+
+    #[test]
+    fn retained_bytes_capped() {
+        let mut p = BufferPool::new(true);
+        // Demand high enough that nothing is shrunk.
+        let _ = p.get(BufferPool::MAX_RETAINED_BYTES);
+        p.put(Vec::with_capacity(BufferPool::MAX_RETAINED_BYTES - 100));
+        assert_eq!(p.retained_bytes(), BufferPool::MAX_RETAINED_BYTES - 100);
+        // This one would exceed the cap: dropped.
+        p.put(Vec::with_capacity(200));
+        assert_eq!(p.retained_bytes(), BufferPool::MAX_RETAINED_BYTES - 100);
+        assert_eq!(p.free.len(), 1);
+    }
+
+    #[test]
+    fn oversized_buffers_shrink_on_put() {
+        let mut p = BufferPool::new(true);
+        let _ = p.get(100); // demand = 100
+        p.put(vec![0u8; 100_000]); // 1000x the demand: shrunk
+        assert_eq!(p.free.len(), 1);
+        assert!(
+            p.free[0].capacity() <= BufferPool::OVERSIZE_FACTOR * 100,
+            "oversized buffer should be shrunk, kept {}",
+            p.free[0].capacity()
+        );
+        // A reasonably-sized buffer is retained as-is.
+        p.put(vec![0u8; 150]);
+        assert!(p.free.iter().any(|b| b.capacity() >= 150));
     }
 }

@@ -337,7 +337,8 @@ mod tests {
             entries.sort_unstable();
             entries.dedup();
             let weighted = g.bool();
-            let vals: Vec<f32> = entries.iter().map(|&(r, c)| (r as f32) + 0.5 * c as f32).collect();
+            let vals: Vec<f32> =
+                entries.iter().map(|&(r, c)| (r as f32) + 0.5 * c as f32).collect();
             let bytes = encode_tile(&entries, weighted.then_some(&vals[..]), dim);
             let view = TileView::parse(&bytes, weighted);
             let triples = view.to_sorted_triples();

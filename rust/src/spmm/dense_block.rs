@@ -8,6 +8,33 @@
 
 use std::cell::UnsafeCell;
 
+/// Transpose a row-major `rows × cols` slab into column-major order —
+/// the interval-granular unit of the §3.4 ConvLayout, used by the
+/// streamed SpMM boundary to hand finished output row intervals to the
+/// column-major TAS layer without materializing a full-height matrix.
+pub fn rowmajor_to_colmajor(src: &[f64], rows: usize, cols: usize, dst: &mut [f64]) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            dst[c * rows + r] = src[r * cols + c];
+        }
+    }
+}
+
+/// Transpose a column-major `rows × cols` slab into row-major order —
+/// the inverse ConvLayout unit, used when gathering TAS subspace
+/// intervals into the SpMM read path.
+pub fn colmajor_to_rowmajor(src: &[f64], rows: usize, cols: usize, dst: &mut [f64]) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    for c in 0..cols {
+        for r in 0..rows {
+            dst[r * cols + c] = src[c * rows + r];
+        }
+    }
+}
+
 /// Physical layout of the backing storage.
 enum Layout {
     /// One contiguous allocation — the no-NUMA baseline.
@@ -285,5 +312,20 @@ mod tests {
     fn crossing_interval_panics_in_debug() {
         let m = DenseBlock::new_numa(200_000, 1, 16384);
         let _ = m.rows(65_530, 100); // crosses the 65536 boundary
+    }
+
+    #[test]
+    fn transpose_helpers_roundtrip() {
+        let rows = 5;
+        let cols = 3;
+        let rm: Vec<f64> = (0..rows * cols).map(|i| i as f64).collect();
+        let mut cm = vec![0.0; rows * cols];
+        rowmajor_to_colmajor(&rm, rows, cols, &mut cm);
+        assert_eq!(cm[0], 0.0); // (0,0)
+        assert_eq!(cm[1], 3.0); // (1,0) = row 1, col 0
+        assert_eq!(cm[rows], 1.0); // (0,1)
+        let mut back = vec![0.0; rows * cols];
+        colmajor_to_rowmajor(&cm, rows, cols, &mut back);
+        assert_eq!(back, rm);
     }
 }

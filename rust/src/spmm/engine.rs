@@ -138,6 +138,45 @@ pub fn spmm(
     SpmmRunStats { partitions: parts.len(), stolen: stolen.load(Ordering::Relaxed) }
 }
 
+/// Multiply the tiles of tile rows `[tr0, tr0 + row_images.len())`
+/// against an interval-sourced input, accumulating into `out_rowmajor`
+/// (the covered rows × `b`, row-major, starting at `tr0`'s first row).
+///
+/// This is the streamed-boundary counterpart of [`multiply_partition`]:
+/// instead of indexing a fully materialized row-major [`DenseBlock`],
+/// each tile's input rows come from the [`crate::spmm::InputGather`],
+/// which converts the column-major TAS intervals lazily — the input
+/// ConvLayout fused into the SpMM read path (§3.4).
+pub(crate) fn multiply_rows_from_gather(
+    matrix: &SparseMatrix,
+    row_images: &[&[u8]],
+    gather: &crate::spmm::InputGather<'_>,
+    out_rowmajor: &mut [f64],
+    b: usize,
+    vectorize: bool,
+) {
+    let td = matrix.tile_dim;
+    let out_rows = out_rowmajor.len() / b.max(1);
+    // Tile columns arrive in ascending order per tile row, so consecutive
+    // tiles usually share an input interval: hold the interval handle
+    // across tiles instead of taking the gather's slot lock per tile.
+    let mut cached: Option<(usize, std::sync::Arc<Vec<f64>>)> = None;
+    for (ri, img) in row_images.iter().enumerate() {
+        let out_start = ri * td;
+        let out_len = td.min(out_rows - out_start);
+        let dst = &mut out_rowmajor[out_start * b..(out_start + out_len) * b];
+        for (tc, view) in TileRowView::new(img, matrix.has_values) {
+            let (iv, off, len) = gather.locate(tc as usize, td);
+            if cached.as_ref().map_or(true, |(civ, _)| *civ != iv) {
+                cached = Some((iv, gather.interval_arc(iv)));
+            }
+            let arc = &cached.as_ref().unwrap().1;
+            let in_rows = &arc[off * b..(off + len) * b];
+            multiply_tile(&view, in_rows, dst, b, vectorize);
+        }
+    }
+}
+
 /// Contiguous byte range of a partition's tile rows in the image file.
 fn part_byte_range(matrix: &SparseMatrix, part: (usize, usize)) -> (u64, usize) {
     let off = matrix.index[part.0].offset;

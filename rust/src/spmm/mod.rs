@@ -7,9 +7,11 @@ pub mod dense_block;
 pub mod engine;
 pub mod kernel;
 pub mod opts;
+pub mod stream;
 pub mod super_tile;
 
 pub use baseline::{spmm_csr, spmm_trilinos_like};
-pub use dense_block::{DenseBlock, SharedMut};
+pub use dense_block::{colmajor_to_rowmajor, rowmajor_to_colmajor, DenseBlock, SharedMut};
 pub use engine::{spmm, SpmmRunStats};
 pub use opts::SpmmOpts;
+pub use stream::{InputGather, StreamedSpmm};

@@ -1,0 +1,346 @@
+//! The streaming SpMM operator boundary (§3.4 ConvLayout fusion).
+//!
+//! The eager operator path materializes three full-height dense matrices
+//! per `A·X`: ConvLayout copies the whole column-major input into a
+//! row-major [`super::DenseBlock`], SpMM fills a full-height output
+//! block, and a second ConvLayout copies that into a TAS matrix.  At
+//! paper scale each copy is ~n·b·8 bytes (109 GB for the 3.4B-vertex
+//! page graph at b = 4), so the eager path triples the semi-external
+//! memory bound.
+//!
+//! This module replaces the boundary with two interval-granular pieces:
+//!
+//! * [`InputGather`] — an interval-sourced input.  Tile-column rows are
+//!   gathered from the TAS input's intervals **on demand**, converting
+//!   each interval to row-major lazily and reading it from SAFS exactly
+//!   once (the input ConvLayout fused into the SpMM read path).  The
+//!   worst-case resident set is one full row-major input — the working
+//!   set the paper's 120 GB budget already accounts for — and graphs
+//!   with column locality stay well below it.
+//! * [`StreamedSpmm`] — an interval-sink output.  It implements
+//!   [`IntervalProducer`], so a [`crate::dense::FusedPipeline`] *pulls*
+//!   each finished output row interval (tile rows multiplied on demand,
+//!   the output ConvLayout fused into the transpose-on-return) straight
+//!   into the consuming walk — no full-height output block, no
+//!   intermediate on-SSD round trip.
+//!
+//! [`crate::eigen::Operator::apply_streamed`] wires the two into the
+//! solver's expansion step.
+
+use super::dense_block::{colmajor_to_rowmajor, rowmajor_to_colmajor};
+use super::engine::multiply_rows_from_gather;
+use crate::dense::{IntervalProducer, TasMatrix};
+use crate::metrics::MemGuard;
+use crate::safs::BufferPool;
+use crate::sparse::SparseMatrix;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Interval-sourced SpMM input: lazily gathers row-major tile-column
+/// rows from a column-major TAS matrix, loading each TAS interval from
+/// SAFS **exactly once** and keeping the converted interval resident for
+/// the remaining pulls.  Shared by all workers of one streamed apply.
+pub struct InputGather<'a> {
+    mat: &'a TasMatrix,
+    /// One slot per TAS interval: the row-major conversion, populated on
+    /// first touch under the slot's lock.
+    slots: Vec<Mutex<Option<Arc<Vec<f64>>>>>,
+    pool: Mutex<BufferPool>,
+    /// Bytes currently registered with the context's memory tracker.
+    tracked: AtomicU64,
+}
+
+impl<'a> InputGather<'a> {
+    pub fn new(mat: &'a TasMatrix) -> InputGather<'a> {
+        let slots = (0..mat.n_intervals()).map(|_| Mutex::new(None)).collect();
+        let pool = BufferPool::new(mat.ctx().fs.cfg().use_buffer_pool);
+        InputGather { mat, slots, pool: Mutex::new(pool), tracked: AtomicU64::new(0) }
+    }
+
+    /// The row-major conversion of interval `iv`, loading it on first
+    /// touch (one SAFS read per interval, ever).
+    fn interval_rowmajor(&self, iv: usize) -> Arc<Vec<f64>> {
+        let mut slot = self.slots[iv].lock().unwrap();
+        if let Some(a) = slot.as_ref() {
+            return a.clone();
+        }
+        let rows = self.mat.interval_len(iv);
+        let cols = self.mat.n_cols;
+        let mut data = vec![0.0; rows * cols];
+        {
+            let mut pool = self.pool.lock().unwrap();
+            let g = self.mat.load_interval(iv, &mut pool);
+            colmajor_to_rowmajor(&g, rows, cols, &mut data);
+            g.recycle(&mut pool);
+        }
+        let bytes = (data.len() * 8) as u64;
+        self.mat.ctx().mem.alloc(bytes);
+        self.tracked.fetch_add(bytes, Ordering::Relaxed);
+        let a = Arc::new(data);
+        *slot = Some(a.clone());
+        a
+    }
+
+    /// Locate tile column `tc`: `(interval, row offset within it, row
+    /// count)`.  Pure arithmetic — pair with [`InputGather::interval_arc`]
+    /// so the multiply loop can reuse one interval handle across
+    /// consecutive tile columns instead of re-locking per tile.
+    pub fn locate(&self, tc: usize, tile_dim: usize) -> (usize, usize, usize) {
+        let start = tc * tile_dim;
+        let iv = start / self.mat.interval_rows();
+        let off = start - iv * self.mat.interval_rows();
+        let len = tile_dim.min(self.mat.n_rows - start);
+        (iv, off, len)
+    }
+
+    /// Handle to interval `iv`'s row-major data (loads it on first touch).
+    pub fn interval_arc(&self, iv: usize) -> Arc<Vec<f64>> {
+        self.interval_rowmajor(iv)
+    }
+
+    /// Bytes of converted input currently resident (the gather's share of
+    /// the §3.4 working set; ≤ one full row-major input).
+    pub fn resident_bytes(&self) -> u64 {
+        self.tracked.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for InputGather<'_> {
+    fn drop(&mut self) {
+        self.mat.ctx().mem.free(self.tracked.load(Ordering::Relaxed));
+    }
+}
+
+/// Pull-mode streamed `A·X`: produces one column-major output row
+/// interval per [`IntervalProducer::produce`] call, multiplying the
+/// interval's tile rows against the [`InputGather`].  Hand it to
+/// [`crate::dense::FusedPipeline::source`] so the SpMM output feeds the
+/// consuming walk directly.
+pub struct StreamedSpmm<'a> {
+    matrix: &'a SparseMatrix,
+    gather: InputGather<'a>,
+    /// Output interval size (== the dense context's `interval_rows`).
+    interval_rows: usize,
+    b: usize,
+    vectorize: bool,
+    /// Pool for SEM tile-row image reads.
+    image_pool: Mutex<BufferPool>,
+}
+
+impl<'a> StreamedSpmm<'a> {
+    /// Build a streamed apply of `matrix · input`.  Returns `None` when
+    /// the layout cannot stream: the TAS interval size must be a
+    /// multiple of the matrix tile dimension (so a tile's rows never
+    /// cross an interval boundary) and shapes must agree.
+    pub fn new(
+        matrix: &'a SparseMatrix,
+        input: &'a TasMatrix,
+        vectorize: bool,
+    ) -> Option<StreamedSpmm<'a>> {
+        if input.n_rows as u64 != matrix.n_cols {
+            return None;
+        }
+        if input.interval_rows() % matrix.tile_dim != 0 {
+            return None;
+        }
+        let use_pool = input.ctx().fs.cfg().use_buffer_pool;
+        Some(StreamedSpmm {
+            matrix,
+            gather: InputGather::new(input),
+            interval_rows: input.interval_rows(),
+            b: input.n_cols,
+            vectorize,
+            image_pool: Mutex::new(BufferPool::new(use_pool)),
+        })
+    }
+
+    /// Rows of the streamed output (`A`'s row count).
+    pub fn output_rows(&self) -> usize {
+        self.matrix.n_rows as usize
+    }
+
+    /// The input gather (tests inspect its resident footprint).
+    pub fn gather(&self) -> &InputGather<'a> {
+        &self.gather
+    }
+}
+
+impl IntervalProducer for StreamedSpmm<'_> {
+    fn produce(&self, iv: usize, rows: usize) -> Vec<f64> {
+        let td = self.matrix.tile_dim;
+        let row_base = iv * self.interval_rows;
+        debug_assert!(row_base % td == 0, "interval not tile-aligned");
+        let tr0 = row_base / td;
+        let tr1 = (row_base + rows).div_ceil(td).min(self.matrix.num_tile_rows());
+        let b = self.b;
+        let mem = self.gather.mat.ctx().mem.clone();
+
+        // Row-major accumulation buffer for this interval only.
+        let _g = MemGuard::new(&mem, (rows * b * 8) as u64);
+        let mut out = vec![0.0; rows * b];
+        match self.matrix.safs_handle() {
+            None => {
+                let images: Vec<&[u8]> = (tr0..tr1)
+                    .map(|tr| self.matrix.tile_row_mem(tr).unwrap())
+                    .collect();
+                multiply_rows_from_gather(
+                    self.matrix,
+                    &images,
+                    &self.gather,
+                    &mut out,
+                    b,
+                    self.vectorize,
+                );
+            }
+            Some((fs, file)) => {
+                if tr0 < tr1 {
+                    // One contiguous read covering the interval's tile
+                    // rows — each tile row is read exactly once across
+                    // the whole apply (intervals partition the rows).
+                    let base = self.matrix.index[tr0].offset;
+                    let last = self.matrix.index[tr1 - 1];
+                    let len = (last.offset + last.len as u64 - base) as usize;
+                    let buf = {
+                        let mut pool = self.image_pool.lock().unwrap();
+                        pool.get(len)
+                    };
+                    let buf = fs.read_async(file.clone(), base, buf).wait();
+                    let images: Vec<&[u8]> = (tr0..tr1)
+                        .map(|tr| {
+                            let m = self.matrix.index[tr];
+                            let s = (m.offset - base) as usize;
+                            &buf[s..s + m.len as usize]
+                        })
+                        .collect();
+                    multiply_rows_from_gather(
+                        self.matrix,
+                        &images,
+                        &self.gather,
+                        &mut out,
+                        b,
+                        self.vectorize,
+                    );
+                    self.image_pool.lock().unwrap().put(buf);
+                }
+            }
+        }
+
+        // Fused output ConvLayout: hand the interval back column-major
+        // (tracked while it overlaps the row-major buffer; the consuming
+        // pipeline registers the returned buffer itself).
+        let _g2 = MemGuard::new(&mem, (rows * b * 8) as u64);
+        let mut cm = vec![0.0; rows * b];
+        rowmajor_to_colmajor(&out, rows, b, &mut cm);
+        cm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::{DenseCtx, FusedPipeline, TasMatrix};
+    use crate::safs::{Safs, SafsConfig};
+    use crate::sparse::{build_matrix_opts, BuildTarget, CooMatrix};
+    use crate::spmm::{spmm, DenseBlock, SpmmOpts};
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    fn random_graph(rng: &mut Rng, n: u64, nnz: usize) -> CooMatrix {
+        let mut coo = CooMatrix::new(n, n);
+        for _ in 0..nnz {
+            coo.push(rng.gen_range(n) as u32, rng.gen_range(n) as u32);
+        }
+        coo.sort_dedup();
+        coo
+    }
+
+    /// Streamed produce() over every interval == eager engine spmm.
+    #[test]
+    fn streamed_intervals_match_engine_output() {
+        let mut rng = Rng::new(41);
+        let coo = random_graph(&mut rng, 500, 4000);
+        for (em, sem_matrix) in [(false, false), (true, true)] {
+            let ctx = if em {
+                DenseCtx::em_for_tests(64)
+            } else {
+                DenseCtx::mem_for_tests(64)
+            };
+            let fs = ctx.fs.clone();
+            let m = if sem_matrix {
+                build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "m"), true)
+            } else {
+                build_matrix_opts(&coo, 32, BuildTarget::Mem, true)
+            };
+            let x = TasMatrix::from_fn(&ctx, 500, 3, |r, c| ((r * 7 + c) % 11) as f64 - 5.0);
+
+            // Eager reference through the row-major engine.
+            let input = DenseBlock::from_fn(500, 3, 32, true, |r, c| {
+                ((r * 7 + c) % 11) as f64 - 5.0
+            });
+            let mut output = DenseBlock::new(500, 3, 32, true);
+            spmm(&m, &input, &mut output, &SpmmOpts::default(), 2);
+
+            let s = StreamedSpmm::new(&m, &x, true).expect("layout streams");
+            let w = TasMatrix::zeros_for_overwrite(&ctx, 500, 3);
+            let mut p = FusedPipeline::new(&ctx);
+            p.source(&w, Box::new(s));
+            p.materialize();
+
+            // Compare column-major.
+            let wv = w.to_colmajor();
+            let ov = output.to_vec();
+            let mut expect = vec![0.0; 500 * 3];
+            rowmajor_to_colmajor(&ov, 500, 3, &mut expect);
+            assert_close(&wv, &expect, 0.0, 0.0, "streamed vs engine").unwrap();
+        }
+    }
+
+    #[test]
+    fn gather_reads_each_interval_once() {
+        // Write-through EM: the gather's loads are visible as SAFS reads.
+        let fs = Safs::new(SafsConfig::untimed());
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            64,
+            2,
+            3,
+            0,
+            std::sync::Arc::new(crate::dense::NativeKernels),
+        );
+        let mut rng = Rng::new(42);
+        let coo = random_graph(&mut rng, 320, 3000);
+        let m = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);
+        let x = TasMatrix::from_fn(&ctx, 320, 2, |r, _| r as f64);
+        let s = StreamedSpmm::new(&m, &x, true).unwrap();
+        let before = fs.stats();
+        // Pull every interval twice: the second pass must be free.
+        let n_iv = x.n_intervals();
+        for iv in 0..n_iv {
+            let rows = x.interval_len(iv);
+            let _ = s.produce(iv, rows);
+        }
+        let after_first = fs.stats().delta_since(&before);
+        assert_eq!(after_first.bytes_read, (320 * 2 * 8) as u64, "one read per interval");
+        for iv in 0..n_iv {
+            let rows = x.interval_len(iv);
+            let _ = s.produce(iv, rows);
+        }
+        let after_second = fs.stats().delta_since(&before);
+        assert_eq!(after_second.bytes_read, after_first.bytes_read, "second pass cached");
+        assert_eq!(s.gather().resident_bytes(), (320 * 2 * 8) as u64);
+    }
+
+    #[test]
+    fn streaming_refused_on_unaligned_intervals() {
+        let ctx = DenseCtx::mem_for_tests(96); // 96 % 64 != 0
+        let mut rng = Rng::new(43);
+        let coo = random_graph(&mut rng, 200, 1000);
+        let m = build_matrix_opts(&coo, 64, BuildTarget::Mem, true);
+        let x = TasMatrix::from_fn(&ctx, 200, 2, |r, _| r as f64);
+        assert!(StreamedSpmm::new(&m, &x, true).is_none());
+        // Aligned tile dim streams fine.
+        let m32 = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);
+        assert!(StreamedSpmm::new(&m32, &x, true).is_some());
+    }
+}

@@ -11,12 +11,13 @@
 //!   the per-file random striping orders.
 
 use flasheigen::dense::{tas::mv_random, DenseCtx, NativeKernels, TasMatrix};
-use flasheigen::eigen::{ortho_normalize, solve, EigenConfig, SpmmOperator, Which};
+use flasheigen::eigen::{ortho_normalize, solve, EigenConfig, Operator, SpmmOperator, Which};
 use flasheigen::graph::gnm_undirected;
 use flasheigen::harness::{fig9_fusion_data, BenchCfg};
 use flasheigen::safs::{Safs, SafsConfig};
-use flasheigen::sparse::build_mem;
+use flasheigen::sparse::{build_matrix_opts, build_mem, BuildTarget};
 use flasheigen::spmm::SpmmOpts;
+use flasheigen::util::prop::assert_close;
 use flasheigen::util::rng::Rng;
 use std::sync::Arc;
 
@@ -152,6 +153,131 @@ fn per_device_skew_stays_balanced() {
     );
     let skew = stats.skew();
     assert!(skew <= 1.5, "per-device striping skew too high: {skew:.3}");
+}
+
+/// (e) The streamed operator boundary: one `A·X` over a write-through EM
+/// subspace reads each subspace interval exactly once (the gather's
+/// exactly-once guarantee), writes the output exactly once, and moves
+/// strictly fewer total SAFS bytes than the eager
+/// ConvLayout→SpMM→ConvLayout path — while producing identical values.
+#[test]
+fn streamed_apply_reads_each_subspace_interval_once() {
+    let fs = Safs::new(SafsConfig::untimed());
+    // cache_slots = 0 (write-through): every dense access is visible.
+    let ctx = DenseCtx::with(fs.clone(), true, 128, 2, 4, 0, Arc::new(NativeKernels));
+    let mut rng = Rng::new(91);
+    let coo = gnm_undirected(2000, 12_000, &mut rng);
+    // Matrix image in memory: the measured bytes are the dense boundary.
+    let m = build_matrix_opts(&coo, 64, BuildTarget::Mem, true);
+    let op = SpmmOperator::new(m, SpmmOpts::default(), 2);
+    let (n, b) = (2000usize, 2usize);
+    let x = TasMatrix::zeros(&ctx, n, b);
+    mv_random(&x, 7);
+    let mat_bytes = (n * b * 8) as u64;
+
+    let before = fs.stats();
+    let w_streamed = op.apply_streamed(&ctx, &x);
+    let streamed = fs.stats().delta_since(&before);
+    assert_eq!(
+        streamed.bytes_read, mat_bytes,
+        "streamed apply must read each subspace interval exactly once"
+    );
+    assert_eq!(streamed.bytes_written, mat_bytes, "output written exactly once");
+
+    let before = fs.stats();
+    let w_eager = op.apply(&ctx, &x);
+    let eager = fs.stats().delta_since(&before);
+    assert_eq!(eager.bytes_read, mat_bytes, "eager also reads the input once");
+    assert_eq!(
+        eager.bytes_written,
+        2 * mat_bytes,
+        "eager zero-materializes the output TAS then stores it"
+    );
+    assert!(
+        streamed.total_bytes() < eager.total_bytes(),
+        "streamed must move strictly fewer bytes: {} vs {}",
+        streamed.total_bytes(),
+        eager.total_bytes()
+    );
+    assert_close(
+        &w_streamed.to_colmajor(),
+        &w_eager.to_colmajor(),
+        1e-12,
+        1e-12,
+        "streamed == eager",
+    )
+    .unwrap();
+}
+
+/// (f) §3.4.3 group bound: during a full EM eigensolve with the
+/// fused+streamed path, every phase's peak resident dense bytes stay
+/// within `O(1)` full-height matrices (input gather + block cache) plus
+/// `group_size + O(1)` intervals per worker — independent of the
+/// subspace width — and strictly below the eager path's three
+/// full-height materializations.
+#[test]
+fn em_eigensolve_peak_dense_bounded_by_group() {
+    let mut rng = Rng::new(93);
+    let (n, b) = (6000usize, 2usize);
+    let coo = gnm_undirected(n as u64, 24_000, &mut rng);
+    let interval_rows = 128usize;
+    let (threads, group) = (2usize, 2usize);
+    let run = |fused_streamed: bool| {
+        let fs = Safs::new(SafsConfig::untimed());
+        let ctx = DenseCtx::with(
+            fs,
+            true,
+            interval_rows,
+            threads,
+            group,
+            1,
+            Arc::new(NativeKernels),
+        );
+        ctx.set_fused(fused_streamed);
+        ctx.set_streamed(fused_streamed);
+        let m = build_matrix_opts(&coo, 64, BuildTarget::Mem, true);
+        let op = SpmmOperator::new(m, SpmmOpts::default(), threads);
+        // Unreachable tolerance + few restarts: exercises expansion,
+        // restart and the post-restart Gram rebuild deterministically.
+        let cfg = EigenConfig {
+            nev: 4,
+            block_size: b,
+            num_blocks: 8,
+            tol: 1e-300,
+            max_restarts: 3,
+            which: Which::LargestMagnitude,
+            seed: 5,
+            compute_eigenvectors: false,
+        };
+        let _ = solve(&op, &ctx, &cfg);
+        ctx.io_phases.dense_peaks_snapshot()
+    };
+
+    let streamed = run(true);
+    let eager = run(false);
+
+    let mat_bytes = (n * b * 8) as u64;
+    let iv_bytes = (interval_rows * b * 8) as u64;
+    // ≤ 2 cache-resident matrices (LRU churn) + 1 input gather + 1 slack
+    // full-height matrix, plus per-worker walk footprint of a group of
+    // intervals and a handful of pinned/work/transpose buffers.
+    let bound = 4 * mat_bytes + (threads * (group + 8)) as u64 * iv_bytes;
+    for phase in ["spmm", "ortho", "restart"] {
+        let peak = streamed.get(phase).copied().unwrap_or(0);
+        assert!(peak > 0, "phase {phase} untracked: {streamed:?}");
+        assert!(
+            peak <= bound,
+            "phase {phase} peak dense {peak} exceeds the group bound {bound}"
+        );
+    }
+    // The eager spmm phase materializes ~3 full-height matrices on top of
+    // the resident cache; the streamed walk must undercut it.
+    let spmm_streamed = streamed.get("spmm").copied().unwrap_or(0);
+    let spmm_eager = eager.get("spmm").copied().unwrap_or(0);
+    assert!(
+        spmm_streamed < spmm_eager,
+        "streamed spmm peak {spmm_streamed} must undercut eager {spmm_eager}"
+    );
 }
 
 /// (d) The fig9b ablation row the acceptance criterion names: in FE-EM

@@ -7,8 +7,8 @@ use flasheigen::dense::{
     DenseCtx, FusedPipeline, NativeKernels, SmallMat, TasMatrix,
 };
 use flasheigen::eigen::ortho::{normalize_block_eager, ortho_against_eager};
-use flasheigen::eigen::{ortho_normalize_with, sym_eig};
-use flasheigen::graph::{gnm, gnm_undirected};
+use flasheigen::eigen::{ortho_normalize_with, sym_eig, Operator, SpmmOperator};
+use flasheigen::graph::{gnm, gnm_undirected, rmat, RmatParams};
 use flasheigen::safs::{Safs, SafsConfig, StripeMap};
 use flasheigen::sparse::{build_matrix, build_matrix_opts, BuildTarget, CsrMatrix};
 use flasheigen::spmm::{spmm, spmm_csr, DenseBlock, SpmmOpts};
@@ -28,8 +28,9 @@ fn prop_owned_queue_routing_complete_and_unique() {
             hits[i].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         });
         for (i, h) in hits.iter().enumerate() {
-            if h.load(std::sync::atomic::Ordering::Relaxed) != 1 {
-                return Err(format!("item {i} routed {} times", h.load(std::sync::atomic::Ordering::Relaxed)));
+            let hits = h.load(std::sync::atomic::Ordering::Relaxed);
+            if hits != 1 {
+                return Err(format!("item {i} routed {hits} times"));
             }
         }
         Ok(())
@@ -322,6 +323,51 @@ fn prop_fused_im_em_bit_for_bit() {
             return Err("FE-IM vs FE-EM fused results are not bit-for-bit".into());
         }
         Ok(())
+    });
+}
+
+#[test]
+fn prop_streamed_apply_matches_eager_apply() {
+    // The streamed ConvLayout→SpMM→ConvLayout boundary must reproduce
+    // the eager operator apply to 1e-12 on random ER and R-MAT graphs,
+    // over memory- and SSD-backed subspaces and matrix images.
+    run_prop("streamed-vs-eager-apply", 12, |g| {
+        let n = g.usize_in(2, 700) as u64;
+        let nnz = g.usize_in(0, 5000) as u64;
+        let tile = *g.choose(&[16usize, 32, 64]); // all divide the 64-row intervals
+        let b = g.usize_in(1, 4);
+        let em = g.bool();
+        let sem_matrix = g.bool();
+        let rmat_shape = g.bool();
+        let mut rng = Rng::new(g.u64());
+        let coo = if rmat_shape {
+            rmat(n.max(2), nnz.max(1), RmatParams::default(), &mut rng)
+        } else {
+            gnm_undirected(n, nnz.min(n * (n.saturating_sub(1)) / 2), &mut rng)
+        };
+        let ctx = if em {
+            DenseCtx::em_for_tests(64)
+        } else {
+            DenseCtx::mem_for_tests(64)
+        };
+        let matrix = if sem_matrix {
+            build_matrix_opts(&coo, tile, BuildTarget::Safs(&ctx.fs, "sa"), true)
+        } else {
+            build_matrix_opts(&coo, tile, BuildTarget::Mem, true)
+        };
+        let nn = coo.n_rows as usize;
+        let op = SpmmOperator::new(matrix, SpmmOpts::default(), g.usize_in(1, 3));
+        let x = TasMatrix::zeros(&ctx, nn, b);
+        mv_random(&x, g.u64());
+        let eager = op.apply(&ctx, &x);
+        let streamed = op.apply_streamed(&ctx, &x);
+        assert_close(
+            &streamed.to_colmajor(),
+            &eager.to_colmajor(),
+            1e-12,
+            1e-12,
+            "streamed apply",
+        )
     });
 }
 
