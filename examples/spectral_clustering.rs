@@ -127,6 +127,17 @@ fn main() {
     let fs = Safs::new(SafsConfig::default());
     let matrix = build_matrix(&coo, 4096, BuildTarget::Safs(&fs, "sbm"));
     let ctx = DenseCtx::new(fs, true);
+    // Select the §3.4 path explicitly rather than inheriting the context
+    // default: fused MultiVec pipelines + the streamed operator boundary
+    // (which IS the default — pass `--eager` style opt-out by calling
+    // `ctx.set_eager(true)` to ablate against the Table-1 reference ops).
+    ctx.set_fused(true);
+    ctx.set_streamed(true);
+    println!(
+        "dense path: {} multivec, {} operator boundary",
+        if ctx.is_fused() { "fused" } else { "eager" },
+        if ctx.is_streamed() { "streamed" } else { "materialized" }
+    );
     let op = SpmmOperator::new(matrix, SpmmOpts::default(), 4);
     let cfg = EigenConfig {
         nev: k,

@@ -1,8 +1,9 @@
 //! Figure 9: I/O optimization ablation on external-memory dense matrix
 //! multiplication (MvTransMv form), plus the §3.4 lazy-evaluation
-//! fusion ablation on CGS2 reorthogonalization (Figure 9b) and the
-//! streamed SpMM operator boundary ablation (Figure 9c).
-use flasheigen::harness::{fig9, fig9_fusion, fig9_stream, BenchCfg};
+//! fusion ablation on CGS2 reorthogonalization (Figure 9b), the
+//! streamed SpMM operator boundary ablation (Figure 9c) and the
+//! streamed two-hop Gram ablation for the SVD path (Figure 9d).
+use flasheigen::harness::{fig9, fig9_fusion, fig9_gram, fig9_stream, BenchCfg};
 
 fn main() {
     let cfg = BenchCfg::from_env();
@@ -13,4 +14,5 @@ fn main() {
     // 16x the base scale so the subspace spans several row intervals —
     // streaming is the identity transformation on a single interval.
     fig9_stream(&cfg, 16.0, 4).print();
+    fig9_gram(&cfg, 1.0, 4).print();
 }

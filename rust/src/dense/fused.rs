@@ -32,7 +32,8 @@
 //! each interval's contents, which then feed the rest of the chain and
 //! are written to the target matrix once — no intermediate on-SSD round
 //! trip.  This is how the SpMM operator boundary streams
-//! ([`crate::spmm::StreamedSpmm`]): the sparse multiply's output rows
+//! ([`crate::spmm::StreamedSpmm`], and the SVD path's two-hop
+//! [`crate::spmm::ChainedGramSpmm`]): the sparse multiply's output rows
 //! flow straight into the consuming reorthogonalization walk.
 //! Constraint: a producer must not read matrices that the same walk
 //! holds as loaded operands at the time the source runs; source steps
@@ -465,6 +466,35 @@ impl<'a> FusedPipeline<'a> {
     /// `target` once) instead of being loaded.  Later steps of the
     /// pipeline see the produced values — the SpMM→consumer fusion of
     /// the §3.4 operator boundary.
+    ///
+    /// Ordering/release guarantees: source steps execute **first** in
+    /// their phase (before any operand interval is pinned), each target
+    /// interval is produced exactly once per walk, and the produced
+    /// buffer is released as soon as the interval's chain steps and the
+    /// single write-back complete.
+    ///
+    /// ```
+    /// use flasheigen::dense::{DenseCtx, FusedPipeline, IntervalProducer, TasMatrix};
+    ///
+    /// /// A toy producer: every interval filled with ones.
+    /// struct Ones {
+    ///     cols: usize,
+    /// }
+    /// impl IntervalProducer for Ones {
+    ///     fn produce(&self, _iv: usize, rows: usize) -> Vec<f64> {
+    ///         vec![1.0; rows * self.cols]
+    ///     }
+    /// }
+    ///
+    /// let ctx = DenseCtx::mem_for_tests(64);
+    /// let y = TasMatrix::zeros_for_overwrite(&ctx, 100, 2);
+    /// let mut p = FusedPipeline::new(&ctx);
+    /// p.source(&y, Box::new(Ones { cols: 2 }));
+    /// let h = p.norm(&y); // the same walk reduces over the produced data
+    /// let res = p.materialize();
+    /// assert_eq!(res.norms(h), vec![10.0, 10.0]); // ‖1…1‖ = √100
+    /// assert_eq!(y.get(99, 1), 1.0); // …and y was stored once
+    /// ```
     pub fn source(&mut self, target: &'a TasMatrix, producer: Box<dyn IntervalProducer + 'a>) {
         let target = self.reg(target);
         let producer_idx = self.producers.len();

@@ -49,16 +49,20 @@ pub struct DenseCtx {
     /// Per-phase SAFS byte accounting (the solver scopes its spmm /
     /// ortho / restart sections through this).
     pub io_phases: PhaseIo,
-    /// When set, the eigensolver layers route their MultiVec chains
-    /// through the §3.4 lazy-evaluation pipeline
-    /// ([`crate::dense::fused`]) instead of the eager Table-1 ops.  The
-    /// eager path stays available as the reference implementation.
+    /// When set (the **default** since the §3.4 soak completed), the
+    /// eigensolver layers route their MultiVec chains through the
+    /// lazy-evaluation pipeline ([`crate::dense::fused`]) instead of the
+    /// eager Table-1 ops.  The eager path stays available as the
+    /// reference implementation — opt out with
+    /// [`DenseCtx::set_eager`] (CLI `--eager`) for differential testing.
     fused: AtomicBool,
-    /// When set (with `fused`), operator applies use the streamed
-    /// ConvLayout→SpMM→ConvLayout boundary: the SpMM output flows
-    /// interval-by-interval into the consuming pipeline instead of
-    /// materializing full-height dense blocks
-    /// ([`crate::spmm::StreamedSpmm`]).
+    /// When set with `fused` (also the **default**), operator applies
+    /// use the streamed ConvLayout→SpMM→ConvLayout boundary: the SpMM
+    /// output flows interval-by-interval into the consuming pipeline
+    /// instead of materializing full-height dense blocks
+    /// ([`crate::spmm::StreamedSpmm`]; the SVD path chains two hops via
+    /// [`crate::spmm::ChainedGramSpmm`]).  Layouts that cannot stream
+    /// fall back to the eager apply automatically.
     streamed: AtomicBool,
     ids: AtomicU64,
     lru: Mutex<VecDeque<Weak<MatInner>>>,
@@ -80,8 +84,8 @@ impl DenseCtx {
             kernels: Arc::new(NativeKernels),
             mem: Arc::new(MemTracker::default()),
             io_phases: PhaseIo::new(),
-            fused: AtomicBool::new(false),
-            streamed: AtomicBool::new(false),
+            fused: AtomicBool::new(true),
+            streamed: AtomicBool::new(true),
             ids: AtomicU64::new(1),
             lru: Mutex::new(VecDeque::new()),
         })
@@ -107,8 +111,8 @@ impl DenseCtx {
             kernels,
             mem: Arc::new(MemTracker::default()),
             io_phases: PhaseIo::new(),
-            fused: AtomicBool::new(false),
-            streamed: AtomicBool::new(false),
+            fused: AtomicBool::new(true),
+            streamed: AtomicBool::new(true),
             ids: AtomicU64::new(1),
             lru: Mutex::new(VecDeque::new()),
         })
@@ -126,7 +130,7 @@ impl DenseCtx {
     }
 
     /// Whether the eigensolver layers should use the §3.4
-    /// lazy-evaluation fused pipeline.
+    /// lazy-evaluation fused pipeline (the default configuration).
     pub fn is_fused(&self) -> bool {
         self.fused.load(Ordering::Relaxed)
     }
@@ -139,6 +143,7 @@ impl DenseCtx {
 
     /// Whether operator applies should use the streamed SpMM boundary
     /// (only honoured in fused mode — the stream feeds a pipeline walk).
+    /// On by default together with `fused`.
     pub fn is_streamed(&self) -> bool {
         self.streamed.load(Ordering::Relaxed)
     }
@@ -146,6 +151,17 @@ impl DenseCtx {
     /// Toggle the streamed operator boundary.
     pub fn set_streamed(&self, on: bool) {
         self.streamed.store(on, Ordering::Relaxed);
+    }
+
+    /// Opt out of the default fused + streamed configuration in one
+    /// call: route every MultiVec chain through the eager Table-1
+    /// reference ops and every operator apply through the materialized
+    /// ConvLayout→SpMM→ConvLayout boundary.  Ablations and differential
+    /// tests select the reference path explicitly through this instead
+    /// of inheriting it from a context default.
+    pub fn set_eager(&self, on: bool) {
+        self.set_fused(!on);
+        self.set_streamed(!on);
     }
 
     fn next_id(&self) -> u64 {

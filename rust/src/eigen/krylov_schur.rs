@@ -108,12 +108,15 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
             let seed = cfg.seed ^ (0x100 + t.rows as u64);
             let refs: Vec<&TasMatrix> = basis.iter().collect();
             let vp = *refs.last().unwrap();
-            // Streamed operator boundary (§3.4): when fused + streamed,
-            // A·v_p is produced interval-by-interval inside the round-1
-            // ortho walk — no full-height intermediate, no on-SSD round
-            // trip of the new block (phase attribution handled inside
-            // expand_block_streamed).  Otherwise: eager apply, then the
-            // CGS2 + Cholesky-QR chain with the cached basis Gram.
+            // Streamed operator boundary (§3.4): when fused + streamed
+            // (the default), A·v_p — or, for the SVD path's GramOperator,
+            // the chained two-hop Aᵀ(A·v_p) — is produced interval-by-
+            // interval inside the round-1 ortho walk: no full-height
+            // intermediate, no on-SSD round trip of the new block (phase
+            // attribution handled inside expand_block_streamed).
+            // Otherwise (explicit --eager opt-out, or a layout that
+            // cannot stream): eager apply, then the CGS2 + Cholesky-QR
+            // chain with the cached basis Gram.
             let streamed = if ctx.is_fused() && ctx.is_streamed() {
                 op.streamed_producer(vp)
             } else {
@@ -489,7 +492,11 @@ mod tests {
             } else {
                 DenseCtx::mem_for_tests(64)
             };
-            ctx.set_fused(fused);
+            // Explicit path selection: ablations never inherit the
+            // context default.  (build_mem's 16K tile cannot stream over
+            // 64-row intervals, so `fused` here exercises the fused
+            // pipeline with the eager-apply fallback.)
+            ctx.set_eager(!fused);
             let op = SpmmOperator::new(build_mem(&coo), SpmmOpts::default(), 2);
             let cfg = EigenConfig {
                 nev: 4,
@@ -527,6 +534,8 @@ mod tests {
             } else {
                 DenseCtx::mem_for_tests(64)
             };
+            // Both directions set explicitly: the eager rows are the
+            // ablation reference, not an inherited default.
             ctx.set_fused(fused);
             ctx.set_streamed(streamed);
             let m = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);

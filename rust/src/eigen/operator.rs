@@ -10,7 +10,9 @@
 //! input intervals are gathered on demand and finished output row
 //! intervals flow straight into the consuming pipeline walk.
 //! `GramOperator` applies `Aᵀ(A·X)` for singular value decomposition of
-//! directed graphs (§4.3.2).
+//! directed graphs (§4.3.2); its streamed producer chains **two** hops
+//! ([`crate::spmm::ChainedGramSpmm`]) through a bounded staging ring so
+//! the intermediate `A·X` never materializes at full height either.
 
 use crate::dense::{
     conv_layout_from_rowmajor, conv_layout_to_rowmajor, DenseCtx, FusedPipeline,
@@ -18,7 +20,7 @@ use crate::dense::{
 };
 use crate::metrics::{Counter, MemGuard, PhaseTimers};
 use crate::sparse::SparseMatrix;
-use crate::spmm::{spmm, SpmmOpts, StreamedSpmm};
+use crate::spmm::{spmm, ChainedGramSpmm, SpmmOpts, StreamedSpmm};
 use std::sync::Arc;
 
 pub trait Operator: Sync {
@@ -193,6 +195,13 @@ impl Operator for CsrOperator {
 /// `AᵀA·X` — the normal-equations operator whose eigenpairs give the
 /// singular values/right singular vectors of a (rectangular or
 /// unsymmetric) A.
+///
+/// The eager [`Operator::apply`] materializes **four** full-height dense
+/// matrices (row-major input, `A·X`, `Aᵀ(A·X)`, and the output TAS
+/// conversion); [`Operator::streamed_producer`] instead chains two
+/// streamed hops through the bounded staging ring of
+/// [`crate::spmm::ChainedGramSpmm`], so only the gathered input is ever
+/// full-height resident.
 pub struct GramOperator {
     pub a: SparseMatrix,
     pub at: SparseMatrix,
@@ -252,6 +261,16 @@ impl Operator for GramOperator {
 
     fn applies(&self) -> u64 {
         self.count.get()
+    }
+
+    fn streamed_producer<'a>(
+        &'a self,
+        x: &'a TasMatrix,
+    ) -> Option<Box<dyn IntervalProducer + 'a>> {
+        let cap = x.ctx().group_size.max(1);
+        let s = ChainedGramSpmm::new(&self.a, &self.at, x, cap, self.opts.vectorize)?;
+        self.count.inc();
+        Some(Box::new(s))
     }
 }
 
@@ -341,6 +360,68 @@ mod tests {
             0.0,
             0.0,
             "fallback",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn gram_apply_streamed_matches_eager_apply() {
+        use crate::sparse::{build_matrix_opts, BuildTarget};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(57);
+        let mut coo = CooMatrix::new(320, 320);
+        for _ in 0..2200 {
+            coo.push(rng.gen_range(320) as u32, rng.gen_range(320) as u32);
+        }
+        coo.sort_dedup();
+        let at_coo = coo.transpose();
+        for em in [false, true] {
+            let ctx = if em {
+                DenseCtx::em_for_tests(64)
+            } else {
+                DenseCtx::mem_for_tests(64)
+            };
+            // tile 32 divides the 64-row intervals → the two-hop streams.
+            let a = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);
+            let at = build_matrix_opts(&at_coo, 32, BuildTarget::Mem, true);
+            let op = GramOperator::new(a, at, SpmmOpts::default(), 2);
+            let x = TasMatrix::from_fn(&ctx, 320, 2, |r, c| ((r * 7 + c) % 19) as f64 - 9.0);
+            let eager = op.apply(&ctx, &x);
+            let streamed = op.apply_streamed(&ctx, &x);
+            assert_close(
+                &streamed.to_colmajor(),
+                &eager.to_colmajor(),
+                0.0,
+                0.0,
+                "streamed two-hop apply",
+            )
+            .unwrap();
+            assert_eq!(op.applies(), 2, "producer counts as an apply");
+        }
+    }
+
+    #[test]
+    fn gram_apply_streamed_falls_back_on_unaligned_layout() {
+        let mut coo = CooMatrix::new(60, 60);
+        for v in 0..60u32 {
+            coo.push(v, (v + 7) % 60);
+        }
+        coo.sort_dedup();
+        let at_coo = coo.transpose();
+        let ctx = DenseCtx::mem_for_tests(96); // 96 % 64 != 0 → no stream
+        let a = crate::sparse::build_matrix_opts(&coo, 64, crate::sparse::BuildTarget::Mem, true);
+        let at =
+            crate::sparse::build_matrix_opts(&at_coo, 64, crate::sparse::BuildTarget::Mem, true);
+        let op = GramOperator::new(a, at, SpmmOpts::default(), 1);
+        let x = TasMatrix::from_fn(&ctx, 60, 2, |r, c| (r + 2 * c) as f64);
+        let eager = op.apply(&ctx, &x);
+        let streamed = op.apply_streamed(&ctx, &x); // falls back to eager
+        assert_close(
+            &streamed.to_colmajor(),
+            &eager.to_colmajor(),
+            0.0,
+            0.0,
+            "gram fallback",
         )
         .unwrap();
     }

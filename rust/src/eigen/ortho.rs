@@ -3,7 +3,9 @@
 //!
 //! Classical Gram–Schmidt done twice (CGS2, "twice is enough") against
 //! the whole existing basis.  Two implementations share every public
-//! entry point, selected by [`crate::dense::DenseCtx::is_fused`]:
+//! entry point, selected by [`crate::dense::DenseCtx::is_fused`]
+//! (fused is the default; [`crate::dense::DenseCtx::set_eager`] selects
+//! the reference path for differential testing):
 //!
 //! * **Eager reference** — the seed implementation, expressed op-by-op in
 //!   the Table-1 operations `MvTransMv` (op3) and `MvTimesMatAddMv`
@@ -484,13 +486,16 @@ pub fn ortho_normalize_cached(
 }
 
 /// The streamed expansion step: `x` (an empty overwrite-target block) is
-/// *sourced* from `producer` — the operator's streamed `A·v_p` — inside
-/// the round-1 walk, which simultaneously computes the CGS2 `c₁` and the
-/// incremental Gram panel and stores `x` once.  The chain then proceeds
-/// as [`ortho_normalize_cached`].  I/O attribution: the round-1 walk is
+/// *sourced* from `producer` — the operator's streamed `A·v_p` (or, on
+/// the SVD path, the two-hop `Aᵀ(A·v_p)` of
+/// [`crate::spmm::ChainedGramSpmm`]) — inside the round-1 walk, which
+/// simultaneously computes the CGS2 `c₁` and the incremental Gram panel
+/// and stores `x` once.  The chain then proceeds as
+/// [`ortho_normalize_cached`].  I/O attribution: the round-1 walk is
 /// counted under the `spmm` phase, everything after under `ortho` — the
 /// caller must NOT wrap this call in an outer [`crate::metrics::PhaseIo`]
-/// scope.
+/// scope.  (A two-hop producer additionally records its staging-ring
+/// peak under the `spmm.stage` dense-peak sub-phase when it drops.)
 pub fn expand_block_streamed(
     basis: &[&TasMatrix],
     x: &TasMatrix,

@@ -7,10 +7,15 @@
 //! eigenvalues and the Ritz vectors are right singular vectors.
 //!
 //! The dense update chains (reorthogonalization, restart) run through
-//! whichever path the context selects — the eager Table-1 reference ops
-//! or the §3.4 fused lazy-evaluation pipeline
-//! ([`crate::dense::DenseCtx::set_fused`]); the SVD driver itself is
-//! path-agnostic.
+//! whichever path the context selects — by default the §3.4 fused
+//! lazy-evaluation pipeline with the **streamed two-hop operator
+//! boundary** ([`crate::spmm::ChainedGramSpmm`]: `A·X` feeds `Aᵀ`
+//! through a bounded staging ring, so no full-height intermediate is
+//! materialized), or the eager Table-1 reference ops when the context
+//! opts out ([`crate::dense::DenseCtx::set_eager`]) or the layout cannot
+//! stream.  The SVD driver itself is path-agnostic: the solver's
+//! expansion step asks the operator for a streamed producer and falls
+//! back to the eager apply on `None`.
 
 use super::dense_eig::Which;
 use super::krylov_schur::{solve, EigenConfig, EigenResult};
@@ -172,12 +177,15 @@ mod tests {
         };
         let eager_im = {
             let ctx = DenseCtx::mem_for_tests(64);
+            ctx.set_eager(true); // the explicit reference path
             let op = build_gram_operator(&coo, 64, None, SpmmOpts::default(), 2);
             svd(&op, &ctx, &cfg)
         };
         let fused_em = {
+            // The default context configuration: fused + streamed, so the
+            // expansion step runs the two-hop ChainedGramSpmm producer.
             let ctx = DenseCtx::em_for_tests(64);
-            ctx.set_fused(true);
+            assert!(ctx.is_fused() && ctx.is_streamed(), "fused+streamed is the default");
             let op = build_gram_operator(&coo, 64, Some(&ctx.fs), SpmmOpts::default(), 2);
             svd(&op, &ctx, &cfg)
         };

@@ -282,7 +282,9 @@ pub fn fig9_fusion_data(
             1,
             Arc::new(NativeKernels),
         );
-        ctx.set_fused(fused);
+        // The eager row is the explicit ablation reference, never an
+        // inherited context default (fused + streamed is the default).
+        ctx.set_eager(!fused);
         let mats: Vec<TasMatrix> = (0..m / b)
             .map(|i| {
                 let x = TasMatrix::zeros(&ctx, n, b);
@@ -336,6 +338,9 @@ pub fn fig9_stream_data(
             0,
             Arc::new(NativeKernels),
         );
+        // Explicit path selection for both rows (the apply below is also
+        // called explicitly, but ablations must not lean on defaults).
+        ctx.set_eager(!streamed);
         let op = SpmmOperator::new(scaled.build_im(&coo), SpmmOpts::default(), scaled.threads);
         let n = coo.n_rows as usize;
         let x = TasMatrix::zeros(&ctx, n, b);
@@ -375,6 +380,98 @@ pub fn fig9_stream(cfg: &BenchCfg, n_scale: f64, b: usize) -> Table {
     t.note(
         "eager materializes 3 full-height dense matrices per apply; streamed gathers input \
          intervals on demand and hands finished output intervals straight to the TAS layer",
+    );
+    t
+}
+
+// ------------------------------------------------------------- Fig 9d
+
+/// Measure one SVD-path operator apply (`W = Aᵀ(A·X)`) over an EM
+/// subspace in the eager four-full-height path vs the streamed two-hop
+/// boundary (chained producers through the bounded staging ring).
+/// Write-through context (`cache_slots = 0`) so every dense byte is
+/// visible.  Returns `(label, runtime_secs, io_delta, peak_dense_bytes,
+/// stage_peak_bytes)` rows — the raw data behind [`fig9_gram`], also
+/// pinned by the I/O-accounting regression tests.
+pub fn fig9_gram_data(
+    cfg: &BenchCfg,
+    n_scale: f64,
+    b: usize,
+) -> Vec<(&'static str, f64, IoStats, u64, u64)> {
+    let mut scaled = cfg.clone();
+    scaled.scale *= n_scale;
+    let coo = scaled.gen(Dataset::Page); // directed: the SVD workload
+    let at_coo = coo.transpose();
+    let mut rows = Vec::new();
+    for (label, streamed) in
+        [("eager (4x full-height)", false), ("streamed two-hop (staging ring)", true)]
+    {
+        let fs = Safs::new(scaled.safs_config());
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            scaled.interval_rows,
+            scaled.threads,
+            8,
+            0,
+            Arc::new(NativeKernels),
+        );
+        ctx.set_eager(!streamed);
+        let op = crate::eigen::GramOperator::new(
+            scaled.build_im(&coo),
+            scaled.build_im(&at_coo),
+            SpmmOpts::default(),
+            scaled.threads,
+        );
+        let n = coo.n_cols as usize;
+        let x = TasMatrix::zeros(&ctx, n, b);
+        mv_random(&x, 2424);
+        let before = fs.stats();
+        ctx.mem.begin_window();
+        let (_, el) = time_it(|| {
+            let _w = if streamed { op.apply_streamed(&ctx, &x) } else { op.apply(&ctx, &x) };
+        });
+        rows.push((
+            label,
+            el,
+            fs.stats().delta_since(&before),
+            ctx.mem.window_peak(),
+            ctx.io_phases.dense_peak("spmm.stage"),
+        ));
+    }
+    rows
+}
+
+/// Figure 9d (beyond the paper): the streamed two-hop Gram ablation for
+/// the SVD path — eager `Aᵀ(A·X)` with four full-height dense matrices
+/// vs the chained-producer apply whose `A·X` intermediate lives in a
+/// `group_size`-bounded staging ring.
+pub fn fig9_gram(cfg: &BenchCfg, n_scale: f64, b: usize) -> Table {
+    let mut t = Table::new(
+        "Figure 9d: streamed two-hop Gram operator (SVD path, write-through EM)",
+        &[
+            "path", "runtime", "read", "written", "total", "peak dense", "stage peak",
+            "bytes vs eager",
+        ],
+    );
+    let rows = fig9_gram_data(cfg, n_scale, b);
+    let base = rows[0].2.total_bytes().max(1);
+    for (label, el, io, peak, stage) in &rows {
+        t.row(vec![
+            (*label).into(),
+            secs(*el),
+            fmt_bytes(io.bytes_read),
+            fmt_bytes(io.bytes_written),
+            fmt_bytes(io.total_bytes()),
+            fmt_bytes(*peak),
+            if *stage > 0 { fmt_bytes(*stage) } else { "-".into() },
+            ratio(io.total_bytes() as f64 / base as f64),
+        ]);
+    }
+    t.note(
+        "eager materializes 4 full-height dense matrices per Aᵀ(A·X); the two-hop chain stages \
+         at most group_size finished A·X intervals (plus one in use per worker) and recomputes \
+         evicted intervals from the resident input gather",
     );
     t
 }
@@ -579,10 +676,12 @@ pub fn run_eigensolver(
         ),
         _ => panic!("unknown mode {mode}"),
     };
-    // The fused mode also runs the streamed operator boundary (§3.4):
-    // SpMM output flows interval-by-interval into the ortho walk.
-    ctx.set_fused(mode == "fe-sem-fused");
-    ctx.set_streamed(mode == "fe-sem-fused");
+    // Explicit path per mode: "fe-sem-fused" is the fused + streamed
+    // configuration (the DenseCtx default — SpMM output flows
+    // interval-by-interval into the ortho walk); every other mode pins
+    // the eager reference explicitly so the ablation columns never
+    // inherit a context default.
+    ctx.set_eager(mode != "fe-sem-fused");
     let before = fs.stats();
     let (res, runtime) = time_it(|| solve(op.as_ref(), &ctx, &ecfg));
     let delta = fs.stats().delta_since(&before);
@@ -638,7 +737,7 @@ pub fn fig12(cfg: &BenchCfg, nevs: &[usize], datasets: &[Dataset]) -> Table {
         }
     }
     t.note("paper shape: FE-SEM ≥ 0.4 of FE-IM (≈0.5 for small nev); FE-IM beats Trilinos; SEM memory ≈ flat in nev");
-    t.note("FE-SEM-fused: §3.4 lazy-evaluation pipeline; 'fused bytes/SEM' < 1.0 shows the I/O saving");
+    t.note("FE-SEM-fused = the default fused+streamed §3.4 configuration; FE-IM/FE-SEM/Trilinos rows select eager explicitly (the ablation reference); 'fused bytes/SEM' < 1.0 shows the I/O saving");
     t
 }
 
@@ -786,6 +885,32 @@ mod tests {
             eager.3
         );
         let t = fig9_stream(&tiny_cfg(), 16.0, 4);
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn fig9_gram_smoke_fewer_bytes_and_memory() {
+        // The page graph is large enough at base scale that the subspace
+        // spans dozens of intervals (streaming is the identity
+        // transformation on a single-interval matrix).
+        let rows = fig9_gram_data(&tiny_cfg(), 1.0, 4);
+        assert_eq!(rows.len(), 2);
+        let (eager, streamed) = (&rows[0], &rows[1]);
+        assert!(
+            streamed.2.total_bytes() < eager.2.total_bytes(),
+            "two-hop must move strictly fewer bytes: {} vs {}",
+            streamed.2.total_bytes(),
+            eager.2.total_bytes()
+        );
+        assert!(
+            streamed.3 < eager.3,
+            "two-hop peak dense {} must undercut eager {}",
+            streamed.3,
+            eager.3
+        );
+        assert!(streamed.4 > 0, "staging peak must be recorded");
+        assert_eq!(eager.4, 0, "eager apply has no staging ring");
+        let t = fig9_gram(&tiny_cfg(), 1.0, 4);
         assert_eq!(t.rows.len(), 2);
     }
 

@@ -42,12 +42,18 @@ COMMON OPTIONS:
   --threads <t>      worker threads (default 4)
   --dilation <d>     device time dilation (default 48; see DESIGN.md)
   --sem              semi-external mode (matrix + subspace on SSDs)
-  --fused            route MultiVec chains through the lazy-evaluation
-                     fused pipeline (one subspace pass per CGS2 round)
-  --streamed         stream the operator boundary: SpMM output flows
-                     interval-by-interval into the ortho walk instead of
-                     materializing full-height dense blocks (implies
-                     --fused)
+  --eager            opt out of the DEFAULT fused + streamed §3.4 path:
+                     run the eager Table-1 reference ops and the
+                     materialized ConvLayout→SpMM→ConvLayout operator
+                     boundary (kept for differential testing/ablation)
+  --fused            explicitly select the lazy-evaluation fused
+                     pipeline (one subspace pass per CGS2 round) over
+                     the MATERIALIZED operator boundary — the fusion-only
+                     ablation; without any flag, fused+streamed is on
+  --streamed         explicitly select the full default: fused pipeline
+                     + streamed operator boundary (SpMM output flows
+                     interval-by-interval into the ortho walk; two
+                     chained hops for svd — implies --fused)
   --xla              dispatch dense kernels to the AOT JAX/Pallas artifacts
   --cols <b>         dense-matrix width for spmm (default 4)
   --exp <id>         figure/table id for `figures`
@@ -115,6 +121,16 @@ fn cmd_eigen(args: &Args, as_svd: bool) -> i32 {
         let nev = args.get_usize("nev", 8)?;
         let sem = args.flag("sem");
         let use_xla = args.flag("xla");
+        // Validate the path flags BEFORE the (expensive) graph
+        // generation: fused + streamed is the default, the three flags
+        // are explicit selections so scripted ablations never inherit a
+        // default — --eager = the op-by-op reference path, --fused =
+        // fused pipelines over the materialized operator boundary (the
+        // fig9b configuration), --streamed = the full default.
+        let eager = args.flag("eager");
+        if eager && (args.flag("fused") || args.flag("streamed")) {
+            return Err("--eager conflicts with --fused/--streamed".into());
+        }
 
         eprintln!(
             "generating {} at scale {:.2e} (seed {})...",
@@ -149,9 +165,15 @@ fn cmd_eigen(args: &Args, as_svd: bool) -> i32 {
             Arc::new(NativeKernels)
         };
         let ctx = cfg.dense_ctx(fs.clone(), sem, kernels);
-        let streamed = args.flag("streamed");
-        ctx.set_fused(args.flag("fused") || streamed);
-        ctx.set_streamed(streamed);
+        if eager {
+            ctx.set_eager(true);
+        } else if args.flag("fused") && !args.flag("streamed") {
+            ctx.set_fused(true);
+            ctx.set_streamed(false);
+        } else if args.flag("streamed") {
+            ctx.set_fused(true);
+            ctx.set_streamed(true);
+        }
         let mode = if sem { "FE-SEM" } else { "FE-IM" };
         eprintln!(
             "solving: {} nev={nev} b={} NB={} tol={:.0e} dense-kernels={} multivec={} operator={}",
@@ -298,6 +320,8 @@ fn cmd_figures(args: &Args) -> i32 {
             // 16x the base scale so the subspace spans several row
             // intervals — streaming is the identity on one interval.
             harness::fig9_stream(&cfg, 16.0, 4).print();
+            // The page graph already spans many intervals at base scale.
+            harness::fig9_gram(&cfg, 1.0, 4).print();
             ran = true;
         }
         if all || exp == "fig10" {

@@ -95,6 +95,14 @@ impl PhaseTimers {
 /// `group_size`-intervals-per-worker bound instead of materializing
 /// full-height matrices.
 ///
+/// Dense peaks can also be attributed to **sub-phases** that run inside
+/// a scoped phase via [`PhaseIo::add_dense_peak`] (peaks fold by `max`,
+/// so a nested attribution never double-counts).  Convention: dotted
+/// names under the enclosing phase — the streamed two-hop Gram apply
+/// records its staging-ring high-water mark as `spmm.stage`, giving the
+/// harness and the io-accounting pins a direct view of the `Aᵀ(A·X)`
+/// intermediate's bound separate from the walk's own footprint.
+///
 /// Scopes must not nest over the same filesystem — nested scopes would
 /// double-count the inner phase's bytes.
 #[derive(Default)]

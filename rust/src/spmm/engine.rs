@@ -144,13 +144,14 @@ pub fn spmm(
 ///
 /// This is the streamed-boundary counterpart of [`multiply_partition`]:
 /// instead of indexing a fully materialized row-major [`DenseBlock`],
-/// each tile's input rows come from the [`crate::spmm::InputGather`],
-/// which converts the column-major TAS intervals lazily — the input
-/// ConvLayout fused into the SpMM read path (§3.4).
-pub(crate) fn multiply_rows_from_gather(
+/// each tile's input rows come from a [`crate::spmm::stream::TileInput`]
+/// — the [`crate::spmm::InputGather`] that converts column-major TAS
+/// intervals lazily (the input ConvLayout fused into the SpMM read
+/// path, §3.4), or the staged intermediate of a chained two-hop apply.
+pub(crate) fn multiply_rows_from_source(
     matrix: &SparseMatrix,
     row_images: &[&[u8]],
-    gather: &crate::spmm::InputGather<'_>,
+    source: &dyn crate::spmm::stream::TileInput,
     out_rowmajor: &mut [f64],
     b: usize,
     vectorize: bool,
@@ -159,16 +160,18 @@ pub(crate) fn multiply_rows_from_gather(
     let out_rows = out_rowmajor.len() / b.max(1);
     // Tile columns arrive in ascending order per tile row, so consecutive
     // tiles usually share an input interval: hold the interval handle
-    // across tiles instead of taking the gather's slot lock per tile.
+    // across tiles instead of re-acquiring it from the source per tile
+    // (for a staged source, a held handle also pins the interval against
+    // ring eviction for exactly this loop's lifetime).
     let mut cached: Option<(usize, std::sync::Arc<Vec<f64>>)> = None;
     for (ri, img) in row_images.iter().enumerate() {
         let out_start = ri * td;
         let out_len = td.min(out_rows - out_start);
         let dst = &mut out_rowmajor[out_start * b..(out_start + out_len) * b];
         for (tc, view) in TileRowView::new(img, matrix.has_values) {
-            let (iv, off, len) = gather.locate(tc as usize, td);
+            let (iv, off, len) = source.locate(tc as usize, td);
             if cached.as_ref().map_or(true, |(civ, _)| *civ != iv) {
-                cached = Some((iv, gather.interval_arc(iv)));
+                cached = Some((iv, source.interval_arc(iv)));
             }
             let arc = &cached.as_ref().unwrap().1;
             let in_rows = &arc[off * b..(off + len) * b];

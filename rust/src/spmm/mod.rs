@@ -14,4 +14,4 @@ pub use baseline::{spmm_csr, spmm_trilinos_like};
 pub use dense_block::{colmajor_to_rowmajor, rowmajor_to_colmajor, DenseBlock, SharedMut};
 pub use engine::{spmm, SpmmRunStats};
 pub use opts::SpmmOpts;
-pub use stream::{InputGather, StreamedSpmm};
+pub use stream::{ChainedGramSpmm, InputGather, StagedIntermediate, StreamedSpmm, TileInput};

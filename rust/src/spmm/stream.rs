@@ -8,8 +8,13 @@
 //! page graph at b = 4), so the eager path triples the semi-external
 //! memory bound.
 //!
-//! This module replaces the boundary with two interval-granular pieces:
+//! This module replaces the boundary with interval-granular pieces:
 //!
+//! * [`TileInput`] — the contract for *any* source of row-major input
+//!   rows keyed by tile column.  The SpMM inner loop
+//!   pulls each tile's input rows through this trait, so the same
+//!   multiply kernel runs over an SSD-gathered subspace or a staged
+//!   intermediate produced by an upstream multiply.
 //! * [`InputGather`] — an interval-sourced input.  Tile-column rows are
 //!   gathered from the TAS input's intervals **on demand**, converting
 //!   each interval to row-major lazily and reading it from SAFS exactly
@@ -23,18 +28,76 @@
 //!   the output ConvLayout fused into the transpose-on-return) straight
 //!   into the consuming walk — no full-height output block, no
 //!   intermediate on-SSD round trip.
+//! * [`ChainedGramSpmm`] — two chained hops for the SVD path's
+//!   `Aᵀ(A·X)`: a first streamed multiply over `A` feeds a second over
+//!   `Aᵀ` through a **bounded staging ring** ([`StagedIntermediate`]),
+//!   so the intermediate `A·X` never materializes at full height.
 //!
-//! [`crate::eigen::Operator::apply_streamed`] wires the two into the
-//! solver's expansion step.
+//! [`crate::eigen::Operator::apply_streamed`] wires these into the
+//! solver's expansion step; the pull contract and staging bound are
+//! documented on each type below.
+//!
+//! # Example (in-memory)
+//!
+//! A streamed `A·x` whose output intervals flow through a
+//! [`crate::dense::FusedPipeline`] walk instead of a full-height block:
+//!
+//! ```
+//! use flasheigen::dense::{DenseCtx, FusedPipeline, TasMatrix};
+//! use flasheigen::sparse::{build_matrix, BuildTarget, CooMatrix};
+//! use flasheigen::spmm::StreamedSpmm;
+//!
+//! let ctx = DenseCtx::mem_for_tests(64);
+//! let mut coo = CooMatrix::new(128, 128);
+//! for v in 0..128u32 {
+//!     coo.push(v, (v + 1) % 128); // a 128-cycle
+//! }
+//! coo.symmetrize();
+//! // Tile dimension 32 divides the 64-row intervals, so the layout streams.
+//! let a = build_matrix(&coo, 32, BuildTarget::Mem);
+//! let x = TasMatrix::from_fn(&ctx, 128, 1, |r, _| r as f64);
+//! let s = StreamedSpmm::new(&a, &x, true).expect("aligned layout streams");
+//! let y = TasMatrix::zeros_for_overwrite(&ctx, 128, 1);
+//! let mut p = FusedPipeline::new(&ctx);
+//! p.source(&y, Box::new(s));
+//! p.materialize();
+//! // y = A·x: vertex 5's cycle neighbours are 4 and 6.
+//! assert_eq!(y.get(5, 0), 10.0);
+//! ```
 
 use super::dense_block::{colmajor_to_rowmajor, rowmajor_to_colmajor};
-use super::engine::multiply_rows_from_gather;
-use crate::dense::{IntervalProducer, TasMatrix};
+use super::engine::multiply_rows_from_source;
+use crate::dense::{DenseCtx, IntervalProducer, TasMatrix};
 use crate::metrics::MemGuard;
 use crate::safs::BufferPool;
 use crate::sparse::SparseMatrix;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// A source of **row-major input rows by tile column** for a streamed
+/// multiply.  Implementations map a tile column to an interval of the
+/// input's rows and hand out a shared handle to that interval's
+/// row-major data, loading or computing it on first touch.
+///
+/// The contract the multiply loop relies on:
+///
+/// * [`TileInput::locate`] is pure arithmetic — callers pair it with
+///   [`TileInput::interval_arc`] so one interval handle can be reused
+///   across consecutive tile columns instead of re-acquiring per tile;
+/// * `interval_arc(iv)` returns the same values for the same `iv` for
+///   the lifetime of the source (recomputation must be deterministic);
+/// * implementations are [`Sync`]: the walk calls them concurrently from
+///   its worker threads.
+pub trait TileInput: Sync {
+    /// Locate tile column `tc`: `(interval, row offset within it, row
+    /// count)`.
+    fn locate(&self, tc: usize, tile_dim: usize) -> (usize, usize, usize);
+
+    /// Handle to interval `iv`'s row-major data (loads or computes it on
+    /// first touch).
+    fn interval_arc(&self, iv: usize) -> Arc<Vec<f64>>;
+}
 
 /// Interval-sourced SpMM input: lazily gathers row-major tile-column
 /// rows from a column-major TAS matrix, loading each TAS interval from
@@ -81,23 +144,6 @@ impl<'a> InputGather<'a> {
         a
     }
 
-    /// Locate tile column `tc`: `(interval, row offset within it, row
-    /// count)`.  Pure arithmetic — pair with [`InputGather::interval_arc`]
-    /// so the multiply loop can reuse one interval handle across
-    /// consecutive tile columns instead of re-locking per tile.
-    pub fn locate(&self, tc: usize, tile_dim: usize) -> (usize, usize, usize) {
-        let start = tc * tile_dim;
-        let iv = start / self.mat.interval_rows();
-        let off = start - iv * self.mat.interval_rows();
-        let len = tile_dim.min(self.mat.n_rows - start);
-        (iv, off, len)
-    }
-
-    /// Handle to interval `iv`'s row-major data (loads it on first touch).
-    pub fn interval_arc(&self, iv: usize) -> Arc<Vec<f64>> {
-        self.interval_rowmajor(iv)
-    }
-
     /// Bytes of converted input currently resident (the gather's share of
     /// the §3.4 working set; ≤ one full row-major input).
     pub fn resident_bytes(&self) -> u64 {
@@ -105,10 +151,119 @@ impl<'a> InputGather<'a> {
     }
 }
 
+impl TileInput for InputGather<'_> {
+    fn locate(&self, tc: usize, tile_dim: usize) -> (usize, usize, usize) {
+        locate_tile(tc, tile_dim, self.mat.interval_rows(), self.mat.n_rows)
+    }
+
+    fn interval_arc(&self, iv: usize) -> Arc<Vec<f64>> {
+        self.interval_rowmajor(iv)
+    }
+}
+
 impl Drop for InputGather<'_> {
     fn drop(&mut self) {
         self.mat.ctx().mem.free(self.tracked.load(Ordering::Relaxed));
     }
+}
+
+/// Multiply the tile rows covering output interval `iv` against `input`,
+/// returning the interval's row-major `rows × b` product.  Output
+/// interval geometry is `interval_rows` rows per interval and must be
+/// tile-aligned; SEM tile-row images are fetched in one contiguous
+/// request per interval through `image_pool`.
+fn interval_product_rowmajor(
+    matrix: &SparseMatrix,
+    input: &dyn TileInput,
+    image_pool: &Mutex<BufferPool>,
+    iv: usize,
+    rows: usize,
+    interval_rows: usize,
+    b: usize,
+    vectorize: bool,
+) -> Vec<f64> {
+    let td = matrix.tile_dim;
+    let row_base = iv * interval_rows;
+    debug_assert!(row_base % td == 0, "interval not tile-aligned");
+    let tr0 = row_base / td;
+    let tr1 = (row_base + rows).div_ceil(td).min(matrix.num_tile_rows());
+    let mut out = vec![0.0; rows * b];
+    match matrix.safs_handle() {
+        None => {
+            let images: Vec<&[u8]> = (tr0..tr1)
+                .map(|tr| matrix.tile_row_mem(tr).unwrap())
+                .collect();
+            multiply_rows_from_source(matrix, &images, input, &mut out, b, vectorize);
+        }
+        Some((fs, file)) => {
+            if tr0 < tr1 {
+                // One contiguous read covering the interval's tile rows —
+                // each tile row is read exactly once per pass over the
+                // output intervals (intervals partition the rows).
+                let base = matrix.index[tr0].offset;
+                let last = matrix.index[tr1 - 1];
+                let len = (last.offset + last.len as u64 - base) as usize;
+                let buf = {
+                    let mut pool = image_pool.lock().unwrap();
+                    pool.get(len)
+                };
+                let buf = fs.read_async(file.clone(), base, buf).wait();
+                let images: Vec<&[u8]> = (tr0..tr1)
+                    .map(|tr| {
+                        let m = matrix.index[tr];
+                        let s = (m.offset - base) as usize;
+                        &buf[s..s + m.len as usize]
+                    })
+                    .collect();
+                multiply_rows_from_source(matrix, &images, input, &mut out, b, vectorize);
+                image_pool.lock().unwrap().put(buf);
+            }
+        }
+    }
+    out
+}
+
+/// The shared [`IntervalProducer::produce`] body of the streamed
+/// multiplies: the interval's row-major product (working buffers
+/// registered with `mem` for the §3.4.3 peak accounting) handed back
+/// column-major — the output ConvLayout fused into the
+/// transpose-on-return.  The consuming pipeline registers the returned
+/// buffer itself.
+fn produce_colmajor(
+    matrix: &SparseMatrix,
+    input: &dyn TileInput,
+    image_pool: &Mutex<BufferPool>,
+    mem: &crate::metrics::MemTracker,
+    iv: usize,
+    rows: usize,
+    interval_rows: usize,
+    b: usize,
+    vectorize: bool,
+) -> Vec<f64> {
+    // Row-major accumulation buffer for this interval only.
+    let _g = MemGuard::new(mem, (rows * b * 8) as u64);
+    let out =
+        interval_product_rowmajor(matrix, input, image_pool, iv, rows, interval_rows, b, vectorize);
+    let _g2 = MemGuard::new(mem, (rows * b * 8) as u64);
+    let mut cm = vec![0.0; rows * b];
+    rowmajor_to_colmajor(&out, rows, b, &mut cm);
+    cm
+}
+
+/// Tile-column location shared by every [`TileInput`]: `(interval, row
+/// offset within it, row count)` for tile column `tc` of an input with
+/// `n_rows` rows split into `interval_rows`-row intervals.
+fn locate_tile(
+    tc: usize,
+    tile_dim: usize,
+    interval_rows: usize,
+    n_rows: usize,
+) -> (usize, usize, usize) {
+    let start = tc * tile_dim;
+    let iv = start / interval_rows;
+    let off = start - iv * interval_rows;
+    let len = tile_dim.min(n_rows - start);
+    (iv, off, len)
 }
 
 /// Pull-mode streamed `A·X`: produces one column-major output row
@@ -167,71 +322,331 @@ impl<'a> StreamedSpmm<'a> {
 
 impl IntervalProducer for StreamedSpmm<'_> {
     fn produce(&self, iv: usize, rows: usize) -> Vec<f64> {
-        let td = self.matrix.tile_dim;
-        let row_base = iv * self.interval_rows;
-        debug_assert!(row_base % td == 0, "interval not tile-aligned");
-        let tr0 = row_base / td;
-        let tr1 = (row_base + rows).div_ceil(td).min(self.matrix.num_tile_rows());
-        let b = self.b;
-        let mem = self.gather.mat.ctx().mem.clone();
+        produce_colmajor(
+            self.matrix,
+            &self.gather,
+            &self.image_pool,
+            &self.gather.mat.ctx().mem,
+            iv,
+            rows,
+            self.interval_rows,
+            self.b,
+            self.vectorize,
+        )
+    }
+}
 
-        // Row-major accumulation buffer for this interval only.
-        let _g = MemGuard::new(&mem, (rows * b * 8) as u64);
-        let mut out = vec![0.0; rows * b];
-        match self.matrix.safs_handle() {
-            None => {
-                let images: Vec<&[u8]> = (tr0..tr1)
-                    .map(|tr| self.matrix.tile_row_mem(tr).unwrap())
-                    .collect();
-                multiply_rows_from_gather(
-                    self.matrix,
-                    &images,
-                    &self.gather,
-                    &mut out,
-                    b,
-                    self.vectorize,
-                );
+/// The bounded staging ring between the two hops of a
+/// [`ChainedGramSpmm`]: finished row intervals of the intermediate
+/// `M = A·X`, computed on first touch and held for downstream reuse.
+///
+/// **Residency bound.**  At most `cap` finished intervals stay cached;
+/// on overflow the least-recently-touched unheld interval is evicted
+/// (an interval is *held* while a worker's multiply loop keeps its
+/// handle; a worker replacing its handle briefly holds the old and the
+/// new one, so the instantaneous bound is `cap` cached plus at most two
+/// in flight per worker).  A re-touched evicted interval is
+/// recomputed from the resident [`InputGather`] — zero extra reads of
+/// `X`, and pure RAM work because [`ChainedGramSpmm::new`] only admits
+/// eviction pressure when `A`'s image is in memory (a SEM-backed image
+/// streams only when the whole intermediate fits the ring, so nothing
+/// is ever evicted and each tile-row image is read exactly once).
+/// Back-pressure is structural: the first hop is pull-driven, so it
+/// only runs when the second hop demands an interval and the ring has
+/// room for the result.
+///
+/// **Determinism.**  Recomputation replays the same tile schedule over
+/// the same gathered input, so every handle for one interval carries
+/// bitwise-identical values no matter how often it was evicted.
+pub struct StagedIntermediate<'a> {
+    a: &'a SparseMatrix,
+    gather: InputGather<'a>,
+    a_pool: Mutex<BufferPool>,
+    /// One slot per interval of `M`; `None` = not resident.
+    slots: Vec<Mutex<Option<Arc<Vec<f64>>>>>,
+    /// Resident intervals, least recently touched first.
+    lru: Mutex<VecDeque<usize>>,
+    cap: usize,
+    interval_rows: usize,
+    /// Rows of `M` (= `A`'s row count).
+    n_rows: usize,
+    b: usize,
+    vectorize: bool,
+    /// Total hop-1 interval computations (≥ touched intervals; the
+    /// excess over distinct touches counts ring-pressure recomputes).
+    computes: AtomicU64,
+    staged_bytes: AtomicU64,
+    staged_peak: AtomicU64,
+    ctx: Arc<DenseCtx>,
+}
+
+impl<'a> StagedIntermediate<'a> {
+    fn new(
+        a: &'a SparseMatrix,
+        input: &'a TasMatrix,
+        cap: usize,
+        vectorize: bool,
+    ) -> StagedIntermediate<'a> {
+        let ctx = input.ctx().clone();
+        let interval_rows = input.interval_rows();
+        let n_rows = a.n_rows as usize;
+        let n_iv = n_rows.max(1).div_ceil(interval_rows);
+        let use_pool = ctx.fs.cfg().use_buffer_pool;
+        StagedIntermediate {
+            a,
+            gather: InputGather::new(input),
+            a_pool: Mutex::new(BufferPool::new(use_pool)),
+            slots: (0..n_iv).map(|_| Mutex::new(None)).collect(),
+            lru: Mutex::new(VecDeque::new()),
+            cap: cap.max(1),
+            interval_rows,
+            n_rows,
+            b: input.n_cols,
+            vectorize,
+            computes: AtomicU64::new(0),
+            staged_bytes: AtomicU64::new(0),
+            staged_peak: AtomicU64::new(0),
+            ctx,
+        }
+    }
+
+    fn interval_len(&self, iv: usize) -> usize {
+        self.interval_rows.min(self.n_rows - iv * self.interval_rows)
+    }
+
+    /// Total hop-1 interval computations so far (distinct touches plus
+    /// ring-pressure recomputes).
+    pub fn computes(&self) -> u64 {
+        self.computes.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of staged intermediate bytes — the quantity the
+    /// §3.4.3 staging bound caps at `cap + 2·workers` intervals (`cap`
+    /// cached, plus per worker the handle it holds and the one it is
+    /// switching to).
+    pub fn peak_staged_bytes(&self) -> u64 {
+        self.staged_peak.load(Ordering::Relaxed)
+    }
+
+    /// The hop-1 input gather (tests inspect its resident footprint).
+    pub fn gather(&self) -> &InputGather<'a> {
+        &self.gather
+    }
+
+    /// Move `iv` to the most-recently-touched end of the ring order.
+    fn touch(&self, iv: usize) {
+        let mut lru = self.lru.lock().unwrap();
+        if let Some(pos) = lru.iter().position(|&v| v == iv) {
+            let _ = lru.remove(pos);
+        }
+        lru.push_back(iv);
+    }
+
+    /// Evict least-recently-touched unheld intervals until at most `cap`
+    /// stay resident.  `keep` (the interval just handed out) is never a
+    /// victim, and neither is any interval a worker still holds a handle
+    /// to (`Arc` strong count > 1) — those stay, so the transient
+    /// worst-case residency is `cap` plus two in-flight intervals per
+    /// worker (the handle being replaced and its replacement).
+    fn evict_to_cap(&self, keep: usize) {
+        let mut lru = self.lru.lock().unwrap();
+        let mut passes = lru.len();
+        while lru.len() > self.cap && passes > 0 {
+            passes -= 1;
+            let Some(iv) = lru.pop_front() else { break };
+            if iv == keep {
+                lru.push_back(iv);
+                continue;
             }
-            Some((fs, file)) => {
-                if tr0 < tr1 {
-                    // One contiguous read covering the interval's tile
-                    // rows — each tile row is read exactly once across
-                    // the whole apply (intervals partition the rows).
-                    let base = self.matrix.index[tr0].offset;
-                    let last = self.matrix.index[tr1 - 1];
-                    let len = (last.offset + last.len as u64 - base) as usize;
-                    let buf = {
-                        let mut pool = self.image_pool.lock().unwrap();
-                        pool.get(len)
-                    };
-                    let buf = fs.read_async(file.clone(), base, buf).wait();
-                    let images: Vec<&[u8]> = (tr0..tr1)
-                        .map(|tr| {
-                            let m = self.matrix.index[tr];
-                            let s = (m.offset - base) as usize;
-                            &buf[s..s + m.len as usize]
-                        })
-                        .collect();
-                    multiply_rows_from_gather(
-                        self.matrix,
-                        &images,
-                        &self.gather,
-                        &mut out,
-                        b,
-                        self.vectorize,
-                    );
-                    self.image_pool.lock().unwrap().put(buf);
-                }
+            // try_lock only: never block on a slot while holding the ring
+            // order lock (a contended slot is simply not a victim now).
+            let drop_entry = match self.slots[iv].try_lock() {
+                Ok(mut slot) => match slot.as_ref() {
+                    Some(a) if Arc::strong_count(a) == 1 => {
+                        let bytes = (a.len() * 8) as u64;
+                        *slot = None;
+                        self.ctx.mem.free(bytes);
+                        self.staged_bytes.fetch_sub(bytes, Ordering::Relaxed);
+                        true
+                    }
+                    // A touch/evict race can leave a stale order entry
+                    // behind an already-evicted slot: just drop it.
+                    None => true,
+                    Some(_) => false,
+                },
+                Err(_) => false,
+            };
+            if !drop_entry {
+                lru.push_back(iv);
             }
         }
+    }
+}
 
-        // Fused output ConvLayout: hand the interval back column-major
-        // (tracked while it overlaps the row-major buffer; the consuming
-        // pipeline registers the returned buffer itself).
-        let _g2 = MemGuard::new(&mem, (rows * b * 8) as u64);
-        let mut cm = vec![0.0; rows * b];
-        rowmajor_to_colmajor(&out, rows, b, &mut cm);
-        cm
+impl TileInput for StagedIntermediate<'_> {
+    fn locate(&self, tc: usize, tile_dim: usize) -> (usize, usize, usize) {
+        locate_tile(tc, tile_dim, self.interval_rows, self.n_rows)
+    }
+
+    fn interval_arc(&self, iv: usize) -> Arc<Vec<f64>> {
+        let arc = {
+            let mut slot = self.slots[iv].lock().unwrap();
+            match slot.as_ref() {
+                Some(a) => a.clone(),
+                None => {
+                    // Hop 1 on demand (first touch, or a recompute after
+                    // ring-pressure eviction).  Computed under the slot
+                    // lock so concurrent touches of the same interval
+                    // wait for this result instead of duplicating work.
+                    let rows = self.interval_len(iv);
+                    let data = interval_product_rowmajor(
+                        self.a,
+                        &self.gather,
+                        &self.a_pool,
+                        iv,
+                        rows,
+                        self.interval_rows,
+                        self.b,
+                        self.vectorize,
+                    );
+                    self.computes.fetch_add(1, Ordering::Relaxed);
+                    let bytes = (data.len() * 8) as u64;
+                    self.ctx.mem.alloc(bytes);
+                    let cur = self.staged_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+                    self.staged_peak.fetch_max(cur, Ordering::Relaxed);
+                    let a = Arc::new(data);
+                    *slot = Some(a.clone());
+                    a
+                }
+            }
+        };
+        self.touch(iv);
+        self.evict_to_cap(iv);
+        arc
+    }
+}
+
+impl Drop for StagedIntermediate<'_> {
+    fn drop(&mut self) {
+        self.ctx.mem.free(self.staged_bytes.load(Ordering::Relaxed));
+    }
+}
+
+/// Pull-mode streamed two-hop `Aᵀ(A·X)` — the SVD path's
+/// [`crate::eigen::GramOperator`] apply without full-height
+/// intermediates (ROADMAP "Streamed `GramOperator`").
+///
+/// [`IntervalProducer::produce`] computes one output row interval of
+/// `Aᵀ·M`, pulling the tile columns of `M = A·X` it needs from the
+/// [`StagedIntermediate`], which computes each `M` interval on first
+/// touch from the first hop over `A` (whose input `X` streams through an
+/// [`InputGather`], each interval read from SAFS exactly once).  The
+/// only full-height resident set is the gathered input — the §3.4
+/// working set the eager path *also* holds — while `M` is capped at the
+/// staging-ring bound and the output flows interval-by-interval into the
+/// consuming [`crate::dense::FusedPipeline`] walk.
+pub struct ChainedGramSpmm<'a> {
+    at: &'a SparseMatrix,
+    stage: StagedIntermediate<'a>,
+    interval_rows: usize,
+    b: usize,
+    vectorize: bool,
+    /// Pool for SEM tile-row image reads of `Aᵀ`.
+    at_pool: Mutex<BufferPool>,
+    ctx: Arc<DenseCtx>,
+}
+
+impl<'a> ChainedGramSpmm<'a> {
+    /// Build a streamed two-hop apply of `at · (a · input)`.  Returns
+    /// `None` when the layout cannot stream: the TAS interval size must
+    /// be a multiple of **both** tile dimensions (so no tile of either
+    /// hop crosses an interval boundary of `X`, `M` or the output) and
+    /// the shapes must chain (`at` must be the transpose shape of `a`).
+    /// `cap` bounds the staging ring (callers pass the context's
+    /// `group_size`).
+    ///
+    /// A **SEM-backed first hop** additionally requires the whole
+    /// intermediate to fit the ring (`M` intervals ≤ `cap`): under ring
+    /// pressure an evicted interval's recompute would re-read `a`'s
+    /// tile-row images from SAFS — repeatable without bound on
+    /// low-locality graphs — whereas the eager fallback reads each
+    /// image exactly once.  With the fit guarantee nothing is ever
+    /// evicted, so `a`'s images are also read exactly once.  (An
+    /// in-memory `a` recomputes from RAM at zero I/O, so it streams
+    /// under any ring pressure.)
+    pub fn new(
+        a: &'a SparseMatrix,
+        at: &'a SparseMatrix,
+        input: &'a TasMatrix,
+        cap: usize,
+        vectorize: bool,
+    ) -> Option<ChainedGramSpmm<'a>> {
+        if input.n_rows as u64 != a.n_cols {
+            return None;
+        }
+        if at.n_rows != a.n_cols || at.n_cols != a.n_rows {
+            return None;
+        }
+        let ir = input.interval_rows();
+        if ir % a.tile_dim != 0 || ir % at.tile_dim != 0 {
+            return None;
+        }
+        if a.safs_handle().is_some() {
+            let m_intervals = (a.n_rows as usize).max(1).div_ceil(ir);
+            if m_intervals > cap.max(1) {
+                return None;
+            }
+        }
+        let ctx = input.ctx().clone();
+        let use_pool = ctx.fs.cfg().use_buffer_pool;
+        Some(ChainedGramSpmm {
+            at,
+            stage: StagedIntermediate::new(a, input, cap, vectorize),
+            interval_rows: ir,
+            b: input.n_cols,
+            vectorize,
+            at_pool: Mutex::new(BufferPool::new(use_pool)),
+            ctx,
+        })
+    }
+
+    /// Rows of the streamed output (`Aᵀ`'s row count = `A`'s columns).
+    pub fn output_rows(&self) -> usize {
+        self.at.n_rows as usize
+    }
+
+    /// The staging ring (tests inspect its peak footprint and
+    /// compute/recompute counts).
+    pub fn stage(&self) -> &StagedIntermediate<'a> {
+        &self.stage
+    }
+}
+
+impl IntervalProducer for ChainedGramSpmm<'_> {
+    fn produce(&self, iv: usize, rows: usize) -> Vec<f64> {
+        produce_colmajor(
+            self.at,
+            &self.stage,
+            &self.at_pool,
+            &self.ctx.mem,
+            iv,
+            rows,
+            self.interval_rows,
+            self.b,
+            self.vectorize,
+        )
+    }
+}
+
+impl Drop for ChainedGramSpmm<'_> {
+    fn drop(&mut self) {
+        // Two-hop peak-dense attribution: record the staging ring's
+        // high-water mark under its own sub-phase so harness rows and the
+        // io-accounting pins can read it after the apply.
+        let peak = self.stage.peak_staged_bytes();
+        if peak > 0 {
+            self.ctx.io_phases.add_dense_peak("spmm.stage", peak);
+        }
     }
 }
 
@@ -342,5 +757,173 @@ mod tests {
         // Aligned tile dim streams fine.
         let m32 = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);
         assert!(StreamedSpmm::new(&m32, &x, true).is_some());
+    }
+
+    /// Dense two-hop reference: `Aᵀ(A·x)` over COO triples.
+    fn gram_ref(coo: &CooMatrix, x: &[f64], n_rows: usize, n_cols: usize, b: usize) -> Vec<f64> {
+        // x is column-major n_cols × b; returns column-major n_cols × b.
+        let mut mid = vec![0.0; n_rows * b];
+        for &(r, c) in &coo.entries {
+            for j in 0..b {
+                mid[j * n_rows + r as usize] += x[j * n_cols + c as usize];
+            }
+        }
+        let mut out = vec![0.0; n_cols * b];
+        for &(r, c) in &coo.entries {
+            for j in 0..b {
+                out[j * n_cols + c as usize] += mid[j * n_rows + r as usize];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn chained_gram_matches_dense_reference() {
+        let mut rng = Rng::new(44);
+        let coo = random_graph(&mut rng, 400, 2500);
+        let at_coo = coo.transpose();
+        for (em, sem_matrix) in [(false, false), (true, true)] {
+            let ctx = if em {
+                DenseCtx::em_for_tests(64)
+            } else {
+                DenseCtx::mem_for_tests(64)
+            };
+            let fs = ctx.fs.clone();
+            let (a, at) = if sem_matrix {
+                (
+                    build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "a"), true),
+                    build_matrix_opts(&at_coo, 32, BuildTarget::Safs(&fs, "at"), true),
+                )
+            } else {
+                (
+                    build_matrix_opts(&coo, 32, BuildTarget::Mem, true),
+                    build_matrix_opts(&at_coo, 32, BuildTarget::Mem, true),
+                )
+            };
+            let x = TasMatrix::from_fn(&ctx, 400, 2, |r, c| ((r * 5 + c) % 13) as f64 - 6.0);
+            // A SEM-backed first hop streams only when all 7 M intervals
+            // fit the ring (zero evictions → each image read once).
+            let cap = if sem_matrix { 8 } else { 3 };
+            let s = ChainedGramSpmm::new(&a, &at, &x, cap, true).expect("layout streams");
+            assert_eq!(s.output_rows(), 400);
+            let y = TasMatrix::zeros_for_overwrite(&ctx, 400, 2);
+            let mut p = FusedPipeline::new(&ctx);
+            p.source(&y, Box::new(s));
+            p.materialize();
+            let expect = gram_ref(&coo, &x.to_colmajor(), 400, 400, 2);
+            assert_close(&y.to_colmajor(), &expect, 1e-12, 1e-9, "two-hop").unwrap();
+        }
+    }
+
+    #[test]
+    fn chained_gram_refused_on_unaligned_layouts() {
+        let mut rng = Rng::new(45);
+        let coo = random_graph(&mut rng, 200, 1200);
+        let at_coo = coo.transpose();
+        let ctx = DenseCtx::mem_for_tests(96); // 96 % 64 != 0
+        let a64 = build_matrix_opts(&coo, 64, BuildTarget::Mem, true);
+        let at64 = build_matrix_opts(&at_coo, 64, BuildTarget::Mem, true);
+        let x = TasMatrix::from_fn(&ctx, 200, 2, |r, _| r as f64);
+        assert!(ChainedGramSpmm::new(&a64, &at64, &x, 2, true).is_none());
+        // Mixed tile dims: both must divide the interval.
+        let a32 = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);
+        let at32 = build_matrix_opts(&at_coo, 32, BuildTarget::Mem, true);
+        assert!(ChainedGramSpmm::new(&a32, &at64, &x, 2, true).is_none());
+        assert!(ChainedGramSpmm::new(&a32, &at32, &x, 2, true).is_some());
+    }
+
+    /// A SEM-backed first hop streams only when the whole intermediate
+    /// fits the ring — ring-pressure recomputes would otherwise re-read
+    /// `A`'s tile-row images from SAFS without bound.
+    #[test]
+    fn chained_gram_refuses_sem_first_hop_under_ring_pressure() {
+        let mut rng = Rng::new(48);
+        let coo = random_graph(&mut rng, 256, 1500); // 4 M intervals at 64 rows
+        let at_coo = coo.transpose();
+        let ctx = DenseCtx::em_for_tests(64);
+        let fs = ctx.fs.clone();
+        let a_sem = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "pa"), true);
+        let at_mem = build_matrix_opts(&at_coo, 32, BuildTarget::Mem, true);
+        let x = TasMatrix::from_fn(&ctx, 256, 2, |r, _| r as f64);
+        // Ring smaller than the 4 intervals of M: refuse (eager fallback
+        // reads each image exactly once instead).
+        assert!(ChainedGramSpmm::new(&a_sem, &at_mem, &x, 2, true).is_none());
+        // Ring that holds all of M: streams, nothing ever evicted.
+        assert!(ChainedGramSpmm::new(&a_sem, &at_mem, &x, 4, true).is_some());
+        // An in-memory image streams under any ring pressure (recompute
+        // is pure RAM work).
+        let a_mem = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);
+        assert!(ChainedGramSpmm::new(&a_mem, &at_mem, &x, 2, true).is_some());
+    }
+
+    /// The staging ring caps resident intermediate bytes and recomputes
+    /// deterministically under pressure.
+    #[test]
+    fn staging_ring_bounds_residency_and_recomputes_bitwise() {
+        let mut rng = Rng::new(46);
+        let n = 1024u64;
+        let coo = random_graph(&mut rng, n, 8000);
+        let at_coo = coo.transpose();
+        let ctx = DenseCtx::mem_for_tests(64); // 16 intervals of M
+        let a = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);
+        let at = build_matrix_opts(&at_coo, 32, BuildTarget::Mem, true);
+        let x = TasMatrix::from_fn(&ctx, n as usize, 2, |r, c| ((r * 3 + c) % 17) as f64 - 8.0);
+        let nn = n as usize;
+        let iv_bytes = (64 * 2 * 8) as u64;
+        let n_iv = nn.div_ceil(64) as u64;
+
+        let run = |cap: usize| -> (Vec<f64>, u64, u64) {
+            // Hold the producer directly (instead of boxing it into a
+            // pipeline) so the stage's counters stay inspectable.
+            let s = ChainedGramSpmm::new(&a, &at, &x, cap, true).unwrap();
+            let y = TasMatrix::zeros_for_overwrite(&ctx, nn, 2);
+            for iv in 0..y.n_intervals() {
+                let data = s.produce(iv, y.interval_len(iv));
+                y.store_interval(iv, data);
+            }
+            (y.to_colmajor(), s.stage().peak_staged_bytes(), s.stage().computes())
+        };
+
+        let (vals_tight, peak_tight, computes_tight) = run(2);
+        let (vals_wide, peak_wide, computes_wide) = run(64);
+        // Values are bitwise identical whatever the ring pressure.
+        assert_close(&vals_tight, &vals_wide, 0.0, 0.0, "ring invariance").unwrap();
+        // Wide ring: every interval computed once, all resident.
+        assert_eq!(computes_wide, n_iv, "wide ring computes each interval once");
+        assert_eq!(peak_wide, n_iv * iv_bytes);
+        // Tight ring: residency capped at cap + 2 intervals in flight
+        // for the single puller thread; recomputes occur.
+        assert!(
+            peak_tight <= (2 + 2) as u64 * iv_bytes,
+            "staging peak {peak_tight} exceeds cap bound"
+        );
+        assert!(peak_tight < peak_wide);
+        // With 16 intervals squeezed through a 2-slot ring, eviction and
+        // recompute MUST happen — strictly more computes than intervals.
+        assert!(
+            computes_tight > n_iv,
+            "ring pressure must force recomputes: {computes_tight} vs {n_iv} intervals"
+        );
+    }
+
+    /// Dropping the two-hop producer reports the staging peak under the
+    /// `spmm.stage` dense-peak sub-phase.
+    #[test]
+    fn chained_gram_reports_stage_peak_on_drop() {
+        let mut rng = Rng::new(47);
+        let coo = random_graph(&mut rng, 256, 1500);
+        let at_coo = coo.transpose();
+        let ctx = DenseCtx::mem_for_tests(64);
+        let a = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);
+        let at = build_matrix_opts(&at_coo, 32, BuildTarget::Mem, true);
+        let x = TasMatrix::from_fn(&ctx, 256, 1, |r, _| (r % 7) as f64 - 3.0);
+        assert_eq!(ctx.io_phases.dense_peak("spmm.stage"), 0);
+        {
+            let s = ChainedGramSpmm::new(&a, &at, &x, 2, true).unwrap();
+            for iv in 0..x.n_intervals() {
+                let _ = s.produce(iv, x.interval_len(iv));
+            }
+        }
+        assert!(ctx.io_phases.dense_peak("spmm.stage") > 0, "drop must record the staging peak");
     }
 }

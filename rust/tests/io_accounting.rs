@@ -11,8 +11,10 @@
 //!   the per-file random striping orders.
 
 use flasheigen::dense::{tas::mv_random, DenseCtx, NativeKernels, TasMatrix};
-use flasheigen::eigen::{ortho_normalize, solve, EigenConfig, Operator, SpmmOperator, Which};
-use flasheigen::graph::gnm_undirected;
+use flasheigen::eigen::{
+    ortho_normalize, solve, svd, EigenConfig, GramOperator, Operator, SpmmOperator, Which,
+};
+use flasheigen::graph::{gnm, gnm_undirected};
 use flasheigen::harness::{fig9_fusion_data, BenchCfg};
 use flasheigen::safs::{Safs, SafsConfig};
 use flasheigen::sparse::{build_matrix_opts, build_mem, BuildTarget};
@@ -76,7 +78,9 @@ fn em_eigensolve_fused_beats_eager_within_budget() {
     let run = |fused: bool| {
         let fs = Safs::new(SafsConfig::untimed());
         let ctx = DenseCtx::with(fs.clone(), true, 64, 2, 4, 1, Arc::new(NativeKernels));
-        ctx.set_fused(fused);
+        // Explicit path selection: the eager run is the ablation
+        // reference, never an inherited context default.
+        ctx.set_eager(!fused);
         let op = SpmmOperator::new(build_mem(&coo), SpmmOpts::default(), 2);
         let cfg = EigenConfig {
             nev: 4,
@@ -277,6 +281,183 @@ fn em_eigensolve_peak_dense_bounded_by_group() {
     assert!(
         spmm_streamed < spmm_eager,
         "streamed spmm peak {spmm_streamed} must undercut eager {spmm_eager}"
+    );
+}
+
+/// (g) The streamed two-hop Gram apply (SVD path): over a write-through
+/// EM subspace it reads `X` exactly once, writes the output exactly
+/// once, keeps the staged `A·X` intermediate within the group/staging
+/// bound (far below one full-height matrix), and moves strictly fewer
+/// SAFS bytes — at a strictly lower peak dense footprint — than the
+/// eager four-full-height `Aᵀ(A·X)` path, while producing identical
+/// values.
+#[test]
+fn streamed_gram_apply_two_hop_pins() {
+    let fs = Safs::new(SafsConfig::untimed());
+    let (threads, group) = (2usize, 2usize);
+    let interval_rows = 128usize;
+    // cache_slots = 0 (write-through): every dense access is visible.
+    let ctx = DenseCtx::with(
+        fs.clone(),
+        true,
+        interval_rows,
+        threads,
+        group,
+        0,
+        Arc::new(NativeKernels),
+    );
+    let mut rng = Rng::new(95);
+    let n = 1536u64;
+    let coo = gnm(n, 9000, &mut rng); // directed: the SVD workload
+    let at_coo = coo.transpose();
+    // Matrix images in memory: the measured bytes are the dense boundary.
+    let a = build_matrix_opts(&coo, 64, BuildTarget::Mem, true);
+    let at = build_matrix_opts(&at_coo, 64, BuildTarget::Mem, true);
+    let op = GramOperator::new(a, at, SpmmOpts::default(), threads);
+    let (nn, b) = (n as usize, 2usize);
+    let x = TasMatrix::zeros(&ctx, nn, b);
+    mv_random(&x, 7);
+    let mat_bytes = (nn * b * 8) as u64;
+    let iv_bytes = (interval_rows * b * 8) as u64;
+
+    let before = fs.stats();
+    ctx.mem.begin_window();
+    let w_streamed = op.apply_streamed(&ctx, &x);
+    let streamed_peak = ctx.mem.window_peak();
+    let streamed = fs.stats().delta_since(&before);
+    assert_eq!(streamed.bytes_read, mat_bytes, "two-hop apply must read X exactly once");
+    assert_eq!(streamed.bytes_written, mat_bytes, "output written exactly once");
+
+    // Staging bound: `group` cached intervals, plus per worker the
+    // handle it holds and the one it is switching to.
+    let stage_peak = ctx.io_phases.dense_peak("spmm.stage");
+    let stage_bound = ((group + 2 * threads) as u64) * iv_bytes;
+    assert!(stage_peak > 0, "staging peak must be recorded");
+    assert!(
+        stage_peak <= stage_bound,
+        "staging peak {stage_peak} exceeds the ring bound {stage_bound}"
+    );
+    assert!(
+        stage_bound < mat_bytes,
+        "the staging bound itself must sit below one full-height matrix"
+    );
+
+    let before = fs.stats();
+    ctx.mem.begin_window();
+    let w_eager = op.apply(&ctx, &x);
+    let eager_peak = ctx.mem.window_peak();
+    let eager = fs.stats().delta_since(&before);
+    assert_eq!(eager.bytes_read, mat_bytes, "eager also reads X once");
+    assert_eq!(
+        eager.bytes_written,
+        2 * mat_bytes,
+        "eager zero-materializes the output TAS then stores it"
+    );
+    assert!(
+        streamed.total_bytes() < eager.total_bytes(),
+        "two-hop must move strictly fewer bytes: {} vs {}",
+        streamed.total_bytes(),
+        eager.total_bytes()
+    );
+    assert!(
+        streamed_peak < eager_peak,
+        "two-hop peak dense {streamed_peak} must undercut eager {eager_peak}"
+    );
+    assert_close(
+        &w_streamed.to_colmajor(),
+        &w_eager.to_colmajor(),
+        0.0,
+        0.0,
+        "two-hop == eager",
+    )
+    .unwrap();
+}
+
+/// (h) The acceptance pin for the streamed SVD path: a full EM `svd()`
+/// run on the default fused + streamed configuration keeps every
+/// phase's peak resident dense bytes within the group/staging bound
+/// (O(1) full-height matrices plus group-bounded intervals — no
+/// full-height `A·X` intermediate), and its spmm-phase peak strictly
+/// undercuts the eager reference run's.
+#[test]
+fn em_svd_peak_dense_bounded_by_group_and_staging() {
+    let mut rng = Rng::new(97);
+    let (n, b) = (4000usize, 2usize);
+    let coo = gnm(n as u64, 16_000, &mut rng);
+    let at_coo = coo.transpose();
+    let interval_rows = 128usize;
+    let (threads, group) = (2usize, 2usize);
+    let run = |streamed: bool| {
+        let fs = Safs::new(SafsConfig::untimed());
+        let ctx = DenseCtx::with(
+            fs,
+            true,
+            interval_rows,
+            threads,
+            group,
+            1,
+            Arc::new(NativeKernels),
+        );
+        if streamed {
+            // Pin the default flip: a fresh context IS fused + streamed.
+            assert!(
+                ctx.is_fused() && ctx.is_streamed(),
+                "fused + streamed must be the default DenseCtx configuration"
+            );
+        } else {
+            ctx.set_eager(true); // the explicit reference run
+        }
+        let a = build_matrix_opts(&coo, 64, BuildTarget::Mem, true);
+        let at = build_matrix_opts(&at_coo, 64, BuildTarget::Mem, true);
+        let op = GramOperator::new(a, at, SpmmOpts::default(), threads);
+        // Unreachable tolerance + few restarts: exercises expansion,
+        // restart and the post-restart Gram rebuild deterministically.
+        let cfg = EigenConfig {
+            nev: 4,
+            block_size: b,
+            num_blocks: 8,
+            tol: 1e-300,
+            max_restarts: 3,
+            which: Which::LargestAlgebraic,
+            seed: 5,
+            compute_eigenvectors: false,
+        };
+        let _ = svd(&op, &ctx, &cfg);
+        (ctx.io_phases.dense_peaks_snapshot(), ctx.io_phases.dense_peak("spmm.stage"))
+    };
+
+    let (streamed, stage_peak) = run(true);
+    let (eager, _) = run(false);
+
+    let mat_bytes = (n * b * 8) as u64;
+    let iv_bytes = (interval_rows * b * 8) as u64;
+    // The staging ring stays within its bound across every apply of the
+    // whole solve (peaks fold by max).
+    let stage_bound = ((group + 2 * threads) as u64) * iv_bytes;
+    assert!(
+        stage_peak > 0 && stage_peak <= stage_bound,
+        "svd staging peak {stage_peak} outside (0, {stage_bound}]"
+    );
+    // ≤ 2 cache-resident matrices (LRU churn) + 1 input gather + 1 slack
+    // full-height matrix, plus per-worker walk footprint of a group of
+    // intervals and a handful of pinned/work buffers, plus the staging
+    // ring.  Crucially: NOT the eager path's extra full-height
+    // intermediates for A·X / Aᵀ(A·X).
+    let bound = 4 * mat_bytes
+        + ((threads * (group + 8)) as u64 + (group + 2 * threads) as u64) * iv_bytes;
+    for phase in ["spmm", "ortho", "restart"] {
+        let peak = streamed.get(phase).copied().unwrap_or(0);
+        assert!(peak > 0, "phase {phase} untracked: {streamed:?}");
+        assert!(
+            peak <= bound,
+            "phase {phase} peak dense {peak} exceeds the group/staging bound {bound}"
+        );
+    }
+    let spmm_streamed = streamed.get("spmm").copied().unwrap_or(0);
+    let spmm_eager = eager.get("spmm").copied().unwrap_or(0);
+    assert!(
+        spmm_streamed < spmm_eager,
+        "streamed svd spmm peak {spmm_streamed} must undercut eager {spmm_eager}"
     );
 }
 

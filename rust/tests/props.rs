@@ -7,7 +7,7 @@ use flasheigen::dense::{
     DenseCtx, FusedPipeline, NativeKernels, SmallMat, TasMatrix,
 };
 use flasheigen::eigen::ortho::{normalize_block_eager, ortho_against_eager};
-use flasheigen::eigen::{ortho_normalize_with, sym_eig, Operator, SpmmOperator};
+use flasheigen::eigen::{ortho_normalize_with, sym_eig, GramOperator, Operator, SpmmOperator};
 use flasheigen::graph::{gnm, gnm_undirected, rmat, RmatParams};
 use flasheigen::safs::{Safs, SafsConfig, StripeMap};
 use flasheigen::sparse::{build_matrix, build_matrix_opts, BuildTarget, CsrMatrix};
@@ -368,6 +368,107 @@ fn prop_streamed_apply_matches_eager_apply() {
             1e-12,
             "streamed apply",
         )
+    });
+}
+
+#[test]
+fn prop_streamed_gram_apply_matches_eager_apply() {
+    // The SVD path's two-hop streamed boundary (ChainedGramSpmm: A·X
+    // feeding Aᵀ through the bounded staging ring) must reproduce the
+    // eager Aᵀ(A·X) apply to 1e-12 on random ER and R-MAT directed
+    // graphs, over memory- and SSD-backed subspaces and matrix images,
+    // across staging-ring pressures.
+    run_prop("streamed-gram-vs-eager-apply", 10, |g| {
+        let n = g.usize_in(2, 600) as u64;
+        let nnz = g.usize_in(0, 4000) as u64;
+        let tile = *g.choose(&[16usize, 32, 64]); // all divide the 64-row intervals
+        let b = g.usize_in(1, 4);
+        let em = g.bool();
+        let sem_matrix = g.bool();
+        let rmat_shape = g.bool();
+        let group = g.usize_in(1, 6); // staging-ring capacity
+        let threads = g.usize_in(1, 3);
+        let mut rng = Rng::new(g.u64());
+        let coo = if rmat_shape {
+            rmat(n.max(2), nnz.max(1), RmatParams::default(), &mut rng)
+        } else {
+            gnm(n, nnz.min(n * n.saturating_sub(1)), &mut rng)
+        };
+        let at_coo = coo.transpose();
+        let fs = Safs::new(SafsConfig::untimed());
+        let ctx = DenseCtx::with(fs.clone(), em, 64, threads, group, 1, Arc::new(NativeKernels));
+        let (a, at) = if sem_matrix {
+            (
+                build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "ga"), true),
+                build_matrix_opts(&at_coo, tile, BuildTarget::Safs(&fs, "gat"), true),
+            )
+        } else {
+            (
+                build_matrix_opts(&coo, tile, BuildTarget::Mem, true),
+                build_matrix_opts(&at_coo, tile, BuildTarget::Mem, true),
+            )
+        };
+        let nn = coo.n_cols as usize;
+        let op = GramOperator::new(a, at, SpmmOpts::default(), threads);
+        let x = TasMatrix::zeros(&ctx, nn, b);
+        mv_random(&x, g.u64());
+        let eager = op.apply(&ctx, &x);
+        let streamed = op.apply_streamed(&ctx, &x);
+        assert_close(
+            &streamed.to_colmajor(),
+            &eager.to_colmajor(),
+            1e-12,
+            1e-12,
+            "streamed gram apply",
+        )
+    });
+}
+
+#[test]
+fn prop_default_ctx_is_fused_streamed_and_matches_eager_bitwise() {
+    // The default-flip regression canary: a fresh DenseCtx runs fused +
+    // streamed, and the streamed operator boundary under that default is
+    // BITWISE equal to the explicit eager apply (streaming reorders no
+    // accumulation — per output row, tile contributions arrive in
+    // ascending tile-column order on both paths).
+    run_prop("default-vs-eager-bitwise", 10, |g| {
+        let n = g.usize_in(2, 500) as u64;
+        let nnz = g.usize_in(0, 3000) as u64;
+        let tile = *g.choose(&[16usize, 32]);
+        let b = g.usize_in(1, 3);
+        let em = g.bool();
+        let gram = g.bool();
+        let mut rng = Rng::new(g.u64());
+        let ctx = if em {
+            DenseCtx::em_for_tests(64)
+        } else {
+            DenseCtx::mem_for_tests(64)
+        };
+        if !ctx.is_fused() || !ctx.is_streamed() {
+            return Err("fused + streamed must be the default DenseCtx configuration".into());
+        }
+        let nn = n as usize;
+        let mut coo = gnm(n, nnz.min(n * n.saturating_sub(1)), &mut rng);
+        let (streamed, eager) = if gram {
+            let at_coo = coo.transpose();
+            let a = build_matrix_opts(&coo, tile, BuildTarget::Mem, true);
+            let at = build_matrix_opts(&at_coo, tile, BuildTarget::Mem, true);
+            let op = GramOperator::new(a, at, SpmmOpts::default(), 2);
+            let x = TasMatrix::zeros(&ctx, nn, b);
+            mv_random(&x, g.u64());
+            (op.apply_streamed(&ctx, &x), op.apply(&ctx, &x))
+        } else {
+            coo.symmetrize();
+            let m = build_matrix_opts(&coo, tile, BuildTarget::Mem, true);
+            let op = SpmmOperator::new(m, SpmmOpts::default(), 2);
+            let x = TasMatrix::zeros(&ctx, nn, b);
+            mv_random(&x, g.u64());
+            (op.apply_streamed(&ctx, &x), op.apply(&ctx, &x))
+        };
+        if streamed.to_colmajor() != eager.to_colmajor() {
+            return Err("default streamed apply is not bit-for-bit with eager".into());
+        }
+        Ok(())
     });
 }
 
