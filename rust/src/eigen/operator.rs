@@ -13,6 +13,14 @@
 //! directed graphs (§4.3.2); its streamed producer chains **two** hops
 //! ([`crate::spmm::ChainedGramSpmm`]) through a bounded staging ring so
 //! the intermediate `A·X` never materializes at full height either.
+//!
+//! Both streamed boundaries read SEM tile-row images through the
+//! read-ahead scheduler of [`crate::spmm::stream`]: up to
+//! [`crate::safs::SafsConfig::read_ahead`] interval reads stay in
+//! flight per worker (hop 1 of the Gram chain prefetches the next
+//! interval the `Aᵀ` tile-column structure will demand), overlapping
+//! SSD latency with multiplication exactly like the eager engine's
+//! partition pipeline — same bytes, same bits, lower `io_wait`.
 
 use crate::dense::{
     conv_layout_from_rowmajor, conv_layout_to_rowmajor, DenseCtx, FusedPipeline,
@@ -267,6 +275,10 @@ impl Operator for GramOperator {
         &'a self,
         x: &'a TasMatrix,
     ) -> Option<Box<dyn IntervalProducer + 'a>> {
+        // The staging ring is group_size intervals; a SEM-backed A whose
+        // intermediate exceeds it still streams while the re-read
+        // schedule stays within the eager fallback's image total
+        // (ChainedGramSpmm::new models it from the tile-column index).
         let cap = x.ctx().group_size.max(1);
         let s = ChainedGramSpmm::new(&self.a, &self.at, x, cap, self.opts.vectorize)?;
         self.count.inc();

@@ -476,6 +476,89 @@ pub fn fig9_gram(cfg: &BenchCfg, n_scale: f64, b: usize) -> Table {
     t
 }
 
+// ------------------------------------------------------------- Fig 9e
+
+/// Measure one streamed SEM operator apply (`W = A·X`, matrix image on
+/// SSDs, subspace on SSDs) per read-ahead depth.  Depth 0 is the
+/// synchronous baseline (every tile-row-image read issued and awaited
+/// back-to-back); deeper schedules keep more interval reads in flight
+/// per worker.  Bytes are identical by construction — the row that
+/// moves is `io_wait`, the blocked-on-ticket time the scheduler hides
+/// behind multiplication.  Returns `(depth, runtime_secs, io_delta)`
+/// rows — the raw data behind [`fig9_readahead`], also pinned by the
+/// I/O-accounting regression tests.
+pub fn fig9_readahead_data(
+    cfg: &BenchCfg,
+    n_scale: f64,
+    b: usize,
+    depths: &[usize],
+) -> Vec<(usize, f64, IoStats)> {
+    let mut scaled = cfg.clone();
+    scaled.scale *= n_scale;
+    let mut coo = scaled.gen(Dataset::Friendster);
+    if Dataset::Friendster.directed() {
+        coo.symmetrize();
+    }
+    let mut rows = Vec::new();
+    for &depth in depths {
+        let mut per_depth = scaled.clone();
+        per_depth.read_ahead = depth;
+        let fs = Safs::new(per_depth.safs_config());
+        // cache_slots = 0: the subspace streams, so the walk has real
+        // SEM reads on both the image and the dense side to overlap.
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            per_depth.interval_rows,
+            per_depth.threads,
+            8,
+            0,
+            Arc::new(NativeKernels),
+        );
+        let op = SpmmOperator::new(
+            per_depth.build_sem(&coo, &fs, "fig9e"),
+            SpmmOpts::default(),
+            per_depth.threads,
+        );
+        let n = coo.n_rows as usize;
+        let x = TasMatrix::zeros(&ctx, n, b);
+        mv_random(&x, 4242);
+        let before = fs.stats();
+        let (_, el) = time_it(|| {
+            let _w = op.apply_streamed(&ctx, &x);
+        });
+        rows.push((depth, el, fs.stats().delta_since(&before)));
+    }
+    rows
+}
+
+/// Figure 9e (beyond the paper): read-ahead ablation on the streamed
+/// SEM operator apply — same bytes at every depth, shrinking `io_wait`
+/// as the scheduler overlaps image transfers with multiplication.
+pub fn fig9_readahead(cfg: &BenchCfg, n_scale: f64, b: usize) -> Table {
+    let mut t = Table::new(
+        "Figure 9e: read-ahead ablation on the streamed SEM apply",
+        &["depth", "runtime", "read", "io wait", "wait vs depth 0"],
+    );
+    let rows = fig9_readahead_data(cfg, n_scale, b, &[0, 2, 8]);
+    let base_wait = rows[0].2.wait_secs().max(1e-12);
+    for (depth, el, io) in &rows {
+        t.row(vec![
+            format!("{depth}"),
+            secs(*el),
+            fmt_bytes(io.bytes_read),
+            format!("{:.3}s", io.wait_secs()),
+            ratio(io.wait_secs() / base_wait),
+        ]);
+    }
+    t.note(
+        "scheduling moves when bytes are read, never what is computed: identical reads per row, \
+         lower blocked-wait as depth grows (the §3.2 I/O/compute overlap, restored on the \
+         streamed default path)",
+    );
+    t
+}
+
 /// Figure 9b (beyond the paper): the §3.4 lazy-evaluation ablation —
 /// eager op-by-op CGS2 vs the fused single-pass-per-round pipeline, on
 /// the same EM dense-matrix configuration as Figure 9.
@@ -524,7 +607,7 @@ pub fn fig10(cfg: &BenchCfg, n: usize, b: usize, m_list: &[usize]) -> Table {
         &["m", "FE-IM", "FE-EM", "MKL-like", "Trilinos-like", "EM/IM"],
     );
     for &m in m_list {
-        let (t_im, t_em, _, _) = fig10_point(cfg, n, b, m);
+        let (t_im, t_em, _, _, _) = fig10_point(cfg, n, b, m);
         // In-memory single-thread baselines over one contiguous buffer.
         let x: Vec<f64> = (0..n * m).map(|i| ((i * 31) % 101) as f64 - 50.0).collect();
         let bmat = SmallMat::from_fn(m, b, |r, c| ((r + 2 * c) % 7) as f64 - 3.0);
@@ -553,9 +636,9 @@ pub fn fig10(cfg: &BenchCfg, n: usize, b: usize, m_list: &[usize]) -> Table {
 }
 
 /// Measure one (n, b, m) op1 point in IM and EM mode; returns
-/// (im_secs, em_secs, em_bytes, em_elapsed_secs) — the latter two feed
-/// Figure 11's throughput series.
-pub fn fig10_point(cfg: &BenchCfg, n: usize, b: usize, m: usize) -> (f64, f64, u64, f64) {
+/// (im_secs, em_secs, em_bytes, em_elapsed_secs, em_io_wait_secs) — the
+/// latter three feed Figure 11's throughput/overlap series.
+pub fn fig10_point(cfg: &BenchCfg, n: usize, b: usize, m: usize) -> (f64, f64, u64, f64, f64) {
     assert_eq!(m % b, 0, "m must be a multiple of b");
     let bmat = SmallMat::from_fn(m, b, |r, c| ((r + 2 * c) % 7) as f64 - 3.0);
     let run = |em: bool| -> (f64, u64, f64) {
@@ -583,22 +666,24 @@ pub fn fig10_point(cfg: &BenchCfg, n: usize, b: usize, m: usize) -> (f64, f64, u
             mv_times_mat_add_mv(1.0, &refs, &bmat, 0.0, &cc);
         });
         let delta = fs.stats().delta_since(&before);
-        (el, delta.total_bytes(), el)
+        (el, delta.total_bytes(), delta.wait_secs())
     };
     let (t_im, _, _) = run(false);
-    let (t_em, bytes, el) = run(true);
-    (t_im, t_em, bytes, el)
+    let (t_em, bytes, wait) = run(true);
+    (t_im, t_em, bytes, t_em, wait)
 }
 
-/// Figure 11: average I/O throughput of EM dense MM across m.
+/// Figure 11: average I/O throughput of EM dense MM across m, with the
+/// blocked `io_wait` share showing how much of the traffic the async
+/// pipeline failed to hide behind computation.
 pub fn fig11(cfg: &BenchCfg, n: usize, b: usize, m_list: &[usize]) -> Table {
     let mut t = Table::new(
         "Figure 11: average I/O throughput of EM dense MM",
-        &["m", "bytes moved", "throughput", "per SSD", "of array max"],
+        &["m", "bytes moved", "throughput", "per SSD", "of array max", "io wait"],
     );
     let max_bps = cfg.safs_config().aggregate_read_bps();
     for &m in m_list {
-        let (_, _, bytes, el) = fig10_point(cfg, n, b, m);
+        let (_, _, bytes, el, wait) = fig10_point(cfg, n, b, m);
         let bps = bytes as f64 / el;
         t.row(vec![
             format!("{m}"),
@@ -606,6 +691,7 @@ pub fn fig11(cfg: &BenchCfg, n: usize, b: usize, m_list: &[usize]) -> Table {
             fmt_throughput(bytes, el),
             fmt_throughput(bytes / 24, el),
             format!("{:.0}%", 100.0 * bps / max_bps),
+            format!("{wait:.3}s"),
         ]);
     }
     t.note("paper shape: throughput approaches the array maximum (10.87 of 12 GB/s) — the SSDs are the bottleneck");
@@ -820,6 +906,7 @@ mod tests {
             tile_dim: 64,
             interval_rows: 256,
             seed: 1,
+            read_ahead: 2,
         }
     }
 
@@ -912,6 +999,21 @@ mod tests {
         assert_eq!(eager.4, 0, "eager apply has no staging ring");
         let t = fig9_gram(&tiny_cfg(), 1.0, 4);
         assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn fig9_readahead_smoke_identical_bytes() {
+        // Scale up so the image spans several intervals; depth must not
+        // change what is read, only when.
+        let rows = fig9_readahead_data(&tiny_cfg(), 16.0, 2, &[0, 2]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0].2.bytes_read, rows[1].2.bytes_read,
+            "read-ahead must not change total bytes"
+        );
+        let t = fig9_readahead(&tiny_cfg(), 16.0, 2);
+        assert_eq!(t.rows.len(), 3);
+        assert!(t.render().contains("io wait"));
     }
 
     #[test]

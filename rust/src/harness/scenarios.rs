@@ -39,6 +39,9 @@ pub struct BenchCfg {
     /// XLA-artifact-matched runs.)
     pub interval_rows: usize,
     pub seed: u64,
+    /// SEM image read-ahead depth (FLASHEIGEN_READ_AHEAD / CLI
+    /// `--read-ahead`; 0 = synchronous differential-testing baseline).
+    pub read_ahead: usize,
 }
 
 impl Default for BenchCfg {
@@ -50,6 +53,7 @@ impl Default for BenchCfg {
             tile_dim: 4096,
             interval_rows: 131072,
             seed: 0xBE9C,
+            read_ahead: 2,
         }
     }
 }
@@ -66,6 +70,9 @@ impl BenchCfg {
         }
         if let Some(v) = getf("FLASHEIGEN_DILATION") {
             c.dilation = v;
+        }
+        if let Some(v) = getf("FLASHEIGEN_READ_AHEAD") {
+            c.read_ahead = v as usize;
         }
         c
     }
@@ -88,6 +95,7 @@ impl BenchCfg {
             throttle: true,
             io_scale: 1.0,
             ctx_switch_cost: 15e-6 * self.dilation,
+            read_ahead: self.read_ahead,
         }
     }
 

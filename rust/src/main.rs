@@ -41,6 +41,10 @@ COMMON OPTIONS:
   --tol <t>          residual tolerance (default 1e-6)
   --threads <t>      worker threads (default 4)
   --dilation <d>     device time dilation (default 48; see DESIGN.md)
+  --read-ahead <d>   SEM image read-ahead depth shared by the eager and
+                     streamed SpMM paths (default 2; 0 = synchronous
+                     reads, the differential-testing baseline — same
+                     bytes and bits at every depth, only io_wait moves)
   --sem              semi-external mode (matrix + subspace on SSDs)
   --eager            opt out of the DEFAULT fused + streamed §3.4 path:
                      run the eager Table-1 reference ops and the
@@ -71,7 +75,7 @@ fn main() {
         &argv[1..],
         &[
             "graph", "scale", "nev", "block", "nblocks", "tol", "threads", "dilation",
-            "cols", "exp", "seed",
+            "cols", "exp", "seed", "read-ahead",
         ],
     ) {
         Ok(a) => a,
@@ -106,6 +110,7 @@ fn bench_cfg(args: &Args) -> Result<BenchCfg, String> {
     cfg.threads = args.get_usize("threads", cfg.threads)?;
     cfg.dilation = args.get_f64("dilation", cfg.dilation)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.read_ahead = args.get_usize("read-ahead", cfg.read_ahead)?;
     Ok(cfg)
 }
 
@@ -322,6 +327,9 @@ fn cmd_figures(args: &Args) -> i32 {
             harness::fig9_stream(&cfg, 16.0, 4).print();
             // The page graph already spans many intervals at base scale.
             harness::fig9_gram(&cfg, 1.0, 4).print();
+            // Read-ahead ablation on the streamed SEM apply (same 16x
+            // scale-up as fig9_stream so the walk spans intervals).
+            harness::fig9_readahead(&cfg, 16.0, 4).print();
             ran = true;
         }
         if all || exp == "fig10" {

@@ -87,6 +87,13 @@ impl PhaseTimers {
 /// harness reads the totals to report the paper-style per-phase byte
 /// breakdown (§3.4's claim that reorthogonalization dominates traffic).
 ///
+/// Each delta also carries the phase's **`io_wait`** — seconds its
+/// workers spent blocked in [`crate::safs::IoTicket::wait`]
+/// ([`IoStats::wait_secs`]).  Bytes say how much a phase read; `io_wait`
+/// says how much of that I/O the read-ahead schedulers failed to hide
+/// behind computation, so the fig9/fig11 rows can show *overlap*, not
+/// just traffic.
+///
 /// Beyond SAFS bytes, a phase can also record the **peak resident dense
 /// bytes** observed while it ran ([`PhaseIo::scope_tracked`]): the
 /// high-water mark of a [`MemTracker`] over the scope, i.e. the §3.4.3
@@ -178,7 +185,8 @@ impl PhaseIo {
         self.dense_peaks.lock().unwrap().clear();
     }
 
-    /// Render a sorted "phase: read/written (+peak dense)" report.
+    /// Render a sorted "phase: read/written, io wait (+peak dense)"
+    /// report.
     pub fn report(&self) -> String {
         let snap = self.snapshot();
         let peaks = self.dense_peaks_snapshot();
@@ -193,9 +201,10 @@ impl PhaseIo {
                 0.0
             };
             out.push_str(&format!(
-                "  {name:<28} read {:>10}  written {:>10}  {pct:>5.1}%",
+                "  {name:<28} read {:>10}  written {:>10}  io wait {:>8.3}s  {pct:>5.1}%",
                 crate::util::humansize::fmt_bytes(s.bytes_read),
-                crate::util::humansize::fmt_bytes(s.bytes_written)
+                crate::util::humansize::fmt_bytes(s.bytes_written),
+                s.wait_secs()
             ));
             if let Some(&p) = peaks.get(name) {
                 out.push_str(&format!(
@@ -332,6 +341,9 @@ mod tests {
         assert_eq!(io.get("read").bytes_read, 500);
         assert_eq!(io.snapshot().len(), 2);
         assert!(io.report().contains("write"));
+        // Ticket waits are attributed to the phase that blocked on them.
+        assert!(io.get("write").wait_nanos > 0, "sync writes block on their tickets");
+        assert!(io.report().contains("io wait"));
         io.reset();
         assert_eq!(io.get("write").bytes_written, 0);
     }

@@ -2,6 +2,7 @@
 
 use super::config::SafsConfig;
 use super::device::SimSsd;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Snapshot of aggregate I/O statistics across the array.
@@ -11,6 +12,12 @@ pub struct IoStats {
     pub bytes_written: u64,
     pub read_reqs: u64,
     pub write_reqs: u64,
+    /// Nanoseconds callers spent blocked in [`crate::safs::IoTicket::wait`]
+    /// — the I/O time that was **not** hidden behind computation.  The
+    /// read-ahead schedulers exist to drive this toward zero while
+    /// `bytes_read` stays constant; [`crate::metrics::PhaseIo`] reports it
+    /// per solver phase as `io wait`.
+    pub wait_nanos: u64,
     /// Per-device bytes (read, written) — used to check striping balance.
     pub per_device: Vec<(u64, u64)>,
 }
@@ -18,6 +25,11 @@ pub struct IoStats {
 impl IoStats {
     pub fn total_bytes(&self) -> u64 {
         self.bytes_read + self.bytes_written
+    }
+
+    /// Seconds spent blocked on ticket waits (see [`IoStats::wait_nanos`]).
+    pub fn wait_secs(&self) -> f64 {
+        self.wait_nanos as f64 * 1e-9
     }
 
     /// Max/mean ratio of per-device traffic: 1.0 = perfectly balanced.
@@ -42,6 +54,7 @@ impl IoStats {
         self.bytes_written += other.bytes_written;
         self.read_reqs += other.read_reqs;
         self.write_reqs += other.write_reqs;
+        self.wait_nanos += other.wait_nanos;
         if self.per_device.len() < other.per_device.len() {
             self.per_device.resize(other.per_device.len(), (0, 0));
         }
@@ -58,6 +71,7 @@ impl IoStats {
             bytes_written: self.bytes_written - earlier.bytes_written,
             read_reqs: self.read_reqs - earlier.read_reqs,
             write_reqs: self.write_reqs - earlier.write_reqs,
+            wait_nanos: self.wait_nanos - earlier.wait_nanos,
             per_device: self
                 .per_device
                 .iter()
@@ -71,12 +85,15 @@ impl IoStats {
 pub struct SsdArray {
     pub cfg: SafsConfig,
     pub devices: Vec<Arc<SimSsd>>,
+    /// Aggregate ticket-wait sink: every [`crate::safs::IoTicket`] issued
+    /// against this array adds its blocked-wait nanoseconds here.
+    pub(crate) wait_nanos: Arc<AtomicU64>,
 }
 
 impl SsdArray {
     pub fn new(cfg: SafsConfig) -> SsdArray {
         let devices = (0..cfg.num_ssds).map(|i| Arc::new(SimSsd::new(i))).collect();
-        SsdArray { cfg, devices }
+        SsdArray { cfg, devices, wait_nanos: Arc::new(AtomicU64::new(0)) }
     }
 
     pub fn device(&self, i: usize) -> &Arc<SimSsd> {
@@ -94,6 +111,7 @@ impl SsdArray {
             bytes_written: per_device.iter().map(|(_, w)| w).sum(),
             read_reqs: self.devices.iter().map(|d| d.stats.read_reqs.get()).sum(),
             write_reqs: self.devices.iter().map(|d| d.stats.write_reqs.get()).sum(),
+            wait_nanos: self.wait_nanos.load(Ordering::Relaxed),
             per_device,
         }
     }

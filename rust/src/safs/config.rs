@@ -51,6 +51,16 @@ pub struct SafsConfig {
     /// blocking wakeup; the paper's Fig. 9 shows this overhead matters at
     /// 10 GB/s.
     pub ctx_switch_cost: f64,
+    /// Read-ahead depth of the SpMM engines (§3.2/§3.3.3): how many SEM
+    /// tile-row-image reads each worker keeps in flight ahead of the one
+    /// it is computing, for both the eager engine's partition pipeline
+    /// and the streamed boundary's interval scheduler
+    /// ([`crate::spmm::stream`]).  `0` disables read-ahead entirely —
+    /// every image read is issued and awaited synchronously (the
+    /// differential-testing baseline); scheduling only moves *when*
+    /// bytes are read, never *what* is computed, so results and total
+    /// bytes are identical at every depth.  CLI: `--read-ahead`.
+    pub read_ahead: usize,
 }
 
 impl Default for SafsConfig {
@@ -69,6 +79,7 @@ impl Default for SafsConfig {
             throttle: true,
             io_scale: 1.0,
             ctx_switch_cost: 15e-6,
+            read_ahead: 2,
         }
     }
 }
@@ -113,6 +124,15 @@ mod tests {
         // 24 * 500MB/s = 12GB/s aggregate read as in §4.
         assert!((c.aggregate_read_bps() - 12.0e9).abs() < 1e6);
         assert!((c.aggregate_write_bps() - 10.08e9).abs() < 1e7);
+    }
+
+    #[test]
+    fn read_ahead_defaults_to_two() {
+        // The shared tunable both SpMM paths consume: N reads in flight
+        // beyond the one being computed (supersedes the eager engine's
+        // historical hardcoded PREFETCH_DEPTH queue).
+        assert_eq!(SafsConfig::default().read_ahead, 2);
+        assert_eq!(SafsConfig::untimed().read_ahead, 2);
     }
 
     #[test]

@@ -161,6 +161,12 @@ pub fn build_matrix_opts(
     let has_values = coo.values.is_some();
     let mut image: Vec<u8> = Vec::new(); // used for Mem target
     let mut index: Vec<TileRowMeta> = Vec::with_capacity(num_tile_rows);
+    // The in-RAM tile-column index extension (one u32 per tile): the
+    // streamed read-ahead scheduler derives demand schedules from it
+    // without touching the (possibly SEM) image.
+    let mut col_offsets: Vec<usize> = Vec::with_capacity(num_tile_rows + 1);
+    let mut col_ids: Vec<u32> = Vec::new();
+    col_offsets.push(0);
     let mut offset = 0u64;
 
     let file = match &target {
@@ -204,6 +210,8 @@ pub fn build_matrix_opts(
             );
             tiles.push((tile_col as u32, payload));
         }
+        col_ids.extend(tiles.iter().map(|(c, _)| *c));
+        col_offsets.push(col_ids.len());
         let row_image = assemble_tile_row(&tiles);
         let len = row_image.len() as u32;
         match (&target, &file) {
@@ -228,6 +236,8 @@ pub fn build_matrix_opts(
         tile_dim,
         has_values,
         index,
+        col_offsets,
+        col_ids,
         storage,
     }
 }
@@ -297,6 +307,22 @@ mod tests {
         assert_eq!(m.to_triples().len(), coo.nnz());
         // The image actually went to the array.
         assert!(fs.stats().bytes_written as usize >= m.storage_bytes() as usize);
+    }
+
+    #[test]
+    fn col_index_matches_image_structure() {
+        let mut rng = Rng::new(9);
+        let coo = random_coo(&mut rng, 300, 1500, false);
+        let m = build_matrix(&coo, 32, BuildTarget::Mem);
+        assert_eq!(m.col_offsets.len(), m.num_tile_rows() + 1);
+        let mut buf = Vec::new();
+        for tr in 0..m.num_tile_rows() {
+            m.read_tile_row(tr, &mut buf);
+            let from_image: Vec<u32> =
+                crate::sparse::TileRowView::new(&buf, m.has_values).map(|(c, _)| c).collect();
+            assert_eq!(m.tile_cols(tr), &from_image[..], "tile row {tr}");
+            assert!(m.tile_cols(tr).windows(2).all(|w| w[0] < w[1]), "ascending");
+        }
     }
 
     #[test]

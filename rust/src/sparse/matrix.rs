@@ -42,12 +42,27 @@ pub struct SparseMatrix {
     /// One entry per tile row; kept in RAM during multiplication (§3.3.1:
     /// "the matrix index requires a very small storage size").
     pub index: Vec<TileRowMeta>,
+    /// Matrix-index extension: per-tile-row tile-column ids, ascending,
+    /// flat (`col_offsets[tr]..col_offsets[tr + 1]` indexes `col_ids`).
+    /// One `u32` per *tile* — the same order of magnitude as the §3.3.1
+    /// index itself.  The streamed subsystem's read-ahead scheduler uses
+    /// it to know the tile structure (which input intervals a tile row
+    /// touches, which hop-1 intervals a transposed walk will demand)
+    /// without reading a SEM image from SAFS.
+    pub col_offsets: Vec<usize>,
+    pub col_ids: Vec<u32>,
     pub storage: Storage,
 }
 
 impl SparseMatrix {
     pub fn num_tile_rows(&self) -> usize {
         self.index.len()
+    }
+
+    /// Ascending tile-column ids of tile row `tr` (from the in-RAM matrix
+    /// index extension — no image I/O).
+    pub fn tile_cols(&self, tr: usize) -> &[u32] {
+        &self.col_ids[self.col_offsets[tr]..self.col_offsets[tr + 1]]
     }
 
     /// Total bytes of the tile image.

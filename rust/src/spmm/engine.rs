@@ -7,8 +7,10 @@
 //!   within a partition — so the input rows of a tile column stay in
 //!   cache across the partition's tile rows.
 //! * Semi-external memory: each worker streams its partitions from SAFS
-//!   asynchronously, keeping `PREFETCH_DEPTH` partitions in flight and
-//!   overlapping I/O with multiplication.
+//!   asynchronously, keeping [`crate::safs::SafsConfig::read_ahead`]
+//!   partitions in flight and overlapping I/O with multiplication (the
+//!   same tunable drives the streamed boundary's interval scheduler in
+//!   [`crate::spmm::stream`]; depth 0 degenerates to synchronous reads).
 
 use super::dense_block::{DenseBlock, SharedMut};
 use super::kernel::multiply_tile;
@@ -19,10 +21,6 @@ use crate::sparse::{SparseMatrix, TileRowView};
 use crate::util::threadpool::OwnedQueues;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-
-/// Partitions each worker keeps in flight in SEM mode (compute the head
-/// while the tail is being read).
-const PREFETCH_DEPTH: usize = 2;
 
 #[derive(Debug, Default, Clone)]
 pub struct SpmmRunStats {
@@ -92,12 +90,19 @@ pub fn spmm(
                         }
                     }
                     Some((fs, file)) => {
-                        // Semi-external: pipelined async reads.
+                        // Semi-external: pipelined async reads.  The
+                        // worker keeps `read_ahead` partition reads in
+                        // flight BEYOND the one it is computing (the
+                        // same depth semantics as the streamed
+                        // scheduler); depth 0 means the single
+                        // outstanding request is awaited immediately —
+                        // the synchronous differential-testing baseline.
+                        let depth = fs.cfg().read_ahead + 1;
                         let mut pool = BufferPool::new(fs.cfg().use_buffer_pool);
                         let mut pending: VecDeque<(usize, crate::safs::IoTicket)> =
                             VecDeque::new();
                         loop {
-                            while pending.len() < PREFETCH_DEPTH {
+                            while pending.len() < depth {
                                 match pop(queues) {
                                     Some(pi) => {
                                         if !(own.0 <= pi && pi < own.1) {
@@ -395,6 +400,35 @@ mod tests {
         let delta = fs.stats().delta_since(&before);
         assert_eq!(delta.bytes_read, m.storage_bytes());
         assert_eq!(delta.bytes_written, 0, "SpMM must not write to SSDs");
+    }
+
+    #[test]
+    fn sem_read_ahead_depths_are_bitwise_identical_at_equal_bytes() {
+        // Scheduling moves *when* bytes are read, never *what* is
+        // computed: every depth yields the same bits and the same totals.
+        let mut rng = Rng::new(26);
+        let coo = random_graph(&mut rng, 900, 7000, true);
+        let mut reference: Option<(Vec<f64>, u64)> = None;
+        for depth in [0usize, 2, 8] {
+            let mut cfg = SafsConfig::untimed();
+            cfg.read_ahead = depth;
+            let fs = Safs::new(cfg);
+            let m = build_matrix_opts(&coo, 64, BuildTarget::Safs(&fs, "m"), true);
+            let input = DenseBlock::from_fn(900, 3, 64, true, |r, c| {
+                ((r * 5 + c) % 23) as f64 - 11.0
+            });
+            let mut output = DenseBlock::new(900, 3, 64, true);
+            let before = fs.stats();
+            spmm(&m, &input, &mut output, &SpmmOpts::default(), 3);
+            let bytes = fs.stats().delta_since(&before).bytes_read;
+            match &reference {
+                None => reference = Some((output.to_vec(), bytes)),
+                Some((vals, b0)) => {
+                    assert_eq!(&output.to_vec(), vals, "depth {depth} changed bits");
+                    assert_eq!(bytes, *b0, "depth {depth} changed total bytes");
+                }
+            }
+        }
     }
 
     #[test]

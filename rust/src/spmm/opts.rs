@@ -5,6 +5,14 @@
 //! +vectorization → +local write buffer → +SCSR/COO hybrid.  Each flag
 //! here can be toggled independently; [`SpmmOpts::stages`] returns the
 //! cumulative sequence used by the Fig. 6 bench.
+//!
+//! The SEM **read-ahead depth** is deliberately *not* an [`SpmmOpts`]
+//! flag: it lives in [`crate::safs::SafsConfig::read_ahead`] (CLI
+//! `--read-ahead`, default 2 = two reads in flight beyond the one
+//! being computed, superseding the engine's historical hardcoded
+//! prefetch queue) so the eager partition pipeline and the streamed
+//! interval scheduler of [`crate::spmm::stream`] share one tunable —
+//! with one meaning — through the filesystem they both read from.
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SpmmOpts {

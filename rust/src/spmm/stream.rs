@@ -1,4 +1,5 @@
-//! The streaming SpMM operator boundary (§3.4 ConvLayout fusion).
+//! The streaming SpMM operator boundary (§3.4 ConvLayout fusion) and its
+//! asynchronous read-ahead scheduler (§3.2/§3.3.3 I/O–compute overlap).
 //!
 //! The eager operator path materializes three full-height dense matrices
 //! per `A·X`: ConvLayout copies the whole column-major input into a
@@ -37,6 +38,54 @@
 //! solver's expansion step; the pull contract and staging bound are
 //! documented on each type below.
 //!
+//! # The read-ahead scheduler
+//!
+//! SEM tile-row images are read through a per-apply scheduler (the
+//! internal `ImagePrefetcher`) instead of synchronous
+//! issue-and-wait reads, restoring the paper's I/O/compute overlap on
+//! the streamed path (the eager engine pipelines its partition reads
+//! the same way).  Its contract:
+//!
+//! * **What may be in flight.**  Each output interval's tile rows are
+//!   one contiguous byte range (precomputed from the in-RAM §3.3.1
+//!   matrix index).  A *sequential* scheduler (the hop-2/output walks,
+//!   whose interval order is known up front from the walk schedule:
+//!   each pipeline worker consumes an ascending range of intervals)
+//!   keeps up to [`crate::safs::SafsConfig::read_ahead`] interval reads
+//!   in flight beyond the one being multiplied, issued from the
+//!   consuming worker as it acquires its current interval.  A
+//!   *demand-driven* scheduler (hop 1 of a chained apply) issues reads
+//!   only for intervals that are **guaranteed to be consumed**: the
+//!   next never-yet-computed intervals in first-demand order (derived
+//!   from the tile-column structure), at most `read_ahead` ahead.
+//! * **Ordering/release guarantees.**  Every issued read is consumed by
+//!   exactly one later acquire (a prefetch is admitted only for a slot
+//!   that is idle and provably demanded later), so scheduling changes
+//!   *when* bytes move, never *how many*: total SAFS bytes are
+//!   identical at every depth, and depth 0 reproduces the synchronous
+//!   baseline request-for-request.  Buffers come from per-worker
+//!   [`BufferPool`]s (§3.2) and are released back as soon as the
+//!   interval's multiply finishes.
+//! * **Results are bitwise depth-invariant.**  The multiply consumes
+//!   the same bytes in the same order whatever the depth; read-ahead
+//!   only hides latency (visible as lower `io_wait` in
+//!   [`crate::metrics::PhaseIo`] at equal bytes).
+//!
+//! # Staging eviction and the re-read schedule
+//!
+//! [`StagedIntermediate`] evicts by **next-use distance** computed from
+//! `Aᵀ`'s tile structure (via the in-RAM tile-column index of `A`)
+//! instead of LRU: the victim is the unheld resident interval whose
+//! next demanding hop-2 output interval lies farthest in the walk.
+//! When the two hops use different tile dimensions the demand schedule
+//! cannot be derived and eviction falls back to LRU.  A SEM-backed
+//! first hop no longer requires the whole intermediate to fit the ring:
+//! the same demand schedule is replayed at construction to *model* the
+//! image bytes that ring-pressure recomputes would re-read, and the
+//! apply streams whenever that modeled total stays at or below the
+//! eager fallback's one-full-image read; beyond that, eager remains the
+//! fallback.
+//!
 //! # Example (in-memory)
 //!
 //! A streamed `A·x` whose output intervals flow through a
@@ -69,10 +118,10 @@ use super::dense_block::{colmajor_to_rowmajor, rowmajor_to_colmajor};
 use super::engine::multiply_rows_from_source;
 use crate::dense::{DenseCtx, IntervalProducer, TasMatrix};
 use crate::metrics::MemGuard;
-use crate::safs::BufferPool;
+use crate::safs::{BufferPool, FileHandle, IoTicket, Safs};
 use crate::sparse::SparseMatrix;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// A source of **row-major input rows by tile column** for a streamed
@@ -98,6 +147,282 @@ pub trait TileInput: Sync {
     /// first touch).
     fn interval_arc(&self, iv: usize) -> Arc<Vec<f64>>;
 }
+
+// ------------------------------------------------------------------------
+// Per-worker buffer pools + the SEM image read-ahead scheduler
+// ------------------------------------------------------------------------
+
+/// Per-worker I/O buffer pools (§3.2) for the streamed subsystem's image
+/// reads.  Concurrent workers land on distinct pools (first uncontended
+/// pool starting from a deterministic hint), so `get`/`put` are
+/// effectively lock-free under the walk's worker count.
+struct WorkerPools {
+    pools: Vec<Mutex<BufferPool>>,
+}
+
+impl WorkerPools {
+    fn new(workers: usize, enabled: bool) -> WorkerPools {
+        WorkerPools {
+            pools: (0..workers.max(1)).map(|_| Mutex::new(BufferPool::new(enabled))).collect(),
+        }
+    }
+
+    fn get(&self, hint: usize, len: usize) -> Vec<u8> {
+        let n = self.pools.len();
+        for d in 0..n {
+            if let Ok(mut p) = self.pools[(hint + d) % n].try_lock() {
+                return p.get(len);
+            }
+        }
+        self.pools[hint % n].lock().unwrap().get(len)
+    }
+
+    fn put(&self, hint: usize, buf: Vec<u8>) {
+        let n = self.pools.len();
+        for d in 0..n {
+            if let Ok(mut p) = self.pools[(hint + d) % n].try_lock() {
+                p.put(buf);
+                return;
+            }
+        }
+        self.pools[hint % n].lock().unwrap().put(buf);
+    }
+}
+
+/// Contiguous image byte range of each row interval's tile rows,
+/// computed from the in-RAM §3.3.1 matrix index (`None`: the interval
+/// has no tile rows).
+fn interval_image_ranges(
+    matrix: &SparseMatrix,
+    interval_rows: usize,
+) -> Vec<Option<(u64, usize)>> {
+    let td = matrix.tile_dim;
+    let n_rows = matrix.n_rows as usize;
+    let n_iv = n_rows.max(1).div_ceil(interval_rows);
+    (0..n_iv)
+        .map(|iv| {
+            let row_base = iv * interval_rows;
+            let rows = interval_rows.min(n_rows - row_base);
+            let tr0 = row_base / td;
+            let tr1 = (row_base + rows).div_ceil(td).min(matrix.num_tile_rows());
+            if tr0 >= tr1 {
+                return None;
+            }
+            let base = matrix.index[tr0].offset;
+            let last = matrix.index[tr1 - 1];
+            Some((base, (last.offset + last.len as u64 - base) as usize))
+        })
+        .collect()
+}
+
+/// One interval's image-read slot in the scheduler.
+enum ImageSlot {
+    /// No read issued (or a consumed slot of a demand-driven scheduler
+    /// that was explicitly re-armed for a recompute).
+    Idle,
+    /// Read submitted; the ticket completes asynchronously.
+    InFlight(IoTicket),
+    /// Bytes handed to a consumer.  A sequential scheduler never leaves
+    /// this state; a demand-driven one re-issues synchronously on a
+    /// recompute.
+    Consumed,
+}
+
+/// The read-ahead scheduler for one matrix's SEM tile-row images, keyed
+/// by row interval.  See the module docs ("The read-ahead scheduler")
+/// for the full contract; in short: every issued read is consumed by
+/// exactly one acquire, so total bytes are depth-invariant, and depth 0
+/// degenerates to the synchronous issue-and-wait baseline.
+struct ImagePrefetcher {
+    fs: Arc<Safs>,
+    file: FileHandle,
+    ranges: Vec<Option<(u64, usize)>>,
+    slots: Vec<Mutex<ImageSlot>>,
+    depth: usize,
+    /// Sequential walks (output intervals in per-worker ascending
+    /// ranges) top up `iv+1..=iv+depth` on every acquire; demand-driven
+    /// users (hop 1) rely on explicit [`ImagePrefetcher::prefetch`].
+    sequential: bool,
+    pools: WorkerPools,
+}
+
+impl ImagePrefetcher {
+    /// Build a scheduler for `matrix`'s image, or `None` when the image
+    /// is in memory (nothing to read).  `depth` comes from
+    /// [`crate::safs::SafsConfig::read_ahead`] of the matrix's own
+    /// filesystem.
+    fn for_matrix(
+        matrix: &SparseMatrix,
+        interval_rows: usize,
+        workers: usize,
+        sequential: bool,
+    ) -> Option<ImagePrefetcher> {
+        let (fs, file) = matrix.safs_handle()?;
+        let ranges = interval_image_ranges(matrix, interval_rows);
+        let slots = (0..ranges.len()).map(|_| Mutex::new(ImageSlot::Idle)).collect();
+        Some(ImagePrefetcher {
+            fs: fs.clone(),
+            file: file.clone(),
+            depth: fs.cfg().read_ahead,
+            sequential,
+            slots,
+            ranges,
+            pools: WorkerPools::new(workers, fs.cfg().use_buffer_pool),
+        })
+    }
+
+    /// Image bytes of interval `iv`'s tile rows (0 when empty).
+    fn range_bytes(&self, iv: usize) -> u64 {
+        self.ranges[iv].map_or(0, |(_, len)| len as u64)
+    }
+
+    /// Start the read for `iv` if its slot is idle.  A no-op on
+    /// in-flight or consumed slots, so a prefetch can never duplicate a
+    /// read — callers only prefetch intervals that a later acquire is
+    /// guaranteed to consume.
+    fn prefetch(&self, iv: usize) {
+        if self.depth == 0 || iv >= self.slots.len() {
+            return;
+        }
+        let Some((off, len)) = self.ranges[iv] else { return };
+        let mut slot = self.slots[iv].lock().unwrap();
+        if matches!(*slot, ImageSlot::Idle) {
+            let buf = self.pools.get(iv, len);
+            *slot = ImageSlot::InFlight(self.fs.read_async(self.file.clone(), off, buf));
+        }
+    }
+
+    /// Hand over interval `iv`'s image bytes, blocking only for whatever
+    /// part of the transfer is still outstanding.  On a sequential walk
+    /// the next `depth` intervals are issued first, so their transfers
+    /// overlap this interval's multiply.  Returns `None` for an empty
+    /// interval.
+    fn acquire(&self, iv: usize) -> Option<Vec<u8>> {
+        let (off, len) = self.ranges[iv]?;
+        {
+            let mut slot = self.slots[iv].lock().unwrap();
+            if matches!(*slot, ImageSlot::Idle | ImageSlot::Consumed) {
+                let buf = self.pools.get(iv, len);
+                *slot = ImageSlot::InFlight(self.fs.read_async(self.file.clone(), off, buf));
+            }
+        }
+        if self.sequential {
+            for j in iv + 1..self.slots.len().min(iv + 1 + self.depth) {
+                self.prefetch(j);
+            }
+        }
+        let state = std::mem::replace(&mut *self.slots[iv].lock().unwrap(), ImageSlot::Consumed);
+        match state {
+            ImageSlot::InFlight(t) => Some(t.wait()),
+            // Unreachable: the block above put this slot in flight and
+            // each interval has exactly one consumer at a time.
+            _ => unreachable!("image slot consumed twice"),
+        }
+    }
+
+    /// Return a consumed interval's buffer to the per-worker pools.
+    fn release(&self, hint: usize, buf: Vec<u8>) {
+        self.pools.put(hint, buf);
+    }
+}
+
+// ------------------------------------------------------------------------
+// The interval multiply shared by every streamed producer
+// ------------------------------------------------------------------------
+
+/// Multiply the tile rows covering output interval `iv` against `input`,
+/// returning the interval's row-major `rows × b` product.  Output
+/// interval geometry is `interval_rows` rows per interval and must be
+/// tile-aligned; SEM tile-row images arrive through the read-ahead
+/// scheduler (`images`, `None` for an in-memory image).
+fn interval_product_rowmajor(
+    matrix: &SparseMatrix,
+    input: &dyn TileInput,
+    images: Option<&ImagePrefetcher>,
+    iv: usize,
+    rows: usize,
+    interval_rows: usize,
+    b: usize,
+    vectorize: bool,
+) -> Vec<f64> {
+    let td = matrix.tile_dim;
+    let row_base = iv * interval_rows;
+    debug_assert!(row_base % td == 0, "interval not tile-aligned");
+    let tr0 = row_base / td;
+    let tr1 = (row_base + rows).div_ceil(td).min(matrix.num_tile_rows());
+    let mut out = vec![0.0; rows * b];
+    match images {
+        None => {
+            let images: Vec<&[u8]> = (tr0..tr1)
+                .map(|tr| matrix.tile_row_mem(tr).unwrap())
+                .collect();
+            multiply_rows_from_source(matrix, &images, input, &mut out, b, vectorize);
+        }
+        Some(pref) => {
+            if let Some(buf) = pref.acquire(iv) {
+                let base = matrix.index[tr0].offset;
+                let views: Vec<&[u8]> = (tr0..tr1)
+                    .map(|tr| {
+                        let m = matrix.index[tr];
+                        let s = (m.offset - base) as usize;
+                        &buf[s..s + m.len as usize]
+                    })
+                    .collect();
+                multiply_rows_from_source(matrix, &views, input, &mut out, b, vectorize);
+                pref.release(iv, buf);
+            }
+        }
+    }
+    out
+}
+
+/// The shared [`IntervalProducer::produce`] body of the streamed
+/// multiplies: the interval's row-major product (working buffers
+/// registered with `mem` for the §3.4.3 peak accounting) handed back
+/// column-major — the output ConvLayout fused into the
+/// transpose-on-return.  The consuming pipeline registers the returned
+/// buffer itself.
+#[allow(clippy::too_many_arguments)]
+fn produce_colmajor(
+    matrix: &SparseMatrix,
+    input: &dyn TileInput,
+    images: Option<&ImagePrefetcher>,
+    mem: &crate::metrics::MemTracker,
+    iv: usize,
+    rows: usize,
+    interval_rows: usize,
+    b: usize,
+    vectorize: bool,
+) -> Vec<f64> {
+    // Row-major accumulation buffer for this interval only.
+    let _g = MemGuard::new(mem, (rows * b * 8) as u64);
+    let out =
+        interval_product_rowmajor(matrix, input, images, iv, rows, interval_rows, b, vectorize);
+    let _g2 = MemGuard::new(mem, (rows * b * 8) as u64);
+    let mut cm = vec![0.0; rows * b];
+    rowmajor_to_colmajor(&out, rows, b, &mut cm);
+    cm
+}
+
+/// Tile-column location shared by every [`TileInput`]: `(interval, row
+/// offset within it, row count)` for tile column `tc` of an input with
+/// `n_rows` rows split into `interval_rows`-row intervals.
+fn locate_tile(
+    tc: usize,
+    tile_dim: usize,
+    interval_rows: usize,
+    n_rows: usize,
+) -> (usize, usize, usize) {
+    let start = tc * tile_dim;
+    let iv = start / interval_rows;
+    let off = start - iv * interval_rows;
+    let len = tile_dim.min(n_rows - start);
+    (iv, off, len)
+}
+
+// ------------------------------------------------------------------------
+// InputGather
+// ------------------------------------------------------------------------
 
 /// Interval-sourced SpMM input: lazily gathers row-major tile-column
 /// rows from a column-major TAS matrix, loading each TAS interval from
@@ -167,110 +492,20 @@ impl Drop for InputGather<'_> {
     }
 }
 
-/// Multiply the tile rows covering output interval `iv` against `input`,
-/// returning the interval's row-major `rows × b` product.  Output
-/// interval geometry is `interval_rows` rows per interval and must be
-/// tile-aligned; SEM tile-row images are fetched in one contiguous
-/// request per interval through `image_pool`.
-fn interval_product_rowmajor(
-    matrix: &SparseMatrix,
-    input: &dyn TileInput,
-    image_pool: &Mutex<BufferPool>,
-    iv: usize,
-    rows: usize,
-    interval_rows: usize,
-    b: usize,
-    vectorize: bool,
-) -> Vec<f64> {
-    let td = matrix.tile_dim;
-    let row_base = iv * interval_rows;
-    debug_assert!(row_base % td == 0, "interval not tile-aligned");
-    let tr0 = row_base / td;
-    let tr1 = (row_base + rows).div_ceil(td).min(matrix.num_tile_rows());
-    let mut out = vec![0.0; rows * b];
-    match matrix.safs_handle() {
-        None => {
-            let images: Vec<&[u8]> = (tr0..tr1)
-                .map(|tr| matrix.tile_row_mem(tr).unwrap())
-                .collect();
-            multiply_rows_from_source(matrix, &images, input, &mut out, b, vectorize);
-        }
-        Some((fs, file)) => {
-            if tr0 < tr1 {
-                // One contiguous read covering the interval's tile rows —
-                // each tile row is read exactly once per pass over the
-                // output intervals (intervals partition the rows).
-                let base = matrix.index[tr0].offset;
-                let last = matrix.index[tr1 - 1];
-                let len = (last.offset + last.len as u64 - base) as usize;
-                let buf = {
-                    let mut pool = image_pool.lock().unwrap();
-                    pool.get(len)
-                };
-                let buf = fs.read_async(file.clone(), base, buf).wait();
-                let images: Vec<&[u8]> = (tr0..tr1)
-                    .map(|tr| {
-                        let m = matrix.index[tr];
-                        let s = (m.offset - base) as usize;
-                        &buf[s..s + m.len as usize]
-                    })
-                    .collect();
-                multiply_rows_from_source(matrix, &images, input, &mut out, b, vectorize);
-                image_pool.lock().unwrap().put(buf);
-            }
-        }
-    }
-    out
-}
-
-/// The shared [`IntervalProducer::produce`] body of the streamed
-/// multiplies: the interval's row-major product (working buffers
-/// registered with `mem` for the §3.4.3 peak accounting) handed back
-/// column-major — the output ConvLayout fused into the
-/// transpose-on-return.  The consuming pipeline registers the returned
-/// buffer itself.
-fn produce_colmajor(
-    matrix: &SparseMatrix,
-    input: &dyn TileInput,
-    image_pool: &Mutex<BufferPool>,
-    mem: &crate::metrics::MemTracker,
-    iv: usize,
-    rows: usize,
-    interval_rows: usize,
-    b: usize,
-    vectorize: bool,
-) -> Vec<f64> {
-    // Row-major accumulation buffer for this interval only.
-    let _g = MemGuard::new(mem, (rows * b * 8) as u64);
-    let out =
-        interval_product_rowmajor(matrix, input, image_pool, iv, rows, interval_rows, b, vectorize);
-    let _g2 = MemGuard::new(mem, (rows * b * 8) as u64);
-    let mut cm = vec![0.0; rows * b];
-    rowmajor_to_colmajor(&out, rows, b, &mut cm);
-    cm
-}
-
-/// Tile-column location shared by every [`TileInput`]: `(interval, row
-/// offset within it, row count)` for tile column `tc` of an input with
-/// `n_rows` rows split into `interval_rows`-row intervals.
-fn locate_tile(
-    tc: usize,
-    tile_dim: usize,
-    interval_rows: usize,
-    n_rows: usize,
-) -> (usize, usize, usize) {
-    let start = tc * tile_dim;
-    let iv = start / interval_rows;
-    let off = start - iv * interval_rows;
-    let len = tile_dim.min(n_rows - start);
-    (iv, off, len)
-}
+// ------------------------------------------------------------------------
+// StreamedSpmm
+// ------------------------------------------------------------------------
 
 /// Pull-mode streamed `A·X`: produces one column-major output row
 /// interval per [`IntervalProducer::produce`] call, multiplying the
 /// interval's tile rows against the [`InputGather`].  Hand it to
 /// [`crate::dense::FusedPipeline::source`] so the SpMM output feeds the
-/// consuming walk directly.
+/// consuming walk directly.  A SEM-backed image streams through the
+/// module's read-ahead scheduler: each worker keeps
+/// [`crate::safs::SafsConfig::read_ahead`] tile-row-image reads in
+/// flight beyond the interval it is multiplying (the walk order is
+/// known up front — every pipeline worker consumes an ascending range
+/// of output intervals), so the head computes while the tail transfers.
 pub struct StreamedSpmm<'a> {
     matrix: &'a SparseMatrix,
     gather: InputGather<'a>,
@@ -278,8 +513,8 @@ pub struct StreamedSpmm<'a> {
     interval_rows: usize,
     b: usize,
     vectorize: bool,
-    /// Pool for SEM tile-row image reads.
-    image_pool: Mutex<BufferPool>,
+    /// Read-ahead scheduler for SEM tile-row images (None: in-memory).
+    images: Option<ImagePrefetcher>,
 }
 
 impl<'a> StreamedSpmm<'a> {
@@ -298,14 +533,14 @@ impl<'a> StreamedSpmm<'a> {
         if input.interval_rows() % matrix.tile_dim != 0 {
             return None;
         }
-        let use_pool = input.ctx().fs.cfg().use_buffer_pool;
+        let workers = input.ctx().threads;
         Some(StreamedSpmm {
             matrix,
             gather: InputGather::new(input),
             interval_rows: input.interval_rows(),
             b: input.n_cols,
             vectorize,
-            image_pool: Mutex::new(BufferPool::new(use_pool)),
+            images: ImagePrefetcher::for_matrix(matrix, input.interval_rows(), workers, true),
         })
     }
 
@@ -325,7 +560,7 @@ impl IntervalProducer for StreamedSpmm<'_> {
         produce_colmajor(
             self.matrix,
             &self.gather,
-            &self.image_pool,
+            self.images.as_ref(),
             &self.gather.mat.ctx().mem,
             iv,
             rows,
@@ -336,24 +571,216 @@ impl IntervalProducer for StreamedSpmm<'_> {
     }
 }
 
+// ------------------------------------------------------------------------
+// The hop-2 demand schedule (locality-aware staging + re-read model)
+// ------------------------------------------------------------------------
+
+/// The hop-2 demand schedule of a chained two-hop apply, derived from
+/// `A`'s in-RAM tile-column index ([`SparseMatrix::tile_cols`]) —
+/// **zero image I/O**.  It lists, in exactly the order the multiply
+/// loop's interval-handle cache will request them, which hop-1
+/// (`M = A·X`) intervals the walk over `Aᵀ` demands.  Valid when both
+/// hops share one tile dimension (then `Aᵀ` has a tile at `(t, r)` iff
+/// `A` has one at `(r, t)`) and `at` is the transpose of `a` — the only
+/// configuration [`crate::eigen::GramOperator`] builds.
+struct DemandSchedule {
+    /// `(hop-2 output interval, M interval)` in demand order.
+    seq: Vec<(u32, u32)>,
+    /// Per M interval: ascending distinct hop-2 output intervals that
+    /// touch it — the next-use index for locality-aware eviction.
+    uses: Vec<Vec<u32>>,
+    /// M intervals in order of first demand (the hop-1 prefetch order).
+    first_touch: Vec<u32>,
+}
+
+impl DemandSchedule {
+    fn build(a: &SparseMatrix, interval_rows: usize) -> DemandSchedule {
+        let td = a.tile_dim;
+        let n_m = (a.n_rows as usize).max(1).div_ceil(interval_rows);
+        let n_out = (a.n_cols as usize).max(1).div_ceil(interval_rows);
+        let at_tile_rows = (a.n_cols as usize).max(1).div_ceil(td);
+        // Invert A's per-tile-row column lists: per Aᵀ tile row (= A
+        // tile column), the ascending A tile rows with a tile there.
+        let mut at_rows: Vec<Vec<u32>> = vec![Vec::new(); at_tile_rows];
+        for tr in 0..a.num_tile_rows() {
+            for &tc in a.tile_cols(tr) {
+                at_rows[tc as usize].push(tr as u32);
+            }
+        }
+        let per_out = interval_rows / td;
+        let mut seq = Vec::new();
+        let mut uses: Vec<Vec<u32>> = vec![Vec::new(); n_m];
+        let mut first_touch = Vec::new();
+        let mut touched = vec![false; n_m];
+        for out in 0..n_out as u32 {
+            // The multiply loop's interval-handle cache lives for one
+            // produce() call: consecutive equal demands collapse within
+            // an output interval, and reset across them.
+            let mut prev: Option<u32> = None;
+            let t0 = out as usize * per_out;
+            for t in t0..(t0 + per_out).min(at_tile_rows) {
+                for &r in &at_rows[t] {
+                    let m = (r as usize * td / interval_rows) as u32;
+                    if prev == Some(m) {
+                        continue;
+                    }
+                    prev = Some(m);
+                    seq.push((out, m));
+                    if uses[m as usize].last() != Some(&out) {
+                        uses[m as usize].push(out);
+                    }
+                    if !touched[m as usize] {
+                        touched[m as usize] = true;
+                        first_touch.push(m);
+                    }
+                }
+            }
+        }
+        DemandSchedule { seq, uses, first_touch }
+    }
+
+    /// First hop-2 output interval after `out` that demands `m` again
+    /// (`u64::MAX`: never — the ideal eviction victim).
+    fn next_use(uses: &[u32], out: u32) -> u64 {
+        let p = uses.partition_point(|&u| u <= out);
+        if p < uses.len() {
+            uses[p] as u64
+        } else {
+            u64::MAX
+        }
+    }
+
+    /// The walk's **window**: the largest number of distinct M intervals
+    /// (and their summed image bytes) any single hop-2 output interval
+    /// demands.  The concurrent-admission rule sizes the ring against
+    /// `workers` simultaneous windows.
+    fn window(&self, iv_image_bytes: &[u64]) -> (usize, u64) {
+        let (mut max_n, mut max_b) = (0usize, 0u64);
+        let mut i = 0;
+        while i < self.seq.len() {
+            let out = self.seq[i].0;
+            let mut seen: Vec<u32> = Vec::new();
+            let mut bytes = 0u64;
+            while i < self.seq.len() && self.seq[i].0 == out {
+                let m = self.seq[i].1;
+                if !seen.contains(&m) {
+                    seen.push(m);
+                    bytes += iv_image_bytes[m as usize];
+                }
+                i += 1;
+            }
+            max_n = max_n.max(seen.len());
+            max_b = max_b.max(bytes);
+        }
+        (max_n, max_b)
+    }
+
+    /// Replay the demand sequence against a `cap`-slot ring with the
+    /// same next-use-distance eviction the runtime uses (protecting the
+    /// demanded interval and the walker's held previous handle), and
+    /// return the image bytes that recomputes of a SEM-backed first hop
+    /// would re-read.  This is the **re-read schedule** that lifts the
+    /// M-fits-the-ring restriction.  The model is exact for an in-order
+    /// single-worker walk; for concurrent walks the gate in
+    /// [`ChainedGramSpmm::new`] additionally requires the ring to hold
+    /// every worker's window (each pipeline worker owns a contiguous
+    /// ascending output range, and eviction distances are measured from
+    /// the *earliest* active walk position, so capacity-fitting windows
+    /// never thrash each other) and budgets one extra window re-load
+    /// per worker-range boundary on top of this model.
+    fn modeled_reread_bytes(&self, cap: usize, iv_image_bytes: &[u64]) -> u64 {
+        let n_m = self.uses.len();
+        let mut resident = vec![false; n_m];
+        let mut n_res = 0usize;
+        let mut computed = vec![false; n_m];
+        let mut reread = 0u64;
+        for (i, &(out, m)) in self.seq.iter().enumerate() {
+            let prev = if i > 0 && self.seq[i - 1].0 == out {
+                Some(self.seq[i - 1].1)
+            } else {
+                None
+            };
+            let mi = m as usize;
+            if resident[mi] {
+                continue;
+            }
+            if computed[mi] {
+                reread += iv_image_bytes[mi];
+            } else {
+                computed[mi] = true;
+            }
+            resident[mi] = true;
+            n_res += 1;
+            while n_res > cap {
+                // Victim: farthest next use; ties (both never demanded
+                // again) break on the LOWER id — the staler window end.
+                let mut victim: Option<(u64, u32)> = None;
+                for (v, &r) in resident.iter().enumerate() {
+                    if !r || v == mi || prev == Some(v as u32) {
+                        continue;
+                    }
+                    let key = (Self::next_use(&self.uses[v], out), v as u32);
+                    let better = victim.map_or(true, |(bn, bi)| {
+                        key.0 > bn || (key.0 == bn && key.1 < bi)
+                    });
+                    if better {
+                        victim = Some(key);
+                    }
+                }
+                match victim {
+                    Some((_, v)) => {
+                        resident[v as usize] = false;
+                        n_res -= 1;
+                    }
+                    None => break, // everything held: transient over-cap
+                }
+            }
+        }
+        reread
+    }
+}
+
+// ------------------------------------------------------------------------
+// StagedIntermediate
+// ------------------------------------------------------------------------
+
+/// Ring-residency bookkeeping: which hop-1 intervals stay cached and who
+/// gets evicted under pressure.
+enum Residency {
+    /// Fallback when no demand schedule is available (the two hops use
+    /// different tile dimensions): least-recently-touched order.
+    Lru(Mutex<VecDeque<usize>>),
+    /// Locality-aware (the default): evict the unheld resident interval
+    /// whose next demanding hop-2 output interval lies farthest in the
+    /// walk, per the [`DemandSchedule`].
+    NextUse { resident: Mutex<Vec<usize>>, uses: Vec<Vec<u32>> },
+}
+
 /// The bounded staging ring between the two hops of a
 /// [`ChainedGramSpmm`]: finished row intervals of the intermediate
 /// `M = A·X`, computed on first touch and held for downstream reuse.
 ///
 /// **Residency bound.**  At most `cap` finished intervals stay cached;
-/// on overflow the least-recently-touched unheld interval is evicted
-/// (an interval is *held* while a worker's multiply loop keeps its
-/// handle; a worker replacing its handle briefly holds the old and the
-/// new one, so the instantaneous bound is `cap` cached plus at most two
-/// in flight per worker).  A re-touched evicted interval is
+/// on overflow an unheld interval is evicted — by **next-use distance**
+/// from `Aᵀ`'s tile structure when the demand schedule is available
+/// (both hops share a tile dimension), by least-recently-touched order
+/// otherwise.  An interval is *held* while a worker's multiply loop
+/// keeps its handle; a worker replacing its handle briefly holds the
+/// old and the new one, so the instantaneous bound is `cap` cached plus
+/// at most two in flight per worker.  A re-touched evicted interval is
 /// recomputed from the resident [`InputGather`] — zero extra reads of
-/// `X`, and pure RAM work because [`ChainedGramSpmm::new`] only admits
-/// eviction pressure when `A`'s image is in memory (a SEM-backed image
-/// streams only when the whole intermediate fits the ring, so nothing
-/// is ever evicted and each tile-row image is read exactly once).
-/// Back-pressure is structural: the first hop is pull-driven, so it
-/// only runs when the second hop demands an interval and the ring has
-/// room for the result.
+/// `X`; a SEM-backed `A` re-reads the recomputed interval's tile-row
+/// images, which the construction-time re-read schedule bounds (see
+/// [`ChainedGramSpmm::new`]).  Back-pressure is structural: the first
+/// hop is pull-driven, so it only runs when the second hop demands an
+/// interval and the ring has room for the result.
+///
+/// **Hop-1 read-ahead.**  When `A` is SEM-backed, a hop-1 miss also
+/// starts the image reads for the next (up to `read_ahead`)
+/// never-yet-computed intervals in first-demand order, hiding their SEM
+/// image latency behind the current interval's multiply.  Only
+/// guaranteed-future computes are prefetched, so total bytes are
+/// unchanged.
 ///
 /// **Determinism.**  Recomputation replays the same tile schedule over
 /// the same gathered input, so every handle for one interval carries
@@ -361,11 +788,25 @@ impl IntervalProducer for StreamedSpmm<'_> {
 pub struct StagedIntermediate<'a> {
     a: &'a SparseMatrix,
     gather: InputGather<'a>,
-    a_pool: Mutex<BufferPool>,
+    /// Read-ahead scheduler for `a`'s SEM tile-row images (None:
+    /// in-memory image — recomputes are pure RAM work).
+    a_images: Option<ImagePrefetcher>,
     /// One slot per interval of `M`; `None` = not resident.
     slots: Vec<Mutex<Option<Arc<Vec<f64>>>>>,
-    /// Resident intervals, least recently touched first.
-    lru: Mutex<VecDeque<usize>>,
+    residency: Residency,
+    /// Hop-1 prefetch order (first-demand order of the M intervals).
+    first_touch: Vec<u32>,
+    ft_cursor: AtomicUsize,
+    /// Set when an interval's first compute begins — the guard that
+    /// keeps hop-1 prefetches to guaranteed-future computes.
+    computed_once: Vec<AtomicBool>,
+    /// Hop-2 output intervals currently being produced (one entry per
+    /// active worker).  Next-use distances are measured from the
+    /// *minimum* — with contiguous ascending per-worker ranges, an
+    /// interval any active or future window still needs stays past the
+    /// earliest walk position, so one worker can never mark another
+    /// worker's upcoming window as dead.
+    active_outs: Mutex<Vec<u32>>,
     cap: usize,
     interval_rows: usize,
     /// Rows of `M` (= `A`'s row count).
@@ -375,6 +816,8 @@ pub struct StagedIntermediate<'a> {
     /// Total hop-1 interval computations (≥ touched intervals; the
     /// excess over distinct touches counts ring-pressure recomputes).
     computes: AtomicU64,
+    /// Image bytes re-read for recomputes of a SEM-backed `a`.
+    reread: AtomicU64,
     staged_bytes: AtomicU64,
     staged_peak: AtomicU64,
     ctx: Arc<DenseCtx>,
@@ -386,24 +829,36 @@ impl<'a> StagedIntermediate<'a> {
         input: &'a TasMatrix,
         cap: usize,
         vectorize: bool,
+        schedule: Option<DemandSchedule>,
     ) -> StagedIntermediate<'a> {
         let ctx = input.ctx().clone();
         let interval_rows = input.interval_rows();
         let n_rows = a.n_rows as usize;
         let n_iv = n_rows.max(1).div_ceil(interval_rows);
-        let use_pool = ctx.fs.cfg().use_buffer_pool;
+        let (residency, first_touch) = match schedule {
+            Some(s) => (
+                Residency::NextUse { resident: Mutex::new(Vec::new()), uses: s.uses },
+                s.first_touch,
+            ),
+            None => (Residency::Lru(Mutex::new(VecDeque::new())), Vec::new()),
+        };
         StagedIntermediate {
             a,
             gather: InputGather::new(input),
-            a_pool: Mutex::new(BufferPool::new(use_pool)),
+            a_images: ImagePrefetcher::for_matrix(a, interval_rows, ctx.threads, false),
             slots: (0..n_iv).map(|_| Mutex::new(None)).collect(),
-            lru: Mutex::new(VecDeque::new()),
+            residency,
+            first_touch,
+            ft_cursor: AtomicUsize::new(0),
+            computed_once: (0..n_iv).map(|_| AtomicBool::new(false)).collect(),
+            active_outs: Mutex::new(Vec::new()),
             cap: cap.max(1),
             interval_rows,
             n_rows,
             b: input.n_cols,
             vectorize,
             computes: AtomicU64::new(0),
+            reread: AtomicU64::new(0),
             staged_bytes: AtomicU64::new(0),
             staged_peak: AtomicU64::new(0),
             ctx,
@@ -420,6 +875,13 @@ impl<'a> StagedIntermediate<'a> {
         self.computes.load(Ordering::Relaxed)
     }
 
+    /// Image bytes actually re-read for recomputes of a SEM-backed `a`
+    /// (0 for an in-memory image; bounded by the construction-time
+    /// re-read schedule for an in-order walk).
+    pub fn reread_bytes(&self) -> u64 {
+        self.reread.load(Ordering::Relaxed)
+    }
+
     /// High-water mark of staged intermediate bytes — the quantity the
     /// §3.4.3 staging bound caps at `cap + 2·workers` intervals (`cap`
     /// cached, plus per worker the handle it holds and the one it is
@@ -433,9 +895,59 @@ impl<'a> StagedIntermediate<'a> {
         &self.gather
     }
 
-    /// Move `iv` to the most-recently-touched end of the ring order.
-    fn touch(&self, iv: usize) {
-        let mut lru = self.lru.lock().unwrap();
+    /// Register a hop-2 output interval entering production; next-use
+    /// eviction measures distances from the minimum active position.
+    fn begin_output(&self, out_iv: usize) {
+        self.active_outs.lock().unwrap().push(out_iv as u32);
+    }
+
+    /// Deregister a finished hop-2 output interval.
+    fn end_output(&self, out_iv: usize) {
+        let mut active = self.active_outs.lock().unwrap();
+        if let Some(pos) = active.iter().position(|&v| v == out_iv as u32) {
+            active.swap_remove(pos);
+        }
+    }
+
+    /// The earliest hop-2 output interval still in production (0 when
+    /// idle — maximally conservative: nothing looks dead).
+    fn walk_floor(&self) -> u32 {
+        self.active_outs.lock().unwrap().iter().copied().min().unwrap_or(0)
+    }
+
+    /// Start the image reads for the next never-yet-computed intervals
+    /// in first-demand order (at most `read_ahead` ahead) — guaranteed
+    /// future computes, so the prefetched bytes are always consumed.
+    fn prefetch_next_first_touch(&self) {
+        let Some(images) = &self.a_images else { return };
+        if images.depth == 0 {
+            return;
+        }
+        let mut started = 0usize;
+        let mut p = self.ft_cursor.load(Ordering::Relaxed);
+        while p < self.first_touch.len() && started < images.depth {
+            let cand = self.first_touch[p] as usize;
+            if self.computed_once[cand].load(Ordering::Relaxed) {
+                // Settled: cooperatively advance the shared cursor.
+                let _ = self.ft_cursor.compare_exchange(
+                    p,
+                    p + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                );
+                p += 1;
+                continue;
+            }
+            images.prefetch(cand);
+            started += 1;
+            p += 1;
+        }
+    }
+
+    /// LRU bookkeeping (fallback policy): move `iv` to the
+    /// most-recently-touched end.
+    fn lru_touch(lru: &Mutex<VecDeque<usize>>, iv: usize) {
+        let mut lru = lru.lock().unwrap();
         if let Some(pos) = lru.iter().position(|&v| v == iv) {
             let _ = lru.remove(pos);
         }
@@ -443,13 +955,10 @@ impl<'a> StagedIntermediate<'a> {
     }
 
     /// Evict least-recently-touched unheld intervals until at most `cap`
-    /// stay resident.  `keep` (the interval just handed out) is never a
-    /// victim, and neither is any interval a worker still holds a handle
-    /// to (`Arc` strong count > 1) — those stay, so the transient
-    /// worst-case residency is `cap` plus two in-flight intervals per
-    /// worker (the handle being replaced and its replacement).
-    fn evict_to_cap(&self, keep: usize) {
-        let mut lru = self.lru.lock().unwrap();
+    /// stay resident (the fallback policy).  `keep` is never a victim,
+    /// and neither is any interval a worker still holds a handle to.
+    fn lru_evict(&self, lru: &Mutex<VecDeque<usize>>, keep: usize) {
+        let mut lru = lru.lock().unwrap();
         let mut passes = lru.len();
         while lru.len() > self.cap && passes > 0 {
             passes -= 1;
@@ -458,27 +967,66 @@ impl<'a> StagedIntermediate<'a> {
                 lru.push_back(iv);
                 continue;
             }
-            // try_lock only: never block on a slot while holding the ring
-            // order lock (a contended slot is simply not a victim now).
-            let drop_entry = match self.slots[iv].try_lock() {
-                Ok(mut slot) => match slot.as_ref() {
-                    Some(a) if Arc::strong_count(a) == 1 => {
-                        let bytes = (a.len() * 8) as u64;
-                        *slot = None;
-                        self.ctx.mem.free(bytes);
-                        self.staged_bytes.fetch_sub(bytes, Ordering::Relaxed);
-                        true
-                    }
-                    // A touch/evict race can leave a stale order entry
-                    // behind an already-evicted slot: just drop it.
-                    None => true,
-                    Some(_) => false,
-                },
-                Err(_) => false,
-            };
-            if !drop_entry {
+            if !self.try_evict_slot(iv) {
                 lru.push_back(iv);
             }
+        }
+    }
+
+    /// Evict by next-use distance until at most `cap` intervals stay
+    /// resident: the victim is the unheld resident interval whose next
+    /// demanding output interval lies farthest past the current walk
+    /// position (never demanded again beats everything; ties break on
+    /// the LOWER interval id — the staler window end — so the runtime
+    /// matches the construction model exactly for an in-order walk).
+    fn next_use_evict(&self, resident: &Mutex<Vec<usize>>, uses: &[Vec<u32>], keep: usize) {
+        let mut res = resident.lock().unwrap();
+        loop {
+            if res.len() <= self.cap {
+                return;
+            }
+            let out = self.walk_floor();
+            let mut order: Vec<(u64, u32, usize)> = res
+                .iter()
+                .enumerate()
+                .filter(|&(_, &v)| v != keep)
+                .map(|(pos, &v)| (DemandSchedule::next_use(&uses[v], out), v as u32, pos))
+                .collect();
+            order.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+            let mut evicted = false;
+            for &(_, v, pos) in &order {
+                if self.try_evict_slot(v as usize) {
+                    res.swap_remove(pos);
+                    evicted = true;
+                    break;
+                }
+            }
+            if !evicted {
+                return; // everything held: transient over-cap
+            }
+        }
+    }
+
+    /// Try to drop interval `iv`'s staged data.  `try_lock` only — never
+    /// block on a slot while holding the residency lock — and a slot a
+    /// worker still holds a handle to (`Arc` strong count > 1) is not a
+    /// victim.  Returns whether the residency entry should be dropped.
+    fn try_evict_slot(&self, iv: usize) -> bool {
+        match self.slots[iv].try_lock() {
+            Ok(mut slot) => match slot.as_ref() {
+                Some(a) if Arc::strong_count(a) == 1 => {
+                    let bytes = (a.len() * 8) as u64;
+                    *slot = None;
+                    self.ctx.mem.free(bytes);
+                    self.staged_bytes.fetch_sub(bytes, Ordering::Relaxed);
+                    true
+                }
+                // A touch/evict race can leave a stale residency entry
+                // behind an already-evicted slot: just drop it.
+                None => true,
+                Some(_) => false,
+            },
+            Err(_) => false,
         }
     }
 }
@@ -489,6 +1037,7 @@ impl TileInput for StagedIntermediate<'_> {
     }
 
     fn interval_arc(&self, iv: usize) -> Arc<Vec<f64>> {
+        let mut inserted = false;
         let arc = {
             let mut slot = self.slots[iv].lock().unwrap();
             match slot.as_ref() {
@@ -498,11 +1047,20 @@ impl TileInput for StagedIntermediate<'_> {
                     // ring-pressure eviction).  Computed under the slot
                     // lock so concurrent touches of the same interval
                     // wait for this result instead of duplicating work.
+                    let recompute = self.computed_once[iv].swap(true, Ordering::Relaxed);
+                    if recompute {
+                        if let Some(images) = &self.a_images {
+                            self.reread.fetch_add(images.range_bytes(iv), Ordering::Relaxed);
+                        }
+                    }
+                    // Overlap: start the image reads of upcoming
+                    // first touches before this interval's multiply.
+                    self.prefetch_next_first_touch();
                     let rows = self.interval_len(iv);
                     let data = interval_product_rowmajor(
                         self.a,
                         &self.gather,
-                        &self.a_pool,
+                        self.a_images.as_ref(),
                         iv,
                         rows,
                         self.interval_rows,
@@ -516,12 +1074,25 @@ impl TileInput for StagedIntermediate<'_> {
                     self.staged_peak.fetch_max(cur, Ordering::Relaxed);
                     let a = Arc::new(data);
                     *slot = Some(a.clone());
+                    inserted = true;
                     a
                 }
             }
         };
-        self.touch(iv);
-        self.evict_to_cap(iv);
+        match &self.residency {
+            Residency::Lru(lru) => {
+                Self::lru_touch(lru, iv);
+                self.lru_evict(lru, iv);
+            }
+            Residency::NextUse { resident, uses } => {
+                if inserted {
+                    resident.lock().unwrap().push(iv);
+                    self.next_use_evict(resident, uses, iv);
+                }
+                // A touch changes nothing: next-use order is a function
+                // of the walk position, not of recency.
+            }
+        }
         arc
     }
 }
@@ -531,6 +1102,10 @@ impl Drop for StagedIntermediate<'_> {
         self.ctx.mem.free(self.staged_bytes.load(Ordering::Relaxed));
     }
 }
+
+// ------------------------------------------------------------------------
+// ChainedGramSpmm
+// ------------------------------------------------------------------------
 
 /// Pull-mode streamed two-hop `Aᵀ(A·X)` — the SVD path's
 /// [`crate::eigen::GramOperator`] apply without full-height
@@ -544,15 +1119,21 @@ impl Drop for StagedIntermediate<'_> {
 /// only full-height resident set is the gathered input — the §3.4
 /// working set the eager path *also* holds — while `M` is capped at the
 /// staging-ring bound and the output flows interval-by-interval into the
-/// consuming [`crate::dense::FusedPipeline`] walk.
+/// consuming [`crate::dense::FusedPipeline`] walk.  Both hops' SEM
+/// images ride the read-ahead scheduler: hop 2 pipelines its `Aᵀ`
+/// tile-row reads along the walk order, and hop 1 prefetches the next
+/// first-touch `A` interval the `Aᵀ` tile-column structure will demand.
 pub struct ChainedGramSpmm<'a> {
     at: &'a SparseMatrix,
     stage: StagedIntermediate<'a>,
     interval_rows: usize,
     b: usize,
     vectorize: bool,
-    /// Pool for SEM tile-row image reads of `Aᵀ`.
-    at_pool: Mutex<BufferPool>,
+    /// Read-ahead scheduler for `Aᵀ`'s SEM tile-row images.
+    at_images: Option<ImagePrefetcher>,
+    /// Image bytes the construction-time re-read schedule predicts
+    /// ring-pressure recomputes will re-read (0 when `M` fits the ring).
+    modeled_reread: u64,
     ctx: Arc<DenseCtx>,
 }
 
@@ -565,15 +1146,20 @@ impl<'a> ChainedGramSpmm<'a> {
     /// `cap` bounds the staging ring (callers pass the context's
     /// `group_size`).
     ///
-    /// A **SEM-backed first hop** additionally requires the whole
-    /// intermediate to fit the ring (`M` intervals ≤ `cap`): under ring
-    /// pressure an evicted interval's recompute would re-read `a`'s
-    /// tile-row images from SAFS — repeatable without bound on
-    /// low-locality graphs — whereas the eager fallback reads each
-    /// image exactly once.  With the fit guarantee nothing is ever
-    /// evicted, so `a`'s images are also read exactly once.  (An
-    /// in-memory `a` recomputes from RAM at zero I/O, so it streams
-    /// under any ring pressure.)
+    /// A **SEM-backed first hop** whose intermediate exceeds the ring
+    /// streams under a *re-read schedule*: the hop-2 demand sequence
+    /// (from `A`'s in-RAM tile-column index) is replayed against the
+    /// ring at construction to model the image bytes recomputes will
+    /// re-read, and the apply streams only while that — plus one window
+    /// re-load per additional worker — stays at or below one full image
+    /// (the eager fallback's total, which reads each image exactly
+    /// once).  Concurrent walks are additionally admitted only when the
+    /// ring holds every worker's demand window, so capacity-fitting
+    /// windows never thrash each other.  Beyond the bound (or when the
+    /// demand schedule cannot be derived because the hops' tile
+    /// dimensions differ), eager remains the fallback.  (An in-memory
+    /// `a` recomputes from RAM at zero I/O, so it streams under any
+    /// ring pressure.)
     pub fn new(
         a: &'a SparseMatrix,
         at: &'a SparseMatrix,
@@ -591,21 +1177,56 @@ impl<'a> ChainedGramSpmm<'a> {
         if ir % a.tile_dim != 0 || ir % at.tile_dim != 0 {
             return None;
         }
-        if a.safs_handle().is_some() {
-            let m_intervals = (a.n_rows as usize).max(1).div_ceil(ir);
-            if m_intervals > cap.max(1) {
+        let cap = cap.max(1);
+        let ctx = input.ctx().clone();
+        let workers = ctx.threads.max(1);
+        let m_intervals = (a.n_rows as usize).max(1).div_ceil(ir);
+        // The demand schedule needs Aᵀ's tile structure, derivable from
+        // A's tile-column index exactly when the hops share a tile dim.
+        // Built only when it pays for itself: eviction is possible
+        // (locality-aware policy + re-read gate) or `a` is SEM-backed
+        // (hop-1 first-touch prefetch); a fits-the-ring in-memory first
+        // hop never evicts and needs no image schedule.  The build is
+        // O(total tiles) per apply — strictly dominated by the apply's
+        // own O(nnz·b) multiply and its image I/O, so it is recomputed
+        // rather than cached across applies.
+        let needs_schedule = m_intervals > cap || a.safs_handle().is_some();
+        let schedule = (needs_schedule && a.tile_dim == at.tile_dim)
+            .then(|| DemandSchedule::build(a, ir));
+        let mut modeled_reread = 0u64;
+        if a.safs_handle().is_some() && m_intervals > cap {
+            // Lifted ring restriction: model the re-reads instead of
+            // refusing.  Without a schedule (mixed tile dims) the old
+            // fit-the-ring restriction stands.
+            let Some(sched) = &schedule else { return None };
+            let bytes: Vec<u64> = interval_image_ranges(a, ir)
+                .iter()
+                .map(|r| r.map_or(0, |(_, len)| len as u64))
+                .collect();
+            // Concurrent admission: the in-order model is exact for one
+            // worker; with several, the ring must hold every worker's
+            // window (so capacity-fitting windows never thrash each
+            // other — eviction distances are measured from the earliest
+            // active walk position) and the budget charges one extra
+            // window re-load per worker-range boundary.
+            let (window, window_bytes) = sched.window(&bytes);
+            if workers > 1 && cap < workers * window.max(1) {
+                return None;
+            }
+            modeled_reread = sched.modeled_reread_bytes(cap, &bytes)
+                + (workers as u64 - 1) * window_bytes;
+            if modeled_reread > a.storage_bytes() {
                 return None;
             }
         }
-        let ctx = input.ctx().clone();
-        let use_pool = ctx.fs.cfg().use_buffer_pool;
         Some(ChainedGramSpmm {
             at,
-            stage: StagedIntermediate::new(a, input, cap, vectorize),
+            stage: StagedIntermediate::new(a, input, cap, vectorize, schedule),
             interval_rows: ir,
             b: input.n_cols,
             vectorize,
-            at_pool: Mutex::new(BufferPool::new(use_pool)),
+            at_images: ImagePrefetcher::for_matrix(at, ir, workers, true),
+            modeled_reread,
             ctx,
         })
     }
@@ -620,21 +1241,32 @@ impl<'a> ChainedGramSpmm<'a> {
     pub fn stage(&self) -> &StagedIntermediate<'a> {
         &self.stage
     }
+
+    /// The re-read schedule's modeled image re-read bytes (0 when the
+    /// intermediate fits the ring or `A` is in memory).  The actual
+    /// re-reads of an in-order walk stay within this bound.
+    pub fn modeled_reread_bytes(&self) -> u64 {
+        self.modeled_reread
+    }
 }
 
 impl IntervalProducer for ChainedGramSpmm<'_> {
     fn produce(&self, iv: usize, rows: usize) -> Vec<f64> {
-        produce_colmajor(
+        // Walk position for next-use eviction distances.
+        self.stage.begin_output(iv);
+        let out = produce_colmajor(
             self.at,
             &self.stage,
-            &self.at_pool,
+            self.at_images.as_ref(),
             &self.ctx.mem,
             iv,
             rows,
             self.interval_rows,
             self.b,
             self.vectorize,
-        )
+        );
+        self.stage.end_output(iv);
+        out
     }
 }
 
@@ -664,6 +1296,20 @@ mod tests {
         let mut coo = CooMatrix::new(n, n);
         for _ in 0..nnz {
             coo.push(rng.gen_range(n) as u32, rng.gen_range(n) as u32);
+        }
+        coo.sort_dedup();
+        coo
+    }
+
+    /// Banded directed graph: entries `(v, w)` for `|v − w| ≤ span` —
+    /// near-diagonal tile structure, the locality the staging eviction
+    /// and the re-read schedule exploit.
+    fn banded_graph(n: u64, span: u64) -> CooMatrix {
+        let mut coo = CooMatrix::new(n, n);
+        for v in 0..n {
+            for w in v.saturating_sub(span)..=(v + span).min(n - 1) {
+                coo.push(v as u32, w as u32);
+            }
         }
         coo.sort_dedup();
         coo
@@ -746,6 +1392,47 @@ mod tests {
         assert_eq!(s.gather().resident_bytes(), (320 * 2 * 8) as u64);
     }
 
+    /// The read-ahead scheduler moves *when* image bytes are read, never
+    /// *what* is computed: every depth yields the same bits and the same
+    /// SAFS totals as the synchronous depth-0 baseline.
+    #[test]
+    fn streamed_sem_read_ahead_depths_bitwise_and_byte_identical() {
+        let mut rng = Rng::new(49);
+        let coo = random_graph(&mut rng, 768, 6000);
+        let mut reference: Option<(Vec<f64>, u64)> = None;
+        for depth in [0usize, 2, 8] {
+            let mut cfg = SafsConfig::untimed();
+            cfg.read_ahead = depth;
+            let fs = Safs::new(cfg);
+            let ctx = DenseCtx::with(
+                fs.clone(),
+                false,
+                64,
+                2,
+                3,
+                1,
+                std::sync::Arc::new(crate::dense::NativeKernels),
+            );
+            let m = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "ra"), true);
+            let x = TasMatrix::from_fn(&ctx, 768, 2, |r, c| ((r * 3 + c) % 17) as f64 - 8.0);
+            let s = StreamedSpmm::new(&m, &x, true).expect("layout streams");
+            let before = fs.stats();
+            let w = TasMatrix::zeros_for_overwrite(&ctx, 768, 2);
+            let mut p = FusedPipeline::new(&ctx);
+            p.source(&w, Box::new(s));
+            p.materialize();
+            let bytes = fs.stats().delta_since(&before).bytes_read;
+            let vals = w.to_colmajor();
+            match &reference {
+                None => reference = Some((vals, bytes)),
+                Some((v0, b0)) => {
+                    assert_eq!(&vals, v0, "depth {depth} changed bits");
+                    assert_eq!(bytes, *b0, "depth {depth} changed total bytes");
+                }
+            }
+        }
+    }
+
     #[test]
     fn streaming_refused_on_unaligned_intervals() {
         let ctx = DenseCtx::mem_for_tests(96); // 96 % 64 != 0
@@ -801,8 +1488,9 @@ mod tests {
                 )
             };
             let x = TasMatrix::from_fn(&ctx, 400, 2, |r, c| ((r * 5 + c) % 13) as f64 - 6.0);
-            // A SEM-backed first hop streams only when all 7 M intervals
-            // fit the ring (zero evictions → each image read once).
+            // A SEM-backed first hop with all 7 M intervals in the ring
+            // streams with zero evictions; the tight in-memory ring
+            // exercises recompute.
             let cap = if sem_matrix { 8 } else { 3 };
             let s = ChainedGramSpmm::new(&a, &at, &x, cap, true).expect("layout streams");
             assert_eq!(s.output_rows(), 400);
@@ -813,6 +1501,42 @@ mod tests {
             let expect = gram_ref(&coo, &x.to_colmajor(), 400, 400, 2);
             assert_close(&y.to_colmajor(), &expect, 1e-12, 1e-9, "two-hop").unwrap();
         }
+    }
+
+    /// A fits-the-ring SEM two-hop apply reads each image exactly once
+    /// even with read-ahead and hop-1 prefetch active: every scheduled
+    /// read is consumed, so total bytes match the synchronous count.
+    #[test]
+    fn chained_gram_sem_reads_each_image_exactly_once_with_read_ahead() {
+        let mut rng = Rng::new(50);
+        let coo = random_graph(&mut rng, 384, 2400);
+        let at_coo = coo.transpose();
+        let fs = Safs::new(SafsConfig::untimed()); // read_ahead = 2
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            64,
+            2,
+            3,
+            0,
+            std::sync::Arc::new(crate::dense::NativeKernels),
+        );
+        let a = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "ea"), true);
+        let at = build_matrix_opts(&at_coo, 32, BuildTarget::Safs(&fs, "eat"), true);
+        let x = TasMatrix::from_fn(&ctx, 384, 2, |r, _| (r % 9) as f64 - 4.0);
+        let x_bytes = (384 * 2 * 8) as u64;
+        let s = ChainedGramSpmm::new(&a, &at, &x, 8, true).expect("fits the ring");
+        let before = fs.stats();
+        let y = TasMatrix::zeros_for_overwrite(&ctx, 384, 2);
+        let mut p = FusedPipeline::new(&ctx);
+        p.source(&y, Box::new(s));
+        p.materialize();
+        let delta = fs.stats().delta_since(&before);
+        assert_eq!(
+            delta.bytes_read,
+            a.storage_bytes() + at.storage_bytes() + x_bytes,
+            "each image and each X interval read exactly once"
+        );
     }
 
     #[test]
@@ -832,28 +1556,110 @@ mod tests {
         assert!(ChainedGramSpmm::new(&a32, &at32, &x, 2, true).is_some());
     }
 
-    /// A SEM-backed first hop streams only when the whole intermediate
-    /// fits the ring — ring-pressure recomputes would otherwise re-read
-    /// `A`'s tile-row images from SAFS without bound.
+    /// The lifted SEM ring restriction: a first hop whose intermediate
+    /// exceeds the ring streams when the re-read schedule's modeled
+    /// bytes stay within the eager fallback's one-image total, and
+    /// refuses when column locality is too poor to bound the re-reads.
     #[test]
-    fn chained_gram_refuses_sem_first_hop_under_ring_pressure() {
-        let mut rng = Rng::new(48);
-        let coo = random_graph(&mut rng, 256, 1500); // 4 M intervals at 64 rows
-        let at_coo = coo.transpose();
+    fn chained_gram_sem_ring_pressure_gated_by_reread_schedule() {
         let ctx = DenseCtx::em_for_tests(64);
         let fs = ctx.fs.clone();
-        let a_sem = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "pa"), true);
-        let at_mem = build_matrix_opts(&at_coo, 32, BuildTarget::Mem, true);
-        let x = TasMatrix::from_fn(&ctx, 256, 2, |r, _| r as f64);
-        // Ring smaller than the 4 intervals of M: refuse (eager fallback
-        // reads each image exactly once instead).
-        assert!(ChainedGramSpmm::new(&a_sem, &at_mem, &x, 2, true).is_none());
-        // Ring that holds all of M: streams, nothing ever evicted.
-        assert!(ChainedGramSpmm::new(&a_sem, &at_mem, &x, 4, true).is_some());
+        let x = TasMatrix::from_fn(&ctx, 512, 2, |r, _| (r % 11) as f64 - 5.0);
+
+        // Poor locality: a dense random graph's every Aᵀ tile row
+        // demands most M intervals, so a 2-slot ring would re-read
+        // images without bound — eager remains the fallback.
+        let mut rng = Rng::new(48);
+        let dense = random_graph(&mut rng, 512, 6000);
+        let dense_at = dense.transpose();
+        let a_dense = build_matrix_opts(&dense, 32, BuildTarget::Safs(&fs, "pd"), true);
+        let at_dense = build_matrix_opts(&dense_at, 32, BuildTarget::Mem, true);
+        assert!(
+            ChainedGramSpmm::new(&a_dense, &at_dense, &x, 2, true).is_none(),
+            "unbounded modeled re-reads must refuse to stream"
+        );
+        // The same image streams once the ring holds all 8 M intervals.
+        assert!(ChainedGramSpmm::new(&a_dense, &at_dense, &x, 8, true).is_some());
         // An in-memory image streams under any ring pressure (recompute
         // is pure RAM work).
-        let a_mem = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);
-        assert!(ChainedGramSpmm::new(&a_mem, &at_mem, &x, 2, true).is_some());
+        let a_mem = build_matrix_opts(&dense, 32, BuildTarget::Mem, true);
+        assert!(ChainedGramSpmm::new(&a_mem, &at_dense, &x, 2, true).is_some());
+
+        // Good locality: a banded graph's demands slide along the
+        // diagonal, so a single worker's 2-slot ring streams all 8 M
+        // intervals with zero modeled re-reads.  (One worker: the
+        // concurrent-admission rule requires the ring to hold every
+        // worker's window.)
+        let ctx1 = DenseCtx::with(
+            fs.clone(),
+            true,
+            64,
+            1,
+            3,
+            1,
+            std::sync::Arc::new(crate::dense::NativeKernels),
+        );
+        let x1 = TasMatrix::from_fn(&ctx1, 512, 2, |r, _| (r % 11) as f64 - 5.0);
+        let band = banded_graph(512, 31);
+        let band_at = band.transpose();
+        let a_band = build_matrix_opts(&band, 32, BuildTarget::Safs(&fs, "pb"), true);
+        let at_band = build_matrix_opts(&band_at, 32, BuildTarget::Mem, true);
+        let s = ChainedGramSpmm::new(&a_band, &at_band, &x1, 2, true)
+            .expect("banded locality must stream past the ring size");
+        assert_eq!(s.modeled_reread_bytes(), 0, "sliding window fits the ring");
+        // Two workers need a ring that holds both windows: at cap 2 the
+        // concurrent-admission rule refuses, at 2x the window it streams.
+        assert!(ChainedGramSpmm::new(&a_band, &at_band, &x, 2, true).is_none());
+        assert!(ChainedGramSpmm::new(&a_band, &at_band, &x, 6, true).is_some());
+    }
+
+    /// A mostly-banded SEM graph with a few long-range edges streams
+    /// past the ring size with bounded re-reads: the walk re-reads only
+    /// the re-demanded intervals' images, the actual bytes stay within
+    /// the construction-time model, and the result is bitwise equal to
+    /// the dense reference.
+    #[test]
+    fn lifted_ring_rereads_stay_within_model_and_bits_unchanged() {
+        let n = 512u64;
+        let mut coo = banded_graph(n, 31);
+        // Long-range edges: Aᵀ tile rows 6 and 12 re-demand M interval 0
+        // long after its first touch.
+        coo.push(0, 200);
+        coo.push(0, 400);
+        coo.sort_dedup();
+        let at_coo = coo.transpose();
+        let fs = Safs::new(SafsConfig::untimed());
+        // Single worker: the walk is in-order, so the re-read schedule
+        // is exact, not just an upper bound.
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            64,
+            1,
+            3,
+            0,
+            std::sync::Arc::new(crate::dense::NativeKernels),
+        );
+        let a = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "lr"), true);
+        let at = build_matrix_opts(&at_coo, 32, BuildTarget::Mem, true);
+        let x = TasMatrix::from_fn(&ctx, n as usize, 2, |r, c| ((r * 3 + c) % 13) as f64 - 6.0);
+        let s = ChainedGramSpmm::new(&a, &at, &x, 2, true).expect("bounded re-reads must stream");
+        let modeled = s.modeled_reread_bytes();
+        assert!(modeled > 0, "long-range edges must cost modeled re-reads");
+        assert!(modeled <= a.storage_bytes(), "model within the eager budget");
+        let y = TasMatrix::zeros_for_overwrite(&ctx, n as usize, 2);
+        for iv in 0..y.n_intervals() {
+            let data = s.produce(iv, y.interval_len(iv));
+            y.store_interval(iv, data);
+        }
+        let actual = s.stage().reread_bytes();
+        assert!(actual > 0, "ring pressure must actually re-read");
+        assert!(
+            actual <= modeled,
+            "actual re-reads {actual} exceed the modeled schedule {modeled}"
+        );
+        let expect = gram_ref(&coo, &x.to_colmajor(), n as usize, n as usize, 2);
+        assert_close(&y.to_colmajor(), &expect, 1e-12, 1e-9, "lifted ring").unwrap();
     }
 
     /// The staging ring caps resident intermediate bytes and recomputes
@@ -903,6 +1709,35 @@ mod tests {
         assert!(
             computes_tight > n_iv,
             "ring pressure must force recomputes: {computes_tight} vs {n_iv} intervals"
+        );
+        // In-memory image: recomputes are RAM work, never image re-reads.
+        assert_eq!(ctx.fs.stats().bytes_read, 0);
+    }
+
+    /// Locality-aware eviction strictly beats LRU on a banded graph under
+    /// ring pressure: next-use distance keeps the sliding window resident
+    /// where recency alone would thrash on boundary revisits.
+    #[test]
+    fn next_use_eviction_cuts_recomputes_vs_unscheduled_fallback() {
+        let n = 1024u64;
+        let coo = banded_graph(n, 60); // window spans ~3 intervals
+        let at_coo = coo.transpose();
+        let ctx = DenseCtx::mem_for_tests(64);
+        let a = build_matrix_opts(&coo, 32, BuildTarget::Mem, true);
+        let at = build_matrix_opts(&at_coo, 32, BuildTarget::Mem, true);
+        let x = TasMatrix::from_fn(&ctx, n as usize, 2, |r, _| (r % 7) as f64 - 3.0);
+        let s = ChainedGramSpmm::new(&a, &at, &x, 3, true).unwrap();
+        let y = TasMatrix::zeros_for_overwrite(&ctx, n as usize, 2);
+        for iv in 0..y.n_intervals() {
+            let _ = s.produce(iv, y.interval_len(iv));
+        }
+        let n_iv = (n as usize).div_ceil(64) as u64;
+        // The sliding band window fits a 3-slot ring under next-use
+        // eviction: no recomputes at all.
+        assert_eq!(
+            s.stage().computes(),
+            n_iv,
+            "next-use eviction must keep the sliding window resident"
         );
     }
 

@@ -158,6 +158,7 @@ fn throttling_does_not_change_results() {
         tile_dim: 128,
         interval_rows: 256,
         seed: 3,
+        read_ahead: 2,
     };
     let run = |timed: bool| {
         let fs = if timed {

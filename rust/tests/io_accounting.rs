@@ -10,15 +10,15 @@
 //! * per-device traffic stays balanced (`IoStats::skew() ≤ 1.5`) under
 //!   the per-file random striping orders.
 
-use flasheigen::dense::{tas::mv_random, DenseCtx, NativeKernels, TasMatrix};
+use flasheigen::dense::{tas::mv_random, DenseCtx, IntervalProducer, NativeKernels, TasMatrix};
 use flasheigen::eigen::{
     ortho_normalize, solve, svd, EigenConfig, GramOperator, Operator, SpmmOperator, Which,
 };
 use flasheigen::graph::{gnm, gnm_undirected};
-use flasheigen::harness::{fig9_fusion_data, BenchCfg};
+use flasheigen::harness::{fig9_fusion_data, fig9_readahead_data, BenchCfg};
 use flasheigen::safs::{Safs, SafsConfig};
-use flasheigen::sparse::{build_matrix_opts, build_mem, BuildTarget};
-use flasheigen::spmm::SpmmOpts;
+use flasheigen::sparse::{build_matrix_opts, build_mem, BuildTarget, CooMatrix};
+use flasheigen::spmm::{ChainedGramSpmm, SpmmOpts};
 use flasheigen::util::prop::assert_close;
 use flasheigen::util::rng::Rng;
 use std::sync::Arc;
@@ -461,6 +461,196 @@ fn em_svd_peak_dense_bounded_by_group_and_staging() {
     );
 }
 
+/// (i) Read-ahead is pure scheduling: a streamed SEM apply at depth 8
+/// moves exactly the bytes of the synchronous depth-0 baseline — reads
+/// AND writes — and produces bitwise-identical values.  (The depth
+/// {0, 2, 8} bitwise sweep over random graphs lives in props.rs; this
+/// pins the byte ledger on a fixed configuration.)
+#[test]
+fn read_ahead_moves_zero_extra_bytes() {
+    let mut rng = Rng::new(99);
+    let coo = gnm_undirected(2000, 12_000, &mut rng);
+    let run = |depth: usize| {
+        let mut cfg = SafsConfig::untimed();
+        cfg.read_ahead = depth;
+        let fs = Safs::new(cfg);
+        // cache_slots = 0 (write-through): every dense access is visible.
+        let ctx = DenseCtx::with(fs.clone(), true, 128, 2, 4, 0, Arc::new(NativeKernels));
+        let m = build_matrix_opts(&coo, 64, BuildTarget::Safs(&fs, "zra"), true);
+        let op = SpmmOperator::new(m, SpmmOpts::default(), 2);
+        let x = TasMatrix::zeros(&ctx, 2000, 2);
+        mv_random(&x, 7);
+        let before = fs.stats();
+        let w = op.apply_streamed(&ctx, &x);
+        let delta = fs.stats().delta_since(&before);
+        (w.to_colmajor(), delta.bytes_read, delta.bytes_written)
+    };
+    let (v0, r0, w0) = run(0);
+    let (v8, r8, w8) = run(8);
+    assert_eq!(v0, v8, "depth changed bits");
+    assert_eq!(r0, r8, "depth changed bytes read");
+    assert_eq!(w0, w8, "depth changed bytes written");
+}
+
+/// (j) The lifted SEM ring restriction: an intermediate larger than the
+/// staging ring streams when locality bounds the re-reads.  The actual
+/// image re-read bytes stay within the construction-time re-read
+/// schedule (exact for this in-order single-worker walk), the model
+/// itself stays within the eager fallback's one-image budget, and the
+/// staged peak still respects the §3.4.3 `cap + 2·workers` bound.
+#[test]
+fn lifted_ring_rereads_and_staging_stay_bounded() {
+    let n = 512u64;
+    let interval_rows = 64usize;
+    let (threads, cap) = (1usize, 2usize);
+    // Mostly banded (the sliding window fits the ring) with two
+    // long-range edges that re-demand interval 0 late in the walk.
+    let mut coo = CooMatrix::new(n, n);
+    for v in 0..n {
+        for w in v.saturating_sub(31)..=(v + 31).min(n - 1) {
+            coo.push(v as u32, w as u32);
+        }
+    }
+    coo.push(0, 200);
+    coo.push(0, 400);
+    coo.sort_dedup();
+    let at_coo = coo.transpose();
+    let fs = Safs::new(SafsConfig::untimed());
+    let ctx = DenseCtx::with(
+        fs.clone(),
+        true,
+        interval_rows,
+        threads,
+        cap,
+        0,
+        Arc::new(NativeKernels),
+    );
+    let a = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "lra"), true);
+    let at = build_matrix_opts(&at_coo, 32, BuildTarget::Mem, true);
+    let x = TasMatrix::zeros(&ctx, n as usize, 2);
+    mv_random(&x, 11);
+    let m_intervals = (n as usize).div_ceil(interval_rows);
+    assert!(m_intervals > cap, "the intermediate must exceed the ring");
+    let s = ChainedGramSpmm::new(&a, &at, &x, cap, true)
+        .expect("bounded re-reads must stream past the ring size");
+    let modeled = s.modeled_reread_bytes();
+    assert!(modeled > 0, "the long-range edges must cost modeled re-reads");
+    assert!(modeled <= a.storage_bytes(), "the model must stay within the eager budget");
+    let y = TasMatrix::zeros_for_overwrite(&ctx, n as usize, 2);
+    for iv in 0..y.n_intervals() {
+        let data = s.produce(iv, y.interval_len(iv));
+        y.store_interval(iv, data);
+    }
+    let actual = s.stage().reread_bytes();
+    assert!(actual > 0, "ring pressure must actually re-read");
+    assert!(actual <= modeled, "actual re-reads {actual} exceed the schedule {modeled}");
+    // §3.4.3 staging bound, unchanged by the lifted restriction.
+    let iv_bytes = (interval_rows * 2 * 8) as u64;
+    let stage_bound = ((cap + 2 * threads) as u64) * iv_bytes;
+    assert!(
+        s.stage().peak_staged_bytes() <= stage_bound,
+        "staged peak {} exceeds the group bound {stage_bound}",
+        s.stage().peak_staged_bytes()
+    );
+}
+
+/// (j2) The concurrent-walk companion of (j): with two pipeline workers
+/// and a ring sized to hold both workers' demand windows, the lifted
+/// restriction still streams and the actual image re-reads stay within
+/// the gate's budget (the in-order model plus one window re-load per
+/// additional worker) — capacity-fitting windows must not thrash each
+/// other.
+#[test]
+fn lifted_ring_concurrent_workers_stay_within_budget() {
+    let n = 512u64;
+    let interval_rows = 64usize;
+    let (threads, cap) = (2usize, 6usize);
+    let mut coo = CooMatrix::new(n, n);
+    for v in 0..n {
+        for w in v.saturating_sub(31)..=(v + 31).min(n - 1) {
+            coo.push(v as u32, w as u32);
+        }
+    }
+    coo.push(0, 200);
+    coo.push(0, 400);
+    coo.sort_dedup();
+    let at_coo = coo.transpose();
+    let fs = Safs::new(SafsConfig::untimed());
+    let ctx = DenseCtx::with(
+        fs.clone(),
+        true,
+        interval_rows,
+        threads,
+        cap,
+        0,
+        Arc::new(NativeKernels),
+    );
+    let a = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "cw"), true);
+    let at = build_matrix_opts(&at_coo, 32, BuildTarget::Mem, true);
+    let x = TasMatrix::zeros(&ctx, n as usize, 2);
+    mv_random(&x, 13);
+    assert!((n as usize).div_ceil(interval_rows) > cap, "must exceed the ring");
+
+    // Borrow the producer into the pipeline so its counters stay
+    // inspectable after the walk.
+    struct ByRef<'p, 'a>(&'p ChainedGramSpmm<'a>);
+    impl flasheigen::dense::IntervalProducer for ByRef<'_, '_> {
+        fn produce(&self, iv: usize, rows: usize) -> Vec<f64> {
+            self.0.produce(iv, rows)
+        }
+    }
+
+    let s = ChainedGramSpmm::new(&a, &at, &x, cap, true)
+        .expect("two windows fit the ring: concurrent admission must stream");
+    let modeled = s.modeled_reread_bytes();
+    let y = TasMatrix::zeros_for_overwrite(&ctx, n as usize, 2);
+    let mut p = flasheigen::dense::FusedPipeline::new(&ctx);
+    p.source(&y, Box::new(ByRef(&s)));
+    p.materialize();
+    let actual = s.stage().reread_bytes();
+    assert!(
+        actual <= modeled,
+        "concurrent walk re-read {actual} bytes, over the gate budget {modeled}"
+    );
+
+    // Bitwise invariance vs an in-order single-worker walk of a fresh
+    // producer over the same inputs.
+    let reference = ChainedGramSpmm::new(&a, &at, &x, cap, true).unwrap();
+    let z = TasMatrix::zeros_for_overwrite(&ctx, n as usize, 2);
+    for iv in 0..z.n_intervals() {
+        let data = reference.produce(iv, z.interval_len(iv));
+        z.store_interval(iv, data);
+    }
+    assert_close(&y.to_colmajor(), &z.to_colmajor(), 0.0, 0.0, "concurrent walk").unwrap();
+}
+
+/// (k) The overlap acceptance pin: on the timed EM harness row
+/// (fig9_readahead), read-ahead depth 2 blocks strictly less on
+/// tickets than the synchronous depth-0 baseline while moving exactly
+/// the same bytes — the scheduler hides transfers behind
+/// multiplication instead of shrinking traffic.
+#[test]
+fn read_ahead_overlap_lowers_io_wait_at_equal_bytes() {
+    let cfg = BenchCfg {
+        scale: 3e-6,
+        threads: 2,
+        dilation: 8.0, // slow simulated devices: waits dominate, overlap is visible
+        tile_dim: 64,
+        interval_rows: 256,
+        seed: 1,
+        read_ahead: 2,
+    };
+    let rows = fig9_readahead_data(&cfg, 64.0, 4, &[0, 2]);
+    let (d0, d2) = (&rows[0].2, &rows[1].2);
+    assert_eq!(d0.bytes_read, d2.bytes_read, "depth must not change bytes");
+    assert!(
+        d2.wait_secs() < d0.wait_secs(),
+        "read-ahead must strictly lower io_wait: depth 2 {:.4}s vs depth 0 {:.4}s",
+        d2.wait_secs(),
+        d0.wait_secs()
+    );
+}
+
 /// (d) The fig9b ablation row the acceptance criterion names: in FE-EM
 /// mode the fused path reports strictly fewer total SAFS bytes than the
 /// eager path for the same configuration (and ~half the reads).
@@ -473,6 +663,7 @@ fn fig9_fusion_em_reports_strictly_fewer_bytes() {
         tile_dim: 64,
         interval_rows: 256,
         seed: 1,
+        read_ahead: 2,
     };
     let rows = fig9_fusion_data(&cfg, 4096, 16, 2);
     assert_eq!(rows.len(), 2);

@@ -425,6 +425,124 @@ fn prop_streamed_gram_apply_matches_eager_apply() {
 }
 
 #[test]
+fn prop_read_ahead_depths_bitwise_for_spmm_and_streamed_apply() {
+    // The read-ahead scheduler moves *when* SEM image bytes are read,
+    // never *what* is computed: depths {0, 2, 8} must be bitwise
+    // identical — and move identical SAFS bytes — for both the eager
+    // engine's spmm() and the streamed operator apply, on random ER and
+    // R-MAT graphs over memory- and SSD-backed subspaces.
+    run_prop("read-ahead-bitwise", 10, |g| {
+        let n = g.usize_in(2, 600) as u64;
+        let nnz = g.usize_in(0, 4000) as u64;
+        let tile = *g.choose(&[16usize, 32, 64]); // all divide the 64-row intervals
+        let b = g.usize_in(1, 4);
+        let em = g.bool();
+        let threads = g.usize_in(1, 3);
+        let rmat_shape = g.bool();
+        let graph_seed = g.u64();
+        let x_seed = g.u64();
+        let mut rng = Rng::new(graph_seed);
+        let mut coo = if rmat_shape {
+            rmat(n.max(2), nnz.max(1), RmatParams::default(), &mut rng)
+        } else {
+            gnm_undirected(n, nnz.min(n * n.saturating_sub(1) / 2), &mut rng)
+        };
+        coo.symmetrize();
+        let nn = coo.n_rows as usize;
+        let mut reference: Option<(Vec<f64>, Vec<f64>, u64)> = None;
+        for depth in [0usize, 2, 8] {
+            let mut cfg = SafsConfig::untimed();
+            cfg.read_ahead = depth;
+            let fs = Safs::new(cfg);
+            let ctx = DenseCtx::with(fs.clone(), em, 64, threads, 3, 1, Arc::new(NativeKernels));
+            let m = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "ra"), true);
+            // Eager engine over the SEM image.
+            let input = DenseBlock::from_fn(nn, b, tile, true, |r, c| {
+                ((r * 7 + c) % 19) as f64 - 9.0
+            });
+            let mut output = DenseBlock::new(nn, b, tile, true);
+            let before = fs.stats();
+            spmm(&m, &input, &mut output, &SpmmOpts::default(), threads);
+            let engine_vals = output.to_vec();
+            // Streamed apply over the same image.
+            let op = SpmmOperator::new(m, SpmmOpts::default(), threads);
+            let x = TasMatrix::zeros(&ctx, nn, b);
+            mv_random(&x, x_seed);
+            let apply_vals = op.apply_streamed(&ctx, &x).to_colmajor();
+            let bytes = fs.stats().delta_since(&before).bytes_read;
+            match &reference {
+                None => reference = Some((engine_vals, apply_vals, bytes)),
+                Some((e0, a0, b0)) => {
+                    if &engine_vals != e0 {
+                        return Err(format!("spmm() bits changed at depth {depth}"));
+                    }
+                    if &apply_vals != a0 {
+                        return Err(format!("streamed apply bits changed at depth {depth}"));
+                    }
+                    if bytes != *b0 {
+                        return Err(format!(
+                            "depth {depth} moved {bytes} bytes vs {b0} at depth 0"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_read_ahead_depths_bitwise_for_em_svd() {
+    // A full EM svd() — expansion, staging ring, restarts — is bitwise
+    // depth-invariant: the scheduler never changes the numerics.  One
+    // worker pins the reduction order so runs are comparable.
+    run_prop("read-ahead-bitwise-svd", 4, |g| {
+        let n = g.usize_in(64, 300) as u64;
+        let nnz = g.usize_in(n as usize, 2500) as u64;
+        let tile = *g.choose(&[16usize, 32]);
+        let graph_seed = g.u64();
+        let solver_seed = g.u64();
+        let mut rng = Rng::new(graph_seed);
+        let coo = gnm(n, nnz.min(n * n.saturating_sub(1)), &mut rng);
+        let at_coo = coo.transpose();
+        let nn = coo.n_cols as usize;
+        let mut reference: Option<Vec<f64>> = None;
+        for depth in [0usize, 2, 8] {
+            let mut cfg = SafsConfig::untimed();
+            cfg.read_ahead = depth;
+            let fs = Safs::new(cfg);
+            let ctx = DenseCtx::with(fs.clone(), true, 64, 1, 3, 1, Arc::new(NativeKernels));
+            let a = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "sa"), true);
+            let at = build_matrix_opts(&at_coo, tile, BuildTarget::Safs(&fs, "sat"), true);
+            let op = GramOperator::new(a, at, SpmmOpts::default(), 1);
+            let ecfg = flasheigen::eigen::EigenConfig {
+                nev: 2,
+                block_size: 2,
+                num_blocks: 6,
+                tol: 1e-6,
+                max_restarts: 40,
+                which: flasheigen::eigen::Which::LargestAlgebraic,
+                seed: solver_seed,
+                compute_eigenvectors: false,
+            };
+            let res = flasheigen::eigen::svd(&op, &ctx, &ecfg);
+            match &reference {
+                None => reference = Some(res.singular_values),
+                Some(sv0) => {
+                    if &res.singular_values != sv0 {
+                        return Err(format!(
+                            "EM svd bits changed at read-ahead depth {depth}: {:?} vs {sv0:?}",
+                            res.singular_values
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_default_ctx_is_fused_streamed_and_matches_eager_bitwise() {
     // The default-flip regression canary: a fresh DenseCtx runs fused +
     // streamed, and the streamed operator boundary under that default is
