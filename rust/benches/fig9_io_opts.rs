@@ -1,9 +1,13 @@
 //! Figure 9: I/O optimization ablation on external-memory dense matrix
 //! multiplication (MvTransMv form), plus the §3.4 lazy-evaluation
 //! fusion ablation on CGS2 reorthogonalization (Figure 9b), the
-//! streamed SpMM operator boundary ablation (Figure 9c) and the
-//! streamed two-hop Gram ablation for the SVD path (Figure 9d).
-use flasheigen::harness::{fig9, fig9_fusion, fig9_gram, fig9_stream, BenchCfg};
+//! streamed SpMM operator boundary ablation (Figure 9c), the streamed
+//! two-hop Gram ablation for the SVD path (Figure 9d), the read-ahead
+//! ablation on the streamed SEM apply (Figure 9e) and the cross-apply
+//! image-residency ablation (Figure 9f).
+use flasheigen::harness::{
+    fig9, fig9_fusion, fig9_gram, fig9_imgcache, fig9_readahead, fig9_stream, BenchCfg,
+};
 
 fn main() {
     let cfg = BenchCfg::from_env();
@@ -15,4 +19,6 @@ fn main() {
     // streaming is the identity transformation on a single interval.
     fig9_stream(&cfg, 16.0, 4).print();
     fig9_gram(&cfg, 1.0, 4).print();
+    fig9_readahead(&cfg, 16.0, 4).print();
+    fig9_imgcache(&cfg, 16.0, 4).print();
 }

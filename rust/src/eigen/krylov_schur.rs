@@ -113,7 +113,12 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
             // the chained two-hop Aᵀ(A·v_p) — is produced interval-by-
             // interval inside the round-1 ortho walk: no full-height
             // intermediate, no on-SSD round trip of the new block (phase
-            // attribution handled inside expand_block_streamed).
+            // attribution handled inside expand_block_streamed).  Every
+            // apply of this loop walks the same SEM tile rows in the
+            // same order, so each one probes the matrix filesystem's
+            // shared cross-apply image cache (--image-cache budget;
+            // crate::safs::ImageCache): after the first expansion step,
+            // warm applies re-read only what the budget cannot hold.
             // Otherwise (explicit --eager opt-out, or a layout that
             // cannot stream): eager apply, then the CGS2 + Cholesky-QR
             // chain with the cached basis Gram.

@@ -21,6 +21,20 @@
 //! interval the `Aᵀ` tile-column structure will demand), overlapping
 //! SSD latency with multiplication exactly like the eager engine's
 //! partition pipeline — same bytes, same bits, lower `io_wait`.
+//!
+//! **Cross-apply image residency.**  The solver applies one operator
+//! once per expansion step, and consecutive applies walk the same tile
+//! rows in the same order — so every apply (streamed scheduler and
+//! eager partition pipeline alike) shares the matrix filesystem's
+//! [`crate::safs::ImageCache`] handle: SEM image ranges are probed
+//! there before any `IoTicket` is issued and finished images are
+//! published back under the [`crate::safs::SafsConfig::image_cache_bytes`]
+//! budget.  With a budget of at least one image, warm applies re-read
+//! zero image bytes and steady-state image traffic drops from
+//! O(iterations × image) to O(image); with less, the cache pins a
+//! stable prefix of the walk by next-use distance.  Caching moves
+//! *when/whether* bytes are read, never what is computed — results are
+//! bitwise identical at every budget (default 0 = off).
 
 use crate::dense::{
     conv_layout_from_rowmajor, conv_layout_to_rowmajor, DenseCtx, FusedPipeline,

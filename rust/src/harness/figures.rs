@@ -559,6 +559,122 @@ pub fn fig9_readahead(cfg: &BenchCfg, n_scale: f64, b: usize) -> Table {
     t
 }
 
+// ------------------------------------------------------------- Fig 9f
+
+/// Measure repeated streamed SEM operator applies (`W = A·X`, image and
+/// subspace on SSDs) per cross-apply image-cache budget
+/// ([`crate::safs::SafsConfig::image_cache_bytes`]).  Budget 0 is the
+/// cache-off baseline; the other rows grant ¼-image and one-image of
+/// explicit RAM headroom.  Returns
+/// `(label, budget, cold_io, warm_io_total, cache_peak)` rows — cold is
+/// the first apply's delta, warm the accumulated deltas of the
+/// remaining `applies − 1` — the raw data behind [`fig9_imgcache`],
+/// also pinned by the I/O-accounting regression tests.
+pub fn fig9_imgcache_data(
+    cfg: &BenchCfg,
+    n_scale: f64,
+    b: usize,
+    applies: usize,
+) -> Vec<(&'static str, u64, IoStats, IoStats, u64)> {
+    assert!(applies >= 2, "need at least one warm apply");
+    let mut scaled = cfg.clone();
+    scaled.scale *= n_scale;
+    let mut coo = scaled.gen(Dataset::Friendster);
+    if Dataset::Friendster.directed() {
+        coo.symmetrize();
+    }
+    // The image byte total is a function of the layout alone, so a
+    // throwaway in-memory build sizes the budgets.
+    let image_bytes = scaled.build_im(&coo).storage_bytes();
+    let mut rows = Vec::new();
+    for (label, budget) in [
+        ("off", 0u64),
+        ("1/4 image", image_bytes / 4),
+        ("full image", image_bytes),
+    ] {
+        let mut per_budget = scaled.clone();
+        per_budget.image_cache = budget;
+        let fs = Safs::new(per_budget.safs_config());
+        // cache_slots = 0: the subspace is write-through, so the image
+        // share of every apply is cleanly visible next to it.
+        let ctx = DenseCtx::with(
+            fs.clone(),
+            true,
+            per_budget.interval_rows,
+            per_budget.threads,
+            8,
+            0,
+            Arc::new(NativeKernels),
+        );
+        let op = SpmmOperator::new(
+            per_budget.build_sem(&coo, &fs, "fig9f"),
+            SpmmOpts::default(),
+            per_budget.threads,
+        );
+        let n = coo.n_rows as usize;
+        let x = TasMatrix::zeros(&ctx, n, b);
+        mv_random(&x, 4242);
+        let mut cold = IoStats::default();
+        let mut warm = IoStats::default();
+        for i in 0..applies {
+            let before = fs.stats();
+            let _w = op.apply_streamed(&ctx, &x);
+            let delta = fs.stats().delta_since(&before);
+            if i == 0 {
+                cold = delta;
+            } else {
+                warm.accumulate(&delta);
+            }
+        }
+        rows.push((label, budget, cold, warm, fs.image_cache().mem().peak()));
+    }
+    rows
+}
+
+/// Figure 9f (beyond the paper): the cross-apply SEM image residency
+/// ablation — repeated streamed applies under image-cache budgets
+/// {0, ¼ image, one image}, reporting the cold apply, the mean warm
+/// apply, the residency hit share and the cache's peak footprint.
+/// Steady-state image traffic moves from O(applies × image) toward
+/// O(image) as the budget approaches one image.
+pub fn fig9_imgcache(cfg: &BenchCfg, n_scale: f64, b: usize) -> Table {
+    const APPLIES: usize = 3;
+    let mut t = Table::new(
+        "Figure 9f: cross-apply SEM image residency (3 streamed applies)",
+        &[
+            "budget", "bytes", "cold read", "warm read/apply", "hit share", "cache peak",
+            "warm vs off",
+        ],
+    );
+    let rows = fig9_imgcache_data(cfg, n_scale, b, APPLIES);
+    let w = (APPLIES - 1) as u64;
+    let base_warm = (rows[0].3.bytes_read / w).max(1);
+    for (label, budget, cold, warm, peak) in &rows {
+        let warm_read = warm.bytes_read / w;
+        let demanded = warm.cache_hit_bytes + warm.cache_miss_bytes;
+        let share = if demanded > 0 {
+            format!("{:.0}%", 100.0 * warm.cache_hit_bytes as f64 / demanded as f64)
+        } else {
+            "-".into()
+        };
+        t.row(vec![
+            (*label).into(),
+            fmt_bytes(*budget),
+            fmt_bytes(cold.bytes_read),
+            fmt_bytes(warm_read),
+            share,
+            fmt_bytes(*peak),
+            ratio(warm_read as f64 / base_warm as f64),
+        ]);
+    }
+    t.note(
+        "caching moves when/whether image bytes are read, never what is computed: results are \
+         bitwise identical at every budget; a full-image budget makes warm applies image-free \
+         (reads shrink to the subspace gather) and the cache peak never exceeds the budget",
+    );
+    t
+}
+
 /// Figure 9b (beyond the paper): the §3.4 lazy-evaluation ablation —
 /// eager op-by-op CGS2 vs the fused single-pass-per-round pipeline, on
 /// the same EM dense-matrix configuration as Figure 9.
@@ -607,7 +723,7 @@ pub fn fig10(cfg: &BenchCfg, n: usize, b: usize, m_list: &[usize]) -> Table {
         &["m", "FE-IM", "FE-EM", "MKL-like", "Trilinos-like", "EM/IM"],
     );
     for &m in m_list {
-        let (t_im, t_em, _, _, _) = fig10_point(cfg, n, b, m);
+        let (t_im, t_em, _, _) = fig10_point(cfg, n, b, m);
         // In-memory single-thread baselines over one contiguous buffer.
         let x: Vec<f64> = (0..n * m).map(|i| ((i * 31) % 101) as f64 - 50.0).collect();
         let bmat = SmallMat::from_fn(m, b, |r, c| ((r + 2 * c) % 7) as f64 - 3.0);
@@ -636,12 +752,12 @@ pub fn fig10(cfg: &BenchCfg, n: usize, b: usize, m_list: &[usize]) -> Table {
 }
 
 /// Measure one (n, b, m) op1 point in IM and EM mode; returns
-/// (im_secs, em_secs, em_bytes, em_elapsed_secs, em_io_wait_secs) — the
-/// latter three feed Figure 11's throughput/overlap series.
-pub fn fig10_point(cfg: &BenchCfg, n: usize, b: usize, m: usize) -> (f64, f64, u64, f64, f64) {
+/// (im_secs, em_secs, em_io_delta, em_elapsed_secs) — the latter two
+/// feed Figure 11's throughput/overlap/residency series.
+pub fn fig10_point(cfg: &BenchCfg, n: usize, b: usize, m: usize) -> (f64, f64, IoStats, f64) {
     assert_eq!(m % b, 0, "m must be a multiple of b");
     let bmat = SmallMat::from_fn(m, b, |r, c| ((r + 2 * c) % 7) as f64 - 3.0);
-    let run = |em: bool| -> (f64, u64, f64) {
+    let run = |em: bool| -> (f64, IoStats) {
         let fs = cfg.timed_safs();
         let ctx = DenseCtx::with(
             fs.clone(),
@@ -665,33 +781,43 @@ pub fn fig10_point(cfg: &BenchCfg, n: usize, b: usize, m: usize) -> (f64, f64, u
         let (_, el) = time_it(|| {
             mv_times_mat_add_mv(1.0, &refs, &bmat, 0.0, &cc);
         });
-        let delta = fs.stats().delta_since(&before);
-        (el, delta.total_bytes(), delta.wait_secs())
+        (el, fs.stats().delta_since(&before))
     };
-    let (t_im, _, _) = run(false);
-    let (t_em, bytes, wait) = run(true);
-    (t_im, t_em, bytes, t_em, wait)
+    let (t_im, _) = run(false);
+    let (t_em, io) = run(true);
+    (t_im, t_em, io, t_em)
 }
 
 /// Figure 11: average I/O throughput of EM dense MM across m, with the
 /// blocked `io_wait` share showing how much of the traffic the async
-/// pipeline failed to hide behind computation.
+/// pipeline failed to hide behind computation, and the image-cache
+/// residency share of whatever SEM image demand the workload had
+/// ("-" when no image traffic flows, as in this dense-only workload
+/// under the default cache-off budget).
 pub fn fig11(cfg: &BenchCfg, n: usize, b: usize, m_list: &[usize]) -> Table {
     let mut t = Table::new(
         "Figure 11: average I/O throughput of EM dense MM",
-        &["m", "bytes moved", "throughput", "per SSD", "of array max", "io wait"],
+        &["m", "bytes moved", "throughput", "per SSD", "of array max", "io wait", "residency"],
     );
     let max_bps = cfg.safs_config().aggregate_read_bps();
     for &m in m_list {
-        let (_, _, bytes, el, wait) = fig10_point(cfg, n, b, m);
+        let (_, _, io, el) = fig10_point(cfg, n, b, m);
+        let bytes = io.total_bytes();
         let bps = bytes as f64 / el;
+        let demanded = io.cache_hit_bytes + io.cache_miss_bytes;
+        let residency = if demanded > 0 {
+            format!("{:.0}%", 100.0 * io.cache_hit_bytes as f64 / demanded as f64)
+        } else {
+            "-".into()
+        };
         t.row(vec![
             format!("{m}"),
             fmt_bytes(bytes),
             fmt_throughput(bytes, el),
             fmt_throughput(bytes / 24, el),
             format!("{:.0}%", 100.0 * bps / max_bps),
-            format!("{wait:.3}s"),
+            format!("{:.3}s", io.wait_secs()),
+            residency,
         ]);
     }
     t.note("paper shape: throughput approaches the array maximum (10.87 of 12 GB/s) — the SSDs are the bottleneck");
@@ -907,6 +1033,7 @@ mod tests {
             interval_rows: 256,
             seed: 1,
             read_ahead: 2,
+            image_cache: 0,
         }
     }
 
@@ -1014,6 +1141,40 @@ mod tests {
         let t = fig9_readahead(&tiny_cfg(), 16.0, 2);
         assert_eq!(t.rows.len(), 3);
         assert!(t.render().contains("io wait"));
+    }
+
+    #[test]
+    fn fig9_imgcache_smoke_full_budget_makes_warm_applies_image_free() {
+        // Scale up so the image spans several intervals (the walk is an
+        // actual sequence, not a single range).
+        let rows = fig9_imgcache_data(&tiny_cfg(), 16.0, 2, 3);
+        assert_eq!(rows.len(), 3);
+        let (off, full) = (&rows[0], &rows[2]);
+        // Budget 0: the cache is inert — nothing counted, warm applies
+        // re-read like cold ones.
+        assert_eq!(off.3.cache_hit_bytes, 0, "disabled cache must not hit");
+        assert_eq!(off.4, 0, "disabled cache must hold nothing");
+        // Full-image budget: both warm applies serve the whole image
+        // from RAM (2 × image of hits) and read strictly fewer bytes
+        // than the cache-off warm applies (only the subspace remains).
+        assert_eq!(
+            full.3.cache_hit_bytes,
+            2 * full.1,
+            "warm applies must hit the whole image twice"
+        );
+        assert!(
+            full.3.bytes_read < off.3.bytes_read,
+            "residency must cut warm traffic: {} vs {}",
+            full.3.bytes_read,
+            off.3.bytes_read
+        );
+        // Every budget: resident cache bytes stay within the budget.
+        for (_, budget, _, _, peak) in &rows {
+            assert!(peak <= budget, "cache peak {peak} exceeds budget {budget}");
+        }
+        let t = fig9_imgcache(&tiny_cfg(), 16.0, 2);
+        assert_eq!(t.rows.len(), 3);
+        assert!(t.render().contains("hit share"));
     }
 
     #[test]

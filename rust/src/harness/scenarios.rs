@@ -42,6 +42,10 @@ pub struct BenchCfg {
     /// SEM image read-ahead depth (FLASHEIGEN_READ_AHEAD / CLI
     /// `--read-ahead`; 0 = synchronous differential-testing baseline).
     pub read_ahead: usize,
+    /// Byte budget of the cross-apply SEM image cache
+    /// (FLASHEIGEN_IMAGE_CACHE / CLI `--image-cache`, size suffixes
+    /// accepted; 0 = disabled, the differential-testing baseline).
+    pub image_cache: u64,
 }
 
 impl Default for BenchCfg {
@@ -54,6 +58,7 @@ impl Default for BenchCfg {
             interval_rows: 131072,
             seed: 0xBE9C,
             read_ahead: 2,
+            image_cache: 0,
         }
     }
 }
@@ -73,6 +78,12 @@ impl BenchCfg {
         }
         if let Some(v) = getf("FLASHEIGEN_READ_AHEAD") {
             c.read_ahead = v as usize;
+        }
+        if let Some(v) = std::env::var("FLASHEIGEN_IMAGE_CACHE")
+            .ok()
+            .and_then(|v| crate::util::cli::parse_scaled_usize(&v))
+        {
+            c.image_cache = v as u64;
         }
         c
     }
@@ -96,6 +107,7 @@ impl BenchCfg {
             io_scale: 1.0,
             ctx_switch_cost: 15e-6 * self.dilation,
             read_ahead: self.read_ahead,
+            image_cache_bytes: self.image_cache,
         }
     }
 

@@ -45,6 +45,12 @@ COMMON OPTIONS:
                      streamed SpMM paths (default 2; 0 = synchronous
                      reads, the differential-testing baseline — same
                      bytes and bits at every depth, only io_wait moves)
+  --image-cache <B>  cross-apply SEM image cache budget in bytes (size
+                     suffixes accepted, e.g. 64m; default 0 = off): hot
+                     tile-row images stay resident across operator
+                     applies, so warm applies re-read only what the
+                     budget cannot hold — same bits at every budget,
+                     steady-state image traffic drops toward O(image)
   --sem              semi-external mode (matrix + subspace on SSDs)
   --eager            opt out of the DEFAULT fused + streamed §3.4 path:
                      run the eager Table-1 reference ops and the
@@ -75,7 +81,7 @@ fn main() {
         &argv[1..],
         &[
             "graph", "scale", "nev", "block", "nblocks", "tol", "threads", "dilation",
-            "cols", "exp", "seed", "read-ahead",
+            "cols", "exp", "seed", "read-ahead", "image-cache",
         ],
     ) {
         Ok(a) => a,
@@ -111,6 +117,7 @@ fn bench_cfg(args: &Args) -> Result<BenchCfg, String> {
     cfg.dilation = args.get_f64("dilation", cfg.dilation)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     cfg.read_ahead = args.get_usize("read-ahead", cfg.read_ahead)?;
+    cfg.image_cache = args.get_usize("image-cache", cfg.image_cache as usize)? as u64;
     Ok(cfg)
 }
 
@@ -330,6 +337,9 @@ fn cmd_figures(args: &Args) -> i32 {
             // Read-ahead ablation on the streamed SEM apply (same 16x
             // scale-up as fig9_stream so the walk spans intervals).
             harness::fig9_readahead(&cfg, 16.0, 4).print();
+            // Cross-apply image residency ablation (budgets 0 / quarter
+            // image / full image over repeated streamed SEM applies).
+            harness::fig9_imgcache(&cfg, 16.0, 4).print();
             ran = true;
         }
         if all || exp == "fig10" {

@@ -92,7 +92,10 @@ impl PhaseTimers {
 /// ([`IoStats::wait_secs`]).  Bytes say how much a phase read; `io_wait`
 /// says how much of that I/O the read-ahead schedulers failed to hide
 /// behind computation, so the fig9/fig11 rows can show *overlap*, not
-/// just traffic.
+/// just traffic.  Deltas likewise carry the cross-apply image-cache
+/// counters ([`IoStats::cache_hit_bytes`] and friends), so the per-phase
+/// report shows the residency win — image bytes served from RAM instead
+/// of the array — next to the bytes that still moved.
 ///
 /// Beyond SAFS bytes, a phase can also record the **peak resident dense
 /// bytes** observed while it ran ([`PhaseIo::scope_tracked`]): the
@@ -206,6 +209,14 @@ impl PhaseIo {
                 crate::util::humansize::fmt_bytes(s.bytes_written),
                 s.wait_secs()
             ));
+            if s.cache_hit_bytes > 0 {
+                // Cross-apply image residency: bytes this phase served
+                // from the SEM image cache instead of the array.
+                out.push_str(&format!(
+                    "  img hit {:>10}",
+                    crate::util::humansize::fmt_bytes(s.cache_hit_bytes)
+                ));
+            }
             if let Some(&p) = peaks.get(name) {
                 out.push_str(&format!(
                     "  peak dense {:>10}",
@@ -346,6 +357,25 @@ mod tests {
         assert!(io.report().contains("io wait"));
         io.reset();
         assert_eq!(io.get("write").bytes_written, 0);
+    }
+
+    #[test]
+    fn phase_io_reports_image_cache_hits() {
+        use crate::safs::{Safs, SafsConfig};
+        let mut cfg = SafsConfig::untimed();
+        cfg.image_cache_bytes = 1 << 20;
+        let fs = Safs::new(cfg);
+        let io = PhaseIo::new();
+        io.scope(&fs, "spmm", || {
+            let cache = fs.image_cache();
+            assert!(cache.probe("img", 0, 100).is_none());
+            assert!(cache.publish("img", 0, vec![1u8; 100]).is_none());
+            assert!(cache.probe("img", 0, 100).is_some());
+        });
+        let s = io.get("spmm");
+        assert_eq!(s.cache_hit_bytes, 100, "hit attributed to the phase");
+        assert_eq!(s.cache_miss_bytes, 100, "miss attributed to the phase");
+        assert!(io.report().contains("img hit"));
     }
 
     #[test]

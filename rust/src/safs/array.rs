@@ -18,6 +18,17 @@ pub struct IoStats {
     /// `bytes_read` stays constant; [`crate::metrics::PhaseIo`] reports it
     /// per solver phase as `io wait`.
     pub wait_nanos: u64,
+    /// Bytes served by the cross-apply SEM image cache
+    /// ([`crate::safs::ImageCache`]) instead of being read from the
+    /// array — the residency win.  `0` whenever the cache is disabled
+    /// (the default `image_cache_bytes = 0`).
+    pub cache_hit_bytes: u64,
+    /// Image bytes demanded that the cache could not serve (these were
+    /// read from the array and are therefore also part of
+    /// [`IoStats::bytes_read`]).
+    pub cache_miss_bytes: u64,
+    /// Image-cache bytes evicted under budget pressure.
+    pub cache_evict_bytes: u64,
     /// Per-device bytes (read, written) — used to check striping balance.
     pub per_device: Vec<(u64, u64)>,
 }
@@ -55,6 +66,9 @@ impl IoStats {
         self.read_reqs += other.read_reqs;
         self.write_reqs += other.write_reqs;
         self.wait_nanos += other.wait_nanos;
+        self.cache_hit_bytes += other.cache_hit_bytes;
+        self.cache_miss_bytes += other.cache_miss_bytes;
+        self.cache_evict_bytes += other.cache_evict_bytes;
         if self.per_device.len() < other.per_device.len() {
             self.per_device.resize(other.per_device.len(), (0, 0));
         }
@@ -72,6 +86,13 @@ impl IoStats {
             read_reqs: self.read_reqs - earlier.read_reqs,
             write_reqs: self.write_reqs - earlier.write_reqs,
             wait_nanos: self.wait_nanos - earlier.wait_nanos,
+            // Saturating: an array-level snapshot ([`SsdArray::stats`])
+            // carries zero cache counters while a filesystem-level one
+            // ([`crate::safs::Safs::stats`]) overlays the real values —
+            // mixing the two must not underflow.
+            cache_hit_bytes: self.cache_hit_bytes.saturating_sub(earlier.cache_hit_bytes),
+            cache_miss_bytes: self.cache_miss_bytes.saturating_sub(earlier.cache_miss_bytes),
+            cache_evict_bytes: self.cache_evict_bytes.saturating_sub(earlier.cache_evict_bytes),
             per_device: self
                 .per_device
                 .iter()
@@ -100,6 +121,11 @@ impl SsdArray {
         &self.devices[i % self.devices.len()]
     }
 
+    /// Aggregate device-level statistics.  The image-cache counters are
+    /// always zero at this level — snapshot through
+    /// [`crate::safs::Safs::stats`] when cache residency matters, and
+    /// do not mix the two snapshot sources in one
+    /// [`IoStats::delta_since`] pair.
     pub fn stats(&self) -> IoStats {
         let per_device: Vec<(u64, u64)> = self
             .devices
@@ -112,6 +138,11 @@ impl SsdArray {
             read_reqs: self.devices.iter().map(|d| d.stats.read_reqs.get()).sum(),
             write_reqs: self.devices.iter().map(|d| d.stats.write_reqs.get()).sum(),
             wait_nanos: self.wait_nanos.load(Ordering::Relaxed),
+            // The array never sees cache hits; [`crate::safs::Safs::stats`]
+            // overlays the image-cache counters on this snapshot.
+            cache_hit_bytes: 0,
+            cache_miss_bytes: 0,
+            cache_evict_bytes: 0,
             per_device,
         }
     }

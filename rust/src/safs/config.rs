@@ -61,6 +61,17 @@ pub struct SafsConfig {
     /// bytes are read, never *what* is computed, so results and total
     /// bytes are identical at every depth.  CLI: `--read-ahead`.
     pub read_ahead: usize,
+    /// Byte budget of the cross-apply SEM image cache
+    /// ([`crate::safs::ImageCache`]): hot sparse-matrix tile-row images
+    /// stay resident in RAM across operator applies, so steady-state
+    /// image traffic drops from O(iterations × image) toward O(image).
+    /// `0` (the default) disables the cache — every image read goes to
+    /// the array, the pre-cache behaviour and the differential-testing
+    /// baseline.  Like read-ahead, caching moves *when/whether* bytes
+    /// are read, never what is computed: results are bitwise identical
+    /// at every budget.  CLI: `--image-cache`; env:
+    /// `FLASHEIGEN_IMAGE_CACHE`.
+    pub image_cache_bytes: u64,
 }
 
 impl Default for SafsConfig {
@@ -80,6 +91,7 @@ impl Default for SafsConfig {
             io_scale: 1.0,
             ctx_switch_cost: 15e-6,
             read_ahead: 2,
+            image_cache_bytes: 0,
         }
     }
 }
@@ -133,6 +145,15 @@ mod tests {
         // historical hardcoded PREFETCH_DEPTH queue).
         assert_eq!(SafsConfig::default().read_ahead, 2);
         assert_eq!(SafsConfig::untimed().read_ahead, 2);
+    }
+
+    #[test]
+    fn image_cache_defaults_off() {
+        // Cross-apply image residency is opt-in RAM headroom: the
+        // default budget of 0 keeps every configuration byte-identical
+        // to the pre-cache behaviour.
+        assert_eq!(SafsConfig::default().image_cache_bytes, 0);
+        assert_eq!(SafsConfig::untimed().image_cache_bytes, 0);
     }
 
     #[test]

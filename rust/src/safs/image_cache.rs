@@ -1,0 +1,573 @@
+//! The cross-apply SEM image cache (ROADMAP §3.4 "cross-apply image
+//! residency").
+//!
+//! Every Krylov expansion step re-reads the whole SEM sparse-matrix
+//! image: the paper only hides that cost *within* an apply (§3.4.4
+//! caches "the most recent dense matrix"; tile-row images are always
+//! streamed).  But consecutive operator applies walk the **same tile
+//! rows in the same order** — the walk is a function of the matrix
+//! layout, not of the iterate — so a bounded cache of finished tile-row
+//! images turns steady-state image traffic from O(iterations × image)
+//! toward O(image): a FlashGraph-style SEM page cache with
+//! access-pattern-aware eviction, sized by an explicit RAM headroom
+//! budget ([`crate::safs::SafsConfig::image_cache_bytes`], CLI
+//! `--image-cache`, env `FLASHEIGEN_IMAGE_CACHE`; the default `0`
+//! disables the cache entirely — every probe misses, every publish is
+//! rejected, and no counter moves).
+//!
+//! # Probe / publish contract
+//!
+//! The cache stores immutable byte buffers keyed by `(file name, byte
+//! offset)` — one entry per contiguous tile-row range a reader issues
+//! (the streamed subsystem's per-interval ranges, the eager engine's
+//! per-partition ranges).  Readers interact through three calls:
+//!
+//! * [`ImageCache::probe`] — look up a range *at demand time*.  A hit
+//!   hands back a shared handle to the bytes (no SAFS read is issued; the
+//!   hit is counted and the entry's walk cursor/LRU state advance).  A
+//!   miss is counted and the caller issues its own read.  Exactly one
+//!   probe (or [`ImageCache::note_miss`]/[`ImageCache::note_hit`], for
+//!   readers that resolved the range earlier via [`ImageCache::peek`] or
+//!   an in-flight prefetch ticket) is made per demand, so per apply
+//!   `hit bytes + miss bytes = demanded bytes`.
+//! * [`ImageCache::publish`] — offer freshly read bytes for cross-apply
+//!   retention.  The buffer is **moved** into the cache on admission;
+//!   on rejection (cache disabled, the candidate would itself be the
+//!   next eviction victim, or the buffer alone exceeds the budget) it is
+//!   handed back so the caller can recycle it through its
+//!   [`crate::safs::BufferPool`].
+//! * [`ImageCache::peek`] — a side-effect-free lookup for prefetchers
+//!   deciding whether to issue a read-ahead ticket: a range that is
+//!   already resident must **not** be requested from the array (the
+//!   read-ahead ticket discipline: every issued ticket is consumed by
+//!   exactly one acquire, so a ticket for cached bytes would be a
+//!   wasted read).
+//!
+//! # Budget accounting
+//!
+//! Resident bytes never exceed the construction-time budget: admission
+//! happens only after enough victims are evicted, and a buffer larger
+//! than the whole budget is rejected outright.  Residency is tracked by
+//! a dedicated [`MemTracker`] (exposed via [`ImageCache::mem`]) so
+//! tests pin `peak() ≤ budget`; the budget is the explicitly granted
+//! RAM headroom of the SEM-SpMM model and is deliberately **not**
+//! folded into the solver's dense working-set tracker — the §3.4.3
+//! group bounds stay cache-independent.
+//!
+//! # Eviction policy
+//!
+//! The walk order of an apply is registered up front
+//! ([`ImageCache::register_walk`]: ascending interval ranges for
+//! sequential walks, hop-1 first-touch order for demand-driven walks —
+//! both derived from the in-RAM matrix index at zero image I/O).
+//! Because the next apply repeats the same walk, the **next-use
+//! distance** of a range is its distance to its own slot in the next
+//! apply, measured from the walk's cursor (the most recently demanded
+//! slot).  The victim is the entry with the farthest next use; a
+//! candidate that would itself be the farthest is simply not admitted —
+//! on a cyclic walk through a cache smaller than the image this
+//! degenerates to Belady's choice: a stable prefix of the walk stays
+//! pinned and every other range streams.  Entries of files with no
+//! registered walk fall back to least-recently-used order (and are
+//! preferred as victims over schedule-backed entries — no information
+//! loses to information).  Entries untouched for several whole walks
+//! are demoted to evict-first staleness so a finished operator's image
+//! cannot pin the budget forever.  Ties break on the lexicographically
+//! smallest `(file, offset)` key — deterministic by construction.
+//!
+//! Concurrent walk workers make the cursor approximate (it tracks the
+//! most recent probe from any worker); that only affects *which* ranges
+//! stay resident, never what is computed — caching moves when/whether
+//! bytes are read, never the bytes a multiply consumes.
+//!
+//! # Example (in-memory)
+//!
+//! ```
+//! use flasheigen::safs::ImageCache;
+//!
+//! let cache = ImageCache::new(160); // bytes of budget
+//! cache.register_walk("img", &[0, 100, 200]);
+//! assert!(cache.probe("img", 0, 64).is_none()); // cold miss
+//! assert!(cache.publish("img", 0, vec![7u8; 64]).is_none()); // admitted
+//! let hit = cache.probe("img", 0, 64).expect("resident across applies");
+//! assert_eq!(&hit[..4], &[7, 7, 7, 7]);
+//! let c = cache.counters();
+//! assert_eq!((c.hit_bytes, c.miss_bytes), (64, 64));
+//! assert!(cache.mem().peak() <= 160);
+//! ```
+
+use crate::metrics::MemTracker;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Fixed-point scale for next-use distances normalized to one apply
+/// (so walks of different lengths compare fairly).
+const DIST_FP: u64 = 1 << 20;
+
+/// How many whole walks an entry may go untouched before it is demoted
+/// to evict-first staleness (see the module docs).
+const STALE_WALKS: u64 = 4;
+
+/// Snapshot of the cache's byte counters (all monotonic).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ImageCacheCounters {
+    /// Bytes served from the cache instead of the array.
+    pub hit_bytes: u64,
+    /// Bytes demanded that the cache could not serve (read from SAFS).
+    pub miss_bytes: u64,
+    /// Bytes evicted under budget pressure (admission rejections are
+    /// not evictions — nothing was resident to give up).
+    pub evict_bytes: u64,
+}
+
+struct Entry {
+    bytes: Arc<Vec<u8>>,
+    /// Global probe clock at the last touch (LRU fallback + staleness).
+    lru: u64,
+}
+
+/// One file's registered walk: slot per byte offset, in demand order.
+struct Walk {
+    slots: HashMap<u64, u32>,
+    len: u32,
+    /// Most recently demanded slot (approximate under concurrency).
+    cursor: u32,
+}
+
+#[derive(Default)]
+struct CacheInner {
+    entries: BTreeMap<(String, u64), Entry>,
+    walks: HashMap<String, Walk>,
+    used: u64,
+    /// Global probe/publish clock (drives LRU age and staleness).
+    clock: u64,
+}
+
+/// The bounded cross-apply SEM image cache.  See the module docs for
+/// the probe/publish semantics, budget accounting and eviction policy.
+pub struct ImageCache {
+    budget: u64,
+    inner: Mutex<CacheInner>,
+    mem: MemTracker,
+    hit_bytes: AtomicU64,
+    miss_bytes: AtomicU64,
+    evict_bytes: AtomicU64,
+}
+
+impl ImageCache {
+    /// A cache holding at most `budget` resident bytes (0 = disabled:
+    /// every call is a counted-nothing no-op).
+    pub fn new(budget: u64) -> ImageCache {
+        ImageCache {
+            budget,
+            inner: Mutex::new(CacheInner::default()),
+            mem: MemTracker::default(),
+            hit_bytes: AtomicU64::new(0),
+            miss_bytes: AtomicU64::new(0),
+            evict_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether the cache admits anything at all.
+    pub fn is_enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    /// The construction-time byte budget.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// The residency tracker: `current()` is the resident byte total,
+    /// `peak()` its high-water mark — both structurally ≤ the budget.
+    pub fn mem(&self) -> &MemTracker {
+        &self.mem
+    }
+
+    /// Monotonic hit/miss/evict byte counters.
+    pub fn counters(&self) -> ImageCacheCounters {
+        ImageCacheCounters {
+            hit_bytes: self.hit_bytes.load(Ordering::Relaxed),
+            miss_bytes: self.miss_bytes.load(Ordering::Relaxed),
+            evict_bytes: self.evict_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Register (or refresh) `file`'s walk: `offsets` in the order one
+    /// apply demands them.  Re-registering the same geometry (every
+    /// apply constructs its reader anew) keeps the cursor so next-use
+    /// distances stay continuous across applies; a changed geometry
+    /// resets it to the walk end (the next demand of slot 0 is then the
+    /// nearest future).
+    pub fn register_walk(&self, file: &str, offsets: &[u64]) {
+        if self.budget == 0 || offsets.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let len = offsets.len() as u32;
+        let cursor = match inner.walks.get(file) {
+            Some(w) if w.len == len => w.cursor,
+            _ => len - 1,
+        };
+        let slots = offsets.iter().enumerate().map(|(i, &o)| (o, i as u32)).collect();
+        inner.walks.insert(file.to_string(), Walk { slots, len, cursor });
+    }
+
+    /// Demand-time lookup of `(file, offset)` expecting `len` bytes.
+    /// Counts one hit or miss, advances the walk cursor, and on a hit
+    /// returns a shared handle to the bytes.  A resident entry whose
+    /// length does not match the demand (stale geometry) is dropped and
+    /// counted as a miss.
+    pub fn probe(&self, file: &str, offset: u64, len: usize) -> Option<Arc<Vec<u8>>> {
+        if self.budget == 0 {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        Self::touch(&mut inner, file, offset);
+        let clock = inner.clock;
+        let key = (file.to_string(), offset);
+        let stale_len = match inner.entries.get_mut(&key) {
+            Some(e) if e.bytes.len() == len => {
+                e.lru = clock;
+                self.hit_bytes.fetch_add(len as u64, Ordering::Relaxed);
+                return Some(e.bytes.clone());
+            }
+            Some(e) => Some(e.bytes.len() as u64),
+            None => None,
+        };
+        if stale_len.is_some() {
+            let e = inner.entries.remove(&key).unwrap();
+            self.drop_entry(&mut inner, e.bytes.len() as u64);
+        }
+        self.miss_bytes.fetch_add(len as u64, Ordering::Relaxed);
+        None
+    }
+
+    /// Side-effect-free lookup (prefetchers deciding whether to issue a
+    /// read-ahead ticket).  No counter moves, no cursor advances.
+    pub fn peek(&self, file: &str, offset: u64, len: usize) -> Option<Arc<Vec<u8>>> {
+        if self.budget == 0 {
+            return None;
+        }
+        let inner = self.inner.lock().unwrap();
+        inner
+            .entries
+            .get(&(file.to_string(), offset))
+            .filter(|e| e.bytes.len() == len)
+            .map(|e| e.bytes.clone())
+    }
+
+    /// Account a demand that was already resolved from the cache (a
+    /// prefetcher's earlier [`ImageCache::peek`]): one hit, cursor
+    /// advanced, LRU refreshed.
+    pub fn note_hit(&self, file: &str, offset: u64, len: usize) {
+        if self.budget == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        Self::touch(&mut inner, file, offset);
+        let clock = inner.clock;
+        if let Some(e) = inner.entries.get_mut(&(file.to_string(), offset)) {
+            e.lru = clock;
+        }
+        self.hit_bytes.fetch_add(len as u64, Ordering::Relaxed);
+    }
+
+    /// Account a demand that was already resolved by an in-flight
+    /// prefetch ticket (the bytes are being read from the array): one
+    /// miss, cursor advanced.  This is what keeps
+    /// `hits + misses = demands` exact for scheduled readers.
+    pub fn note_miss(&self, file: &str, offset: u64, len: usize) {
+        if self.budget == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        Self::touch(&mut inner, file, offset);
+        self.miss_bytes.fetch_add(len as u64, Ordering::Relaxed);
+    }
+
+    /// Offer freshly read bytes for retention.  Returns `None` when the
+    /// buffer was admitted (moved into the cache) or `Some(bytes)`
+    /// handing it back on rejection: cache disabled, buffer larger than
+    /// the whole budget, the range already resident (a concurrent
+    /// worker won the publish), or the candidate would itself be the
+    /// next eviction victim (on a cyclic walk: the stable-prefix
+    /// admission rule — see the module docs).
+    pub fn publish(&self, file: &str, offset: u64, bytes: Vec<u8>) -> Option<Vec<u8>> {
+        let len = bytes.len() as u64;
+        if self.budget == 0 || len == 0 || len > self.budget {
+            return Some(bytes);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let key = (file.to_string(), offset);
+        if inner.entries.contains_key(&key) {
+            return Some(bytes);
+        }
+        while inner.used + len > self.budget {
+            let cand = Self::priority(&inner, file, offset, 0);
+            let mut best: Option<((u8, u64), (String, u64))> = None;
+            for (k, e) in &inner.entries {
+                let p = Self::priority(&inner, &k.0, k.1, inner.clock.saturating_sub(e.lru));
+                let better = match &best {
+                    None => true,
+                    Some((bp, bk)) => p > *bp || (p == *bp && k < bk),
+                };
+                if better {
+                    best = Some((p, k.clone()));
+                }
+            }
+            let Some((bp, bk)) = best else { return Some(bytes) };
+            if cand >= bp {
+                // The candidate is (at least tied for) the farthest next
+                // use: keep what is resident, stream the candidate.
+                return Some(bytes);
+            }
+            let e = inner.entries.remove(&bk).unwrap();
+            let blen = e.bytes.len() as u64;
+            self.drop_entry(&mut inner, blen);
+            self.evict_bytes.fetch_add(blen, Ordering::Relaxed);
+        }
+        inner.clock += 1;
+        let clock = inner.clock;
+        inner.used += len;
+        self.mem.alloc(len);
+        // Pool buffers can carry excess capacity; resident entries hold
+        // exactly the bytes the budget accounts for.
+        let mut bytes = bytes;
+        bytes.shrink_to_fit();
+        inner.entries.insert(key, Entry { bytes: Arc::new(bytes), lru: clock });
+        None
+    }
+
+    /// Drop every entry (and the walk) of `file` — called when the file
+    /// is deleted or truncated, so stale bytes can never be served.
+    pub fn invalidate_file(&self, file: &str) {
+        if self.budget == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let lo = (file.to_string(), 0u64);
+        let hi = (file.to_string(), u64::MAX);
+        let keys: Vec<(String, u64)> =
+            inner.entries.range(lo..=hi).map(|(k, _)| k.clone()).collect();
+        for k in keys {
+            let e = inner.entries.remove(&k).unwrap();
+            self.drop_entry(&mut inner, e.bytes.len() as u64);
+        }
+        inner.walks.remove(file);
+    }
+
+    /// Resident bytes right now (≤ the budget).
+    pub fn resident_bytes(&self) -> u64 {
+        self.mem.current()
+    }
+
+    fn drop_entry(&self, inner: &mut CacheInner, blen: u64) {
+        inner.used -= blen;
+        self.mem.free(blen);
+    }
+
+    /// Advance the global clock and `file`'s walk cursor to `offset`'s
+    /// slot (if scheduled).
+    fn touch(inner: &mut CacheInner, file: &str, offset: u64) {
+        inner.clock += 1;
+        if let Some(w) = inner.walks.get_mut(file) {
+            if let Some(&s) = w.slots.get(&offset) {
+                w.cursor = s;
+            }
+        }
+    }
+
+    /// Eviction priority of one (possibly candidate) range — compared
+    /// lexicographically, the maximum is evicted (or, for a publish
+    /// candidate, rejected) first:
+    ///
+    /// * class 2 — stale (untouched for [`STALE_WALKS`] whole walks);
+    /// * class 1 — no registered walk: rank = LRU age (oldest first);
+    /// * class 0 — scheduled: rank = next-use distance from the walk
+    ///   cursor, as a [`DIST_FP`] fixed-point fraction of one apply.
+    fn priority(inner: &CacheInner, file: &str, offset: u64, age: u64) -> (u8, u64) {
+        if let Some(w) = inner.walks.get(file) {
+            if let Some(&s) = w.slots.get(&offset) {
+                let total: u64 = inner.walks.values().map(|w| w.len as u64).sum();
+                if age > STALE_WALKS * total.max(16) {
+                    return (2, age);
+                }
+                let (slot, len, cursor) = (s as u64, w.len as u64, w.cursor as u64);
+                let dist = ((slot + len - cursor - 1) % len) + 1;
+                return (0, dist * DIST_FP / len);
+            }
+        }
+        (1, age)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bytes(n: usize, fill: u8) -> Vec<u8> {
+        vec![fill; n]
+    }
+
+    /// Next-use admission on a cyclic walk pins a stable prefix where
+    /// LRU would thrash: the just-demanded range is the farthest next
+    /// use, so it is streamed rather than displacing nearer-future
+    /// residents.
+    #[test]
+    fn next_use_admission_pins_the_walk_prefix_over_lru() {
+        let c = ImageCache::new(25);
+        c.register_walk("img", &[0, 10, 20, 30]);
+        for (off, fill) in [(0u64, 1u8), (10, 2), (20, 3), (30, 4)] {
+            assert!(c.probe("img", off, 10).is_none(), "cold miss at {off}");
+            let _ = c.publish("img", off, bytes(10, fill));
+        }
+        // LRU would hold {20, 30}; next-use keeps the prefix {0, 10}.
+        assert!(c.peek("img", 0, 10).is_some());
+        assert!(c.peek("img", 10, 10).is_some());
+        assert!(c.peek("img", 20, 10).is_none());
+        assert!(c.peek("img", 30, 10).is_none());
+        // The second apply hits the prefix and streams the rest.
+        assert!(c.probe("img", 0, 10).is_some());
+        assert!(c.probe("img", 10, 10).is_some());
+        assert!(c.probe("img", 20, 10).is_none());
+        let k = c.counters();
+        assert_eq!(k.hit_bytes, 20);
+        assert_eq!(k.miss_bytes, 50);
+        assert_eq!(k.evict_bytes, 0, "rejections are not evictions");
+        assert!(c.mem().peak() <= 25);
+        assert_eq!(c.resident_bytes(), 20);
+    }
+
+    /// A candidate probed by a worker *behind* the cursor (its next use
+    /// is near) evicts the resident range whose next use lies farther.
+    #[test]
+    fn next_use_eviction_prefers_the_farthest_resident() {
+        let c = ImageCache::new(25);
+        c.register_walk("a", &[0, 10]);
+        c.register_walk("b", &[0, 10, 20, 30]);
+        // Resident: a/0 at next-use distance 1/2 of an apply.
+        assert!(c.probe("a", 10, 10).is_none()); // cursor a = 1
+        let _ = c.publish("a", 10, bytes(10, 1)); // dist 2/2 → admitted
+        assert!(c.probe("a", 0, 10).is_none()); // cursor a = 0; a/10 now dist 1/2
+        let _ = c.publish("a", 0, bytes(10, 2)); // dist 2/2 → admitted (20/25 used)
+        // b/20 demanded, then a second worker falls back to b/10 before
+        // the publish lands: the candidate's next use (distance 1/4) is
+        // nearer than resident a/0 (2/2 = one full apply) → evict a/0.
+        assert!(c.probe("b", 20, 10).is_none()); // cursor b = 2
+        assert!(c.probe("b", 10, 10).is_none()); // cursor b = 1
+        assert!(c.publish("b", 20, bytes(10, 3)).is_none(), "near next use must be admitted");
+        assert!(c.peek("b", 20, 10).is_some());
+        assert!(c.peek("a", 0, 10).is_none(), "farthest resident evicted");
+        assert!(c.peek("a", 10, 10).is_some());
+        assert_eq!(c.counters().evict_bytes, 10);
+        assert!(c.mem().peak() <= 25);
+    }
+
+    /// Ties in eviction priority break on the smallest (file, offset)
+    /// key — deterministic victim selection.
+    #[test]
+    fn eviction_tie_breaks_deterministically() {
+        let c = ImageCache::new(25);
+        c.register_walk("a", &[0]);
+        c.register_walk("b", &[0]);
+        c.register_walk("c", &[0, 10]);
+        let _ = c.publish("a", 0, bytes(10, 1)); // dist 1/1 of its walk
+        let _ = c.publish("b", 0, bytes(10, 2)); // dist 1/1 — tied with a/0
+        // Candidate at distance 1/2 (cursor just moved past its slot):
+        // both residents tie at a whole apply; the smaller key loses.
+        assert!(c.probe("c", 0, 10).is_none()); // cursor c = 0
+        assert!(c.probe("c", 10, 10).is_none()); // cursor c = 1; c/0 now dist 1/2
+        assert!(c.publish("c", 0, bytes(10, 3)).is_none());
+        assert!(c.peek("a", 0, 10).is_none(), "tie must evict the smallest key");
+        assert!(c.peek("b", 0, 10).is_some());
+        assert!(c.peek("c", 0, 10).is_some());
+    }
+
+    /// Without a registered walk the cache is plain LRU: newest always
+    /// admitted, least-recently-touched evicted (the fallback the
+    /// chained apply uses when the hops' tile dimensions differ and no
+    /// demand schedule can be derived).
+    #[test]
+    fn lru_fallback_without_a_schedule() {
+        let c = ImageCache::new(25);
+        let _ = c.publish("img", 0, bytes(10, 1));
+        let _ = c.publish("img", 10, bytes(10, 2));
+        assert!(c.probe("img", 0, 10).is_some()); // refresh 0
+        assert!(c.publish("img", 20, bytes(10, 3)).is_none(), "LRU admits the newest");
+        assert!(c.peek("img", 0, 10).is_some(), "recently touched survives");
+        assert!(c.peek("img", 10, 10).is_none(), "oldest evicted");
+        assert!(c.peek("img", 20, 10).is_some());
+        assert_eq!(c.counters().evict_bytes, 10);
+    }
+
+    /// Entries untouched for several whole walks are demoted to
+    /// evict-first staleness, so a finished operator's image cannot pin
+    /// the budget against a new walk forever.
+    #[test]
+    fn stale_entries_yield_the_budget() {
+        let c = ImageCache::new(25);
+        c.register_walk("old", &[0, 10]);
+        let _ = c.publish("old", 0, bytes(10, 1));
+        let _ = c.publish("old", 10, bytes(10, 2));
+        c.register_walk("new", &[0, 10]);
+        // Age the old entries past the staleness horizon (clock is
+        // driven by probes).
+        for _ in 0..(STALE_WALKS as usize * 16 + 8) {
+            let _ = c.probe("new", 0, 10);
+            let _ = c.probe("new", 10, 10);
+        }
+        assert!(c.publish("new", 0, bytes(10, 3)).is_none(), "stale budget must be reclaimed");
+        assert!(c.peek("new", 0, 10).is_some());
+        assert!(
+            c.peek("old", 0, 10).is_none() || c.peek("old", 10, 10).is_none(),
+            "at least one stale entry must have been evicted"
+        );
+    }
+
+    /// The disabled cache (budget 0 — the default) is a strict no-op:
+    /// nothing resident, nothing counted, every publish handed back.
+    #[test]
+    fn disabled_cache_is_a_noop() {
+        let c = ImageCache::new(0);
+        assert!(!c.is_enabled());
+        c.register_walk("img", &[0, 10]);
+        assert!(c.probe("img", 0, 10).is_none());
+        let back = c.publish("img", 0, bytes(10, 1));
+        assert_eq!(back.map(|b| b.len()), Some(10));
+        assert_eq!(c.counters(), ImageCacheCounters::default());
+        assert_eq!(c.resident_bytes(), 0);
+    }
+
+    /// Geometry changes: a buffer over the whole budget is rejected, a
+    /// length-mismatched hit is dropped as stale, and file invalidation
+    /// clears residency.
+    #[test]
+    fn budget_staleness_and_invalidation_guards() {
+        let c = ImageCache::new(25);
+        let big = c.publish("img", 0, bytes(30, 1));
+        assert!(big.is_some(), "a buffer over the whole budget is rejected");
+        assert!(c.publish("img", 0, bytes(10, 2)).is_none());
+        // Same offset, different length: stale geometry → miss + drop.
+        assert!(c.probe("img", 0, 20).is_none());
+        assert_eq!(c.resident_bytes(), 0);
+        assert!(c.publish("img", 0, bytes(10, 3)).is_none());
+        c.invalidate_file("img");
+        assert_eq!(c.resident_bytes(), 0);
+        assert!(c.peek("img", 0, 10).is_none());
+        assert_eq!(c.mem().current(), 0);
+    }
+
+    /// Double-publish of one range (two workers racing) keeps the first
+    /// copy and hands the second buffer back for pooling.
+    #[test]
+    fn concurrent_publish_keeps_the_first_copy() {
+        let c = ImageCache::new(100);
+        assert!(c.publish("img", 0, bytes(10, 1)).is_none());
+        let back = c.publish("img", 0, bytes(10, 2));
+        assert!(back.is_some(), "second publish must be handed back");
+        assert_eq!(c.probe("img", 0, 10).unwrap()[0], 1, "first copy retained");
+        assert_eq!(c.resident_bytes(), 10);
+    }
+}

@@ -14,6 +14,7 @@ pub mod buffer_pool;
 pub mod config;
 pub mod device;
 pub mod file;
+pub mod image_cache;
 pub mod io;
 pub mod stripe;
 
@@ -21,6 +22,7 @@ pub use array::{IoStats, SsdArray};
 pub use buffer_pool::BufferPool;
 pub use config::{SafsConfig, WaitMode};
 pub use file::{FileHandle, SafsFile};
+pub use image_cache::{ImageCache, ImageCacheCounters};
 pub use io::{IoEngine, IoTicket};
 pub use stripe::StripeMap;
 
@@ -28,20 +30,27 @@ use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
 
-/// The filesystem: file namespace + device array + I/O engine.
+/// The filesystem: file namespace + device array + I/O engine + the
+/// cross-apply SEM image cache.
 pub struct Safs {
     engine: IoEngine,
     files: RwLock<HashMap<String, FileHandle>>,
     rng: Mutex<Rng>,
+    /// Shared across every reader of this filesystem — the handle that
+    /// makes hot tile-row images survive from one operator apply to the
+    /// next ([`SafsConfig::image_cache_bytes`]; 0 = disabled).
+    image_cache: Arc<ImageCache>,
 }
 
 impl Safs {
     pub fn new(cfg: SafsConfig) -> Arc<Safs> {
+        let image_cache = Arc::new(ImageCache::new(cfg.image_cache_bytes));
         let array = Arc::new(SsdArray::new(cfg));
         Arc::new(Safs {
             engine: IoEngine::new(array),
             files: RwLock::new(HashMap::new()),
             rng: Mutex::new(Rng::new(0x5AF5_u64)),
+            image_cache,
         })
     }
 
@@ -53,8 +62,19 @@ impl Safs {
         self.engine.array()
     }
 
+    /// The cross-apply SEM image cache every reader of this filesystem
+    /// shares (disabled when `image_cache_bytes` is 0).
+    pub fn image_cache(&self) -> &Arc<ImageCache> {
+        &self.image_cache
+    }
+
     pub fn stats(&self) -> IoStats {
-        self.engine.array().stats()
+        let mut s = self.engine.array().stats();
+        let c = self.image_cache.counters();
+        s.cache_hit_bytes = c.hit_bytes;
+        s.cache_miss_bytes = c.miss_bytes;
+        s.cache_evict_bytes = c.evict_bytes;
+        s
     }
 
     /// Create (or truncate) a file.  Striping order is random per file
@@ -67,6 +87,8 @@ impl Safs {
             StripeMap::identity(cfg.num_ssds, cfg.stripe_block)
         };
         let file: FileHandle = Arc::new(SafsFile::new(name, stripe));
+        // Truncation invalidates any cached image bytes under this name.
+        self.image_cache.invalidate_file(name);
         self.files.write().unwrap().insert(name.to_string(), file.clone());
         file
     }
@@ -76,6 +98,7 @@ impl Safs {
     }
 
     pub fn delete(&self, name: &str) -> bool {
+        self.image_cache.invalidate_file(name);
         self.files.write().unwrap().remove(name).is_some()
     }
 

@@ -11,6 +11,10 @@
 //!   partitions in flight and overlapping I/O with multiplication (the
 //!   same tunable drives the streamed boundary's interval scheduler in
 //!   [`crate::spmm::stream`]; depth 0 degenerates to synchronous reads).
+//!   Each partition read probes the shared cross-apply
+//!   [`crate::safs::ImageCache`] first and publishes its buffer back on
+//!   retirement, so under a nonzero `--image-cache` budget hot
+//!   partitions stay resident in RAM from one apply to the next.
 
 use super::dense_block::{DenseBlock, SharedMut};
 use super::kernel::multiply_tile;
@@ -52,6 +56,17 @@ pub fn spmm(
         opts.super_tile,
         threads,
     );
+    if let Some((fs, file)) = matrix.safs_handle() {
+        let cache = fs.image_cache();
+        if cache.is_enabled() {
+            // Partition geometry is a function of the matrix layout,
+            // width and thread count, so consecutive applies walk the
+            // same byte ranges in the same ascending order — register
+            // that as the cross-apply image cache's walk schedule.
+            let offsets: Vec<u64> = parts.iter().map(|&p| part_byte_range(matrix, p).0).collect();
+            cache.register_walk(&file.name, &offsets);
+        }
+    }
     let out = SharedMut::new(output);
     let queues = OwnedQueues::new(parts.len(), threads.max(1));
     let stolen = AtomicUsize::new(0);
@@ -97,10 +112,20 @@ pub fn spmm(
                         // scheduler); depth 0 means the single
                         // outstanding request is awaited immediately —
                         // the synchronous differential-testing baseline.
+                        // Each partition is probed against the shared
+                        // cross-apply image cache before a ticket is
+                        // issued: a resident range is served from RAM
+                        // (one hit, no read), a miss reads once and the
+                        // buffer is published back on retirement so the
+                        // next apply finds it resident.
                         let depth = fs.cfg().read_ahead + 1;
+                        let cache = fs.image_cache().clone();
                         let mut pool = BufferPool::new(fs.cfg().use_buffer_pool);
-                        let mut pending: VecDeque<(usize, crate::safs::IoTicket)> =
-                            VecDeque::new();
+                        enum Pending {
+                            Ticket(crate::safs::IoTicket),
+                            Hit(std::sync::Arc<Vec<u8>>),
+                        }
+                        let mut pending: VecDeque<(usize, Pending)> = VecDeque::new();
                         loop {
                             while pending.len() < depth {
                                 match pop(queues) {
@@ -110,29 +135,48 @@ pub fn spmm(
                                         }
                                         let part = parts[pi];
                                         let (off, len) = part_byte_range(matrix, part);
-                                        let buf = pool.get(len);
-                                        let ticket =
-                                            fs.read_async(file.clone(), off, buf);
-                                        pending.push_back((pi, ticket));
+                                        let slot = match cache.probe(&file.name, off, len) {
+                                            Some(arc) => Pending::Hit(arc),
+                                            None => {
+                                                let buf = pool.get(len);
+                                                Pending::Ticket(
+                                                    fs.read_async(file.clone(), off, buf),
+                                                )
+                                            }
+                                        };
+                                        pending.push_back((pi, slot));
                                     }
                                     None => break,
                                 }
                             }
-                            let Some((pi, ticket)) = pending.pop_front() else { break };
-                            let buf = ticket.wait();
+                            let Some((pi, slot)) = pending.pop_front() else { break };
                             let part = parts[pi];
+                            let (off, _) = part_byte_range(matrix, part);
+                            let (buf_owned, buf_shared): (Option<Vec<u8>>, _) = match slot {
+                                Pending::Ticket(t) => (Some(t.wait()), None),
+                                Pending::Hit(arc) => (None, Some(arc)),
+                            };
+                            let bytes: &[u8] = match (&buf_owned, &buf_shared) {
+                                (Some(b), _) => b,
+                                (_, Some(a)) => a,
+                                _ => unreachable!(),
+                            };
                             let base = matrix.index[part.0].offset;
                             let images: Vec<&[u8]> = (part.0..part.1)
                                 .map(|tr| {
                                     let m = matrix.index[tr];
                                     let s = (m.offset - base) as usize;
-                                    &buf[s..s + m.len as usize]
+                                    &bytes[s..s + m.len as usize]
                                 })
                                 .collect();
                             multiply_partition(
                                 matrix, part, &images, input, out, opts, &mut local_buf,
                             );
-                            pool.put(buf);
+                            if let Some(b) = buf_owned {
+                                if let Some(rejected) = cache.publish(&file.name, off, b) {
+                                    pool.put(rejected);
+                                }
+                            }
                         }
                     }
                 }
@@ -429,6 +473,35 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sem_warm_apply_serves_the_image_from_the_cross_apply_cache() {
+        // With a one-image budget, the partition pipeline reads the
+        // image exactly once ever: the second spmm() is image-free (all
+        // hits), bitwise identical, and never double-reads a partition.
+        let mut rng = Rng::new(27);
+        let coo = random_graph(&mut rng, 900, 7000, true);
+        let image_bytes = build_matrix_opts(&coo, 64, BuildTarget::Mem, true).storage_bytes();
+        let mut cfg = SafsConfig::untimed();
+        cfg.image_cache_bytes = image_bytes;
+        let fs = Safs::new(cfg);
+        let m = build_matrix_opts(&coo, 64, BuildTarget::Safs(&fs, "m"), true);
+        let input = DenseBlock::from_fn(900, 3, 64, true, |r, c| ((r * 5 + c) % 23) as f64 - 11.0);
+        let mut cold_out = DenseBlock::new(900, 3, 64, true);
+        let before = fs.stats();
+        spmm(&m, &input, &mut cold_out, &SpmmOpts::default(), 3);
+        let cold = fs.stats().delta_since(&before);
+        assert_eq!(cold.bytes_read, image_bytes, "cold apply reads the image once");
+        assert_eq!(cold.cache_hit_bytes, 0);
+        let mut warm_out = DenseBlock::new(900, 3, 64, true);
+        let before = fs.stats();
+        spmm(&m, &input, &mut warm_out, &SpmmOpts::default(), 3);
+        let warm = fs.stats().delta_since(&before);
+        assert_eq!(warm.bytes_read, 0, "warm eager apply must be image-free");
+        assert_eq!(warm.cache_hit_bytes, image_bytes, "the whole image served from RAM");
+        assert_eq!(warm_out.to_vec(), cold_out.to_vec(), "caching changed bits");
+        assert!(fs.image_cache().mem().peak() <= image_bytes);
     }
 
     #[test]

@@ -12,7 +12,11 @@
 //! being computed, superseding the engine's historical hardcoded
 //! prefetch queue) so the eager partition pipeline and the streamed
 //! interval scheduler of [`crate::spmm::stream`] share one tunable —
-//! with one meaning — through the filesystem they both read from.
+//! with one meaning — through the filesystem they both read from.  The
+//! cross-apply **image cache** budget lives there too
+//! ([`crate::safs::SafsConfig::image_cache_bytes`], CLI `--image-cache`):
+//! like read-ahead it changes when/whether image bytes move, never what
+//! a multiply computes, so it is filesystem state, not a kernel option.
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SpmmOpts {

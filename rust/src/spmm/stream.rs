@@ -70,6 +70,18 @@
 //!   the same bytes in the same order whatever the depth; read-ahead
 //!   only hides latency (visible as lower `io_wait` in
 //!   [`crate::metrics::PhaseIo`] at equal bytes).
+//! * **Cross-apply residency.**  Before any ticket is issued the
+//!   scheduler consults the filesystem's shared
+//!   [`crate::safs::ImageCache`]: a resident tile-row range is served
+//!   from RAM (no read), a fresh read's buffer is offered back to the
+//!   cache on release so the *next* apply finds it resident.  The
+//!   ticket discipline is preserved exactly — a slot whose read is
+//!   already in flight as a prefetch ticket consumes that ticket and is
+//!   never re-requested on the cache-miss path (and a prefetch never
+//!   issues a ticket for cached bytes), so every apply performs at most
+//!   one read per (interval, apply) at every depth and budget.  With
+//!   the default budget of 0 the cache is inert and this module behaves
+//!   byte-for-byte as before.
 //!
 //! # Staging eviction and the re-read schedule
 //!
@@ -118,7 +130,7 @@ use super::dense_block::{colmajor_to_rowmajor, rowmajor_to_colmajor};
 use super::engine::multiply_rows_from_source;
 use crate::dense::{DenseCtx, IntervalProducer, TasMatrix};
 use crate::metrics::MemGuard;
-use crate::safs::{BufferPool, FileHandle, IoTicket, Safs};
+use crate::safs::{BufferPool, FileHandle, ImageCache, IoTicket, Safs};
 use crate::sparse::SparseMatrix;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -222,10 +234,32 @@ enum ImageSlot {
     Idle,
     /// Read submitted; the ticket completes asynchronously.
     InFlight(IoTicket),
+    /// Resolved from the cross-apply image cache (by a prefetch peek):
+    /// no array read exists for this slot, the acquire consumes the
+    /// shared bytes directly.
+    Cached(Arc<Vec<u8>>),
     /// Bytes handed to a consumer.  A sequential scheduler never leaves
-    /// this state; a demand-driven one re-issues synchronously on a
+    /// this state; a demand-driven one re-resolves synchronously on a
     /// recompute.
     Consumed,
+}
+
+/// One interval's image bytes: owned from a fresh array read (published
+/// to the cross-apply cache on release) or shared out of the cache (no
+/// read was issued).
+enum ImageBuf {
+    Owned(Vec<u8>),
+    Shared(Arc<Vec<u8>>),
+}
+
+impl std::ops::Deref for ImageBuf {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        match self {
+            ImageBuf::Owned(b) => b,
+            ImageBuf::Shared(a) => a,
+        }
+    }
 }
 
 /// The read-ahead scheduler for one matrix's SEM tile-row images, keyed
@@ -244,6 +278,9 @@ struct ImagePrefetcher {
     /// users (hop 1) rely on explicit [`ImagePrefetcher::prefetch`].
     sequential: bool,
     pools: WorkerPools,
+    /// The filesystem's cross-apply image cache (disabled = budget 0):
+    /// probed before any read is issued, published on release.
+    cache: Arc<ImageCache>,
 }
 
 impl ImagePrefetcher {
@@ -260,6 +297,16 @@ impl ImagePrefetcher {
         let (fs, file) = matrix.safs_handle()?;
         let ranges = interval_image_ranges(matrix, interval_rows);
         let slots = (0..ranges.len()).map(|_| Mutex::new(ImageSlot::Idle)).collect();
+        let cache = fs.image_cache().clone();
+        if sequential && cache.is_enabled() {
+            // A sequential walk demands its intervals in ascending order
+            // every apply: register that as the cross-apply schedule so
+            // the cache can evict by next-use distance (demand-driven
+            // users register their first-touch order explicitly via
+            // [`ImagePrefetcher::register_walk_order`]).
+            let offsets: Vec<u64> = ranges.iter().filter_map(|r| r.map(|(o, _)| o)).collect();
+            cache.register_walk(&file.name, &offsets);
+        }
         Some(ImagePrefetcher {
             fs: fs.clone(),
             file: file.clone(),
@@ -268,7 +315,23 @@ impl ImagePrefetcher {
             slots,
             ranges,
             pools: WorkerPools::new(workers, fs.cfg().use_buffer_pool),
+            cache,
         })
+    }
+
+    /// Register a demand-driven walk's cross-apply schedule with the
+    /// image cache: `order` lists the intervals in the order one apply
+    /// first demands them (hop 1's first-touch order, derived from the
+    /// in-RAM tile-column index — zero image I/O).
+    fn register_walk_order(&self, order: &[u32]) {
+        if !self.cache.is_enabled() {
+            return;
+        }
+        let offsets: Vec<u64> = order
+            .iter()
+            .filter_map(|&iv| self.ranges[iv as usize].map(|(o, _)| o))
+            .collect();
+        self.cache.register_walk(&self.file.name, &offsets);
     }
 
     /// Image bytes of interval `iv`'s tile rows (0 when empty).
@@ -276,10 +339,12 @@ impl ImagePrefetcher {
         self.ranges[iv].map_or(0, |(_, len)| len as u64)
     }
 
-    /// Start the read for `iv` if its slot is idle.  A no-op on
-    /// in-flight or consumed slots, so a prefetch can never duplicate a
-    /// read — callers only prefetch intervals that a later acquire is
-    /// guaranteed to consume.
+    /// Resolve `iv`'s image ahead of its acquire if its slot is idle:
+    /// from the cross-apply cache when resident (no ticket — a cached
+    /// range must never be requested from the array), from an async
+    /// read otherwise.  A no-op on in-flight, cached or consumed slots,
+    /// so a prefetch can never duplicate a read — callers only prefetch
+    /// intervals that a later acquire is guaranteed to consume.
     fn prefetch(&self, iv: usize) {
         if self.depth == 0 || iv >= self.slots.len() {
             return;
@@ -287,8 +352,14 @@ impl ImagePrefetcher {
         let Some((off, len)) = self.ranges[iv] else { return };
         let mut slot = self.slots[iv].lock().unwrap();
         if matches!(*slot, ImageSlot::Idle) {
-            let buf = self.pools.get(iv, len);
-            *slot = ImageSlot::InFlight(self.fs.read_async(self.file.clone(), off, buf));
+            // Side-effect-free peek: the demand (hit or miss) is counted
+            // when the acquire lands, exactly once per (apply, interval).
+            if let Some(arc) = self.cache.peek(&self.file.name, off, len) {
+                *slot = ImageSlot::Cached(arc);
+            } else {
+                let buf = self.pools.get(iv, len);
+                *slot = ImageSlot::InFlight(self.fs.read_async(self.file.clone(), off, buf));
+            }
         }
     }
 
@@ -297,13 +368,42 @@ impl ImagePrefetcher {
     /// the next `depth` intervals are issued first, so their transfers
     /// overlap this interval's multiply.  Returns `None` for an empty
     /// interval.
-    fn acquire(&self, iv: usize) -> Option<Vec<u8>> {
+    ///
+    /// The slot state is inspected **before** the cache is probed — an
+    /// interval whose read is already in flight as a prefetch ticket is
+    /// consumed from that ticket and never re-requested (the
+    /// double-issue guard: one read per (apply, interval) at every
+    /// depth, cache hit or miss).
+    fn acquire(&self, iv: usize) -> Option<ImageBuf> {
         let (off, len) = self.ranges[iv]?;
         {
             let mut slot = self.slots[iv].lock().unwrap();
-            if matches!(*slot, ImageSlot::Idle | ImageSlot::Consumed) {
-                let buf = self.pools.get(iv, len);
-                *slot = ImageSlot::InFlight(self.fs.read_async(self.file.clone(), off, buf));
+            // A prefetch may already have resolved this slot; account
+            // the demand it absorbed (the prefetch itself was silent).
+            let resolved = match &*slot {
+                ImageSlot::Idle | ImageSlot::Consumed => false,
+                ImageSlot::InFlight(_) => {
+                    self.cache.note_miss(&self.file.name, off, len);
+                    true
+                }
+                ImageSlot::Cached(_) => {
+                    self.cache.note_hit(&self.file.name, off, len);
+                    true
+                }
+            };
+            if !resolved {
+                // Demand-time probe: a hit serves shared bytes with no
+                // array read; a miss (counted by the probe) issues the
+                // one read this acquire will consume.
+                match self.cache.probe(&self.file.name, off, len) {
+                    Some(arc) => *slot = ImageSlot::Cached(arc),
+                    None => {
+                        let buf = self.pools.get(iv, len);
+                        *slot = ImageSlot::InFlight(
+                            self.fs.read_async(self.file.clone(), off, buf),
+                        );
+                    }
+                }
             }
         }
         if self.sequential {
@@ -313,16 +413,27 @@ impl ImagePrefetcher {
         }
         let state = std::mem::replace(&mut *self.slots[iv].lock().unwrap(), ImageSlot::Consumed);
         match state {
-            ImageSlot::InFlight(t) => Some(t.wait()),
-            // Unreachable: the block above put this slot in flight and
-            // each interval has exactly one consumer at a time.
+            ImageSlot::InFlight(t) => Some(ImageBuf::Owned(t.wait())),
+            ImageSlot::Cached(a) => Some(ImageBuf::Shared(a)),
+            // Unreachable: the block above resolved this slot and each
+            // interval has exactly one consumer at a time.
             _ => unreachable!("image slot consumed twice"),
         }
     }
 
-    /// Return a consumed interval's buffer to the per-worker pools.
-    fn release(&self, hint: usize, buf: Vec<u8>) {
-        self.pools.put(hint, buf);
+    /// Retire a consumed interval's bytes: freshly read buffers are
+    /// offered to the cross-apply cache (rejected ones return to the
+    /// per-worker pools); cache-shared handles are simply dropped.
+    fn release(&self, hint: usize, iv: usize, buf: ImageBuf) {
+        match buf {
+            ImageBuf::Shared(_) => {}
+            ImageBuf::Owned(b) => {
+                let Some((off, _)) = self.ranges[iv] else { return };
+                if let Some(rejected) = self.cache.publish(&self.file.name, off, b) {
+                    self.pools.put(hint, rejected);
+                }
+            }
+        }
     }
 }
 
@@ -369,7 +480,7 @@ fn interval_product_rowmajor(
                     })
                     .collect();
                 multiply_rows_from_source(matrix, &views, input, &mut out, b, vectorize);
-                pref.release(iv, buf);
+                pref.release(iv, iv, buf);
             }
         }
     }
@@ -842,10 +953,19 @@ impl<'a> StagedIntermediate<'a> {
             ),
             None => (Residency::Lru(Mutex::new(VecDeque::new())), Vec::new()),
         };
+        let a_images = ImagePrefetcher::for_matrix(a, interval_rows, ctx.threads, false);
+        if let Some(images) = &a_images {
+            // Cross-apply residency: the hop-1 first-touch order repeats
+            // every apply, so it is the image cache's walk schedule for
+            // `a`'s image.  Without a demand schedule (mixed tile dims)
+            // nothing is registered and the cache falls back to LRU for
+            // these ranges.
+            images.register_walk_order(&first_touch);
+        }
         StagedIntermediate {
             a,
             gather: InputGather::new(input),
-            a_images: ImagePrefetcher::for_matrix(a, interval_rows, ctx.threads, false),
+            a_images,
             slots: (0..n_iv).map(|_| Mutex::new(None)).collect(),
             residency,
             first_touch,
@@ -875,9 +995,13 @@ impl<'a> StagedIntermediate<'a> {
         self.computes.load(Ordering::Relaxed)
     }
 
-    /// Image bytes actually re-read for recomputes of a SEM-backed `a`
+    /// Image bytes re-demanded by recomputes of a SEM-backed `a`
     /// (0 for an in-memory image; bounded by the construction-time
-    /// re-read schedule for an in-order walk).
+    /// re-read schedule for an in-order walk).  With the cross-apply
+    /// image cache enabled some of these demands are served from RAM,
+    /// so the bytes actually re-read from SAFS are ≤ this counter —
+    /// the admission gate in [`ChainedGramSpmm::new`] stays valid with
+    /// the cache interposed (the model is the cache-off worst case).
     pub fn reread_bytes(&self) -> u64 {
         self.reread.load(Ordering::Relaxed)
     }
@@ -1760,5 +1884,123 @@ mod tests {
             }
         }
         assert!(ctx.io_phases.dense_peak("spmm.stage") > 0, "drop must record the staging peak");
+    }
+
+    /// The cross-apply image cache composed with read-ahead: at every
+    /// depth and every apply, each tile-row interval is satisfied by
+    /// exactly ONE array read or ONE cache hit — a tile row whose read
+    /// is already in flight as a prefetch ticket is never re-requested
+    /// when it is also a cache miss (the double-issue window), and a
+    /// cached tile row never gets a ticket.  Bits are invariant across
+    /// applies.
+    #[test]
+    fn image_cache_one_read_or_hit_per_interval_at_every_depth() {
+        let mut rng = Rng::new(51);
+        let coo = random_graph(&mut rng, 768, 6000);
+        let image_bytes = build_matrix_opts(&coo, 32, BuildTarget::Mem, true).storage_bytes();
+        for depth in [0usize, 2, 8] {
+            let mut cfg = SafsConfig::untimed();
+            cfg.read_ahead = depth;
+            // Partial budget: warm applies see hits AND misses, the
+            // regime where a naive miss path would double-issue.
+            cfg.image_cache_bytes = image_bytes / 4;
+            let fs = Safs::new(cfg);
+            // Subspace in RAM: every measured byte is image traffic.
+            let ctx = DenseCtx::with(
+                fs.clone(),
+                false,
+                64,
+                2,
+                3,
+                1,
+                std::sync::Arc::new(crate::dense::NativeKernels),
+            );
+            let m = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "dd"), true);
+            let x = TasMatrix::from_fn(&ctx, 768, 2, |r, c| ((r * 3 + c) % 17) as f64 - 8.0);
+            let mut reference: Option<Vec<f64>> = None;
+            for apply in 0..3 {
+                let before = fs.stats();
+                let s = StreamedSpmm::new(&m, &x, true).expect("layout streams");
+                let w = TasMatrix::zeros_for_overwrite(&ctx, 768, 2);
+                let mut p = FusedPipeline::new(&ctx);
+                p.source(&w, Box::new(s));
+                p.materialize();
+                let d = fs.stats().delta_since(&before);
+                assert_eq!(
+                    d.bytes_read + d.cache_hit_bytes,
+                    image_bytes,
+                    "apply {apply} depth {depth}: reads + hits must cover the image exactly once"
+                );
+                assert_eq!(
+                    d.cache_miss_bytes, d.bytes_read,
+                    "apply {apply} depth {depth}: every miss is exactly one read"
+                );
+                match &reference {
+                    None => reference = Some(w.to_colmajor()),
+                    Some(v) => assert_eq!(&w.to_colmajor(), v, "caching changed bits"),
+                }
+            }
+            assert!(
+                fs.image_cache().mem().peak() <= image_bytes / 4,
+                "resident cache bytes exceed the budget"
+            );
+        }
+    }
+
+    /// The lifted-ring admission gate stays valid with the cross-apply
+    /// cache interposed: the re-read schedule models the cache-off
+    /// worst case, and the cache can only turn modeled re-demands into
+    /// RAM hits.  The apply must still stream, produce identical bits,
+    /// and read strictly fewer SAFS bytes than the cache-off baseline
+    /// (the ring-pressure re-demands hit the cache).
+    #[test]
+    fn staged_reread_model_admits_streaming_with_cache_interposed() {
+        let n = 512u64;
+        let mut coo = banded_graph(n, 31);
+        coo.push(0, 200);
+        coo.push(0, 400);
+        coo.sort_dedup();
+        let at_coo = coo.transpose();
+        let image_bytes = build_matrix_opts(&coo, 32, BuildTarget::Mem, true).storage_bytes();
+        let run = |budget: u64| -> (Vec<f64>, u64) {
+            let mut cfg = SafsConfig::untimed();
+            cfg.image_cache_bytes = budget;
+            let fs = Safs::new(cfg);
+            // Single worker: the in-order walk makes the model exact.
+            let ctx = DenseCtx::with(
+                fs.clone(),
+                false,
+                64,
+                1,
+                3,
+                0,
+                std::sync::Arc::new(crate::dense::NativeKernels),
+            );
+            let a = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "ci"), true);
+            let at = build_matrix_opts(&at_coo, 32, BuildTarget::Mem, true);
+            let x =
+                TasMatrix::from_fn(&ctx, n as usize, 2, |r, c| ((r * 3 + c) % 13) as f64 - 6.0);
+            let s = ChainedGramSpmm::new(&a, &at, &x, 2, true)
+                .expect("the re-read model must admit streaming with the cache interposed");
+            assert!(s.modeled_reread_bytes() > 0, "ring pressure expected");
+            let before = fs.stats();
+            let y = TasMatrix::zeros_for_overwrite(&ctx, n as usize, 2);
+            for iv in 0..y.n_intervals() {
+                let data = s.produce(iv, y.interval_len(iv));
+                y.store_interval(iv, data);
+            }
+            assert!(
+                s.stage().reread_bytes() <= s.modeled_reread_bytes(),
+                "re-demands must stay within the model"
+            );
+            (y.to_colmajor(), fs.stats().delta_since(&before).bytes_read)
+        };
+        let (vals_off, read_off) = run(0);
+        let (vals_on, read_on) = run(image_bytes);
+        assert_eq!(vals_on, vals_off, "caching changed bits");
+        assert!(
+            read_on < read_off,
+            "re-demands must hit the cache: {read_on} vs cache-off {read_off}"
+        );
     }
 }

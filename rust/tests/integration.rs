@@ -159,6 +159,7 @@ fn throttling_does_not_change_results() {
         interval_rows: 256,
         seed: 3,
         read_ahead: 2,
+        image_cache: 0,
     };
     let run = |timed: bool| {
         let fs = if timed {

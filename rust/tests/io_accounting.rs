@@ -639,6 +639,7 @@ fn read_ahead_overlap_lowers_io_wait_at_equal_bytes() {
         interval_rows: 256,
         seed: 1,
         read_ahead: 2,
+        image_cache: 0,
     };
     let rows = fig9_readahead_data(&cfg, 64.0, 4, &[0, 2]);
     let (d0, d2) = (&rows[0].2, &rows[1].2);
@@ -649,6 +650,90 @@ fn read_ahead_overlap_lowers_io_wait_at_equal_bytes() {
         d2.wait_secs(),
         d0.wait_secs()
     );
+}
+
+/// Shared driver for the cross-apply residency pins: three streamed
+/// applies of one SEM-imaged operator over an in-RAM subspace (every
+/// measured byte is image traffic), returning per-apply read bytes, the
+/// final values, and the cache's MemTracker peak.
+fn residency_applies(
+    coo: &CooMatrix,
+    budget: u64,
+    threads: usize,
+) -> (Vec<u64>, Vec<f64>, u64) {
+    let mut cfg = SafsConfig::untimed();
+    cfg.image_cache_bytes = budget;
+    let fs = Safs::new(cfg);
+    let ctx = DenseCtx::with(fs.clone(), false, 128, threads, 4, 1, Arc::new(NativeKernels));
+    let m = build_matrix_opts(coo, 64, BuildTarget::Safs(&fs, "icr"), true);
+    let op = SpmmOperator::new(m, SpmmOpts::default(), threads);
+    let n = coo.n_rows as usize;
+    let x = TasMatrix::zeros(&ctx, n, 2);
+    mv_random(&x, 7);
+    let mut reads = Vec::new();
+    let mut vals = Vec::new();
+    for _ in 0..3 {
+        let before = fs.stats();
+        let w = op.apply_streamed(&ctx, &x);
+        reads.push(fs.stats().delta_since(&before).bytes_read);
+        vals = w.to_colmajor();
+    }
+    (reads, vals, fs.image_cache().mem().peak())
+}
+
+/// (m) Cross-apply image residency, budget ≥ image: the first streamed
+/// SEM apply reads the image exactly once and every later apply reads
+/// ZERO image bytes — steady-state image traffic is O(image), not
+/// O(applies × image).  Results stay bitwise identical to the cache-off
+/// baseline and the MemTracker-pinned resident cache bytes never exceed
+/// the budget.
+#[test]
+fn image_cache_full_budget_warm_applies_read_zero_image_bytes() {
+    let mut rng = Rng::new(101);
+    let coo = gnm_undirected(2000, 12_000, &mut rng);
+    let image_bytes = build_matrix_opts(&coo, 64, BuildTarget::Mem, true).storage_bytes();
+    let (reads_off, vals_off, peak_off) = residency_applies(&coo, 0, 2);
+    assert_eq!(peak_off, 0, "disabled cache must hold nothing");
+    assert!(
+        reads_off.iter().all(|&r| r == image_bytes),
+        "cache off: every apply re-reads the whole image: {reads_off:?}"
+    );
+    let (reads_full, vals_full, peak_full) = residency_applies(&coo, image_bytes, 2);
+    assert_eq!(vals_full, vals_off, "caching changed bits");
+    assert_eq!(reads_full[0], image_bytes, "cold apply reads the image exactly once");
+    assert_eq!(reads_full[1], 0, "first warm apply must read zero image bytes");
+    assert_eq!(reads_full[2], 0, "second warm apply must read zero image bytes");
+    assert!(
+        peak_full <= image_bytes,
+        "resident cache bytes {peak_full} exceed the budget {image_bytes}"
+    );
+}
+
+/// (m2) Cross-apply image residency, ¼-image budget: warm applies read
+/// strictly fewer image bytes than the cold apply (the retained walk
+/// prefix hits), the three-apply total never exceeds the cache-off
+/// baseline, results stay bitwise identical, and resident cache bytes
+/// stay within the budget.  Single worker: the walk cursor is exact, so
+/// the retained prefix is deterministic.
+#[test]
+fn image_cache_quarter_budget_cuts_warm_traffic_within_baseline() {
+    let mut rng = Rng::new(103);
+    let coo = gnm_undirected(2000, 12_000, &mut rng);
+    let image_bytes = build_matrix_opts(&coo, 64, BuildTarget::Mem, true).storage_bytes();
+    let budget = image_bytes / 4;
+    let (reads_off, vals_off, _) = residency_applies(&coo, 0, 1);
+    let (reads_q, vals_q, peak_q) = residency_applies(&coo, budget, 1);
+    assert_eq!(vals_q, vals_off, "caching changed bits");
+    assert_eq!(reads_q[0], image_bytes, "cold apply reads the whole image");
+    assert!(
+        reads_q[1] < reads_q[0] && reads_q[2] < reads_q[0],
+        "warm applies must read strictly fewer image bytes than cold: {reads_q:?}"
+    );
+    assert!(
+        reads_q.iter().sum::<u64>() <= reads_off.iter().sum::<u64>(),
+        "total bytes must never exceed the cache-off baseline"
+    );
+    assert!(peak_q <= budget, "resident cache bytes {peak_q} exceed the budget {budget}");
 }
 
 /// (d) The fig9b ablation row the acceptance criterion names: in FE-EM
@@ -664,6 +749,7 @@ fn fig9_fusion_em_reports_strictly_fewer_bytes() {
         interval_rows: 256,
         seed: 1,
         read_ahead: 2,
+        image_cache: 0,
     };
     let rows = fig9_fusion_data(&cfg, 4096, 16, 2);
     assert_eq!(rows.len(), 2);

@@ -543,6 +543,163 @@ fn prop_read_ahead_depths_bitwise_for_em_svd() {
 }
 
 #[test]
+fn prop_image_cache_budgets_bitwise_for_spmm_and_streamed_apply() {
+    // The cross-apply image cache moves *when/whether* SEM image bytes
+    // are read, never what is computed: budgets {0, ¼-image, ≥ image}
+    // must be bitwise identical — and never move MORE bytes than the
+    // cache-off baseline — for both the eager engine's spmm() and the
+    // streamed operator apply (two passes each: cold + warm), composed
+    // with read-ahead depths {0, 2}, on random ER and R-MAT graphs over
+    // memory- and SSD-backed subspaces.
+    run_prop("image-cache-bitwise", 8, |g| {
+        let n = g.usize_in(2, 600) as u64;
+        let nnz = g.usize_in(0, 4000) as u64;
+        let tile = *g.choose(&[16usize, 32, 64]); // all divide the 64-row intervals
+        let b = g.usize_in(1, 4);
+        let em = g.bool();
+        let threads = g.usize_in(1, 3);
+        let depth = *g.choose(&[0usize, 2]);
+        let rmat_shape = g.bool();
+        let graph_seed = g.u64();
+        let x_seed = g.u64();
+        let mut rng = Rng::new(graph_seed);
+        let mut coo = if rmat_shape {
+            rmat(n.max(2), nnz.max(1), RmatParams::default(), &mut rng)
+        } else {
+            gnm_undirected(n, nnz.min(n * n.saturating_sub(1) / 2), &mut rng)
+        };
+        coo.symmetrize();
+        let nn = coo.n_rows as usize;
+        let image_bytes = build_matrix_opts(&coo, tile, BuildTarget::Mem, true).storage_bytes();
+        let mut reference: Option<(Vec<f64>, Vec<f64>, u64)> = None;
+        for budget in [0u64, image_bytes / 4, image_bytes + 1024] {
+            let mut cfg = SafsConfig::untimed();
+            cfg.read_ahead = depth;
+            cfg.image_cache_bytes = budget;
+            let fs = Safs::new(cfg);
+            let ctx = DenseCtx::with(fs.clone(), em, 64, threads, 3, 1, Arc::new(NativeKernels));
+            let m = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "ic"), true);
+            // Eager engine over the SEM image, twice (cold + warm pass).
+            let input = DenseBlock::from_fn(nn, b, tile, true, |r, c| {
+                ((r * 7 + c) % 19) as f64 - 9.0
+            });
+            let mut output = DenseBlock::new(nn, b, tile, true);
+            let before = fs.stats();
+            spmm(&m, &input, &mut output, &SpmmOpts::default(), threads);
+            spmm(&m, &input, &mut output, &SpmmOpts::default(), threads);
+            let engine_vals = output.to_vec();
+            // Streamed apply over the same image, twice.
+            let op = SpmmOperator::new(m, SpmmOpts::default(), threads);
+            let x = TasMatrix::zeros(&ctx, nn, b);
+            mv_random(&x, x_seed);
+            let _cold = op.apply_streamed(&ctx, &x);
+            let apply_vals = op.apply_streamed(&ctx, &x).to_colmajor();
+            let bytes = fs.stats().delta_since(&before).bytes_read;
+            let peak = fs.image_cache().mem().peak();
+            if peak > budget {
+                return Err(format!("cache peak {peak} exceeds budget {budget}"));
+            }
+            match &reference {
+                None => reference = Some((engine_vals, apply_vals, bytes)),
+                Some((e0, a0, b0)) => {
+                    if &engine_vals != e0 {
+                        return Err(format!("spmm() bits changed at budget {budget}"));
+                    }
+                    if &apply_vals != a0 {
+                        return Err(format!("streamed apply bits changed at budget {budget}"));
+                    }
+                    if bytes > *b0 {
+                        return Err(format!(
+                            "budget {budget} read {bytes} bytes, over the cache-off {b0}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_image_cache_budgets_bitwise_for_em_eigensolve_and_svd() {
+    // A full EM eigensolve()/svd() — expansion, staging ring, restarts
+    // — is bitwise budget-invariant: cross-apply residency never
+    // changes the numerics, on ER and R-MAT graphs, composed with
+    // read-ahead depths {0, 2}.  One worker pins the reduction order so
+    // runs are comparable.
+    run_prop("image-cache-bitwise-solve", 4, |g| {
+        let n = g.usize_in(64, 300) as u64;
+        let nnz = g.usize_in(n as usize, 2500) as u64;
+        let tile = *g.choose(&[16usize, 32]);
+        let depth = *g.choose(&[0usize, 2]);
+        let svd_path = g.bool();
+        let rmat_shape = g.bool();
+        let graph_seed = g.u64();
+        let solver_seed = g.u64();
+        let mut rng = Rng::new(graph_seed);
+        let mut coo = if rmat_shape {
+            rmat(n.max(64), nnz.max(1), RmatParams::default(), &mut rng)
+        } else {
+            gnm(n, nnz.min(n * n.saturating_sub(1)), &mut rng)
+        };
+        let at_coo = svd_path.then(|| coo.transpose());
+        if !svd_path {
+            coo.symmetrize();
+        }
+        let image_bytes = build_matrix_opts(&coo, tile, BuildTarget::Mem, true).storage_bytes();
+        let mut reference: Option<Vec<f64>> = None;
+        for budget in [0u64, image_bytes / 4, image_bytes + 1024] {
+            let mut cfg = SafsConfig::untimed();
+            cfg.read_ahead = depth;
+            cfg.image_cache_bytes = budget;
+            let fs = Safs::new(cfg);
+            let ctx = DenseCtx::with(fs.clone(), true, 64, 1, 3, 1, Arc::new(NativeKernels));
+            let ecfg = flasheigen::eigen::EigenConfig {
+                nev: 2,
+                block_size: 2,
+                num_blocks: 6,
+                tol: 1e-6,
+                max_restarts: 40,
+                which: if svd_path {
+                    flasheigen::eigen::Which::LargestAlgebraic
+                } else {
+                    flasheigen::eigen::Which::LargestMagnitude
+                },
+                seed: solver_seed,
+                compute_eigenvectors: false,
+            };
+            let vals = if svd_path {
+                let a = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "pa"), true);
+                let at = build_matrix_opts(
+                    at_coo.as_ref().unwrap(),
+                    tile,
+                    BuildTarget::Safs(&fs, "pat"),
+                    true,
+                );
+                let op = GramOperator::new(a, at, SpmmOpts::default(), 1);
+                flasheigen::eigen::svd(&op, &ctx, &ecfg).singular_values
+            } else {
+                let m = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "pm"), true);
+                let op = SpmmOperator::new(m, SpmmOpts::default(), 1);
+                flasheigen::eigen::solve(&op, &ctx, &ecfg).eigenvalues
+            };
+            match &reference {
+                None => reference = Some(vals),
+                Some(v0) => {
+                    if &vals != v0 {
+                        return Err(format!(
+                            "EM solve bits changed at image-cache budget {budget}: \
+                             {vals:?} vs {v0:?}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_default_ctx_is_fused_streamed_and_matches_eager_bitwise() {
     // The default-flip regression canary: a fresh DenseCtx runs fused +
     // streamed, and the streamed operator boundary under that default is
