@@ -10,8 +10,13 @@
 //! once:
 //!
 //! 1. every distinct operand matrix's interval is loaded **once** per
-//!    walk (all SSD reads of a load batch issued asynchronously before
-//!    the first wait),
+//!    walk, through the unified interval-stream scheduler
+//!    ([`crate::safs::WalkScheduler`], cache-bypassing — dense subspace
+//!    intervals never compete with sparse tile-row images): an
+//!    interval's loads are issued as one batch before the first wait,
+//!    and with [`crate::safs::SafsConfig::read_ahead`] > 0 the walk
+//!    issues whole intervals ahead, overlapping their transfers with
+//!    the current interval's compute,
 //! 2. the whole chain is applied in RAM, later steps seeing the values
 //!    produced by earlier steps of the same pipeline,
 //! 3. each mutated matrix's interval is written back **once**.
@@ -72,8 +77,9 @@
 
 use super::ops::{make_pools, total_cols};
 use super::small::SmallMat;
-use super::tas::{DenseCtx, Fetch, IntervalGuard, TasMatrix};
+use super::tas::{DenseCtx, IntervalGuard, TasMatrix};
 use crate::metrics::MemTracker;
+use crate::safs::{BufferPool, FeedMode, ReadRange, WalkScheduler};
 use crate::util::threadpool::parallel_for;
 use std::sync::{Arc, Mutex};
 
@@ -530,33 +536,81 @@ impl<'a> FusedPipeline<'a> {
         let group = ctx.group_size.max(1);
         let mem: &MemTracker = &ctx.mem;
 
+        // The walk's interval stream (unified scheduler): every interval
+        // demands the same operand loads in the same order — seed loads
+        // of read-before-written targets, then each phase's pinned
+        // loads, then its grouped chunks.  One slot per (interval,
+        // request), grouped per interval: at depth 0 an interval's
+        // requests are still issued as one batch before the first wait
+        // (the prior synchronous behaviour); at depth d the walk issues
+        // d whole intervals ahead.  Residency is stable for the walk's
+        // duration (no matrix creation inside materialize), so the
+        // request list built here stays valid; resident operands load
+        // as RAM borrows outside the stream.
+        let mut req_mats: Vec<usize> = (0..n_mats)
+            .filter(|&i| plan.written[i] && plan.needs_load[i])
+            .collect();
+        for p in 0..plan.phases.len() {
+            req_mats.extend_from_slice(&plan.pinned_loads[p]);
+            for chunk in plan.grouped[p].chunks(group) {
+                req_mats.extend_from_slice(chunk);
+            }
+        }
+        req_mats.retain(|&i| self.mats[i].interval_read_range(0).is_some());
+        let reqs = req_mats.len();
+        let mut sched_pos: Vec<Option<usize>> = vec![None; n_mats];
+        for (k, &i) in req_mats.iter().enumerate() {
+            sched_pos[i] = Some(k);
+        }
+        let sched = (reqs > 0).then(|| {
+            let mut ranges: Vec<Option<ReadRange>> = Vec::with_capacity(n_intervals * reqs);
+            for iv in 0..n_intervals {
+                for &i in &req_mats {
+                    ranges.push(self.mats[i].interval_read_range(iv));
+                }
+            }
+            let bounds: Vec<usize> = (1..=n_intervals).map(|g| g * reqs).collect();
+            WalkScheduler::new(&ctx.fs, ranges, workers, FeedMode::Auto { bounds }, false)
+        });
+
         parallel_for(n_intervals, ctx.threads, |iv, w| {
             let mut pool = pools[w].lock().unwrap();
             let rows = self.mats[0].interval_len(iv);
 
+            // Scheduled operand loads come through the interval stream
+            // (slot = iv·reqs + request position); resident operands
+            // borrow their RAM slot directly.
+            let fetch_one = |i: usize, pool: &mut BufferPool| -> IntervalGuard<'a> {
+                match sched_pos[i] {
+                    Some(k) => IntervalGuard::Owned(
+                        sched
+                            .as_ref()
+                            .unwrap()
+                            .acquire(iv * reqs + k)
+                            .expect("scheduled operand is file-backed")
+                            .into_owned(),
+                    ),
+                    None => self.mats[i].load_interval(iv, pool),
+                }
+            };
+
             // Working buffers of the written matrices whose prior
-            // contents the chain reads, seeded in one batch of async
-            // loads (guards dropped before any store).  Targets that are
-            // overwritten before being read stay `None` until their
+            // contents the chain reads, seeded through the interval
+            // stream (guards dropped before any store).  Targets that
+            // are overwritten before being read stay `None` until their
             // first write step installs a fresh buffer.
             let mut work: Vec<Option<Vec<f64>>> = (0..n_mats).map(|_| None).collect();
             let mut work_bytes = vec![0u64; n_mats];
-            {
-                let fetches: Vec<Option<Fetch>> = (0..n_mats)
-                    .map(|i| {
-                        (plan.written[i] && plan.needs_load[i])
-                            .then(|| self.mats[i].fetch_interval(iv, &mut pool))
-                    })
-                    .collect();
-                for (i, f) in fetches.into_iter().enumerate() {
-                    let Some(f) = f else { continue };
-                    let g = f.finish();
-                    let data = g.to_vec();
-                    g.recycle(&mut pool);
-                    work_bytes[i] = (data.len() * 8) as u64;
-                    mem.alloc(work_bytes[i]);
-                    work[i] = Some(data);
+            for i in 0..n_mats {
+                if !(plan.written[i] && plan.needs_load[i]) {
+                    continue;
                 }
+                let g = fetch_one(i, &mut pool);
+                let data = g.to_vec();
+                g.recycle(&mut pool);
+                work_bytes[i] = (data.len() * 8) as u64;
+                mem.alloc(work_bytes[i]);
+                work[i] = Some(data);
             }
 
             // Loaded read-only operands (guard per operand, held for the
@@ -594,20 +648,15 @@ impl<'a> FusedPipeline<'a> {
                     }
                 }
 
-                // 2. Load this phase's pinned operands (batch-async).
-                {
-                    let fetches: Vec<(usize, Fetch)> = plan.pinned_loads[p]
-                        .iter()
-                        .map(|&i| (i, self.mats[i].fetch_interval(iv, &mut pool)))
-                        .collect();
-                    for (i, f) in fetches {
-                        let g = f.finish();
-                        if let IntervalGuard::Owned(b) = &g {
-                            guard_bytes[i] = b.len() as u64;
-                            mem.alloc(guard_bytes[i]);
-                        }
-                        guards[i] = Some(g);
+                // 2. Load this phase's pinned operands (their reads are
+                //    already in flight from the interval stream).
+                for &i in &plan.pinned_loads[p] {
+                    let g = fetch_one(i, &mut pool);
+                    if let IntervalGuard::Owned(b) = &g {
+                        guard_bytes[i] = b.len() as u64;
+                        mem.alloc(guard_bytes[i]);
                     }
+                    guards[i] = Some(g);
                 }
 
                 // 3. Non-chunked work: elementwise steps, reductions over
@@ -724,12 +773,8 @@ impl<'a> FusedPipeline<'a> {
                 //    `group_size` (§3.4.3): load a chunk, apply every
                 //    step's contributions for it, release it.
                 for chunk in plan.grouped[p].chunks(group) {
-                    let fetches: Vec<(usize, Fetch)> = chunk
-                        .iter()
-                        .map(|&i| (i, self.mats[i].fetch_interval(iv, &mut pool)))
-                        .collect();
-                    for (i, f) in fetches {
-                        let g = f.finish();
+                    for &i in chunk {
+                        let g = fetch_one(i, &mut pool);
                         if let IntervalGuard::Owned(b) = &g {
                             guard_bytes[i] = b.len() as u64;
                             mem.alloc(guard_bytes[i]);

@@ -393,6 +393,25 @@ impl TasMatrix {
         IntervalGuard::Owned(bytes)
     }
 
+    /// Byte range of interval `iv`'s load, for scheduling it through
+    /// the unified interval-stream scheduler
+    /// ([`crate::safs::WalkScheduler`]).  `None` when the matrix is
+    /// resident (loads are RAM borrows, nothing to schedule) — callers
+    /// build their schedule while residency is stable (no concurrent
+    /// matrix creation) and fall back to [`TasMatrix::fetch_interval`]
+    /// for unscheduled operands.
+    pub fn interval_read_range(&self, iv: usize) -> Option<crate::safs::ReadRange> {
+        if self.inner.resident.load(Ordering::Acquire) {
+            return None;
+        }
+        let file = self.inner.file.as_ref()?;
+        Some(crate::safs::ReadRange {
+            file: file.clone(),
+            offset: self.inner.byte_offset(iv),
+            len: self.interval_len(iv) * self.n_cols * 8,
+        })
+    }
+
     /// Begin an async load (the op pipeline issues all loads of an
     /// interval set before waiting on any — that is what lets a single
     /// worker keep every device of the array busy).

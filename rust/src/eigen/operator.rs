@@ -15,12 +15,14 @@
 //! the intermediate `A·X` never materializes at full height either.
 //!
 //! Both streamed boundaries read SEM tile-row images through the
-//! read-ahead scheduler of [`crate::spmm::stream`]: up to
+//! unified interval-stream scheduler ([`crate::safs::WalkScheduler`],
+//! instantiated in [`crate::spmm::stream`]): up to
 //! [`crate::safs::SafsConfig::read_ahead`] interval reads stay in
 //! flight per worker (hop 1 of the Gram chain prefetches the next
 //! interval the `Aᵀ` tile-column structure will demand), overlapping
 //! SSD latency with multiplication exactly like the eager engine's
-//! partition pipeline — same bytes, same bits, lower `io_wait`.
+//! partition pipeline and the fused dense walks, which ride the same
+//! scheduler — same bytes, same bits, lower `io_wait`.
 //!
 //! **Cross-apply image residency.**  The solver applies one operator
 //! once per expansion step, and consecutive applies walk the same tile

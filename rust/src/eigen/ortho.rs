@@ -22,7 +22,13 @@
 //!   and, fused into the same walk, the post-update Gram `xᵀx` that seeds
 //!   the Cholesky-QR normalization.  The subspace is read **once per
 //!   round** — half the eager traffic — and the normalization's first
-//!   gram pass disappears entirely.
+//!   gram pass disappears entirely.  In EM mode each walk's interval
+//!   loads ride the unified interval-stream scheduler
+//!   ([`crate::safs::WalkScheduler`]): with
+//!   [`crate::safs::SafsConfig::read_ahead`] > 0 the ortho and restart
+//!   walks keep whole intervals of the subspace in flight ahead of the
+//!   one being reduced, overlapping SSD latency with the Gram/update
+//!   arithmetic at identical bytes and bitwise-identical results.
 //!
 //! # The incremental basis Gram ([`BasisGramCache`])
 //!

@@ -108,6 +108,7 @@ impl BenchCfg {
             ctx_switch_cost: 15e-6 * self.dilation,
             read_ahead: self.read_ahead,
             image_cache_bytes: self.image_cache,
+            gram_cache_split: true,
         }
     }
 

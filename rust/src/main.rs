@@ -16,6 +16,7 @@ use flasheigen::runtime::{find_artifacts_dir, XlaKernels};
 use flasheigen::spmm::{spmm, DenseBlock, SpmmOpts};
 use flasheigen::util::cli::Args;
 use flasheigen::util::humansize::fmt_bytes;
+use flasheigen::util::json::Json;
 use flasheigen::util::timer::{fmt_secs, time_it};
 use std::sync::Arc;
 
@@ -67,6 +68,11 @@ COMMON OPTIONS:
   --xla              dispatch dense kernels to the AOT JAX/Pallas artifacts
   --cols <b>         dense-matrix width for spmm (default 4)
   --exp <id>         figure/table id for `figures`
+  --bench-json <p>   for `figures`: also persist every produced table
+                     (titles, headers, rows — including the timed
+                     runtime/io_wait columns) as one JSON document at
+                     path <p>, so CI can archive a BENCH_*.json
+                     artifact per run and compare across commits
   --seed <s>         RNG seed
 ";
 
@@ -81,8 +87,9 @@ fn main() {
         &argv[1..],
         &[
             "graph", "scale", "nev", "block", "nblocks", "tol", "threads", "dilation",
-            "cols", "exp", "seed", "read-ahead", "image-cache",
+            "cols", "exp", "seed", "read-ahead", "image-cache", "bench-json",
         ],
+        &["sem", "xla", "eager", "fused", "streamed"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -310,59 +317,88 @@ fn cmd_figures(args: &Args) -> i32 {
         let dense_n = ((60_000_000.0 * cfg.scale * 16.0) as usize).max(4096);
         let all = exp == "all";
         let mut ran = false;
+        // Every produced table is printed AND collected, so --bench-json
+        // can persist the timed rows as a per-run artifact.
+        let mut tables: Vec<harness::Table> = Vec::new();
+        let mut emit = |t: harness::Table| {
+            t.print();
+            tables.push(t);
+        };
         if all || exp == "table2" {
-            harness::table2(&cfg).print();
+            emit(harness::table2(&cfg));
             ran = true;
         }
         if all || exp == "fig6" {
-            harness::fig6(&cfg, &[Dataset::Friendster, Dataset::Twitter], &[1, 4, 16]).print();
+            emit(harness::fig6(&cfg, &[Dataset::Friendster, Dataset::Twitter], &[1, 4, 16]));
             ran = true;
         }
         if all || exp == "fig7" {
-            harness::fig7(&cfg, &[1, 2, 4, 8, 16]).print();
+            emit(harness::fig7(&cfg, &[1, 2, 4, 8, 16]));
             ran = true;
         }
         if all || exp == "fig8" {
-            harness::fig8(&cfg).print();
+            emit(harness::fig8(&cfg));
             ran = true;
         }
         if all || exp == "fig9" {
-            harness::fig9(&cfg, dense_n, 64, 4).print();
-            harness::fig9_fusion(&cfg, dense_n, 64, 4).print();
+            emit(harness::fig9(&cfg, dense_n, 64, 4));
+            emit(harness::fig9_fusion(&cfg, dense_n, 64, 4));
             // 16x the base scale so the subspace spans several row
             // intervals — streaming is the identity on one interval.
-            harness::fig9_stream(&cfg, 16.0, 4).print();
+            emit(harness::fig9_stream(&cfg, 16.0, 4));
             // The page graph already spans many intervals at base scale.
-            harness::fig9_gram(&cfg, 1.0, 4).print();
+            emit(harness::fig9_gram(&cfg, 1.0, 4));
             // Read-ahead ablation on the streamed SEM apply (same 16x
             // scale-up as fig9_stream so the walk spans intervals).
-            harness::fig9_readahead(&cfg, 16.0, 4).print();
+            emit(harness::fig9_readahead(&cfg, 16.0, 4));
             // Cross-apply image residency ablation (budgets 0 / quarter
             // image / full image over repeated streamed SEM applies).
-            harness::fig9_imgcache(&cfg, 16.0, 4).print();
+            emit(harness::fig9_imgcache(&cfg, 16.0, 4));
             ran = true;
         }
         if all || exp == "fig10" {
-            harness::fig10(&cfg, dense_n, 4, &[4, 8, 16, 32, 64, 128, 256, 512]).print();
+            emit(harness::fig10(&cfg, dense_n, 4, &[4, 8, 16, 32, 64, 128, 256, 512]));
             ran = true;
         }
         if all || exp == "fig11" {
-            harness::fig11(&cfg, dense_n, 4, &[4, 16, 64, 256]).print();
+            emit(harness::fig11(&cfg, dense_n, 4, &[4, 16, 64, 256]));
             ran = true;
         }
         if all || exp == "fig12" {
-            harness::fig12(&cfg, &[8, 16], &[Dataset::Twitter, Dataset::Friendster, Dataset::Knn])
-                .print();
+            emit(harness::fig12(
+                &cfg,
+                &[8, 16],
+                &[Dataset::Twitter, Dataset::Friendster, Dataset::Knn],
+            ));
             ran = true;
         }
         if all || exp == "table3" {
             let mut c = cfg.clone();
             c.scale /= 4.0;
-            harness::table3(&c, 8).print();
+            emit(harness::table3(&c, 8));
             ran = true;
         }
         if !ran {
             return Err(format!("unknown experiment '{exp}'"));
+        }
+        if let Some(path) = args.get("bench-json") {
+            let doc = Json::obj(vec![
+                ("experiment", Json::str(exp)),
+                (
+                    "config",
+                    Json::obj(vec![
+                        ("scale", Json::num(cfg.scale)),
+                        ("threads", Json::int(cfg.threads as i64)),
+                        ("dilation", Json::num(cfg.dilation)),
+                        ("read_ahead", Json::int(cfg.read_ahead as i64)),
+                        ("image_cache", Json::int(cfg.image_cache as i64)),
+                        ("seed", Json::int(cfg.seed as i64)),
+                    ]),
+                ),
+                ("tables", Json::arr(tables.iter().map(|t| t.to_json()).collect())),
+            ]);
+            std::fs::write(path, format!("{doc}\n")).map_err(|e| format!("write {path}: {e}"))?;
+            eprintln!("bench results written to {path}");
         }
         Ok(())
     };

@@ -51,12 +51,13 @@ pub struct SafsConfig {
     /// blocking wakeup; the paper's Fig. 9 shows this overhead matters at
     /// 10 GB/s.
     pub ctx_switch_cost: f64,
-    /// Read-ahead depth of the SpMM engines (§3.2/§3.3.3): how many SEM
-    /// tile-row-image reads each worker keeps in flight ahead of the one
-    /// it is computing, for both the eager engine's partition pipeline
-    /// and the streamed boundary's interval scheduler
-    /// ([`crate::spmm::stream`]).  `0` disables read-ahead entirely —
-    /// every image read is issued and awaited synchronously (the
+    /// Read-ahead depth of the unified interval-stream scheduler
+    /// ([`crate::safs::WalkScheduler`], §3.2/§3.3.3): how many
+    /// scheduled reads each walk keeps in flight ahead of the one it
+    /// is computing — the eager engine's partition pipeline, the
+    /// streamed boundary's interval stream, and the fused dense walks
+    /// all consume this one knob.  `0` disables read-ahead entirely —
+    /// every read is issued and awaited at demand time (the
     /// differential-testing baseline); scheduling only moves *when*
     /// bytes are read, never *what* is computed, so results and total
     /// bytes are identical at every depth.  CLI: `--read-ahead`.
@@ -72,6 +73,16 @@ pub struct SafsConfig {
     /// at every budget.  CLI: `--image-cache`; env:
     /// `FLASHEIGEN_IMAGE_CACHE`.
     pub image_cache_bytes: u64,
+    /// Two-file image-cache schedule for Gram pairs
+    /// ([`crate::spmm::stream::ChainedGramSpmm`]): when the staged
+    /// intermediate's demand schedule measures re-read pressure on the
+    /// first hop (`A` intervals re-demanded under ring pressure), the
+    /// second hop's image walk (`Aᵀ`, streamed exactly once per apply)
+    /// is registered with a cold eviction bias, so `A`'s re-demanded
+    /// tile rows win the shared cache budget instead of the two files
+    /// caching independently.  Purely an eviction-order hint: results
+    /// stay bitwise identical either way.
+    pub gram_cache_split: bool,
 }
 
 impl Default for SafsConfig {
@@ -92,6 +103,7 @@ impl Default for SafsConfig {
             ctx_switch_cost: 15e-6,
             read_ahead: 2,
             image_cache_bytes: 0,
+            gram_cache_split: true,
         }
     }
 }
@@ -154,6 +166,15 @@ mod tests {
         // to the pre-cache behaviour.
         assert_eq!(SafsConfig::default().image_cache_bytes, 0);
         assert_eq!(SafsConfig::untimed().image_cache_bytes, 0);
+    }
+
+    #[test]
+    fn gram_cache_split_defaults_on() {
+        // The two-file Gram schedule is an eviction-order hint only
+        // (bitwise-identical results), so it defaults on; `false` is
+        // the cache-both-files-independently baseline.
+        assert!(SafsConfig::default().gram_cache_split);
+        assert!(SafsConfig::untimed().gram_cache_split);
     }
 
     #[test]

@@ -133,6 +133,13 @@ struct Walk {
     len: u32,
     /// Most recently demanded slot (approximate under concurrency).
     cursor: u32,
+    /// Eviction-bias multiplier on next-use distances (default 1).  A
+    /// walk registered cold (bias > 1) looks proportionally farther in
+    /// the future than it is, so under budget pressure its entries
+    /// yield to hot walks — the two-file Gram schedule registers the
+    /// once-per-apply `Aᵀ` stream cold so `A`'s re-demanded tile rows
+    /// win the shared budget.
+    bias: u64,
 }
 
 #[derive(Default)]
@@ -206,12 +213,28 @@ impl ImageCache {
         }
         let mut inner = self.inner.lock().unwrap();
         let len = offsets.len() as u32;
-        let cursor = match inner.walks.get(file) {
-            Some(w) if w.len == len => w.cursor,
-            _ => len - 1,
+        let (cursor, bias) = match inner.walks.get(file) {
+            Some(w) if w.len == len => (w.cursor, w.bias),
+            _ => (len - 1, 1),
         };
         let slots = offsets.iter().enumerate().map(|(i, &o)| (o, i as u32)).collect();
-        inner.walks.insert(file.to_string(), Walk { slots, len, cursor });
+        inner.walks.insert(file.to_string(), Walk { slots, len, cursor, bias });
+    }
+
+    /// Set the eviction-bias multiplier of `file`'s registered walk
+    /// (no-op for unregistered files).  `bias > 1` marks the walk
+    /// cold: its entries' next-use distances are scaled up, so under
+    /// budget pressure they are evicted (and rejected at admission) in
+    /// favour of walks registered hot.  Like every cache decision this
+    /// only moves when/whether bytes are read, never what is computed.
+    pub fn set_walk_bias(&self, file: &str, bias: u64) {
+        if self.budget == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(w) = inner.walks.get_mut(file) {
+            w.bias = bias.max(1);
+        }
     }
 
     /// Demand-time lookup of `(file, offset)` expecting `len` bytes.
@@ -386,7 +409,8 @@ impl ImageCache {
     /// * class 2 — stale (untouched for [`STALE_WALKS`] whole walks);
     /// * class 1 — no registered walk: rank = LRU age (oldest first);
     /// * class 0 — scheduled: rank = next-use distance from the walk
-    ///   cursor, as a [`DIST_FP`] fixed-point fraction of one apply.
+    ///   cursor, as a [`DIST_FP`] fixed-point fraction of one apply,
+    ///   scaled by the walk's eviction bias (cold walks look farther).
     fn priority(inner: &CacheInner, file: &str, offset: u64, age: u64) -> (u8, u64) {
         if let Some(w) = inner.walks.get(file) {
             if let Some(&s) = w.slots.get(&offset) {
@@ -396,7 +420,7 @@ impl ImageCache {
                 }
                 let (slot, len, cursor) = (s as u64, w.len as u64, w.cursor as u64);
                 let dist = ((slot + len - cursor - 1) % len) + 1;
-                return (0, dist * DIST_FP / len);
+                return (0, w.bias * dist * DIST_FP / len);
             }
         }
         (1, age)
@@ -557,6 +581,35 @@ mod tests {
         assert_eq!(c.resident_bytes(), 0);
         assert!(c.peek("img", 0, 10).is_none());
         assert_eq!(c.mem().current(), 0);
+    }
+
+    /// A cold-biased walk yields the budget to an unbiased one: the
+    /// two-file Gram split in miniature.  Without bias the resident
+    /// hot-walk entry is the nearer next use and the candidate is
+    /// rejected; once the resident's walk is marked cold its scaled
+    /// distance loses and the candidate evicts it.
+    #[test]
+    fn cold_walk_bias_yields_residency_to_the_hot_walk() {
+        let c = ImageCache::new(10);
+        c.register_walk("a", &[0, 4096]); // dist of a/0 = 1/2 apply
+        c.register_walk("at", &[0]); // dist of at/0 = 1/1 apply
+        assert!(c.publish("a", 0, bytes(10, 1)).is_none());
+        // Unbiased: the candidate (a whole apply away) is the farther
+        // next use — rejected, the hot entry stays.
+        assert!(c.publish("at", 0, bytes(10, 2)).is_some());
+        assert!(c.peek("a", 0, 10).is_some());
+        // Mark a's walk cold: its scaled distance (4/2) now loses to
+        // the candidate's 1/1 — the candidate is admitted.
+        c.set_walk_bias("a", 4);
+        assert!(c.publish("at", 0, bytes(10, 3)).is_none());
+        assert!(c.peek("a", 0, 10).is_none(), "cold-biased entry evicted");
+        assert!(c.peek("at", 0, 10).is_some());
+        assert_eq!(c.counters().evict_bytes, 10);
+        // Re-registering the same geometry keeps the bias (applies
+        // rebuild their readers); a disabled cache ignores the call.
+        c.register_walk("a", &[0, 4096]);
+        assert!(c.publish("a", 0, bytes(10, 4)).is_some(), "still cold after re-register");
+        ImageCache::new(0).set_walk_bias("a", 4);
     }
 
     /// Double-publish of one range (two workers racing) keeps the first

@@ -16,6 +16,7 @@ pub mod device;
 pub mod file;
 pub mod image_cache;
 pub mod io;
+pub mod scheduler;
 pub mod stripe;
 
 pub use array::{IoStats, SsdArray};
@@ -24,6 +25,7 @@ pub use config::{SafsConfig, WaitMode};
 pub use file::{FileHandle, SafsFile};
 pub use image_cache::{ImageCache, ImageCacheCounters};
 pub use io::{IoEngine, IoTicket};
+pub use scheduler::{FeedMode, ReadRange, SlotBuf, WalkScheduler};
 pub use stripe::StripeMap;
 
 use crate::util::rng::Rng;

@@ -1,0 +1,513 @@
+//! The unified interval-stream scheduler (ROADMAP item 5): a walk
+//! schedule in, a ticketed / image-cache-aware / read-ahead-depth-
+//! bounded interval stream out.
+//!
+//! Every external-memory walk in the solver — the streamed SpMM
+//! boundary, the eager engine's partition pipeline, the fused dense
+//! walks — used to carry its own copy of the same loop: probe the
+//! image cache, pull a pooled buffer, issue an asynchronous read, keep
+//! a bounded number of reads in flight, account the hit or miss at
+//! demand time, recycle or publish the buffer afterwards.  Duplicated
+//! loops breed duplicated bugs (the prefetch double-issue fix had to
+//! land in two places); this module is the single implementation all
+//! of them ride.  A consumer describes its walk as a vector of byte
+//! ranges ([`ReadRange`]; `None` marks a slot served from RAM) and
+//! then just acquires slots in demand order.
+//!
+//! # The scheduling contract
+//!
+//! Read-ahead moves *when* bytes are read, never *what* is computed:
+//!
+//! * **Every issued read is consumed by exactly one acquire.**  A slot
+//!   holds at most one in-flight ticket (or one cached handle); issue
+//!   paths inspect the slot state *before* probing the cache, so a
+//!   range can never be requested twice for one demand.
+//! * **Total bytes are depth-invariant.**  At depth 0 the stream
+//!   degenerates to the synchronous baseline, request for request; at
+//!   any depth the same ranges are read exactly once per acquire.
+//! * **Results are bitwise depth-invariant.**  The scheduler hands
+//!   back the same bytes regardless of depth or cache budget; only
+//!   `io_wait` (and, with a cache, *whether* the array is touched)
+//!   changes.
+//! * **Cache accounting is exact.**  Issue paths use the
+//!   side-effect-free [`ImageCache::peek`]; the acquire that consumes
+//!   the slot accounts exactly one [`ImageCache::note_hit`] /
+//!   [`ImageCache::note_miss`] (or one [`ImageCache::probe`] when the
+//!   slot was never issued ahead), so per walk
+//!   `hit bytes + miss bytes = demanded bytes`.
+//!
+//! # Feed modes
+//!
+//! [`FeedMode::Auto`] is self-feeding: the slots are partitioned into
+//! consecutive *groups* (per-slot groups for a sequential interval
+//! stream; per-interval groups for the fused dense walks, whose every
+//! interval demands one slot per scheduled operand), and acquiring a
+//! slot issues every not-yet-issued slot through the end of the group
+//! `depth` groups ahead.  With per-slot groups and depth `d` this is
+//! classic read-ahead — `d` reads in flight beyond the one being
+//! computed; with per-interval groups, depth 0 still issues the rest
+//! of the *current* group together (the batch the synchronous path
+//! issued at once) and depth `d` reaches `d` whole intervals ahead.
+//!
+//! [`FeedMode::Demand`] is caller-fed: reads start only via
+//! [`WalkScheduler::start`] (unconditional — the eager engine starts a
+//! partition the moment it enters the worker's bounded queue) or
+//! [`WalkScheduler::prefetch`] (depth-gated — the staged
+//! intermediate's hop-1 first-touch prefetch, a no-op at depth 0).
+//!
+//! A consumed slot re-arms implicitly: acquiring it again re-resolves
+//! the range synchronously (the staged intermediate re-reads evicted
+//! hop-1 intervals this way).  Schedulers built with `use_cache =
+//! false` bypass the image cache entirely — dense subspace intervals
+//! must never compete with sparse tile-row images for the cache
+//! budget, and their buffers are recycled by the walk, not published.
+
+use crate::safs::{BufferPool, FileHandle, ImageCache, IoTicket, Safs};
+use std::sync::{Arc, Mutex};
+
+/// One slot's backing read: `file[offset .. offset + len)`.
+#[derive(Clone)]
+pub struct ReadRange {
+    pub file: FileHandle,
+    pub offset: u64,
+    pub len: usize,
+}
+
+/// Per-worker buffer pools shared by a scheduler's issue paths.  `get`
+/// prefers the hinted worker's pool but steals from any free one
+/// (try-lock rotation keeps the fast path contention-free).
+pub(crate) struct WorkerPools {
+    pools: Vec<Mutex<BufferPool>>,
+}
+
+impl WorkerPools {
+    pub(crate) fn new(workers: usize, enabled: bool) -> WorkerPools {
+        WorkerPools {
+            pools: (0..workers.max(1)).map(|_| Mutex::new(BufferPool::new(enabled))).collect(),
+        }
+    }
+
+    pub(crate) fn get(&self, hint: usize, len: usize) -> Vec<u8> {
+        let n = self.pools.len();
+        for i in 0..n {
+            if let Ok(mut pool) = self.pools[(hint + i) % n].try_lock() {
+                return pool.get(len);
+            }
+        }
+        self.pools[hint % n].lock().unwrap().get(len)
+    }
+
+    pub(crate) fn put(&self, hint: usize, buf: Vec<u8>) {
+        let n = self.pools.len();
+        for i in 0..n {
+            if let Ok(mut pool) = self.pools[(hint + i) % n].try_lock() {
+                pool.put(buf);
+                return;
+            }
+        }
+    }
+}
+
+/// How a slot's bytes were delivered: a buffer owned by the acquirer
+/// (a fresh array read — recycle or publish it), or a handle shared
+/// with the image cache (drop it when done).
+pub enum SlotBuf {
+    Owned(Vec<u8>),
+    Shared(Arc<Vec<u8>>),
+}
+
+impl SlotBuf {
+    /// The bytes as an owned buffer: a fresh read's buffer moves out
+    /// directly; a cache-shared handle is copied (never taken on a
+    /// cache-bypassing scheduler, where every slot is `Owned`).
+    pub fn into_owned(self) -> Vec<u8> {
+        match self {
+            SlotBuf::Owned(b) => b,
+            SlotBuf::Shared(a) => (*a).clone(),
+        }
+    }
+}
+
+impl std::ops::Deref for SlotBuf {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        match self {
+            SlotBuf::Owned(b) => b,
+            SlotBuf::Shared(a) => a,
+        }
+    }
+}
+
+/// Lifecycle of one scheduled range.  `Consumed` re-arms on the next
+/// acquire (demand-driven walks revisit evicted slots).
+enum Slot {
+    Idle,
+    InFlight(IoTicket),
+    Cached(Arc<Vec<u8>>),
+    Consumed,
+}
+
+/// Who feeds the stream — see the module docs.
+pub enum FeedMode {
+    /// Self-feeding: `bounds[g]` is the exclusive end slot of group
+    /// `g` (non-decreasing, last entry = slot count).  Acquiring slot
+    /// `i` issues every idle slot through the end of the group `depth`
+    /// groups past `i`'s.
+    Auto { bounds: Vec<usize> },
+    /// Caller-fed via `start` / `prefetch`.
+    Demand,
+}
+
+/// The one interval-stream scheduler every external-memory walk rides.
+pub struct WalkScheduler {
+    fs: Arc<Safs>,
+    ranges: Vec<Option<ReadRange>>,
+    slots: Vec<Mutex<Slot>>,
+    /// Read-ahead depth ([`crate::safs::SafsConfig::read_ahead`]).
+    depth: usize,
+    mode: FeedMode,
+    pools: WorkerPools,
+    /// `None` = cache-bypassing (dense subspace walks).
+    cache: Option<Arc<ImageCache>>,
+}
+
+impl WalkScheduler {
+    /// A scheduler over `ranges`, with `workers` buffer pools.  Depth
+    /// and pool enablement come from the filesystem's config;
+    /// `use_cache = false` bypasses the image cache entirely.
+    pub fn new(
+        fs: &Arc<Safs>,
+        ranges: Vec<Option<ReadRange>>,
+        workers: usize,
+        mode: FeedMode,
+        use_cache: bool,
+    ) -> WalkScheduler {
+        if let FeedMode::Auto { bounds } = &mode {
+            debug_assert_eq!(bounds.last().copied().unwrap_or(0), ranges.len());
+            debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
+        }
+        WalkScheduler {
+            slots: (0..ranges.len()).map(|_| Mutex::new(Slot::Idle)).collect(),
+            depth: fs.cfg().read_ahead,
+            pools: WorkerPools::new(workers, fs.cfg().use_buffer_pool),
+            cache: use_cache.then(|| fs.image_cache().clone()),
+            fs: fs.clone(),
+            ranges,
+            mode,
+        }
+    }
+
+    /// The read-ahead depth this scheduler was built with.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Number of slots in the walk.
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+
+    /// Bytes behind slot `i` (0 for RAM-served slots).
+    pub fn range_bytes(&self, i: usize) -> u64 {
+        self.ranges.get(i).and_then(|r| r.as_ref()).map_or(0, |r| r.len as u64)
+    }
+
+    /// Register the walk's demand order with the image cache (slot
+    /// indices in the order one pass acquires them).  No-op on a
+    /// cache-bypassing or cache-disabled scheduler.  All file-backed
+    /// slots of a registered walk must share one file — multi-file
+    /// walks run cache-bypassing.
+    pub fn register_walk_order(&self, order: &[u32]) {
+        let Some(cache) = &self.cache else { return };
+        if !cache.is_enabled() {
+            return;
+        }
+        let Some(file) = self.ranges.iter().flatten().next().map(|r| r.file.clone()) else {
+            return;
+        };
+        let offsets: Vec<u64> = order
+            .iter()
+            .filter_map(|&i| self.ranges.get(i as usize).and_then(|r| r.as_ref()))
+            .map(|r| r.offset)
+            .collect();
+        cache.register_walk(&file.name, &offsets);
+    }
+
+    /// Issue slot `i` if (and only if) it is idle: a resident range is
+    /// pinned from the cache without touching the array; anything else
+    /// becomes an in-flight read ticket.  The slot state is inspected
+    /// *before* the cache, so a demand can never be issued twice.
+    fn issue(&self, i: usize) {
+        let Some(r) = self.ranges[i].as_ref() else { return };
+        let mut slot = self.slots[i].lock().unwrap();
+        if !matches!(*slot, Slot::Idle) {
+            return;
+        }
+        if let Some(arc) = self.cache.as_ref().and_then(|c| c.peek(&r.file.name, r.offset, r.len))
+        {
+            *slot = Slot::Cached(arc);
+        } else {
+            let buf = self.pools.get(i, r.len);
+            *slot = Slot::InFlight(self.fs.read_async(r.file.clone(), r.offset, buf));
+        }
+    }
+
+    /// Unconditionally begin slot `i`'s read (demand-fed pipelines
+    /// start a slot the moment it enters their bounded queue).
+    pub fn start(&self, i: usize) {
+        if i < self.ranges.len() {
+            self.issue(i);
+        }
+    }
+
+    /// Depth-gated speculative issue: a no-op at depth 0 (the
+    /// synchronous baseline must stay request-for-request) or past the
+    /// walk end.
+    pub fn prefetch(&self, i: usize) {
+        if self.depth == 0 || i >= self.ranges.len() {
+            return;
+        }
+        self.issue(i);
+    }
+
+    /// Self-feed after acquiring slot `i` (Auto mode only): issue every
+    /// idle slot through the end of the group `depth` groups ahead.
+    fn auto_topup(&self, i: usize) {
+        let FeedMode::Auto { bounds } = &self.mode else { return };
+        let g = bounds.partition_point(|&end| end <= i);
+        let end = bounds[(g + self.depth).min(bounds.len() - 1)];
+        for j in i + 1..end {
+            self.issue(j);
+        }
+    }
+
+    /// Consume slot `i`: resolve it (from an earlier issue, the cache,
+    /// or a fresh synchronous read), account exactly one hit or miss,
+    /// self-feed in Auto mode, and hand the bytes back.  `None` only
+    /// for RAM-served (`None`-range) slots.
+    pub fn acquire(&self, i: usize) -> Option<SlotBuf> {
+        let r = self.ranges[i].as_ref()?;
+        {
+            let mut slot = self.slots[i].lock().unwrap();
+            match &*slot {
+                Slot::InFlight(_) => {
+                    if let Some(c) = &self.cache {
+                        c.note_miss(&r.file.name, r.offset, r.len);
+                    }
+                }
+                Slot::Cached(_) => {
+                    if let Some(c) = &self.cache {
+                        c.note_hit(&r.file.name, r.offset, r.len);
+                    }
+                }
+                Slot::Idle | Slot::Consumed => {
+                    // Never issued ahead (or re-armed): resolve at
+                    // demand time — the probe accounts the hit/miss.
+                    match self.cache.as_ref().and_then(|c| c.probe(&r.file.name, r.offset, r.len))
+                    {
+                        Some(arc) => *slot = Slot::Cached(arc),
+                        None => {
+                            let buf = self.pools.get(i, r.len);
+                            *slot =
+                                Slot::InFlight(self.fs.read_async(r.file.clone(), r.offset, buf));
+                        }
+                    }
+                }
+            }
+        }
+        // Feed the stream before blocking on this slot's ticket, so the
+        // look-ahead reads overlap with the wait and the compute.
+        self.auto_topup(i);
+        let state = std::mem::replace(&mut *self.slots[i].lock().unwrap(), Slot::Consumed);
+        match state {
+            Slot::InFlight(t) => Some(SlotBuf::Owned(t.wait())),
+            Slot::Cached(arc) => Some(SlotBuf::Shared(arc)),
+            Slot::Idle | Slot::Consumed => unreachable!("interval slot consumed twice"),
+        }
+    }
+
+    /// Hand back an acquired buffer: owned bytes are offered to the
+    /// image cache (cache-aware schedulers) or recycled into the
+    /// hinted worker's pool; shared handles are just dropped.
+    pub fn release(&self, hint: usize, i: usize, buf: SlotBuf) {
+        let SlotBuf::Owned(bytes) = buf else { return };
+        let Some(r) = self.ranges[i].as_ref() else { return };
+        match self.cache.as_deref() {
+            Some(c) => {
+                if let Some(rejected) = c.publish(&r.file.name, r.offset, bytes) {
+                    self.pools.put(hint, rejected);
+                }
+            }
+            None => self.pools.put(hint, bytes),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::safs::SafsConfig;
+
+    fn file_with(fs: &Arc<Safs>, name: &str, n: usize) -> FileHandle {
+        let f = fs.create(name);
+        let data: Vec<u8> = (0..n).map(|i| (i * 131 % 251) as u8).collect();
+        fs.write_sync(&f, 0, data);
+        f
+    }
+
+    fn seq_ranges(file: &FileHandle, slots: usize, len: usize) -> Vec<Option<ReadRange>> {
+        (0..slots)
+            .map(|i| {
+                Some(ReadRange { file: file.clone(), offset: (i * len) as u64, len })
+            })
+            .collect()
+    }
+
+    /// Per-slot Auto groups at every depth: same bytes, same contents,
+    /// every range read exactly once per pass.
+    #[test]
+    fn auto_walk_reads_each_range_once_at_every_depth() {
+        let mut expected: Option<Vec<Vec<u8>>> = None;
+        for depth in [0usize, 2, 8] {
+            let mut cfg = SafsConfig::untimed();
+            cfg.read_ahead = depth;
+            let fs = Safs::new(cfg);
+            let file = file_with(&fs, "img", 6 * 64);
+            let base = fs.stats().bytes_read;
+            let ranges = seq_ranges(&file, 6, 64);
+            let sched = WalkScheduler::new(
+                &fs,
+                ranges,
+                1,
+                FeedMode::Auto { bounds: (1..=6).collect() },
+                true,
+            );
+            assert_eq!(sched.depth(), depth);
+            let got: Vec<Vec<u8>> = (0..6)
+                .map(|i| {
+                    let buf = sched.acquire(i).expect("file-backed slot");
+                    let v = buf.to_vec();
+                    sched.release(0, i, buf);
+                    v
+                })
+                .collect();
+            assert_eq!(
+                fs.stats().bytes_read - base,
+                6 * 64,
+                "depth {depth}: every range exactly once"
+            );
+            match &expected {
+                None => expected = Some(got),
+                Some(e) => assert_eq!(e, &got, "depth {depth}: bytes must be depth-invariant"),
+            }
+        }
+    }
+
+    /// Grouped Auto bounds (the fused walk's per-interval request
+    /// groups) still deliver each slot exactly once, in any demand
+    /// order within the group.
+    #[test]
+    fn grouped_auto_bounds_deliver_each_slot_once() {
+        let fs = Safs::new(SafsConfig::untimed());
+        let file = file_with(&fs, "ops", 6 * 32);
+        let base = fs.stats().bytes_read;
+        let sched = WalkScheduler::new(
+            &fs,
+            seq_ranges(&file, 6, 32),
+            2,
+            FeedMode::Auto { bounds: vec![3, 6] },
+            false,
+        );
+        for i in [0usize, 2, 1, 3, 5, 4] {
+            let buf = sched.acquire(i).expect("file-backed slot");
+            assert_eq!(buf.len(), 32);
+            assert_eq!(buf[0], ((i * 32 * 131) % 251) as u8);
+            sched.release(0, i, buf);
+        }
+        assert_eq!(fs.stats().bytes_read - base, 6 * 32);
+    }
+
+    /// Demand mode: `start` issues eagerly, `prefetch` is a no-op at
+    /// depth 0, and a consumed slot re-arms on the next acquire.
+    #[test]
+    fn demand_mode_start_prefetch_and_rearm() {
+        let mut cfg = SafsConfig::untimed();
+        cfg.read_ahead = 0;
+        let fs = Safs::new(cfg);
+        let file = file_with(&fs, "d", 2 * 16);
+        let base = fs.stats().bytes_read;
+        let sched = WalkScheduler::new(&fs, seq_ranges(&file, 2, 16), 1, FeedMode::Demand, false);
+        sched.prefetch(1); // depth 0: must not issue
+        assert_eq!(fs.stats().bytes_read - base, 0);
+        sched.start(0); // unconditional
+        assert_eq!(fs.stats().bytes_read - base, 16);
+        let first = sched.acquire(0).unwrap().to_vec();
+        // Re-arm: acquiring the consumed slot re-reads the range.
+        let again = sched.acquire(0).unwrap().to_vec();
+        assert_eq!(first, again);
+        assert_eq!(fs.stats().bytes_read - base, 2 * 16);
+    }
+
+    /// A cache-bypassing scheduler never populates or consults the
+    /// image cache, even when the filesystem has a budget.
+    #[test]
+    fn cache_bypass_leaves_the_image_cache_untouched() {
+        let mut cfg = SafsConfig::untimed();
+        cfg.image_cache_bytes = 1 << 20;
+        let fs = Safs::new(cfg);
+        let file = file_with(&fs, "dense", 4 * 32);
+        let sched = WalkScheduler::new(
+            &fs,
+            seq_ranges(&file, 4, 32),
+            1,
+            FeedMode::Auto { bounds: (1..=4).collect() },
+            false,
+        );
+        for i in 0..4 {
+            let buf = sched.acquire(i).unwrap();
+            assert!(matches!(buf, SlotBuf::Owned(_)), "bypass never shares cache handles");
+            sched.release(0, i, buf);
+        }
+        let c = fs.image_cache().counters();
+        assert_eq!((c.hit_bytes, c.miss_bytes), (0, 0));
+        assert_eq!(fs.image_cache().resident_bytes(), 0);
+    }
+
+    /// A cache-aware scheduler serves the second pass from residency:
+    /// pass 1 all misses (published on release), pass 2 all hits, with
+    /// `hit + miss = demanded` exact.
+    #[test]
+    fn cache_aware_walk_hits_on_the_second_pass() {
+        let mut cfg = SafsConfig::untimed();
+        cfg.image_cache_bytes = 1 << 20;
+        let fs = Safs::new(cfg);
+        let file = file_with(&fs, "img", 4 * 32);
+        for pass in 0..2 {
+            let sched = WalkScheduler::new(
+                &fs,
+                seq_ranges(&file, 4, 32),
+                1,
+                FeedMode::Auto { bounds: (1..=4).collect() },
+                true,
+            );
+            sched.register_walk_order(&[0, 1, 2, 3]);
+            let base = fs.stats().bytes_read;
+            for i in 0..4 {
+                let buf = sched.acquire(i).unwrap();
+                sched.release(0, i, buf);
+            }
+            let read = fs.stats().bytes_read - base;
+            match pass {
+                0 => assert_eq!(read, 4 * 32, "cold pass reads everything"),
+                _ => assert_eq!(read, 0, "warm pass is all cache hits"),
+            }
+        }
+        let c = fs.image_cache().counters();
+        assert_eq!(c.miss_bytes, 4 * 32);
+        assert_eq!(c.hit_bytes, 4 * 32);
+    }
+}

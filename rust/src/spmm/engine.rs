@@ -7,20 +7,23 @@
 //!   within a partition — so the input rows of a tile column stay in
 //!   cache across the partition's tile rows.
 //! * Semi-external memory: each worker streams its partitions from SAFS
-//!   asynchronously, keeping [`crate::safs::SafsConfig::read_ahead`]
-//!   partitions in flight and overlapping I/O with multiplication (the
-//!   same tunable drives the streamed boundary's interval scheduler in
-//!   [`crate::spmm::stream`]; depth 0 degenerates to synchronous reads).
-//!   Each partition read probes the shared cross-apply
-//!   [`crate::safs::ImageCache`] first and publishes its buffer back on
-//!   retirement, so under a nonzero `--image-cache` budget hot
-//!   partitions stay resident in RAM from one apply to the next.
+//!   asynchronously through the unified interval-stream scheduler
+//!   ([`crate::safs::WalkScheduler`], demand-fed: a partition's read
+//!   starts the moment it enters the worker's bounded queue), keeping
+//!   [`crate::safs::SafsConfig::read_ahead`] partitions in flight and
+//!   overlapping I/O with multiplication (the same scheduler drives the
+//!   streamed boundary's interval stream in [`crate::spmm::stream`] and
+//!   the fused dense walks; depth 0 degenerates to synchronous reads).
+//!   The scheduler probes the shared cross-apply
+//!   [`crate::safs::ImageCache`] before issuing any read and publishes
+//!   buffers back on release, so under a nonzero `--image-cache` budget
+//!   hot partitions stay resident in RAM from one apply to the next.
 
 use super::dense_block::{DenseBlock, SharedMut};
 use super::kernel::multiply_tile;
 use super::opts::SpmmOpts;
 use super::super_tile::partition_tile_rows;
-use crate::safs::BufferPool;
+use crate::safs::{FeedMode, ReadRange, WalkScheduler};
 use crate::sparse::{SparseMatrix, TileRowView};
 use crate::util::threadpool::OwnedQueues;
 use std::collections::VecDeque;
@@ -56,17 +59,25 @@ pub fn spmm(
         opts.super_tile,
         threads,
     );
-    if let Some((fs, file)) = matrix.safs_handle() {
-        let cache = fs.image_cache();
-        if cache.is_enabled() {
-            // Partition geometry is a function of the matrix layout,
-            // width and thread count, so consecutive applies walk the
-            // same byte ranges in the same ascending order — register
-            // that as the cross-apply image cache's walk schedule.
-            let offsets: Vec<u64> = parts.iter().map(|&p| part_byte_range(matrix, p).0).collect();
-            cache.register_walk(&file.name, &offsets);
-        }
-    }
+    // SEM: one demand-fed scheduler over the partition byte ranges,
+    // shared by all workers (each keeps its own bounded queue of slots).
+    // Partition geometry is a function of the matrix layout, width and
+    // thread count, so consecutive applies walk the same byte ranges in
+    // the same ascending order — registered as the cross-apply image
+    // cache's walk schedule.
+    let sched = matrix.safs_handle().map(|(fs, file)| {
+        let ranges: Vec<Option<ReadRange>> = parts
+            .iter()
+            .map(|&p| {
+                let (offset, len) = part_byte_range(matrix, p);
+                Some(ReadRange { file: file.clone(), offset, len })
+            })
+            .collect();
+        let s = WalkScheduler::new(fs, ranges, threads.max(1), FeedMode::Demand, true);
+        let order: Vec<u32> = (0..parts.len() as u32).collect();
+        s.register_walk_order(&order);
+        s
+    });
     let out = SharedMut::new(output);
     let queues = OwnedQueues::new(parts.len(), threads.max(1));
     let stolen = AtomicUsize::new(0);
@@ -78,6 +89,7 @@ pub fn spmm(
             let queues = &queues;
             let out = &out;
             let stolen = &stolen;
+            let sched = &sched;
             let own = ranges[w];
             s.spawn(move || {
                 let mut local_buf: Vec<f64> = Vec::new();
@@ -104,28 +116,22 @@ pub fn spmm(
                             );
                         }
                     }
-                    Some((fs, file)) => {
-                        // Semi-external: pipelined async reads.  The
-                        // worker keeps `read_ahead` partition reads in
-                        // flight BEYOND the one it is computing (the
-                        // same depth semantics as the streamed
-                        // scheduler); depth 0 means the single
-                        // outstanding request is awaited immediately —
-                        // the synchronous differential-testing baseline.
-                        // Each partition is probed against the shared
-                        // cross-apply image cache before a ticket is
-                        // issued: a resident range is served from RAM
-                        // (one hit, no read), a miss reads once and the
-                        // buffer is published back on retirement so the
-                        // next apply finds it resident.
-                        let depth = fs.cfg().read_ahead + 1;
-                        let cache = fs.image_cache().clone();
-                        let mut pool = BufferPool::new(fs.cfg().use_buffer_pool);
-                        enum Pending {
-                            Ticket(crate::safs::IoTicket),
-                            Hit(std::sync::Arc<Vec<u8>>),
-                        }
-                        let mut pending: VecDeque<(usize, Pending)> = VecDeque::new();
+                    Some(_) => {
+                        // Semi-external: pipelined async reads through
+                        // the shared demand-fed scheduler.  The worker
+                        // keeps `read_ahead` partition reads in flight
+                        // BEYOND the one it is computing — a slot's read
+                        // starts (`start`) the moment the partition
+                        // enters the bounded queue and is consumed
+                        // (`acquire`) when it reaches the front; depth 0
+                        // means the single outstanding request is
+                        // awaited immediately — the synchronous
+                        // differential-testing baseline.  Cache probing,
+                        // hit/miss accounting and publish-on-release all
+                        // live in the scheduler.
+                        let sched = sched.as_ref().unwrap();
+                        let depth = sched.depth() + 1;
+                        let mut pending: VecDeque<usize> = VecDeque::new();
                         loop {
                             while pending.len() < depth {
                                 match pop(queues) {
@@ -133,50 +139,27 @@ pub fn spmm(
                                         if !(own.0 <= pi && pi < own.1) {
                                             stolen.fetch_add(1, Ordering::Relaxed);
                                         }
-                                        let part = parts[pi];
-                                        let (off, len) = part_byte_range(matrix, part);
-                                        let slot = match cache.probe(&file.name, off, len) {
-                                            Some(arc) => Pending::Hit(arc),
-                                            None => {
-                                                let buf = pool.get(len);
-                                                Pending::Ticket(
-                                                    fs.read_async(file.clone(), off, buf),
-                                                )
-                                            }
-                                        };
-                                        pending.push_back((pi, slot));
+                                        sched.start(pi);
+                                        pending.push_back(pi);
                                     }
                                     None => break,
                                 }
                             }
-                            let Some((pi, slot)) = pending.pop_front() else { break };
+                            let Some(pi) = pending.pop_front() else { break };
                             let part = parts[pi];
-                            let (off, _) = part_byte_range(matrix, part);
-                            let (buf_owned, buf_shared): (Option<Vec<u8>>, _) = match slot {
-                                Pending::Ticket(t) => (Some(t.wait()), None),
-                                Pending::Hit(arc) => (None, Some(arc)),
-                            };
-                            let bytes: &[u8] = match (&buf_owned, &buf_shared) {
-                                (Some(b), _) => b,
-                                (_, Some(a)) => a,
-                                _ => unreachable!(),
-                            };
+                            let Some(buf) = sched.acquire(pi) else { continue };
                             let base = matrix.index[part.0].offset;
                             let images: Vec<&[u8]> = (part.0..part.1)
                                 .map(|tr| {
                                     let m = matrix.index[tr];
                                     let s = (m.offset - base) as usize;
-                                    &bytes[s..s + m.len as usize]
+                                    &buf[s..s + m.len as usize]
                                 })
                                 .collect();
                             multiply_partition(
                                 matrix, part, &images, input, out, opts, &mut local_buf,
                             );
-                            if let Some(b) = buf_owned {
-                                if let Some(rejected) = cache.publish(&file.name, off, b) {
-                                    pool.put(rejected);
-                                }
-                            }
+                            sched.release(w, pi, buf);
                         }
                     }
                 }

@@ -40,48 +40,36 @@
 //!
 //! # The read-ahead scheduler
 //!
-//! SEM tile-row images are read through a per-apply scheduler (the
-//! internal `ImagePrefetcher`) instead of synchronous
-//! issue-and-wait reads, restoring the paper's I/O/compute overlap on
-//! the streamed path (the eager engine pipelines its partition reads
-//! the same way).  Its contract:
+//! SEM tile-row images are read through the **unified interval-stream
+//! scheduler** ([`crate::safs::WalkScheduler`], which owns the full
+//! scheduling contract: every issued read consumed by exactly one
+//! acquire, totals and results depth-invariant, exact image-cache
+//! accounting) instead of synchronous issue-and-wait reads, restoring
+//! the paper's I/O/compute overlap on the streamed path.  The same
+//! scheduler serves the eager engine's partition pipeline and the
+//! fused dense walks; this module instantiates it two ways:
 //!
-//! * **What may be in flight.**  Each output interval's tile rows are
-//!   one contiguous byte range (precomputed from the in-RAM §3.3.1
-//!   matrix index).  A *sequential* scheduler (the hop-2/output walks,
-//!   whose interval order is known up front from the walk schedule:
-//!   each pipeline worker consumes an ascending range of intervals)
-//!   keeps up to [`crate::safs::SafsConfig::read_ahead`] interval reads
-//!   in flight beyond the one being multiplied, issued from the
-//!   consuming worker as it acquires its current interval.  A
-//!   *demand-driven* scheduler (hop 1 of a chained apply) issues reads
-//!   only for intervals that are **guaranteed to be consumed**: the
-//!   next never-yet-computed intervals in first-demand order (derived
-//!   from the tile-column structure), at most `read_ahead` ahead.
-//! * **Ordering/release guarantees.**  Every issued read is consumed by
-//!   exactly one later acquire (a prefetch is admitted only for a slot
-//!   that is idle and provably demanded later), so scheduling changes
-//!   *when* bytes move, never *how many*: total SAFS bytes are
-//!   identical at every depth, and depth 0 reproduces the synchronous
-//!   baseline request-for-request.  Buffers come from per-worker
-//!   [`BufferPool`]s (§3.2) and are released back as soon as the
-//!   interval's multiply finishes.
-//! * **Results are bitwise depth-invariant.**  The multiply consumes
-//!   the same bytes in the same order whatever the depth; read-ahead
-//!   only hides latency (visible as lower `io_wait` in
-//!   [`crate::metrics::PhaseIo`] at equal bytes).
-//! * **Cross-apply residency.**  Before any ticket is issued the
-//!   scheduler consults the filesystem's shared
-//!   [`crate::safs::ImageCache`]: a resident tile-row range is served
-//!   from RAM (no read), a fresh read's buffer is offered back to the
-//!   cache on release so the *next* apply finds it resident.  The
-//!   ticket discipline is preserved exactly — a slot whose read is
-//!   already in flight as a prefetch ticket consumes that ticket and is
-//!   never re-requested on the cache-miss path (and a prefetch never
-//!   issues a ticket for cached bytes), so every apply performs at most
-//!   one read per (interval, apply) at every depth and budget.  With
-//!   the default budget of 0 the cache is inert and this module behaves
-//!   byte-for-byte as before.
+//! * A *sequential* image stream (the hop-2/output walks, whose
+//!   interval order is known up front from the walk schedule: each
+//!   pipeline worker consumes an ascending range of intervals) runs
+//!   self-feeding with per-interval groups — up to
+//!   [`crate::safs::SafsConfig::read_ahead`] interval reads in flight
+//!   beyond the one being multiplied, issued as the consuming worker
+//!   acquires its current interval.
+//! * A *demand-driven* stream (hop 1 of a chained apply) runs
+//!   caller-fed: reads are prefetched only for intervals that are
+//!   **guaranteed to be consumed** — the next never-yet-computed
+//!   intervals in first-demand order (derived from the tile-column
+//!   structure), at most `read_ahead` ahead — and consumed slots
+//!   re-arm for ring-pressure recomputes.
+//!
+//! Cross-apply residency rides the same scheduler: sequential walks
+//! register their ascending interval order with the shared
+//! [`crate::safs::ImageCache`], demand-driven walks their first-touch
+//! order, and a fresh read's buffer is offered back to the cache on
+//! release so the *next* apply finds it resident.  With the default
+//! budget of 0 the cache is inert and this module behaves
+//! byte-for-byte as before.
 //!
 //! # Staging eviction and the re-read schedule
 //!
@@ -130,7 +118,7 @@ use super::dense_block::{colmajor_to_rowmajor, rowmajor_to_colmajor};
 use super::engine::multiply_rows_from_source;
 use crate::dense::{DenseCtx, IntervalProducer, TasMatrix};
 use crate::metrics::MemGuard;
-use crate::safs::{BufferPool, FileHandle, ImageCache, IoTicket, Safs};
+use crate::safs::{BufferPool, FeedMode, ReadRange, WalkScheduler};
 use crate::sparse::SparseMatrix;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -161,45 +149,8 @@ pub trait TileInput: Sync {
 }
 
 // ------------------------------------------------------------------------
-// Per-worker buffer pools + the SEM image read-ahead scheduler
+// The SEM image interval stream
 // ------------------------------------------------------------------------
-
-/// Per-worker I/O buffer pools (§3.2) for the streamed subsystem's image
-/// reads.  Concurrent workers land on distinct pools (first uncontended
-/// pool starting from a deterministic hint), so `get`/`put` are
-/// effectively lock-free under the walk's worker count.
-struct WorkerPools {
-    pools: Vec<Mutex<BufferPool>>,
-}
-
-impl WorkerPools {
-    fn new(workers: usize, enabled: bool) -> WorkerPools {
-        WorkerPools {
-            pools: (0..workers.max(1)).map(|_| Mutex::new(BufferPool::new(enabled))).collect(),
-        }
-    }
-
-    fn get(&self, hint: usize, len: usize) -> Vec<u8> {
-        let n = self.pools.len();
-        for d in 0..n {
-            if let Ok(mut p) = self.pools[(hint + d) % n].try_lock() {
-                return p.get(len);
-            }
-        }
-        self.pools[hint % n].lock().unwrap().get(len)
-    }
-
-    fn put(&self, hint: usize, buf: Vec<u8>) {
-        let n = self.pools.len();
-        for d in 0..n {
-            if let Ok(mut p) = self.pools[(hint + d) % n].try_lock() {
-                p.put(buf);
-                return;
-            }
-        }
-        self.pools[hint % n].lock().unwrap().put(buf);
-    }
-}
 
 /// Contiguous image byte range of each row interval's tile rows,
 /// computed from the in-RAM §3.3.1 matrix index (`None`: the interval
@@ -227,214 +178,42 @@ fn interval_image_ranges(
         .collect()
 }
 
-/// One interval's image-read slot in the scheduler.
-enum ImageSlot {
-    /// No read issued (or a consumed slot of a demand-driven scheduler
-    /// that was explicitly re-armed for a recompute).
-    Idle,
-    /// Read submitted; the ticket completes asynchronously.
-    InFlight(IoTicket),
-    /// Resolved from the cross-apply image cache (by a prefetch peek):
-    /// no array read exists for this slot, the acquire consumes the
-    /// shared bytes directly.
-    Cached(Arc<Vec<u8>>),
-    /// Bytes handed to a consumer.  A sequential scheduler never leaves
-    /// this state; a demand-driven one re-resolves synchronously on a
-    /// recompute.
-    Consumed,
-}
-
-/// One interval's image bytes: owned from a fresh array read (published
-/// to the cross-apply cache on release) or shared out of the cache (no
-/// read was issued).
-enum ImageBuf {
-    Owned(Vec<u8>),
-    Shared(Arc<Vec<u8>>),
-}
-
-impl std::ops::Deref for ImageBuf {
-    type Target = [u8];
-    fn deref(&self) -> &[u8] {
-        match self {
-            ImageBuf::Owned(b) => b,
-            ImageBuf::Shared(a) => a,
-        }
-    }
-}
-
-/// The read-ahead scheduler for one matrix's SEM tile-row images, keyed
-/// by row interval.  See the module docs ("The read-ahead scheduler")
-/// for the full contract; in short: every issued read is consumed by
-/// exactly one acquire, so total bytes are depth-invariant, and depth 0
-/// degenerates to the synchronous issue-and-wait baseline.
-struct ImagePrefetcher {
-    fs: Arc<Safs>,
-    file: FileHandle,
-    ranges: Vec<Option<(u64, usize)>>,
-    slots: Vec<Mutex<ImageSlot>>,
-    depth: usize,
-    /// Sequential walks (output intervals in per-worker ascending
-    /// ranges) top up `iv+1..=iv+depth` on every acquire; demand-driven
-    /// users (hop 1) rely on explicit [`ImagePrefetcher::prefetch`].
+/// Build the unified interval-stream scheduler
+/// ([`crate::safs::WalkScheduler`]) over `matrix`'s SEM tile-row
+/// images, keyed by row interval, or `None` when the image is in
+/// memory (nothing to read).
+///
+/// `sequential` picks the feed mode: a sequential walk (output
+/// intervals in per-worker ascending ranges) self-feeds with
+/// per-interval groups — each acquire tops up the next `read_ahead`
+/// intervals — and registers its ascending order as the cross-apply
+/// cache schedule; a demand-driven walk (hop 1) is caller-fed via
+/// [`WalkScheduler::start`]/[`WalkScheduler::prefetch`] and registers
+/// its first-touch order itself via
+/// [`WalkScheduler::register_walk_order`].
+fn image_scheduler(
+    matrix: &SparseMatrix,
+    interval_rows: usize,
+    workers: usize,
     sequential: bool,
-    pools: WorkerPools,
-    /// The filesystem's cross-apply image cache (disabled = budget 0):
-    /// probed before any read is issued, published on release.
-    cache: Arc<ImageCache>,
-}
-
-impl ImagePrefetcher {
-    /// Build a scheduler for `matrix`'s image, or `None` when the image
-    /// is in memory (nothing to read).  `depth` comes from
-    /// [`crate::safs::SafsConfig::read_ahead`] of the matrix's own
-    /// filesystem.
-    fn for_matrix(
-        matrix: &SparseMatrix,
-        interval_rows: usize,
-        workers: usize,
-        sequential: bool,
-    ) -> Option<ImagePrefetcher> {
-        let (fs, file) = matrix.safs_handle()?;
-        let ranges = interval_image_ranges(matrix, interval_rows);
-        let slots = (0..ranges.len()).map(|_| Mutex::new(ImageSlot::Idle)).collect();
-        let cache = fs.image_cache().clone();
-        if sequential && cache.is_enabled() {
-            // A sequential walk demands its intervals in ascending order
-            // every apply: register that as the cross-apply schedule so
-            // the cache can evict by next-use distance (demand-driven
-            // users register their first-touch order explicitly via
-            // [`ImagePrefetcher::register_walk_order`]).
-            let offsets: Vec<u64> = ranges.iter().filter_map(|r| r.map(|(o, _)| o)).collect();
-            cache.register_walk(&file.name, &offsets);
-        }
-        Some(ImagePrefetcher {
-            fs: fs.clone(),
-            file: file.clone(),
-            depth: fs.cfg().read_ahead,
-            sequential,
-            slots,
-            ranges,
-            pools: WorkerPools::new(workers, fs.cfg().use_buffer_pool),
-            cache,
-        })
+) -> Option<WalkScheduler> {
+    let (fs, file) = matrix.safs_handle()?;
+    let ranges: Vec<Option<ReadRange>> = interval_image_ranges(matrix, interval_rows)
+        .into_iter()
+        .map(|r| r.map(|(offset, len)| ReadRange { file: file.clone(), offset, len }))
+        .collect();
+    let n = ranges.len();
+    let mode = if sequential {
+        FeedMode::Auto { bounds: (1..=n).collect() }
+    } else {
+        FeedMode::Demand
+    };
+    let sched = WalkScheduler::new(fs, ranges, workers, mode, true);
+    if sequential {
+        let order: Vec<u32> = (0..n as u32).collect();
+        sched.register_walk_order(&order);
     }
-
-    /// Register a demand-driven walk's cross-apply schedule with the
-    /// image cache: `order` lists the intervals in the order one apply
-    /// first demands them (hop 1's first-touch order, derived from the
-    /// in-RAM tile-column index — zero image I/O).
-    fn register_walk_order(&self, order: &[u32]) {
-        if !self.cache.is_enabled() {
-            return;
-        }
-        let offsets: Vec<u64> = order
-            .iter()
-            .filter_map(|&iv| self.ranges[iv as usize].map(|(o, _)| o))
-            .collect();
-        self.cache.register_walk(&self.file.name, &offsets);
-    }
-
-    /// Image bytes of interval `iv`'s tile rows (0 when empty).
-    fn range_bytes(&self, iv: usize) -> u64 {
-        self.ranges[iv].map_or(0, |(_, len)| len as u64)
-    }
-
-    /// Resolve `iv`'s image ahead of its acquire if its slot is idle:
-    /// from the cross-apply cache when resident (no ticket — a cached
-    /// range must never be requested from the array), from an async
-    /// read otherwise.  A no-op on in-flight, cached or consumed slots,
-    /// so a prefetch can never duplicate a read — callers only prefetch
-    /// intervals that a later acquire is guaranteed to consume.
-    fn prefetch(&self, iv: usize) {
-        if self.depth == 0 || iv >= self.slots.len() {
-            return;
-        }
-        let Some((off, len)) = self.ranges[iv] else { return };
-        let mut slot = self.slots[iv].lock().unwrap();
-        if matches!(*slot, ImageSlot::Idle) {
-            // Side-effect-free peek: the demand (hit or miss) is counted
-            // when the acquire lands, exactly once per (apply, interval).
-            if let Some(arc) = self.cache.peek(&self.file.name, off, len) {
-                *slot = ImageSlot::Cached(arc);
-            } else {
-                let buf = self.pools.get(iv, len);
-                *slot = ImageSlot::InFlight(self.fs.read_async(self.file.clone(), off, buf));
-            }
-        }
-    }
-
-    /// Hand over interval `iv`'s image bytes, blocking only for whatever
-    /// part of the transfer is still outstanding.  On a sequential walk
-    /// the next `depth` intervals are issued first, so their transfers
-    /// overlap this interval's multiply.  Returns `None` for an empty
-    /// interval.
-    ///
-    /// The slot state is inspected **before** the cache is probed — an
-    /// interval whose read is already in flight as a prefetch ticket is
-    /// consumed from that ticket and never re-requested (the
-    /// double-issue guard: one read per (apply, interval) at every
-    /// depth, cache hit or miss).
-    fn acquire(&self, iv: usize) -> Option<ImageBuf> {
-        let (off, len) = self.ranges[iv]?;
-        {
-            let mut slot = self.slots[iv].lock().unwrap();
-            // A prefetch may already have resolved this slot; account
-            // the demand it absorbed (the prefetch itself was silent).
-            let resolved = match &*slot {
-                ImageSlot::Idle | ImageSlot::Consumed => false,
-                ImageSlot::InFlight(_) => {
-                    self.cache.note_miss(&self.file.name, off, len);
-                    true
-                }
-                ImageSlot::Cached(_) => {
-                    self.cache.note_hit(&self.file.name, off, len);
-                    true
-                }
-            };
-            if !resolved {
-                // Demand-time probe: a hit serves shared bytes with no
-                // array read; a miss (counted by the probe) issues the
-                // one read this acquire will consume.
-                match self.cache.probe(&self.file.name, off, len) {
-                    Some(arc) => *slot = ImageSlot::Cached(arc),
-                    None => {
-                        let buf = self.pools.get(iv, len);
-                        *slot = ImageSlot::InFlight(
-                            self.fs.read_async(self.file.clone(), off, buf),
-                        );
-                    }
-                }
-            }
-        }
-        if self.sequential {
-            for j in iv + 1..self.slots.len().min(iv + 1 + self.depth) {
-                self.prefetch(j);
-            }
-        }
-        let state = std::mem::replace(&mut *self.slots[iv].lock().unwrap(), ImageSlot::Consumed);
-        match state {
-            ImageSlot::InFlight(t) => Some(ImageBuf::Owned(t.wait())),
-            ImageSlot::Cached(a) => Some(ImageBuf::Shared(a)),
-            // Unreachable: the block above resolved this slot and each
-            // interval has exactly one consumer at a time.
-            _ => unreachable!("image slot consumed twice"),
-        }
-    }
-
-    /// Retire a consumed interval's bytes: freshly read buffers are
-    /// offered to the cross-apply cache (rejected ones return to the
-    /// per-worker pools); cache-shared handles are simply dropped.
-    fn release(&self, hint: usize, iv: usize, buf: ImageBuf) {
-        match buf {
-            ImageBuf::Shared(_) => {}
-            ImageBuf::Owned(b) => {
-                let Some((off, _)) = self.ranges[iv] else { return };
-                if let Some(rejected) = self.cache.publish(&self.file.name, off, b) {
-                    self.pools.put(hint, rejected);
-                }
-            }
-        }
-    }
+    Some(sched)
 }
 
 // ------------------------------------------------------------------------
@@ -449,7 +228,7 @@ impl ImagePrefetcher {
 fn interval_product_rowmajor(
     matrix: &SparseMatrix,
     input: &dyn TileInput,
-    images: Option<&ImagePrefetcher>,
+    images: Option<&WalkScheduler>,
     iv: usize,
     rows: usize,
     interval_rows: usize,
@@ -497,7 +276,7 @@ fn interval_product_rowmajor(
 fn produce_colmajor(
     matrix: &SparseMatrix,
     input: &dyn TileInput,
-    images: Option<&ImagePrefetcher>,
+    images: Option<&WalkScheduler>,
     mem: &crate::metrics::MemTracker,
     iv: usize,
     rows: usize,
@@ -625,7 +404,7 @@ pub struct StreamedSpmm<'a> {
     b: usize,
     vectorize: bool,
     /// Read-ahead scheduler for SEM tile-row images (None: in-memory).
-    images: Option<ImagePrefetcher>,
+    images: Option<WalkScheduler>,
 }
 
 impl<'a> StreamedSpmm<'a> {
@@ -651,7 +430,7 @@ impl<'a> StreamedSpmm<'a> {
             interval_rows: input.interval_rows(),
             b: input.n_cols,
             vectorize,
-            images: ImagePrefetcher::for_matrix(matrix, input.interval_rows(), workers, true),
+            images: image_scheduler(matrix, input.interval_rows(), workers, true),
         })
     }
 
@@ -901,7 +680,7 @@ pub struct StagedIntermediate<'a> {
     gather: InputGather<'a>,
     /// Read-ahead scheduler for `a`'s SEM tile-row images (None:
     /// in-memory image — recomputes are pure RAM work).
-    a_images: Option<ImagePrefetcher>,
+    a_images: Option<WalkScheduler>,
     /// One slot per interval of `M`; `None` = not resident.
     slots: Vec<Mutex<Option<Arc<Vec<f64>>>>>,
     residency: Residency,
@@ -953,7 +732,7 @@ impl<'a> StagedIntermediate<'a> {
             ),
             None => (Residency::Lru(Mutex::new(VecDeque::new())), Vec::new()),
         };
-        let a_images = ImagePrefetcher::for_matrix(a, interval_rows, ctx.threads, false);
+        let a_images = image_scheduler(a, interval_rows, ctx.threads, false);
         if let Some(images) = &a_images {
             // Cross-apply residency: the hop-1 first-touch order repeats
             // every apply, so it is the image cache's walk schedule for
@@ -1044,12 +823,12 @@ impl<'a> StagedIntermediate<'a> {
     /// future computes, so the prefetched bytes are always consumed.
     fn prefetch_next_first_touch(&self) {
         let Some(images) = &self.a_images else { return };
-        if images.depth == 0 {
+        if images.depth() == 0 {
             return;
         }
         let mut started = 0usize;
         let mut p = self.ft_cursor.load(Ordering::Relaxed);
-        while p < self.first_touch.len() && started < images.depth {
+        while p < self.first_touch.len() && started < images.depth() {
             let cand = self.first_touch[p] as usize;
             if self.computed_once[cand].load(Ordering::Relaxed) {
                 // Settled: cooperatively advance the shared cursor.
@@ -1254,7 +1033,7 @@ pub struct ChainedGramSpmm<'a> {
     b: usize,
     vectorize: bool,
     /// Read-ahead scheduler for `Aᵀ`'s SEM tile-row images.
-    at_images: Option<ImagePrefetcher>,
+    at_images: Option<WalkScheduler>,
     /// Image bytes the construction-time re-read schedule predicts
     /// ring-pressure recomputes will re-read (0 when `M` fits the ring).
     modeled_reread: u64,
@@ -1343,13 +1122,27 @@ impl<'a> ChainedGramSpmm<'a> {
                 return None;
             }
         }
+        let at_images = image_scheduler(at, ir, workers, true);
+        if modeled_reread > 0 {
+            // Two-file Gram schedule: measured re-read pressure on the
+            // first hop means `A`'s re-demanded tile rows pay for
+            // residency more than once per apply, while `Aᵀ` streams
+            // exactly once.  Register the `Aᵀ` walk cold so `A` wins
+            // the shared cache budget (an eviction-order hint only —
+            // results are bitwise identical either way).
+            if let Some((fs, at_file)) = at.safs_handle() {
+                if fs.image_cache().is_enabled() && fs.cfg().gram_cache_split {
+                    fs.image_cache().set_walk_bias(&at_file.name, 2);
+                }
+            }
+        }
         Some(ChainedGramSpmm {
             at,
             stage: StagedIntermediate::new(a, input, cap, vectorize, schedule),
             interval_rows: ir,
             b: input.n_cols,
             vectorize,
-            at_images: ImagePrefetcher::for_matrix(at, ir, workers, true),
+            at_images,
             modeled_reread,
             ctx,
         })

@@ -2,6 +2,9 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional
 //! arguments, with typed accessors and a generated usage string.
+//! Both value-taking keys and boolean flags are declared up front, so a
+//! typo like `--raed-ahead 4` is an error instead of silently becoming
+//! a bool flag plus a stray positional.
 
 use std::collections::BTreeMap;
 
@@ -11,14 +14,19 @@ pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
     pub flags: Vec<String>,
-    /// Option keys that take values — anything else starting with `--`
-    /// is treated as a boolean flag.
+    /// Option keys that take values.
     known_value_keys: Vec<String>,
 }
 
 impl Args {
-    /// Parse `argv`, treating the listed keys as value-taking options.
-    pub fn parse(argv: &[String], value_keys: &[&str]) -> Result<Args, String> {
+    /// Parse `argv`, treating the listed `value_keys` as value-taking
+    /// options and `flag_keys` as boolean flags.  Any other `--` option
+    /// is rejected.
+    pub fn parse(
+        argv: &[String],
+        value_keys: &[&str],
+        flag_keys: &[&str],
+    ) -> Result<Args, String> {
         let mut args = Args {
             known_value_keys: value_keys.iter().map(|s| s.to_string()).collect(),
             ..Default::default()
@@ -28,14 +36,23 @@ impl Args {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some(eq) = rest.find('=') {
                     let (k, v) = rest.split_at(eq);
+                    if !args.known_value_keys.iter().any(|kk| kk == k) {
+                        return Err(if flag_keys.contains(&k) {
+                            format!("flag --{k} takes no value")
+                        } else {
+                            format!("unknown option --{k}")
+                        });
+                    }
                     args.options.insert(k.to_string(), v[1..].to_string());
                 } else if args.known_value_keys.iter().any(|k| k == rest) {
                     let v = it
                         .next()
                         .ok_or_else(|| format!("option --{rest} expects a value"))?;
                     args.options.insert(rest.to_string(), v.clone());
-                } else {
+                } else if flag_keys.contains(&rest) {
                     args.flags.push(rest.to_string());
+                } else {
+                    return Err(format!("unknown option --{rest}"));
                 }
             } else {
                 args.positional.push(a.clone());
@@ -96,13 +113,15 @@ impl Args {
 /// e.g. `16k` → 16384.  Used throughout the CLI for sizes and counts.
 pub fn parse_scaled_usize(s: &str) -> Option<usize> {
     let s = s.trim();
-    if s.is_empty() {
-        return None;
-    }
-    let (num, mult) = match s.chars().last().unwrap().to_ascii_lowercase() {
-        'k' => (&s[..s.len() - 1], 1usize << 10),
-        'm' => (&s[..s.len() - 1], 1usize << 20),
-        'g' => (&s[..s.len() - 1], 1usize << 30),
+    let last = s.chars().last()?;
+    // Strip the suffix by the character's own UTF-8 width: a multi-byte
+    // trailing character (e.g. "5µ") must fall through to the number
+    // parse (and fail cleanly), never slice mid-codepoint.
+    let cut = s.len() - last.len_utf8();
+    let (num, mult) = match last.to_ascii_lowercase() {
+        'k' => (&s[..cut], 1usize << 10),
+        'm' => (&s[..cut], 1usize << 20),
+        'g' => (&s[..cut], 1usize << 30),
         _ => (s, 1),
     };
     // Allow float prefixes like "1.5m".
@@ -129,7 +148,8 @@ mod tests {
     fn parses_mixed() {
         let a = Args::parse(
             &sv(&["graph", "--nev", "8", "--sem", "--block=4", "out.bin"]),
-            &["nev"],
+            &["nev", "block"],
+            &["sem"],
         )
         .unwrap();
         assert_eq!(a.positional, vec!["graph", "out.bin"]);
@@ -141,7 +161,27 @@ mod tests {
 
     #[test]
     fn missing_value_is_error() {
-        assert!(Args::parse(&sv(&["--nev"]), &["nev"]).is_err());
+        assert!(Args::parse(&sv(&["--nev"]), &["nev"], &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_is_rejected_not_misparsed() {
+        // The typo path: `--raed-ahead 4` used to become a bool flag
+        // plus a stray positional "4", silently accepted.
+        let e = Args::parse(&sv(&["--raed-ahead", "4"]), &["read-ahead"], &["sem"]).unwrap_err();
+        assert!(e.contains("raed-ahead"), "error must name the typo: {e}");
+        // Same for the `=` form.
+        let e = Args::parse(&sv(&["--raed-ahead=4"]), &["read-ahead"], &["sem"]).unwrap_err();
+        assert!(e.contains("raed-ahead"), "error must name the typo: {e}");
+        // A declared flag given a value is also an error, not an option.
+        let e = Args::parse(&sv(&["--sem=1"]), &["read-ahead"], &["sem"]).unwrap_err();
+        assert!(e.contains("takes no value"), "{e}");
+        // The correctly spelled forms still parse.
+        let a = Args::parse(&sv(&["--read-ahead", "4", "--sem"]), &["read-ahead"], &["sem"])
+            .unwrap();
+        assert_eq!(a.get("read-ahead"), Some("4"));
+        assert!(a.flag("sem"));
+        assert!(a.positional.is_empty());
     }
 
     #[test]
@@ -154,8 +194,19 @@ mod tests {
     }
 
     #[test]
+    fn multibyte_suffix_is_rejected_not_panicking() {
+        // "5µ": the trailing char is multi-byte UTF-8 — the suffix strip
+        // must respect the char boundary and the parse must return None.
+        assert_eq!(parse_scaled_usize("5µ"), None);
+        assert_eq!(parse_scaled_usize("µ"), None);
+        assert_eq!(parse_scaled_usize("1.5µ"), None);
+        assert_eq!(parse_scaled_usize(""), None);
+        assert_eq!(parse_scaled_usize("  "), None);
+    }
+
+    #[test]
     fn usize_list() {
-        let a = Args::parse(&sv(&["--cols", "1,2,4,16k"]), &["cols"]).unwrap();
+        let a = Args::parse(&sv(&["--cols", "1,2,4,16k"]), &["cols"], &[]).unwrap();
         assert_eq!(
             a.get_usize_list("cols", &[]).unwrap(),
             vec![1, 2, 4, 16384]

@@ -8,7 +8,10 @@ pub fn fmt_bytes(b: u64) -> String {
     }
     let mut v = b as f64;
     let mut u = 0;
-    while v >= 1024.0 && u + 1 < UNITS.len() {
+    // Roll over when the mantissa would *print* as 1024.00: 1048575 B is
+    // 1023.999 KiB, which "%.2f" rounds past the unit boundary, so the
+    // threshold is the smallest value that still formats below 1024.
+    while v >= 1023.995 && u + 1 < UNITS.len() {
         v /= 1024.0;
         u += 1;
     }
@@ -17,6 +20,9 @@ pub fn fmt_bytes(b: u64) -> String {
 
 /// Format a throughput in bytes/sec.
 pub fn fmt_throughput(bytes: u64, secs: f64) -> String {
+    if bytes == 0 {
+        return "0B/s".to_string();
+    }
     if secs <= 0.0 {
         return "inf".to_string();
     }
@@ -36,8 +42,21 @@ mod tests {
     }
 
     #[test]
+    fn rolls_over_at_the_printed_unit_boundary() {
+        // 1 MiB - 1 rounds to 1024.00 in two-decimal formatting: it must
+        // print in the next unit, never as "1024.00KiB".
+        assert_eq!(fmt_bytes((1 << 20) - 1), "1.00MiB");
+        assert_eq!(fmt_bytes(1 << 20), "1.00MiB");
+        assert_eq!(fmt_bytes((1 << 30) - 1), "1.00GiB");
+        // Just below the rounding boundary still prints in its own unit.
+        assert_eq!(fmt_bytes(1023 << 10), "1023.00KiB");
+    }
+
+    #[test]
     fn throughput() {
         assert_eq!(fmt_throughput(2048, 2.0), "1.00KiB/s");
         assert_eq!(fmt_throughput(1, 0.0), "inf");
+        assert_eq!(fmt_throughput(0, 0.0), "0B/s");
+        assert_eq!(fmt_throughput(0, 2.0), "0B/s");
     }
 }

@@ -652,6 +652,54 @@ fn read_ahead_overlap_lowers_io_wait_at_equal_bytes() {
     );
 }
 
+/// (k2) The fused-dense-walk companion of (k): a fused CGS2 + normalize
+/// chain whose subspace streams from timed SSDs blocks strictly less on
+/// interval reads at read-ahead depth 2 than at the synchronous depth-0
+/// baseline, at exactly equal bytes moved and bitwise-identical results.
+/// This is the acceptance pin for the unified scheduler closing the old
+/// gap where `FusedPipeline` operand loads were synchronous: the dense
+/// ortho/restart walks now overlap SSD latency with the Gram/update
+/// arithmetic, same as the SEM image streams.
+#[test]
+fn fused_dense_walk_overlap_lowers_io_wait_at_equal_bytes() {
+    let run = |depth: usize| {
+        let mut bc = BenchCfg::default();
+        bc.dilation = 8.0; // slow simulated devices: waits dominate, overlap is visible
+        bc.read_ahead = depth;
+        let fs = bc.timed_safs();
+        // cache_slots = 1: the target block is resident, the basis streams.
+        let ctx = DenseCtx::with(fs.clone(), true, 128, 2, 4, 1, Arc::new(NativeKernels));
+        ctx.set_fused(true);
+        let (n, b, p) = (4096usize, 2usize, 6usize);
+        let basis: Vec<TasMatrix> = (0..p)
+            .map(|i| {
+                let v = TasMatrix::zeros(&ctx, n, b);
+                mv_random(&v, 100 + i as u64);
+                v
+            })
+            .collect();
+        let refs: Vec<&TasMatrix> = basis.iter().collect();
+        let x = TasMatrix::zeros(&ctx, n, b);
+        mv_random(&x, 7);
+        assert!(basis.iter().all(|v| !v.is_resident()), "basis must stream");
+        let before = fs.stats();
+        let _ = ortho_normalize(&refs, &x, 1);
+        let delta = fs.stats().delta_since(&before);
+        (x.to_colmajor(), delta)
+    };
+    let (v0, d0) = run(0);
+    let (v2, d2) = run(2);
+    assert_eq!(v0, v2, "read-ahead changed the fused walk's bits");
+    assert_eq!(d0.bytes_read, d2.bytes_read, "depth changed bytes read");
+    assert_eq!(d0.bytes_written, d2.bytes_written, "depth changed bytes written");
+    assert!(
+        d2.wait_secs() < d0.wait_secs(),
+        "fused dense walk read-ahead must strictly lower io_wait: depth 2 {:.4}s vs depth 0 {:.4}s",
+        d2.wait_secs(),
+        d0.wait_secs()
+    );
+}
+
 /// Shared driver for the cross-apply residency pins: three streamed
 /// applies of one SEM-imaged operator over an in-RAM subspace (every
 /// measured byte is image traffic), returning per-apply read bytes, the

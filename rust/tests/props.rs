@@ -700,6 +700,104 @@ fn prop_image_cache_budgets_bitwise_for_em_eigensolve_and_svd() {
 }
 
 #[test]
+fn prop_unified_scheduler_grid_bitwise_and_no_worse_bytes() {
+    // The scheduler-parity contract: one WalkScheduler now serves the
+    // eager engine's partition pipeline, the streamed operator
+    // boundaries AND the fused dense walks, so a full EM
+    // eigensolve()/svd() must be bitwise invariant across its whole
+    // configuration grid — read-ahead {0, 2} × image-cache budget
+    // {0, ≥ image}, with the two-file Gram split toggled on the SVD
+    // path — and no grid cell may move MORE total SAFS bytes than the
+    // depth-0 cache-off baseline, on ER and R-MAT graphs.  One worker
+    // pins the reduction order so runs are comparable.
+    run_prop("scheduler-grid", 4, |g| {
+        let n = g.usize_in(64, 300) as u64;
+        let nnz = g.usize_in(n as usize, 2500) as u64;
+        let tile = *g.choose(&[16usize, 32]);
+        let svd_path = g.bool();
+        let rmat_shape = g.bool();
+        let graph_seed = g.u64();
+        let solver_seed = g.u64();
+        let mut rng = Rng::new(graph_seed);
+        let mut coo = if rmat_shape {
+            rmat(n.max(64), nnz.max(1), RmatParams::default(), &mut rng)
+        } else {
+            gnm(n, nnz.min(n * n.saturating_sub(1)), &mut rng)
+        };
+        let at_coo = svd_path.then(|| coo.transpose());
+        if !svd_path {
+            coo.symmetrize();
+        }
+        let image_bytes = build_matrix_opts(&coo, tile, BuildTarget::Mem, true).storage_bytes();
+        // (read-ahead depth, image-cache budget, gram_cache_split); the
+        // first cell is the synchronous cache-off baseline.
+        let grid = [
+            (0usize, 0u64, true),
+            (2, 0, false),
+            (0, image_bytes + 1024, false),
+            (2, image_bytes + 1024, true),
+        ];
+        let mut baseline: Option<(Vec<f64>, u64)> = None;
+        for (depth, budget, split) in grid {
+            let mut cfg = SafsConfig::untimed();
+            cfg.read_ahead = depth;
+            cfg.image_cache_bytes = budget;
+            cfg.gram_cache_split = split;
+            let fs = Safs::new(cfg);
+            let ctx = DenseCtx::with(fs.clone(), true, 64, 1, 3, 1, Arc::new(NativeKernels));
+            let ecfg = flasheigen::eigen::EigenConfig {
+                nev: 2,
+                block_size: 2,
+                num_blocks: 6,
+                tol: 1e-6,
+                max_restarts: 40,
+                which: if svd_path {
+                    flasheigen::eigen::Which::LargestAlgebraic
+                } else {
+                    flasheigen::eigen::Which::LargestMagnitude
+                },
+                seed: solver_seed,
+                compute_eigenvectors: false,
+            };
+            let vals = if svd_path {
+                let a = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "ua"), true);
+                let at = build_matrix_opts(
+                    at_coo.as_ref().unwrap(),
+                    tile,
+                    BuildTarget::Safs(&fs, "uat"),
+                    true,
+                );
+                let op = GramOperator::new(a, at, SpmmOpts::default(), 1);
+                flasheigen::eigen::svd(&op, &ctx, &ecfg).singular_values
+            } else {
+                let m = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "um"), true);
+                let op = SpmmOperator::new(m, SpmmOpts::default(), 1);
+                flasheigen::eigen::solve(&op, &ctx, &ecfg).eigenvalues
+            };
+            let total = fs.stats().total_bytes();
+            match &baseline {
+                None => baseline = Some((vals, total)),
+                Some((v0, t0)) => {
+                    if &vals != v0 {
+                        return Err(format!(
+                            "solve bits changed at depth {depth} / budget {budget} / \
+                             split {split}: {vals:?} vs {v0:?}"
+                        ));
+                    }
+                    if total > *t0 {
+                        return Err(format!(
+                            "depth {depth} / budget {budget} moved {total} total bytes, \
+                             over the baseline {t0}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_default_ctx_is_fused_streamed_and_matches_eager_bitwise() {
     // The default-flip regression canary: a fresh DenseCtx runs fused +
     // streamed, and the streamed operator boundary under that default is
