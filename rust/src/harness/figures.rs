@@ -797,7 +797,17 @@ pub fn fig10_point(cfg: &BenchCfg, n: usize, b: usize, m: usize) -> (f64, f64, I
 pub fn fig11(cfg: &BenchCfg, n: usize, b: usize, m_list: &[usize]) -> Table {
     let mut t = Table::new(
         "Figure 11: average I/O throughput of EM dense MM",
-        &["m", "bytes moved", "throughput", "per SSD", "of array max", "io wait", "residency"],
+        &[
+            "m",
+            "bytes moved",
+            "throughput",
+            "per SSD",
+            "of array max",
+            "io wait",
+            "poll",
+            "qd",
+            "residency",
+        ],
     );
     let max_bps = cfg.safs_config().aggregate_read_bps();
     for &m in m_list {
@@ -817,6 +827,11 @@ pub fn fig11(cfg: &BenchCfg, n: usize, b: usize, m_list: &[usize]) -> Table {
             fmt_throughput(bytes / 24, el),
             format!("{:.0}%", 100.0 * bps / max_bps),
             format!("{:.3}s", io.wait_secs()),
+            // The busy-spin share of io wait, and the peak per-device
+            // submission-queue depth the engine reached — how deep the
+            // queued backend actually kept the devices' queues.
+            format!("{:.3}s", io.poll_secs()),
+            io.peak_queue_depth.to_string(),
             residency,
         ]);
     }
@@ -1034,6 +1049,8 @@ mod tests {
             seed: 1,
             read_ahead: 2,
             image_cache: 0,
+            queue_depth: 32,
+            io_backend: crate::safs::IoBackend::Queued,
         }
     }
 
@@ -1183,6 +1200,12 @@ mod tests {
         assert_eq!(t.rows.len(), 2);
         let t = fig11(&tiny_cfg(), 1000, 2, &[4]);
         assert_eq!(t.rows.len(), 1);
+        // The queued engine's gauge columns: peak submission-queue depth
+        // and the busy-spin share of io wait.
+        let qd_col = t.headers.iter().position(|h| h == "qd").unwrap();
+        assert!(t.headers.iter().any(|h| h == "poll"));
+        let qd: u64 = t.rows[0][qd_col].parse().unwrap();
+        assert!(qd >= 1, "EM dense MM must keep at least one request in flight");
     }
 
     #[test]

@@ -18,7 +18,7 @@
 use crate::dense::{DenseCtx, DenseKernels, NativeKernels};
 use crate::graph::Dataset;
 use crate::metrics::MemTracker;
-use crate::safs::{Safs, SafsConfig, WaitMode};
+use crate::safs::{IoBackend, Safs, SafsConfig, WaitMode};
 use crate::sparse::{build_matrix_opts, BuildTarget, CooMatrix, SparseMatrix};
 use std::sync::Arc;
 
@@ -46,6 +46,12 @@ pub struct BenchCfg {
     /// (FLASHEIGEN_IMAGE_CACHE / CLI `--image-cache`, size suffixes
     /// accepted; 0 = disabled, the differential-testing baseline).
     pub image_cache: u64,
+    /// Per-device submission-queue depth of the queued I/O engine
+    /// (FLASHEIGEN_QUEUE_DEPTH / CLI `--queue-depth`).
+    pub queue_depth: usize,
+    /// Which I/O engine serves the array (FLASHEIGEN_IO_ENGINE / CLI
+    /// `--io-engine`: `queued` | `threaded` | `inline`).
+    pub io_backend: IoBackend,
 }
 
 impl Default for BenchCfg {
@@ -59,6 +65,8 @@ impl Default for BenchCfg {
             seed: 0xBE9C,
             read_ahead: 2,
             image_cache: 0,
+            queue_depth: 32,
+            io_backend: IoBackend::Queued,
         }
     }
 }
@@ -85,6 +93,14 @@ impl BenchCfg {
         {
             c.image_cache = v as u64;
         }
+        if let Some(v) = getf("FLASHEIGEN_QUEUE_DEPTH") {
+            c.queue_depth = (v as usize).max(1);
+        }
+        if let Some(b) =
+            std::env::var("FLASHEIGEN_IO_ENGINE").ok().and_then(|v| IoBackend::from_name(&v))
+        {
+            c.io_backend = b;
+        }
         c
     }
 
@@ -101,6 +117,8 @@ impl BenchCfg {
             max_io_size: 256 << 10,
             io_threads: 1,
             wait_mode: WaitMode::Polling,
+            io_backend: self.io_backend,
+            queue_depth: self.queue_depth,
             diff_stripe_order: true,
             use_buffer_pool: true,
             throttle: true,

@@ -52,6 +52,17 @@ COMMON OPTIONS:
                      applies, so warm applies re-read only what the
                      budget cannot hold — same bits at every budget,
                      steady-state image traffic drops toward O(image)
+  --io-engine <e>    I/O engine serving the SSD array: queued (default;
+                     per-device submission queues, device time reserved
+                     at submission, one reactor retiring a deadline-
+                     ordered completion queue) | threaded (legacy thread
+                     pool, the ablation baseline) | inline (synchronous;
+                     also forced by zero I/O threads) — same bytes and
+                     bits on every engine, only io_wait moves
+  --queue-depth <n>  per-device submission-queue capacity of the queued
+                     engine (default 32; 1 = serial-per-device): how
+                     many requests may be in flight against one device
+                     before submission blocks on a completion
   --sem              semi-external mode (matrix + subspace on SSDs)
   --eager            opt out of the DEFAULT fused + streamed §3.4 path:
                      run the eager Table-1 reference ops and the
@@ -67,7 +78,9 @@ COMMON OPTIONS:
                      chained hops for svd — implies --fused)
   --xla              dispatch dense kernels to the AOT JAX/Pallas artifacts
   --cols <b>         dense-matrix width for spmm (default 4)
-  --exp <id>         figure/table id for `figures`
+  --exp <ids>        figure/table id for `figures`, or a comma-separated
+                     list (e.g. fig10,fig11,fig12) producing all listed
+                     tables in one run/artifact
   --bench-json <p>   for `figures`: also persist every produced table
                      (titles, headers, rows — including the timed
                      runtime/io_wait columns) as one JSON document at
@@ -88,6 +101,7 @@ fn main() {
         &[
             "graph", "scale", "nev", "block", "nblocks", "tol", "threads", "dilation",
             "cols", "exp", "seed", "read-ahead", "image-cache", "bench-json",
+            "queue-depth", "io-engine",
         ],
         &["sem", "xla", "eager", "fused", "streamed"],
     ) {
@@ -125,6 +139,11 @@ fn bench_cfg(args: &Args) -> Result<BenchCfg, String> {
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     cfg.read_ahead = args.get_usize("read-ahead", cfg.read_ahead)?;
     cfg.image_cache = args.get_usize("image-cache", cfg.image_cache as usize)? as u64;
+    cfg.queue_depth = args.get_usize("queue-depth", cfg.queue_depth)?.max(1);
+    if let Some(name) = args.get("io-engine") {
+        cfg.io_backend = flasheigen::safs::IoBackend::from_name(name)
+            .ok_or_else(|| format!("unknown io engine '{name}' (queued|threaded|inline)"))?;
+    }
     Ok(cfg)
 }
 
@@ -315,7 +334,12 @@ fn cmd_figures(args: &Args) -> i32 {
         let cfg = bench_cfg(args)?;
         let exp = args.get_or("exp", "all");
         let dense_n = ((60_000_000.0 * cfg.scale * 16.0) as usize).max(4096);
-        let all = exp == "all";
+        // `--exp` accepts a comma-separated list so CI can archive one
+        // multi-figure artifact per run (e.g. fig10,fig11,fig12).
+        let wanted: Vec<&str> =
+            exp.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect();
+        let all = wanted.iter().any(|&w| w == "all");
+        let want = |id: &str| all || wanted.iter().any(|&w| w == id);
         let mut ran = false;
         // Every produced table is printed AND collected, so --bench-json
         // can persist the timed rows as a per-run artifact.
@@ -324,23 +348,23 @@ fn cmd_figures(args: &Args) -> i32 {
             t.print();
             tables.push(t);
         };
-        if all || exp == "table2" {
+        if want("table2") {
             emit(harness::table2(&cfg));
             ran = true;
         }
-        if all || exp == "fig6" {
+        if want("fig6") {
             emit(harness::fig6(&cfg, &[Dataset::Friendster, Dataset::Twitter], &[1, 4, 16]));
             ran = true;
         }
-        if all || exp == "fig7" {
+        if want("fig7") {
             emit(harness::fig7(&cfg, &[1, 2, 4, 8, 16]));
             ran = true;
         }
-        if all || exp == "fig8" {
+        if want("fig8") {
             emit(harness::fig8(&cfg));
             ran = true;
         }
-        if all || exp == "fig9" {
+        if want("fig9") {
             emit(harness::fig9(&cfg, dense_n, 64, 4));
             emit(harness::fig9_fusion(&cfg, dense_n, 64, 4));
             // 16x the base scale so the subspace spans several row
@@ -356,15 +380,15 @@ fn cmd_figures(args: &Args) -> i32 {
             emit(harness::fig9_imgcache(&cfg, 16.0, 4));
             ran = true;
         }
-        if all || exp == "fig10" {
+        if want("fig10") {
             emit(harness::fig10(&cfg, dense_n, 4, &[4, 8, 16, 32, 64, 128, 256, 512]));
             ran = true;
         }
-        if all || exp == "fig11" {
+        if want("fig11") {
             emit(harness::fig11(&cfg, dense_n, 4, &[4, 16, 64, 256]));
             ran = true;
         }
-        if all || exp == "fig12" {
+        if want("fig12") {
             emit(harness::fig12(
                 &cfg,
                 &[8, 16],
@@ -372,7 +396,7 @@ fn cmd_figures(args: &Args) -> i32 {
             ));
             ran = true;
         }
-        if all || exp == "table3" {
+        if want("table3") {
             let mut c = cfg.clone();
             c.scale /= 4.0;
             emit(harness::table3(&c, 8));
@@ -392,6 +416,8 @@ fn cmd_figures(args: &Args) -> i32 {
                         ("dilation", Json::num(cfg.dilation)),
                         ("read_ahead", Json::int(cfg.read_ahead as i64)),
                         ("image_cache", Json::int(cfg.image_cache as i64)),
+                        ("io_engine", Json::str(cfg.io_backend.name())),
+                        ("queue_depth", Json::int(cfg.queue_depth as i64)),
                         ("seed", Json::int(cfg.seed as i64)),
                     ]),
                 ),

@@ -203,11 +203,17 @@ impl PhaseIo {
             } else {
                 0.0
             };
+            // io wait is split into its busy-spin (poll) and parked
+            // (block) shares: a spinning core still burns CPU, a blocked
+            // one is free for compute (see `IoStats::poll_nanos`).
             out.push_str(&format!(
-                "  {name:<28} read {:>10}  written {:>10}  io wait {:>8.3}s  {pct:>5.1}%",
+                "  {name:<28} read {:>10}  written {:>10}  io wait {:>8.3}s  \
+                 (poll {:>7.3}s  block {:>7.3}s)  {pct:>5.1}%",
                 crate::util::humansize::fmt_bytes(s.bytes_read),
                 crate::util::humansize::fmt_bytes(s.bytes_written),
-                s.wait_secs()
+                s.wait_secs(),
+                s.poll_secs(),
+                s.blocked_secs()
             ));
             if s.cache_hit_bytes > 0 {
                 // Cross-apply image residency: bytes this phase served
@@ -355,6 +361,9 @@ mod tests {
         // Ticket waits are attributed to the phase that blocked on them.
         assert!(io.get("write").wait_nanos > 0, "sync writes block on their tickets");
         assert!(io.report().contains("io wait"));
+        // The wait column is split into its spin and park shares.
+        assert!(io.report().contains("poll"));
+        assert!(io.report().contains("block"));
         io.reset();
         assert_eq!(io.get("write").bytes_written, 0);
     }

@@ -12,12 +12,28 @@ pub struct IoStats {
     pub bytes_written: u64,
     pub read_reqs: u64,
     pub write_reqs: u64,
-    /// Nanoseconds callers spent blocked in [`crate::safs::IoTicket::wait`]
+    /// Nanoseconds callers spent stalled in [`crate::safs::IoTicket::wait`]
     /// — the I/O time that was **not** hidden behind computation.  The
     /// read-ahead schedulers exist to drive this toward zero while
     /// `bytes_read` stays constant; [`crate::metrics::PhaseIo`] reports it
-    /// per solver phase as `io wait`.
+    /// per solver phase as `io wait`.  This is the *total* stall;
+    /// [`IoStats::poll_nanos`] is the share of it spent busy-spinning.
     pub wait_nanos: u64,
+    /// The polled-spin share of [`IoStats::wait_nanos`]: nanoseconds the
+    /// caller burned a core spinning in
+    /// [`crate::safs::WaitMode::Polling`] instead of sleeping.  Always
+    /// `poll_nanos <= wait_nanos`; the difference is true blocked time
+    /// (condvar park or sleep).  Splitting the two stops the overlap
+    /// columns from conflating a spinning core (still consuming CPU)
+    /// with a sleeping one (free for compute).
+    pub poll_nanos: u64,
+    /// Max over devices of the peak submission-queue depth
+    /// ([`crate::safs::device::DeviceStats::peak_queue_depth`]): how
+    /// deep the I/O engine actually kept a device's queue.  A gauge
+    /// high-water mark, **not** a flow — [`IoStats::delta_since`]
+    /// carries the later snapshot's value instead of subtracting, and
+    /// [`IoStats::accumulate`] folds by max.
+    pub peak_queue_depth: u64,
     /// Bytes served by the cross-apply SEM image cache
     /// ([`crate::safs::ImageCache`]) instead of being read from the
     /// array — the residency win.  `0` whenever the cache is disabled
@@ -38,9 +54,21 @@ impl IoStats {
         self.bytes_read + self.bytes_written
     }
 
-    /// Seconds spent blocked on ticket waits (see [`IoStats::wait_nanos`]).
+    /// Seconds spent stalled on ticket waits (see [`IoStats::wait_nanos`]).
     pub fn wait_secs(&self) -> f64 {
         self.wait_nanos as f64 * 1e-9
+    }
+
+    /// Seconds of that stall spent busy-spinning (see
+    /// [`IoStats::poll_nanos`]).
+    pub fn poll_secs(&self) -> f64 {
+        self.poll_nanos as f64 * 1e-9
+    }
+
+    /// Seconds of that stall spent truly blocked (parked or asleep):
+    /// `wait - poll`.
+    pub fn blocked_secs(&self) -> f64 {
+        self.wait_nanos.saturating_sub(self.poll_nanos) as f64 * 1e-9
     }
 
     /// Max/mean ratio of per-device traffic: 1.0 = perfectly balanced.
@@ -66,6 +94,10 @@ impl IoStats {
         self.read_reqs += other.read_reqs;
         self.write_reqs += other.write_reqs;
         self.wait_nanos += other.wait_nanos;
+        self.poll_nanos += other.poll_nanos;
+        // A high-water mark folds by max, not sum: two phases that each
+        // saw depth 8 did not see depth 16.
+        self.peak_queue_depth = self.peak_queue_depth.max(other.peak_queue_depth);
         self.cache_hit_bytes += other.cache_hit_bytes;
         self.cache_miss_bytes += other.cache_miss_bytes;
         self.cache_evict_bytes += other.cache_evict_bytes;
@@ -86,6 +118,11 @@ impl IoStats {
             read_reqs: self.read_reqs - earlier.read_reqs,
             write_reqs: self.write_reqs - earlier.write_reqs,
             wait_nanos: self.wait_nanos - earlier.wait_nanos,
+            poll_nanos: self.poll_nanos - earlier.poll_nanos,
+            // Peaks do not subtract: the depth the engine reached during
+            // the measured window is at most the later snapshot's
+            // high-water mark, and that is what the delta reports.
+            peak_queue_depth: self.peak_queue_depth,
             // Saturating: an array-level snapshot ([`SsdArray::stats`])
             // carries zero cache counters while a filesystem-level one
             // ([`crate::safs::Safs::stats`]) overlays the real values —
@@ -107,14 +144,22 @@ pub struct SsdArray {
     pub cfg: SafsConfig,
     pub devices: Vec<Arc<SimSsd>>,
     /// Aggregate ticket-wait sink: every [`crate::safs::IoTicket`] issued
-    /// against this array adds its blocked-wait nanoseconds here.
+    /// against this array adds its stalled nanoseconds here (and blocked
+    /// submissions under queued-backend backpressure add theirs).
     pub(crate) wait_nanos: Arc<AtomicU64>,
+    /// The busy-spin share of `wait_nanos` (see [`IoStats::poll_nanos`]).
+    pub(crate) poll_nanos: Arc<AtomicU64>,
 }
 
 impl SsdArray {
     pub fn new(cfg: SafsConfig) -> SsdArray {
         let devices = (0..cfg.num_ssds).map(|i| Arc::new(SimSsd::new(i))).collect();
-        SsdArray { cfg, devices, wait_nanos: Arc::new(AtomicU64::new(0)) }
+        SsdArray {
+            cfg,
+            devices,
+            wait_nanos: Arc::new(AtomicU64::new(0)),
+            poll_nanos: Arc::new(AtomicU64::new(0)),
+        }
     }
 
     pub fn device(&self, i: usize) -> &Arc<SimSsd> {
@@ -138,6 +183,13 @@ impl SsdArray {
             read_reqs: self.devices.iter().map(|d| d.stats.read_reqs.get()).sum(),
             write_reqs: self.devices.iter().map(|d| d.stats.write_reqs.get()).sum(),
             wait_nanos: self.wait_nanos.load(Ordering::Relaxed),
+            poll_nanos: self.poll_nanos.load(Ordering::Relaxed),
+            peak_queue_depth: self
+                .devices
+                .iter()
+                .map(|d| d.stats.peak_queue_depth.load(Ordering::Relaxed))
+                .max()
+                .unwrap_or(0),
             // The array never sees cache hits; [`crate::safs::Safs::stats`]
             // overlays the image-cache counters on this snapshot.
             cache_hit_bytes: 0,
@@ -192,5 +244,37 @@ mod tests {
         arr.device(0).reserve(&arr.cfg, 50, false);
         let d = arr.stats().delta_since(&s1);
         assert_eq!(d.bytes_read, 50);
+    }
+
+    #[test]
+    fn poll_and_peak_semantics() {
+        // poll_nanos is a flow (sums, subtracts); peak_queue_depth is a
+        // gauge high-water (folds by max, delta carries the later value).
+        let mut a = IoStats {
+            wait_nanos: 100,
+            poll_nanos: 60,
+            peak_queue_depth: 8,
+            ..Default::default()
+        };
+        let b =
+            IoStats { wait_nanos: 50, poll_nanos: 10, peak_queue_depth: 3, ..Default::default() };
+        a.accumulate(&b);
+        assert_eq!((a.wait_nanos, a.poll_nanos, a.peak_queue_depth), (150, 70, 8));
+        let d = a.delta_since(&b);
+        assert_eq!((d.wait_nanos, d.poll_nanos, d.peak_queue_depth), (100, 60, 8));
+        assert!((a.blocked_secs() - 80e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn stats_surface_device_peak_depth() {
+        let arr = SsdArray::new(SafsConfig::untimed());
+        arr.device(0).stats.begin_inflight();
+        arr.device(0).stats.begin_inflight();
+        arr.device(1).stats.begin_inflight();
+        assert_eq!(arr.stats().peak_queue_depth, 2);
+        arr.device(0).stats.end_inflight();
+        arr.device(0).stats.end_inflight();
+        arr.device(1).stats.end_inflight();
+        assert_eq!(arr.stats().peak_queue_depth, 2, "peak survives draining");
     }
 }

@@ -96,6 +96,23 @@ impl BufferPool {
         vec![0u8; len]
     }
 
+    /// Get a buffer of exactly `len` bytes whose **capacity** is padded
+    /// to a multiple of `align` — the O_DIRECT discipline
+    /// ([`crate::safs::SafsConfig::buffer_align`]): a real io_uring
+    /// backend registers pooled buffers with the kernel, and direct I/O
+    /// requires the allocation to cover whole sectors even when the
+    /// request does not.  The returned *length* is `len` (callers see
+    /// exactly the bytes they asked for); only the backing allocation is
+    /// padded, and the padding is retained across `put`/`get` cycles
+    /// like any other capacity.
+    pub fn get_aligned(&mut self, len: usize, align: usize) -> Vec<u8> {
+        let a = align.max(1);
+        let padded = len.div_ceil(a) * a;
+        let mut buf = self.get(padded.max(len));
+        buf.truncate(len);
+        buf
+    }
+
     /// Return a buffer to the pool.  Grossly oversized buffers (relative
     /// to the demand high-water) are shrunk first; buffers that would
     /// push the pool past its retention caps are dropped — except that an
@@ -165,6 +182,25 @@ mod tests {
         p.put(b);
         let _ = p.get(500); // big enough now: a true hit
         assert_eq!((p.hits, p.misses, p.grows), (1, 1, 1));
+    }
+
+    #[test]
+    fn aligned_get_pads_capacity_not_length() {
+        let mut p = BufferPool::new(true);
+        let b = p.get_aligned(1000, 4096);
+        assert_eq!(b.len(), 1000);
+        assert!(b.capacity() >= 4096, "capacity padded to the alignment unit");
+        p.put(b);
+        // An exact multiple stays exact; zero-length stays empty.
+        let b = p.get_aligned(8192, 4096);
+        assert_eq!(b.len(), 8192);
+        assert!(b.capacity() >= 8192);
+        let b = p.get_aligned(0, 4096);
+        assert!(b.is_empty());
+        // A disabled pool still honours the padding contract.
+        let mut p = BufferPool::new(false);
+        let b = p.get_aligned(10, 64);
+        assert_eq!((b.len(), b.capacity() >= 64), (10, true));
     }
 
     #[test]

@@ -18,6 +18,47 @@ pub enum WaitMode {
     Polling,
 }
 
+/// Which I/O engine serves the array (see `safs/io.rs` for the
+/// submission/completion contract all three share).  Only *when* bytes
+/// move differs between backends: placement, per-device byte counts and
+/// results are identical — pinned by the parity grid in
+/// `tests/props.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoBackend {
+    /// Transfers performed synchronously in the submitting thread; also
+    /// forced whenever `io_threads == 0` (unit-test degenerate mode).
+    Inline,
+    /// The legacy thread pool: `io_threads` threads drain one shared
+    /// channel, reserving device time when each request is *performed*.
+    /// Kept selectable as the ablation baseline.
+    Threaded,
+    /// The io_uring-shaped engine (default): per-device bounded
+    /// submission queues, device time reserved at *submission*, one
+    /// reactor retiring a deadline-ordered completion queue with
+    /// condvar wakeups.
+    Queued,
+}
+
+impl IoBackend {
+    /// Parse a CLI `--io-engine` value.
+    pub fn from_name(s: &str) -> Option<IoBackend> {
+        match s {
+            "inline" => Some(IoBackend::Inline),
+            "threaded" => Some(IoBackend::Threaded),
+            "queued" => Some(IoBackend::Queued),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IoBackend::Inline => "inline",
+            IoBackend::Threaded => "threaded",
+            IoBackend::Queued => "queued",
+        }
+    }
+}
+
 /// Full SAFS + simulated-SSD-array configuration.
 #[derive(Clone, Debug)]
 pub struct SafsConfig {
@@ -35,9 +76,25 @@ pub struct SafsConfig {
     /// (the paper's "max block size in the kernel", Fig. 9: 8 MB).
     pub max_io_size: usize,
     /// Number of I/O submission threads (paper: one per NUMA node).
+    /// Only the [`IoBackend::Threaded`] backend scales with this; the
+    /// queued backend needs exactly one reactor regardless (that is the
+    /// point), and `0` forces [`IoBackend::Inline`] on any backend.
     pub io_threads: usize,
     /// Completion-wait strategy.
     pub wait_mode: WaitMode,
+    /// Which engine serves requests.  Defaults to [`IoBackend::Queued`];
+    /// the thread-pool and inline engines stay selectable for the
+    /// backend-parity grid and the fig9-style ablations.
+    pub io_backend: IoBackend,
+    /// Capacity of each device's submission queue on the queued backend:
+    /// how many requests may be submitted against one device before
+    /// submission blocks until a completion retires (`safs/io.rs`
+    /// documents the backpressure contract).  Deep queues keep the
+    /// stripe set saturated under read-ahead; `1` degenerates to
+    /// serial-per-device and is part of the parity grid.  Ignored by the
+    /// other backends.  CLI: `--queue-depth`; env:
+    /// `FLASHEIGEN_QUEUE_DEPTH`.
+    pub queue_depth: usize,
     /// Use a different random striping order per file (Fig. 9 "diff strip").
     pub diff_stripe_order: bool,
     /// Reuse pre-populated per-thread I/O buffers (Fig. 9 "buf pool").
@@ -96,6 +153,8 @@ impl Default for SafsConfig {
             max_io_size: 8 << 20,
             io_threads: 1,
             wait_mode: WaitMode::Polling,
+            io_backend: IoBackend::Queued,
+            queue_depth: 32,
             diff_stripe_order: true,
             use_buffer_pool: true,
             throttle: true,
@@ -134,6 +193,28 @@ impl SafsConfig {
     /// Aggregate array write bandwidth, bytes/sec.
     pub fn aggregate_write_bps(&self) -> f64 {
         self.effective_bps(true) * self.num_ssds as f64
+    }
+
+    /// The backend the engine actually instantiates: `io_threads == 0`
+    /// has always meant "no I/O threads at all", so it forces the
+    /// inline engine whatever `io_backend` says.
+    pub fn effective_backend(&self) -> IoBackend {
+        if self.io_threads == 0 {
+            IoBackend::Inline
+        } else {
+            self.io_backend
+        }
+    }
+
+    /// Alignment unit for pooled I/O buffers (the O_DIRECT discipline):
+    /// buffer capacities are padded to a multiple of this so a real
+    /// io_uring backend can register them directly.  The stripe block is
+    /// the natural unit, capped at the 4 KiB sector size — O_DIRECT
+    /// requires sector alignment, not stripe alignment, and padding a
+    /// buffer by megabytes to match a large stripe block would waste the
+    /// pool's retention budget.
+    pub fn buffer_align(&self) -> usize {
+        self.stripe_block.clamp(1, 4096)
     }
 }
 
@@ -175,6 +256,41 @@ mod tests {
         // the cache-both-files-independently baseline.
         assert!(SafsConfig::default().gram_cache_split);
         assert!(SafsConfig::untimed().gram_cache_split);
+    }
+
+    #[test]
+    fn queued_backend_is_the_default() {
+        // The submission/completion engine is what users actually run;
+        // threaded/inline stay selectable for the parity grid.
+        assert_eq!(SafsConfig::default().io_backend, IoBackend::Queued);
+        assert_eq!(SafsConfig::untimed().io_backend, IoBackend::Queued);
+        assert_eq!(SafsConfig::default().queue_depth, 32);
+    }
+
+    #[test]
+    fn zero_io_threads_forces_inline() {
+        let mut c = SafsConfig::default();
+        assert_eq!(c.effective_backend(), IoBackend::Queued);
+        c.io_threads = 0;
+        assert_eq!(c.effective_backend(), IoBackend::Inline);
+        c.io_backend = IoBackend::Threaded;
+        assert_eq!(c.effective_backend(), IoBackend::Inline);
+    }
+
+    #[test]
+    fn buffer_align_is_sector_capped_stripe_unit() {
+        let mut c = SafsConfig::default();
+        assert_eq!(c.buffer_align(), 4096); // 8 MiB stripe: sector cap
+        c.stripe_block = 128;
+        assert_eq!(c.buffer_align(), 128); // tiny test stripes align to themselves
+    }
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for b in [IoBackend::Inline, IoBackend::Threaded, IoBackend::Queued] {
+            assert_eq!(IoBackend::from_name(b.name()), Some(b));
+        }
+        assert_eq!(IoBackend::from_name("uring"), None);
     }
 
     #[test]

@@ -10,10 +10,12 @@
 
 use super::config::SafsConfig;
 use crate::metrics::Counter;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-/// Per-device statistics (wear accounting for Table 3 / DWPD discussion).
+/// Per-device statistics (wear accounting for Table 3 / DWPD discussion,
+/// plus the queue-depth gauges behind fig11's `qd` column).
 #[derive(Default, Debug)]
 pub struct DeviceStats {
     pub bytes_read: Counter,
@@ -22,6 +24,31 @@ pub struct DeviceStats {
     pub write_reqs: Counter,
     /// Total simulated busy time, microseconds.
     pub busy_us: Counter,
+    /// Requests the I/O engine currently holds against this device.  On
+    /// the queued backend this spans submission → completion-queue
+    /// retirement (the queue depth the device actually sees); on the
+    /// thread-pool/inline backends it spans the transfer only — all a
+    /// pool thread ever holds, which is exactly why those backends
+    /// cannot keep a device's queue deep.
+    pub in_flight: AtomicU64,
+    /// High-water mark of `in_flight` since array creation.  A gauge
+    /// peak, not a flow: deltas carry the later snapshot's value rather
+    /// than subtracting (see `IoStats::peak_queue_depth`).
+    pub peak_queue_depth: AtomicU64,
+}
+
+impl DeviceStats {
+    /// Mark one request in flight against this device, updating the
+    /// peak-depth high-water mark.
+    pub fn begin_inflight(&self) {
+        let now = self.in_flight.fetch_add(1, Ordering::AcqRel) + 1;
+        self.peak_queue_depth.fetch_max(now, Ordering::AcqRel);
+    }
+
+    /// Retire one in-flight request.
+    pub fn end_inflight(&self) {
+        self.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
 }
 
 pub struct SimSsd {
@@ -69,6 +96,22 @@ impl SimSsd {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn inflight_gauge_tracks_peak() {
+        let d = SimSsd::new(0);
+        d.stats.begin_inflight();
+        d.stats.begin_inflight();
+        d.stats.begin_inflight();
+        d.stats.end_inflight();
+        assert_eq!(d.stats.in_flight.load(Ordering::Relaxed), 2);
+        assert_eq!(d.stats.peak_queue_depth.load(Ordering::Relaxed), 3);
+        d.stats.end_inflight();
+        d.stats.end_inflight();
+        assert_eq!(d.stats.in_flight.load(Ordering::Relaxed), 0);
+        // The peak is a high-water mark; draining does not lower it.
+        assert_eq!(d.stats.peak_queue_depth.load(Ordering::Relaxed), 3);
+    }
 
     #[test]
     fn untimed_reserve_is_now() {

@@ -58,51 +58,72 @@ impl SafsFile {
         blocks[idx].clone()
     }
 
-    /// Write `data` at `offset`, reserving device time; returns the
-    /// simulated completion deadline.
-    pub fn pwrite(&self, array: &SsdArray, offset: u64, data: &[u8]) -> Instant {
+    /// Reserve device service time for the whole range — **timing and
+    /// accounting only**, no data moves.  Returns the simulated
+    /// completion deadline (max over the per-device sub-requests).
+    ///
+    /// The queued I/O engine calls this on the *submitting* thread so
+    /// deadlines start at submission, then hands the matching
+    /// [`SafsFile::transfer_read`]/[`SafsFile::transfer_write`] to its
+    /// reactor; [`SafsFile::pread`]/[`SafsFile::pwrite`] compose the
+    /// two for the synchronous backends.  Per-device byte/request
+    /// counts are recorded here, identically for every backend.
+    pub fn reserve_range(&self, array: &SsdArray, offset: u64, len: usize, write: bool) -> Instant {
         let mut deadline = Instant::now();
-        for (block_idx, in_block, len, in_buf) in self.stripe.split_range(offset, data.len()) {
+        for (block_idx, _in_block, len, _in_buf) in self.stripe.split_range(offset, len) {
             let dev = array.device(self.stripe.device_for(block_idx));
             // Split each stripe chunk by the kernel's max request size.
             let mut done = 0usize;
             while done < len {
                 let take = (len - done).min(array.cfg.max_io_size);
-                let d = dev.reserve(&array.cfg, take, true);
+                let d = dev.reserve(&array.cfg, take, write);
                 if d > deadline {
                     deadline = d;
                 }
                 done += take;
             }
+        }
+        deadline
+    }
+
+    /// Data-only write: memcpy `data` into the stripe blocks at
+    /// `offset`.  No device time is reserved — pair with
+    /// [`SafsFile::reserve_range`].
+    pub fn transfer_write(&self, offset: u64, data: &[u8]) {
+        for (block_idx, in_block, len, in_buf) in self.stripe.split_range(offset, data.len()) {
             let block = self.block(block_idx as usize);
             let mut guard = block.lock().unwrap();
             guard[in_block..in_block + len].copy_from_slice(&data[in_buf..in_buf + len]);
         }
         self.size
             .fetch_max(offset + data.len() as u64, Ordering::AcqRel);
-        deadline
     }
 
-    /// Read `buf.len()` bytes from `offset` into `buf`; returns the
-    /// simulated completion deadline.  Reading past the written size
-    /// returns zeros (like a sparse file).
-    pub fn pread(&self, array: &SsdArray, offset: u64, buf: &mut [u8]) -> Instant {
-        let mut deadline = Instant::now();
+    /// Data-only read: memcpy the stripe blocks at `offset` into `buf`.
+    /// Reading past the written size returns zeros (like a sparse
+    /// file).  No device time is reserved — pair with
+    /// [`SafsFile::reserve_range`].
+    pub fn transfer_read(&self, offset: u64, buf: &mut [u8]) {
         for (block_idx, in_block, len, in_buf) in self.stripe.split_range(offset, buf.len()) {
-            let dev = array.device(self.stripe.device_for(block_idx));
-            let mut done = 0usize;
-            while done < len {
-                let take = (len - done).min(array.cfg.max_io_size);
-                let d = dev.reserve(&array.cfg, take, false);
-                if d > deadline {
-                    deadline = d;
-                }
-                done += take;
-            }
             let block = self.block(block_idx as usize);
             let guard = block.lock().unwrap();
             buf[in_buf..in_buf + len].copy_from_slice(&guard[in_block..in_block + len]);
         }
+    }
+
+    /// Write `data` at `offset`, reserving device time; returns the
+    /// simulated completion deadline.
+    pub fn pwrite(&self, array: &SsdArray, offset: u64, data: &[u8]) -> Instant {
+        let deadline = self.reserve_range(array, offset, data.len(), true);
+        self.transfer_write(offset, data);
+        deadline
+    }
+
+    /// Read `buf.len()` bytes from `offset` into `buf`; returns the
+    /// simulated completion deadline.
+    pub fn pread(&self, array: &SsdArray, offset: u64, buf: &mut [u8]) -> Instant {
+        let deadline = self.reserve_range(array, offset, buf.len(), false);
+        self.transfer_read(offset, buf);
         deadline
     }
 }
@@ -167,6 +188,26 @@ mod tests {
         f.pwrite(&array, 0, &vec![0u8; 1000]);
         // 1000 bytes / 100-byte max IO = 10 device requests.
         assert_eq!(array.stats().write_reqs, 10);
+    }
+
+    #[test]
+    fn reserve_and_transfer_split_matches_composed_path() {
+        // reserve_range is timing/accounting-only; transfer_* are
+        // data-only.  Their composition must equal pread/pwrite
+        // request-for-request and byte-for-byte.
+        let (array, f) = mk();
+        let data: Vec<u8> = (0..300).map(|i| (i % 97) as u8).collect();
+        f.reserve_range(&array, 10, data.len(), true);
+        let s = array.stats();
+        assert_eq!(s.bytes_written, 300);
+        assert_eq!(f.size(), 0, "reserve_range must not move data");
+        f.transfer_write(10, &data);
+        assert_eq!(f.size(), 310);
+        assert_eq!(array.stats().bytes_written, 300, "transfer_write must not account");
+        let mut out = vec![0u8; 300];
+        f.transfer_read(10, &mut out);
+        assert_eq!(out, data);
+        assert_eq!(array.stats().bytes_read, 0, "transfer_read must not account");
     }
 
     #[test]

@@ -1,20 +1,69 @@
-//! Asynchronous I/O engine (§3.2, §3.4.3).
+//! Asynchronous I/O engine (§3.2, §3.4.3): submission/completion queues.
 //!
-//! Worker threads submit read/write requests and continue computing; a
-//! small set of I/O threads performs the data transfer (memcpy to/from the
-//! file's stripe blocks) and records the simulated device completion
-//! deadline in the request's ticket.  Waiting on a ticket either **polls**
-//! (spins with `yield_now` until the deadline passes — the paper's design
-//! to avoid thread context switches) or **blocks** (sleeps; each wakeup is
-//! charged the modeled context-switch cost).  `io_threads = 0` performs
-//! transfers inline in the caller — a degenerate synchronous mode used by
-//! unit tests.
+//! Three backends implement the same ticketed interface
+//! ([`crate::safs::SafsConfig::io_backend`]):
+//!
+//! * [`IoBackend::Queued`] (the default) — the io_uring-shaped engine.
+//!   Each device has a bounded **submission queue**
+//!   ([`crate::safs::SafsConfig::queue_depth`] slots); submitting
+//!   reserves the device's simulated service time *immediately* on the
+//!   submitting thread and hands the transfer to a single **reactor**
+//!   thread, which performs transfers in submission order and retires a
+//!   deadline-ordered **completion queue** (a min-heap over the
+//!   [`crate::safs::device::SimSsd`] deadlines), waking blocked waiters
+//!   via condvar.  N in-flight requests cost one reactor, not N blocked
+//!   threads, and deadlines start at submission — not at whenever a
+//!   pool thread frees up — so callers wait strictly less at equal
+//!   bytes.
+//! * [`IoBackend::Threaded`] — the legacy thread pool: `io_threads`
+//!   threads drain a shared channel and perform reserve + transfer
+//!   per request.  Kept selectable for the backend-parity grid.
+//! * [`IoBackend::Inline`] — transfers performed synchronously in the
+//!   caller; also forced by `io_threads = 0` (unit-test degenerate
+//!   mode).
+//!
+//! Waiting on a ticket either **polls** (spins with `yield_now` until
+//! the deadline passes — the paper's design to avoid thread context
+//! switches; the spin time is accounted separately as `poll_nanos`) or
+//! **blocks** (parks on the ticket's condvar).  On the queued backend a
+//! blocking wait is *completion-driven*: the reactor notifies exactly
+//! once at the deadline, so the caller pays **one** modeled context
+//! switch instead of the thread pool's two (transfer wakeup + deadline
+//! sleep wakeup).
+//!
+//! # Submission/completion contract
+//!
+//! * **Batch ordering** — [`IoEngine::submit_batch`] submits requests
+//!   in vector order and returns their tickets in the same order.
+//!   Device service time is reserved per request at submission, so a
+//!   batch's deadlines are FIFO per device in batch order.
+//! * **Transfer ordering** — data transfers happen in submission order
+//!   (the single reactor performs them FIFO; the thread pool with
+//!   `io_threads = 1` is FIFO likewise).  A caller that waits a write
+//!   ticket before submitting a dependent read therefore always
+//!   observes the written bytes — the same ordering contract the
+//!   threaded engine provided.
+//! * **Completion ordering** — tickets *complete* (become waitable
+//!   without blocking) in deadline order, which is per-device FIFO but
+//!   interleaves across devices; it is **not** batch order.
+//! * **Backpressure** — when a device's submission queue is full
+//!   (`queue_depth` requests submitted and not yet completed), submit
+//!   **blocks** until the reactor retires one; the blocked time is
+//!   charged to the caller's `wait_nanos` like any other stall.  The
+//!   reactor never takes a submission-queue lock while holding a ticket
+//!   lock, so backpressure cannot deadlock.
+//!
+//! Only *when* bytes move changes across backends — placement, per-device
+//! byte counts, and results are identical (pinned by the parity grid in
+//! `tests/props.rs`).
 
 use super::array::SsdArray;
-use super::config::{SafsConfig, WaitMode};
+use super::config::{IoBackend, SafsConfig, WaitMode};
 use super::file::FileHandle;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -24,9 +73,33 @@ pub enum IoKind {
     Write,
 }
 
+/// One request of a [`IoEngine::submit_batch`] call: `buf.len()` bytes
+/// at `offset` of `file`, read into or written from `buf`.
+pub struct IoRequest {
+    pub file: FileHandle,
+    pub offset: u64,
+    pub kind: IoKind,
+    pub buf: Vec<u8>,
+}
+
+impl IoRequest {
+    pub fn read(file: FileHandle, offset: u64, buf: Vec<u8>) -> IoRequest {
+        IoRequest { file, offset, kind: IoKind::Read, buf }
+    }
+
+    pub fn write(file: FileHandle, offset: u64, buf: Vec<u8>) -> IoRequest {
+        IoRequest { file, offset, kind: IoKind::Write, buf }
+    }
+}
+
 struct TicketInner {
-    /// Transfer performed; deadline + buffer available.
+    /// Transfer performed; buffer available (and, on the thread-pool
+    /// backends, deadline available).
     transferred: AtomicBool,
+    /// Queued backend only: the reactor retired this request from the
+    /// completion queue (its deadline has passed).  Blocking waiters
+    /// park until this flips — the completion-driven wakeup.
+    completed: AtomicBool,
     state: Mutex<TicketState>,
     cv: Condvar,
 }
@@ -43,17 +116,27 @@ pub struct IoTicket {
     wait_mode: WaitMode,
     ctx_switch_cost: Duration,
     throttle: bool,
+    /// Completion is reactor-driven (queued backend): blocking waits
+    /// park until the reactor's single completion notification instead
+    /// of the thread pool's two-phase transfer-then-deadline wait.
+    queued: bool,
     /// The array's aggregate blocked-wait sink ([`crate::safs::IoStats`]
     /// `wait_nanos`): [`IoTicket::wait`] adds the wall-clock time the
-    /// caller actually spent blocked, so I/O hidden behind computation by
+    /// caller actually spent stalled, so I/O hidden behind computation by
     /// a read-ahead scheduler shows up as *less* wait at equal bytes.
     wait_sink: Arc<AtomicU64>,
+    /// The polled-spin share of that stall ([`crate::safs::IoStats`]
+    /// `poll_nanos`): time the caller burned a core spinning in
+    /// [`WaitMode::Polling`].  Always `poll_nanos <= wait_nanos`; the
+    /// difference is time spent truly blocked (parked or asleep).
+    poll_sink: Arc<AtomicU64>,
 }
 
 impl IoTicket {
-    fn new(cfg: &SafsConfig, wait_sink: Arc<AtomicU64>) -> (IoTicket, Arc<TicketInner>) {
+    fn new(cfg: &SafsConfig, array: &SsdArray, queued: bool) -> (IoTicket, Arc<TicketInner>) {
         let inner = Arc::new(TicketInner {
             transferred: AtomicBool::new(false),
+            completed: AtomicBool::new(false),
             state: Mutex::new(TicketState::default()),
             cv: Condvar::new(),
         });
@@ -63,7 +146,9 @@ impl IoTicket {
                 wait_mode: cfg.wait_mode,
                 ctx_switch_cost: Duration::from_secs_f64(cfg.ctx_switch_cost),
                 throttle: cfg.throttle,
-                wait_sink,
+                queued,
+                wait_sink: array.wait_nanos.clone(),
+                poll_sink: array.poll_nanos.clone(),
             },
             inner,
         )
@@ -87,39 +172,60 @@ impl IoTicket {
     }
 
     /// Wait for completion and take back the buffer (filled for reads;
-    /// returned for reuse for writes).  The time spent blocked here is
-    /// charged to the array's `io_wait` accounting.
+    /// returned for reuse for writes).  The time spent stalled here is
+    /// charged to the array's `io_wait` accounting; the share of it spent
+    /// busy-spinning (polling mode) is additionally charged to
+    /// `poll_nanos`.
     pub fn wait(self) -> Vec<u8> {
         let wait_start = Instant::now();
-        // Phase 1: wait for the transfer itself.
+        let mut polled = Duration::ZERO;
         match self.wait_mode {
             WaitMode::Polling => {
+                // Phase 1: spin until the transfer lands (both backends
+                // mark `transferred`; on the queued backend the deadline
+                // is already known from submission).
+                let spin = Instant::now();
                 while !self.inner.transferred.load(Ordering::Acquire) {
                     std::thread::yield_now();
                 }
+                polled += spin.elapsed();
+                // Phase 2: honour the simulated device deadline.
+                if self.throttle {
+                    let deadline = self.inner.state.lock().unwrap().deadline.unwrap();
+                    let spin = Instant::now();
+                    while Instant::now() < deadline {
+                        std::thread::yield_now();
+                    }
+                    polled += spin.elapsed();
+                }
+            }
+            WaitMode::Blocking if self.queued => {
+                // Completion-driven: park until the reactor retires this
+                // request at its deadline — one notification, one modeled
+                // context switch (vs the thread pool's two).
+                let mut state = self.inner.state.lock().unwrap();
+                while !self.inner.completed.load(Ordering::Acquire) {
+                    state = self.inner.cv.wait(state).unwrap();
+                }
+                drop(state);
+                if self.throttle && !self.ctx_switch_cost.is_zero() {
+                    spin_for(self.ctx_switch_cost);
+                }
             }
             WaitMode::Blocking => {
+                // Thread pool: wait for the transfer, then sleep out the
+                // deadline — two wakeups, two context switches.
                 let mut state = self.inner.state.lock().unwrap();
                 while state.deadline.is_none() {
                     state = self.inner.cv.wait(state).unwrap();
                 }
+                let deadline = state.deadline.unwrap();
                 drop(state);
                 // A blocking wakeup is a context switch; charge it.
                 if self.throttle && !self.ctx_switch_cost.is_zero() {
                     spin_for(self.ctx_switch_cost);
                 }
-            }
-        }
-        // Phase 2: honour the simulated device deadline.
-        let deadline = self.inner.state.lock().unwrap().deadline.unwrap();
-        if self.throttle {
-            match self.wait_mode {
-                WaitMode::Polling => {
-                    while Instant::now() < deadline {
-                        std::thread::yield_now();
-                    }
-                }
-                WaitMode::Blocking => {
+                if self.throttle {
                     let now = Instant::now();
                     if deadline > now {
                         std::thread::sleep(deadline - now);
@@ -133,6 +239,9 @@ impl IoTicket {
         }
         let buf = self.inner.state.lock().unwrap().buf.take().expect("ticket buffer");
         self.wait_sink.fetch_add(wait_start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if !polled.is_zero() {
+            self.poll_sink.fetch_add(polled.as_nanos() as u64, Ordering::Relaxed);
+        }
         buf
     }
 }
@@ -146,6 +255,13 @@ fn spin_for(d: Duration) {
     }
 }
 
+/// Device that a request is accounted against for queue-depth purposes:
+/// the one owning the first stripe block of the range (large requests
+/// span devices; the submission-queue bound is per primary device).
+fn primary_device(file: &FileHandle, offset: u64, num_devices: usize) -> usize {
+    file.stripe.device_for(offset / file.stripe.block_size as u64) % num_devices
+}
+
 struct Request {
     file: FileHandle,
     offset: u64,
@@ -154,32 +270,116 @@ struct Request {
     ticket: Arc<TicketInner>,
 }
 
-/// The I/O engine: a request queue served by `io_threads` threads.
+/// A request the queued backend has submitted: service time already
+/// reserved (deadline known), transfer pending on the reactor.
+struct QueuedRequest {
+    file: FileHandle,
+    offset: u64,
+    kind: IoKind,
+    buf: Vec<u8>,
+    ticket: Arc<TicketInner>,
+    deadline: Instant,
+    seq: u64,
+    dev: usize,
+}
+
+/// Completion-queue entry: retired in `(deadline, seq)` order.
+struct PendingCompletion {
+    deadline: Instant,
+    seq: u64,
+    dev: usize,
+    ticket: Arc<TicketInner>,
+}
+
+impl PartialEq for PendingCompletion {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline == other.deadline && self.seq == other.seq
+    }
+}
+impl Eq for PendingCompletion {}
+impl PartialOrd for PendingCompletion {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for PendingCompletion {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.deadline, self.seq).cmp(&(other.deadline, other.seq))
+    }
+}
+
+/// State shared between queued-backend submitters and the reactor.
+struct QueuedShared {
+    /// Per-device submission-queue occupancy (requests submitted and not
+    /// yet retired) + the condvar full submitters park on.
+    sq: Vec<(Mutex<usize>, Condvar)>,
+    /// Submission-queue capacity ([`SafsConfig::queue_depth`]).
+    depth: usize,
+    /// Global submission sequence — ties completion order to submission
+    /// order when deadlines collide.
+    seq: AtomicU64,
+}
+
+enum Backend {
+    Inline,
+    Threaded {
+        sender: Option<Sender<Request>>,
+        threads: Vec<JoinHandle<()>>,
+    },
+    Queued {
+        shared: Arc<QueuedShared>,
+        sender: Option<Sender<QueuedRequest>>,
+        reactor: Option<JoinHandle<()>>,
+    },
+}
+
+/// The I/O engine — see the module docs for the three backends and the
+/// submission/completion contract.
 pub struct IoEngine {
     array: Arc<SsdArray>,
-    sender: Option<Sender<Request>>,
-    threads: Vec<JoinHandle<()>>,
+    backend: Backend,
 }
 
 impl IoEngine {
     pub fn new(array: Arc<SsdArray>) -> IoEngine {
-        let n = array.cfg.io_threads;
-        if n == 0 {
-            return IoEngine { array, sender: None, threads: Vec::new() };
-        }
-        let (tx, rx) = channel::<Request>();
-        let rx = Arc::new(Mutex::new(rx));
-        let threads = (0..n)
-            .map(|i| {
-                let rx = rx.clone();
-                let array = array.clone();
-                std::thread::Builder::new()
-                    .name(format!("safs-io-{i}"))
-                    .spawn(move || io_thread_main(&array, &rx))
-                    .expect("spawn io thread")
-            })
-            .collect();
-        IoEngine { array, sender: Some(tx), threads }
+        let backend = match array.cfg.effective_backend() {
+            IoBackend::Inline => Backend::Inline,
+            IoBackend::Threaded => {
+                let (tx, rx) = channel::<Request>();
+                let rx = Arc::new(Mutex::new(rx));
+                let threads = (0..array.cfg.io_threads)
+                    .map(|i| {
+                        let rx = rx.clone();
+                        let array = array.clone();
+                        std::thread::Builder::new()
+                            .name(format!("safs-io-{i}"))
+                            .spawn(move || io_thread_main(&array, &rx))
+                            .expect("spawn io thread")
+                    })
+                    .collect();
+                Backend::Threaded { sender: Some(tx), threads }
+            }
+            IoBackend::Queued => {
+                let shared = Arc::new(QueuedShared {
+                    sq: (0..array.cfg.num_ssds.max(1))
+                        .map(|_| (Mutex::new(0), Condvar::new()))
+                        .collect(),
+                    depth: array.cfg.queue_depth.max(1),
+                    seq: AtomicU64::new(0),
+                });
+                let (tx, rx) = channel::<QueuedRequest>();
+                let reactor = {
+                    let array = array.clone();
+                    let shared = shared.clone();
+                    std::thread::Builder::new()
+                        .name("safs-reactor".to_string())
+                        .spawn(move || reactor_main(&array, &shared, &rx))
+                        .expect("spawn reactor")
+                };
+                Backend::Queued { shared, sender: Some(tx), reactor: Some(reactor) }
+            }
+        };
+        IoEngine { array, backend }
     }
 
     pub fn array(&self) -> &Arc<SsdArray> {
@@ -197,22 +397,108 @@ impl IoEngine {
         self.submit(file, offset, IoKind::Write, buf)
     }
 
+    /// Submit a whole schedule's worth of requests in one call.
+    ///
+    /// Requests are submitted in vector order and tickets are returned
+    /// in the same order; on the queued backend every request's device
+    /// service time is reserved **at this call**, so a read-ahead
+    /// window's deadlines all start counting from the batch submission
+    /// instead of trickling out of a thread pool.  Completion order is
+    /// deadline order, not batch order; a full device submission queue
+    /// blocks the batch mid-way until the reactor retires a request
+    /// (see the module docs).
+    pub fn submit_batch(&self, reqs: Vec<IoRequest>) -> Vec<IoTicket> {
+        reqs.into_iter()
+            .map(|r| self.submit(r.file, r.offset, r.kind, r.buf))
+            .collect()
+    }
+
     fn submit(&self, file: FileHandle, offset: u64, kind: IoKind, buf: Vec<u8>) -> IoTicket {
-        let (ticket, inner) = IoTicket::new(&self.array.cfg, self.array.wait_nanos.clone());
-        let req = Request { file, offset, kind, buf, ticket: inner };
-        match &self.sender {
-            Some(tx) => tx.send(req).expect("io engine alive"),
-            None => perform(&self.array, req),
+        match &self.backend {
+            Backend::Inline => {
+                let (ticket, inner) = IoTicket::new(&self.array.cfg, &self.array, false);
+                let dev = primary_device(&file, offset, self.array.devices.len());
+                self.array.device(dev).stats.begin_inflight();
+                perform(&self.array, Request { file, offset, kind, buf, ticket: inner });
+                self.array.device(dev).stats.end_inflight();
+                ticket
+            }
+            Backend::Threaded { sender, .. } => {
+                let (ticket, inner) = IoTicket::new(&self.array.cfg, &self.array, false);
+                let req = Request { file, offset, kind, buf, ticket: inner };
+                sender.as_ref().expect("io engine alive").send(req).expect("io engine alive");
+                ticket
+            }
+            Backend::Queued { shared, sender, .. } => self.submit_queued(
+                shared,
+                sender.as_ref().expect("io engine alive"),
+                file,
+                offset,
+                kind,
+                buf,
+            ),
         }
+    }
+
+    fn submit_queued(
+        &self,
+        shared: &QueuedShared,
+        tx: &Sender<QueuedRequest>,
+        file: FileHandle,
+        offset: u64,
+        kind: IoKind,
+        buf: Vec<u8>,
+    ) -> IoTicket {
+        let (ticket, inner) = IoTicket::new(&self.array.cfg, &self.array, true);
+        let write = matches!(kind, IoKind::Write);
+        let dev = primary_device(&file, offset, self.array.devices.len());
+        // Backpressure: a full submission queue blocks the submitter
+        // until the reactor retires a request on this device.  Blocked
+        // submission is a caller stall like any other — charge it.
+        {
+            let (lock, cv) = &shared.sq[dev];
+            let mut used = lock.lock().unwrap();
+            if *used >= shared.depth {
+                let stall = Instant::now();
+                while *used >= shared.depth {
+                    used = cv.wait(used).unwrap();
+                }
+                self.array
+                    .wait_nanos
+                    .fetch_add(stall.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            *used += 1;
+        }
+        // Reserve device service time NOW, on the submitting thread —
+        // deadlines start at submission, not at whenever a pool thread
+        // gets around to the request.  This is the queued backend's
+        // latency win; byte/request accounting is identical.
+        let deadline = file.reserve_range(&self.array, offset, buf.len(), write);
+        self.array.device(dev).stats.begin_inflight();
+        inner.state.lock().unwrap().deadline = Some(deadline);
+        let seq = shared.seq.fetch_add(1, Ordering::Relaxed);
+        tx.send(QueuedRequest { file, offset, kind, buf, ticket: inner, deadline, seq, dev })
+            .expect("reactor alive");
         ticket
     }
 }
 
 impl Drop for IoEngine {
     fn drop(&mut self) {
-        self.sender.take();
-        for t in self.threads.drain(..) {
-            let _ = t.join();
+        match &mut self.backend {
+            Backend::Inline => {}
+            Backend::Threaded { sender, threads } => {
+                sender.take();
+                for t in threads.drain(..) {
+                    let _ = t.join();
+                }
+            }
+            Backend::Queued { sender, reactor, .. } => {
+                sender.take();
+                if let Some(r) = reactor.take() {
+                    let _ = r.join();
+                }
+            }
         }
     }
 }
@@ -224,7 +510,12 @@ fn io_thread_main(array: &SsdArray, rx: &Mutex<Receiver<Request>>) {
             guard.recv()
         };
         match req {
-            Ok(req) => perform(array, req),
+            Ok(req) => {
+                let dev = primary_device(&req.file, req.offset, array.devices.len());
+                array.device(dev).stats.begin_inflight();
+                perform(array, req);
+                array.device(dev).stats.end_inflight();
+            }
             Err(_) => return, // engine dropped
         }
     }
@@ -243,14 +534,131 @@ fn perform(array: &SsdArray, mut req: Request) {
     req.ticket.cv.notify_all();
 }
 
+/// The queued backend's reactor: performs transfers in submission order
+/// and retires the completion queue in deadline order, sleeping (via
+/// `recv_timeout`) until the earlier of the next submission and the next
+/// deadline.  One thread services every device's queue.
+fn reactor_main(array: &SsdArray, shared: &QueuedShared, rx: &Receiver<QueuedRequest>) {
+    let mut cq: BinaryHeap<Reverse<PendingCompletion>> = BinaryHeap::new();
+    let mut open = true;
+    loop {
+        // Retire every completion whose simulated deadline has passed,
+        // in deadline order.
+        let now = Instant::now();
+        while cq.peek().is_some_and(|Reverse(p)| p.deadline <= now) {
+            let Reverse(p) = cq.pop().unwrap();
+            retire(array, shared, p);
+        }
+        if open {
+            let next = match cq.peek() {
+                Some(Reverse(p)) => {
+                    let now = Instant::now();
+                    if p.deadline <= now {
+                        continue;
+                    }
+                    match rx.recv_timeout(p.deadline - now) {
+                        Ok(req) => Some(req),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            None
+                        }
+                    }
+                }
+                None => match rx.recv() {
+                    Ok(req) => Some(req),
+                    Err(_) => {
+                        open = false;
+                        None
+                    }
+                },
+            };
+            if let Some(req) = next {
+                transfer(&mut cq, req);
+                // Drain whatever else is already submitted so a batch's
+                // transfers run back to back in submission order.
+                while let Ok(req) = rx.try_recv() {
+                    transfer(&mut cq, req);
+                }
+            }
+        } else if let Some(Reverse(p)) = cq.peek() {
+            // Engine dropped with completions outstanding: sleep out the
+            // remaining deadlines so waiting tickets still complete at
+            // their honest simulated times.
+            let now = Instant::now();
+            if p.deadline > now {
+                std::thread::sleep(p.deadline - now);
+            }
+        } else {
+            return;
+        }
+    }
+}
+
+/// Perform one request's data transfer (submission order) and move it to
+/// the completion queue.
+fn transfer(cq: &mut BinaryHeap<Reverse<PendingCompletion>>, mut req: QueuedRequest) {
+    match req.kind {
+        IoKind::Read => req.file.transfer_read(req.offset, &mut req.buf),
+        IoKind::Write => req.file.transfer_write(req.offset, &req.buf),
+    }
+    let mut state = req.ticket.state.lock().unwrap();
+    state.buf = Some(req.buf);
+    drop(state);
+    req.ticket.transferred.store(true, Ordering::Release);
+    req.ticket.cv.notify_all();
+    cq.push(Reverse(PendingCompletion {
+        deadline: req.deadline,
+        seq: req.seq,
+        dev: req.dev,
+        ticket: req.ticket,
+    }));
+}
+
+/// Retire one completion: wake the waiter, drop the device's in-flight
+/// gauge, and free the submission-queue slot (waking blocked submitters).
+fn retire(array: &SsdArray, shared: &QueuedShared, p: PendingCompletion) {
+    {
+        // `completed` flips under the state lock so a blocking waiter
+        // cannot check-then-park across the notification.
+        let _state = p.ticket.state.lock().unwrap();
+        p.ticket.completed.store(true, Ordering::Release);
+    }
+    p.ticket.cv.notify_all();
+    array.device(p.dev).stats.end_inflight();
+    let (lock, cv) = &shared.sq[p.dev];
+    {
+        let mut used = lock.lock().unwrap();
+        *used = used.saturating_sub(1);
+    }
+    cv.notify_all();
+}
+
+// The `io-uring` cargo feature reserves the slot where a real Linux
+// io_uring backend plugs in: same submission/completion contract, the
+// reworked sync engine above as the portable fallback.  Like the `xla`
+// feature it vendors no dependency yet — the module only records the
+// integration surface (registered pool-aligned buffers per
+// `SafsConfig::buffer_align`, one ring per device, SQPOLL optional).
+#[cfg(feature = "io-uring")]
+pub mod uring {
+    /// Whether a real io_uring backend is linked in.  Always `false`
+    /// until the FFI is vendored; `IoBackend::Queued` then falls back
+    /// to the portable reactor implementation.
+    pub fn available() -> bool {
+        false
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::safs::stripe::StripeMap;
     use crate::safs::SafsFile;
 
-    fn mk(io_threads: usize, throttle: bool) -> (IoEngine, FileHandle) {
+    fn mk_backend(backend: IoBackend, io_threads: usize, throttle: bool) -> (IoEngine, FileHandle) {
         let mut cfg = SafsConfig::untimed();
+        cfg.io_backend = backend;
         cfg.io_threads = io_threads;
         cfg.throttle = throttle;
         cfg.num_ssds = 4;
@@ -266,16 +674,22 @@ mod tests {
         (IoEngine::new(array), file)
     }
 
+    fn mk(io_threads: usize, throttle: bool) -> (IoEngine, FileHandle) {
+        mk_backend(IoBackend::Threaded, io_threads, throttle)
+    }
+
     #[test]
     fn async_write_then_read_roundtrip() {
-        let (eng, file) = mk(2, false);
-        let data: Vec<u8> = (0..1000u32).map(|i| (i % 256) as u8).collect();
-        let t = eng.write(file.clone(), 64, data.clone());
-        let _ = t.wait();
-        let buf = vec![0u8; 1000];
-        let t = eng.read(file.clone(), 64, buf);
-        let out = t.wait();
-        assert_eq!(out, data);
+        for backend in [IoBackend::Inline, IoBackend::Threaded, IoBackend::Queued] {
+            let (eng, file) = mk_backend(backend, 2, false);
+            let data: Vec<u8> = (0..1000u32).map(|i| (i % 256) as u8).collect();
+            let t = eng.write(file.clone(), 64, data.clone());
+            let _ = t.wait();
+            let buf = vec![0u8; 1000];
+            let t = eng.read(file.clone(), 64, buf);
+            let out = t.wait();
+            assert_eq!(out, data, "{backend:?}");
+        }
     }
 
     #[test]
@@ -289,26 +703,30 @@ mod tests {
 
     #[test]
     fn is_complete_eventually_true() {
-        let (eng, file) = mk(1, false);
-        let t = eng.write(file, 0, vec![1u8; 10]);
-        let start = Instant::now();
-        while !t.is_complete() {
-            assert!(start.elapsed() < Duration::from_secs(5), "io stuck");
-            std::thread::yield_now();
+        for backend in [IoBackend::Threaded, IoBackend::Queued] {
+            let (eng, file) = mk_backend(backend, 1, false);
+            let t = eng.write(file, 0, vec![1u8; 10]);
+            let start = Instant::now();
+            while !t.is_complete() {
+                assert!(start.elapsed() < Duration::from_secs(5), "io stuck");
+                std::thread::yield_now();
+            }
+            let _ = t.wait();
         }
-        let _ = t.wait();
     }
 
     #[test]
     fn throttled_wait_takes_simulated_time() {
-        let (eng, file) = mk(1, true);
-        // 4 devices * 200MB/s; 8MB spread over 4 devices = 2MB each
-        // = ~10ms simulated.
-        let t0 = Instant::now();
-        let t = eng.write(file, 0, vec![0u8; 8 << 20]);
-        let _ = t.wait();
-        let dt = t0.elapsed().as_secs_f64();
-        assert!(dt >= 0.008, "expected >=8ms simulated, got {dt}");
+        for backend in [IoBackend::Threaded, IoBackend::Queued] {
+            let (eng, file) = mk_backend(backend, 1, true);
+            // 4 devices * 200MB/s; 8MB spread over 4 devices = 2MB each
+            // = ~10ms simulated.
+            let t0 = Instant::now();
+            let t = eng.write(file, 0, vec![0u8; 8 << 20]);
+            let _ = t.wait();
+            let dt = t0.elapsed().as_secs_f64();
+            assert!(dt >= 0.008, "{backend:?}: expected >=8ms simulated, got {dt}");
+        }
     }
 
     #[test]
@@ -328,25 +746,153 @@ mod tests {
     }
 
     #[test]
+    fn polling_waits_are_split_into_poll_nanos() {
+        for backend in [IoBackend::Threaded, IoBackend::Queued] {
+            let (eng, file) = mk_backend(backend, 1, true);
+            let t = eng.write(file.clone(), 0, vec![0u8; 8 << 20]);
+            let _ = t.wait();
+            let s = eng.array().stats();
+            // Default wait mode is polling: essentially the whole stall
+            // is a busy spin, and the spin share never exceeds the total.
+            assert!(s.poll_nanos >= 2_500_000, "{backend:?}: poll={}", s.poll_nanos);
+            assert!(s.poll_nanos <= s.wait_nanos, "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn blocking_waits_charge_no_poll_time() {
+        for backend in [IoBackend::Threaded, IoBackend::Queued] {
+            let mut cfg = SafsConfig::untimed();
+            cfg.io_backend = backend;
+            cfg.throttle = true;
+            cfg.num_ssds = 4;
+            cfg.stripe_block = 128;
+            cfg.read_bps = 200.0e6;
+            cfg.write_bps = 200.0e6;
+            cfg.latency = 0.0;
+            cfg.wait_mode = WaitMode::Blocking;
+            let array = Arc::new(SsdArray::new(cfg));
+            let file: FileHandle = Arc::new(SafsFile::new("t", StripeMap::identity(4, 128)));
+            let eng = IoEngine::new(array);
+            let _ = eng.write(file, 0, vec![0u8; 4 << 20]).wait();
+            let s = eng.array().stats();
+            assert!(s.wait_nanos >= 2_500_000, "{backend:?}: wait={}", s.wait_nanos);
+            assert_eq!(s.poll_nanos, 0, "{backend:?}: blocked waits never spin");
+        }
+    }
+
+    #[test]
     fn many_outstanding_requests_pipeline() {
         // With one io thread and 4 devices, 4 concurrent 2MB reads to
         // different ranges should overlap: total ≈ one device service
         // time, not 4x.
-        let (eng, file) = mk(1, true);
-        eng.write(file.clone(), 0, vec![1u8; 2 << 20]).wait();
-        let stats0 = eng.array().stats();
-        let t0 = Instant::now();
-        let tickets: Vec<IoTicket> = (0..4)
-            .map(|i| eng.read(file.clone(), i * (512 << 10), vec![0u8; 512 << 10]))
+        for backend in [IoBackend::Threaded, IoBackend::Queued] {
+            let (eng, file) = mk_backend(backend, 1, true);
+            eng.write(file.clone(), 0, vec![1u8; 2 << 20]).wait();
+            let stats0 = eng.array().stats();
+            let t0 = Instant::now();
+            let tickets: Vec<IoTicket> = (0..4)
+                .map(|i| eng.read(file.clone(), i * (512 << 10), vec![0u8; 512 << 10]))
+                .collect();
+            for t in tickets {
+                let _ = t.wait();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let d = eng.array().stats().delta_since(&stats0);
+            assert_eq!(d.bytes_read, 2 << 20);
+            // Serial would be ~10.5ms (2MB @ 200MB/s); pipelined across 4
+            // devices ≈ 2.6ms + overheads. Allow generous slack for CI noise.
+            assert!(dt < 0.009, "{backend:?}: reads did not pipeline: {dt}");
+        }
+    }
+
+    #[test]
+    fn submit_batch_returns_tickets_in_order() {
+        for backend in [IoBackend::Inline, IoBackend::Threaded, IoBackend::Queued] {
+            let (eng, file) = mk_backend(backend, 1, false);
+            let data: Vec<u8> = (0..1024u32).map(|i| (i % 251) as u8).collect();
+            eng.write(file.clone(), 0, data.clone()).wait();
+            let reqs: Vec<IoRequest> = (0..4)
+                .map(|i| IoRequest::read(file.clone(), i * 256, vec![0u8; 256]))
+                .collect();
+            let tickets = eng.submit_batch(reqs);
+            assert_eq!(tickets.len(), 4);
+            for (i, t) in tickets.into_iter().enumerate() {
+                assert_eq!(t.wait(), data[i * 256..(i + 1) * 256], "{backend:?} slot {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn queued_gauge_tracks_peak_depth() {
+        let mut cfg = SafsConfig::untimed();
+        cfg.io_backend = IoBackend::Queued;
+        cfg.throttle = true;
+        cfg.num_ssds = 4;
+        cfg.stripe_block = 128;
+        // Slow devices (1 MB/s ⇒ 128µs per block) so the submit loop
+        // comfortably outruns the simulated service times.
+        cfg.read_bps = 1.0e6;
+        cfg.write_bps = 1.0e6;
+        cfg.latency = 0.0;
+        let array = Arc::new(SsdArray::new(cfg));
+        let file: FileHandle = Arc::new(SafsFile::new("t", StripeMap::identity(4, 128)));
+        let eng = IoEngine::new(array);
+        // 8 reads of one stripe block each, all on device 0 (identity
+        // striping, stride = 4 blocks): the submission queue on that
+        // device must have seen several requests in flight at once.
+        let tickets: Vec<IoTicket> = (0..8)
+            .map(|i| eng.read(file.clone(), i * 4 * 128, vec![0u8; 128]))
             .collect();
         for t in tickets {
             let _ = t.wait();
         }
+        let peak = eng.array().device(0).stats.peak_queue_depth.load(Ordering::Relaxed);
+        assert!(peak >= 2, "peak queue depth should exceed 1, got {peak}");
+        assert_eq!(eng.array().device(0).stats.in_flight.load(Ordering::Relaxed), 0);
+        assert!(eng.array().stats().peak_queue_depth >= 2);
+    }
+
+    #[test]
+    fn queue_depth_one_applies_backpressure() {
+        let mut cfg = SafsConfig::untimed();
+        cfg.io_backend = IoBackend::Queued;
+        cfg.queue_depth = 1;
+        cfg.num_ssds = 4;
+        cfg.stripe_block = 128;
+        let array = Arc::new(SsdArray::new(cfg));
+        let file: FileHandle = Arc::new(SafsFile::new("t", StripeMap::identity(4, 128)));
+        let eng = IoEngine::new(array);
+        // All to device 0: each submit must wait for the previous
+        // retirement; with untimed deadlines this still makes progress
+        // and every ticket completes with the right bytes.
+        eng.write(file.clone(), 0, vec![5u8; 128]).wait();
+        let tickets: Vec<IoTicket> =
+            (0..6).map(|_| eng.read(file.clone(), 0, vec![0u8; 128])).collect();
+        for t in tickets {
+            assert_eq!(t.wait(), vec![5u8; 128]);
+        }
+        let peak = eng.array().device(0).stats.peak_queue_depth.load(Ordering::Relaxed);
+        assert!(peak <= 1, "depth-1 SQ must never hold 2 requests, got {peak}");
+    }
+
+    #[test]
+    fn queued_blocking_completion_driven_wakeup() {
+        let mut cfg = SafsConfig::untimed();
+        cfg.io_backend = IoBackend::Queued;
+        cfg.wait_mode = WaitMode::Blocking;
+        cfg.throttle = true;
+        cfg.num_ssds = 4;
+        cfg.stripe_block = 128;
+        cfg.read_bps = 200.0e6;
+        cfg.write_bps = 200.0e6;
+        cfg.latency = 0.0;
+        let array = Arc::new(SsdArray::new(cfg));
+        let file: FileHandle = Arc::new(SafsFile::new("t", StripeMap::identity(4, 128)));
+        let eng = IoEngine::new(array);
+        let t0 = Instant::now();
+        let _ = eng.write(file, 0, vec![0u8; 8 << 20]).wait();
         let dt = t0.elapsed().as_secs_f64();
-        let d = eng.array().stats().delta_since(&stats0);
-        assert_eq!(d.bytes_read, 2 << 20);
-        // Serial would be ~10.5ms (2MB @ 200MB/s); pipelined across 4
-        // devices ≈ 2.6ms + overheads. Allow generous slack for CI noise.
-        assert!(dt < 0.009, "reads did not pipeline: {dt}");
+        assert!(dt >= 0.008, "deadline must be honoured through the reactor: {dt}");
     }
 }

@@ -21,10 +21,10 @@ pub mod stripe;
 
 pub use array::{IoStats, SsdArray};
 pub use buffer_pool::BufferPool;
-pub use config::{SafsConfig, WaitMode};
+pub use config::{IoBackend, SafsConfig, WaitMode};
 pub use file::{FileHandle, SafsFile};
 pub use image_cache::{ImageCache, ImageCacheCounters};
-pub use io::{IoEngine, IoTicket};
+pub use io::{IoEngine, IoRequest, IoTicket};
 pub use scheduler::{FeedMode, ReadRange, SlotBuf, WalkScheduler};
 pub use stripe::StripeMap;
 
@@ -127,6 +127,13 @@ impl Safs {
 
     pub fn write_async(&self, file: FileHandle, offset: u64, buf: Vec<u8>) -> IoTicket {
         self.engine.write(file, offset, buf)
+    }
+
+    /// Submit a batch of requests in one call ([`IoEngine::submit_batch`]):
+    /// tickets come back in submission order, and on the queued backend
+    /// the whole batch's device time is reserved before this returns.
+    pub fn submit_batch(&self, reqs: Vec<IoRequest>) -> Vec<IoTicket> {
+        self.engine.submit_batch(reqs)
     }
 
     // ---- sync convenience wrappers ----

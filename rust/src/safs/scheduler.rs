@@ -62,8 +62,8 @@
 //! must never compete with sparse tile-row images for the cache
 //! budget, and their buffers are recycled by the walk, not published.
 
-use crate::safs::{BufferPool, FileHandle, ImageCache, IoTicket, Safs};
-use std::sync::{Arc, Mutex};
+use crate::safs::{BufferPool, FileHandle, ImageCache, IoRequest, IoTicket, Safs};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// One slot's backing read: `file[offset .. offset + len)`.
 #[derive(Clone)]
@@ -87,14 +87,16 @@ impl WorkerPools {
         }
     }
 
-    pub(crate) fn get(&self, hint: usize, len: usize) -> Vec<u8> {
+    /// Get a buffer of `len` bytes whose capacity is padded to `align`
+    /// ([`BufferPool::get_aligned`] — the O_DIRECT discipline).
+    pub(crate) fn get(&self, hint: usize, len: usize, align: usize) -> Vec<u8> {
         let n = self.pools.len();
         for i in 0..n {
             if let Ok(mut pool) = self.pools[(hint + i) % n].try_lock() {
-                return pool.get(len);
+                return pool.get_aligned(len, align);
             }
         }
-        self.pools[hint % n].lock().unwrap().get(len)
+        self.pools[hint % n].lock().unwrap().get_aligned(len, align)
     }
 
     pub(crate) fn put(&self, hint: usize, buf: Vec<u8>) {
@@ -167,6 +169,9 @@ pub struct WalkScheduler {
     depth: usize,
     mode: FeedMode,
     pools: WorkerPools,
+    /// Pooled-buffer alignment unit
+    /// ([`crate::safs::SafsConfig::buffer_align`]).
+    align: usize,
     /// `None` = cache-bypassing (dense subspace walks).
     cache: Option<Arc<ImageCache>>,
 }
@@ -190,6 +195,7 @@ impl WalkScheduler {
             slots: (0..ranges.len()).map(|_| Mutex::new(Slot::Idle)).collect(),
             depth: fs.cfg().read_ahead,
             pools: WorkerPools::new(workers, fs.cfg().use_buffer_pool),
+            align: fs.cfg().buffer_align(),
             cache: use_cache.then(|| fs.image_cache().clone()),
             fs: fs.clone(),
             ranges,
@@ -251,8 +257,52 @@ impl WalkScheduler {
         {
             *slot = Slot::Cached(arc);
         } else {
-            let buf = self.pools.get(i, r.len);
+            let buf = self.pools.get(i, r.len, self.align);
             *slot = Slot::InFlight(self.fs.read_async(r.file.clone(), r.offset, buf));
+        }
+    }
+
+    /// Issue every idle slot in `[from, to)` as **one submission batch**
+    /// ([`crate::safs::Safs::submit_batch`]): the whole read-ahead
+    /// window's device time is reserved at this call instead of
+    /// trickling request by request.  Slot guards are held (in
+    /// ascending index order — no lock cycles; `issue`/`acquire` take
+    /// one slot at a time) across the submit so a concurrent acquire of
+    /// a window slot blocks briefly on its mutex rather than
+    /// double-issuing; the image-cache/slot-state discipline is the
+    /// same as [`WalkScheduler::issue`]'s.
+    fn issue_batch(&self, from: usize, to: usize) {
+        let to = to.min(self.ranges.len());
+        if from >= to {
+            return;
+        }
+        let mut issued: Vec<(usize, MutexGuard<'_, Slot>)> = Vec::new();
+        let mut reqs: Vec<IoRequest> = Vec::new();
+        for j in from..to {
+            let Some(r) = self.ranges[j].as_ref() else { continue };
+            let mut slot = self.slots[j].lock().unwrap();
+            if !matches!(*slot, Slot::Idle) {
+                continue;
+            }
+            if let Some(arc) =
+                self.cache.as_ref().and_then(|c| c.peek(&r.file.name, r.offset, r.len))
+            {
+                *slot = Slot::Cached(arc);
+                continue;
+            }
+            reqs.push(IoRequest::read(
+                r.file.clone(),
+                r.offset,
+                self.pools.get(j, r.len, self.align),
+            ));
+            issued.push((j, slot));
+        }
+        if reqs.is_empty() {
+            return;
+        }
+        let tickets = self.fs.submit_batch(reqs);
+        for ((_, mut slot), ticket) in issued.into_iter().zip(tickets) {
+            *slot = Slot::InFlight(ticket);
         }
     }
 
@@ -275,14 +325,14 @@ impl WalkScheduler {
     }
 
     /// Self-feed after acquiring slot `i` (Auto mode only): issue every
-    /// idle slot through the end of the group `depth` groups ahead.
+    /// idle slot through the end of the group `depth` groups ahead —
+    /// as **one batch**, so the queued engine reserves the whole
+    /// window's device time at a single feed step.
     fn auto_topup(&self, i: usize) {
         let FeedMode::Auto { bounds } = &self.mode else { return };
         let g = bounds.partition_point(|&end| end <= i);
         let end = bounds[(g + self.depth).min(bounds.len() - 1)];
-        for j in i + 1..end {
-            self.issue(j);
-        }
+        self.issue_batch(i + 1, end);
     }
 
     /// Consume slot `i`: resolve it (from an earlier issue, the cache,
@@ -311,7 +361,7 @@ impl WalkScheduler {
                     {
                         Some(arc) => *slot = Slot::Cached(arc),
                         None => {
-                            let buf = self.pools.get(i, r.len);
+                            let buf = self.pools.get(i, r.len, self.align);
                             *slot =
                                 Slot::InFlight(self.fs.read_async(r.file.clone(), r.offset, buf));
                         }

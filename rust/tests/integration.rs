@@ -9,7 +9,7 @@ use flasheigen::dense::{
 use flasheigen::eigen::{solve, EigenConfig, SpmmOperator, Which};
 use flasheigen::graph::{gnm_undirected, Dataset};
 use flasheigen::harness::BenchCfg;
-use flasheigen::safs::{Safs, SafsConfig};
+use flasheigen::safs::{IoBackend, Safs, SafsConfig};
 use flasheigen::sparse::{build_matrix, BuildTarget};
 use flasheigen::spmm::{spmm, DenseBlock, SpmmOpts};
 use flasheigen::util::prop::assert_close;
@@ -160,6 +160,8 @@ fn throttling_does_not_change_results() {
         seed: 3,
         read_ahead: 2,
         image_cache: 0,
+        queue_depth: 32,
+        io_backend: IoBackend::Queued,
     };
     let run = |timed: bool| {
         let fs = if timed {

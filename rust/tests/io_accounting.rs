@@ -16,7 +16,7 @@ use flasheigen::eigen::{
 };
 use flasheigen::graph::{gnm, gnm_undirected};
 use flasheigen::harness::{fig9_fusion_data, fig9_readahead_data, BenchCfg};
-use flasheigen::safs::{Safs, SafsConfig};
+use flasheigen::safs::{IoBackend, Safs, SafsConfig, WaitMode};
 use flasheigen::sparse::{build_matrix_opts, build_mem, BuildTarget, CooMatrix};
 use flasheigen::spmm::{ChainedGramSpmm, SpmmOpts};
 use flasheigen::util::prop::assert_close;
@@ -640,6 +640,8 @@ fn read_ahead_overlap_lowers_io_wait_at_equal_bytes() {
         seed: 1,
         read_ahead: 2,
         image_cache: 0,
+        queue_depth: 32,
+        io_backend: IoBackend::Queued,
     };
     let rows = fig9_readahead_data(&cfg, 64.0, 4, &[0, 2]);
     let (d0, d2) = (&rows[0].2, &rows[1].2);
@@ -697,6 +699,66 @@ fn fused_dense_walk_overlap_lowers_io_wait_at_equal_bytes() {
         "fused dense walk read-ahead must strictly lower io_wait: depth 2 {:.4}s vs depth 0 {:.4}s",
         d2.wait_secs(),
         d0.wait_secs()
+    );
+}
+
+/// (k3) The I/O-engine acceptance pin: on the timed EM harness row (the
+/// fused dense walk of (k2), blocking waits so both engines pay modeled
+/// wakeup costs), the queued engine at queue depth ≥ 8 reads exactly
+/// the same bytes, produces bitwise-identical results, and blocks
+/// strictly less on tickets than the legacy thread pool at equal
+/// `io_threads`.  Two mechanisms, both engine-side only: device time is
+/// reserved at *submission* instead of when a pool thread gets around
+/// to performing the transfer (deadlines start earlier), and a blocked
+/// queued wait is one completion notification — one modeled context
+/// switch — where the threaded path pays one to receive the transfer
+/// and another to sleep out the remaining deadline.
+#[test]
+fn queued_engine_blocks_less_than_threaded_at_equal_bytes() {
+    let run = |backend: IoBackend| {
+        let mut bc = BenchCfg::default();
+        bc.dilation = 8.0; // slow simulated devices: waits dominate
+        bc.read_ahead = 2;
+        let mut cfg = bc.safs_config();
+        cfg.io_backend = backend;
+        cfg.queue_depth = 8;
+        cfg.wait_mode = WaitMode::Blocking;
+        assert_eq!(cfg.io_threads, 1, "the pin compares engines at equal io_threads");
+        let fs = Safs::new(cfg);
+        let ctx = DenseCtx::with(fs.clone(), true, 128, 2, 4, 1, Arc::new(NativeKernels));
+        ctx.set_fused(true);
+        let (n, b, p) = (4096usize, 2usize, 6usize);
+        let basis: Vec<TasMatrix> = (0..p)
+            .map(|i| {
+                let v = TasMatrix::zeros(&ctx, n, b);
+                mv_random(&v, 100 + i as u64);
+                v
+            })
+            .collect();
+        let refs: Vec<&TasMatrix> = basis.iter().collect();
+        let x = TasMatrix::zeros(&ctx, n, b);
+        mv_random(&x, 7);
+        assert!(basis.iter().all(|v| !v.is_resident()), "basis must stream");
+        let before = fs.stats();
+        let _ = ortho_normalize(&refs, &x, 1);
+        let delta = fs.stats().delta_since(&before);
+        (x.to_colmajor(), delta)
+    };
+    let (vq, dq) = run(IoBackend::Queued);
+    let (vt, dt) = run(IoBackend::Threaded);
+    assert_eq!(vq, vt, "the I/O engine changed the walk's bits");
+    assert_eq!(dq.bytes_read, dt.bytes_read, "engine changed bytes read");
+    assert_eq!(dq.bytes_written, dt.bytes_written, "engine changed bytes written");
+    assert!(
+        dq.wait_secs() < dt.wait_secs(),
+        "queued engine must strictly lower io_wait: queued {:.4}s vs threaded {:.4}s",
+        dq.wait_secs(),
+        dt.wait_secs()
+    );
+    assert!(
+        dq.peak_queue_depth >= 2,
+        "queued engine under read-ahead must keep a device queue deep, saw {}",
+        dq.peak_queue_depth
     );
 }
 
@@ -798,6 +860,8 @@ fn fig9_fusion_em_reports_strictly_fewer_bytes() {
         seed: 1,
         read_ahead: 2,
         image_cache: 0,
+        queue_depth: 32,
+        io_backend: IoBackend::Queued,
     };
     let rows = fig9_fusion_data(&cfg, 4096, 16, 2);
     assert_eq!(rows.len(), 2);

@@ -9,7 +9,7 @@ use flasheigen::dense::{
 use flasheigen::eigen::ortho::{normalize_block_eager, ortho_against_eager};
 use flasheigen::eigen::{ortho_normalize_with, sym_eig, GramOperator, Operator, SpmmOperator};
 use flasheigen::graph::{gnm, gnm_undirected, rmat, RmatParams};
-use flasheigen::safs::{Safs, SafsConfig, StripeMap};
+use flasheigen::safs::{IoBackend, Safs, SafsConfig, StripeMap, WaitMode};
 use flasheigen::sparse::{build_matrix, build_matrix_opts, BuildTarget, CsrMatrix};
 use flasheigen::spmm::{spmm, spmm_csr, DenseBlock, SpmmOpts};
 use flasheigen::util::prop::{assert_close, run_prop};
@@ -789,6 +789,104 @@ fn prop_unified_scheduler_grid_bitwise_and_no_worse_bytes() {
                             "depth {depth} / budget {budget} moved {total} total bytes, \
                              over the baseline {t0}"
                         ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_io_backend_grid_bitwise_and_per_device_bytes() {
+    // The I/O-engine parity contract (`safs/io.rs`): the engine choice
+    // moves *when* bytes are read, never what is computed or where it
+    // lands.  A full eigensolve()/svd() must be bitwise invariant — and
+    // every device must see exactly the same (read, written) byte
+    // counts — across engine {inline, threaded, queued} × queue depth
+    // {1, 8} × wait mode {polling, blocking}, in IM and EM dense modes,
+    // on ER and R-MAT graphs.  Per-device equality is the strong form:
+    // placement and request splitting happen before the backends
+    // diverge, so not one stripe block may shift.
+    run_prop("io-backend-grid", 2, |g| {
+        let n = g.usize_in(64, 220) as u64;
+        let nnz = g.usize_in(n as usize, 1800) as u64;
+        let tile = *g.choose(&[16usize, 32]);
+        let svd_path = g.bool();
+        let rmat_shape = g.bool();
+        let em = g.bool();
+        let graph_seed = g.u64();
+        let solver_seed = g.u64();
+        let mut rng = Rng::new(graph_seed);
+        let mut coo = if rmat_shape {
+            rmat(n.max(64), nnz.max(1), RmatParams::default(), &mut rng)
+        } else {
+            gnm(n, nnz.min(n * n.saturating_sub(1)), &mut rng)
+        };
+        let at_coo = svd_path.then(|| coo.transpose());
+        if !svd_path {
+            coo.symmetrize();
+        }
+        let mut baseline: Option<(Vec<f64>, Vec<(u64, u64)>)> = None;
+        for backend in [IoBackend::Inline, IoBackend::Threaded, IoBackend::Queued] {
+            for queue_depth in [1usize, 8] {
+                for wait_mode in [WaitMode::Polling, WaitMode::Blocking] {
+                    let mut cfg = SafsConfig::untimed();
+                    cfg.io_backend = backend;
+                    cfg.queue_depth = queue_depth;
+                    cfg.wait_mode = wait_mode;
+                    let fs = Safs::new(cfg);
+                    let ctx =
+                        DenseCtx::with(fs.clone(), em, 64, 1, 3, 1, Arc::new(NativeKernels));
+                    let ecfg = flasheigen::eigen::EigenConfig {
+                        nev: 2,
+                        block_size: 2,
+                        num_blocks: 6,
+                        tol: 1e-6,
+                        max_restarts: 40,
+                        which: if svd_path {
+                            flasheigen::eigen::Which::LargestAlgebraic
+                        } else {
+                            flasheigen::eigen::Which::LargestMagnitude
+                        },
+                        seed: solver_seed,
+                        compute_eigenvectors: false,
+                    };
+                    let vals = if svd_path {
+                        let a = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "ba"), true);
+                        let at = build_matrix_opts(
+                            at_coo.as_ref().unwrap(),
+                            tile,
+                            BuildTarget::Safs(&fs, "bat"),
+                            true,
+                        );
+                        let op = GramOperator::new(a, at, SpmmOpts::default(), 1);
+                        flasheigen::eigen::svd(&op, &ctx, &ecfg).singular_values
+                    } else {
+                        let m = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "bm"), true);
+                        let op = SpmmOperator::new(m, SpmmOpts::default(), 1);
+                        flasheigen::eigen::solve(&op, &ctx, &ecfg).eigenvalues
+                    };
+                    let per_device = fs.stats().per_device;
+                    let cell = format!(
+                        "engine {} / qd {queue_depth} / {wait_mode:?} / em {em}",
+                        backend.name()
+                    );
+                    match &baseline {
+                        None => baseline = Some((vals, per_device)),
+                        Some((v0, d0)) => {
+                            if &vals != v0 {
+                                return Err(format!(
+                                    "solve bits changed at {cell}: {vals:?} vs {v0:?}"
+                                ));
+                            }
+                            if &per_device != d0 {
+                                return Err(format!(
+                                    "per-device byte counts changed at {cell}: \
+                                     {per_device:?} vs {d0:?}"
+                                ));
+                            }
+                        }
                     }
                 }
             }

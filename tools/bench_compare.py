@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_*.json harness artifacts across commits.
+
+Usage:
+    python3 tools/bench_compare.py OLD.json NEW.json
+
+Both files are `flasheigen figures --bench-json` documents
+({experiment, config, tables:[{title, headers, rows}]}).  Tables are
+matched by title and rows by their first (key) column; for every
+numeric cell the script prints old -> new with a new/old ratio, so a
+CI run (or a human with two downloaded artifacts) can see at a glance
+which timed columns moved between commits.
+
+Cells carry units ("1.23s", "4.00MiB", "2.00KiB/s", "87%", "0.62x",
+"12.5min") — values are normalised to a base unit before the ratio, so
+"900.00KiB" -> "1.10MiB" compares as ~1.25x, not as 0.0012x.  Cells
+whose units disagree after normalisation (or that are not numeric at
+all) are printed verbatim without a ratio.
+
+Exit status: 0 = compared fine, 2 = bad usage/unreadable input,
+3 = the two documents share no table titles (nothing to compare).
+
+Stdlib only — runs on the bare CI python3.
+"""
+
+import json
+import re
+import sys
+
+# Multipliers to a base unit, keyed by the unit suffix of a cell.
+# Binary byte units come from util::humansize; time units from
+# util::timer::fmt_secs.  "/s" suffixes reuse the byte scales.
+UNIT_SCALE = {
+    "": ("", 1.0),
+    "b": ("bytes", 1.0),
+    "kib": ("bytes", 1024.0),
+    "mib": ("bytes", 1024.0**2),
+    "gib": ("bytes", 1024.0**3),
+    "tib": ("bytes", 1024.0**4),
+    "pib": ("bytes", 1024.0**5),
+    "eib": ("bytes", 1024.0**6),
+    "ns": ("secs", 1e-9),
+    "us": ("secs", 1e-6),
+    "ms": ("secs", 1e-3),
+    "s": ("secs", 1.0),
+    "min": ("secs", 60.0),
+    "h": ("secs", 3600.0),
+    "%": ("pct", 1.0),
+    "x": ("ratio", 1.0),
+}
+
+CELL_RE = re.compile(r"^\s*([-+]?\d+(?:\.\d+)?(?:[eE][-+]?\d+)?)\s*([a-zA-Z%/]*)\s*$")
+
+
+def parse_cell(cell):
+    """-> (dimension, value-in-base-units) or None if non-numeric."""
+    m = CELL_RE.match(cell)
+    if not m:
+        return None
+    value, unit = float(m.group(1)), m.group(2)
+    rate = unit.endswith("/s")
+    if rate:
+        unit = unit[:-2]
+    scaled = UNIT_SCALE.get(unit.lower())
+    if scaled is None:
+        return None
+    dim, mul = scaled
+    return (dim + "/s" if rate else dim, value * mul)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        raise SystemExit(2)
+    tables = doc.get("tables")
+    if not isinstance(tables, list):
+        print(f"error: {path} has no 'tables' array (not a --bench-json artifact?)", file=sys.stderr)
+        raise SystemExit(2)
+    return doc
+
+
+def compare_tables(old, new):
+    """Print the per-cell comparison of two same-title tables."""
+    print(f"\n== {new['title']} ==")
+    headers = new.get("headers", [])
+    old_headers = old.get("headers", [])
+    # Rows keyed by first column; first occurrence wins on duplicates.
+    old_rows = {}
+    for row in old.get("rows", []):
+        if row:
+            old_rows.setdefault(row[0], row)
+    for row in new.get("rows", []):
+        if not row:
+            continue
+        key = row[0]
+        prev = old_rows.get(key)
+        if prev is None:
+            print(f"  {key}: (new row)")
+            continue
+        parts = []
+        for i, cell in enumerate(row[1:], start=1):
+            name = headers[i] if i < len(headers) else f"col{i}"
+            # Align the old cell by header name, so a column set that
+            # changed between commits (e.g. fig11 gaining qd/poll)
+            # never pairs unrelated columns; positional matching is the
+            # fallback only when the old artifact carries no headers.
+            if name in old_headers:
+                j = old_headers.index(name)
+                before = prev[j] if j < len(prev) else None
+            elif not old_headers:
+                before = prev[i] if i < len(prev) else None
+            else:
+                before = None
+            if before is None:
+                parts.append(f"{name}: -> {cell} (new column)")
+                continue
+            a, b = parse_cell(before), parse_cell(cell)
+            if a and b and a[0] == b[0] and a[1] != 0:
+                parts.append(f"{name}: {before} -> {cell} ({b[1] / a[1]:.2f}x)")
+            elif before != cell:
+                parts.append(f"{name}: {before} -> {cell}")
+            else:
+                parts.append(f"{name}: {cell}")
+        print(f"  {key}:")
+        for p in parts:
+            print(f"    {p}")
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__.strip().splitlines()[2].strip(), file=sys.stderr)
+        return 2
+    old_doc, new_doc = load(argv[1]), load(argv[2])
+    old_tables = {t["title"]: t for t in old_doc["tables"] if "title" in t}
+    matched = 0
+    for table in new_doc["tables"]:
+        title = table.get("title")
+        if title in old_tables:
+            matched += 1
+            compare_tables(old_tables[title], table)
+    unmatched_new = [t["title"] for t in new_doc["tables"] if t.get("title") not in old_tables]
+    unmatched_old = [t for t in old_tables if t not in {x.get("title") for x in new_doc["tables"]}]
+    for t in unmatched_new:
+        print(f"\n(table only in {argv[2]}: {t})")
+    for t in unmatched_old:
+        print(f"\n(table only in {argv[1]}: {t})")
+    if matched == 0:
+        print("error: the two artifacts share no table titles", file=sys.stderr)
+        return 3
+    print(f"\ncompared {matched} table(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
