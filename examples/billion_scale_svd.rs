@@ -80,6 +80,7 @@ fn main() {
         which: Which::LargestAlgebraic,
         seed: cfg.seed,
         compute_eigenvectors: false,
+        refine_steps: 0,
     };
     let before = fs.stats();
     let (res, t_solve) = time_it(|| svd(&op, &ctx, &ecfg));

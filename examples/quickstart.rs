@@ -41,6 +41,7 @@ fn main() {
         which: Which::LargestMagnitude,
         seed: 7,
         compute_eigenvectors: false,
+        refine_steps: 0,
     };
     let res = solve(&op, &ctx, &cfg);
 

@@ -148,6 +148,7 @@ fn main() {
         which: Which::LargestAlgebraic,
         seed: 5,
         compute_eigenvectors: true,
+        refine_steps: 0,
     };
     let res = solve(&op, &ctx, &cfg);
     println!(

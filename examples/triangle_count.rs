@@ -63,6 +63,7 @@ fn main() {
             which: Which::LargestMagnitude,
             seed: 9,
             compute_eigenvectors: false,
+            refine_steps: 0,
         };
         let res = solve(&op, &ctx, &cfg);
         let estimate: f64 = res.eigenvalues.iter().map(|l| l.powi(3)).sum::<f64>() / 6.0;

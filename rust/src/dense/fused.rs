@@ -582,14 +582,19 @@ impl<'a> FusedPipeline<'a> {
             // borrow their RAM slot directly.
             let fetch_one = |i: usize, pool: &mut BufferPool| -> IntervalGuard<'a> {
                 match sched_pos[i] {
-                    Some(k) => IntervalGuard::Owned(
+                    // Scheduler slots carry raw storage-width bytes
+                    // (they bypass TasMatrix::load_interval), so the
+                    // load-boundary widening to f64 happens here.
+                    Some(k) => IntervalGuard::Owned(super::tas::widen_stored_bytes(
                         sched
                             .as_ref()
                             .unwrap()
                             .acquire(iv * reqs + k)
                             .expect("scheduled operand is file-backed")
                             .into_owned(),
-                    ),
+                        self.mats[i].elem_bytes(),
+                        pool,
+                    )),
                     None => self.mats[i].load_interval(iv, pool),
                 }
             };

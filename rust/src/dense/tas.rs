@@ -8,6 +8,25 @@
 //! the most recent `cache_slots` EM matrices stay resident in RAM (dirty
 //! intervals are flushed on eviction), which is what saves most of the
 //! SSD writes during reorthogonalization.
+//!
+//! # Storage precision
+//!
+//! Each matrix carries a serialized **element width** fixed at creation
+//! from [`crate::safs::StoragePrecision`] (`--precision`): 8 bytes (f64,
+//! the default) or 4 (f32).  The precision contract is storage-only —
+//! every in-RAM interval is `Vec<f64>` and every accumulation runs in
+//! f64; under f32 storage, values are narrowed exactly once at the store
+//! boundary ([`TasMatrix::store_interval`] /
+//! [`TasMatrix::update_interval`] round through f32 even while resident,
+//! so cached FE-IM bits equal FE-EM bits and eviction flushes are
+//! lossless) and widened back to f64 on every load.  Subspace I/O is
+//! therefore exactly half the f64 bytes, results are deterministic
+//! (bitwise-reproducible run-to-run), and the f64 default is
+//! bitwise-identical to the pre-precision behaviour.  A
+//! [`DenseCtx::scoped_full_precision`] scope forces full-width storage
+//! for matrices created inside it — the eigensolver's f64 iterative
+//! refinement uses it so refined Ritz pairs are never floored by f32
+//! storage.
 
 use super::kernels::{DenseKernels, NativeKernels};
 use crate::metrics::{MemTracker, PhaseIo};
@@ -29,6 +48,54 @@ pub fn cast_f64s(bytes: &[u8]) -> &[f64] {
 pub fn f64s_as_bytes(xs: &[f64]) -> &[u8] {
     // SAFETY: f64 has no padding; alignment of u8 is 1.
     unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 8) }
+}
+
+/// Round every element to its nearest f32 (the f32-storage store
+/// boundary).  Exact round-trip: a value that already equals its f32
+/// rounding is unchanged, so applying this twice is idempotent.
+pub fn round_to_f32(xs: &mut [f64]) {
+    for x in xs.iter_mut() {
+        *x = *x as f32 as f64;
+    }
+}
+
+/// Serialize an f64 interval at the given element width: f64 LE bytes
+/// (`elem == 8`) or f32 LE bytes (`elem == 4`, the f32-storage write
+/// boundary — lossless whenever the data already rounded through f32).
+fn serialize_interval(data: &[f64], elem: usize) -> Vec<u8> {
+    match elem {
+        8 => f64s_as_bytes(data).to_vec(),
+        4 => {
+            let mut out = Vec::with_capacity(data.len() * 4);
+            for &x in data {
+                out.extend_from_slice(&(x as f32).to_le_bytes());
+            }
+            out
+        }
+        _ => unreachable!("unsupported element width {elem}"),
+    }
+}
+
+/// Widen one interval's raw storage bytes to the f64 LE bytes
+/// [`IntervalGuard::Owned`] holds — identity for f64 storage, an
+/// f32→f64 decode through a pooled buffer for f32 storage.  This is the
+/// single load-boundary widening point; callers that bypass
+/// [`TasMatrix::load_interval`] (the fused walks' scheduler reads) route
+/// their bytes through here.
+pub fn widen_stored_bytes(bytes: Vec<u8>, elem: usize, pool: &mut BufferPool) -> Vec<u8> {
+    if elem == 8 {
+        return bytes;
+    }
+    assert_eq!(elem, 4, "unsupported element width {elem}");
+    assert_eq!(bytes.len() % 4, 0);
+    let n = bytes.len() / 4;
+    let mut wide = pool.get(n * 8);
+    for (i, ch) in bytes.chunks_exact(4).enumerate() {
+        let v = f32::from_le_bytes(ch.try_into().unwrap()) as f64;
+        wide[i * 8..(i + 1) * 8].copy_from_slice(&v.to_le_bytes());
+    }
+    pool.put(bytes);
+    wide
 }
 
 /// Shared configuration + services for all dense matrices of one solver
@@ -64,6 +131,11 @@ pub struct DenseCtx {
     /// [`crate::spmm::ChainedGramSpmm`]).  Layouts that cannot stream
     /// fall back to the eager apply automatically.
     streamed: AtomicBool,
+    /// When set, matrices created in this context serialize at full
+    /// width regardless of [`crate::safs::SafsConfig::storage_precision`]
+    /// — the f64 iterative-refinement scope
+    /// ([`DenseCtx::scoped_full_precision`]).
+    full_prec: AtomicBool,
     ids: AtomicU64,
     lru: Mutex<VecDeque<Weak<MatInner>>>,
 }
@@ -86,6 +158,7 @@ impl DenseCtx {
             io_phases: PhaseIo::new(),
             fused: AtomicBool::new(true),
             streamed: AtomicBool::new(true),
+            full_prec: AtomicBool::new(false),
             ids: AtomicU64::new(1),
             lru: Mutex::new(VecDeque::new()),
         })
@@ -113,6 +186,7 @@ impl DenseCtx {
             io_phases: PhaseIo::new(),
             fused: AtomicBool::new(true),
             streamed: AtomicBool::new(true),
+            full_prec: AtomicBool::new(false),
             ids: AtomicU64::new(1),
             lru: Mutex::new(VecDeque::new()),
         })
@@ -164,6 +238,28 @@ impl DenseCtx {
         self.set_streamed(!on);
     }
 
+    /// The serialized element width new matrices get right now: the
+    /// configured [`crate::safs::SafsConfig::storage_precision`], unless
+    /// a full-precision scope is active.
+    pub fn storage_elem_bytes(&self) -> usize {
+        if self.full_prec.load(Ordering::Relaxed) {
+            8
+        } else {
+            self.fs.cfg().storage_precision.elem_bytes()
+        }
+    }
+
+    /// Run `f` with full-width storage forced for every matrix created
+    /// inside it (used by the solver's f64 iterative refinement so
+    /// refined Ritz pairs are not floored by f32 storage).  Restores the
+    /// previous state on exit.
+    pub fn scoped_full_precision<T>(&self, f: impl FnOnce() -> T) -> T {
+        let was = self.full_prec.swap(true, Ordering::Relaxed);
+        let out = f();
+        self.full_prec.store(was, Ordering::Relaxed);
+        out
+    }
+
     fn next_id(&self) -> u64 {
         self.ids.fetch_add(1, Ordering::Relaxed)
     }
@@ -189,6 +285,10 @@ struct MatInner {
     n_rows: usize,
     n_cols: usize,
     interval_rows: usize,
+    /// Serialized bytes per element (8 = f64, 4 = f32), fixed at
+    /// creation from the context's storage precision.  Applies at the
+    /// store/load boundary only; resident data is always `Vec<f64>`.
+    elem: usize,
     /// EM backing file; `None` for memory-backed matrices.
     file: Option<FileHandle>,
     /// Per-interval resident data (column-major).  Memory-backed matrices
@@ -211,7 +311,7 @@ impl MatInner {
     }
 
     fn byte_offset(&self, iv: usize) -> u64 {
-        (iv * self.interval_rows * self.n_cols * 8) as u64
+        (iv * self.interval_rows * self.n_cols * self.elem) as u64
     }
 
     /// Write all dirty resident intervals to the file and drop them.
@@ -225,7 +325,9 @@ impl MatInner {
             if let Some(data) = slot.take() {
                 if dirty {
                     if let Some(file) = &self.file {
-                        let bytes = f64s_as_bytes(&data).to_vec();
+                        // Lossless at any width: stores already rounded
+                        // resident data through the storage precision.
+                        let bytes = serialize_interval(&data, self.elem);
                         self.fs
                             .write_async(file.clone(), self.byte_offset(iv), bytes)
                             .wait();
@@ -288,6 +390,7 @@ impl TasMatrix {
         let interval_rows = ctx.interval_rows;
         let n_intervals = n_rows.max(1).div_ceil(interval_rows);
         let em = ctx.em;
+        let elem = ctx.storage_elem_bytes();
         let resident = !em || ctx.cache_slots > 0;
         let file = em.then(|| ctx.fs.create(&format!("tas-{id}")));
         let slots: Vec<Mutex<Option<Vec<f64>>>> = (0..n_intervals)
@@ -309,8 +412,8 @@ impl TasMatrix {
                 ctx.fs
                     .write_async(
                         file.clone(),
-                        (iv * interval_rows * n_cols * 8) as u64,
-                        vec![0u8; len * 8],
+                        (iv * interval_rows * n_cols * elem) as u64,
+                        vec![0u8; len * elem],
                     )
                     .wait();
             }
@@ -320,6 +423,7 @@ impl TasMatrix {
             n_rows,
             n_cols,
             interval_rows,
+            elem,
             file,
             slots,
             resident: AtomicBool::new(resident),
@@ -357,6 +461,14 @@ impl TasMatrix {
         self.inner.resident.load(Ordering::Acquire)
     }
 
+    /// Serialized bytes per element of this matrix's storage (8 = f64,
+    /// 4 = f32) — fixed at creation from the context's
+    /// [`crate::safs::StoragePrecision`] (or 8 inside a
+    /// [`DenseCtx::scoped_full_precision`] scope).
+    pub fn elem_bytes(&self) -> usize {
+        self.inner.elem
+    }
+
     pub fn same_data(&self, other: &TasMatrix) -> bool {
         Arc::ptr_eq(&self.inner, &other.inner) || self.data_id == other.data_id
     }
@@ -384,13 +496,14 @@ impl TasMatrix {
         }
         let file = self.inner.file.as_ref().expect("non-resident without file");
         let len = self.interval_len(iv) * self.n_cols;
-        let buf = pool.get(len * 8);
+        let elem = self.inner.elem;
+        let buf = pool.get(len * elem);
         let bytes = self
             .ctx
             .fs
             .read_async(file.clone(), self.inner.byte_offset(iv), buf)
             .wait();
-        IntervalGuard::Owned(bytes)
+        IntervalGuard::Owned(widen_stored_bytes(bytes, elem, pool))
     }
 
     /// Byte range of interval `iv`'s load, for scheduling it through
@@ -408,7 +521,7 @@ impl TasMatrix {
         Some(crate::safs::ReadRange {
             file: file.clone(),
             offset: self.inner.byte_offset(iv),
-            len: self.interval_len(iv) * self.n_cols * 8,
+            len: self.interval_len(iv) * self.n_cols * self.inner.elem,
         })
     }
 
@@ -424,18 +537,25 @@ impl TasMatrix {
         }
         let file = self.inner.file.as_ref().expect("non-resident without file");
         let len = self.interval_len(iv) * self.n_cols;
-        let buf = pool.get(len * 8);
+        let elem = self.inner.elem;
+        let buf = pool.get(len * elem);
         Fetch::Pending(
             self.ctx
                 .fs
                 .read_async(file.clone(), self.inner.byte_offset(iv), buf),
+            elem,
         )
     }
 
-    /// Store interval `iv`.  Returns the buffer for pooling when the
-    /// write went to SSD.
-    pub fn store_interval(&self, iv: usize, data: Vec<f64>) {
+    /// Store interval `iv`.  This is the precision write boundary: under
+    /// f32 storage the data rounds through f32 here — including on the
+    /// resident path, so cached bits equal what a store+load round trip
+    /// would produce and eviction flushes are lossless.
+    pub fn store_interval(&self, iv: usize, mut data: Vec<f64>) {
         debug_assert_eq!(data.len(), self.interval_len(iv) * self.n_cols);
+        if self.inner.elem == 4 {
+            round_to_f32(&mut data);
+        }
         if self.inner.resident.load(Ordering::Acquire) {
             let mut slot = self.inner.slots[iv].lock().unwrap();
             match slot.as_mut() {
@@ -448,7 +568,7 @@ impl TasMatrix {
             self.inner.dirty.store(true, Ordering::Release);
         } else {
             let file = self.inner.file.as_ref().expect("non-resident without file");
-            let bytes = f64s_as_bytes(&data).to_vec();
+            let bytes = serialize_interval(&data, self.inner.elem);
             self.ctx
                 .fs
                 .write_async(file.clone(), self.inner.byte_offset(iv), bytes)
@@ -468,6 +588,11 @@ impl TasMatrix {
             let mut slot = self.inner.slots[iv].lock().unwrap();
             if let Some(data) = slot.as_mut() {
                 f(data);
+                if self.inner.elem == 4 {
+                    // Same write boundary as store_interval: the
+                    // resident fast path must not dodge the rounding.
+                    round_to_f32(data);
+                }
                 self.inner.dirty.store(true, Ordering::Release);
                 return;
             }
@@ -554,17 +679,23 @@ impl<'a> IntervalGuard<'a> {
     }
 }
 
-/// An in-flight interval load.
+/// An in-flight interval load.  A pending fetch remembers its matrix's
+/// element width so [`Fetch::finish`] can widen f32-stored bytes to the
+/// f64 bytes [`IntervalGuard::Owned`] holds.
 pub enum Fetch<'a> {
     Ready(IntervalGuard<'a>),
-    Pending(crate::safs::IoTicket),
+    Pending(crate::safs::IoTicket, usize),
 }
 
 impl<'a> Fetch<'a> {
     pub fn finish(self) -> IntervalGuard<'a> {
         match self {
             Fetch::Ready(g) => g,
-            Fetch::Pending(t) => IntervalGuard::Owned(t.wait()),
+            Fetch::Pending(t, elem) => {
+                let bytes = t.wait();
+                let mut pool = BufferPool::new(false);
+                IntervalGuard::Owned(widen_stored_bytes(bytes, elem, &mut pool))
+            }
         }
     }
 }
@@ -720,6 +851,78 @@ mod tests {
         assert_eq!(a.to_colmajor(), b.to_colmajor());
         let vals = a.to_colmajor();
         assert!(vals.iter().any(|&x| x != 0.0));
+    }
+
+    fn f32_ctx(em: bool, interval_rows: usize, cache_slots: usize) -> Arc<DenseCtx> {
+        let mut cfg = SafsConfig::untimed();
+        cfg.storage_precision = crate::safs::StoragePrecision::F32;
+        let fs = Safs::new(cfg);
+        DenseCtx::with(fs, em, interval_rows, 1, 2, cache_slots, Arc::new(NativeKernels))
+    }
+
+    #[test]
+    fn f32_storage_halves_interval_bytes() {
+        // Write-through EM (no cache): both the zero materialization and
+        // the stores serialize at 4 bytes/element; reads load 4.
+        let ctx = f32_ctx(true, 32, 0);
+        let m = TasMatrix::from_fn(&ctx, 64, 2, |r, _| r as f64);
+        assert_eq!(m.elem_bytes(), 4);
+        let written = ctx.fs.stats().bytes_written;
+        assert_eq!(written, 2 * 64 * 2 * 4, "zero-init + stores at f32 width");
+        let before = ctx.fs.stats().bytes_read;
+        let _ = m.to_colmajor();
+        assert_eq!(ctx.fs.stats().bytes_read - before, 64 * 2 * 4);
+    }
+
+    #[test]
+    fn f32_storage_rounds_at_store_and_roundtrips() {
+        // 0.1 is not representable in f32: resident and evicted reads
+        // must agree on the *rounded* value (the store boundary rounds
+        // even while resident).
+        for em in [false, true] {
+            let ctx = f32_ctx(em, 32, 1);
+            let m = TasMatrix::from_fn(&ctx, 40, 1, |r, _| 0.1 + r as f64);
+            let expect = |r: usize| (0.1 + r as f64) as f32 as f64;
+            assert_eq!(m.get(3, 0), expect(3));
+            if em {
+                m.flush();
+                assert!(!m.is_resident());
+                assert_eq!(m.get(3, 0), expect(3), "post-eviction bits unchanged");
+                assert_eq!(m.get(35, 0), expect(35));
+            }
+        }
+    }
+
+    #[test]
+    fn f32_update_interval_rounds_resident_fast_path() {
+        let ctx = f32_ctx(false, 32, 1);
+        let m = TasMatrix::zeros(&ctx, 10, 1);
+        let mut pool = BufferPool::new(false);
+        m.update_interval(0, &mut pool, |d| d[0] = 0.1);
+        assert_eq!(m.get(0, 0), 0.1f32 as f64);
+    }
+
+    #[test]
+    fn full_precision_scope_overrides_f32_storage() {
+        let ctx = f32_ctx(true, 32, 0);
+        let m = ctx.scoped_full_precision(|| TasMatrix::from_fn(&ctx, 32, 1, |r, _| 0.1 + r as f64));
+        assert_eq!(m.elem_bytes(), 8);
+        assert_eq!(m.get(5, 0), 0.1 + 5.0, "no f32 floor inside the scope");
+        // Outside the scope the configured width applies again.
+        assert_eq!(TasMatrix::zeros(&ctx, 32, 1).elem_bytes(), 4);
+    }
+
+    #[test]
+    fn widen_stored_bytes_is_identity_at_f64() {
+        let mut pool = BufferPool::new(false);
+        let src = f64s_as_bytes(&[1.5, -2.25]).to_vec();
+        let ptr = src.as_ptr();
+        let out = widen_stored_bytes(src, 8, &mut pool);
+        assert_eq!(out.as_ptr(), ptr, "no copy at full width");
+        let narrow: Vec<u8> =
+            [0.1f32, -7.5].iter().flat_map(|x| x.to_le_bytes()).collect();
+        let wide = widen_stored_bytes(narrow, 4, &mut pool);
+        assert_eq!(cast_f64s(&wide), &[0.1f32 as f64, -7.5]);
     }
 
     #[test]

@@ -20,10 +20,12 @@
 use super::dense_eig::{sym_eig, Which};
 use super::operator::Operator;
 use super::ortho::{
-    expand_block_streamed, normalize_block, ortho_normalize_cached, BasisGramCache,
+    expand_block_streamed, normalize_block, ortho_normalize, ortho_normalize_cached,
+    BasisGramCache,
 };
 use crate::dense::{
-    mv_times_mat_add_mv, tas::mv_random, DenseCtx, FusedPipeline, SmallMat, TasMatrix,
+    mv_times_mat_add_mv, mv_trans_mv, tas::mv_random, DenseCtx, FusedPipeline, SmallMat,
+    TasMatrix,
 };
 use std::sync::Arc;
 
@@ -41,6 +43,17 @@ pub struct EigenConfig {
     pub which: Which,
     pub seed: u64,
     pub compute_eigenvectors: bool,
+    /// Extra full-f64 Rayleigh–Ritz refinement sweeps over the converged
+    /// Ritz pairs (0 = off, the default — the f64 path is then bitwise
+    /// identical to the pre-refinement solver).  Each sweep copies the
+    /// Ritz block into full-width storage
+    /// ([`DenseCtx::scoped_full_precision`]), re-orthonormalizes,
+    /// re-applies the operator and re-solves the projected problem, so
+    /// under `--precision f32` the refined pairs are not floored by the
+    /// narrowed subspace the solver iterated in.  Sweeps that do not
+    /// strictly improve the worst residual are rejected and stop the
+    /// loop.
+    pub refine_steps: usize,
 }
 
 impl EigenConfig {
@@ -55,6 +68,7 @@ impl EigenConfig {
             which: Which::LargestMagnitude,
             seed: 0xE16E,
             compute_eigenvectors: false,
+            refine_steps: 0,
         }
     }
 }
@@ -67,6 +81,10 @@ pub struct EigenResult {
     pub operator_applies: u64,
     /// Worst top-nev residual after each restart (convergence curve).
     pub history: Vec<f64>,
+    /// Worst residual before refinement and after each *accepted*
+    /// refinement sweep — strictly decreasing by construction; empty
+    /// when `refine_steps == 0`.
+    pub refine_history: Vec<f64>,
     /// Ritz vectors (nev columns in ≤b-wide blocks) if requested.
     pub eigenvectors: Option<Vec<TasMatrix>>,
 }
@@ -196,14 +214,30 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
             cfg.nev <= m && (0..cfg.nev).all(|i| res(i) <= tolerance(i));
 
         if converged || restart == cfg.max_restarts {
-            let eigenvalues: Vec<f64> = (0..cfg.nev.min(m)).map(|i| theta[order[i]]).collect();
-            let residuals: Vec<f64> = (0..cfg.nev.min(m)).map(res).collect();
-            let eigenvectors = cfg.compute_eigenvectors.then(|| {
+            let mut eigenvalues: Vec<f64> =
+                (0..cfg.nev.min(m)).map(|i| theta[order[i]]).collect();
+            let mut residuals: Vec<f64> = (0..cfg.nev.min(m)).map(res).collect();
+            // Refinement needs the Ritz vectors even when the caller did
+            // not ask for them back.
+            let want_vectors = cfg.compute_eigenvectors || cfg.refine_steps > 0;
+            let mut eigenvectors = want_vectors.then(|| {
                 let cols: Vec<usize> = (0..cfg.nev.min(m)).map(|i| order[i]).collect();
                 ctx.io_phases.scope_tracked(&ctx.fs, &ctx.mem, "restart", || {
                     ritz_vectors(&basis[..basis.len() - 1], &u, &cols, ctx, b)
                 })
             });
+            let mut refine_history = Vec::new();
+            if cfg.refine_steps > 0 {
+                let x = eigenvectors.take().unwrap();
+                let (rx, rtheta, rres, rhist) =
+                    ctx.io_phases.scope_tracked(&ctx.fs, &ctx.mem, "refine", || {
+                        refine_ritz_pairs(op, ctx, cfg, x, eigenvalues, residuals)
+                    });
+                eigenvalues = rtheta;
+                residuals = rres;
+                refine_history = rhist;
+                eigenvectors = cfg.compute_eigenvectors.then_some(rx);
+            }
             return EigenResult {
                 eigenvalues,
                 residuals,
@@ -211,6 +245,7 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
                 restarts: restart,
                 operator_applies: op.applies(),
                 history,
+                refine_history,
                 eigenvectors,
             };
         }
@@ -310,6 +345,113 @@ fn ritz_vectors(
     outs
 }
 
+/// Full-f64 iterative refinement of converged Ritz pairs (the
+/// mixed-precision recovery step of Sgherzi et al.: low-precision
+/// iteration, high-precision polish).  Per sweep:
+///
+/// 1. copy the Ritz blocks into full-width storage inside
+///    [`DenseCtx::scoped_full_precision`] — the accumulation was always
+///    f64, so the only error being removed is the storage-width floor of
+///    blocks written during the solve under `--precision f32`;
+/// 2. CGS2-orthonormalize the copies (Q), apply the operator (Z = A·Q);
+/// 3. Rayleigh–Ritz on span(Q): `T = QᵀZ`, `(θ', U) = eig(T)`, with
+///    exact residuals from `ZᵀZ`:
+///    `‖A·x' − θ'·x'‖² = uᵀZᵀZu − 2θ'·uᵀTu + θ'²`;
+/// 4. accept the sweep only if the worst residual strictly improves
+///    (rotating Q by the chosen Ritz columns of U), else stop — the
+///    returned history is therefore strictly decreasing.
+///
+/// Returns `(vectors, eigenvalues, residuals, history)`; history[0] is
+/// the pre-refinement worst residual.
+fn refine_ritz_pairs(
+    op: &dyn Operator,
+    ctx: &Arc<DenseCtx>,
+    cfg: &EigenConfig,
+    x: Vec<TasMatrix>,
+    theta: Vec<f64>,
+    res: Vec<f64>,
+) -> (Vec<TasMatrix>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let b = cfg.block_size.max(1);
+    let nev = theta.len();
+    let mut x = x;
+    let mut theta = theta;
+    let mut res = res;
+    let mut worst = res.iter().fold(0.0f64, |a, &r| a.max(r));
+    let mut history = vec![worst];
+    for step in 0..cfg.refine_steps {
+        let (q, t, zz) = ctx.scoped_full_precision(|| {
+            // Full-width working copies: X itself may live in narrowed
+            // storage, and the ortho writes below must not round.
+            let q: Vec<TasMatrix> = x
+                .iter()
+                .map(|xi| {
+                    let y = TasMatrix::zeros_for_overwrite(ctx, xi.n_rows, xi.n_cols);
+                    mv_times_mat_add_mv(1.0, &[xi], &SmallMat::identity(xi.n_cols), 0.0, &y);
+                    y
+                })
+                .collect();
+            for (j, qj) in q.iter().enumerate() {
+                let seed = cfg.seed ^ (0xEF00 + (step * 64 + j) as u64);
+                if j == 0 {
+                    normalize_block(qj, &[], seed);
+                } else {
+                    let prev: Vec<&TasMatrix> = q[..j].iter().collect();
+                    ortho_normalize(&prev, qj, seed);
+                }
+            }
+            let z: Vec<TasMatrix> = q.iter().map(|qj| op.apply(ctx, qj)).collect();
+            let qrefs: Vec<&TasMatrix> = q.iter().collect();
+            let zrefs: Vec<&TasMatrix> = z.iter().collect();
+            let mtot: usize = q.iter().map(|m| m.n_cols).sum();
+            let mut t = SmallMat::zeros(mtot, mtot);
+            let mut zz = SmallMat::zeros(mtot, mtot);
+            let mut c0 = 0;
+            for zj in &z {
+                t.set_block(0, c0, &mv_trans_mv(1.0, &qrefs, zj));
+                zz.set_block(0, c0, &mv_trans_mv(1.0, &zrefs, zj));
+                c0 += zj.n_cols;
+            }
+            for mat in [&mut t, &mut zz] {
+                for i in 0..mtot {
+                    for j in 0..i {
+                        let avg = 0.5 * (mat.at(i, j) + mat.at(j, i));
+                        *mat.at_mut(i, j) = avg;
+                        *mat.at_mut(j, i) = avg;
+                    }
+                }
+            }
+            (q, t, zz)
+        });
+        let mtot = t.rows;
+        let (theta_new, u) = sym_eig(&t);
+        let order = cfg.which.order(&theta_new);
+        let pick: Vec<usize> = (0..nev.min(mtot)).map(|i| order[i]).collect();
+        let res_of = |col: usize| -> f64 {
+            let th = theta_new[col];
+            let (mut utu, mut uzzu) = (0.0f64, 0.0f64);
+            for r in 0..mtot {
+                for c in 0..mtot {
+                    let w = u.at(r, col) * u.at(c, col);
+                    utu += w * t.at(r, c);
+                    uzzu += w * zz.at(r, c);
+                }
+            }
+            (uzzu - 2.0 * th * utu + th * th).max(0.0).sqrt()
+        };
+        let new_res: Vec<f64> = pick.iter().map(|&c| res_of(c)).collect();
+        let new_worst = new_res.iter().fold(0.0f64, |a, &r| a.max(r));
+        if new_worst >= worst {
+            break; // no strict improvement: keep the current pairs
+        }
+        x = ctx.scoped_full_precision(|| ritz_vectors(&q, &u, &pick, ctx, b));
+        theta = pick.iter().map(|&c| theta_new[c]).collect();
+        res = new_res;
+        worst = new_worst;
+        history.push(worst);
+    }
+    (x, theta, res, history)
+}
+
 /// Dense fallback for problems small enough that the Krylov basis would
 /// span the whole space: apply the operator to identity blocks to
 /// materialize A, then solve directly.
@@ -352,6 +494,7 @@ fn solve_dense_fallback(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfi
         restarts: 0,
         operator_applies: op.applies(),
         history: vec![0.0],
+        refine_history: Vec::new(),
         eigenvectors,
     }
 }
@@ -400,6 +543,7 @@ mod tests {
             which: Which::LargestAlgebraic,
             seed: 3,
             compute_eigenvectors: true,
+            refine_steps: 0,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged, "history: {:?}", res.history);
@@ -441,6 +585,7 @@ mod tests {
             which: Which::LargestMagnitude,
             seed: 5,
             compute_eigenvectors: false,
+            refine_steps: 0,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged, "history {:?}", res.history);
@@ -476,6 +621,7 @@ mod tests {
                 which: Which::LargestMagnitude,
                 seed: 6,
                 compute_eigenvectors: false,
+                refine_steps: 0,
             };
             solve(&op, &ctx, &cfg)
         };
@@ -512,6 +658,7 @@ mod tests {
                 which: Which::LargestMagnitude,
                 seed: 6,
                 compute_eigenvectors: true,
+                refine_steps: 0,
             };
             solve(&op, &ctx, &cfg)
         };
@@ -554,6 +701,7 @@ mod tests {
                 which: Which::LargestMagnitude,
                 seed: 21,
                 compute_eigenvectors: false,
+                refine_steps: 0,
             };
             solve(&op, &ctx, &cfg)
         };
@@ -587,6 +735,7 @@ mod tests {
             which: Which::LargestMagnitude,
             seed: 16,
             compute_eigenvectors: false,
+            refine_steps: 0,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged);
@@ -614,6 +763,7 @@ mod tests {
             which: Which::LargestMagnitude,
             seed: 14,
             compute_eigenvectors: true,
+            refine_steps: 0,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged);
@@ -640,6 +790,7 @@ mod tests {
             which: Which::LargestAlgebraic,
             seed: 8,
             compute_eigenvectors: true,
+            refine_steps: 0,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged);
@@ -672,6 +823,7 @@ mod tests {
             which: Which::LargestMagnitude,
             seed: 12,
             compute_eigenvectors: false,
+            refine_steps: 0,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged, "{:?}", res.history);
@@ -684,6 +836,75 @@ mod tests {
                 res.eigenvalues,
                 &expect[..3]
             );
+        }
+    }
+
+    #[test]
+    fn refinement_reports_monotonic_history_and_valid_pairs() {
+        let mut rng = Rng::new(17);
+        let coo = gnm_undirected(150, 600, &mut rng);
+        let run = |refine_steps: usize| {
+            let op = SpmmOperator::new(build_mem(&coo), SpmmOpts::default(), 2);
+            let ctx = DenseCtx::mem_for_tests(64);
+            let cfg = EigenConfig {
+                nev: 4,
+                block_size: 2,
+                num_blocks: 8,
+                // Loose tol so refinement has room to tighten.
+                tol: 1e-4,
+                max_restarts: 300,
+                which: Which::LargestMagnitude,
+                seed: 19,
+                compute_eigenvectors: true,
+                refine_steps,
+            };
+            (solve(&op, &ctx, &cfg), op, ctx)
+        };
+        let (base, _, _) = run(0);
+        assert!(base.converged);
+        assert!(base.refine_history.is_empty());
+        let (refined, op, ctx) = run(3);
+        assert!(refined.converged);
+        // history[0] is the pre-refinement worst residual; each accepted
+        // sweep strictly improves it.
+        assert!(!refined.refine_history.is_empty());
+        for w in refined.refine_history.windows(2) {
+            assert!(w[1] < w[0], "non-monotonic refine history {:?}", refined.refine_history);
+        }
+        let reported_worst =
+            refined.residuals.iter().fold(0.0f64, |a, &r| a.max(r));
+        let final_hist = *refined.refine_history.last().unwrap();
+        assert!(
+            (reported_worst - final_hist).abs() < 1e-12,
+            "residuals {reported_worst} vs history tail {final_hist}"
+        );
+        // Same eigenvalues as the unrefined run (refinement polishes,
+        // never re-targets), and true residuals match the report.
+        for (a, b) in base.eigenvalues.iter().zip(&refined.eigenvalues) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        let x = refined.eigenvectors.as_ref().unwrap();
+        let refs: Vec<&TasMatrix> = x.iter().collect();
+        let mut col = 0;
+        for xb in &refs {
+            let y = op.apply(&ctx, xb);
+            let xv = xb.to_colmajor();
+            let yv = y.to_colmajor();
+            let n = xb.n_rows;
+            for j in 0..xb.n_cols {
+                let theta = refined.eigenvalues[col + j];
+                let err: f64 = (0..n)
+                    .map(|i| (yv[j * n + i] - theta * xv[j * n + i]).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                assert!(
+                    err <= refined.residuals[col + j] * 1.5 + 1e-10,
+                    "col {}: true residual {err} vs reported {}",
+                    col + j,
+                    refined.residuals[col + j]
+                );
+            }
+            col += xb.n_cols;
         }
     }
 }

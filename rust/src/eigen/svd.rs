@@ -32,6 +32,10 @@ pub struct SvdResult {
     pub operator_applies: u64,
     pub right_vectors: Option<Vec<TasMatrix>>,
     pub history: Vec<f64>,
+    /// Refinement convergence curve passed through from the eigensolver
+    /// (worst residual of the underlying AᵀA problem; empty when
+    /// `refine_steps == 0`).
+    pub refine_history: Vec<f64>,
 }
 
 /// Compute the top `cfg.nev` singular values of the operator `AᵀA`
@@ -52,6 +56,7 @@ pub fn svd(op: &GramOperator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> SvdResu
         operator_applies: res.operator_applies,
         right_vectors: res.eigenvectors,
         history: res.history,
+        refine_history: res.refine_history,
     }
 }
 
@@ -126,6 +131,7 @@ mod tests {
             which: Which::LargestAlgebraic,
             seed: 31,
             compute_eigenvectors: true,
+            refine_steps: 0,
         };
         let res = svd(&op, &ctx, &cfg);
         assert!(res.converged, "{:?}", res.history);
@@ -174,6 +180,7 @@ mod tests {
             which: Which::LargestAlgebraic,
             seed: 41,
             compute_eigenvectors: false,
+            refine_steps: 0,
         };
         let eager_im = {
             let ctx = DenseCtx::mem_for_tests(64);
@@ -212,6 +219,7 @@ mod tests {
             which: Which::LargestAlgebraic,
             seed: 33,
             compute_eigenvectors: false,
+            refine_steps: 0,
         };
         let im = {
             let ctx = DenseCtx::mem_for_tests(64);

@@ -18,7 +18,7 @@
 use crate::dense::{DenseCtx, DenseKernels, NativeKernels};
 use crate::graph::Dataset;
 use crate::metrics::MemTracker;
-use crate::safs::{IoBackend, Safs, SafsConfig, WaitMode};
+use crate::safs::{IoBackend, Safs, SafsConfig, StoragePrecision, WaitMode};
 use crate::sparse::{build_matrix_opts, BuildTarget, CooMatrix, SparseMatrix};
 use std::sync::Arc;
 
@@ -52,6 +52,13 @@ pub struct BenchCfg {
     /// Which I/O engine serves the array (FLASHEIGEN_IO_ENGINE / CLI
     /// `--io-engine`: `queued` | `threaded` | `inline`).
     pub io_backend: IoBackend,
+    /// Serialized element width of stored dense subspace intervals and
+    /// f64-native image values (FLASHEIGEN_PRECISION / CLI `--precision`:
+    /// `f64` | `f32`).  Accumulation is always f64 — this axis changes
+    /// only what is *stored*, so f32 halves the subspace bytes moved at
+    /// a bounded residual cost while `f64` stays bitwise-identical to
+    /// the historical default.
+    pub storage_precision: StoragePrecision,
 }
 
 impl Default for BenchCfg {
@@ -67,6 +74,7 @@ impl Default for BenchCfg {
             image_cache: 0,
             queue_depth: 32,
             io_backend: IoBackend::Queued,
+            storage_precision: StoragePrecision::F64,
         }
     }
 }
@@ -101,6 +109,12 @@ impl BenchCfg {
         {
             c.io_backend = b;
         }
+        if let Some(p) = std::env::var("FLASHEIGEN_PRECISION")
+            .ok()
+            .and_then(|v| StoragePrecision::from_name(&v))
+        {
+            c.storage_precision = p;
+        }
         c
     }
 
@@ -127,6 +141,7 @@ impl BenchCfg {
             read_ahead: self.read_ahead,
             image_cache_bytes: self.image_cache,
             gram_cache_split: true,
+            storage_precision: self.storage_precision,
         }
     }
 
@@ -188,6 +203,14 @@ mod tests {
         // 24 devices at 500/5 MB/s = 2.4 GB/s aggregate read.
         assert!((sc.read_bps * 24.0 - 2.4e9).abs() / 2.4e9 < 0.01);
         assert!((sc.latency - 100e-6).abs() < 1e-9); // NOT dilated
+    }
+
+    #[test]
+    fn precision_flows_into_safs_config() {
+        let mut c = BenchCfg::default();
+        assert_eq!(c.safs_config().storage_precision, StoragePrecision::F64);
+        c.storage_precision = StoragePrecision::F32;
+        assert_eq!(c.safs_config().storage_precision, StoragePrecision::F32);
     }
 
     #[test]

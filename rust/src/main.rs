@@ -63,6 +63,18 @@ COMMON OPTIONS:
                      engine (default 32; 1 = serial-per-device): how
                      many requests may be in flight against one device
                      before submission blocks on a completion
+  --precision <p>    storage precision of the on-SSD dense subspace and
+                     f64-native image values: f64 (default; bitwise-
+                     identical to the historical behaviour) | f32
+                     (halves the stored subspace bytes; every
+                     accumulation — SpMM, CGS2, Rayleigh-Ritz — still
+                     runs in f64, so residuals stay within the u32
+                     input-rounding bound checked by tests/precision.rs)
+  --refine <n>       f64 iterative-refinement sweeps applied to the
+                     converged Ritz pairs (default 0 = off): full-
+                     precision Rayleigh-Ritz passes that monotonically
+                     tighten the worst residual — the recovery knob for
+                     --precision f32 runs
   --sem              semi-external mode (matrix + subspace on SSDs)
   --eager            opt out of the DEFAULT fused + streamed §3.4 path:
                      run the eager Table-1 reference ops and the
@@ -101,7 +113,7 @@ fn main() {
         &[
             "graph", "scale", "nev", "block", "nblocks", "tol", "threads", "dilation",
             "cols", "exp", "seed", "read-ahead", "image-cache", "bench-json",
-            "queue-depth", "io-engine",
+            "queue-depth", "io-engine", "precision", "refine",
         ],
         &["sem", "xla", "eager", "fused", "streamed"],
     ) {
@@ -143,6 +155,10 @@ fn bench_cfg(args: &Args) -> Result<BenchCfg, String> {
     if let Some(name) = args.get("io-engine") {
         cfg.io_backend = flasheigen::safs::IoBackend::from_name(name)
             .ok_or_else(|| format!("unknown io engine '{name}' (queued|threaded|inline)"))?;
+    }
+    if let Some(name) = args.get("precision") {
+        cfg.storage_precision = flasheigen::safs::StoragePrecision::from_name(name)
+            .ok_or_else(|| format!("unknown precision '{name}' (f64|f32)"))?;
     }
     Ok(cfg)
 }
@@ -194,6 +210,7 @@ fn cmd_eigen(args: &Args, as_svd: bool) -> i32 {
             which: if as_svd { Which::LargestAlgebraic } else { Which::LargestMagnitude },
             seed: cfg.seed,
             compute_eigenvectors: false,
+            refine_steps: args.get_usize("refine", 0)?,
         };
         let fs = cfg.timed_safs();
         let kernels: Arc<dyn flasheigen::dense::DenseKernels> = if use_xla {
@@ -214,8 +231,9 @@ fn cmd_eigen(args: &Args, as_svd: bool) -> i32 {
         }
         let mode = if sem { "FE-SEM" } else { "FE-IM" };
         eprintln!(
-            "solving: {} nev={nev} b={} NB={} tol={:.0e} dense-kernels={} multivec={} operator={}",
+            "solving: {} nev={nev} b={} NB={} tol={:.0e} precision={} dense-kernels={} multivec={} operator={}",
             mode,
+            cfg.storage_precision.name(),
             ecfg.block_size,
             ecfg.num_blocks,
             ecfg.tol,
@@ -257,6 +275,9 @@ fn cmd_eigen(args: &Args, as_svd: bool) -> i32 {
             let (res, secs) = time_it(|| solve(&op, &ctx, &ecfg));
             println!("eigenvalues: {:?}", res.eigenvalues);
             println!("residuals:   {:?}", res.residuals);
+            if !res.refine_history.is_empty() {
+                println!("refine history (worst residual): {:?}", res.refine_history);
+            }
             println!(
                 "converged={} restarts={} operator applies={} runtime={}",
                 res.converged,
@@ -378,6 +399,9 @@ fn cmd_figures(args: &Args) -> i32 {
             // Cross-apply image residency ablation (budgets 0 / quarter
             // image / full image over repeated streamed SEM applies).
             emit(harness::fig9_imgcache(&cfg, 16.0, 4));
+            // Storage-precision ablation: f64 vs f32 SEM eigensolve at a
+            // pinned iteration count — bytes moved and worst residual.
+            emit(harness::fig9_precision(&cfg, 16.0, 2));
             ran = true;
         }
         if want("fig10") {
@@ -418,6 +442,7 @@ fn cmd_figures(args: &Args) -> i32 {
                         ("image_cache", Json::int(cfg.image_cache as i64)),
                         ("io_engine", Json::str(cfg.io_backend.name())),
                         ("queue_depth", Json::int(cfg.queue_depth as i64)),
+                        ("precision", Json::str(cfg.storage_precision.name())),
                         ("seed", Json::int(cfg.seed as i64)),
                     ]),
                 ),

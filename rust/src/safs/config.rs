@@ -59,6 +59,57 @@ impl IoBackend {
     }
 }
 
+/// On-SSD element width for the SEM image's f64-native edge weights and
+/// the dense subspace (§3.4's I/O bound): what precision bytes are
+/// *serialized* at, never what precision arithmetic runs at.  Every
+/// accumulation — SpMM, CGS2, Rayleigh–Ritz — stays f64 regardless;
+/// [`StoragePrecision::F32`] narrows values only at the write boundary
+/// and widens them back on load, halving subspace (and f64-weighted
+/// image) bytes and doubling the effective image-cache/staging capacity
+/// at a fixed budget.  Unweighted and f32-native-weighted images are
+/// byte-identical under both settings (their tile values are already
+/// ≤ 4 bytes), and the [`StoragePrecision::F64`] default leaves every
+/// path bitwise-unchanged.  CLI: `--precision`; env:
+/// `FLASHEIGEN_PRECISION`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoragePrecision {
+    /// Full-width storage (the default): load/store round-trips are
+    /// exact, so results are bitwise-identical to the pre-precision-axis
+    /// behaviour.
+    F64,
+    /// Narrow dense intervals and f64-native tile values to f32 on
+    /// store, widen to f64 on load.  Deterministic (bitwise-reproducible
+    /// run-to-run) but not comparable bitwise against F64 — the
+    /// precision test tier pins residual bounds instead.
+    F32,
+}
+
+impl StoragePrecision {
+    /// Parse a CLI `--precision` value.
+    pub fn from_name(s: &str) -> Option<StoragePrecision> {
+        match s {
+            "f64" => Some(StoragePrecision::F64),
+            "f32" => Some(StoragePrecision::F32),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoragePrecision::F64 => "f64",
+            StoragePrecision::F32 => "f32",
+        }
+    }
+
+    /// Serialized bytes per dense element (8 or 4).
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            StoragePrecision::F64 => 8,
+            StoragePrecision::F32 => 4,
+        }
+    }
+}
+
 /// Full SAFS + simulated-SSD-array configuration.
 #[derive(Clone, Debug)]
 pub struct SafsConfig {
@@ -140,6 +191,13 @@ pub struct SafsConfig {
     /// caching independently.  Purely an eviction-order hint: results
     /// stay bitwise identical either way.
     pub gram_cache_split: bool,
+    /// Serialized element width for the on-SSD dense subspace and the
+    /// SEM image's f64-native edge weights (see [`StoragePrecision`]).
+    /// Storage-only: all arithmetic stays f64, and the default
+    /// [`StoragePrecision::F64`] is bitwise-identical to the
+    /// pre-precision behaviour.  CLI: `--precision`; env:
+    /// `FLASHEIGEN_PRECISION`.
+    pub storage_precision: StoragePrecision,
 }
 
 impl Default for SafsConfig {
@@ -163,6 +221,7 @@ impl Default for SafsConfig {
             read_ahead: 2,
             image_cache_bytes: 0,
             gram_cache_split: true,
+            storage_precision: StoragePrecision::F64,
         }
     }
 }
@@ -283,6 +342,24 @@ mod tests {
         assert_eq!(c.buffer_align(), 4096); // 8 MiB stripe: sector cap
         c.stripe_block = 128;
         assert_eq!(c.buffer_align(), 128); // tiny test stripes align to themselves
+    }
+
+    #[test]
+    fn storage_precision_defaults_to_f64() {
+        // f32 storage is opt-in: the default keeps every byte count and
+        // every result bitwise-identical to the pre-precision behaviour.
+        assert_eq!(SafsConfig::default().storage_precision, StoragePrecision::F64);
+        assert_eq!(SafsConfig::untimed().storage_precision, StoragePrecision::F64);
+        assert_eq!(StoragePrecision::F64.elem_bytes(), 8);
+        assert_eq!(StoragePrecision::F32.elem_bytes(), 4);
+    }
+
+    #[test]
+    fn precision_names_roundtrip() {
+        for p in [StoragePrecision::F64, StoragePrecision::F32] {
+            assert_eq!(StoragePrecision::from_name(p.name()), Some(p));
+        }
+        assert_eq!(StoragePrecision::from_name("f16"), None);
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod stripe;
 
 pub use array::{IoStats, SsdArray};
 pub use buffer_pool::BufferPool;
-pub use config::{IoBackend, SafsConfig, WaitMode};
+pub use config::{IoBackend, SafsConfig, StoragePrecision, WaitMode};
 pub use file::{FileHandle, SafsFile};
 pub use image_cache::{ImageCache, ImageCacheCounters};
 pub use io::{IoEngine, IoRequest, IoTicket};

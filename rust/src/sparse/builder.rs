@@ -12,13 +12,24 @@ pub struct CooMatrix {
     pub n_rows: u64,
     pub n_cols: u64,
     pub entries: Vec<(u32, u32)>,
-    /// `None` = unweighted (all values 1.0).
-    pub values: Option<Vec<f32>>,
+    /// `None` = unweighted (all values 1.0).  Staged at full f64 width;
+    /// the stored width in the tile image is decided at build time (see
+    /// [`build_matrix_opts`]).
+    pub values: Option<Vec<f64>>,
+    /// `true` when the weights are f64-native ([`push_weighted_f64`]):
+    /// only then is the image's value region eligible for the
+    /// [`crate::safs::StoragePrecision`] axis.  f32-native weights
+    /// ([`push_weighted`]) always store at 4 bytes — an exact roundtrip —
+    /// so their images are byte-identical across precision modes.
+    ///
+    /// [`push_weighted`]: CooMatrix::push_weighted
+    /// [`push_weighted_f64`]: CooMatrix::push_weighted_f64
+    pub wide_values: bool,
 }
 
 impl CooMatrix {
     pub fn new(n_rows: u64, n_cols: u64) -> CooMatrix {
-        CooMatrix { n_rows, n_cols, entries: Vec::new(), values: None }
+        CooMatrix { n_rows, n_cols, entries: Vec::new(), values: None, wide_values: false }
     }
 
     pub fn nnz(&self) -> usize {
@@ -32,7 +43,16 @@ impl CooMatrix {
 
     pub fn push_weighted(&mut self, r: u32, c: u32, w: f32) {
         self.entries.push((r, c));
+        self.values.get_or_insert_with(Vec::new).push(w as f64);
+    }
+
+    /// Push an edge whose weight needs full f64 width.  The built image
+    /// stores such values at 8 bytes under the default `f64` storage
+    /// precision and narrows them to 4 bytes under `f32`.
+    pub fn push_weighted_f64(&mut self, r: u32, c: u32, w: f64) {
+        self.entries.push((r, c));
         self.values.get_or_insert_with(Vec::new).push(w);
+        self.wide_values = true;
     }
 
     /// Sort by (row, col) and remove duplicate coordinates (keeping the
@@ -68,6 +88,7 @@ impl CooMatrix {
             n_cols: self.n_rows,
             entries: self.entries.iter().map(|&(r, c)| (c, r)).collect(),
             values: self.values.clone(),
+            wide_values: self.wide_values,
         };
         t.sort_dedup();
         t
@@ -158,6 +179,19 @@ pub fn build_matrix_opts(
         (r as u64 / td, c as u64 / td, r, c)
     });
 
+    // Stored value width: 0 = unweighted, 4 = f32-native weights (exact
+    // roundtrip — byte-identical image across precision modes), and for
+    // f64-native weights the filesystem's storage precision decides
+    // (in-memory images keep full width; §storage-precision contract in
+    // `dense/tas.rs`).
+    let value_elem = match (&coo.values, coo.wide_values) {
+        (None, _) => 0usize,
+        (Some(_), false) => 4,
+        (Some(_), true) => match &target {
+            BuildTarget::Safs(fs, _) => fs.cfg().storage_precision.elem_bytes(),
+            BuildTarget::Mem => 8,
+        },
+    };
     let has_values = coo.values.is_some();
     let mut image: Vec<u8> = Vec::new(); // used for Mem target
     let mut index: Vec<TileRowMeta> = Vec::with_capacity(num_tile_rows);
@@ -188,7 +222,7 @@ pub fn build_matrix_opts(
             let (_, c0) = coo.entries[idx[pos] as usize];
             let tile_col = c0 as u64 / td;
             let mut local: Vec<(u16, u16)> = Vec::new();
-            let mut local_vals: Vec<f32> = Vec::new();
+            let mut local_vals: Vec<f64> = Vec::new();
             while pos < idx.len() {
                 let i = idx[pos] as usize;
                 let (r, c) = coo.entries[i];
@@ -207,6 +241,7 @@ pub fn build_matrix_opts(
                 has_values.then_some(&local_vals[..]),
                 tile_dim,
                 coo_hybrid,
+                value_elem.max(4), // ignored when unweighted
             );
             tiles.push((tile_col as u32, payload));
         }
@@ -234,7 +269,7 @@ pub fn build_matrix_opts(
         n_cols: coo.n_cols,
         nnz: coo.entries.len() as u64,
         tile_dim,
-        has_values,
+        value_elem,
         index,
         col_offsets,
         col_ids,
@@ -277,7 +312,7 @@ mod tests {
         assert_eq!(m.nnz, coo.nnz() as u64);
         assert_eq!(m.num_tile_rows(), 7); // ceil(100/16)
         let triples = m.to_triples();
-        let expect: Vec<(u64, u64, f32)> = coo
+        let expect: Vec<(u64, u64, f64)> = coo
             .entries
             .iter()
             .map(|&(r, c)| (r as u64, c as u64, 1.0))
@@ -295,6 +330,51 @@ mod tests {
         for (i, &(r, c)) in coo.entries.iter().enumerate() {
             assert_eq!(triples[i], (r as u64, c as u64, vals[i]));
         }
+    }
+
+    #[test]
+    fn f32_native_weights_store_at_4_bytes() {
+        let mut rng = Rng::new(21);
+        let coo = random_coo(&mut rng, 100, 500, true);
+        assert!(!coo.wide_values);
+        let m = build_matrix(&coo, 32, BuildTarget::Mem);
+        assert_eq!(m.value_elem, 4);
+        // Exact roundtrip: f32-native weights survive the f64 staging.
+        let vals = coo.values.as_ref().unwrap();
+        for (i, t) in m.to_triples().iter().enumerate() {
+            assert_eq!(t.2, vals[i]);
+        }
+    }
+
+    #[test]
+    fn f64_native_weights_follow_storage_precision() {
+        let mut coo = CooMatrix::new(64, 64);
+        for i in 0..64u32 {
+            coo.push_weighted_f64(i, (i * 7) % 64, 0.1 + i as f64);
+        }
+        coo.sort_dedup();
+        assert!(coo.wide_values);
+
+        // Mem target keeps full width; 0.1 is not f32-representable.
+        let m = build_matrix(&coo, 16, BuildTarget::Mem);
+        assert_eq!(m.value_elem, 8);
+        assert_eq!(m.to_triples()[0].2, 0.1);
+
+        // Safs target follows the filesystem's storage precision.
+        let fs64 = Safs::new(SafsConfig::untimed());
+        let m64 = build_matrix(&coo, 16, BuildTarget::Safs(&fs64, "w"));
+        assert_eq!(m64.value_elem, 8);
+        let mut cfg = SafsConfig::untimed();
+        cfg.storage_precision = crate::safs::StoragePrecision::F32;
+        let fs32 = Safs::new(cfg);
+        let m32 = build_matrix(&coo, 16, BuildTarget::Safs(&fs32, "w"));
+        assert_eq!(m32.value_elem, 4);
+        assert_eq!(m32.to_triples()[0].2, 0.1f32 as f64);
+        // Narrowing the value region shrinks the image: 4 bytes per nnz.
+        assert_eq!(
+            m64.storage_bytes() - m32.storage_bytes(),
+            4 * coo.nnz() as u64
+        );
     }
 
     #[test]
@@ -319,7 +399,7 @@ mod tests {
         for tr in 0..m.num_tile_rows() {
             m.read_tile_row(tr, &mut buf);
             let from_image: Vec<u32> =
-                crate::sparse::TileRowView::new(&buf, m.has_values).map(|(c, _)| c).collect();
+                crate::sparse::TileRowView::new(&buf, m.value_elem).map(|(c, _)| c).collect();
             assert_eq!(m.tile_cols(tr), &from_image[..], "tile row {tr}");
             assert!(m.tile_cols(tr).windows(2).all(|w| w[0] < w[1]), "ascending");
         }
@@ -343,7 +423,7 @@ mod tests {
         assert!(coo.is_symmetric());
         // Values must be symmetric too: A[r,c] == A[c,r].
         let vals = coo.values.as_ref().unwrap();
-        let map: std::collections::HashMap<(u32, u32), f32> =
+        let map: std::collections::HashMap<(u32, u32), f64> =
             coo.entries.iter().copied().zip(vals.iter().copied()).collect();
         for (&(r, c), &v) in coo.entries.iter().zip(vals.iter()) {
             assert_eq!(map[&(c, r)], v, "asymmetric value at ({r},{c})");

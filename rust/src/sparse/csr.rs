@@ -13,7 +13,9 @@ pub struct CsrMatrix {
     pub n_cols: u64,
     pub row_ptr: Vec<u64>,
     pub col_idx: Vec<u32>,
-    pub values: Option<Vec<f32>>,
+    /// Full-width values (the in-RAM baselines are not subject to the
+    /// storage-precision axis).
+    pub values: Option<Vec<f64>>,
 }
 
 impl CsrMatrix {
@@ -47,7 +49,7 @@ impl CsrMatrix {
     }
 
     /// Values of row `r` (None if unweighted).
-    pub fn row_values(&self, r: usize) -> Option<&[f32]> {
+    pub fn row_values(&self, r: usize) -> Option<&[f64]> {
         self.values
             .as_ref()
             .map(|v| &v[self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize])
@@ -63,7 +65,7 @@ impl CsrMatrix {
     /// Actual bytes of this in-memory representation.
     pub fn storage_bytes(&self) -> u64 {
         (self.row_ptr.len() * 8 + self.col_idx.len() * 4) as u64
-            + self.values.as_ref().map_or(0, |v| v.len() as u64 * 4)
+            + self.values.as_ref().map_or(0, |v| v.len() as u64 * 8)
     }
 }
 
@@ -97,8 +99,8 @@ mod tests {
         coo.push_weighted(1, 1, 3.0);
         coo.sort_dedup();
         let csr = CsrMatrix::from_coo(&coo);
-        assert_eq!(csr.row_values(0), Some(&[2.0f32][..]));
-        assert_eq!(csr.row_values(1), Some(&[3.0f32][..]));
+        assert_eq!(csr.row_values(0), Some(&[2.0f64][..]));
+        assert_eq!(csr.row_values(1), Some(&[3.0f64][..]));
     }
 
     #[test]

@@ -38,7 +38,10 @@ pub struct SparseMatrix {
     pub n_cols: u64,
     pub nnz: u64,
     pub tile_dim: usize,
-    pub has_values: bool,
+    /// Stored width of the per-nonzero value region: 0 = unweighted, 4 =
+    /// f32, 8 = f64 (f64-native weights under full-width storage
+    /// precision).  Fixed at build time for the whole image.
+    pub value_elem: usize,
     /// One entry per tile row; kept in RAM during multiplication (§3.3.1:
     /// "the matrix index requires a very small storage size").
     pub index: Vec<TileRowMeta>,
@@ -127,8 +130,8 @@ impl SparseMatrix {
         let mut buf = Vec::new();
         for i in 0..self.num_tile_rows() {
             self.read_tile_row(i, &mut buf);
-            for (_, view) in TileRowView::new(&buf, self.has_values) {
-                view.for_each(|_, _, v| total += v as f64);
+            for (_, view) in TileRowView::new(&buf, self.value_elem) {
+                view.for_each(|_, _, v| total += v);
             }
         }
         total
@@ -136,13 +139,13 @@ impl SparseMatrix {
 
     /// Collect all nonzeros as global (row, col, value) triples — test
     /// helper, O(nnz) memory.
-    pub fn to_triples(&self) -> Vec<(u64, u64, f32)> {
+    pub fn to_triples(&self) -> Vec<(u64, u64, f64)> {
         let mut out = Vec::with_capacity(self.nnz as usize);
         let mut buf = Vec::new();
         for i in 0..self.num_tile_rows() {
             let row_base = (i * self.tile_dim) as u64;
             self.read_tile_row(i, &mut buf);
-            for (tile_col, view) in TileRowView::new(&buf, self.has_values) {
+            for (tile_col, view) in TileRowView::new(&buf, self.value_elem) {
                 let col_base = tile_col as u64 * self.tile_dim as u64;
                 view.for_each(|r, c, v| out.push((row_base + r as u64, col_base + c as u64, v)));
             }
@@ -156,15 +159,17 @@ impl SparseMatrix {
 /// `(tile_col, TileView)`.
 pub struct TileRowView<'a> {
     bytes: &'a [u8],
-    has_values: bool,
+    value_elem: usize,
     remaining: usize,
     pos: usize,
 }
 
 impl<'a> TileRowView<'a> {
-    pub fn new(bytes: &'a [u8], has_values: bool) -> TileRowView<'a> {
+    /// `value_elem` is the image's stored value width
+    /// ([`SparseMatrix::value_elem`]): 0, 4, or 8.
+    pub fn new(bytes: &'a [u8], value_elem: usize) -> TileRowView<'a> {
         let ntiles = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
-        TileRowView { bytes, has_values, remaining: ntiles, pos: 8 }
+        TileRowView { bytes, value_elem, remaining: ntiles, pos: 8 }
     }
 }
 
@@ -183,7 +188,7 @@ impl<'a> Iterator for TileRowView<'a> {
                 as usize;
         let payload = &self.bytes[self.pos + 8..self.pos + 8 + len];
         self.pos += 8 + len;
-        Some((tile_col, TileView::parse(payload, self.has_values)))
+        Some((tile_col, TileView::parse(payload, self.value_elem)))
     }
 }
 
@@ -213,13 +218,13 @@ mod tests {
         let t1 = encode_tile(&[(3, 3)], None, 16);
         let row = assemble_tile_row(&[(0, t0), (5, t1)]);
         let tiles: Vec<(u32, usize)> =
-            TileRowView::new(&row, false).map(|(c, v)| (c, v.nnz())).collect();
+            TileRowView::new(&row, 0).map(|(c, v)| (c, v.nnz())).collect();
         assert_eq!(tiles, vec![(0, 2), (5, 1)]);
     }
 
     #[test]
     fn empty_tile_row() {
         let row = assemble_tile_row(&[]);
-        assert_eq!(TileRowView::new(&row, false).count(), 0);
+        assert_eq!(TileRowView::new(&row, 0).count(), 0);
     }
 }

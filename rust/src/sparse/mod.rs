@@ -9,4 +9,4 @@ pub mod tile;
 pub use builder::{build_matrix, build_matrix_opts, build_mem, BuildTarget, CooMatrix};
 pub use csr::CsrMatrix;
 pub use matrix::{SparseMatrix, Storage, TileRowMeta, TileRowView};
-pub use tile::{TileView, DEFAULT_TILE_DIM, MAX_TILE_DIM};
+pub use tile::{TileValues, TileView, DEFAULT_TILE_DIM, MAX_TILE_DIM};

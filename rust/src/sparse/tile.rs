@@ -12,8 +12,13 @@
 //!   tile): `(u16 row, u16 col)` pairs, stored behind the SCSR region,
 //!   avoiding the end-of-row conditional per nonzero.
 //!
-//! Optional `f32` values (weighted graphs) are stored together at the end
-//! of the tile, SCSR entries first then COO entries, in encoding order.
+//! Optional values (weighted graphs) are stored together at the end of
+//! the tile, SCSR entries first then COO entries, in encoding order.  The
+//! stored width is a per-matrix constant: 4-byte `f32` (the default, and
+//! the only width f32-native weights ever need) or 8-byte `f64` for
+//! f64-native weights under the full-width storage precision
+//! ([`crate::safs::StoragePrecision`]).  Accumulation is always f64:
+//! readers widen each value once on load ([`TileValues::get`]).
 //!
 //! Byte layout of one encoded tile (little-endian, 4-byte aligned):
 //!
@@ -22,8 +27,12 @@
 //! u32 coo_count    # of COO (row,col) pairs
 //! u16 × scsr_words SCSR stream (padded with one zero word to 4B align)
 //! (u16,u16) × coo_count
-//! f32 × nnz        only if the matrix stores values
+//! f32|f64 × nnz    only if the matrix stores values
 //! ```
+//!
+//! The value region starts 4-byte aligned but not necessarily 8-byte
+//! aligned, so f64 values are decoded per access from LE bytes rather
+//! than cast to a slice.
 
 /// Maximum tile dimension representable: the MSB of a `u16` flags a row
 /// header, leaving 15 bits → 32768.
@@ -37,21 +46,25 @@ const ROW_FLAG: u16 = 0x8000;
 
 /// Encode one tile from its nonzeros, which MUST be sorted by (row, col)
 /// and lie within `[0, dim)²`.  `values` must be `None` or aligned with
-/// `entries`.  Returns the encoded bytes (4-byte aligned length).
-pub fn encode_tile(entries: &[(u16, u16)], values: Option<&[f32]>, dim: usize) -> Vec<u8> {
-    encode_tile_opts(entries, values, dim, true)
+/// `entries`; they are stored at the default 4-byte (`f32`) width.
+/// Returns the encoded bytes (4-byte aligned length).
+pub fn encode_tile(entries: &[(u16, u16)], values: Option<&[f64]>, dim: usize) -> Vec<u8> {
+    encode_tile_opts(entries, values, dim, true, 4)
 }
 
 /// [`encode_tile`] with the COO hybrid optionally disabled — the
 /// "SCSR-only" baseline of the Fig. 6 ablation stores single-entry rows
-/// as one-header-one-column SCSR rows instead.
+/// as one-header-one-column SCSR rows instead — and an explicit stored
+/// value width (`value_elem` ∈ {4, 8}; ignored when `values` is `None`).
 pub fn encode_tile_opts(
     entries: &[(u16, u16)],
-    values: Option<&[f32]>,
+    values: Option<&[f64]>,
     dim: usize,
     coo_hybrid: bool,
+    value_elem: usize,
 ) -> Vec<u8> {
     assert!(dim <= MAX_TILE_DIM);
+    assert!(value_elem == 4 || value_elem == 8);
     if let Some(v) = values {
         assert_eq!(v.len(), entries.len());
     }
@@ -82,7 +95,7 @@ pub fn encode_tile_opts(
     let mut bytes = Vec::with_capacity(
         8 + scsr_padded * 2
             + coo_count * 4
-            + if values.is_some() { entries.len() * 4 } else { 0 },
+            + if values.is_some() { entries.len() * value_elem } else { 0 },
     );
     bytes.extend_from_slice(&(scsr_words as u32).to_le_bytes());
     bytes.extend_from_slice(&(coo_count as u32).to_le_bytes());
@@ -126,11 +139,57 @@ pub fn encode_tile_opts(
     }
     if let Some(vals) = values {
         for &k in &value_order {
-            bytes.extend_from_slice(&vals[k as usize].to_le_bytes());
+            // Narrow-at-store happens here and only here (4-byte width);
+            // every reader widens back to f64 via `TileValues::get`.
+            match value_elem {
+                4 => bytes.extend_from_slice(&(vals[k as usize] as f32).to_le_bytes()),
+                _ => bytes.extend_from_slice(&vals[k as usize].to_le_bytes()),
+            }
         }
     }
     debug_assert_eq!(bytes.len() % 4, 0);
     bytes
+}
+
+/// The value region of one tile, at its stored width.  Every accessor
+/// widens to f64 — accumulation precision is independent of storage
+/// precision.
+#[derive(Clone, Copy, Debug)]
+pub enum TileValues<'a> {
+    /// Unweighted matrix: every value reads as 1.0.
+    Unweighted,
+    /// 4-byte stored values.
+    F32(&'a [f32]),
+    /// 8-byte stored values as raw LE bytes — the value region is only
+    /// guaranteed 4-byte aligned, so records are decoded per access.
+    F64(&'a [u8]),
+}
+
+impl<'a> TileValues<'a> {
+    /// True when the tile carries no value region (unweighted).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        matches!(self, TileValues::Unweighted)
+    }
+
+    /// Value `i` in encoding order, widened to f64 (1.0 if unweighted).
+    #[inline]
+    pub fn get(&self, i: usize) -> f64 {
+        match self {
+            TileValues::Unweighted => 1.0,
+            TileValues::F32(v) => v[i] as f64,
+            TileValues::F64(b) => f64::from_le_bytes(b[i * 8..i * 8 + 8].try_into().unwrap()),
+        }
+    }
+
+    /// Materialize all values (test/debug helper; empty if unweighted).
+    pub fn to_vec(&self) -> Vec<f64> {
+        match self {
+            TileValues::Unweighted => Vec::new(),
+            TileValues::F32(v) => v.iter().map(|&x| x as f64).collect(),
+            TileValues::F64(b) => (0..b.len() / 8).map(|i| self.get(i)).collect(),
+        }
+    }
 }
 
 /// Zero-copy view over an encoded tile.
@@ -139,14 +198,14 @@ pub struct TileView<'a> {
     pub scsr: &'a [u16],
     /// COO pairs, flattened: `[r0, c0, r1, c1, ...]`.
     pub coo: &'a [u16],
-    /// Values in encoding order (SCSR first, then COO); empty if the
-    /// matrix is unweighted.
-    pub values: &'a [f32],
+    /// Values in encoding order (SCSR first, then COO).
+    pub values: TileValues<'a>,
 }
 
 impl<'a> TileView<'a> {
-    /// Parse an encoded tile.  `has_values` must match the encoder.
-    pub fn parse(bytes: &'a [u8], has_values: bool) -> TileView<'a> {
+    /// Parse an encoded tile.  `value_elem` is the stored value width (0
+    /// = unweighted, 4 = f32, 8 = f64) and must match the encoder.
+    pub fn parse(bytes: &'a [u8], value_elem: usize) -> TileView<'a> {
         let scsr_words = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
         let coo_count = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
         let scsr_padded = (scsr_words + 1) & !1;
@@ -154,11 +213,12 @@ impl<'a> TileView<'a> {
         let coo_end = scsr_end + coo_count * 4;
         let scsr = cast_u16(&bytes[8..8 + scsr_words * 2]);
         let coo = cast_u16(&bytes[scsr_end..coo_end]);
-        let values = if has_values {
-            let nnz = count_scsr_cols(scsr) + coo_count;
-            cast_f32(&bytes[coo_end..coo_end + nnz * 4])
-        } else {
-            &[]
+        let nnz = count_scsr_cols(scsr) + coo_count;
+        let values = match value_elem {
+            0 => TileValues::Unweighted,
+            4 => TileValues::F32(cast_f32(&bytes[coo_end..coo_end + nnz * 4])),
+            8 => TileValues::F64(&bytes[coo_end..coo_end + nnz * 8]),
+            _ => panic!("bad value width {value_elem}"),
         };
         TileView { scsr, coo, values }
     }
@@ -170,32 +230,25 @@ impl<'a> TileView<'a> {
     /// Visit every nonzero as (row, col, value); value is 1.0 when the
     /// tile is unweighted.  Iteration order = encoding order (matches
     /// `self.values`).
-    pub fn for_each(&self, mut f: impl FnMut(u16, u16, f32)) {
+    pub fn for_each(&self, mut f: impl FnMut(u16, u16, f64)) {
         let mut vi = 0usize;
-        let val = |vi: usize| -> f32 {
-            if self.values.is_empty() {
-                1.0
-            } else {
-                self.values[vi]
-            }
-        };
         let mut row = 0u16;
         for &w in self.scsr {
             if w & ROW_FLAG != 0 {
                 row = w & !ROW_FLAG;
             } else {
-                f(row, w, val(vi));
+                f(row, w, self.values.get(vi));
                 vi += 1;
             }
         }
         for pair in self.coo.chunks_exact(2) {
-            f(pair[0], pair[1], val(vi));
+            f(pair[0], pair[1], self.values.get(vi));
             vi += 1;
         }
     }
 
     /// Collect all nonzeros sorted by (row, col) — test/debug helper.
-    pub fn to_sorted_triples(&self) -> Vec<(u16, u16, f32)> {
+    pub fn to_sorted_triples(&self) -> Vec<(u16, u16, f64)> {
         let mut out = Vec::with_capacity(self.nnz());
         self.for_each(|r, c, v| out.push((r, c, v)));
         out.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
@@ -232,9 +285,9 @@ mod tests {
     use super::*;
     use crate::util::prop::run_prop;
 
-    fn roundtrip(entries: &[(u16, u16)], values: Option<&[f32]>) {
+    fn roundtrip(entries: &[(u16, u16)], values: Option<&[f64]>) {
         let bytes = encode_tile(entries, values, MAX_TILE_DIM);
-        let view = TileView::parse(&bytes, values.is_some());
+        let view = TileView::parse(&bytes, if values.is_some() { 4 } else { 0 });
         assert_eq!(view.nnz(), entries.len());
         let triples = view.to_sorted_triples();
         for (i, &(r, c)) in entries.iter().enumerate() {
@@ -253,7 +306,7 @@ mod tests {
     fn single_entry_rows_use_coo() {
         let entries = [(0u16, 5u16), (3, 1), (7, 7)];
         let bytes = encode_tile(&entries, None, 16);
-        let view = TileView::parse(&bytes, false);
+        let view = TileView::parse(&bytes, 0);
         assert_eq!(view.scsr.len(), 0);
         assert_eq!(view.coo.len(), 6);
         roundtrip(&entries, None);
@@ -263,7 +316,7 @@ mod tests {
     fn multi_entry_rows_use_scsr() {
         let entries = [(2u16, 1u16), (2, 3), (2, 9)];
         let bytes = encode_tile(&entries, None, 16);
-        let view = TileView::parse(&bytes, false);
+        let view = TileView::parse(&bytes, 0);
         assert_eq!(view.scsr.len(), 4); // 1 header + 3 cols
         assert_eq!(view.scsr[0], 2 | ROW_FLAG);
         assert_eq!(view.coo.len(), 0);
@@ -275,7 +328,7 @@ mod tests {
         let entries = [(0u16, 0u16), (1, 2), (1, 4), (5, 0), (9, 1), (9, 2), (9, 3)];
         roundtrip(&entries, None);
         let bytes = encode_tile(&entries, None, 16);
-        let view = TileView::parse(&bytes, false);
+        let view = TileView::parse(&bytes, 0);
         // rows 1 (2 entries) and 9 (3 entries) in SCSR; rows 0,5 in COO.
         assert_eq!(view.coo.len() / 2, 2);
         assert_eq!(count_scsr_cols(view.scsr), 5);
@@ -284,12 +337,30 @@ mod tests {
     #[test]
     fn values_follow_encoding_order() {
         let entries = [(0u16, 0u16), (1, 2), (1, 4)];
-        let vals = [10.0f32, 20.0, 30.0];
+        let vals = [10.0f64, 20.0, 30.0];
         roundtrip(&entries, Some(&vals));
         let bytes = encode_tile(&entries, Some(&vals), 16);
-        let view = TileView::parse(&bytes, true);
+        let view = TileView::parse(&bytes, 4);
         // SCSR row 1 first (vals 20,30), then COO row 0 (val 10).
-        assert_eq!(view.values, &[20.0, 30.0, 10.0]);
+        assert_eq!(view.values.to_vec(), vec![20.0, 30.0, 10.0]);
+    }
+
+    #[test]
+    fn f64_width_preserves_full_precision() {
+        let entries = [(0u16, 0u16), (1, 2), (1, 4)];
+        // 0.1 and 1/3 are not f32-representable.
+        let vals = [0.1f64, 1.0 / 3.0, 2.0f64.sqrt()];
+        let wide = encode_tile_opts(&entries, Some(&vals), 16, true, 8);
+        let view = TileView::parse(&wide, 8);
+        let got = view.to_sorted_triples();
+        for (i, &(r, c)) in entries.iter().enumerate() {
+            assert_eq!(got[i], (r, c, vals[i]));
+        }
+        // The narrow encoding rounds — and costs 4 fewer bytes per nnz.
+        let narrow = encode_tile_opts(&entries, Some(&vals), 16, true, 4);
+        assert_eq!(wide.len(), narrow.len() + 4 * entries.len());
+        let nv = TileView::parse(&narrow, 4);
+        assert_eq!(nv.to_sorted_triples()[0].2, 0.1f32 as f64);
     }
 
     #[test]
@@ -314,8 +385,8 @@ mod tests {
     #[test]
     fn scsr_only_mode_has_no_coo() {
         let entries = [(0u16, 5u16), (3, 1), (7, 7)];
-        let bytes = encode_tile_opts(&entries, None, 16, false);
-        let view = TileView::parse(&bytes, false);
+        let bytes = encode_tile_opts(&entries, None, 16, false, 4);
+        let view = TileView::parse(&bytes, 0);
         assert_eq!(view.coo.len(), 0);
         assert_eq!(view.scsr.len(), 6); // 3 × (header + col)
         assert_eq!(view.to_sorted_triples().len(), 3);
@@ -337,10 +408,10 @@ mod tests {
             entries.sort_unstable();
             entries.dedup();
             let weighted = g.bool();
-            let vals: Vec<f32> =
-                entries.iter().map(|&(r, c)| (r as f32) + 0.5 * c as f32).collect();
+            let vals: Vec<f64> =
+                entries.iter().map(|&(r, c)| (r as f64) + 0.5 * c as f64).collect();
             let bytes = encode_tile(&entries, weighted.then_some(&vals[..]), dim);
-            let view = TileView::parse(&bytes, weighted);
+            let view = TileView::parse(&bytes, if weighted { 4 } else { 0 });
             let triples = view.to_sorted_triples();
             if triples.len() != entries.len() {
                 return Err(format!("nnz {} != {}", triples.len(), entries.len()));

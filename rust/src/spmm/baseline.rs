@@ -60,7 +60,7 @@ pub fn spmm_csr(
 
 fn csr_row_fixed<const B: usize>(
     cols: &[u32],
-    vals: Option<&[f32]>,
+    vals: Option<&[f64]>,
     input: &DenseBlock,
     out_row: &mut [f64],
 ) {
@@ -75,7 +75,7 @@ fn csr_row_fixed<const B: usize>(
         }
         Some(vals) => {
             for (i, &c) in cols.iter().enumerate() {
-                let v = vals[i] as f64;
+                let v = vals[i];
                 let inp = input.row(c as usize);
                 for k in 0..B {
                     out_row[k] += v * inp[k];
@@ -87,13 +87,13 @@ fn csr_row_fixed<const B: usize>(
 
 fn csr_row_dyn(
     cols: &[u32],
-    vals: Option<&[f32]>,
+    vals: Option<&[f64]>,
     input: &DenseBlock,
     out_row: &mut [f64],
     b: usize,
 ) {
     for (i, &c) in cols.iter().enumerate() {
-        let v = vals.map(|v| v[i] as f64).unwrap_or(1.0);
+        let v = vals.map(|v| v[i]).unwrap_or(1.0);
         let inp = input.row(c as usize);
         for k in 0..b {
             out_row[k] += v * inp[k];
@@ -125,7 +125,7 @@ pub fn spmm_trilinos_like(
                 let vals = a.row_values(r);
                 let mut acc = 0.0f64;
                 for (i, &c) in cols.iter().enumerate() {
-                    let v = vals.map(|v| v[i] as f64).unwrap_or(1.0);
+                    let v = vals.map(|v| v[i]).unwrap_or(1.0);
                     acc += v * input.row(c as usize)[col];
                 }
                 out_row[col] = acc;
@@ -157,7 +157,7 @@ mod tests {
     fn spmm_ref(coo: &CooMatrix, input: &[f64], b: usize) -> Vec<f64> {
         let mut out = vec![0.0; coo.n_rows as usize * b];
         for (i, &(r, c)) in coo.entries.iter().enumerate() {
-            let v = coo.values.as_ref().map(|v| v[i] as f64).unwrap_or(1.0);
+            let v = coo.values.as_ref().map(|v| v[i]).unwrap_or(1.0);
             for k in 0..b {
                 out[r as usize * b + k] += v * input[c as usize * b + k];
             }

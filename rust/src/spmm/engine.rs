@@ -200,7 +200,7 @@ pub(crate) fn multiply_rows_from_source(
         let out_start = ri * td;
         let out_len = td.min(out_rows - out_start);
         let dst = &mut out_rowmajor[out_start * b..(out_start + out_len) * b];
-        for (tc, view) in TileRowView::new(img, matrix.has_values) {
+        for (tc, view) in TileRowView::new(img, matrix.value_elem) {
             let (iv, off, len) = source.locate(tc as usize, td);
             if cached.as_ref().map_or(true, |(civ, _)| *civ != iv) {
                 cached = Some((iv, source.interval_arc(iv)));
@@ -239,7 +239,7 @@ fn multiply_partition(
     // Decode each tile row's tile list: (tile_col, payload-range).
     let rows: Vec<Vec<(u32, crate::sparse::TileView)>> = row_images
         .iter()
-        .map(|img| TileRowView::new(img, matrix.has_values).collect())
+        .map(|img| TileRowView::new(img, matrix.value_elem).collect())
         .collect();
 
     // The output target: either a thread-local accumulation buffer
@@ -321,7 +321,7 @@ mod tests {
     pub fn spmm_ref(coo: &CooMatrix, input: &[f64], b: usize) -> Vec<f64> {
         let mut out = vec![0.0; coo.n_rows as usize * b];
         for (i, &(r, c)) in coo.entries.iter().enumerate() {
-            let v = coo.values.as_ref().map(|v| v[i] as f64).unwrap_or(1.0);
+            let v = coo.values.as_ref().map(|v| v[i]).unwrap_or(1.0);
             for k in 0..b {
                 out[r as usize * b + k] += v * input[c as usize * b + k];
             }

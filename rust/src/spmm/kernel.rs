@@ -7,6 +7,17 @@
 //! the Rust analogue of the paper's "predefine the matrix width in the
 //! code" for GCC autovectorization.  The SCSR stream and the COO region
 //! are iterated by separate loops; COO needs no end-of-row test per entry.
+//!
+//! # Precision contract
+//!
+//! Tile values are widened to f64 exactly once, as they are read from the
+//! (possibly narrowed) stored image ([`crate::sparse::TileValues::get`]).
+//! Every multiply-accumulate below — and everything downstream of it:
+//! fused walks, CGS2, Rayleigh–Ritz — runs in f64 regardless of
+//! [`crate::safs::StoragePrecision`].  Reduced storage precision
+//! perturbs only the *inputs* (stored matrix/subspace values), so the
+//! classical bound `‖fl(A)−A‖ ≤ u₃₂‖A‖` carries through to the residuals
+//! checked by the precision test tier.
 
 use crate::sparse::TileView;
 
@@ -48,7 +59,7 @@ fn tile_kernel_fixed<const B: usize>(view: &TileView, in_rows: &[f64], out_rows:
         if w & 0x8000 != 0 {
             out_base = (w & 0x7fff) as usize * B;
         } else {
-            let v = if weighted { view.values[vi] as f64 } else { 1.0 };
+            let v = if weighted { view.values.get(vi) } else { 1.0 };
             vi += 1;
             let inp = &in_rows[w as usize * B..w as usize * B + B];
             let out = &mut out_rows[out_base..out_base + B];
@@ -60,7 +71,7 @@ fn tile_kernel_fixed<const B: usize>(view: &TileView, in_rows: &[f64], out_rows:
     // COO region: single-entry rows, no end-of-row conditional.
     for pair in view.coo.chunks_exact(2) {
         let (r, c) = (pair[0] as usize, pair[1] as usize);
-        let v = if weighted { view.values[vi] as f64 } else { 1.0 };
+        let v = if weighted { view.values.get(vi) } else { 1.0 };
         vi += 1;
         let inp = &in_rows[c * B..c * B + B];
         let out = &mut out_rows[r * B..r * B + B];
@@ -79,7 +90,7 @@ fn tile_kernel_dyn(view: &TileView, in_rows: &[f64], out_rows: &mut [f64], b: us
         if w & 0x8000 != 0 {
             out_base = (w & 0x7fff) as usize * b;
         } else {
-            let v = if weighted { view.values[vi] as f64 } else { 1.0 };
+            let v = if weighted { view.values.get(vi) } else { 1.0 };
             vi += 1;
             let inp = &in_rows[w as usize * b..w as usize * b + b];
             let out = &mut out_rows[out_base..out_base + b];
@@ -90,7 +101,7 @@ fn tile_kernel_dyn(view: &TileView, in_rows: &[f64], out_rows: &mut [f64], b: us
     }
     for pair in view.coo.chunks_exact(2) {
         let (r, c) = (pair[0] as usize, pair[1] as usize);
-        let v = if weighted { view.values[vi] as f64 } else { 1.0 };
+        let v = if weighted { view.values.get(vi) } else { 1.0 };
         vi += 1;
         let inp = &in_rows[c * b..c * b + b];
         let out = &mut out_rows[r * b..r * b + b];
@@ -107,14 +118,14 @@ mod tests {
 
     fn dense_ref(
         entries: &[(u16, u16)],
-        vals: Option<&[f32]>,
+        vals: Option<&[f64]>,
         in_rows: &[f64],
         b: usize,
         out_len: usize,
     ) -> Vec<f64> {
         let mut out = vec![0.0; out_len];
         for (i, &(r, c)) in entries.iter().enumerate() {
-            let v = vals.map(|v| v[i] as f64).unwrap_or(1.0);
+            let v = vals.map(|v| v[i]).unwrap_or(1.0);
             for k in 0..b {
                 out[r as usize * b + k] += v * in_rows[c as usize * b + k];
             }
@@ -134,19 +145,26 @@ mod tests {
             (5, 5),
             (7, 2),
         ];
-        let vals: Vec<f32> = (0..entries.len()).map(|i| i as f32 * 0.5 + 1.0).collect();
+        // Half-integer weights are exactly representable at both stored
+        // widths, so the f32- and f64-width images must agree bitwise.
+        let vals: Vec<f64> = (0..entries.len()).map(|i| i as f64 * 0.5 + 1.0).collect();
         for b in [1usize, 2, 3, 4, 8, 16] {
             let in_rows: Vec<f64> = (0..8 * b).map(|i| (i as f64).sin()).collect();
             for weighted in [false, true] {
                 let vref = weighted.then_some(&vals[..]);
                 let expect = dense_ref(&entries, vref, &in_rows, b, 8 * b);
                 for coo_hybrid in [false, true] {
-                    let bytes = encode_tile_opts(&entries, vref, 8, coo_hybrid);
-                    let view = TileView::parse(&bytes, weighted);
-                    for vec in [false, true] {
-                        let mut out = vec![0.0; 8 * b];
-                        multiply_tile(&view, &in_rows, &mut out, b, vec);
-                        assert_eq!(out, expect, "b={b} w={weighted} coo={coo_hybrid} v={vec}");
+                    for value_elem in [4usize, 8] {
+                        let bytes = encode_tile_opts(&entries, vref, 8, coo_hybrid, value_elem);
+                        let view = TileView::parse(&bytes, if weighted { value_elem } else { 0 });
+                        for vec in [false, true] {
+                            let mut out = vec![0.0; 8 * b];
+                            multiply_tile(&view, &in_rows, &mut out, b, vec);
+                            assert_eq!(
+                                out, expect,
+                                "b={b} w={weighted} coo={coo_hybrid} e={value_elem} v={vec}"
+                            );
+                        }
                     }
                 }
             }
@@ -156,7 +174,7 @@ mod tests {
     #[test]
     fn accumulates_into_existing_output() {
         let bytes = encode_tile(&[(0, 0)], None, 4);
-        let view = TileView::parse(&bytes, false);
+        let view = TileView::parse(&bytes, 0);
         let mut out = vec![10.0; 4];
         multiply_tile(&view, &[2.0, 0.0, 0.0, 0.0], &mut out, 1, true);
         assert_eq!(out, vec![12.0, 10.0, 10.0, 10.0]);

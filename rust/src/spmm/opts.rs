@@ -17,6 +17,16 @@
 //! ([`crate::safs::SafsConfig::image_cache_bytes`], CLI `--image-cache`):
 //! like read-ahead it changes when/whether image bytes move, never what
 //! a multiply computes, so it is filesystem state, not a kernel option.
+//!
+//! The **storage precision** follows the same rule from the other side:
+//! [`crate::safs::SafsConfig::storage_precision`] (CLI `--precision`)
+//! decides the serialized width of dense intervals and f64-native image
+//! values, and the kernels here are precision-blind — tile values widen
+//! to f64 on load ([`crate::sparse::TileValues`]) and every accumulator
+//! below this module is f64 regardless of what the bytes on SSD look
+//! like.  An [`SpmmOpts`] flag never changes the arithmetic precision;
+//! `tests/precision.rs` holds the differential bounds that keep that
+//! claim honest.
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SpmmOpts {

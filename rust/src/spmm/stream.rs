@@ -1299,7 +1299,10 @@ mod tests {
             let _ = s.produce(iv, rows);
         }
         let after_first = fs.stats().delta_since(&before);
-        assert_eq!(after_first.bytes_read, (320 * 2 * 8) as u64, "one read per interval");
+        // SAFS traffic scales with the *stored* element width; the
+        // gather's resident buffers are widened f64 (always 8 bytes).
+        let stored = (320 * 2 * x.elem_bytes()) as u64;
+        assert_eq!(after_first.bytes_read, stored, "one read per interval");
         for iv in 0..n_iv {
             let rows = x.interval_len(iv);
             let _ = s.produce(iv, rows);
@@ -1441,7 +1444,9 @@ mod tests {
         let a = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "ea"), true);
         let at = build_matrix_opts(&at_coo, 32, BuildTarget::Safs(&fs, "eat"), true);
         let x = TasMatrix::from_fn(&ctx, 384, 2, |r, _| (r % 9) as f64 - 4.0);
-        let x_bytes = (384 * 2 * 8) as u64;
+        // Stored element width, not a literal 8: the pin must keep
+        // holding under `--precision f32`.
+        let x_bytes = (384 * 2 * x.elem_bytes()) as u64;
         let s = ChainedGramSpmm::new(&a, &at, &x, 8, true).expect("fits the ring");
         let before = fs.stats();
         let y = TasMatrix::zeros_for_overwrite(&ctx, 384, 2);
@@ -1592,6 +1597,8 @@ mod tests {
         let at = build_matrix_opts(&at_coo, 32, BuildTarget::Mem, true);
         let x = TasMatrix::from_fn(&ctx, n as usize, 2, |r, c| ((r * 3 + c) % 17) as f64 - 8.0);
         let nn = n as usize;
+        // Staged intervals are widened f64 in RAM: 8 bytes per element
+        // regardless of the SAFS storage precision.
         let iv_bytes = (64 * 2 * 8) as u64;
         let n_iv = nn.div_ceil(64) as u64;
 

@@ -93,6 +93,55 @@ pub fn assert_close(a: &[f64], b: &[f64], rtol: f64, atol: f64, ctx: &str) -> Re
     Ok(())
 }
 
+/// Assert a set of residuals obtained under reduced storage precision
+/// stays within the analytic input-rounding envelope of a full-precision
+/// reference run.
+///
+/// Storage narrowing perturbs only the *inputs* (stored matrix values and
+/// subspace intervals), never the f64 accumulation, so each residual may
+/// exceed its reference by at most `slack · u · scale` where `u` is the
+/// unit roundoff of the narrowed width (`2⁻²⁴` for f32), `scale` is a
+/// problem norm (`‖A‖` — for eigenproblems the largest |eigenvalue| is a
+/// usable proxy), and `slack` absorbs the accumulation constants of the
+/// particular pipeline (callers pass O(10)–O(100), not O(10⁶): the tier
+/// must fail when a kernel accumulates in f32 by mistake).  Not a bitwise
+/// comparison by design — reduced-precision runs take legitimately
+/// different floating-point paths.
+pub fn assert_residuals_within_bound(
+    narrow: &[f64],
+    reference: &[f64],
+    unit_roundoff: f64,
+    scale: f64,
+    slack: f64,
+    ctx: &str,
+) -> Result<(), String> {
+    if narrow.len() != reference.len() {
+        return Err(format!(
+            "{ctx}: length mismatch {} vs {}",
+            narrow.len(),
+            reference.len()
+        ));
+    }
+    let envelope = slack * unit_roundoff * scale;
+    for (i, (&r32, &r64)) in narrow.iter().zip(reference.iter()).enumerate() {
+        if !r32.is_finite() {
+            return Err(format!("{ctx}: residual {i} is not finite ({r32})"));
+        }
+        if r32 > r64 + envelope {
+            return Err(format!(
+                "{ctx}: residual {i} = {r32:.3e} exceeds reference {r64:.3e} \
+                 + envelope {envelope:.3e} (u={unit_roundoff:.1e}, scale={scale:.3e}, \
+                 slack={slack})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Unit roundoff of an IEEE-754 binary32 value — the `u` that bounds the
+/// relative error of narrowing any stored f64 to f32.
+pub const F32_UNIT_ROUNDOFF: f64 = 1.0 / (1u64 << 24) as f64;
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +166,25 @@ mod tests {
     #[should_panic(expected = "property 'always-fails' failed")]
     fn failing_property_panics_with_seed() {
         run_prop("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn residual_bound_checks() {
+        // Within the envelope: narrow residual may exceed the reference by
+        // slack·u·scale.
+        let u = F32_UNIT_ROUNDOFF;
+        assert!(
+            assert_residuals_within_bound(&[1e-8 + 10.0 * u], &[1e-8], u, 1.0, 20.0, "t")
+                .is_ok()
+        );
+        // Beyond it: an f32 accumulation (error ≈ u·scale with huge
+        // constants) must be rejected at modest slack.
+        assert!(
+            assert_residuals_within_bound(&[1e6 * u], &[1e-12], u, 1.0, 100.0, "t").is_err()
+        );
+        // Non-finite and mismatched inputs are failures, not passes.
+        assert!(assert_residuals_within_bound(&[f64::NAN], &[0.0], u, 1.0, 1.0, "t").is_err());
+        assert!(assert_residuals_within_bound(&[0.0], &[0.0, 0.0], u, 1.0, 1.0, "t").is_err());
     }
 
     #[test]

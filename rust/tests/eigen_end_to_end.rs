@@ -39,6 +39,7 @@ fn friendster_sem_eight_eigenvalues() {
         which: Which::LargestMagnitude,
         seed: 1,
         compute_eigenvectors: false,
+        refine_steps: 0,
     };
     let res = solve(&op, &ctx, &cfg);
     assert!(res.converged, "history {:?}", res.history);
@@ -75,6 +76,7 @@ fn page_svd_end_to_end() {
         which: Which::LargestAlgebraic,
         seed: 2,
         compute_eigenvectors: false,
+        refine_steps: 0,
     };
     let before = fs.stats();
     let res = svd(&op, &ctx, &cfg);
@@ -124,6 +126,7 @@ fn xla_and_native_kernels_agree_on_eigenvalues() {
             which: Which::LargestMagnitude,
             seed: 4,
             compute_eigenvectors: false,
+            refine_steps: 0,
         };
         solve(&op, &ctx, &cfg)
     };
@@ -165,6 +168,7 @@ fn knn_weighted_eigenvalues() {
         which: Which::LargestMagnitude,
         seed: 6,
         compute_eigenvectors: false,
+        refine_steps: 0,
     };
     let res = solve(&op, &ctx, &cfg);
     assert!(res.converged, "history {:?}", res.history);

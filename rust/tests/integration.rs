@@ -9,7 +9,7 @@ use flasheigen::dense::{
 use flasheigen::eigen::{solve, EigenConfig, SpmmOperator, Which};
 use flasheigen::graph::{gnm_undirected, Dataset};
 use flasheigen::harness::BenchCfg;
-use flasheigen::safs::{IoBackend, Safs, SafsConfig};
+use flasheigen::safs::{IoBackend, Safs, SafsConfig, StoragePrecision};
 use flasheigen::sparse::{build_matrix, BuildTarget};
 use flasheigen::spmm::{spmm, DenseBlock, SpmmOpts};
 use flasheigen::util::prop::assert_close;
@@ -48,6 +48,7 @@ fn eigensolver_storage_and_threads_invariance() {
         which: Which::LargestMagnitude,
         seed: 42,
         compute_eigenvectors: false,
+        refine_steps: 0,
     };
     let mut results = Vec::new();
     for (em, threads) in [(false, 1), (false, 4), (true, 2), (true, 4)] {
@@ -103,6 +104,7 @@ fn matrix_cache_changes_io_not_results() {
             which: Which::LargestMagnitude,
             seed: 9,
             compute_eigenvectors: false,
+            refine_steps: 0,
         };
         let res = solve(&op, &ctx, &cfg);
         (res.eigenvalues, fs.stats().bytes_written)
@@ -162,6 +164,7 @@ fn throttling_does_not_change_results() {
         image_cache: 0,
         queue_depth: 32,
         io_backend: IoBackend::Queued,
+        storage_precision: StoragePrecision::F64,
     };
     let run = |timed: bool| {
         let fs = if timed {
@@ -181,6 +184,7 @@ fn throttling_does_not_change_results() {
             which: Which::LargestMagnitude,
             seed: 4,
             compute_eigenvectors: false,
+            refine_steps: 0,
         };
         solve(&op, &ctx, &cfg).eigenvalues
     };
@@ -214,6 +218,7 @@ fn subspace_files_are_cleaned_up() {
         which: Which::LargestMagnitude,
         seed: 11,
         compute_eigenvectors: false,
+        refine_steps: 0,
     };
     let res = solve(&op, &ctx, &cfg);
     assert!(res.converged);

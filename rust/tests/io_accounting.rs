@@ -16,7 +16,7 @@ use flasheigen::eigen::{
 };
 use flasheigen::graph::{gnm, gnm_undirected};
 use flasheigen::harness::{fig9_fusion_data, fig9_readahead_data, BenchCfg};
-use flasheigen::safs::{IoBackend, Safs, SafsConfig, WaitMode};
+use flasheigen::safs::{IoBackend, Safs, SafsConfig, StoragePrecision, WaitMode};
 use flasheigen::sparse::{build_matrix_opts, build_mem, BuildTarget, CooMatrix};
 use flasheigen::spmm::{ChainedGramSpmm, SpmmOpts};
 use flasheigen::util::prop::assert_close;
@@ -43,7 +43,9 @@ fn fused_cgs2_reads_subspace_once_per_round() {
     mv_random(&x, 7);
     assert!(x.is_resident(), "newest block must be cache-resident");
     assert!(basis.iter().all(|v| !v.is_resident()), "basis must stream");
-    let subspace_bytes = (p * n * b * 8) as u64;
+    // Byte arithmetic on the stored element width, not a literal 8: the
+    // pin must keep holding under `--precision f32`.
+    let subspace_bytes = (p * n * b * x.elem_bytes()) as u64;
 
     // Fused: round 1 (c1 + basis Gram) and round 2 (combined update +
     // normalization Gram) each stream the subspace exactly once; every
@@ -91,6 +93,7 @@ fn em_eigensolve_fused_beats_eager_within_budget() {
             which: Which::LargestMagnitude,
             seed: 5,
             compute_eigenvectors: false,
+            refine_steps: 0,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged, "fused={fused}: {:?}", res.history);
@@ -146,6 +149,7 @@ fn per_device_skew_stays_balanced() {
         which: Which::LargestMagnitude,
         seed: 9,
         compute_eigenvectors: false,
+        refine_steps: 0,
     };
     let res = solve(&op, &ctx, &ecfg);
     assert!(res.converged);
@@ -177,7 +181,7 @@ fn streamed_apply_reads_each_subspace_interval_once() {
     let (n, b) = (2000usize, 2usize);
     let x = TasMatrix::zeros(&ctx, n, b);
     mv_random(&x, 7);
-    let mat_bytes = (n * b * 8) as u64;
+    let mat_bytes = (n * b * x.elem_bytes()) as u64;
 
     let before = fs.stats();
     let w_streamed = op.apply_streamed(&ctx, &x);
@@ -252,6 +256,7 @@ fn em_eigensolve_peak_dense_bounded_by_group() {
             which: Which::LargestMagnitude,
             seed: 5,
             compute_eigenvectors: false,
+            refine_steps: 0,
         };
         let _ = solve(&op, &ctx, &cfg);
         ctx.io_phases.dense_peaks_snapshot()
@@ -260,8 +265,11 @@ fn em_eigensolve_peak_dense_bounded_by_group() {
     let streamed = run(true);
     let eager = run(false);
 
-    let mat_bytes = (n * b * 8) as u64;
-    let iv_bytes = (interval_rows * b * 8) as u64;
+    // The runs use the untimed default config; size the bound on its
+    // stored element width rather than a literal 8.
+    let elem = SafsConfig::untimed().storage_precision.elem_bytes();
+    let mat_bytes = (n * b * elem) as u64;
+    let iv_bytes = (interval_rows * b * elem) as u64;
     // ≤ 2 cache-resident matrices (LRU churn) + 1 input gather + 1 slack
     // full-height matrix, plus per-worker walk footprint of a group of
     // intervals and a handful of pinned/work/transpose buffers.
@@ -317,8 +325,8 @@ fn streamed_gram_apply_two_hop_pins() {
     let (nn, b) = (n as usize, 2usize);
     let x = TasMatrix::zeros(&ctx, nn, b);
     mv_random(&x, 7);
-    let mat_bytes = (nn * b * 8) as u64;
-    let iv_bytes = (interval_rows * b * 8) as u64;
+    let mat_bytes = (nn * b * x.elem_bytes()) as u64;
+    let iv_bytes = (interval_rows * b * x.elem_bytes()) as u64;
 
     let before = fs.stats();
     ctx.mem.begin_window();
@@ -421,6 +429,7 @@ fn em_svd_peak_dense_bounded_by_group_and_staging() {
             which: Which::LargestAlgebraic,
             seed: 5,
             compute_eigenvectors: false,
+            refine_steps: 0,
         };
         let _ = svd(&op, &ctx, &cfg);
         (ctx.io_phases.dense_peaks_snapshot(), ctx.io_phases.dense_peak("spmm.stage"))
@@ -429,8 +438,11 @@ fn em_svd_peak_dense_bounded_by_group_and_staging() {
     let (streamed, stage_peak) = run(true);
     let (eager, _) = run(false);
 
-    let mat_bytes = (n * b * 8) as u64;
-    let iv_bytes = (interval_rows * b * 8) as u64;
+    // The runs use the untimed default config; size the bound on its
+    // stored element width rather than a literal 8.
+    let elem = SafsConfig::untimed().storage_precision.elem_bytes();
+    let mat_bytes = (n * b * elem) as u64;
+    let iv_bytes = (interval_rows * b * elem) as u64;
     // The staging ring stays within its bound across every apply of the
     // whole solve (peaks fold by max).
     let stage_bound = ((group + 2 * threads) as u64) * iv_bytes;
@@ -545,7 +557,7 @@ fn lifted_ring_rereads_and_staging_stay_bounded() {
     assert!(actual > 0, "ring pressure must actually re-read");
     assert!(actual <= modeled, "actual re-reads {actual} exceed the schedule {modeled}");
     // §3.4.3 staging bound, unchanged by the lifted restriction.
-    let iv_bytes = (interval_rows * 2 * 8) as u64;
+    let iv_bytes = (interval_rows * 2 * x.elem_bytes()) as u64;
     let stage_bound = ((cap + 2 * threads) as u64) * iv_bytes;
     assert!(
         s.stage().peak_staged_bytes() <= stage_bound,
@@ -642,6 +654,7 @@ fn read_ahead_overlap_lowers_io_wait_at_equal_bytes() {
         image_cache: 0,
         queue_depth: 32,
         io_backend: IoBackend::Queued,
+        storage_precision: StoragePrecision::F64,
     };
     let rows = fig9_readahead_data(&cfg, 64.0, 4, &[0, 2]);
     let (d0, d2) = (&rows[0].2, &rows[1].2);
@@ -770,9 +783,11 @@ fn residency_applies(
     coo: &CooMatrix,
     budget: u64,
     threads: usize,
+    precision: StoragePrecision,
 ) -> (Vec<u64>, Vec<f64>, u64) {
     let mut cfg = SafsConfig::untimed();
     cfg.image_cache_bytes = budget;
+    cfg.storage_precision = precision;
     let fs = Safs::new(cfg);
     let ctx = DenseCtx::with(fs.clone(), false, 128, threads, 4, 1, Arc::new(NativeKernels));
     let m = build_matrix_opts(coo, 64, BuildTarget::Safs(&fs, "icr"), true);
@@ -802,13 +817,14 @@ fn image_cache_full_budget_warm_applies_read_zero_image_bytes() {
     let mut rng = Rng::new(101);
     let coo = gnm_undirected(2000, 12_000, &mut rng);
     let image_bytes = build_matrix_opts(&coo, 64, BuildTarget::Mem, true).storage_bytes();
-    let (reads_off, vals_off, peak_off) = residency_applies(&coo, 0, 2);
+    let (reads_off, vals_off, peak_off) = residency_applies(&coo, 0, 2, StoragePrecision::F64);
     assert_eq!(peak_off, 0, "disabled cache must hold nothing");
     assert!(
         reads_off.iter().all(|&r| r == image_bytes),
         "cache off: every apply re-reads the whole image: {reads_off:?}"
     );
-    let (reads_full, vals_full, peak_full) = residency_applies(&coo, image_bytes, 2);
+    let (reads_full, vals_full, peak_full) =
+        residency_applies(&coo, image_bytes, 2, StoragePrecision::F64);
     assert_eq!(vals_full, vals_off, "caching changed bits");
     assert_eq!(reads_full[0], image_bytes, "cold apply reads the image exactly once");
     assert_eq!(reads_full[1], 0, "first warm apply must read zero image bytes");
@@ -831,8 +847,8 @@ fn image_cache_quarter_budget_cuts_warm_traffic_within_baseline() {
     let coo = gnm_undirected(2000, 12_000, &mut rng);
     let image_bytes = build_matrix_opts(&coo, 64, BuildTarget::Mem, true).storage_bytes();
     let budget = image_bytes / 4;
-    let (reads_off, vals_off, _) = residency_applies(&coo, 0, 1);
-    let (reads_q, vals_q, peak_q) = residency_applies(&coo, budget, 1);
+    let (reads_off, vals_off, _) = residency_applies(&coo, 0, 1, StoragePrecision::F64);
+    let (reads_q, vals_q, peak_q) = residency_applies(&coo, budget, 1, StoragePrecision::F64);
     assert_eq!(vals_q, vals_off, "caching changed bits");
     assert_eq!(reads_q[0], image_bytes, "cold apply reads the whole image");
     assert!(
@@ -862,6 +878,7 @@ fn fig9_fusion_em_reports_strictly_fewer_bytes() {
         image_cache: 0,
         queue_depth: 32,
         io_backend: IoBackend::Queued,
+        storage_precision: StoragePrecision::F64,
     };
     let rows = fig9_fusion_data(&cfg, 4096, 16, 2);
     assert_eq!(rows.len(), 2);
@@ -878,4 +895,181 @@ fn fig9_fusion_em_reports_strictly_fewer_bytes() {
         fused.bytes_read,
         eager.bytes_read
     );
+}
+
+/// (p) Storage-precision subspace ledger: with the sparse image in RAM
+/// (every SAFS byte is dense subspace traffic) and convergence pinned
+/// off (unreachable tolerance + fixed restarts, so both runs execute the
+/// identical iteration structure), f32 storage reads AND writes exactly
+/// half the bytes of the f64 run.
+#[test]
+fn f32_storage_halves_subspace_bytes_at_equal_iterations() {
+    let mut rng = Rng::new(111);
+    let coo = gnm_undirected(1500, 9000, &mut rng);
+    let run = |precision: StoragePrecision| {
+        let mut cfg = SafsConfig::untimed();
+        cfg.storage_precision = precision;
+        let fs = Safs::new(cfg);
+        let ctx = DenseCtx::with(fs.clone(), true, 128, 2, 4, 1, Arc::new(NativeKernels));
+        let op = SpmmOperator::new(build_mem(&coo), SpmmOpts::default(), 2);
+        let ecfg = EigenConfig {
+            nev: 4,
+            block_size: 2,
+            num_blocks: 8,
+            tol: 1e-300,
+            max_restarts: 3,
+            which: Which::LargestMagnitude,
+            seed: 5,
+            compute_eigenvectors: false,
+            refine_steps: 0,
+        };
+        let res = solve(&op, &ctx, &ecfg);
+        (res.operator_applies, fs.stats())
+    };
+    let (applies64, io64) = run(StoragePrecision::F64);
+    let (applies32, io32) = run(StoragePrecision::F32);
+    assert_eq!(applies64, applies32, "pinned restarts must equalize iteration counts");
+    assert!(io32.bytes_read > 0 && io32.bytes_written > 0, "need real traffic");
+    assert_eq!(
+        io64.bytes_read,
+        2 * io32.bytes_read,
+        "f32 subspace reads must be exactly half of f64's"
+    );
+    assert_eq!(
+        io64.bytes_written,
+        2 * io32.bytes_written,
+        "f32 subspace writes must be exactly half of f64's"
+    );
+}
+
+/// (p2) Storage-precision image ledger, f64-native weights: the stored
+/// value region narrows from 8 to 4 bytes per nonzero (structure bytes
+/// are precision-independent), one streamed apply's exact byte ledger is
+/// `image + input` read / `output` written at each precision's element
+/// width, and the narrowed run's values stay within the f32
+/// input-rounding envelope of the f64 run.
+#[test]
+fn f32_weighted_image_and_subspace_byte_ledger_exact() {
+    let n = 768u32;
+    let mut rng = Rng::new(117);
+    let mut coo = CooMatrix::new(n as u64, n as u64);
+    let mut nnz = 0u64;
+    for r in 0..n {
+        for k in 1..=3u32 {
+            // Weights that do not roundtrip through f32: narrowing must
+            // actually perturb the stored image.
+            coo.push_weighted_f64(r, (r + k) % n, 1.0 + rng.gen_f64_range(0.0, 1e-3) + 1e-12);
+            nnz += 1;
+        }
+    }
+    let run = |precision: StoragePrecision| {
+        let mut cfg = SafsConfig::untimed();
+        cfg.storage_precision = precision;
+        let fs = Safs::new(cfg);
+        // cache_slots = 0 (write-through): every dense access is visible.
+        let ctx = DenseCtx::with(fs.clone(), true, 128, 2, 4, 0, Arc::new(NativeKernels));
+        let m = build_matrix_opts(&coo, 64, BuildTarget::Safs(&fs, "pw"), true);
+        let image_bytes = m.storage_bytes();
+        let op = SpmmOperator::new(m, SpmmOpts::default(), 2);
+        let x = TasMatrix::zeros(&ctx, n as usize, 2);
+        mv_random(&x, 7);
+        let mat_bytes = (n as usize * 2 * x.elem_bytes()) as u64;
+        let before = fs.stats();
+        let w = op.apply_streamed(&ctx, &x);
+        let d = fs.stats().delta_since(&before);
+        assert_eq!(
+            d.bytes_read,
+            image_bytes + mat_bytes,
+            "{}: one apply reads the image once and the input once",
+            precision.name()
+        );
+        assert_eq!(
+            d.bytes_written,
+            mat_bytes,
+            "{}: output written exactly once",
+            precision.name()
+        );
+        (image_bytes, w.to_colmajor())
+    };
+    let (image64, w64) = run(StoragePrecision::F64);
+    let (image32, w32) = run(StoragePrecision::F32);
+    assert_eq!(
+        image64 - image32,
+        4 * nnz,
+        "narrowing must shave exactly 4 bytes per stored f64-native value"
+    );
+    // Same product up to the f32 input-rounding envelope (weights are
+    // O(1), row sums are 3 terms: relative agreement ≪ 1e-5).
+    assert_close(&w32, &w64, 1e-5, 1e-9, "f32-image apply vs f64").unwrap();
+}
+
+/// (p3) The `--precision f32` byte-acceptance pin: a full EM eigensolve
+/// (SEM image on SAFS behind a full-image cache budget, subspace
+/// streaming) at pinned iteration counts moves ≤ 55% of the f64 run's
+/// total SAFS bytes, and the image cache's hit/miss ledger is identical
+/// at the equal byte budget (the unweighted image is byte-identical
+/// across precisions).
+#[test]
+fn f32_em_eigensolve_meets_55_percent_byte_acceptance() {
+    let mut rng = Rng::new(119);
+    let coo = gnm_undirected(1000, 6000, &mut rng);
+    let image_bytes = build_matrix_opts(&coo, 64, BuildTarget::Mem, true).storage_bytes();
+    let run = |precision: StoragePrecision| {
+        let mut cfg = SafsConfig::untimed();
+        cfg.storage_precision = precision;
+        cfg.image_cache_bytes = image_bytes;
+        let fs = Safs::new(cfg);
+        let ctx = DenseCtx::with(fs.clone(), true, 128, 2, 4, 1, Arc::new(NativeKernels));
+        let m = build_matrix_opts(&coo, 64, BuildTarget::Safs(&fs, "pa"), true);
+        assert_eq!(m.storage_bytes(), image_bytes, "unweighted image is precision-invariant");
+        let op = SpmmOperator::new(m, SpmmOpts::default(), 2);
+        let ecfg = EigenConfig {
+            nev: 4,
+            block_size: 2,
+            num_blocks: 8,
+            tol: 1e-300,
+            max_restarts: 4,
+            which: Which::LargestMagnitude,
+            seed: 5,
+            compute_eigenvectors: false,
+            refine_steps: 0,
+        };
+        let before = fs.stats();
+        let res = solve(&op, &ctx, &ecfg);
+        (res.operator_applies, fs.stats().delta_since(&before))
+    };
+    let (applies64, io64) = run(StoragePrecision::F64);
+    let (applies32, io32) = run(StoragePrecision::F32);
+    assert_eq!(applies64, applies32, "pinned restarts must equalize iteration counts");
+    assert!(
+        100 * io32.total_bytes() <= 55 * io64.total_bytes(),
+        "f32 EM eigensolve must move ≤ 55% of the f64 bytes: {} vs {}",
+        io32.total_bytes(),
+        io64.total_bytes()
+    );
+    assert_eq!(
+        io32.cache_hit_bytes, io64.cache_hit_bytes,
+        "image-cache hits must not regress at the equal byte budget"
+    );
+    assert_eq!(
+        io32.cache_miss_bytes, io64.cache_miss_bytes,
+        "image-cache misses must not regress at the equal byte budget"
+    );
+}
+
+/// (p4) Unweighted (and f32-native weighted) images are byte-identical
+/// across storage precisions: the cross-apply residency driver reports
+/// the same per-apply image reads and the same resident-cache peak under
+/// `f32` storage as under `f64` — the precision axis touches only what
+/// it claims to touch.
+#[test]
+fn f32_unweighted_image_traffic_identical_to_f64() {
+    let mut rng = Rng::new(121);
+    let coo = gnm_undirected(2000, 12_000, &mut rng);
+    let image_bytes = build_matrix_opts(&coo, 64, BuildTarget::Mem, true).storage_bytes();
+    let budget = image_bytes / 4;
+    let (reads64, _, peak64) = residency_applies(&coo, budget, 1, StoragePrecision::F64);
+    let (reads32, _, peak32) = residency_applies(&coo, budget, 1, StoragePrecision::F32);
+    assert_eq!(reads64, reads32, "per-apply image reads must not depend on the precision axis");
+    assert_eq!(peak64, peak32, "resident image-cache peak must not depend on the precision axis");
 }

@@ -1,0 +1,362 @@
+//! The storage-precision differential test tier: `--precision f32`
+//! solves are compared against the full-precision reference run with
+//! *analytic residual bounds*, never bitwise equality (narrowed storage
+//! legitimately takes different floating-point paths).
+//!
+//! The contract under test (`dense/tas.rs`, `spmm/kernel.rs`): f32 is a
+//! *storage* precision only — every accumulation stays f64, so an f32
+//! run's true residuals may exceed the f64 run's by at most the
+//! input-rounding envelope `O(u₃₂ · ‖A‖)` (`u₃₂ = 2⁻²⁴`), far below the
+//! `O(n · u₃₂ · ‖A‖)` error a kernel that accumulated in f32 by mistake
+//! would show.  Each property computes TRUE residuals in f64 from the
+//! returned vectors (`‖A·v − θ·v‖`, the paper's §4.3 accuracy metric)
+//! rather than trusting the solver's own report.
+
+use flasheigen::dense::{DenseCtx, NativeKernels, TasMatrix};
+use flasheigen::eigen::{
+    orthonormality_error, solve, svd, EigenConfig, GramOperator, Operator, SpmmOperator, Which,
+};
+use flasheigen::graph::{gnm, gnm_undirected, rmat, RmatParams};
+use flasheigen::safs::{Safs, SafsConfig, StoragePrecision};
+use flasheigen::sparse::{build_matrix_opts, BuildTarget, CooMatrix};
+use flasheigen::spmm::SpmmOpts;
+use flasheigen::util::prop::{assert_residuals_within_bound, run_prop, Gen, F32_UNIT_ROUNDOFF};
+use flasheigen::util::rng::Rng;
+use std::sync::Arc;
+
+/// Slack for the input-rounding envelope `slack · u₃₂ · scale`.  Sized
+/// so the bound absorbs the convergence-threshold gap between the two
+/// runs (each may stop anywhere below `tol·max(|θ|,1)` with
+/// `tol = 1e-5`, and true residuals run up to ~1.5× the subspace
+/// estimate) while still rejecting an f32 accumulation, whose error
+/// carries n-sized constants (n ≥ 64 here, compounding per restart).
+const SLACK: f64 = 512.0;
+
+/// Orthonormality ceiling for vectors stored at f32: the Gram of
+/// f32-rounded unit columns is perturbed by ~2·u₃₂ per entry; 64·u₃₂
+/// leaves headroom without admitting a lost reorthogonalization.
+const ORTH_F32: f64 = 64.0 * F32_UNIT_ROUNDOFF;
+
+fn precision_ctx(
+    precision: StoragePrecision,
+    em: bool,
+    threads: usize,
+) -> (Arc<Safs>, Arc<DenseCtx>) {
+    let mut cfg = SafsConfig::untimed();
+    cfg.storage_precision = precision;
+    let fs = Safs::new(cfg);
+    let ctx = DenseCtx::with(fs.clone(), em, 64, threads, 3, 1, Arc::new(NativeKernels));
+    (fs, ctx)
+}
+
+/// A random symmetric test graph: ER or R-MAT, sized so the block
+/// Krylov–Schur path (not the dense fallback) is exercised.
+fn random_sym_graph(g: &mut Gen) -> CooMatrix {
+    let n = g.usize_in(80, 260) as u64;
+    let nnz = g.usize_in(n as usize, 1800) as u64;
+    let mut rng = Rng::new(g.u64());
+    let mut coo = if g.bool() {
+        rmat(n.max(64), nnz.max(1), RmatParams::default(), &mut rng)
+    } else {
+        gnm(n, nnz.min(n * n.saturating_sub(1)), &mut rng)
+    };
+    coo.symmetrize();
+    coo
+}
+
+struct EigRun {
+    eigenvalues: Vec<f64>,
+    /// `‖A·v − θ·v‖` per pair, recomputed in f64 from the returned
+    /// (storage-rounded) vectors.
+    true_residuals: Vec<f64>,
+    orth: f64,
+    converged: bool,
+}
+
+fn run_eig(coo: &CooMatrix, precision: StoragePrecision, em: bool, ecfg: &EigenConfig) -> EigRun {
+    let (fs, ctx) = precision_ctx(precision, em, 2);
+    let m = build_matrix_opts(coo, 32, BuildTarget::Safs(&fs, "pm"), true);
+    let op = SpmmOperator::new(m, SpmmOpts::default(), 2);
+    let res = solve(&op, &ctx, ecfg);
+    let x = res.eigenvectors.as_ref().expect("eigenvectors requested");
+    let refs: Vec<&TasMatrix> = x.iter().collect();
+    let orth = orthonormality_error(&refs);
+    let mut true_residuals = Vec::new();
+    let mut col = 0;
+    for xb in &refs {
+        // Full-precision scope: the verification's own intermediates must
+        // not be floored by f32 storage — only the solution vectors are.
+        let y = ctx.scoped_full_precision(|| op.apply(&ctx, xb));
+        let xv = xb.to_colmajor();
+        let yv = y.to_colmajor();
+        let n = xb.n_rows;
+        for j in 0..xb.n_cols {
+            let theta = res.eigenvalues[col + j];
+            let err: f64 = (0..n)
+                .map(|i| (yv[j * n + i] - theta * xv[j * n + i]).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            true_residuals.push(err);
+        }
+        col += xb.n_cols;
+    }
+    EigRun { eigenvalues: res.eigenvalues, true_residuals, orth, converged: res.converged }
+}
+
+/// f32-storage eigensolves on ER/R-MAT graphs, IM and EM: true residuals
+/// stay within the analytic input-rounding envelope of the f64 run,
+/// eigenvalues agree to Weyl-perturbation order, and the returned basis
+/// keeps `‖VᵀV − I‖` at rounding level.
+#[test]
+fn prop_f32_eigensolve_residuals_and_orthogonality_within_bounds() {
+    run_prop("f32-eig-residual-bound", 4, |g| {
+        let coo = random_sym_graph(g);
+        let em = g.bool();
+        let ecfg = EigenConfig {
+            nev: 3,
+            block_size: 2,
+            num_blocks: 6,
+            tol: 1e-5,
+            max_restarts: 150,
+            which: Which::LargestMagnitude,
+            seed: g.u64(),
+            compute_eigenvectors: true,
+            refine_steps: 0,
+        };
+        let r64 = run_eig(&coo, StoragePrecision::F64, em, &ecfg);
+        if !r64.converged {
+            // A reference run that cannot converge says nothing about the
+            // precision axis; the differential property needs a baseline.
+            return Ok(());
+        }
+        let r32 = run_eig(&coo, StoragePrecision::F32, em, &ecfg);
+        if !r32.converged {
+            return Err(format!(
+                "f64 converged but f32 storage did not (em {em}): the f32 residual \
+                 floor (~u32·‖A‖) sits orders below tol 1e-5, so this is an \
+                 accumulation-precision regression"
+            ));
+        }
+        let scale = r64.eigenvalues.iter().fold(1.0f64, |a, &v| a.max(v.abs()));
+        assert_residuals_within_bound(
+            &r32.true_residuals,
+            &r64.true_residuals,
+            F32_UNIT_ROUNDOFF,
+            scale,
+            SLACK,
+            &format!("f32 eigensolve residuals (em {em})"),
+        )?;
+        // Weyl: |θ₃₂ − θ₆₄| is bounded by the residuals plus the storage
+        // perturbation of A itself; both sit orders below 1e-3·scale, and
+        // a selection swap at the nev boundary only happens inside a
+        // cluster already tighter than the convergence accuracy.
+        for (i, (t32, t64)) in r32.eigenvalues.iter().zip(&r64.eigenvalues).enumerate() {
+            if (t32 - t64).abs() > 1e-3 * scale {
+                return Err(format!(
+                    "eigenvalue {i} drifted across precisions: {t32} vs {t64} (em {em})"
+                ));
+            }
+        }
+        if r64.orth > 1e-10 {
+            return Err(format!("f64 basis lost orthonormality: {:.3e}", r64.orth));
+        }
+        if r32.orth > ORTH_F32 {
+            return Err(format!(
+                "f32 basis orthonormality {:.3e} over the rounding ceiling {ORTH_F32:.3e}",
+                r32.orth
+            ));
+        }
+        Ok(())
+    });
+}
+
+struct SvdRun {
+    /// Gram-domain eigenvalues σ².
+    thetas: Vec<f64>,
+    /// `‖AᵀA·v − σ²·v‖` per pair, recomputed in f64.
+    true_residuals: Vec<f64>,
+    orth: f64,
+    converged: bool,
+}
+
+fn run_svd(
+    coo: &CooMatrix,
+    at_coo: &CooMatrix,
+    precision: StoragePrecision,
+    em: bool,
+    ecfg: &EigenConfig,
+) -> SvdRun {
+    let (fs, ctx) = precision_ctx(precision, em, 2);
+    let a = build_matrix_opts(coo, 32, BuildTarget::Safs(&fs, "sa"), true);
+    let at = build_matrix_opts(at_coo, 32, BuildTarget::Safs(&fs, "sat"), true);
+    let op = GramOperator::new(a, at, SpmmOpts::default(), 2);
+    let res = svd(&op, &ctx, ecfg);
+    let v = res.right_vectors.as_ref().expect("right vectors requested");
+    let refs: Vec<&TasMatrix> = v.iter().collect();
+    let orth = orthonormality_error(&refs);
+    let thetas: Vec<f64> = res.singular_values.iter().map(|s| s * s).collect();
+    let mut true_residuals = Vec::new();
+    let mut col = 0;
+    for vb in &refs {
+        let y = ctx.scoped_full_precision(|| op.apply(&ctx, vb));
+        let vv = vb.to_colmajor();
+        let yv = y.to_colmajor();
+        let n = vb.n_rows;
+        for j in 0..vb.n_cols {
+            let theta = thetas[col + j];
+            let err: f64 = (0..n)
+                .map(|i| (yv[j * n + i] - theta * vv[j * n + i]).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            true_residuals.push(err);
+        }
+        col += vb.n_cols;
+    }
+    SvdRun { thetas, true_residuals, orth, converged: res.converged }
+}
+
+/// The SVD path (two-hop Gram operator — twice the storage-rounded
+/// loads per apply): f32 Gram residuals of the returned right vectors
+/// stay within the envelope of the f64 run, σ² values agree, and the
+/// right basis stays orthonormal at rounding level.
+#[test]
+fn prop_f32_svd_gram_residuals_within_bounds() {
+    run_prop("f32-svd-residual-bound", 3, |g| {
+        let n = g.usize_in(80, 220) as u64;
+        let nnz = g.usize_in(n as usize, 1500) as u64;
+        let mut rng = Rng::new(g.u64());
+        let coo = if g.bool() {
+            rmat(n.max(64), nnz.max(1), RmatParams::default(), &mut rng)
+        } else {
+            gnm(n, nnz.min(n * n.saturating_sub(1)), &mut rng)
+        };
+        let at_coo = coo.transpose();
+        let em = g.bool();
+        let ecfg = EigenConfig {
+            nev: 3,
+            block_size: 2,
+            num_blocks: 6,
+            tol: 1e-5,
+            max_restarts: 150,
+            which: Which::LargestAlgebraic,
+            seed: g.u64(),
+            compute_eigenvectors: true,
+            refine_steps: 0,
+        };
+        let r64 = run_svd(&coo, &at_coo, StoragePrecision::F64, em, &ecfg);
+        if !r64.converged {
+            return Ok(());
+        }
+        let r32 = run_svd(&coo, &at_coo, StoragePrecision::F32, em, &ecfg);
+        if !r32.converged {
+            return Err(format!("f64 svd converged but f32 storage did not (em {em})"));
+        }
+        // The Gram operator squares the norm: scale on σ²max.
+        let scale = r64.thetas.iter().fold(1.0f64, |a, &v| a.max(v));
+        assert_residuals_within_bound(
+            &r32.true_residuals,
+            &r64.true_residuals,
+            F32_UNIT_ROUNDOFF,
+            scale,
+            SLACK,
+            &format!("f32 svd Gram residuals (em {em})"),
+        )?;
+        for (i, (t32, t64)) in r32.thetas.iter().zip(&r64.thetas).enumerate() {
+            if (t32 - t64).abs() > 1e-3 * scale {
+                return Err(format!("σ²[{i}] drifted across precisions: {t32} vs {t64}"));
+            }
+        }
+        if r64.orth > 1e-10 {
+            return Err(format!("f64 right basis lost orthonormality: {:.3e}", r64.orth));
+        }
+        if r32.orth > ORTH_F32 {
+            return Err(format!(
+                "f32 right basis orthonormality {:.3e} over the ceiling {ORTH_F32:.3e}",
+                r32.orth
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// f64 iterative refinement is the recovery knob for f32 storage: each
+/// accepted sweep strictly tightens the worst residual (the history is
+/// monotone by construction — this pins that it actually engages under
+/// f32, where the refined pairs must escape the storage floor via the
+/// full-precision scope), in IM and EM modes.
+#[test]
+fn refinement_under_f32_storage_tightens_residuals_monotonically() {
+    let mut rng = Rng::new(23);
+    let coo = gnm_undirected(200, 900, &mut rng);
+    for em in [false, true] {
+        let (fs, ctx) = precision_ctx(StoragePrecision::F32, em, 2);
+        let m = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "rf"), true);
+        let op = SpmmOperator::new(m, SpmmOpts::default(), 2);
+        let ecfg = EigenConfig {
+            nev: 3,
+            block_size: 2,
+            num_blocks: 6,
+            // Loose tol so refinement has room to tighten.
+            tol: 1e-4,
+            max_restarts: 300,
+            which: Which::LargestMagnitude,
+            seed: 19,
+            compute_eigenvectors: true,
+            refine_steps: 3,
+        };
+        let res = solve(&op, &ctx, &ecfg);
+        assert!(res.converged, "em {em}: {:?}", res.history);
+        assert!(
+            res.refine_history.len() >= 2,
+            "em {em}: refinement must accept at least one sweep under f32 storage \
+             (full-f64 Rayleigh–Ritz has ~4 decades of headroom below tol 1e-4): {:?}",
+            res.refine_history
+        );
+        for w in res.refine_history.windows(2) {
+            assert!(
+                w[1] < w[0],
+                "em {em}: refine history must be strictly decreasing: {:?}",
+                res.refine_history
+            );
+        }
+        let reported_worst = res.residuals.iter().fold(0.0f64, |a, &r| a.max(r));
+        let tail = *res.refine_history.last().unwrap();
+        assert!(
+            (reported_worst - tail).abs() < 1e-12,
+            "em {em}: reported residuals {reported_worst} vs history tail {tail}"
+        );
+    }
+}
+
+/// f32 narrowing is deterministic round-to-nearest-even at the store
+/// boundary, so repeated runs of the identical configuration are
+/// bitwise identical — in EM and IM residency alike (one worker pins
+/// the reduction order, as in the engine-parity grids).
+#[test]
+fn f32_solves_are_bitwise_reproducible_run_to_run() {
+    let mut rng = Rng::new(29);
+    let coo = gnm_undirected(220, 1100, &mut rng);
+    let run = |em: bool| {
+        let (fs, ctx) = precision_ctx(StoragePrecision::F32, em, 1);
+        let m = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "rp"), true);
+        let op = SpmmOperator::new(m, SpmmOpts::default(), 1);
+        let ecfg = EigenConfig {
+            nev: 2,
+            block_size: 2,
+            num_blocks: 6,
+            tol: 1e-6,
+            max_restarts: 200,
+            which: Which::LargestMagnitude,
+            seed: 31,
+            compute_eigenvectors: false,
+            refine_steps: 0,
+        };
+        let res = solve(&op, &ctx, &ecfg);
+        (res.eigenvalues, res.residuals)
+    };
+    for em in [true, false] {
+        let first = run(em);
+        let second = run(em);
+        assert_eq!(first, second, "f32 solve must be bitwise reproducible (em {em})");
+    }
+}

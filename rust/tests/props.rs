@@ -9,7 +9,7 @@ use flasheigen::dense::{
 use flasheigen::eigen::ortho::{normalize_block_eager, ortho_against_eager};
 use flasheigen::eigen::{ortho_normalize_with, sym_eig, GramOperator, Operator, SpmmOperator};
 use flasheigen::graph::{gnm, gnm_undirected, rmat, RmatParams};
-use flasheigen::safs::{IoBackend, Safs, SafsConfig, StripeMap, WaitMode};
+use flasheigen::safs::{IoBackend, Safs, SafsConfig, StoragePrecision, StripeMap, WaitMode};
 use flasheigen::sparse::{build_matrix, build_matrix_opts, BuildTarget, CsrMatrix};
 use flasheigen::spmm::{spmm, spmm_csr, DenseBlock, SpmmOpts};
 use flasheigen::util::prop::{assert_close, run_prop};
@@ -524,6 +524,7 @@ fn prop_read_ahead_depths_bitwise_for_em_svd() {
                 which: flasheigen::eigen::Which::LargestAlgebraic,
                 seed: solver_seed,
                 compute_eigenvectors: false,
+                refine_steps: 0,
             };
             let res = flasheigen::eigen::svd(&op, &ctx, &ecfg);
             match &reference {
@@ -667,6 +668,7 @@ fn prop_image_cache_budgets_bitwise_for_em_eigensolve_and_svd() {
                 },
                 seed: solver_seed,
                 compute_eigenvectors: false,
+                refine_steps: 0,
             };
             let vals = if svd_path {
                 let a = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "pa"), true);
@@ -758,6 +760,7 @@ fn prop_unified_scheduler_grid_bitwise_and_no_worse_bytes() {
                 },
                 seed: solver_seed,
                 compute_eigenvectors: false,
+                refine_steps: 0,
             };
             let vals = if svd_path {
                 let a = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "ua"), true);
@@ -808,6 +811,12 @@ fn prop_io_backend_grid_bitwise_and_per_device_bytes() {
     // on ER and R-MAT graphs.  Per-device equality is the strong form:
     // placement and request splitting happen before the backends
     // diverge, so not one stripe block may shift.
+    //
+    // The storage-precision axis rides the same grid with a baseline per
+    // precision: `f64` cells must stay bitwise identical to the
+    // historical default, and `f32` cells must be bitwise reproducible
+    // across every engine configuration (narrowing happens at the store
+    // boundary, before the engines diverge).
     run_prop("io-backend-grid", 2, |g| {
         let n = g.usize_in(64, 220) as u64;
         let nnz = g.usize_in(n as usize, 1800) as u64;
@@ -827,64 +836,73 @@ fn prop_io_backend_grid_bitwise_and_per_device_bytes() {
         if !svd_path {
             coo.symmetrize();
         }
-        let mut baseline: Option<(Vec<f64>, Vec<(u64, u64)>)> = None;
-        for backend in [IoBackend::Inline, IoBackend::Threaded, IoBackend::Queued] {
-            for queue_depth in [1usize, 8] {
-                for wait_mode in [WaitMode::Polling, WaitMode::Blocking] {
-                    let mut cfg = SafsConfig::untimed();
-                    cfg.io_backend = backend;
-                    cfg.queue_depth = queue_depth;
-                    cfg.wait_mode = wait_mode;
-                    let fs = Safs::new(cfg);
-                    let ctx =
-                        DenseCtx::with(fs.clone(), em, 64, 1, 3, 1, Arc::new(NativeKernels));
-                    let ecfg = flasheigen::eigen::EigenConfig {
-                        nev: 2,
-                        block_size: 2,
-                        num_blocks: 6,
-                        tol: 1e-6,
-                        max_restarts: 40,
-                        which: if svd_path {
-                            flasheigen::eigen::Which::LargestAlgebraic
-                        } else {
-                            flasheigen::eigen::Which::LargestMagnitude
-                        },
-                        seed: solver_seed,
-                        compute_eigenvectors: false,
-                    };
-                    let vals = if svd_path {
-                        let a = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "ba"), true);
-                        let at = build_matrix_opts(
-                            at_coo.as_ref().unwrap(),
-                            tile,
-                            BuildTarget::Safs(&fs, "bat"),
-                            true,
+        let run_cell = |cfg: SafsConfig| {
+            let fs = Safs::new(cfg);
+            let ctx = DenseCtx::with(fs.clone(), em, 64, 1, 3, 1, Arc::new(NativeKernels));
+            let ecfg = flasheigen::eigen::EigenConfig {
+                nev: 2,
+                block_size: 2,
+                num_blocks: 6,
+                tol: 1e-6,
+                max_restarts: 40,
+                which: if svd_path {
+                    flasheigen::eigen::Which::LargestAlgebraic
+                } else {
+                    flasheigen::eigen::Which::LargestMagnitude
+                },
+                seed: solver_seed,
+                compute_eigenvectors: false,
+                refine_steps: 0,
+            };
+            let vals = if svd_path {
+                let a = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "ba"), true);
+                let at = build_matrix_opts(
+                    at_coo.as_ref().unwrap(),
+                    tile,
+                    BuildTarget::Safs(&fs, "bat"),
+                    true,
+                );
+                let op = GramOperator::new(a, at, SpmmOpts::default(), 1);
+                flasheigen::eigen::svd(&op, &ctx, &ecfg).singular_values
+            } else {
+                let m = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "bm"), true);
+                let op = SpmmOperator::new(m, SpmmOpts::default(), 1);
+                flasheigen::eigen::solve(&op, &ctx, &ecfg).eigenvalues
+            };
+            let per_device = fs.stats().per_device;
+            (vals, per_device)
+        };
+        let precisions = [StoragePrecision::F64, StoragePrecision::F32];
+        let mut baselines: [Option<(Vec<f64>, Vec<(u64, u64)>)>; 2] = [None, None];
+        for (pi, precision) in precisions.into_iter().enumerate() {
+            for backend in [IoBackend::Inline, IoBackend::Threaded, IoBackend::Queued] {
+                for queue_depth in [1usize, 8] {
+                    for wait_mode in [WaitMode::Polling, WaitMode::Blocking] {
+                        let mut cfg = SafsConfig::untimed();
+                        cfg.io_backend = backend;
+                        cfg.queue_depth = queue_depth;
+                        cfg.wait_mode = wait_mode;
+                        cfg.storage_precision = precision;
+                        let (vals, per_device) = run_cell(cfg);
+                        let cell = format!(
+                            "engine {} / qd {queue_depth} / {wait_mode:?} / em {em} / {}",
+                            backend.name(),
+                            precision.name()
                         );
-                        let op = GramOperator::new(a, at, SpmmOpts::default(), 1);
-                        flasheigen::eigen::svd(&op, &ctx, &ecfg).singular_values
-                    } else {
-                        let m = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "bm"), true);
-                        let op = SpmmOperator::new(m, SpmmOpts::default(), 1);
-                        flasheigen::eigen::solve(&op, &ctx, &ecfg).eigenvalues
-                    };
-                    let per_device = fs.stats().per_device;
-                    let cell = format!(
-                        "engine {} / qd {queue_depth} / {wait_mode:?} / em {em}",
-                        backend.name()
-                    );
-                    match &baseline {
-                        None => baseline = Some((vals, per_device)),
-                        Some((v0, d0)) => {
-                            if &vals != v0 {
-                                return Err(format!(
-                                    "solve bits changed at {cell}: {vals:?} vs {v0:?}"
-                                ));
-                            }
-                            if &per_device != d0 {
-                                return Err(format!(
-                                    "per-device byte counts changed at {cell}: \
-                                     {per_device:?} vs {d0:?}"
-                                ));
+                        match &baselines[pi] {
+                            None => baselines[pi] = Some((vals, per_device)),
+                            Some((v0, d0)) => {
+                                if &vals != v0 {
+                                    return Err(format!(
+                                        "solve bits changed at {cell}: {vals:?} vs {v0:?}"
+                                    ));
+                                }
+                                if &per_device != d0 {
+                                    return Err(format!(
+                                        "per-device byte counts changed at {cell}: \
+                                         {per_device:?} vs {d0:?}"
+                                    ));
+                                }
                             }
                         }
                     }
@@ -970,6 +988,7 @@ fn prop_eigenvalues_within_gershgorin() {
             which: flasheigen::eigen::Which::LargestMagnitude,
             seed: g.u64(),
             compute_eigenvectors: false,
+            refine_steps: 0,
         };
         let res = flasheigen::eigen::solve(&op, &ctx, &cfg);
         for &ev in &res.eigenvalues {

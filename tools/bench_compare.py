@@ -17,8 +17,16 @@ Cells carry units ("1.23s", "4.00MiB", "2.00KiB/s", "87%", "0.62x",
 whose units disagree after normalisation (or that are not numeric at
 all) are printed verbatim without a ratio.
 
+Residual columns (header contains "residual", e.g. the fig9_precision
+"worst residual" column) get regression flagging on top of the ratio:
+a residual is an accuracy floor, not a throughput, so the script flags
+any cell that grew beyond RESIDUAL_RATIO x its old value while sitting
+above the RESIDUAL_FLOOR noise level.  Comparison happens on the
+normalised values, so the flag is unit-aware like every other ratio.
+
 Exit status: 0 = compared fine, 2 = bad usage/unreadable input,
-3 = the two documents share no table titles (nothing to compare).
+3 = the two documents share no table titles (nothing to compare),
+4 = at least one residual column regressed.
 
 Stdlib only — runs on the bare CI python3.
 """
@@ -50,6 +58,11 @@ UNIT_SCALE = {
 }
 
 CELL_RE = re.compile(r"^\s*([-+]?\d+(?:\.\d+)?(?:[eE][-+]?\d+)?)\s*([a-zA-Z%/]*)\s*$")
+
+# A residual that grows past this multiple of its old value is a
+# regression; anything at or below the floor is solver noise, not signal.
+RESIDUAL_RATIO = 4.0
+RESIDUAL_FLOOR = 1e-12
 
 
 def parse_cell(cell):
@@ -83,7 +96,11 @@ def load(path):
 
 
 def compare_tables(old, new):
-    """Print the per-cell comparison of two same-title tables."""
+    """Print the per-cell comparison of two same-title tables.
+
+    Returns the number of residual-column regressions found.
+    """
+    regressions = 0
     print(f"\n== {new['title']} ==")
     headers = new.get("headers", [])
     old_headers = old.get("headers", [])
@@ -119,7 +136,15 @@ def compare_tables(old, new):
                 continue
             a, b = parse_cell(before), parse_cell(cell)
             if a and b and a[0] == b[0] and a[1] != 0:
-                parts.append(f"{name}: {before} -> {cell} ({b[1] / a[1]:.2f}x)")
+                line = f"{name}: {before} -> {cell} ({b[1] / a[1]:.2f}x)"
+                if (
+                    "residual" in name.lower()
+                    and b[1] > a[1] * RESIDUAL_RATIO
+                    and b[1] > RESIDUAL_FLOOR
+                ):
+                    line += "  !! residual regressed"
+                    regressions += 1
+                parts.append(line)
             elif before != cell:
                 parts.append(f"{name}: {before} -> {cell}")
             else:
@@ -127,6 +152,7 @@ def compare_tables(old, new):
         print(f"  {key}:")
         for p in parts:
             print(f"    {p}")
+    return regressions
 
 
 def main(argv):
@@ -136,11 +162,12 @@ def main(argv):
     old_doc, new_doc = load(argv[1]), load(argv[2])
     old_tables = {t["title"]: t for t in old_doc["tables"] if "title" in t}
     matched = 0
+    regressions = 0
     for table in new_doc["tables"]:
         title = table.get("title")
         if title in old_tables:
             matched += 1
-            compare_tables(old_tables[title], table)
+            regressions += compare_tables(old_tables[title], table)
     unmatched_new = [t["title"] for t in new_doc["tables"] if t.get("title") not in old_tables]
     unmatched_old = [t for t in old_tables if t not in {x.get("title") for x in new_doc["tables"]}]
     for t in unmatched_new:
@@ -151,6 +178,13 @@ def main(argv):
         print("error: the two artifacts share no table titles", file=sys.stderr)
         return 3
     print(f"\ncompared {matched} table(s)")
+    if regressions:
+        print(
+            f"error: {regressions} residual cell(s) regressed beyond "
+            f"{RESIDUAL_RATIO:.0f}x (floor {RESIDUAL_FLOOR:g})",
+            file=sys.stderr,
+        )
+        return 4
     return 0
 
 
