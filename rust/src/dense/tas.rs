@@ -136,6 +136,11 @@ pub struct DenseCtx {
     /// — the f64 iterative-refinement scope
     /// ([`DenseCtx::scoped_full_precision`]).
     full_prec: AtomicBool,
+    /// Name prefix of EM backing files created by this context
+    /// (`<tag>-<id>`; default `tas`).  The resident solver service gives
+    /// each job's context a unique tag so [`crate::safs::Safs::file_bytes`]
+    /// prefix sums attribute a job's private subspace traffic exactly.
+    file_tag: Mutex<String>,
     ids: AtomicU64,
     lru: Mutex<VecDeque<Weak<MatInner>>>,
 }
@@ -159,6 +164,7 @@ impl DenseCtx {
             fused: AtomicBool::new(true),
             streamed: AtomicBool::new(true),
             full_prec: AtomicBool::new(false),
+            file_tag: Mutex::new("tas".to_string()),
             ids: AtomicU64::new(1),
             lru: Mutex::new(VecDeque::new()),
         })
@@ -187,6 +193,33 @@ impl DenseCtx {
             fused: AtomicBool::new(true),
             streamed: AtomicBool::new(true),
             full_prec: AtomicBool::new(false),
+            file_tag: Mutex::new("tas".to_string()),
+            ids: AtomicU64::new(1),
+            lru: Mutex::new(VecDeque::new()),
+        })
+    }
+
+    /// A sibling context with the same configuration but the given
+    /// memory tracker.  The resident solver pool derives every job's
+    /// context through this so all concurrent jobs charge one shared
+    /// tracker — the budget the pool's admission control reasons about.
+    /// Path toggles (fused/streamed) carry over at their current values;
+    /// id space, LRU cache and per-phase I/O accounting start fresh.
+    pub fn share_mem(self: &Arc<Self>, mem: Arc<MemTracker>) -> Arc<DenseCtx> {
+        Arc::new(DenseCtx {
+            fs: self.fs.clone(),
+            em: self.em,
+            interval_rows: self.interval_rows,
+            threads: self.threads,
+            group_size: self.group_size,
+            cache_slots: self.cache_slots,
+            kernels: self.kernels.clone(),
+            mem,
+            io_phases: PhaseIo::new(),
+            fused: AtomicBool::new(self.is_fused()),
+            streamed: AtomicBool::new(self.is_streamed()),
+            full_prec: AtomicBool::new(false),
+            file_tag: Mutex::new(self.file_tag()),
             ids: AtomicU64::new(1),
             lru: Mutex::new(VecDeque::new()),
         })
@@ -258,6 +291,21 @@ impl DenseCtx {
         let out = f();
         self.full_prec.store(was, Ordering::Relaxed);
         out
+    }
+
+    /// The EM backing-file name prefix of this context (default `tas`).
+    pub fn file_tag(&self) -> String {
+        self.file_tag.lock().unwrap().clone()
+    }
+
+    /// Set the EM backing-file name prefix for matrices created from now
+    /// on.  The resident solver service tags each job's context uniquely
+    /// (e.g. `job3`) before the solve starts, so the job's subspace
+    /// traffic is exactly the [`crate::safs::Safs::file_bytes`] sum of
+    /// its prefix.  Tags of contexts sharing one filesystem must be
+    /// distinct and prefix-free (no tag a prefix of another).
+    pub fn set_file_tag(&self, tag: &str) {
+        *self.file_tag.lock().unwrap() = tag.to_string();
     }
 
     fn next_id(&self) -> u64 {
@@ -392,7 +440,7 @@ impl TasMatrix {
         let em = ctx.em;
         let elem = ctx.storage_elem_bytes();
         let resident = !em || ctx.cache_slots > 0;
-        let file = em.then(|| ctx.fs.create(&format!("tas-{id}")));
+        let file = em.then(|| ctx.fs.create(&format!("{}-{id}", ctx.file_tag())));
         let slots: Vec<Mutex<Option<Vec<f64>>>> = (0..n_intervals)
             .map(|iv| {
                 if resident {

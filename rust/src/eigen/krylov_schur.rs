@@ -189,6 +189,12 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
             basis.push(w);
         }
 
+        // Batching yield point: the projected solve, convergence test
+        // and restart below apply the operator zero times, so a batched
+        // operator steps out of its sweep barrier here instead of
+        // stalling co-resident jobs until the next expansion.
+        op.notify_idle();
+
         // --- solve the projected problem and test convergence ---
         let m = t.rows;
         let (theta, u) = sym_eig(&t);
@@ -238,6 +244,10 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
                 refine_history = rhist;
                 eigenvectors = cfg.compute_eigenvectors.then_some(rx);
             }
+            // Batching yield point before returning: refinement's
+            // applies re-entered the sweep barrier, and the caller may
+            // hold the operator a while before dropping it.
+            op.notify_idle();
             return EigenResult {
                 eigenvalues,
                 residuals,

@@ -53,6 +53,14 @@ pub trait Operator: Sync {
     fn apply(&self, ctx: &Arc<DenseCtx>, x: &TasMatrix) -> TasMatrix;
     fn applies(&self) -> u64;
 
+    /// Solver yield point: called when the caller enters a phase that
+    /// performs no operator applies for a while (restart bookkeeping,
+    /// final residual refinement).  A multi-tenant batched operator
+    /// ([`crate::spmm::BatchedOperator`]) uses this to step out of the
+    /// sweep barrier so co-resident jobs are not stalled behind a
+    /// non-applying member; for ordinary solo operators it is a no-op.
+    fn notify_idle(&self) {}
+
     /// Streamed operator boundary (§3.4): a producer that computes `A·x`
     /// one output row interval at a time for
     /// [`FusedPipeline::source`], gathering `x`'s intervals on

@@ -81,6 +81,9 @@ impl Default for BenchCfg {
 
 impl BenchCfg {
     pub fn from_env() -> BenchCfg {
+        // Surface misspelled knobs (FLASHEIGEN_QUEUE_DEPT, …) instead of
+        // silently running at defaults — see `safs::config::KNOWN_ENV_VARS`.
+        crate::safs::config::warn_unknown_env();
         let mut c = BenchCfg::default();
         let getf = |k: &str| std::env::var(k).ok().and_then(|v| v.parse::<f64>().ok());
         if let Some(v) = getf("FLASHEIGEN_SCALE") {

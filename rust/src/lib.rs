@@ -22,6 +22,9 @@
 //!   artifacts and dispatches dense block compute to them.
 //! * [`eigen`] — Block Krylov–Schur eigensolver and SVD built on the
 //!   above.
+//! * [`service`] — resident solver sessions: graphs stay open across
+//!   requests and concurrent solves share batched SpMM sweeps under one
+//!   admission-controlled memory budget.
 //! * [`harness`] — regenerates every figure and table of the paper's
 //!   evaluation.
 
@@ -32,6 +35,7 @@ pub mod harness;
 pub mod metrics;
 pub mod runtime;
 pub mod safs;
+pub mod service;
 pub mod sparse;
 pub mod spmm;
 pub mod util;

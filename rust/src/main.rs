@@ -3,8 +3,9 @@
 //! ```text
 //! flasheigen eigen   --graph friendster --nev 8 [--sem] [--xla] ...
 //! flasheigen svd     --graph page --nev 8 [--sem] ...
+//! flasheigen serve   --graph friendster --jobs "nev=4; nev=8" [--batch-applies 4]
 //! flasheigen spmm    --graph twitter --cols 4 [--sem]
-//! flasheigen figures --exp fig6|fig7|fig8|fig9|fig10|fig11|fig12|table2|table3|all
+//! flasheigen figures --exp fig6|...|fig13|table2|table3|all
 //! flasheigen info
 //! ```
 
@@ -13,6 +14,7 @@ use flasheigen::eigen::{solve, EigenConfig, SpmmOperator, Which};
 use flasheigen::graph::Dataset;
 use flasheigen::harness::{self, BenchCfg};
 use flasheigen::runtime::{find_artifacts_dir, XlaKernels};
+use flasheigen::service::{GraphSession, JobSpec, SolverPool};
 use flasheigen::spmm::{spmm, DenseBlock, SpmmOpts};
 use flasheigen::util::cli::Args;
 use flasheigen::util::humansize::fmt_bytes;
@@ -29,9 +31,30 @@ USAGE:
 COMMANDS:
   eigen     compute eigenvalues of a (symmetrized) graph
   svd       compute singular values of a directed graph (AᵀA operator)
+  serve     hold the graph resident (SEM image on the array) and run many
+            eigensolve/SVD jobs through the multi-tenant solver pool:
+            concurrent jobs' operator applies coalesce into shared image
+            sweeps, per-job results bitwise identical to serving them
+            one at a time
   spmm      run one sparse × dense multiplication and report stats
   figures   regenerate the paper's tables/figures (--exp <id>|all)
   info      print build/runtime information
+
+SERVE OPTIONS:
+  --jobs <file|list> job specs: a file path (one spec per line, '#'
+                     comments) or an inline ';'-separated list, e.g.
+                     \"nev=4; nev=8 block=4 em=0\".  Each spec is
+                     `key=value ...` with keys name nev block nblocks
+                     tol restarts seed refine em (em=1 keeps the job's
+                     subspace on the array — the default)
+  --batch-applies <k> max jobs in flight, i.e. the admission width of
+                     the solver pool (default $FLASHEIGEN_BATCH_APPLIES
+                     or 4; 1 = sequential serving, the baseline)
+  --budget <B>       shared working-set budget in bytes for admission
+                     control (size suffixes accepted; default 0 =
+                     unlimited): a job whose conservative working-set
+                     estimate does not fit next to the already-reserved
+                     bytes queues until completions make room
 
 COMMON OPTIONS:
   --graph <twitter|friendster|knn|page>   dataset (default friendster)
@@ -113,7 +136,8 @@ fn main() {
         &[
             "graph", "scale", "nev", "block", "nblocks", "tol", "threads", "dilation",
             "cols", "exp", "seed", "read-ahead", "image-cache", "bench-json",
-            "queue-depth", "io-engine", "precision", "refine",
+            "queue-depth", "io-engine", "precision", "refine", "jobs", "batch-applies",
+            "budget",
         ],
         &["sem", "xla", "eager", "fused", "streamed"],
     ) {
@@ -127,6 +151,7 @@ fn main() {
     let code = match cmd.as_str() {
         "eigen" => cmd_eigen(&args, false),
         "svd" => cmd_eigen(&args, true),
+        "serve" => cmd_serve(&args),
         "spmm" => cmd_spmm(&args),
         "figures" => cmd_figures(&args),
         "info" => cmd_info(),
@@ -306,6 +331,136 @@ fn cmd_eigen(args: &Args, as_svd: bool) -> i32 {
     }
 }
 
+/// `flasheigen serve` — the resident-session driver: build the graph's
+/// SEM image once, open a [`GraphSession`] over it (SVD session for
+/// directed datasets, eigen session otherwise) and push every `--jobs`
+/// spec through one admission-controlled [`SolverPool`].
+fn cmd_serve(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let cfg = bench_cfg(args)?;
+        let ds = dataset(args)?;
+        let env_width = std::env::var("FLASHEIGEN_BATCH_APPLIES")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(4);
+        let batch_applies = args.get_usize("batch-applies", env_width)?.max(1);
+        let budget = args.get_u64("budget", 0)?;
+
+        // Job specs: a file (one per line) or an inline ';'-separated list.
+        let jobs_arg = args.get_or("jobs", "nev=4; nev=8 block=4; nev=2 em=0");
+        let text = match std::fs::read_to_string(jobs_arg) {
+            Ok(t) => t,
+            Err(_) => jobs_arg.replace(';', "\n"),
+        };
+        let mut specs = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            specs.push(JobSpec::parse(line)?);
+        }
+        if specs.is_empty() {
+            return Err("--jobs produced no job specs".into());
+        }
+
+        eprintln!(
+            "generating {} at scale {:.2e} (seed {})...",
+            ds.name(),
+            cfg.scale,
+            cfg.seed
+        );
+        let coo = cfg.gen(ds);
+        let fs = cfg.timed_safs();
+        let mut sess = if ds.directed() {
+            let at = cfg.build_sem(&coo.transpose(), &fs, "serve-at");
+            let a = cfg.build_sem(&coo, &fs, "serve-a");
+            GraphSession::svd(
+                ds.name(),
+                fs.clone(),
+                a,
+                at,
+                SpmmOpts::default(),
+                cfg.threads,
+                cfg.interval_rows,
+            )
+        } else {
+            let a = cfg.build_sem(&coo, &fs, "serve-a");
+            GraphSession::eigen(
+                ds.name(),
+                fs.clone(),
+                a,
+                SpmmOpts::default(),
+                cfg.threads,
+                cfg.interval_rows,
+            )
+        };
+        // Same dense-layer tuning knobs as the solo drivers.
+        if let Some(n) = std::env::var("FLASHEIGEN_CACHE_SLOTS").ok().and_then(|v| v.parse().ok())
+        {
+            sess.cache_slots = n;
+        }
+        if let Some(n) = std::env::var("FLASHEIGEN_GROUP_SIZE").ok().and_then(|v| v.parse().ok())
+        {
+            sess.group_size = n;
+        }
+        eprintln!(
+            "session {}: {} |V|={} |E|={} image={} | jobs={} batch_applies={batch_applies} budget={}",
+            sess.name,
+            if sess.is_svd() { "svd" } else { "eigen" },
+            coo.n_rows,
+            coo.nnz(),
+            fmt_bytes(sess.image_bytes()),
+            specs.len(),
+            if budget == 0 { "unlimited".to_string() } else { fmt_bytes(budget) },
+        );
+
+        let pool = SolverPool::new(budget, batch_applies);
+        let before = fs.stats();
+        let (reports, secs) = time_it(|| pool.run(&sess, &specs));
+        let delta = fs.stats().delta_since(&before);
+        for r in &reports {
+            println!(
+                "job {:<10} converged={} restarts={} applies={} image={} subspace r/w={}/{}",
+                r.name,
+                r.converged,
+                r.restarts,
+                r.operator_applies,
+                fmt_bytes(r.image_bytes),
+                fmt_bytes(r.subspace_read),
+                fmt_bytes(r.subspace_written),
+            );
+            println!("  values: {:?}", r.values);
+        }
+        let image: u64 = reports.iter().map(|r| r.image_bytes).sum();
+        println!(
+            "pool: sweeps={} max_width={} peaks admitted={} queued={} reserved={} mem={}",
+            sess.batcher().sweeps(),
+            sess.batcher().max_width(),
+            pool.admitted.high_water(),
+            pool.queued.high_water(),
+            fmt_bytes(pool.reserved.high_water()),
+            fmt_bytes(pool.mem.peak()),
+        );
+        println!(
+            "ssd: read {} (image {} = {:.2}x one sweep) write {} | wall {}",
+            fmt_bytes(delta.bytes_read),
+            fmt_bytes(image),
+            image as f64 / sess.image_bytes().max(1) as f64,
+            fmt_bytes(delta.bytes_written),
+            fmt_secs(secs),
+        );
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
 fn cmd_spmm(args: &Args) -> i32 {
     let run = || -> Result<(), String> {
         let cfg = bench_cfg(args)?;
@@ -410,6 +565,12 @@ fn cmd_figures(args: &Args) -> i32 {
         }
         if want("fig11") {
             emit(harness::fig11(&cfg, dense_n, 4, &[4, 16, 64, 256]));
+            ran = true;
+        }
+        if want("fig13") {
+            // Same 16x scale-up as the other streamed-SEM ablations so
+            // the subspace spans several row intervals.
+            emit(harness::fig13_batching(&cfg, 16.0, &[1, 2, 4]));
             ran = true;
         }
         if want("fig12") {

@@ -29,6 +29,42 @@ impl Counter {
     }
 }
 
+/// A settable level gauge with a high-water mark, safe to move from
+/// worker threads.  Where [`Counter`] models "how much happened",
+/// `Gauge` models "how much is held right now" — the solver pool uses
+/// gauges for admitted jobs, queued jobs, and reserved working-set
+/// bytes under the shared admission budget.
+#[derive(Default, Debug)]
+pub struct Gauge {
+    level: AtomicU64,
+    high: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.level.store(v, Ordering::Relaxed);
+        self.high.fetch_max(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, v: u64) {
+        let cur = self.level.fetch_add(v, Ordering::Relaxed) + v;
+        self.high.fetch_max(cur, Ordering::Relaxed);
+    }
+    pub fn sub(&self, v: u64) {
+        self.level.fetch_sub(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.level.load(Ordering::Relaxed)
+    }
+    /// Highest level ever observed (the admission-pressure report value).
+    pub fn high_water(&self) -> u64 {
+        self.high.load(Ordering::Relaxed)
+    }
+    pub fn reset(&self) {
+        self.level.store(0, Ordering::Relaxed);
+        self.high.store(0, Ordering::Relaxed);
+    }
+}
+
 /// Accumulates wall-clock seconds per named phase.
 #[derive(Default)]
 pub struct PhaseTimers {

@@ -110,6 +110,56 @@ impl StoragePrecision {
     }
 }
 
+/// Every `FLASHEIGEN_*` environment variable any layer of the system
+/// reads.  [`warn_unknown_env`] checks the process environment against
+/// this list so a misspelled variable (`FLASHEIGEN_QUEUE_DEPT`) warns
+/// loudly instead of being silently ignored.
+pub const KNOWN_ENV_VARS: &[&str] = &[
+    "FLASHEIGEN_SCALE",
+    "FLASHEIGEN_THREADS",
+    "FLASHEIGEN_DILATION",
+    "FLASHEIGEN_READ_AHEAD",
+    "FLASHEIGEN_IMAGE_CACHE",
+    "FLASHEIGEN_QUEUE_DEPTH",
+    "FLASHEIGEN_IO_ENGINE",
+    "FLASHEIGEN_PRECISION",
+    "FLASHEIGEN_CACHE_SLOTS",
+    "FLASHEIGEN_GROUP_SIZE",
+    "FLASHEIGEN_BATCH_APPLIES",
+    "FLASHEIGEN_ARTIFACTS",
+    "FLASHEIGEN_PROP_SEED",
+];
+
+/// The names in `vars` that look like they were meant for us
+/// (`FLASHEIGEN_` prefix) but match nothing in `known` — the pure core
+/// of [`warn_unknown_env`], unit-testable without touching the process
+/// environment.
+pub fn unknown_env_vars(
+    known: &[&str],
+    vars: impl IntoIterator<Item = String>,
+) -> Vec<String> {
+    let mut bad: Vec<String> = vars
+        .into_iter()
+        .filter(|name| name.starts_with("FLASHEIGEN_") && !known.contains(&name.as_str()))
+        .collect();
+    bad.sort();
+    bad
+}
+
+/// Scan the process environment for `FLASHEIGEN_*` variables that no
+/// layer reads and print one warning per offender to stderr.  Called
+/// once per run from the env-driven config constructor
+/// (`BenchCfg::from_env`), so a typo like `FLASHEIGEN_QUEUE_DEPT=64`
+/// surfaces instead of silently running at the default depth.  Returns
+/// the offending names (sorted) so callers/tests can inspect them.
+pub fn warn_unknown_env() -> Vec<String> {
+    let bad = unknown_env_vars(KNOWN_ENV_VARS, std::env::vars().map(|(k, _)| k));
+    for name in &bad {
+        eprintln!("warning: unrecognized environment variable {name} (typo? see KNOWN_ENV_VARS)");
+    }
+    bad
+}
+
 /// Full SAFS + simulated-SSD-array configuration.
 #[derive(Clone, Debug)]
 pub struct SafsConfig {
@@ -368,6 +418,30 @@ mod tests {
             assert_eq!(IoBackend::from_name(b.name()), Some(b));
         }
         assert_eq!(IoBackend::from_name("uring"), None);
+    }
+
+    #[test]
+    fn unknown_env_vars_flags_typos_only() {
+        let vars = vec![
+            "FLASHEIGEN_QUEUE_DEPT".to_string(), // the motivating typo
+            "FLASHEIGEN_QUEUE_DEPTH".to_string(),
+            "FLASHEIGEN_SCALE".to_string(),
+            "PATH".to_string(),   // foreign vars are none of our business
+            "FLASHEIGEN".to_string(), // no underscore: not our namespace
+            "FLASHEIGEN_ZZZ".to_string(),
+        ];
+        let bad = unknown_env_vars(KNOWN_ENV_VARS, vars);
+        assert_eq!(bad, vec!["FLASHEIGEN_QUEUE_DEPT", "FLASHEIGEN_ZZZ"]);
+    }
+
+    #[test]
+    fn known_env_list_covers_every_documented_knob() {
+        for name in ["FLASHEIGEN_QUEUE_DEPTH", "FLASHEIGEN_PRECISION", "FLASHEIGEN_BATCH_APPLIES"]
+        {
+            assert!(KNOWN_ENV_VARS.contains(&name), "{name} missing from KNOWN_ENV_VARS");
+        }
+        // All knobs live in one namespace so the scan can own it.
+        assert!(KNOWN_ENV_VARS.iter().all(|n| n.starts_with("FLASHEIGEN_")));
     }
 
     #[test]

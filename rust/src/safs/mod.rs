@@ -42,6 +42,11 @@ pub struct Safs {
     /// makes hot tile-row images survive from one operator apply to the
     /// next ([`SafsConfig::image_cache_bytes`]; 0 = disabled).
     image_cache: Arc<ImageCache>,
+    /// Per-file transfer counters of deleted (or truncated) files, folded
+    /// in by name so [`Safs::file_bytes`] attribution survives the file
+    /// lifecycle — the solver deletes external-memory subspace blocks
+    /// mid-run, and their traffic must stay attributed to their job.
+    retired: Mutex<HashMap<String, (u64, u64)>>,
 }
 
 impl Safs {
@@ -53,6 +58,7 @@ impl Safs {
             files: RwLock::new(HashMap::new()),
             rng: Mutex::new(Rng::new(0x5AF5_u64)),
             image_cache,
+            retired: Mutex::new(HashMap::new()),
         })
     }
 
@@ -91,8 +97,19 @@ impl Safs {
         let file: FileHandle = Arc::new(SafsFile::new(name, stripe));
         // Truncation invalidates any cached image bytes under this name.
         self.image_cache.invalidate_file(name);
-        self.files.write().unwrap().insert(name.to_string(), file.clone());
+        let prev = self.files.write().unwrap().insert(name.to_string(), file.clone());
+        if let Some(old) = prev {
+            self.retire(name, &old);
+        }
         file
+    }
+
+    /// Fold a replaced/removed handle's counters into the retired map.
+    fn retire(&self, name: &str, old: &FileHandle) {
+        let mut retired = self.retired.lock().unwrap();
+        let e = retired.entry(name.to_string()).or_insert((0, 0));
+        e.0 += old.bytes_read();
+        e.1 += old.bytes_written();
     }
 
     pub fn open(&self, name: &str) -> Option<FileHandle> {
@@ -101,7 +118,13 @@ impl Safs {
 
     pub fn delete(&self, name: &str) -> bool {
         self.image_cache.invalidate_file(name);
-        self.files.write().unwrap().remove(name).is_some()
+        match self.files.write().unwrap().remove(name) {
+            Some(old) => {
+                self.retire(name, &old);
+                true
+            }
+            None => false,
+        }
     }
 
     pub fn exists(&self, name: &str) -> bool {
@@ -117,6 +140,36 @@ impl Safs {
     /// Total bytes of storage allocated across all files.
     pub fn allocated(&self) -> u64 {
         self.files.read().unwrap().values().map(|f| f.allocated()).sum()
+    }
+
+    /// `(bytes_read, bytes_written)` summed over every file — live,
+    /// deleted or truncated — whose name starts with `prefix` (per-file
+    /// counters are recorded at the same [`SafsFile::reserve_range`]
+    /// chokepoint as the array ledger, so summing disjoint prefixes that
+    /// cover every file ever created reproduces the global totals
+    /// exactly).  This is the attribution primitive of the resident
+    /// solver service: each job's external-memory subspace files carry a
+    /// per-job name prefix, so a job's private traffic is one prefix sum,
+    /// and deleting a subspace block mid-solve does not lose its bytes
+    /// (deleted/truncated counters are folded into a retired map — one
+    /// entry per unique name, bounded by the number of names ever used).
+    pub fn file_bytes(&self, prefix: &str) -> (u64, u64) {
+        let files = self.files.read().unwrap();
+        let mut read = 0u64;
+        let mut written = 0u64;
+        for (name, f) in files.iter() {
+            if name.starts_with(prefix) {
+                read += f.bytes_read();
+                written += f.bytes_written();
+            }
+        }
+        for (name, &(r, w)) in self.retired.lock().unwrap().iter() {
+            if name.starts_with(prefix) {
+                read += r;
+                written += w;
+            }
+        }
+        (read, written)
     }
 
     // ---- async I/O (the hot path) ----
@@ -185,6 +238,42 @@ mod tests {
         let s = fs.stats();
         assert_eq!(s.bytes_written, 10_000);
         assert_eq!(s.bytes_read, 10_000);
+    }
+
+    #[test]
+    fn file_bytes_sums_by_prefix_and_matches_the_ledger() {
+        let fs = Safs::new(SafsConfig::untimed());
+        let a0 = fs.create("job0-x");
+        let a1 = fs.create("job0-y");
+        let b = fs.create("job1-x");
+        fs.write_sync(&a0, 0, vec![0u8; 100]);
+        fs.write_sync(&a1, 0, vec![0u8; 30]);
+        fs.write_sync(&b, 0, vec![0u8; 7]);
+        let _ = fs.read_sync(&a0, 0, 40);
+        assert_eq!(fs.file_bytes("job0"), (40, 130));
+        assert_eq!(fs.file_bytes("job1"), (0, 7));
+        assert_eq!(fs.file_bytes("nope"), (0, 0));
+        // Disjoint prefixes covering every file reproduce the ledger.
+        let s = fs.stats();
+        let (r0, w0) = fs.file_bytes("job0");
+        let (r1, w1) = fs.file_bytes("job1");
+        assert_eq!((r0 + r1, w0 + w1), (s.bytes_read, s.bytes_written));
+    }
+
+    #[test]
+    fn file_bytes_retains_deleted_and_truncated_traffic() {
+        let fs = Safs::new(SafsConfig::untimed());
+        let f = fs.create("job0-a");
+        fs.write_sync(&f, 0, vec![0u8; 64]);
+        let _ = fs.read_sync(&f, 0, 10);
+        drop(f);
+        fs.delete("job0-a");
+        assert_eq!(fs.file_bytes("job0"), (10, 64), "deleted counters retained");
+        let f2 = fs.create("job0-a");
+        fs.write_sync(&f2, 0, vec![0u8; 5]);
+        assert_eq!(fs.file_bytes("job0"), (10, 69), "truncation retires old counters");
+        let s = fs.stats();
+        assert_eq!((s.bytes_read, s.bytes_written), (10, 69));
     }
 
     #[test]

@@ -1,0 +1,591 @@
+//! Resident solver sessions and the multi-tenant solver pool.
+//!
+//! FlashEigen's deployment story (paper §5) is a *service*: the graph
+//! lives on the SSD array once and many spectral queries run against it.
+//! This module is that serving layer:
+//!
+//! * [`GraphSession`] keeps a graph resident across requests — the SAFS
+//!   array handles, the sparse image's tile-row index, the shared
+//!   cross-apply [`crate::safs::ImageCache`], and the session-wide
+//!   [`crate::spmm::SpmmBatcher`] all stay alive between jobs, so a new
+//!   request pays no rebuild/reopen cost.
+//! * [`SolverPool`] admits concurrent eigensolve/SVD jobs against a
+//!   session under one shared [`MemTracker`] budget.  Jobs whose
+//!   estimated working set would overflow the budget **queue** (FIFO in
+//!   submission order) instead of thrashing; `batch_applies` caps how
+//!   many jobs are in flight (1 = classic sequential serving).
+//! * Admitted jobs solve through [`crate::spmm::BatchedOperator`]s on
+//!   the session's batcher: pending `A·X_i` applies against the same
+//!   matrix coalesce into **one** streamed image sweep that multiplies
+//!   every job's panel per tile-row read.  Each job's converged result
+//!   is bitwise identical to running it alone (see
+//!   [`crate::spmm::batch`]); only the I/O schedule changes.
+//!
+//! **Attribution.**  The global SAFS ledger cannot tell concurrent
+//! tenants apart (`DenseCtx::io_phases` scope deltas are only meaningful
+//! for a solo run), so the service builds each job's ledger from exact
+//! per-source counters instead: the batcher splits every sweep's
+//! measured image bytes over its participants, and each job's context
+//! tags its subspace files with a unique prefix
+//! ([`crate::dense::DenseCtx::set_file_tag`]) so
+//! [`crate::safs::Safs::file_bytes`] prefix sums are the job's private
+//! traffic.  Summed over all jobs, the per-job ledgers reproduce the
+//! array ledger exactly — pinned in `tests/io_accounting.rs`.
+
+use crate::dense::{DenseCtx, DenseKernels, NativeKernels};
+use crate::eigen::{solve, EigenConfig, Which};
+use crate::metrics::{Gauge, MemTracker};
+use crate::safs::Safs;
+use crate::sparse::SparseMatrix;
+use crate::spmm::{BatchedOperator, SpmmBatcher, SpmmOpts};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A graph held resident for serving: SAFS handles, sparse image index
+/// and the session-wide SpMM batcher stay alive across requests.
+///
+/// A session is either an **eigen** session (symmetric `A`, jobs solve
+/// `A·x = λx`) or an **SVD** session (`A`/`Aᵀ` pair, jobs solve the
+/// normal equations `AᵀA·x = σ²x`); every job submitted to it runs the
+/// corresponding operator.
+pub struct GraphSession {
+    pub name: String,
+    fs: Arc<Safs>,
+    batcher: Arc<SpmmBatcher>,
+    svd: bool,
+    /// Dense-layer geometry inherited by every job context.
+    pub interval_rows: usize,
+    pub threads: usize,
+    pub group_size: usize,
+    pub cache_slots: usize,
+    kernels: Arc<dyn DenseKernels>,
+}
+
+impl GraphSession {
+    /// Resident session over a symmetric matrix (eigensolve jobs).
+    pub fn eigen(
+        name: &str,
+        fs: Arc<Safs>,
+        matrix: SparseMatrix,
+        opts: SpmmOpts,
+        threads: usize,
+        interval_rows: usize,
+    ) -> GraphSession {
+        GraphSession {
+            name: name.to_string(),
+            batcher: SpmmBatcher::new(matrix, opts, threads),
+            svd: false,
+            fs,
+            interval_rows,
+            threads,
+            group_size: 8,
+            cache_slots: 1,
+            kernels: Arc::new(NativeKernels),
+        }
+    }
+
+    /// Resident session over an `A`/`Aᵀ` pair (SVD jobs via `AᵀA`).
+    pub fn svd(
+        name: &str,
+        fs: Arc<Safs>,
+        a: SparseMatrix,
+        at: SparseMatrix,
+        opts: SpmmOpts,
+        threads: usize,
+        interval_rows: usize,
+    ) -> GraphSession {
+        GraphSession {
+            name: name.to_string(),
+            batcher: SpmmBatcher::new_gram(a, at, opts, threads),
+            svd: true,
+            fs,
+            interval_rows,
+            threads,
+            group_size: 8,
+            cache_slots: 1,
+            kernels: Arc::new(NativeKernels),
+        }
+    }
+
+    pub fn fs(&self) -> &Arc<Safs> {
+        &self.fs
+    }
+
+    pub fn batcher(&self) -> &Arc<SpmmBatcher> {
+        &self.batcher
+    }
+
+    pub fn is_svd(&self) -> bool {
+        self.svd
+    }
+
+    /// Operator dimension jobs solve in.
+    pub fn dim(&self) -> usize {
+        self.batcher.dim()
+    }
+
+    /// On-array bytes of the resident sparse image(s) — the cost of one
+    /// cold full sweep.
+    pub fn image_bytes(&self) -> u64 {
+        self.batcher.image_storage_bytes()
+    }
+
+    /// Register one job slot on the session batcher.  The pool registers
+    /// every job of an admission wave *before* spawning any of their
+    /// solve threads, so the wave's cold sweep runs at full width.
+    pub fn register_job(&self) -> BatchedOperator {
+        self.batcher.register()
+    }
+
+    /// A job-private dense context on the session filesystem: shared
+    /// memory tracker (the pool budget), unique subspace file prefix
+    /// (`<tag>-…`) for exact attribution.
+    pub fn job_ctx(&self, tag: &str, em: bool, mem: Arc<MemTracker>) -> Arc<DenseCtx> {
+        let ctx = DenseCtx::with(
+            self.fs.clone(),
+            em,
+            self.interval_rows,
+            self.threads,
+            self.group_size,
+            self.cache_slots,
+            self.kernels.clone(),
+        )
+        .share_mem(mem);
+        ctx.set_file_tag(tag);
+        ctx
+    }
+}
+
+/// One solve request against a [`GraphSession`].
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub name: String,
+    /// SSD-backed subspace (FE-EM) or in-memory subspace (FE-IM).
+    pub em: bool,
+    pub cfg: EigenConfig,
+}
+
+impl JobSpec {
+    /// Parse a job spec of the form `key=value …` (whitespace-separated).
+    /// Keys: `name`, `nev`, `block`, `nblocks`, `tol`, `restarts`,
+    /// `seed`, `refine`, `em` (0/1).  Unset keys take serving defaults
+    /// (`nev=4 block=2 nblocks=8 tol=1e-6 restarts=200 em=1`).
+    pub fn parse(s: &str) -> Result<JobSpec, String> {
+        let mut cfg = EigenConfig {
+            nev: 4,
+            block_size: 2,
+            num_blocks: 8,
+            tol: 1e-6,
+            max_restarts: 200,
+            which: Which::LargestMagnitude,
+            seed: 0xE16E,
+            compute_eigenvectors: false,
+            refine_steps: 0,
+        };
+        let mut name = String::new();
+        let mut em = true;
+        for tok in s.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("bad job token {tok:?} (want key=value)"))?;
+            let bad = || format!("bad value {v:?} for job key {k:?}");
+            match k {
+                "name" => name = v.to_string(),
+                "nev" => cfg.nev = v.parse().map_err(|_| bad())?,
+                "block" => cfg.block_size = v.parse().map_err(|_| bad())?,
+                "nblocks" => cfg.num_blocks = v.parse().map_err(|_| bad())?,
+                "tol" => cfg.tol = v.parse().map_err(|_| bad())?,
+                "restarts" => cfg.max_restarts = v.parse().map_err(|_| bad())?,
+                "seed" => cfg.seed = v.parse().map_err(|_| bad())?,
+                "refine" => cfg.refine_steps = v.parse().map_err(|_| bad())?,
+                "em" => em = v.parse::<u8>().map_err(|_| bad())? != 0,
+                _ => return Err(format!("unknown job key {k:?}")),
+            }
+        }
+        if name.is_empty() {
+            name = format!("nev{}", cfg.nev);
+        }
+        Ok(JobSpec { name, em, cfg })
+    }
+}
+
+/// A finished job: converged spectrum plus the job's exact I/O ledger.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub name: String,
+    /// Eigenvalues (eigen session) or singular values (SVD session).
+    pub values: Vec<f64>,
+    pub residuals: Vec<f64>,
+    pub converged: bool,
+    pub restarts: usize,
+    pub operator_applies: u64,
+    /// This job's exact share of the batched image sweeps' device bytes.
+    pub image_bytes: u64,
+    /// Device bytes of the job's private (prefix-tagged) subspace files.
+    pub subspace_read: u64,
+    pub subspace_written: u64,
+}
+
+impl JobReport {
+    /// Total device bytes read on this job's behalf.
+    pub fn bytes_read(&self) -> u64 {
+        self.image_bytes + self.subspace_read
+    }
+}
+
+/// Multi-tenant admission control + job driver over one shared memory
+/// budget.
+///
+/// **Admission rules.**  Jobs are admitted FIFO in submission order.  A
+/// job is admissible when (a) fewer than `batch_applies` jobs are in
+/// flight, and (b) its conservatively estimated working set
+/// ([`SolverPool::working_set_estimate`]) fits in `budget` beside the
+/// bytes already reserved — except that a job larger than the whole
+/// budget is admitted *alone* (it runs solo rather than never).
+/// Everything admitted in one wave is registered on the session batcher
+/// before any of the wave's solve threads start, so the wave's cold
+/// sweep serves all of them from one image pass.  Inadmissible jobs
+/// queue; each completion releases its reservation and re-runs
+/// admission.
+///
+/// The [`Gauge`]s expose the pool's live state (and high-water marks):
+/// `admitted` jobs in flight, `queued` jobs waiting, `reserved` bytes of
+/// working-set reservations against `budget`.
+pub struct SolverPool {
+    /// Working-set budget in bytes; 0 = unlimited.
+    pub budget: u64,
+    /// Max jobs in flight (1 = sequential serving).
+    pub batch_applies: usize,
+    /// The one tracker every job context charges.
+    pub mem: Arc<MemTracker>,
+    pub admitted: Gauge,
+    pub queued: Gauge,
+    pub reserved: Gauge,
+    runs: AtomicU64,
+}
+
+impl SolverPool {
+    pub fn new(budget: u64, batch_applies: usize) -> SolverPool {
+        SolverPool {
+            budget,
+            batch_applies: batch_applies.max(1),
+            mem: Arc::new(MemTracker::default()),
+            admitted: Gauge::default(),
+            queued: Gauge::default(),
+            reserved: Gauge::default(),
+            runs: AtomicU64::new(0),
+        }
+    }
+
+    /// Conservative working-set model used for admission: the panels a
+    /// batched apply holds live (row-major input + output, plus the Gram
+    /// intermediate), plus the resident subspace — full `m_max + b`
+    /// blocks for FE-IM, one active block for FE-EM (the rest lives on
+    /// the array).
+    pub fn working_set_estimate(session: &GraphSession, spec: &JobSpec) -> u64 {
+        let n = session.dim() as u64;
+        let b = spec.cfg.block_size.max(1) as u64;
+        let panel = n * b * 8;
+        let apply = panel * if session.is_svd() { 3 } else { 2 };
+        let m_max = (b * spec.cfg.num_blocks.max(2) as u64).min(n);
+        let subspace = if spec.em { panel } else { (m_max + b) * n * 8 };
+        apply + subspace
+    }
+
+    /// Run `specs` against `session` and return their reports in
+    /// submission order.  Blocks until every job (including queued ones)
+    /// has completed.
+    pub fn run(&self, session: &GraphSession, specs: &[JobSpec]) -> Vec<JobReport> {
+        let k = specs.len();
+        if k == 0 {
+            return Vec::new();
+        }
+        let run_id = self.runs.fetch_add(1, Ordering::Relaxed);
+        self.queued.set(k as u64);
+        let mut reports: Vec<Option<JobReport>> = (0..k).map(|_| None).collect();
+        let mut est_of = vec![0u64; k];
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, JobReport)>();
+        std::thread::scope(|s| {
+            let mut next = 0usize;
+            let mut running = 0usize;
+            loop {
+                // Admit the longest admissible FIFO prefix, registering
+                // every operator of the wave before spawning any thread:
+                // a registered slot counts in the sweep barrier, which is
+                // what makes the wave's cold sweep full-width.
+                let mut wave: Vec<(usize, BatchedOperator, Arc<DenseCtx>)> = Vec::new();
+                while next < k && running + wave.len() < self.batch_applies {
+                    let est = Self::working_set_estimate(session, &specs[next]);
+                    let fits = self.budget == 0
+                        || self.reserved.get() + est <= self.budget
+                        || running + wave.len() == 0;
+                    if !fits {
+                        break;
+                    }
+                    self.reserved.add(est);
+                    est_of[next] = est;
+                    let op = session.register_job();
+                    let tag = format!("r{run_id}j{next}");
+                    let ctx = session.job_ctx(&tag, specs[next].em, self.mem.clone());
+                    wave.push((next, op, ctx));
+                    next += 1;
+                }
+                for (i, op, ctx) in wave {
+                    running += 1;
+                    self.queued.sub(1);
+                    self.admitted.add(1);
+                    let tx = tx.clone();
+                    let spec = &specs[i];
+                    let tag = format!("r{run_id}j{i}");
+                    s.spawn(move || {
+                        let report = run_job(session, op, &ctx, spec, &tag);
+                        // The pool outlives every job thread; a send can
+                        // only fail if the receiver loop panicked.
+                        let _ = tx.send((i, report));
+                    });
+                }
+                if running == 0 && next >= k {
+                    break;
+                }
+                let (i, rep) = rx.recv().expect("job thread died without reporting");
+                reports[i] = Some(rep);
+                running -= 1;
+                self.admitted.sub(1);
+                self.reserved.sub(est_of[i]);
+            }
+        });
+        reports.into_iter().map(Option::unwrap).collect()
+    }
+}
+
+/// Solve one admitted job and assemble its report + exact ledger.
+fn run_job(
+    session: &GraphSession,
+    op: BatchedOperator,
+    ctx: &Arc<DenseCtx>,
+    spec: &JobSpec,
+    tag: &str,
+) -> JobReport {
+    let slot = op.slot();
+    // The SVD session solves the PSD normal equations: largest-magnitude
+    // equals largest-algebraic; LA gives cleaner selection (same policy
+    // as the solo `eigen::svd` driver).
+    let cfg = if session.is_svd() {
+        EigenConfig { which: Which::LargestAlgebraic, ..spec.cfg.clone() }
+    } else {
+        spec.cfg.clone()
+    };
+    let res = solve(&op, ctx, &cfg);
+    // Departing the batch before assembling the report: co-resident jobs
+    // stop waiting on this slot immediately, and the slot's image share
+    // is final from here on.
+    drop(op);
+    let values: Vec<f64> = if session.is_svd() {
+        res.eigenvalues.iter().map(|&l| l.max(0.0).sqrt()).collect()
+    } else {
+        res.eigenvalues.clone()
+    };
+    let (subspace_read, subspace_written) = session.fs().file_bytes(&format!("{tag}-"));
+    JobReport {
+        name: spec.name.clone(),
+        values,
+        residuals: res.residuals,
+        converged: res.converged,
+        restarts: res.restarts,
+        operator_applies: res.operator_applies,
+        image_bytes: session.batcher().image_share(slot),
+        subspace_read,
+        subspace_written,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eigen::SpmmOperator;
+    use crate::graph::gnm_undirected;
+    use crate::safs::SafsConfig;
+    use crate::sparse::{build_matrix_opts, BuildTarget, CooMatrix};
+    use crate::util::rng::Rng;
+
+    fn test_graph(seed: u64) -> CooMatrix {
+        let mut rng = Rng::new(seed);
+        gnm_undirected(260, 1100, &mut rng)
+    }
+
+    fn spec(name: &str, seed: u64, em: bool) -> JobSpec {
+        JobSpec {
+            name: name.to_string(),
+            em,
+            cfg: EigenConfig {
+                nev: 3,
+                block_size: 2,
+                num_blocks: 8,
+                tol: 1e-7,
+                max_restarts: 300,
+                which: Which::LargestMagnitude,
+                seed,
+                compute_eigenvectors: false,
+                refine_steps: 0,
+            },
+        }
+    }
+
+    fn session(coo: &CooMatrix) -> GraphSession {
+        let fs = Safs::new(SafsConfig::untimed());
+        let m = build_matrix_opts(coo, 64, BuildTarget::Safs(&fs, "graph-img"), true);
+        GraphSession::eigen("g", fs, m, SpmmOpts::default(), 2, 64)
+    }
+
+    #[test]
+    fn concurrent_serving_matches_sequential_serving_bitwise() {
+        let coo = test_graph(31);
+        let specs =
+            [spec("a", 40, false), spec("b", 41, true), spec("c", 42, false)];
+
+        // Sequential baseline: same service layer, one job in flight.
+        let seq_sess = session(&coo);
+        let seq = SolverPool::new(0, 1).run(&seq_sess, &specs);
+        assert_eq!(seq_sess.batcher().max_width(), 1);
+
+        // Concurrent: all three share the sweeps.
+        let sess = session(&coo);
+        let pool = SolverPool::new(0, 4);
+        let reports = pool.run(&sess, &specs);
+        assert_eq!(reports.len(), 3);
+        for (j, rep) in reports.iter().enumerate() {
+            assert!(rep.converged, "{}: {:?}", rep.name, rep.values);
+            assert_eq!(
+                rep.values, seq[j].values,
+                "job {j} diverged from its sequential serving run"
+            );
+        }
+        // All three were in flight together and coalesced their sweeps.
+        assert_eq!(sess.batcher().max_width(), 3);
+        assert_eq!(pool.admitted.high_water(), 3);
+        assert_eq!(pool.queued.high_water(), 3);
+        assert_eq!(pool.admitted.get(), 0, "gauges drain at completion");
+        assert_eq!(pool.reserved.get(), 0);
+
+        // And the service agrees with the classic standalone solver
+        // (which expands through the streamed operator boundary — a
+        // different but numerically equivalent code path).
+        let fs = Safs::new(SafsConfig::untimed());
+        let m = build_matrix_opts(&coo, 64, BuildTarget::Safs(&fs, "m"), true);
+        let op = SpmmOperator::new(m, SpmmOpts::default(), 2);
+        let ctx = DenseCtx::with(fs, false, 64, 2, 8, 1, Arc::new(NativeKernels));
+        let solo = solve(&op, &ctx, &specs[0].cfg);
+        assert!(solo.converged);
+        for (a, b) in reports[0].values.iter().zip(&solo.eigenvalues) {
+            assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn tight_budget_queues_jobs_instead_of_thrashing() {
+        let coo = test_graph(33);
+        let sess = session(&coo);
+        let one_job = SolverPool::working_set_estimate(&sess, &spec("x", 1, false));
+        // Budget fits one IM job but not two → serialized admission.
+        let pool = SolverPool::new(one_job + one_job / 2, 4);
+        let specs = [spec("a", 50, false), spec("b", 51, false)];
+        let reports = pool.run(&sess, &specs);
+        assert!(reports.iter().all(|r| r.converged));
+        assert_eq!(pool.admitted.high_water(), 1, "budget admits one at a time");
+        assert_eq!(sess.batcher().max_width(), 1);
+        assert!(pool.reserved.high_water() <= pool.budget);
+        // An oversized job still runs (alone) rather than never.
+        let tiny = SolverPool::new(1, 4);
+        let r = tiny.run(&sess, &specs[..1]);
+        assert!(r[0].converged);
+    }
+
+    #[test]
+    fn per_job_ledgers_sum_to_the_array_ledger_exactly() {
+        let coo = test_graph(35);
+        let sess = session(&coo);
+        let before = sess.fs().stats();
+        let pool = SolverPool::new(0, 4);
+        let specs = [
+            spec("a", 60, true),
+            spec("b", 61, true),
+            spec("c", 62, false),
+        ];
+        let reports = pool.run(&sess, &specs);
+        let delta = sess.fs().stats().delta_since(&before);
+        let image: u64 = reports.iter().map(|r| r.image_bytes).sum();
+        let sub_r: u64 = reports.iter().map(|r| r.subspace_read).sum();
+        let sub_w: u64 = reports.iter().map(|r| r.subspace_written).sum();
+        assert_eq!(image + sub_r, delta.bytes_read, "read attribution must be exact");
+        assert_eq!(sub_w, delta.bytes_written, "write attribution must be exact");
+        assert!(image > 0 && sub_w > 0);
+    }
+
+    fn svd_session(coo: &CooMatrix) -> GraphSession {
+        let fs = Safs::new(SafsConfig::untimed());
+        let a = build_matrix_opts(coo, 64, BuildTarget::Safs(&fs, "svd-a"), true);
+        let at =
+            build_matrix_opts(&coo.transpose(), 64, BuildTarget::Safs(&fs, "svd-at"), true);
+        GraphSession::svd("d", fs, a, at, SpmmOpts::default(), 2, 64)
+    }
+
+    #[test]
+    fn svd_session_matches_sequential_and_the_solo_driver() {
+        use crate::eigen::{build_gram_operator, svd};
+        let mut rng = Rng::new(37);
+        let mut coo = CooMatrix::new(200, 200);
+        for _ in 0..900 {
+            let r = rng.gen_range(200) as u32;
+            let c = rng.gen_range(200) as u32;
+            if r != c {
+                coo.push(r, c);
+            }
+        }
+        coo.sort_dedup();
+        let job = spec("sv", 70, false);
+        let jobs = [job.clone(), job.clone()];
+
+        let seq = SolverPool::new(0, 1).run(&svd_session(&coo), &jobs);
+        let sess = svd_session(&coo);
+        let reports = SolverPool::new(0, 2).run(&sess, &jobs);
+        for (rep, s) in reports.iter().zip(&seq) {
+            assert!(rep.converged);
+            assert_eq!(
+                rep.values, s.values,
+                "batched SVD diverged from sequential serving"
+            );
+        }
+        assert_eq!(sess.batcher().max_width(), 2);
+
+        // Numerical agreement with the standalone SVD driver (streamed
+        // two-hop operator boundary).
+        let solo = {
+            let op = build_gram_operator(&coo, 64, None, SpmmOpts::default(), 2);
+            let ctx = DenseCtx::mem_for_tests(64);
+            svd(&op, &ctx, &job.cfg)
+        };
+        assert!(solo.converged);
+        for (a, b) in reports[0].values.iter().zip(&solo.singular_values) {
+            assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn job_spec_parser_round_trips_keys() {
+        let s = JobSpec::parse("name=q nev=6 block=3 nblocks=10 tol=1e-8 em=0 seed=9").unwrap();
+        assert_eq!(s.name, "q");
+        assert_eq!(s.cfg.nev, 6);
+        assert_eq!(s.cfg.block_size, 3);
+        assert_eq!(s.cfg.num_blocks, 10);
+        assert_eq!(s.cfg.tol, 1e-8);
+        assert_eq!(s.cfg.seed, 9);
+        assert!(!s.em);
+        let d = JobSpec::parse("").unwrap();
+        assert_eq!((d.cfg.nev, d.cfg.block_size), (4, 2));
+        assert!(d.em);
+        assert_eq!(d.name, "nev4");
+        assert!(JobSpec::parse("nev").is_err());
+        assert!(JobSpec::parse("zzz=1").is_err());
+        assert!(JobSpec::parse("nev=x").is_err());
+    }
+}

@@ -1,0 +1,817 @@
+//! Multi-tenant SpMM batching: one image sweep serves `k` solves.
+//!
+//! The cost model of every SEM apply is dominated by the sweep over the
+//! on-SSD sparse image, and the sweep cost is essentially independent of
+//! the dense-side width until RAM pressure bites (the SEM-SpMM
+//! observation, arXiv:1602.02864) — so when several resident solver jobs
+//! have an `A·X_i` apply pending against the *same* matrix, multiplying
+//! all their panels per image read is nearly free I/O-wise.
+//! [`spmm_batch`] is the mechanism: one demand-fed
+//! [`crate::safs::WalkScheduler`] pass over the partition byte ranges,
+//! where each acquired tile-row image multiplies every job's panel
+//! before it is released.  A width-`k` batch therefore reads the image
+//! **once** where `k` sequential cold applies read it `k` times.
+//!
+//! [`SpmmBatcher`] + [`BatchedOperator`] turn the mechanism into an
+//! [`Operator`] that concurrent solver threads share: each job's apply
+//! parks its panel at the batcher; when every active job has an apply
+//! pending, the last arriver becomes the sweep leader and runs
+//! [`spmm_batch`] for everyone.
+//!
+//! **Bitwise guarantee.**  Batching changes scheduling, never
+//! arithmetic: each job's panel accumulates independently, and every
+//! output row sums its tiles in ascending tile-column order exactly as
+//! in a solo [`spmm`] run (see
+//! [`crate::spmm::engine::multiply_partition`]).  A job's result is
+//! bitwise identical to its sequential run at every batch width, thread
+//! count and partition geometry — pinned by the differential props in
+//! `tests/props.rs`.
+
+use super::dense_block::{DenseBlock, SharedMut};
+use super::engine::{multiply_partition, part_byte_range, SpmmRunStats};
+use super::opts::SpmmOpts;
+use super::super_tile::partition_tile_rows;
+use crate::dense::{conv_layout_from_rowmajor, conv_layout_to_rowmajor, DenseCtx, TasMatrix};
+use crate::eigen::Operator;
+use crate::metrics::{Counter, MemGuard, PhaseTimers};
+use crate::safs::{FeedMode, ReadRange, WalkScheduler};
+use crate::sparse::SparseMatrix;
+use crate::util::threadpool::OwnedQueues;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// `outputs[i] = matrix × inputs[i]` for every job `i`, in **one** sweep
+/// over the image: each tile-row partition read (or in-memory slice) is
+/// multiplied against every job's panel before the next partition is
+/// touched, so a SEM batch reads the image once regardless of `k`.
+///
+/// Panels may have different widths.  Every `(inputs[i], outputs[i])`
+/// pair must satisfy the same shape/alignment contract as [`spmm`], and
+/// each result is bitwise identical to the solo `spmm` run of that pair
+/// (partition geometry is derived from the *widest* panel, and
+/// per-output-row accumulation order does not depend on geometry).
+///
+/// [`spmm`]: crate::spmm::spmm
+pub fn spmm_batch(
+    matrix: &SparseMatrix,
+    inputs: &[&DenseBlock],
+    outputs: &mut [&mut DenseBlock],
+    opts: &SpmmOpts,
+    threads: usize,
+) -> SpmmRunStats {
+    assert_eq!(inputs.len(), outputs.len(), "one output panel per input panel");
+    if inputs.is_empty() {
+        return SpmmRunStats::default();
+    }
+    for (input, output) in inputs.iter().zip(outputs.iter()) {
+        assert_eq!(input.n_rows as u64, matrix.n_cols, "input rows");
+        assert_eq!(output.n_rows as u64, matrix.n_rows, "output rows");
+        assert_eq!(input.n_cols, output.n_cols, "widths");
+        assert_eq!(input.interval_rows % matrix.tile_dim, 0, "input interval alignment");
+        assert_eq!(output.interval_rows % matrix.tile_dim, 0, "output interval alignment");
+    }
+    for output in outputs.iter_mut() {
+        output.fill(0.0);
+    }
+
+    // Geometry from the widest panel: the most conservative cache-block
+    // choice.  Geometry never affects bits (each output row accumulates
+    // its tiles in ascending tile-column order under any partitioning).
+    let b_max = inputs.iter().map(|i| i.n_cols).max().unwrap();
+    let parts = partition_tile_rows(
+        matrix.num_tile_rows(),
+        matrix.tile_dim,
+        b_max,
+        opts.super_tile,
+        threads,
+    );
+    let sched = matrix.safs_handle().map(|(fs, file)| {
+        let ranges: Vec<Option<ReadRange>> = parts
+            .iter()
+            .map(|&p| {
+                let (offset, len) = part_byte_range(matrix, p);
+                Some(ReadRange { file: file.clone(), offset, len })
+            })
+            .collect();
+        let s = WalkScheduler::new(fs, ranges, threads.max(1), FeedMode::Demand, true);
+        let order: Vec<u32> = (0..parts.len() as u32).collect();
+        s.register_walk_order(&order);
+        s
+    });
+    let outs: Vec<SharedMut> = outputs.iter_mut().map(|o| SharedMut::new(o)).collect();
+    let queues = OwnedQueues::new(parts.len(), threads.max(1));
+    let stolen = AtomicUsize::new(0);
+    let ranges = crate::util::threadpool::split_ranges(parts.len(), threads.max(1));
+
+    std::thread::scope(|s| {
+        for w in 0..threads.max(1) {
+            let parts = &parts;
+            let queues = &queues;
+            let outs = &outs;
+            let stolen = &stolen;
+            let sched = &sched;
+            let own = ranges[w];
+            s.spawn(move || {
+                let mut local_buf: Vec<f64> = Vec::new();
+                let pop = |queues: &OwnedQueues| {
+                    if opts.work_steal {
+                        queues.pop(w)
+                    } else {
+                        queues.pop_own(w)
+                    }
+                };
+                match matrix.safs_handle() {
+                    None => {
+                        while let Some(pi) = pop(queues) {
+                            if !(own.0 <= pi && pi < own.1) {
+                                stolen.fetch_add(1, Ordering::Relaxed);
+                            }
+                            let part = parts[pi];
+                            let images: Vec<&[u8]> = (part.0..part.1)
+                                .map(|tr| matrix.tile_row_mem(tr).unwrap())
+                                .collect();
+                            for (input, out) in inputs.iter().zip(outs.iter()) {
+                                multiply_partition(
+                                    matrix, part, &images, input, out, opts, &mut local_buf,
+                                );
+                            }
+                        }
+                    }
+                    Some(_) => {
+                        // Same pipelined demand-fed stream as the solo
+                        // engine; the only difference is the inner loop
+                        // over job panels before the buffer is released.
+                        let sched = sched.as_ref().unwrap();
+                        let depth = sched.depth() + 1;
+                        let mut pending: VecDeque<usize> = VecDeque::new();
+                        loop {
+                            while pending.len() < depth {
+                                match pop(queues) {
+                                    Some(pi) => {
+                                        if !(own.0 <= pi && pi < own.1) {
+                                            stolen.fetch_add(1, Ordering::Relaxed);
+                                        }
+                                        sched.start(pi);
+                                        pending.push_back(pi);
+                                    }
+                                    None => break,
+                                }
+                            }
+                            let Some(pi) = pending.pop_front() else { break };
+                            let part = parts[pi];
+                            let Some(buf) = sched.acquire(pi) else { continue };
+                            let base = matrix.index[part.0].offset;
+                            let images: Vec<&[u8]> = (part.0..part.1)
+                                .map(|tr| {
+                                    let m = matrix.index[tr];
+                                    let s = (m.offset - base) as usize;
+                                    &buf[s..s + m.len as usize]
+                                })
+                                .collect();
+                            for (input, out) in inputs.iter().zip(outs.iter()) {
+                                multiply_partition(
+                                    matrix, part, &images, input, out, opts, &mut local_buf,
+                                );
+                            }
+                            sched.release(w, pi, buf);
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    SpmmRunStats { partitions: parts.len(), stolen: stolen.load(Ordering::Relaxed) }
+}
+
+/// One job's panels parked at the batcher, pre-allocated (and
+/// mem-tracked) by the submitting thread.
+struct PendingApply {
+    input: DenseBlock,
+    /// Gram mode only: the `A·X` intermediate panel.
+    mid: Option<DenseBlock>,
+    output: DenseBlock,
+}
+
+/// Per-slot membership state (see [`SpmmBatcher`] for the protocol).
+enum Slot {
+    /// Registered, between applies, counted in the sweep barrier.
+    Active,
+    /// Parked at a solver yield point — excluded from the barrier.
+    Idle,
+    /// Panels submitted, waiting for the sweep.
+    Pending(Box<PendingApply>),
+    /// Taken into the running sweep; result not yet posted.
+    Swept,
+    /// Sweep finished; the result awaits pickup by the owner.
+    Done(Box<PendingApply>),
+    /// Deregistered (job finished) — never blocks a sweep again.
+    Left,
+}
+
+struct BatchState {
+    slots: Vec<Slot>,
+    /// Completed batched sweeps (a Gram apply's two hops count as one).
+    sweeps: u64,
+    /// Cumulative image bytes attributed to each slot: every sweep's
+    /// exact device-byte delta on the image file(s), split evenly with
+    /// the remainder going to the lowest participating slots — so the
+    /// per-slot shares always sum to the measured total exactly.
+    image_share: Vec<u64>,
+    /// High-water batch width over all completed sweeps.
+    max_width: usize,
+}
+
+/// The rendezvous point where concurrent solver jobs coalesce their
+/// `A·X` applies against one shared matrix into single-sweep
+/// [`spmm_batch`] calls.
+///
+/// **Protocol.**  Each job registers once ([`SpmmBatcher::register`],
+/// returning a [`BatchedOperator`]), submits one apply at a time and
+/// parks; a sweep fires the moment *every* member that is neither idle
+/// nor departed has an apply pending.  The thread whose state change
+/// completes the barrier — the last submitter, a solver yielding at a
+/// [`Operator::notify_idle`] point, or a departing job's
+/// [`BatchedOperator`] drop — becomes the sweep leader and runs
+/// [`spmm_batch`] for the whole batch on its own thread, then wakes the
+/// parked members.
+///
+/// **Fairness.**  The barrier is strict: active members advance in
+/// lockstep, one apply per sweep, so no job can starve another by
+/// applying faster — batching throttles everyone to the slowest
+/// *active* member.  Solvers mark themselves idle at yield points
+/// (between the expansion phase and restart bookkeeping) so a member
+/// doing non-apply work never stalls the others, and departed members
+/// never block a sweep.
+///
+/// **Bitwise guarantee.**  Every job's converged result is bitwise
+/// identical to the result of running that job alone on a solo
+/// [`crate::eigen::SpmmOperator`]/[`crate::eigen::GramOperator`]: the
+/// batched apply replicates the solo operator's exact
+/// ConvLayout→SpMM→ConvLayout sequence and [`spmm_batch`] preserves
+/// per-row accumulation order (see the module docs).
+///
+/// **Attribution.**  The leader measures the image file's exact
+/// device-byte delta across each sweep (all sharers are parked, so the
+/// delta is the sweep's own traffic) and splits it over the
+/// participants — remainder bytes to the lowest slots — so per-job
+/// shares sum to the shared ledger exactly
+/// ([`SpmmBatcher::image_share`]).
+pub struct SpmmBatcher {
+    a: SparseMatrix,
+    /// Gram (SVD) mode: `Aᵀ`, making each batched apply the two-hop
+    /// `Aᵀ(A·X)` — two batched sweeps, one per hop.
+    at: Option<SparseMatrix>,
+    opts: SpmmOpts,
+    threads: usize,
+    state: Mutex<BatchState>,
+    cv: Condvar,
+}
+
+impl SpmmBatcher {
+    /// Batcher for the symmetric eigenproblem operator `A·X`.
+    pub fn new(matrix: SparseMatrix, opts: SpmmOpts, threads: usize) -> Arc<SpmmBatcher> {
+        assert_eq!(matrix.n_rows, matrix.n_cols, "eigenproblem needs square A");
+        Arc::new(SpmmBatcher {
+            a: matrix,
+            at: None,
+            opts,
+            threads,
+            state: Mutex::new(BatchState {
+                slots: Vec::new(),
+                sweeps: 0,
+                image_share: Vec::new(),
+                max_width: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Batcher for the normal-equations operator `Aᵀ(A·X)` (SVD jobs).
+    pub fn new_gram(
+        a: SparseMatrix,
+        at: SparseMatrix,
+        opts: SpmmOpts,
+        threads: usize,
+    ) -> Arc<SpmmBatcher> {
+        assert_eq!(a.n_rows, at.n_cols);
+        assert_eq!(a.n_cols, at.n_rows);
+        Arc::new(SpmmBatcher {
+            a,
+            at: Some(at),
+            opts,
+            threads,
+            state: Mutex::new(BatchState {
+                slots: Vec::new(),
+                sweeps: 0,
+                image_share: Vec::new(),
+                max_width: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// The shared matrix (`A`).
+    pub fn matrix(&self) -> &SparseMatrix {
+        &self.a
+    }
+
+    /// Rows of the operator this batcher applies (`A` rows, or `A`
+    /// columns in Gram mode).
+    pub fn dim(&self) -> usize {
+        match &self.at {
+            None => self.a.n_rows as usize,
+            Some(_) => self.a.n_cols as usize,
+        }
+    }
+
+    /// Total on-array bytes of the image(s) one cold sweep reads (`A`,
+    /// plus `Aᵀ` in Gram mode).
+    pub fn image_storage_bytes(&self) -> u64 {
+        self.a.storage_bytes() + self.at.as_ref().map_or(0, |m| m.storage_bytes())
+    }
+
+    /// Register one job and get its operator handle.  Register **all**
+    /// of a batch's jobs before any of them starts solving: a
+    /// registered member counts in the sweep barrier immediately, which
+    /// is what guarantees the cold sweep runs at full width.  Every
+    /// registered member must eventually apply, yield idle, or drop its
+    /// operator — the operator's `Drop` departs the slot, so a panicked
+    /// or finished job can never wedge the others.
+    pub fn register(self: &Arc<Self>) -> BatchedOperator {
+        let mut st = self.state.lock().unwrap();
+        st.slots.push(Slot::Active);
+        st.image_share.push(0);
+        BatchedOperator {
+            batcher: self.clone(),
+            slot: st.slots.len() - 1,
+            timers: Arc::new(PhaseTimers::new()),
+            count: Counter::default(),
+        }
+    }
+
+    /// Completed batched sweeps so far.
+    pub fn sweeps(&self) -> u64 {
+        self.state.lock().unwrap().sweeps
+    }
+
+    /// Widest batch any completed sweep multiplied.
+    pub fn max_width(&self) -> usize {
+        self.state.lock().unwrap().max_width
+    }
+
+    /// Cumulative image bytes attributed to `slot` (exact split of every
+    /// sweep's measured image-file delta; shares over all slots sum to
+    /// the total the batcher's sweeps read).
+    pub fn image_share(&self, slot: usize) -> u64 {
+        self.state.lock().unwrap().image_share[slot]
+    }
+
+    /// Is a sweep ready to fire?  Yes iff someone is pending and nobody
+    /// is in a state that still owes a decision (active between applies,
+    /// or holding an unclaimed result).
+    fn ready(st: &BatchState) -> bool {
+        let mut any_pending = false;
+        for s in &st.slots {
+            match s {
+                Slot::Pending(_) => any_pending = true,
+                Slot::Idle | Slot::Left => {}
+                Slot::Active | Slot::Swept | Slot::Done(_) => return false,
+            }
+        }
+        any_pending
+    }
+
+    fn take_pending(st: &mut BatchState) -> Vec<(usize, Box<PendingApply>)> {
+        let mut batch = Vec::new();
+        for (i, s) in st.slots.iter_mut().enumerate() {
+            if matches!(s, Slot::Pending(_)) {
+                let Slot::Pending(p) = std::mem::replace(s, Slot::Swept) else {
+                    unreachable!()
+                };
+                batch.push((i, p));
+            }
+        }
+        batch
+    }
+
+    /// Device bytes read so far from the image file(s) — the counter the
+    /// leader deltas across a sweep for exact attribution.
+    fn image_bytes_read(&self) -> u64 {
+        let one = |m: &SparseMatrix| m.safs_handle().map_or(0, |(_, file)| file.bytes_read());
+        one(&self.a) + self.at.as_ref().map_or(0, &one)
+    }
+
+    /// Run one batched sweep (two for Gram mode) for `batch`, post the
+    /// results and wake everyone.  Called without the state lock held.
+    fn run_sweep(&self, mut batch: Vec<(usize, Box<PendingApply>)>) {
+        let width = batch.len();
+        let before = self.image_bytes_read();
+        match &self.at {
+            None => {
+                // Disjoint-field split borrows: inputs shared, outputs
+                // exclusive, out of the same owned batch.
+                let (inputs, mut outputs): (Vec<&DenseBlock>, Vec<&mut DenseBlock>) = batch
+                    .iter_mut()
+                    .map(|(_, p)| {
+                        let p = &mut **p;
+                        (&p.input, &mut p.output)
+                    })
+                    .unzip();
+                spmm_batch(&self.a, &inputs, &mut outputs, &self.opts, self.threads);
+            }
+            Some(at) => {
+                // Hop 1: mid_i = A · input_i.
+                {
+                    let (inputs, mut mids): (Vec<&DenseBlock>, Vec<&mut DenseBlock>) = batch
+                        .iter_mut()
+                        .map(|(_, p)| {
+                            let p = &mut **p;
+                            (&p.input, p.mid.as_mut().expect("gram apply needs mid"))
+                        })
+                        .unzip();
+                    spmm_batch(&self.a, &inputs, &mut mids, &self.opts, self.threads);
+                }
+                // Hop 2: output_i = Aᵀ · mid_i.
+                {
+                    let (mids, mut outputs): (Vec<&DenseBlock>, Vec<&mut DenseBlock>) = batch
+                        .iter_mut()
+                        .map(|(_, p)| {
+                            let p = &mut **p;
+                            (&*p.mid.as_ref().unwrap(), &mut p.output)
+                        })
+                        .unzip();
+                    spmm_batch(at, &mids, &mut outputs, &self.opts, self.threads);
+                }
+            }
+        }
+        let delta = self.image_bytes_read() - before;
+        let mut st = self.state.lock().unwrap();
+        // Exact split: delta = k·q + r, first r participants (by slot
+        // order) take q+1 — shares always sum to delta.
+        let q = delta / width as u64;
+        let r = (delta % width as u64) as usize;
+        for (rank, (slot, p)) in batch.into_iter().enumerate() {
+            st.image_share[slot] += q + u64::from(rank < r);
+            st.slots[slot] = Slot::Done(p);
+        }
+        st.sweeps += 1;
+        st.max_width = st.max_width.max(width);
+        self.cv.notify_all();
+    }
+
+    /// Submit one job's panels and block until its sweep completes.
+    fn submit_and_wait(&self, slot: usize, pending: Box<PendingApply>) -> Box<PendingApply> {
+        let mut st = self.state.lock().unwrap();
+        st.slots[slot] = Slot::Pending(pending);
+        if Self::ready(&st) {
+            let batch = Self::take_pending(&mut st);
+            drop(st);
+            self.run_sweep(batch);
+            st = self.state.lock().unwrap();
+        }
+        loop {
+            if matches!(st.slots[slot], Slot::Done(_)) {
+                let Slot::Done(p) = std::mem::replace(&mut st.slots[slot], Slot::Active) else {
+                    unreachable!()
+                };
+                return p;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Mark `slot` idle (solver yield point): it stops counting in the
+    /// sweep barrier until its next apply.  Fires the sweep if this
+    /// completes the barrier.
+    fn set_idle(&self, slot: usize) {
+        let mut st = self.state.lock().unwrap();
+        if matches!(st.slots[slot], Slot::Active) {
+            st.slots[slot] = Slot::Idle;
+            if Self::ready(&st) {
+                let batch = Self::take_pending(&mut st);
+                drop(st);
+                self.run_sweep(batch);
+            }
+        }
+    }
+
+    /// Depart `slot` permanently.  Fires the sweep if this completes the
+    /// barrier.
+    fn leave(&self, slot: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.slots[slot] = Slot::Left;
+        if Self::ready(&st) {
+            let batch = Self::take_pending(&mut st);
+            drop(st);
+            self.run_sweep(batch);
+        }
+    }
+}
+
+/// One job's [`Operator`] handle onto a shared [`SpmmBatcher`].
+///
+/// `apply` replicates the solo operator's exact sequence —
+/// ConvLayout→(batched SpMM)→ConvLayout, with the same mem-tracker
+/// registrations against the *calling job's* context — except that the
+/// SpMM itself runs inside the next batched sweep, which serves every
+/// pending job from one pass over the image.  See [`SpmmBatcher`] for
+/// the admission/fairness/bitwise contract.  Dropping the operator
+/// departs the batch, so a finished (or panicked) job never blocks the
+/// remaining members' sweeps.
+pub struct BatchedOperator {
+    batcher: Arc<SpmmBatcher>,
+    slot: usize,
+    pub timers: Arc<PhaseTimers>,
+    count: Counter,
+}
+
+impl BatchedOperator {
+    /// This job's slot index in the batcher (its attribution key for
+    /// [`SpmmBatcher::image_share`]).
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+
+    /// The batcher this operator submits to.
+    pub fn batcher(&self) -> &Arc<SpmmBatcher> {
+        &self.batcher
+    }
+}
+
+impl Drop for BatchedOperator {
+    fn drop(&mut self) {
+        self.batcher.leave(self.slot);
+    }
+}
+
+impl Operator for BatchedOperator {
+    fn dim(&self) -> usize {
+        self.batcher.dim()
+    }
+
+    fn apply(&self, ctx: &Arc<DenseCtx>, x: &TasMatrix) -> TasMatrix {
+        self.count.inc();
+        let b = &*self.batcher;
+        let input = self.timers.scope("conv_layout", || {
+            conv_layout_to_rowmajor(x, b.a.tile_dim, b.opts.numa)
+        });
+        let _mg_in = MemGuard::new(&ctx.mem, (input.n_rows * input.n_cols * 8) as u64);
+        let mid = b.at.as_ref().map(|_| {
+            DenseBlock::new(b.a.n_rows as usize, x.n_cols, b.a.tile_dim, b.opts.numa)
+        });
+        let _mg_mid = mid
+            .as_ref()
+            .map(|m| MemGuard::new(&ctx.mem, (m.n_rows * m.n_cols * 8) as u64));
+        let out_rows = self.dim();
+        let out_tile = b.at.as_ref().map_or(b.a.tile_dim, |at| at.tile_dim);
+        let output = DenseBlock::new(out_rows, x.n_cols, out_tile, b.opts.numa);
+        let _mg_out = MemGuard::new(&ctx.mem, (output.n_rows * output.n_cols * 8) as u64);
+        let done = self.timers.scope("spmm", || {
+            b.submit_and_wait(self.slot, Box::new(PendingApply { input, mid, output }))
+        });
+        self.timers
+            .scope("conv_layout", || conv_layout_from_rowmajor(ctx, &done.output))
+    }
+
+    fn applies(&self) -> u64 {
+        self.count.get()
+    }
+
+    fn notify_idle(&self) {
+        self.batcher.set_idle(self.slot);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::safs::{Safs, SafsConfig};
+    use crate::sparse::{build_matrix_opts, BuildTarget, CooMatrix};
+    use crate::spmm::spmm;
+    use crate::util::rng::Rng;
+
+    fn random_graph(rng: &mut Rng, n: u64, nnz: usize, weighted: bool) -> CooMatrix {
+        let mut coo = CooMatrix::new(n, n);
+        for _ in 0..nnz {
+            let r = rng.gen_range(n) as u32;
+            let c = rng.gen_range(n) as u32;
+            if weighted {
+                coo.push_weighted(r, c, rng.gen_f64_range(0.1, 2.0) as f32);
+            } else {
+                coo.push(r, c);
+            }
+        }
+        coo.sort_dedup();
+        coo
+    }
+
+    fn panel(n: usize, b: usize, tile: usize, j: usize) -> DenseBlock {
+        DenseBlock::from_fn(n, b, tile, true, |r, c| {
+            ((r * 31 + c * 7 + j * 13) % 17) as f64 - 8.0
+        })
+    }
+
+    #[test]
+    fn batch_matches_solo_spmm_bitwise_im_and_sem() {
+        let mut rng = Rng::new(91);
+        let coo = random_graph(&mut rng, 700, 6000, true);
+        let n = coo.n_rows as usize;
+        let tile = 64;
+        for sem in [false, true] {
+            let fs = Safs::new(SafsConfig::untimed());
+            let m = if sem {
+                build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "m"), true)
+            } else {
+                build_matrix_opts(&coo, tile, BuildTarget::Mem, true)
+            };
+            // Mixed widths: geometry comes from the widest panel.
+            let widths = [3usize, 1, 4];
+            let inputs: Vec<DenseBlock> =
+                widths.iter().enumerate().map(|(j, &b)| panel(n, b, tile, j)).collect();
+            let mut outputs: Vec<DenseBlock> =
+                widths.iter().map(|&b| DenseBlock::new(n, b, tile, true)).collect();
+            {
+                let ins: Vec<&DenseBlock> = inputs.iter().collect();
+                let mut outs: Vec<&mut DenseBlock> = outputs.iter_mut().collect();
+                spmm_batch(&m, &ins, &mut outs, &SpmmOpts::default(), 3);
+            }
+            for (j, (input, batched)) in inputs.iter().zip(outputs.iter()).enumerate() {
+                let mut solo = DenseBlock::new(n, input.n_cols, tile, true);
+                spmm(&m, input, &mut solo, &SpmmOpts::default(), 3);
+                assert_eq!(
+                    batched.to_vec(),
+                    solo.to_vec(),
+                    "job {j} not bitwise (sem={sem})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_sweep_reads_the_image_once() {
+        let mut rng = Rng::new(92);
+        let coo = random_graph(&mut rng, 900, 8000, false);
+        let n = coo.n_rows as usize;
+        let fs = Safs::new(SafsConfig::untimed());
+        let m = build_matrix_opts(&coo, 64, BuildTarget::Safs(&fs, "m"), true);
+        let image = m.storage_bytes();
+        let inputs: Vec<DenseBlock> = (0..4).map(|j| panel(n, 2, 64, j)).collect();
+        let mut outputs: Vec<DenseBlock> =
+            (0..4).map(|_| DenseBlock::new(n, 2, 64, true)).collect();
+        let before = fs.stats();
+        {
+            let ins: Vec<&DenseBlock> = inputs.iter().collect();
+            let mut outs: Vec<&mut DenseBlock> = outputs.iter_mut().collect();
+            spmm_batch(&m, &ins, &mut outs, &SpmmOpts::default(), 2);
+        }
+        let delta = fs.stats().delta_since(&before);
+        assert_eq!(delta.bytes_read, image, "4 panels, one image pass");
+        assert_eq!(delta.bytes_written, 0);
+    }
+
+    #[test]
+    fn batched_operator_protocol_is_bitwise_and_attributes_exactly() {
+        use crate::eigen::SpmmOperator;
+        let mut rng = Rng::new(93);
+        let mut coo = random_graph(&mut rng, 600, 5000, false);
+        coo.symmetrize();
+        let n = coo.n_rows as usize;
+        let applies = 3usize;
+        let k = 3usize;
+
+        // Solo references, each on its own filesystem.
+        let mut want: Vec<Vec<Vec<f64>>> = Vec::new();
+        for j in 0..k {
+            let fs = Safs::new(SafsConfig::untimed());
+            let m = build_matrix_opts(&coo, 64, BuildTarget::Safs(&fs, "m"), true);
+            let op = SpmmOperator::new(m, SpmmOpts::default(), 2);
+            let ctx = DenseCtx::mem_for_tests(64);
+            let mut x = TasMatrix::from_fn(&ctx, n, 2, |r, c| {
+                ((r * 7 + c * 3 + j) % 11) as f64 - 5.0
+            });
+            let mut outs = Vec::new();
+            for _ in 0..applies {
+                x = op.apply(&ctx, &x);
+                outs.push(x.to_colmajor());
+            }
+            want.push(outs);
+        }
+
+        // Batched: k jobs on one shared SEM matrix.
+        let fs = Safs::new(SafsConfig::untimed());
+        let m = build_matrix_opts(&coo, 64, BuildTarget::Safs(&fs, "shared"), true);
+        let image = m.storage_bytes();
+        let batcher = SpmmBatcher::new(m, SpmmOpts::default(), 2);
+        let ops: Vec<BatchedOperator> = (0..k).map(|_| batcher.register()).collect();
+        let before = fs.stats();
+        let got: Vec<Vec<Vec<f64>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = ops
+                .into_iter()
+                .enumerate()
+                .map(|(j, op)| {
+                    s.spawn(move || {
+                        let ctx = DenseCtx::mem_for_tests(64);
+                        let mut x = TasMatrix::from_fn(&ctx, n, 2, |r, c| {
+                            ((r * 7 + c * 3 + j) % 11) as f64 - 5.0
+                        });
+                        let mut outs = Vec::new();
+                        for _ in 0..applies {
+                            x = op.apply(&ctx, &x);
+                            outs.push(x.to_colmajor());
+                        }
+                        assert_eq!(op.applies(), applies as u64);
+                        outs
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for j in 0..k {
+            assert_eq!(got[j], want[j], "job {j} diverged from its sequential run");
+        }
+        // Every apply round coalesced into one full-width sweep…
+        assert_eq!(batcher.sweeps(), applies as u64);
+        assert_eq!(batcher.max_width(), k);
+        // …each reading the image exactly once (no cache configured).
+        let delta = fs.stats().delta_since(&before);
+        assert_eq!(delta.bytes_read, applies as u64 * image);
+        // Per-slot shares sum to the measured total exactly.
+        let total: u64 = (0..k).map(|s| batcher.image_share(s)).sum();
+        assert_eq!(total, delta.bytes_read);
+    }
+
+    #[test]
+    fn departed_member_fires_the_pending_sweep() {
+        // Job 0 does 2 applies, job 1 does 1: job 1's drop must release
+        // job 0's second apply instead of wedging it.
+        let mut rng = Rng::new(94);
+        let mut coo = random_graph(&mut rng, 300, 2500, false);
+        coo.symmetrize();
+        let n = coo.n_rows as usize;
+        let m = build_matrix_opts(&coo, 64, BuildTarget::Mem, true);
+        let batcher = SpmmBatcher::new(m, SpmmOpts::default(), 2);
+        let op0 = batcher.register();
+        let op1 = batcher.register();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let ctx = DenseCtx::mem_for_tests(64);
+                let mut x = TasMatrix::from_fn(&ctx, n, 2, |r, c| (r + c) as f64);
+                x = op0.apply(&ctx, &x);
+                let _ = op0.apply(&ctx, &x);
+            });
+            s.spawn(|| {
+                let ctx = DenseCtx::mem_for_tests(64);
+                let x = TasMatrix::from_fn(&ctx, n, 2, |r, c| (r * 2 + c) as f64);
+                let _ = op1.apply(&ctx, &x);
+                drop(op1); // departs; must not strand op0
+            });
+        });
+        assert_eq!(batcher.sweeps(), 2);
+    }
+
+    #[test]
+    fn gram_batch_matches_solo_gram_bitwise() {
+        use crate::eigen::GramOperator;
+        let mut rng = Rng::new(95);
+        let coo = random_graph(&mut rng, 400, 3000, false);
+        let at_coo = coo.transpose();
+        let n = coo.n_rows as usize;
+        let build = || {
+            (
+                build_matrix_opts(&coo, 64, BuildTarget::Mem, true),
+                build_matrix_opts(&at_coo, 64, BuildTarget::Mem, true),
+            )
+        };
+        let (a, at) = build();
+        let solo = GramOperator::new(a, at, SpmmOpts::default(), 2);
+        let ctx = DenseCtx::mem_for_tests(64);
+        let mk = |j: usize| {
+            TasMatrix::from_fn(&ctx, n, 2, |r, c| ((r * 5 + c * 2 + j) % 13) as f64 - 6.0)
+        };
+        let want: Vec<Vec<f64>> = (0..2).map(|j| solo.apply(&ctx, &mk(j)).to_colmajor()).collect();
+
+        let (a, at) = build();
+        let batcher = SpmmBatcher::new_gram(a, at, SpmmOpts::default(), 2);
+        let ops: Vec<BatchedOperator> = (0..2).map(|_| batcher.register()).collect();
+        let got: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = ops
+                .into_iter()
+                .enumerate()
+                .map(|(j, op)| {
+                    s.spawn(move || {
+                        let ctx = DenseCtx::mem_for_tests(64);
+                        let x = TasMatrix::from_fn(&ctx, n, 2, |r, c| {
+                            ((r * 5 + c * 2 + j) % 13) as f64 - 6.0
+                        });
+                        op.apply(&ctx, &x).to_colmajor()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(got, want, "batched gram diverged from solo gram");
+        assert_eq!(batcher.sweeps(), 1, "two-hop apply is one batched sweep");
+    }
+}

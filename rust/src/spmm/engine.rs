@@ -213,7 +213,7 @@ pub(crate) fn multiply_rows_from_source(
 }
 
 /// Contiguous byte range of a partition's tile rows in the image file.
-fn part_byte_range(matrix: &SparseMatrix, part: (usize, usize)) -> (u64, usize) {
+pub(crate) fn part_byte_range(matrix: &SparseMatrix, part: (usize, usize)) -> (u64, usize) {
     let off = matrix.index[part.0].offset;
     let end = matrix.index[part.1 - 1].offset + matrix.index[part.1 - 1].len as u64;
     (off, (end - off) as usize)
@@ -222,7 +222,18 @@ fn part_byte_range(matrix: &SparseMatrix, part: (usize, usize)) -> (u64, usize) 
 /// Multiply all tiles of one partition (a contiguous range of tile rows)
 /// with the input block.  Output rows of the partition are exclusively
 /// owned by the calling worker.
-fn multiply_partition(
+///
+/// Every output row accumulates its tiles in ascending tile-column
+/// order in both traversal modes (row-major trivially; the super-tile
+/// k-way merge picks ascending columns globally, which restricted to
+/// one row is still that row's ascending order), and rows accumulate
+/// into disjoint slots — so the bits of `out` depend only on the
+/// matrix, the input panel and the kernel, never on partition geometry,
+/// thread count, or what *other* panels the same image bytes are
+/// multiplied against.  [`crate::spmm::batch::spmm_batch`] relies on
+/// exactly this to keep batched multi-tenant sweeps bitwise identical
+/// to each job's solo [`spmm`].
+pub(crate) fn multiply_partition(
     matrix: &SparseMatrix,
     part: (usize, usize),
     row_images: &[&[u8]],

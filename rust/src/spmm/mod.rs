@@ -3,6 +3,7 @@
 //! baseline configurations for the evaluation figures.
 
 pub mod baseline;
+pub mod batch;
 pub mod dense_block;
 pub mod engine;
 pub mod kernel;
@@ -11,6 +12,7 @@ pub mod stream;
 pub mod super_tile;
 
 pub use baseline::{spmm_csr, spmm_trilinos_like};
+pub use batch::{spmm_batch, BatchedOperator, SpmmBatcher};
 pub use dense_block::{colmajor_to_rowmajor, rowmajor_to_colmajor, DenseBlock, SharedMut};
 pub use engine::{spmm, SpmmRunStats};
 pub use opts::SpmmOpts;

@@ -17,6 +17,7 @@ use flasheigen::eigen::{
 use flasheigen::graph::{gnm, gnm_undirected};
 use flasheigen::harness::{fig9_fusion_data, fig9_readahead_data, BenchCfg};
 use flasheigen::safs::{IoBackend, Safs, SafsConfig, StoragePrecision, WaitMode};
+use flasheigen::service::{GraphSession, JobSpec, SolverPool};
 use flasheigen::sparse::{build_matrix_opts, build_mem, BuildTarget, CooMatrix};
 use flasheigen::spmm::{ChainedGramSpmm, SpmmOpts};
 use flasheigen::util::prop::assert_close;
@@ -1054,6 +1055,137 @@ fn f32_em_eigensolve_meets_55_percent_byte_acceptance() {
     assert_eq!(
         io32.cache_miss_bytes, io64.cache_miss_bytes,
         "image-cache misses must not regress at the equal byte budget"
+    );
+}
+
+/// (q) The multi-tenant batching acceptance pin: four identical EM
+/// eigensolves served through one resident `GraphSession` (full-image
+/// cache, `batch_applies = 4`) share a single cold image sweep — the
+/// total image bytes the whole run reads from SAFS stay ≤ 1.5× one
+/// image — where the pre-session baseline (one fresh session and cold
+/// cache per job, exactly what separate processes would do) pays the
+/// full image four times.  Per-job spectra are bitwise identical across
+/// the two serving modes, and the batcher's per-job image attribution
+/// covers every image byte the device ledger saw.
+#[test]
+fn four_batched_em_solves_share_one_cold_image_sweep() {
+    let mut rng = Rng::new(131);
+    let coo = gnm_undirected(800, 4800, &mut rng);
+    let image_bytes = build_matrix_opts(&coo, 64, BuildTarget::Mem, true).storage_bytes();
+    let session = || {
+        let mut cfg = SafsConfig::untimed();
+        cfg.image_cache_bytes = image_bytes;
+        let fs = Safs::new(cfg);
+        let m = build_matrix_opts(&coo, 64, BuildTarget::Safs(&fs, "bi"), true);
+        GraphSession::eigen("batch-pin", fs, m, SpmmOpts::default(), 2, 128)
+    };
+    // Identical seeds keep the four jobs in lockstep, so every sweep of
+    // the batched run carries all four panels.
+    let specs: Vec<JobSpec> = (0..4)
+        .map(|j| JobSpec {
+            name: format!("j{j}"),
+            em: true,
+            cfg: EigenConfig {
+                nev: 4,
+                block_size: 2,
+                num_blocks: 8,
+                tol: 1e-6,
+                max_restarts: 200,
+                which: Which::LargestMagnitude,
+                seed: 5,
+                compute_eigenvectors: false,
+                refine_steps: 0,
+            },
+        })
+        .collect();
+
+    let sess = session();
+    let (img_before, _) = sess.fs().file_bytes("bi");
+    let reports = SolverPool::new(0, 4).run(&sess, &specs);
+    assert!(reports.iter().all(|r| r.converged), "batched jobs must converge");
+    assert_eq!(sess.batcher().max_width(), 4, "all four jobs must share sweeps");
+    let batched_image: u64 = reports.iter().map(|r| r.image_bytes).sum();
+    let (img_after, _) = sess.fs().file_bytes("bi");
+    assert_eq!(
+        batched_image,
+        img_after - img_before,
+        "per-job image attribution must cover every device image byte"
+    );
+    assert!(batched_image > 0, "the cold sweep must actually read the image");
+    assert!(
+        2 * batched_image <= 3 * image_bytes, // batched ≤ 1.5 × one image
+        "four batched EM solves must share one cold sweep: read {batched_image} \
+         of a {image_bytes}-byte image"
+    );
+
+    // Baseline: one fresh session (cold cache) per job — the pre-session
+    // world where each solve pays its own full image.
+    let mut seq_image = 0u64;
+    for (j, spec) in specs.iter().enumerate() {
+        let s = session();
+        let rep = SolverPool::new(0, 1).run(&s, std::slice::from_ref(spec));
+        assert_eq!(
+            rep[0].values, reports[j].values,
+            "batched job {j} must be bitwise identical to its solo run"
+        );
+        seq_image += rep[0].image_bytes;
+    }
+    assert!(
+        seq_image >= 4 * image_bytes,
+        "cold sessions must each pay the full image: {seq_image} vs {image_bytes}"
+    );
+    assert!(
+        2 * batched_image < seq_image,
+        "batching must beat sequential serving decisively: {batched_image} vs {seq_image}"
+    );
+}
+
+/// (q2) Multi-tenant attribution exactness under concurrency: with the
+/// image cache off (every sweep pays the image) and four EM jobs running
+/// batched, the per-job ledgers — batcher image shares plus each job's
+/// tagged subspace files — sum to the array's global byte ledger
+/// EXACTLY.  Global scope-based attribution is meaningless when jobs
+/// interleave; this pins that the replacement never loses a byte.
+#[test]
+fn batched_per_job_ledgers_sum_to_the_device_ledger_exactly() {
+    let mut rng = Rng::new(137);
+    let coo = gnm_undirected(600, 3600, &mut rng);
+    let fs = Safs::new(SafsConfig::untimed());
+    let m = build_matrix_opts(&coo, 64, BuildTarget::Safs(&fs, "xi"), true);
+    let sess = GraphSession::eigen("ledger-pin", fs.clone(), m, SpmmOpts::default(), 2, 128);
+    let specs: Vec<JobSpec> = (0..4)
+        .map(|j| JobSpec {
+            name: format!("j{j}"),
+            em: true,
+            cfg: EigenConfig {
+                nev: 3,
+                block_size: 2,
+                num_blocks: 8,
+                tol: 1e-7,
+                max_restarts: 300,
+                which: Which::LargestMagnitude,
+                seed: 41 + j as u64, // distinct jobs: real interleaving
+                compute_eigenvectors: false,
+                refine_steps: 0,
+            },
+        })
+        .collect();
+    let before = fs.stats();
+    let reports = SolverPool::new(0, 4).run(&sess, &specs);
+    let delta = fs.stats().delta_since(&before);
+    assert!(reports.iter().all(|r| r.converged));
+    let image: u64 = reports.iter().map(|r| r.image_bytes).sum();
+    let sub_r: u64 = reports.iter().map(|r| r.subspace_read).sum();
+    let sub_w: u64 = reports.iter().map(|r| r.subspace_written).sum();
+    assert!(image > 0 && sub_r > 0 && sub_w > 0, "all three ledgers must see traffic");
+    assert_eq!(
+        image + sub_r,
+        delta.bytes_read,
+        "per-job read attribution must sum to the device ledger exactly"
+    );
+    assert_eq!(
+        sub_w, delta.bytes_written,
+        "per-job write attribution must sum to the device ledger exactly"
     );
 }
 

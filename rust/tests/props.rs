@@ -962,6 +962,104 @@ fn prop_default_ctx_is_fused_streamed_and_matches_eager_bitwise() {
 }
 
 #[test]
+fn prop_batched_serving_bitwise_matches_sequential_and_saves_bytes() {
+    // The multi-tenant batching contract (`spmm/batch.rs` + `service/`):
+    // k jobs solved through one resident GraphSession must produce, per
+    // job, BITWISE identical spectra at every admission width — a job's
+    // bits may depend only on the matrix and its own panels, never on
+    // who shares the sweep — while total SAFS reads at width ≥ 2 fall
+    // strictly below sequential serving (the image sweeps are shared;
+    // identical seeds keep the jobs in lockstep so every sweep batches).
+    // Exercised on ER and R-MAT graphs, eigen and SVD sessions, IM and
+    // EM job subspaces.
+    run_prop("batched-vs-sequential-serving", 3, |g| {
+        use flasheigen::service::{GraphSession, JobSpec, SolverPool};
+        let n = g.usize_in(80, 260) as u64;
+        let nnz = g.usize_in(n as usize, 2000) as u64;
+        let svd_path = g.bool();
+        let rmat_shape = g.bool();
+        let em = g.bool();
+        let graph_seed = g.u64();
+        let solver_seed = g.u64();
+        let mut rng = Rng::new(graph_seed);
+        let mut coo = if rmat_shape {
+            rmat(n.max(64), nnz.max(1), RmatParams::default(), &mut rng)
+        } else {
+            gnm(n, nnz.min(n * n.saturating_sub(1)), &mut rng)
+        };
+        let at_coo = svd_path.then(|| coo.transpose());
+        if !svd_path {
+            coo.symmetrize();
+        }
+        let session = || {
+            let fs = Safs::new(SafsConfig::untimed());
+            if svd_path {
+                let a = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "wa"), true);
+                let at = build_matrix_opts(
+                    at_coo.as_ref().unwrap(),
+                    32,
+                    BuildTarget::Safs(&fs, "wat"),
+                    true,
+                );
+                GraphSession::svd("p", fs, a, at, SpmmOpts::default(), 2, 64)
+            } else {
+                let m = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "wm"), true);
+                GraphSession::eigen("p", fs, m, SpmmOpts::default(), 2, 64)
+            }
+        };
+        let specs: Vec<JobSpec> = (0..4)
+            .map(|j| JobSpec {
+                name: format!("j{j}"),
+                em,
+                cfg: flasheigen::eigen::EigenConfig {
+                    nev: 2,
+                    block_size: 2,
+                    num_blocks: 6,
+                    tol: 1e-6,
+                    max_restarts: 60,
+                    which: flasheigen::eigen::Which::LargestMagnitude,
+                    seed: solver_seed,
+                    compute_eigenvectors: false,
+                    refine_steps: 0,
+                },
+            })
+            .collect();
+        let mut sequential: Option<(Vec<Vec<f64>>, u64)> = None;
+        for width in [1usize, 2, 4] {
+            let sess = session();
+            let before = sess.fs().stats();
+            let reports = SolverPool::new(0, width).run(&sess, &specs);
+            let read = sess.fs().stats().delta_since(&before).bytes_read;
+            if sess.batcher().max_width() != width {
+                return Err(format!(
+                    "admission width {width} never reached: max batch width {}",
+                    sess.batcher().max_width()
+                ));
+            }
+            let values: Vec<Vec<f64>> = reports.into_iter().map(|r| r.values).collect();
+            match &sequential {
+                None => sequential = Some((values, read)),
+                Some((v0, seq_read)) => {
+                    for (j, (v, v0)) in values.iter().zip(v0).enumerate() {
+                        if v != v0 {
+                            return Err(format!(
+                                "job {j} bits changed at width {width}: {v:?} vs {v0:?}"
+                            ));
+                        }
+                    }
+                    if read >= *seq_read {
+                        return Err(format!(
+                            "width {width} read {read} bytes, not under sequential {seq_read}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_eigenvalues_within_gershgorin() {
     // All Ritz values of an adjacency matrix lie within [-Δ, Δ] where Δ
     // is the max degree (Gershgorin / spectral radius bound).
