@@ -29,6 +29,27 @@ use crate::dense::{
 };
 use std::sync::Arc;
 
+/// A converged basis carried between solves — the warm-start payload of
+/// [`EigenConfig::warm_start`].  Produced by
+/// [`EigenResult::warm_basis`] after a solve with
+/// `compute_eigenvectors`, held by the caller across graph mutations,
+/// and handed to the next [`solve`] so it seeds its Krylov space from
+/// the old invariant subspace instead of a random block.  Plain
+/// column-major f64 host data: a warm basis outlives the solver context
+/// (and the matrix incarnation) it came from.
+#[derive(Clone, Debug)]
+pub struct WarmBasis {
+    /// Operator dimension the basis was computed at.  A basis whose
+    /// height does not match the new operator falls back to a cold
+    /// start — dynamic graphs keep their vertex set fixed, so this only
+    /// guards misuse.
+    pub n: usize,
+    /// Number of basis columns (typically the converged nev).
+    pub cols: usize,
+    /// Column-major `n × cols` values.
+    pub data: Vec<f64>,
+}
+
 #[derive(Clone, Debug)]
 pub struct EigenConfig {
     /// Number of eigenvalues wanted.
@@ -54,6 +75,15 @@ pub struct EigenConfig {
     /// strictly improve the worst residual are rejected and stop the
     /// loop.
     pub refine_steps: usize,
+    /// Prior converged basis to seed the Krylov space from (dynamic
+    /// graphs: re-solve after a delta instead of starting cold).  The
+    /// basis rides in as **one wide starting block** — re-orthonormalized,
+    /// width clamped to `min(m_max/2, m_max − b)` — so the first
+    /// projected solve already spans the old invariant subspace and
+    /// reconvergence after a small perturbation takes O(1) restarts.
+    /// `None` (the default everywhere) is the cold random start and is
+    /// bitwise-identical to the pre-warm-start solver.
+    pub warm_start: Option<Arc<WarmBasis>>,
 }
 
 impl EigenConfig {
@@ -69,6 +99,7 @@ impl EigenConfig {
             seed: 0xE16E,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         }
     }
 }
@@ -87,6 +118,22 @@ pub struct EigenResult {
     pub refine_history: Vec<f64>,
     /// Ritz vectors (nev columns in ≤b-wide blocks) if requested.
     pub eigenvectors: Option<Vec<TasMatrix>>,
+}
+
+impl EigenResult {
+    /// Package the computed Ritz vectors as a warm-start basis for a
+    /// subsequent [`solve`] (see [`EigenConfig::warm_start`]).  `None`
+    /// when the solve did not compute eigenvectors.
+    pub fn warm_basis(&self) -> Option<Arc<WarmBasis>> {
+        let blocks = self.eigenvectors.as_ref()?;
+        let n = blocks.first()?.n_rows;
+        let cols: usize = blocks.iter().map(|b| b.n_cols).sum();
+        let mut data = Vec::with_capacity(n * cols);
+        for b in blocks {
+            data.extend_from_slice(&b.to_colmajor());
+        }
+        Some(Arc::new(WarmBasis { n, cols, data }))
+    }
 }
 
 /// Solve for the `cfg.nev` eigenpairs of a symmetric `op`.
@@ -108,8 +155,24 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
     }
 
     // --- initialization ---
-    let v0 = TasMatrix::zeros(ctx, n, b);
-    mv_random(&v0, cfg.seed);
+    // Warm start: seed with the prior converged Ritz block as one wide
+    // starting block (the expansion block width then stays that width,
+    // and `bw = last_r.rows` below tracks it).  Clamping to m_max/2
+    // guarantees at least two expansions fit before the projected
+    // solve, so the restart always has a non-residual block to keep; a
+    // basis of the wrong height falls back to the cold random start.
+    let warm = cfg.warm_start.as_deref().filter(|wb| wb.n == n && wb.cols > 0);
+    let v0 = match warm {
+        Some(wb) => {
+            let w0 = wb.cols.min(m_max / 2).min(m_max - b).max(1);
+            TasMatrix::from_fn(ctx, n, w0, |r, c| wb.data[c * wb.n + r])
+        }
+        None => {
+            let v0 = TasMatrix::zeros(ctx, n, b);
+            mv_random(&v0, cfg.seed);
+            v0
+        }
+    };
     ctx.io_phases
         .scope_tracked(&ctx.fs, &ctx.mem, "ortho", || normalize_block(&v0, &[], cfg.seed ^ 1));
     let mut basis: Vec<TasMatrix> = vec![v0];
@@ -199,7 +262,7 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
         let m = t.rows;
         let (theta, u) = sym_eig(&t);
         let order = cfg.which.order(&theta);
-        let bw = b; // last non-residual block always has width b here
+        let bw = last_r.rows; // width of the residual block (b, or the warm block width)
         let res = |i: usize| -> f64 {
             // ‖R · u_i[last block rows]‖₂
             let mut s = 0.0;
@@ -261,7 +324,9 @@ pub fn solve(op: &dyn Operator, ctx: &Arc<DenseCtx>, cfg: &EigenConfig) -> Eigen
         }
 
         // --- thick restart: keep k Ritz vectors + residual block ---
-        let keep = (cfg.nev + b).max(m / 2).min(m - b);
+        // The residual block is as wide as the expansion block (b cold,
+        // the clamped warm width otherwise) — keep must leave room for it.
+        let keep = (cfg.nev + b).max(m / 2).min(m - basis.last().unwrap().n_cols);
         let cols: Vec<usize> = (0..keep).map(|i| order[i]).collect();
         let mut new_basis = ctx.io_phases.scope_tracked(&ctx.fs, &ctx.mem, "restart", || {
             ritz_vectors(&basis[..basis.len() - 1], &u, &cols, ctx, b)
@@ -554,6 +619,7 @@ mod tests {
             seed: 3,
             compute_eigenvectors: true,
             refine_steps: 0,
+            warm_start: None,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged, "history: {:?}", res.history);
@@ -596,6 +662,7 @@ mod tests {
             seed: 5,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged, "history {:?}", res.history);
@@ -632,6 +699,7 @@ mod tests {
                 seed: 6,
                 compute_eigenvectors: false,
                 refine_steps: 0,
+                warm_start: None,
             };
             solve(&op, &ctx, &cfg)
         };
@@ -669,6 +737,7 @@ mod tests {
                 seed: 6,
                 compute_eigenvectors: true,
                 refine_steps: 0,
+                warm_start: None,
             };
             solve(&op, &ctx, &cfg)
         };
@@ -712,6 +781,7 @@ mod tests {
                 seed: 21,
                 compute_eigenvectors: false,
                 refine_steps: 0,
+                warm_start: None,
             };
             solve(&op, &ctx, &cfg)
         };
@@ -746,6 +816,7 @@ mod tests {
             seed: 16,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged);
@@ -774,6 +845,7 @@ mod tests {
             seed: 14,
             compute_eigenvectors: true,
             refine_steps: 0,
+            warm_start: None,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged);
@@ -801,6 +873,7 @@ mod tests {
             seed: 8,
             compute_eigenvectors: true,
             refine_steps: 0,
+            warm_start: None,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged);
@@ -834,6 +907,7 @@ mod tests {
             seed: 12,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged, "{:?}", res.history);
@@ -846,6 +920,66 @@ mod tests {
                 res.eigenvalues,
                 &expect[..3]
             );
+        }
+    }
+
+    #[test]
+    fn warm_start_reconverges_with_matching_spectrum() {
+        let mut rng = Rng::new(23);
+        let base = gnm_undirected(150, 600, &mut rng);
+        // Small perturbation: a handful of extra undirected edges.
+        let mut perturbed = CooMatrix::new(150, 150);
+        for &(r, c) in &base.entries {
+            perturbed.push(r, c);
+        }
+        for &(r, c) in &[(0u32, 75u32), (3, 90), (10, 111)] {
+            perturbed.push(r, c);
+            perturbed.push(c, r);
+        }
+        perturbed.sort_dedup();
+        let solve_on = |coo: &CooMatrix, warm: Option<Arc<WarmBasis>>| {
+            let op = SpmmOperator::new(build_mem(coo), SpmmOpts::default(), 2);
+            let ctx = DenseCtx::mem_for_tests(64);
+            let cfg = EigenConfig {
+                nev: 4,
+                block_size: 2,
+                num_blocks: 8,
+                tol: 1e-8,
+                max_restarts: 300,
+                which: Which::LargestMagnitude,
+                seed: 6,
+                compute_eigenvectors: true,
+                refine_steps: 0,
+                warm_start: warm,
+            };
+            solve(&op, &ctx, &cfg)
+        };
+        let prior = solve_on(&base, None);
+        assert!(prior.converged);
+        let warm_basis = prior.warm_basis().expect("eigenvectors were requested");
+        assert_eq!((warm_basis.n, warm_basis.cols), (150, 4));
+
+        let cold = solve_on(&perturbed, None);
+        let warm = solve_on(&perturbed, Some(warm_basis));
+        assert!(cold.converged && warm.converged, "{:?} / {:?}", cold.history, warm.history);
+        // Same spectrum either way; the warm start only changes how fast
+        // the solver gets there.
+        for (a, b) in cold.eigenvalues.iter().zip(&warm.eigenvalues) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        assert!(
+            warm.restarts <= cold.restarts,
+            "warm {} vs cold {} restarts",
+            warm.restarts,
+            cold.restarts
+        );
+        // A basis of the wrong height falls back to a cold start rather
+        // than corrupting the solve.
+        let bogus = Arc::new(WarmBasis { n: 7, cols: 1, data: vec![1.0; 7] });
+        let fallback = solve_on(&perturbed, Some(bogus));
+        assert!(fallback.converged);
+        for (a, b) in cold.eigenvalues.iter().zip(&fallback.eigenvalues) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
         }
     }
 
@@ -867,6 +1001,7 @@ mod tests {
                 seed: 19,
                 compute_eigenvectors: true,
                 refine_steps,
+                warm_start: None,
             };
             (solve(&op, &ctx, &cfg), op, ctx)
         };

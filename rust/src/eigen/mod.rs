@@ -9,7 +9,7 @@ pub mod ortho;
 pub mod svd;
 
 pub use dense_eig::{sym_eig, Which};
-pub use krylov_schur::{solve, EigenConfig, EigenResult};
+pub use krylov_schur::{solve, EigenConfig, EigenResult, WarmBasis};
 pub use operator::{CsrMode, CsrOperator, GramOperator, Operator, SpmmOperator};
 pub use ortho::{
     expand_block_streamed, normalize_block, ortho_against, ortho_normalize,

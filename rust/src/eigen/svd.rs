@@ -132,6 +132,7 @@ mod tests {
             seed: 31,
             compute_eigenvectors: true,
             refine_steps: 0,
+            warm_start: None,
         };
         let res = svd(&op, &ctx, &cfg);
         assert!(res.converged, "{:?}", res.history);
@@ -181,6 +182,7 @@ mod tests {
             seed: 41,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let eager_im = {
             let ctx = DenseCtx::mem_for_tests(64);
@@ -220,6 +222,7 @@ mod tests {
             seed: 33,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let im = {
             let ctx = DenseCtx::mem_for_tests(64);

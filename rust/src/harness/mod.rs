@@ -7,11 +7,11 @@ pub mod report;
 pub mod scenarios;
 
 pub use figures::{
-    fig10, fig11, fig12, fig13_batching, fig13_batching_data, fig6, fig7, fig8, fig9,
-    fig9_fusion, fig9_fusion_data, fig9_gram, fig9_gram_data, fig9_imgcache,
-    fig9_imgcache_data, fig9_precision, fig9_precision_data, fig9_readahead,
-    fig9_readahead_data, fig9_stream, fig9_stream_data, run_eigensolver, table2, table3,
-    EigenRun,
+    fig10, fig11, fig12, fig13_batching, fig13_batching_data, fig14_churn,
+    fig14_churn_data, fig6, fig7, fig8, fig9, fig9_fusion, fig9_fusion_data, fig9_gram,
+    fig9_gram_data, fig9_imgcache, fig9_imgcache_data, fig9_precision,
+    fig9_precision_data, fig9_readahead, fig9_readahead_data, fig9_stream,
+    fig9_stream_data, run_eigensolver, table2, table3, EigenRun,
 };
 pub use report::Table;
-pub use scenarios::BenchCfg;
+pub use scenarios::{churn_waves, rmat_churn, BenchCfg};

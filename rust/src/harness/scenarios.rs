@@ -16,10 +16,12 @@
 //! so small images still spread across all 24 devices.
 
 use crate::dense::{DenseCtx, DenseKernels, NativeKernels};
+use crate::graph::rmat::{rmat, RmatParams};
 use crate::graph::Dataset;
 use crate::metrics::MemTracker;
 use crate::safs::{IoBackend, Safs, SafsConfig, StoragePrecision, WaitMode};
-use crate::sparse::{build_matrix_opts, BuildTarget, CooMatrix, SparseMatrix};
+use crate::sparse::{build_matrix_opts, BuildTarget, CooMatrix, DeltaBatch, SparseMatrix};
+use crate::util::rng::Rng;
 use std::sync::Arc;
 
 /// Bench configuration (env-overridable so `cargo bench` can be tuned).
@@ -59,6 +61,9 @@ pub struct BenchCfg {
     /// a bounded residual cost while `f64` stays bitwise-identical to
     /// the historical default.
     pub storage_precision: StoragePrecision,
+    /// Delta-overlay compaction threshold as a fraction of base nnz
+    /// (FLASHEIGEN_DELTA_COMPACT / CLI `--delta-compact`; 0 disables).
+    pub delta_compact: f64,
 }
 
 impl Default for BenchCfg {
@@ -75,6 +80,7 @@ impl Default for BenchCfg {
             queue_depth: 32,
             io_backend: IoBackend::Queued,
             storage_precision: StoragePrecision::F64,
+            delta_compact: 0.25,
         }
     }
 }
@@ -118,6 +124,9 @@ impl BenchCfg {
         {
             c.storage_precision = p;
         }
+        if let Some(v) = getf("FLASHEIGEN_DELTA_COMPACT") {
+            c.delta_compact = v;
+        }
         c
     }
 
@@ -145,6 +154,7 @@ impl BenchCfg {
             image_cache_bytes: self.image_cache,
             gram_cache_split: true,
             storage_precision: self.storage_precision,
+            delta_compact_frac: self.delta_compact,
         }
     }
 
@@ -195,6 +205,58 @@ pub fn fmt_mem(mem: &MemTracker) -> String {
     crate::util::humansize::fmt_bytes(mem.peak())
 }
 
+/// Symmetric churn batches over a symmetrized base graph: each wave
+/// inserts `per_wave` fresh undirected edges and deletes `per_wave`
+/// existing ones (both directions, so an eigen session's matrix stays
+/// symmetric).  Deletions sample the *base* edge list, so a later wave
+/// may re-delete an already-removed edge — a counted no-op, exactly the
+/// redundant churn a real mutation feed produces.
+pub fn churn_waves(
+    base: &CooMatrix,
+    waves: usize,
+    per_wave: usize,
+    rng: &mut Rng,
+) -> Vec<DeltaBatch> {
+    let n = base.n_rows;
+    (0..waves)
+        .map(|_| {
+            let mut b = DeltaBatch::new();
+            for _ in 0..per_wave {
+                let r = rng.gen_range(n) as u32;
+                let c = rng.gen_range(n) as u32;
+                if r != c {
+                    b.insert_unweighted(r, c);
+                    b.insert_unweighted(c, r);
+                }
+                if !base.entries.is_empty() {
+                    let i = rng.gen_range(base.entries.len() as u64) as usize;
+                    let (dr, dc) = base.entries[i];
+                    b.delete(dr, dc);
+                    b.delete(dc, dr);
+                }
+            }
+            b
+        })
+        .collect()
+}
+
+/// The dynamic-graph ablation scenario (fig14): a symmetrized R-MAT
+/// power-law base graph plus `waves` symmetric churn batches.
+/// Deterministic in `seed`.
+pub fn rmat_churn(
+    n: u64,
+    m: u64,
+    waves: usize,
+    per_wave: usize,
+    seed: u64,
+) -> (CooMatrix, Vec<DeltaBatch>) {
+    let mut rng = Rng::new(seed);
+    let mut base = rmat(n, m, RmatParams::default(), &mut rng);
+    base.symmetrize();
+    let batches = churn_waves(&base, waves, per_wave, &mut rng);
+    (base, batches)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +276,30 @@ mod tests {
         assert_eq!(c.safs_config().storage_precision, StoragePrecision::F64);
         c.storage_precision = StoragePrecision::F32;
         assert_eq!(c.safs_config().storage_precision, StoragePrecision::F32);
+    }
+
+    #[test]
+    fn churn_scenario_is_deterministic_and_stays_symmetric() {
+        let (base, waves) = rmat_churn(256, 1200, 3, 20, 7);
+        let (base2, waves2) = rmat_churn(256, 1200, 3, 20, 7);
+        assert_eq!(base.entries, base2.entries);
+        assert_eq!(waves.len(), 3);
+        for (a, b) in waves.iter().zip(&waves2) {
+            assert_eq!(a.inserts, b.inserts);
+            assert_eq!(a.deletes, b.deletes);
+        }
+        // Applying every wave keeps the matrix symmetric.
+        let mut m = build_matrix_opts(&base, 32, BuildTarget::Mem, true);
+        for w in &waves {
+            assert!(!w.is_empty());
+            m.apply_delta(w);
+        }
+        let triples = m.to_triples();
+        let set: std::collections::BTreeSet<(u64, u64)> =
+            triples.iter().map(|&(r, c, _)| (r, c)).collect();
+        for &(r, c) in &set {
+            assert!(set.contains(&(c, r)), "({r},{c}) lost its mirror");
+        }
     }
 
     #[test]

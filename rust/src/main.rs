@@ -5,7 +5,7 @@
 //! flasheigen svd     --graph page --nev 8 [--sem] ...
 //! flasheigen serve   --graph friendster --jobs "nev=4; nev=8" [--batch-applies 4]
 //! flasheigen spmm    --graph twitter --cols 4 [--sem]
-//! flasheigen figures --exp fig6|...|fig13|table2|table3|all
+//! flasheigen figures --exp fig6|...|fig14|table2|table3|all
 //! flasheigen info
 //! ```
 
@@ -15,6 +15,7 @@ use flasheigen::graph::Dataset;
 use flasheigen::harness::{self, BenchCfg};
 use flasheigen::runtime::{find_artifacts_dir, XlaKernels};
 use flasheigen::service::{GraphSession, JobSpec, SolverPool};
+use flasheigen::sparse::DeltaBatch;
 use flasheigen::spmm::{spmm, DenseBlock, SpmmOpts};
 use flasheigen::util::cli::Args;
 use flasheigen::util::humansize::fmt_bytes;
@@ -46,7 +47,15 @@ SERVE OPTIONS:
                      \"nev=4; nev=8 block=4 em=0\".  Each spec is
                      `key=value ...` with keys name nev block nblocks
                      tol restarts seed refine em (em=1 keeps the job's
-                     subspace on the array — the default)
+                     subspace on the array — the default) vecs (vecs=1
+                     computes eigenvectors and stashes the converged
+                     basis on the session) warm (warm=1 seeds the solve
+                     from the stashed basis).  A line `update
+                     ins=r:c[,r:c...] del=r:c[,r:c...]` is not a job: it
+                     mutates the resident graph in place through the
+                     delta overlay (weighted edges as r:c:v), so jobs
+                     after it solve the mutated graph — e.g.
+                     \"nev=4 vecs=1; update ins=0:9,9:0; nev=4 warm=1\"
   --batch-applies <k> max jobs in flight, i.e. the admission width of
                      the solver pool (default $FLASHEIGEN_BATCH_APPLIES
                      or 4; 1 = sequential serving, the baseline)
@@ -98,6 +107,13 @@ COMMON OPTIONS:
                      precision Rayleigh-Ritz passes that monotonically
                      tighten the worst residual — the recovery knob for
                      --precision f32 runs
+  --delta-compact <f> delta-overlay compaction threshold (default
+                     $FLASHEIGEN_DELTA_COMPACT or 0.25; 0 disables):
+                     once `update` mutations accumulate past this
+                     fraction of the base image's nnz, the overlay is
+                     folded into a freshly rebuilt base image — same
+                     bits before and after, only the storage layout
+                     changes
   --sem              semi-external mode (matrix + subspace on SSDs)
   --eager            opt out of the DEFAULT fused + streamed §3.4 path:
                      run the eager Table-1 reference ops and the
@@ -137,7 +153,7 @@ fn main() {
             "graph", "scale", "nev", "block", "nblocks", "tol", "threads", "dilation",
             "cols", "exp", "seed", "read-ahead", "image-cache", "bench-json",
             "queue-depth", "io-engine", "precision", "refine", "jobs", "batch-applies",
-            "budget",
+            "budget", "delta-compact",
         ],
         &["sem", "xla", "eager", "fused", "streamed"],
     ) {
@@ -185,6 +201,7 @@ fn bench_cfg(args: &Args) -> Result<BenchCfg, String> {
         cfg.storage_precision = flasheigen::safs::StoragePrecision::from_name(name)
             .ok_or_else(|| format!("unknown precision '{name}' (f64|f32)"))?;
     }
+    cfg.delta_compact = args.get_f64("delta-compact", cfg.delta_compact)?;
     Ok(cfg)
 }
 
@@ -236,6 +253,7 @@ fn cmd_eigen(args: &Args, as_svd: bool) -> i32 {
             seed: cfg.seed,
             compute_eigenvectors: false,
             refine_steps: args.get_usize("refine", 0)?,
+            warm_start: None,
         };
         let fs = cfg.timed_safs();
         let kernels: Arc<dyn flasheigen::dense::DenseKernels> = if use_xla {
@@ -331,10 +349,47 @@ fn cmd_eigen(args: &Args, as_svd: bool) -> i32 {
     }
 }
 
+/// Parse an `update` serve line's edge list:
+/// `ins=r:c[,r:c:v,...] del=r:c[,r:c...]` — unweighted inserts as
+/// `r:c`, weighted as `r:c:v`.
+fn parse_update(s: &str) -> Result<DeltaBatch, String> {
+    let int = |t: &str| -> Result<u32, String> {
+        t.parse().map_err(|_| format!("bad vertex id {t:?} in update"))
+    };
+    let mut b = DeltaBatch::new();
+    for tok in s.split_whitespace() {
+        let (k, v) = tok
+            .split_once('=')
+            .ok_or_else(|| format!("bad update token {tok:?} (want ins=... or del=...)"))?;
+        for edge in v.split(',').filter(|e| !e.is_empty()) {
+            let parts: Vec<&str> = edge.split(':').collect();
+            match (k, parts.as_slice()) {
+                ("ins", [r, c]) => b.insert_unweighted(int(r)?, int(c)?),
+                ("ins", [r, c, w]) => b.insert(
+                    int(r)?,
+                    int(c)?,
+                    w.parse().map_err(|_| format!("bad edge weight {w:?} in update"))?,
+                ),
+                ("del", [r, c]) => b.delete(int(r)?, int(c)?),
+                ("ins" | "del", _) => {
+                    return Err(format!("bad update edge {edge:?} (want r:c or r:c:v)"))
+                }
+                _ => return Err(format!("unknown update key {k:?} (want ins|del)")),
+            }
+        }
+    }
+    if b.is_empty() {
+        return Err("update line with no ins=/del= edges".into());
+    }
+    Ok(b)
+}
+
 /// `flasheigen serve` — the resident-session driver: build the graph's
 /// SEM image once, open a [`GraphSession`] over it (SVD session for
 /// directed datasets, eigen session otherwise) and push every `--jobs`
-/// spec through one admission-controlled [`SolverPool`].
+/// spec through one admission-controlled [`SolverPool`].  `update`
+/// lines split the jobs into waves and mutate the resident graph in
+/// between (delta overlay; compaction at `--delta-compact`).
 fn cmd_serve(args: &Args) -> i32 {
     let run = || -> Result<(), String> {
         let cfg = bench_cfg(args)?;
@@ -346,21 +401,37 @@ fn cmd_serve(args: &Args) -> i32 {
         let batch_applies = args.get_usize("batch-applies", env_width)?.max(1);
         let budget = args.get_u64("budget", 0)?;
 
-        // Job specs: a file (one per line) or an inline ';'-separated list.
+        // Job specs: a file (one per line) or an inline ';'-separated
+        // list.  An `update …` line is a graph mutation, not a job: it
+        // splits the job stream into admission waves — everything before
+        // it solves the old graph, everything after the mutated one.
         let jobs_arg = args.get_or("jobs", "nev=4; nev=8 block=4; nev=2 em=0");
         let text = match std::fs::read_to_string(jobs_arg) {
             Ok(t) => t,
             Err(_) => jobs_arg.replace(';', "\n"),
         };
-        let mut specs = Vec::new();
+        let mut waves: Vec<(Vec<JobSpec>, Option<DeltaBatch>)> = Vec::new();
+        let mut cur: Vec<JobSpec> = Vec::new();
+        let mut n_jobs = 0usize;
         for line in text.lines() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
-            specs.push(JobSpec::parse(line)?);
+            match line.strip_prefix("update") {
+                Some(rest) if rest.is_empty() || rest.starts_with(char::is_whitespace) => {
+                    waves.push((std::mem::take(&mut cur), Some(parse_update(rest)?)));
+                }
+                _ => {
+                    cur.push(JobSpec::parse(line)?);
+                    n_jobs += 1;
+                }
+            }
         }
-        if specs.is_empty() {
+        if !cur.is_empty() {
+            waves.push((cur, None));
+        }
+        if n_jobs == 0 {
             return Err("--jobs produced no job specs".into());
         }
 
@@ -404,20 +475,42 @@ fn cmd_serve(args: &Args) -> i32 {
         {
             sess.group_size = n;
         }
+        let n_updates = waves.iter().filter(|(_, u)| u.is_some()).count();
         eprintln!(
-            "session {}: {} |V|={} |E|={} image={} | jobs={} batch_applies={batch_applies} budget={}",
+            "session {}: {} |V|={} |E|={} image={} | jobs={} updates={n_updates} batch_applies={batch_applies} budget={}",
             sess.name,
             if sess.is_svd() { "svd" } else { "eigen" },
             coo.n_rows,
             coo.nnz(),
             fmt_bytes(sess.image_bytes()),
-            specs.len(),
+            n_jobs,
             if budget == 0 { "unlimited".to_string() } else { fmt_bytes(budget) },
         );
 
         let pool = SolverPool::new(budget, batch_applies);
         let before = fs.stats();
-        let (reports, secs) = time_it(|| pool.run(&sess, &specs));
+        let (reports, secs) = time_it(|| {
+            let mut all = Vec::new();
+            for (specs, update) in &waves {
+                if !specs.is_empty() {
+                    all.extend(pool.run(&sess, specs));
+                }
+                if let Some(batch) = update {
+                    // Between waves every job has departed the batcher,
+                    // so the write lock is uncontended.
+                    let st = sess.apply_deltas(batch, cfg.delta_compact);
+                    eprintln!(
+                        "update: +{} edges, {} updated, -{} (missed deletes {}) | image now {}",
+                        st.inserted,
+                        st.updated,
+                        st.deleted,
+                        st.missed_deletes,
+                        fmt_bytes(sess.image_bytes()),
+                    );
+                }
+            }
+            all
+        });
         let delta = fs.stats().delta_since(&before);
         for r in &reports {
             println!(
@@ -571,6 +664,11 @@ fn cmd_figures(args: &Args) -> i32 {
             // Same 16x scale-up as the other streamed-SEM ablations so
             // the subspace spans several row intervals.
             emit(harness::fig13_batching(&cfg, 16.0, &[1, 2, 4]));
+            ran = true;
+        }
+        if want("fig14") {
+            // Dynamic-graph churn: delta depth x {cold, warm} re-solve.
+            emit(harness::fig14_churn(&cfg, &[1, 4, 16], 8));
             ran = true;
         }
         if want("fig12") {

@@ -413,9 +413,9 @@ mod tests {
         let io = PhaseIo::new();
         io.scope(&fs, "spmm", || {
             let cache = fs.image_cache();
-            assert!(cache.probe("img", 0, 100).is_none());
-            assert!(cache.publish("img", 0, vec![1u8; 100]).is_none());
-            assert!(cache.probe("img", 0, 100).is_some());
+            assert!(cache.probe("img", 1, 0, 100).is_none());
+            assert!(cache.publish("img", 1, 0, vec![1u8; 100]).is_none());
+            assert!(cache.probe("img", 1, 0, 100).is_some());
         });
         let s = io.get("spmm");
         assert_eq!(s.cache_hit_bytes, 100, "hit attributed to the phase");

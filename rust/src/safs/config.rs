@@ -128,6 +128,7 @@ pub const KNOWN_ENV_VARS: &[&str] = &[
     "FLASHEIGEN_BATCH_APPLIES",
     "FLASHEIGEN_ARTIFACTS",
     "FLASHEIGEN_PROP_SEED",
+    "FLASHEIGEN_DELTA_COMPACT",
 ];
 
 /// The names in `vars` that look like they were meant for us
@@ -248,6 +249,16 @@ pub struct SafsConfig {
     /// pre-precision behaviour.  CLI: `--precision`; env:
     /// `FLASHEIGEN_PRECISION`.
     pub storage_precision: StoragePrecision,
+    /// Delta-overlay compaction threshold
+    /// ([`crate::sparse::SparseMatrix::maybe_compact`]): when a mutable
+    /// graph's accumulated delta nnz exceeds this fraction of the base
+    /// image's nnz, the overlay is folded into a freshly rebuilt base
+    /// image.  `0.0` disables automatic compaction (the overlay grows
+    /// unboundedly; explicit `compact()` still works).  Compaction is
+    /// bitwise-invariant — it moves *where* tile bytes live, never what
+    /// a multiply computes.  CLI: `--delta-compact`; env:
+    /// `FLASHEIGEN_DELTA_COMPACT`.
+    pub delta_compact_frac: f64,
 }
 
 impl Default for SafsConfig {
@@ -272,6 +283,7 @@ impl Default for SafsConfig {
             image_cache_bytes: 0,
             gram_cache_split: true,
             storage_precision: StoragePrecision::F64,
+            delta_compact_frac: 0.25,
         }
     }
 }
@@ -365,6 +377,14 @@ mod tests {
         // the cache-both-files-independently baseline.
         assert!(SafsConfig::default().gram_cache_split);
         assert!(SafsConfig::untimed().gram_cache_split);
+    }
+
+    #[test]
+    fn delta_compact_defaults_to_a_quarter() {
+        // Mutable graphs fold their overlay back into the base image
+        // once delta nnz reaches 25% of the base; 0.0 disables.
+        assert!((SafsConfig::default().delta_compact_frac - 0.25).abs() < 1e-12);
+        assert!((SafsConfig::untimed().delta_compact_frac - 0.25).abs() < 1e-12);
     }
 
     #[test]

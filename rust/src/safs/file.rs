@@ -13,8 +13,19 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
+/// Monotonic generation counter behind [`SafsFile::uid`].
+static NEXT_UID: AtomicU64 = AtomicU64::new(1);
+
 pub struct SafsFile {
     pub name: String,
+    /// Unique identity of this file *incarnation*, monotonic across all
+    /// [`SafsFile::new`] calls in the process.  Re-creating (truncating)
+    /// a file at the same path yields a handle with the same name but a
+    /// larger uid — the [`crate::safs::ImageCache`] tags entries with it
+    /// so an in-flight reader holding a pre-truncation handle (e.g.
+    /// across a delta compaction) can never publish, or be served, the
+    /// old incarnation's bytes under the new one's key.
+    pub uid: u64,
     pub stripe: StripeMap,
     /// Stripe blocks, grown on demand.  Each block is independently locked
     /// so concurrent workers touching different blocks do not contend.
@@ -36,6 +47,7 @@ impl SafsFile {
     pub fn new(name: &str, stripe: StripeMap) -> SafsFile {
         SafsFile {
             name: name.to_string(),
+            uid: NEXT_UID.fetch_add(1, Ordering::Relaxed),
             stripe,
             blocks: RwLock::new(Vec::new()),
             size: AtomicU64::new(0),
@@ -253,6 +265,15 @@ mod tests {
         // engine's submission-side path).
         f.reserve_range(&array, 0, 50, false);
         assert_eq!(f.bytes_read(), 500);
+    }
+
+    #[test]
+    fn recreated_files_get_strictly_larger_uids() {
+        let (_, f1) = mk();
+        let (_, f2) = mk();
+        // Same name, new incarnation — the uid orders them.
+        assert_eq!(f1.name, f2.name);
+        assert!(f2.uid > f1.uid);
     }
 
     #[test]

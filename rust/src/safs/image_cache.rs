@@ -20,7 +20,14 @@
 //! The cache stores immutable byte buffers keyed by `(file name, byte
 //! offset)` — one entry per contiguous tile-row range a reader issues
 //! (the streamed subsystem's per-interval ranges, the eager engine's
-//! per-partition ranges).  Readers interact through three calls:
+//! per-partition ranges).  Every entry additionally carries the file
+//! *incarnation* uid ([`crate::safs::SafsFile::uid`]) of the handle
+//! whose bytes it holds: re-creating a file at the same path (delta
+//! compaction truncates the image in place) bumps the uid, so a reader
+//! holding a pre-truncation handle can neither be served the new
+//! incarnation's bytes nor — the in-flight race `invalidate_file` alone
+//! cannot close — publish the old incarnation's bytes under the new
+//! key.  Readers interact through three calls:
 //!
 //! * [`ImageCache::probe`] — look up a range *at demand time*.  A hit
 //!   hands back a shared handle to the bytes (no SAFS read is issued; the
@@ -87,9 +94,10 @@
 //!
 //! let cache = ImageCache::new(160); // bytes of budget
 //! cache.register_walk("img", &[0, 100, 200]);
-//! assert!(cache.probe("img", 0, 64).is_none()); // cold miss
-//! assert!(cache.publish("img", 0, vec![7u8; 64]).is_none()); // admitted
-//! let hit = cache.probe("img", 0, 64).expect("resident across applies");
+//! // `1` is the file incarnation uid (`SafsFile::uid`).
+//! assert!(cache.probe("img", 1, 0, 64).is_none()); // cold miss
+//! assert!(cache.publish("img", 1, 0, vec![7u8; 64]).is_none()); // admitted
+//! let hit = cache.probe("img", 1, 0, 64).expect("resident across applies");
 //! assert_eq!(&hit[..4], &[7, 7, 7, 7]);
 //! let c = cache.counters();
 //! assert_eq!((c.hit_bytes, c.miss_bytes), (64, 64));
@@ -123,6 +131,12 @@ pub struct ImageCacheCounters {
 
 struct Entry {
     bytes: Arc<Vec<u8>>,
+    /// File incarnation these bytes were read from
+    /// ([`crate::safs::SafsFile::uid`]) — uids are monotonic across
+    /// re-creations, so `entry.uid < probe.uid` identifies a
+    /// pre-truncation leftover and `entry.uid > probe.uid` a straggling
+    /// pre-truncation reader.
+    uid: u64,
     /// Global probe clock at the last touch (LRU fallback + staleness).
     lru: u64,
 }
@@ -237,12 +251,15 @@ impl ImageCache {
         }
     }
 
-    /// Demand-time lookup of `(file, offset)` expecting `len` bytes.
-    /// Counts one hit or miss, advances the walk cursor, and on a hit
-    /// returns a shared handle to the bytes.  A resident entry whose
-    /// length does not match the demand (stale geometry) is dropped and
-    /// counted as a miss.
-    pub fn probe(&self, file: &str, offset: u64, len: usize) -> Option<Arc<Vec<u8>>> {
+    /// Demand-time lookup of `(file, offset)` expecting `len` bytes from
+    /// file incarnation `uid`.  Counts one hit or miss, advances the
+    /// walk cursor, and on a hit returns a shared handle to the bytes.
+    /// A resident entry whose length does not match the demand (stale
+    /// geometry) or whose incarnation is *older* than `uid` (a
+    /// pre-truncation leftover) is dropped and counted as a miss; a
+    /// *newer* resident entry stays — the straggling old-handle reader
+    /// just misses.
+    pub fn probe(&self, file: &str, uid: u64, offset: u64, len: usize) -> Option<Arc<Vec<u8>>> {
         if self.budget == 0 {
             return None;
         }
@@ -250,16 +267,16 @@ impl ImageCache {
         Self::touch(&mut inner, file, offset);
         let clock = inner.clock;
         let key = (file.to_string(), offset);
-        let stale_len = match inner.entries.get_mut(&key) {
-            Some(e) if e.bytes.len() == len => {
+        let drop_stale = match inner.entries.get_mut(&key) {
+            Some(e) if e.uid == uid && e.bytes.len() == len => {
                 e.lru = clock;
                 self.hit_bytes.fetch_add(len as u64, Ordering::Relaxed);
                 return Some(e.bytes.clone());
             }
-            Some(e) => Some(e.bytes.len() as u64),
-            None => None,
+            Some(e) => e.uid <= uid,
+            None => false,
         };
-        if stale_len.is_some() {
+        if drop_stale {
             let e = inner.entries.remove(&key).unwrap();
             self.drop_entry(&mut inner, e.bytes.len() as u64);
         }
@@ -268,8 +285,9 @@ impl ImageCache {
     }
 
     /// Side-effect-free lookup (prefetchers deciding whether to issue a
-    /// read-ahead ticket).  No counter moves, no cursor advances.
-    pub fn peek(&self, file: &str, offset: u64, len: usize) -> Option<Arc<Vec<u8>>> {
+    /// read-ahead ticket).  No counter moves, no cursor advances.  Only
+    /// bytes of the demanded incarnation `uid` are returned.
+    pub fn peek(&self, file: &str, uid: u64, offset: u64, len: usize) -> Option<Arc<Vec<u8>>> {
         if self.budget == 0 {
             return None;
         }
@@ -277,14 +295,14 @@ impl ImageCache {
         inner
             .entries
             .get(&(file.to_string(), offset))
-            .filter(|e| e.bytes.len() == len)
+            .filter(|e| e.uid == uid && e.bytes.len() == len)
             .map(|e| e.bytes.clone())
     }
 
     /// Account a demand that was already resolved from the cache (a
     /// prefetcher's earlier [`ImageCache::peek`]): one hit, cursor
-    /// advanced, LRU refreshed.
-    pub fn note_hit(&self, file: &str, offset: u64, len: usize) {
+    /// advanced, LRU refreshed (for the matching incarnation only).
+    pub fn note_hit(&self, file: &str, uid: u64, offset: u64, len: usize) {
         if self.budget == 0 {
             return;
         }
@@ -292,7 +310,9 @@ impl ImageCache {
         Self::touch(&mut inner, file, offset);
         let clock = inner.clock;
         if let Some(e) = inner.entries.get_mut(&(file.to_string(), offset)) {
-            e.lru = clock;
+            if e.uid == uid {
+                e.lru = clock;
+            }
         }
         self.hit_bytes.fetch_add(len as u64, Ordering::Relaxed);
     }
@@ -310,22 +330,31 @@ impl ImageCache {
         self.miss_bytes.fetch_add(len as u64, Ordering::Relaxed);
     }
 
-    /// Offer freshly read bytes for retention.  Returns `None` when the
-    /// buffer was admitted (moved into the cache) or `Some(bytes)`
-    /// handing it back on rejection: cache disabled, buffer larger than
-    /// the whole budget, the range already resident (a concurrent
-    /// worker won the publish), or the candidate would itself be the
-    /// next eviction victim (on a cyclic walk: the stable-prefix
-    /// admission rule — see the module docs).
-    pub fn publish(&self, file: &str, offset: u64, bytes: Vec<u8>) -> Option<Vec<u8>> {
+    /// Offer freshly read bytes (from file incarnation `uid`) for
+    /// retention.  Returns `None` when the buffer was admitted (moved
+    /// into the cache) or `Some(bytes)` handing it back on rejection:
+    /// cache disabled, buffer larger than the whole budget, the range
+    /// already resident under the same or a newer incarnation (a
+    /// concurrent worker won the publish — or this publisher holds a
+    /// pre-truncation handle, the in-flight race `invalidate_file`
+    /// alone cannot close), or the candidate would itself be the next
+    /// eviction victim (on a cyclic walk: the stable-prefix admission
+    /// rule — see the module docs).  A resident entry of an *older*
+    /// incarnation is dropped and replaced.
+    pub fn publish(&self, file: &str, uid: u64, offset: u64, bytes: Vec<u8>) -> Option<Vec<u8>> {
         let len = bytes.len() as u64;
         if self.budget == 0 || len == 0 || len > self.budget {
             return Some(bytes);
         }
         let mut inner = self.inner.lock().unwrap();
         let key = (file.to_string(), offset);
-        if inner.entries.contains_key(&key) {
-            return Some(bytes);
+        match inner.entries.get(&key) {
+            Some(e) if e.uid >= uid => return Some(bytes),
+            Some(_) => {
+                let e = inner.entries.remove(&key).unwrap();
+                self.drop_entry(&mut inner, e.bytes.len() as u64);
+            }
+            None => {}
         }
         while inner.used + len > self.budget {
             let cand = Self::priority(&inner, file, offset, 0);
@@ -359,12 +388,15 @@ impl ImageCache {
         // exactly the bytes the budget accounts for.
         let mut bytes = bytes;
         bytes.shrink_to_fit();
-        inner.entries.insert(key, Entry { bytes: Arc::new(bytes), lru: clock });
+        inner.entries.insert(key, Entry { bytes: Arc::new(bytes), uid, lru: clock });
         None
     }
 
     /// Drop every entry (and the walk) of `file` — called when the file
     /// is deleted or truncated, so stale bytes can never be served.
+    /// (An in-flight reader of the old incarnation can still publish
+    /// *after* this runs; the per-entry incarnation uid is what keeps
+    /// those bytes from ever being served under the new incarnation.)
     pub fn invalidate_file(&self, file: &str) {
         if self.budget == 0 {
             return;
@@ -444,18 +476,18 @@ mod tests {
         let c = ImageCache::new(25);
         c.register_walk("img", &[0, 10, 20, 30]);
         for (off, fill) in [(0u64, 1u8), (10, 2), (20, 3), (30, 4)] {
-            assert!(c.probe("img", off, 10).is_none(), "cold miss at {off}");
-            let _ = c.publish("img", off, bytes(10, fill));
+            assert!(c.probe("img", 1, off, 10).is_none(), "cold miss at {off}");
+            let _ = c.publish("img", 1, off, bytes(10, fill));
         }
         // LRU would hold {20, 30}; next-use keeps the prefix {0, 10}.
-        assert!(c.peek("img", 0, 10).is_some());
-        assert!(c.peek("img", 10, 10).is_some());
-        assert!(c.peek("img", 20, 10).is_none());
-        assert!(c.peek("img", 30, 10).is_none());
+        assert!(c.peek("img", 1, 0, 10).is_some());
+        assert!(c.peek("img", 1, 10, 10).is_some());
+        assert!(c.peek("img", 1, 20, 10).is_none());
+        assert!(c.peek("img", 1, 30, 10).is_none());
         // The second apply hits the prefix and streams the rest.
-        assert!(c.probe("img", 0, 10).is_some());
-        assert!(c.probe("img", 10, 10).is_some());
-        assert!(c.probe("img", 20, 10).is_none());
+        assert!(c.probe("img", 1, 0, 10).is_some());
+        assert!(c.probe("img", 1, 10, 10).is_some());
+        assert!(c.probe("img", 1, 20, 10).is_none());
         let k = c.counters();
         assert_eq!(k.hit_bytes, 20);
         assert_eq!(k.miss_bytes, 50);
@@ -472,19 +504,19 @@ mod tests {
         c.register_walk("a", &[0, 10]);
         c.register_walk("b", &[0, 10, 20, 30]);
         // Resident: a/0 at next-use distance 1/2 of an apply.
-        assert!(c.probe("a", 10, 10).is_none()); // cursor a = 1
-        let _ = c.publish("a", 10, bytes(10, 1)); // dist 2/2 → admitted
-        assert!(c.probe("a", 0, 10).is_none()); // cursor a = 0; a/10 now dist 1/2
-        let _ = c.publish("a", 0, bytes(10, 2)); // dist 2/2 → admitted (20/25 used)
+        assert!(c.probe("a", 1, 10, 10).is_none()); // cursor a = 1
+        let _ = c.publish("a", 1, 10, bytes(10, 1)); // dist 2/2 → admitted
+        assert!(c.probe("a", 1, 0, 10).is_none()); // cursor a = 0; a/10 now dist 1/2
+        let _ = c.publish("a", 1, 0, bytes(10, 2)); // dist 2/2 → admitted (20/25 used)
         // b/20 demanded, then a second worker falls back to b/10 before
         // the publish lands: the candidate's next use (distance 1/4) is
         // nearer than resident a/0 (2/2 = one full apply) → evict a/0.
-        assert!(c.probe("b", 20, 10).is_none()); // cursor b = 2
-        assert!(c.probe("b", 10, 10).is_none()); // cursor b = 1
-        assert!(c.publish("b", 20, bytes(10, 3)).is_none(), "near next use must be admitted");
-        assert!(c.peek("b", 20, 10).is_some());
-        assert!(c.peek("a", 0, 10).is_none(), "farthest resident evicted");
-        assert!(c.peek("a", 10, 10).is_some());
+        assert!(c.probe("b", 1, 20, 10).is_none()); // cursor b = 2
+        assert!(c.probe("b", 1, 10, 10).is_none()); // cursor b = 1
+        assert!(c.publish("b", 1, 20, bytes(10, 3)).is_none(), "near next use must be admitted");
+        assert!(c.peek("b", 1, 20, 10).is_some());
+        assert!(c.peek("a", 1, 0, 10).is_none(), "farthest resident evicted");
+        assert!(c.peek("a", 1, 10, 10).is_some());
         assert_eq!(c.counters().evict_bytes, 10);
         assert!(c.mem().peak() <= 25);
     }
@@ -497,16 +529,16 @@ mod tests {
         c.register_walk("a", &[0]);
         c.register_walk("b", &[0]);
         c.register_walk("c", &[0, 10]);
-        let _ = c.publish("a", 0, bytes(10, 1)); // dist 1/1 of its walk
-        let _ = c.publish("b", 0, bytes(10, 2)); // dist 1/1 — tied with a/0
+        let _ = c.publish("a", 1, 0, bytes(10, 1)); // dist 1/1 of its walk
+        let _ = c.publish("b", 1, 0, bytes(10, 2)); // dist 1/1 — tied with a/0
         // Candidate at distance 1/2 (cursor just moved past its slot):
         // both residents tie at a whole apply; the smaller key loses.
-        assert!(c.probe("c", 0, 10).is_none()); // cursor c = 0
-        assert!(c.probe("c", 10, 10).is_none()); // cursor c = 1; c/0 now dist 1/2
-        assert!(c.publish("c", 0, bytes(10, 3)).is_none());
-        assert!(c.peek("a", 0, 10).is_none(), "tie must evict the smallest key");
-        assert!(c.peek("b", 0, 10).is_some());
-        assert!(c.peek("c", 0, 10).is_some());
+        assert!(c.probe("c", 1, 0, 10).is_none()); // cursor c = 0
+        assert!(c.probe("c", 1, 10, 10).is_none()); // cursor c = 1; c/0 now dist 1/2
+        assert!(c.publish("c", 1, 0, bytes(10, 3)).is_none());
+        assert!(c.peek("a", 1, 0, 10).is_none(), "tie must evict the smallest key");
+        assert!(c.peek("b", 1, 0, 10).is_some());
+        assert!(c.peek("c", 1, 0, 10).is_some());
     }
 
     /// Without a registered walk the cache is plain LRU: newest always
@@ -516,13 +548,13 @@ mod tests {
     #[test]
     fn lru_fallback_without_a_schedule() {
         let c = ImageCache::new(25);
-        let _ = c.publish("img", 0, bytes(10, 1));
-        let _ = c.publish("img", 10, bytes(10, 2));
-        assert!(c.probe("img", 0, 10).is_some()); // refresh 0
-        assert!(c.publish("img", 20, bytes(10, 3)).is_none(), "LRU admits the newest");
-        assert!(c.peek("img", 0, 10).is_some(), "recently touched survives");
-        assert!(c.peek("img", 10, 10).is_none(), "oldest evicted");
-        assert!(c.peek("img", 20, 10).is_some());
+        let _ = c.publish("img", 1, 0, bytes(10, 1));
+        let _ = c.publish("img", 1, 10, bytes(10, 2));
+        assert!(c.probe("img", 1, 0, 10).is_some()); // refresh 0
+        assert!(c.publish("img", 1, 20, bytes(10, 3)).is_none(), "LRU admits the newest");
+        assert!(c.peek("img", 1, 0, 10).is_some(), "recently touched survives");
+        assert!(c.peek("img", 1, 10, 10).is_none(), "oldest evicted");
+        assert!(c.peek("img", 1, 20, 10).is_some());
         assert_eq!(c.counters().evict_bytes, 10);
     }
 
@@ -533,19 +565,19 @@ mod tests {
     fn stale_entries_yield_the_budget() {
         let c = ImageCache::new(25);
         c.register_walk("old", &[0, 10]);
-        let _ = c.publish("old", 0, bytes(10, 1));
-        let _ = c.publish("old", 10, bytes(10, 2));
+        let _ = c.publish("old", 1, 0, bytes(10, 1));
+        let _ = c.publish("old", 1, 10, bytes(10, 2));
         c.register_walk("new", &[0, 10]);
         // Age the old entries past the staleness horizon (clock is
         // driven by probes).
         for _ in 0..(STALE_WALKS as usize * 16 + 8) {
-            let _ = c.probe("new", 0, 10);
-            let _ = c.probe("new", 10, 10);
+            let _ = c.probe("new", 1, 0, 10);
+            let _ = c.probe("new", 1, 10, 10);
         }
-        assert!(c.publish("new", 0, bytes(10, 3)).is_none(), "stale budget must be reclaimed");
-        assert!(c.peek("new", 0, 10).is_some());
+        assert!(c.publish("new", 1, 0, bytes(10, 3)).is_none(), "stale budget must be reclaimed");
+        assert!(c.peek("new", 1, 0, 10).is_some());
         assert!(
-            c.peek("old", 0, 10).is_none() || c.peek("old", 10, 10).is_none(),
+            c.peek("old", 1, 0, 10).is_none() || c.peek("old", 1, 10, 10).is_none(),
             "at least one stale entry must have been evicted"
         );
     }
@@ -557,8 +589,8 @@ mod tests {
         let c = ImageCache::new(0);
         assert!(!c.is_enabled());
         c.register_walk("img", &[0, 10]);
-        assert!(c.probe("img", 0, 10).is_none());
-        let back = c.publish("img", 0, bytes(10, 1));
+        assert!(c.probe("img", 1, 0, 10).is_none());
+        let back = c.publish("img", 1, 0, bytes(10, 1));
         assert_eq!(back.map(|b| b.len()), Some(10));
         assert_eq!(c.counters(), ImageCacheCounters::default());
         assert_eq!(c.resident_bytes(), 0);
@@ -570,17 +602,49 @@ mod tests {
     #[test]
     fn budget_staleness_and_invalidation_guards() {
         let c = ImageCache::new(25);
-        let big = c.publish("img", 0, bytes(30, 1));
+        let big = c.publish("img", 1, 0, bytes(30, 1));
         assert!(big.is_some(), "a buffer over the whole budget is rejected");
-        assert!(c.publish("img", 0, bytes(10, 2)).is_none());
+        assert!(c.publish("img", 1, 0, bytes(10, 2)).is_none());
         // Same offset, different length: stale geometry → miss + drop.
-        assert!(c.probe("img", 0, 20).is_none());
+        assert!(c.probe("img", 1, 0, 20).is_none());
         assert_eq!(c.resident_bytes(), 0);
-        assert!(c.publish("img", 0, bytes(10, 3)).is_none());
+        assert!(c.publish("img", 1, 0, bytes(10, 3)).is_none());
         c.invalidate_file("img");
         assert_eq!(c.resident_bytes(), 0);
-        assert!(c.peek("img", 0, 10).is_none());
+        assert!(c.peek("img", 1, 0, 10).is_none());
         assert_eq!(c.mem().current(), 0);
+    }
+
+    /// Re-creating a file at the same path (delta compaction truncates
+    /// the image in place) bumps the incarnation uid: a straggling
+    /// reader holding the old handle can neither be served the new
+    /// incarnation's bytes nor keep its own resident — even when its
+    /// publish lands *after* `invalidate_file` already ran (the
+    /// in-flight-read race that name-based invalidation alone cannot
+    /// close).
+    #[test]
+    fn incarnation_uid_rejects_stale_bytes_across_truncation() {
+        let c = ImageCache::new(100);
+        // Old incarnation (uid 1) resident, then the file is truncated.
+        assert!(c.publish("img", 1, 0, bytes(10, 1)).is_none());
+        c.invalidate_file("img");
+        // The race: a straggler's publish of OLD bytes lands after the
+        // invalidation.  It is admitted under its own (old) uid…
+        assert!(c.publish("img", 1, 0, bytes(10, 1)).is_none());
+        // …but the new incarnation (uid 2) can never be served it:
+        assert!(c.peek("img", 2, 0, 10).is_none());
+        assert!(c.probe("img", 2, 0, 10).is_none(), "stale entry reads as a miss");
+        assert_eq!(c.resident_bytes(), 0, "the stale probe dropped the leftover");
+        // Fresh bytes admitted under uid 2; a late uid-1 publish is
+        // rejected and a late uid-1 probe misses without evicting them.
+        assert!(c.publish("img", 2, 0, bytes(10, 9)).is_none());
+        assert!(c.publish("img", 1, 0, bytes(10, 1)).is_some(), "old publish rejected");
+        assert!(c.probe("img", 1, 0, 10).is_none(), "old probe misses");
+        assert_eq!(c.probe("img", 2, 0, 10).unwrap()[0], 9, "fresh bytes survive");
+        // An old leftover under a *newer* publish is dropped + replaced.
+        assert!(c.publish("other", 3, 0, bytes(10, 4)).is_none());
+        assert!(c.publish("other", 5, 0, bytes(10, 6)).is_none(), "newer uid replaces");
+        assert_eq!(c.probe("other", 5, 0, 10).unwrap()[0], 6);
     }
 
     /// A cold-biased walk yields the budget to an unbiased one: the
@@ -593,22 +657,22 @@ mod tests {
         let c = ImageCache::new(10);
         c.register_walk("a", &[0, 4096]); // dist of a/0 = 1/2 apply
         c.register_walk("at", &[0]); // dist of at/0 = 1/1 apply
-        assert!(c.publish("a", 0, bytes(10, 1)).is_none());
+        assert!(c.publish("a", 1, 0, bytes(10, 1)).is_none());
         // Unbiased: the candidate (a whole apply away) is the farther
         // next use — rejected, the hot entry stays.
-        assert!(c.publish("at", 0, bytes(10, 2)).is_some());
-        assert!(c.peek("a", 0, 10).is_some());
+        assert!(c.publish("at", 1, 0, bytes(10, 2)).is_some());
+        assert!(c.peek("a", 1, 0, 10).is_some());
         // Mark a's walk cold: its scaled distance (4/2) now loses to
         // the candidate's 1/1 — the candidate is admitted.
         c.set_walk_bias("a", 4);
-        assert!(c.publish("at", 0, bytes(10, 3)).is_none());
-        assert!(c.peek("a", 0, 10).is_none(), "cold-biased entry evicted");
-        assert!(c.peek("at", 0, 10).is_some());
+        assert!(c.publish("at", 1, 0, bytes(10, 3)).is_none());
+        assert!(c.peek("a", 1, 0, 10).is_none(), "cold-biased entry evicted");
+        assert!(c.peek("at", 1, 0, 10).is_some());
         assert_eq!(c.counters().evict_bytes, 10);
         // Re-registering the same geometry keeps the bias (applies
         // rebuild their readers); a disabled cache ignores the call.
         c.register_walk("a", &[0, 4096]);
-        assert!(c.publish("a", 0, bytes(10, 4)).is_some(), "still cold after re-register");
+        assert!(c.publish("a", 1, 0, bytes(10, 4)).is_some(), "still cold after re-register");
         ImageCache::new(0).set_walk_bias("a", 4);
     }
 
@@ -617,10 +681,10 @@ mod tests {
     #[test]
     fn concurrent_publish_keeps_the_first_copy() {
         let c = ImageCache::new(100);
-        assert!(c.publish("img", 0, bytes(10, 1)).is_none());
-        let back = c.publish("img", 0, bytes(10, 2));
+        assert!(c.publish("img", 1, 0, bytes(10, 1)).is_none());
+        let back = c.publish("img", 1, 0, bytes(10, 2));
         assert!(back.is_some(), "second publish must be handed back");
-        assert_eq!(c.probe("img", 0, 10).unwrap()[0], 1, "first copy retained");
+        assert_eq!(c.probe("img", 1, 0, 10).unwrap()[0], 1, "first copy retained");
         assert_eq!(c.resident_bytes(), 10);
     }
 }

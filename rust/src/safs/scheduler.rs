@@ -253,7 +253,8 @@ impl WalkScheduler {
         if !matches!(*slot, Slot::Idle) {
             return;
         }
-        if let Some(arc) = self.cache.as_ref().and_then(|c| c.peek(&r.file.name, r.offset, r.len))
+        if let Some(arc) =
+            self.cache.as_ref().and_then(|c| c.peek(&r.file.name, r.file.uid, r.offset, r.len))
         {
             *slot = Slot::Cached(arc);
         } else {
@@ -285,7 +286,7 @@ impl WalkScheduler {
                 continue;
             }
             if let Some(arc) =
-                self.cache.as_ref().and_then(|c| c.peek(&r.file.name, r.offset, r.len))
+                self.cache.as_ref().and_then(|c| c.peek(&r.file.name, r.file.uid, r.offset, r.len))
             {
                 *slot = Slot::Cached(arc);
                 continue;
@@ -351,13 +352,16 @@ impl WalkScheduler {
                 }
                 Slot::Cached(_) => {
                     if let Some(c) = &self.cache {
-                        c.note_hit(&r.file.name, r.offset, r.len);
+                        c.note_hit(&r.file.name, r.file.uid, r.offset, r.len);
                     }
                 }
                 Slot::Idle | Slot::Consumed => {
                     // Never issued ahead (or re-armed): resolve at
                     // demand time — the probe accounts the hit/miss.
-                    match self.cache.as_ref().and_then(|c| c.probe(&r.file.name, r.offset, r.len))
+                    match self
+                        .cache
+                        .as_ref()
+                        .and_then(|c| c.probe(&r.file.name, r.file.uid, r.offset, r.len))
                     {
                         Some(arc) => *slot = Slot::Cached(arc),
                         None => {
@@ -388,7 +392,7 @@ impl WalkScheduler {
         let Some(r) = self.ranges[i].as_ref() else { return };
         match self.cache.as_deref() {
             Some(c) => {
-                if let Some(rejected) = c.publish(&r.file.name, r.offset, bytes) {
+                if let Some(rejected) = c.publish(&r.file.name, r.file.uid, r.offset, bytes) {
                     self.pools.put(hint, rejected);
                 }
             }

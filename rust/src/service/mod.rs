@@ -33,13 +33,13 @@
 //! array ledger exactly — pinned in `tests/io_accounting.rs`.
 
 use crate::dense::{DenseCtx, DenseKernels, NativeKernels};
-use crate::eigen::{solve, EigenConfig, Which};
+use crate::eigen::{solve, EigenConfig, WarmBasis, Which};
 use crate::metrics::{Gauge, MemTracker};
 use crate::safs::Safs;
-use crate::sparse::SparseMatrix;
+use crate::sparse::{DeltaBatch, DeltaStats, SparseMatrix};
 use crate::spmm::{BatchedOperator, SpmmBatcher, SpmmOpts};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// A graph held resident for serving: SAFS handles, sparse image index
 /// and the session-wide SpMM batcher stay alive across requests.
@@ -59,6 +59,12 @@ pub struct GraphSession {
     pub group_size: usize,
     pub cache_slots: usize,
     kernels: Arc<dyn DenseKernels>,
+    /// The most recent converged basis any job left behind
+    /// (`compute_eigenvectors` jobs stash theirs on completion).  Jobs
+    /// submitted with `warm=1` seed their solve from it — the re-solve
+    /// path after [`GraphSession::apply_deltas`] perturbs the resident
+    /// graph.
+    warm: Mutex<Option<Arc<WarmBasis>>>,
 }
 
 impl GraphSession {
@@ -81,6 +87,7 @@ impl GraphSession {
             group_size: 8,
             cache_slots: 1,
             kernels: Arc::new(NativeKernels),
+            warm: Mutex::new(None),
         }
     }
 
@@ -104,7 +111,32 @@ impl GraphSession {
             group_size: 8,
             cache_slots: 1,
             kernels: Arc::new(NativeKernels),
+            warm: Mutex::new(None),
         }
+    }
+
+    /// Mutate the resident graph with an edge-delta batch (both images
+    /// in lockstep for an SVD session), compacting the overlay into a
+    /// fresh base image once its volume crosses `compact_frac` of the
+    /// base nnz (`0.0` disables — see
+    /// [`crate::sparse::SparseMatrix::maybe_compact`]).  Call this at an
+    /// admission-wave boundary: the underlying write lock drains
+    /// in-flight sweeps, and every job admitted afterwards solves the
+    /// mutated graph.  A stashed warm basis survives the update — that
+    /// is its purpose: the next `warm=1` job re-solves the perturbed
+    /// graph starting from the previous spectrum's basis.
+    pub fn apply_deltas(&self, batch: &DeltaBatch, compact_frac: f64) -> DeltaStats {
+        self.batcher.apply_delta(batch, compact_frac)
+    }
+
+    /// The stashed warm-start basis, if any job has left one behind.
+    pub fn warm_basis(&self) -> Option<Arc<WarmBasis>> {
+        self.warm.lock().unwrap().clone()
+    }
+
+    /// Stash a converged basis for later `warm=1` jobs (latest wins).
+    pub fn stash_warm_basis(&self, basis: Arc<WarmBasis>) {
+        *self.warm.lock().unwrap() = Some(basis);
     }
 
     pub fn fs(&self) -> &Arc<Safs> {
@@ -162,14 +194,22 @@ pub struct JobSpec {
     pub name: String,
     /// SSD-backed subspace (FE-EM) or in-memory subspace (FE-IM).
     pub em: bool,
+    /// Seed the solve from the session's stashed warm basis
+    /// ([`GraphSession::warm_basis`]); cold start when the session has
+    /// none stashed yet.
+    pub warm: bool,
     pub cfg: EigenConfig,
 }
 
 impl JobSpec {
     /// Parse a job spec of the form `key=value …` (whitespace-separated).
     /// Keys: `name`, `nev`, `block`, `nblocks`, `tol`, `restarts`,
-    /// `seed`, `refine`, `em` (0/1).  Unset keys take serving defaults
-    /// (`nev=4 block=2 nblocks=8 tol=1e-6 restarts=200 em=1`).
+    /// `seed`, `refine`, `em` (0/1), `vecs` (0/1, compute eigenvectors —
+    /// a `vecs=1` job stashes its converged basis on the session),
+    /// `warm` (0/1, seed from the session's stashed basis).  Unset keys
+    /// take serving defaults (`nev=4 block=2 nblocks=8 tol=1e-6
+    /// restarts=200 em=1 vecs=0 warm=0`).  A repeated key is an error —
+    /// silent last-wins parsing has bitten real job files.
     pub fn parse(s: &str) -> Result<JobSpec, String> {
         let mut cfg = EigenConfig {
             nev: 4,
@@ -181,14 +221,23 @@ impl JobSpec {
             seed: 0xE16E,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let mut name = String::new();
         let mut em = true;
+        let mut warm = false;
+        let mut seen: Vec<&str> = Vec::new();
         for tok in s.split_whitespace() {
             let (k, v) = tok
                 .split_once('=')
                 .ok_or_else(|| format!("bad job token {tok:?} (want key=value)"))?;
+            if seen.contains(&k) {
+                return Err(format!("duplicate job key {k:?} (each key may appear once)"));
+            }
             let bad = || format!("bad value {v:?} for job key {k:?}");
+            let flag = || -> Result<bool, String> {
+                Ok(v.parse::<u8>().map_err(|_| bad())? != 0)
+            };
             match k {
                 "name" => name = v.to_string(),
                 "nev" => cfg.nev = v.parse().map_err(|_| bad())?,
@@ -198,14 +247,17 @@ impl JobSpec {
                 "restarts" => cfg.max_restarts = v.parse().map_err(|_| bad())?,
                 "seed" => cfg.seed = v.parse().map_err(|_| bad())?,
                 "refine" => cfg.refine_steps = v.parse().map_err(|_| bad())?,
-                "em" => em = v.parse::<u8>().map_err(|_| bad())? != 0,
+                "em" => em = flag()?,
+                "vecs" => cfg.compute_eigenvectors = flag()?,
+                "warm" => warm = flag()?,
                 _ => return Err(format!("unknown job key {k:?}")),
             }
+            seen.push(k);
         }
         if name.is_empty() {
             name = format!("nev{}", cfg.nev);
         }
-        Ok(JobSpec { name, em, cfg })
+        Ok(JobSpec { name, em, warm, cfg })
     }
 }
 
@@ -370,12 +422,20 @@ fn run_job(
     // The SVD session solves the PSD normal equations: largest-magnitude
     // equals largest-algebraic; LA gives cleaner selection (same policy
     // as the solo `eigen::svd` driver).
-    let cfg = if session.is_svd() {
+    let mut cfg = if session.is_svd() {
         EigenConfig { which: Which::LargestAlgebraic, ..spec.cfg.clone() }
     } else {
         spec.cfg.clone()
     };
+    if spec.warm {
+        // Cold start if nothing is stashed (or the stash mismatches the
+        // operator dimension — the solver falls back on its own).
+        cfg.warm_start = session.warm_basis();
+    }
     let res = solve(&op, ctx, &cfg);
+    if let Some(basis) = res.warm_basis() {
+        session.stash_warm_basis(basis);
+    }
     // Departing the batch before assembling the report: co-resident jobs
     // stop waiting on this slot immediately, and the slot's image share
     // is final from here on.
@@ -417,6 +477,7 @@ mod tests {
         JobSpec {
             name: name.to_string(),
             em,
+            warm: false,
             cfg: EigenConfig {
                 nev: 3,
                 block_size: 2,
@@ -427,6 +488,7 @@ mod tests {
                 seed,
                 compute_eigenvectors: false,
                 refine_steps: 0,
+                warm_start: None,
             },
         }
     }
@@ -572,7 +634,10 @@ mod tests {
 
     #[test]
     fn job_spec_parser_round_trips_keys() {
-        let s = JobSpec::parse("name=q nev=6 block=3 nblocks=10 tol=1e-8 em=0 seed=9").unwrap();
+        let s = JobSpec::parse(
+            "name=q nev=6 block=3 nblocks=10 tol=1e-8 em=0 seed=9 vecs=1 warm=1",
+        )
+        .unwrap();
         assert_eq!(s.name, "q");
         assert_eq!(s.cfg.nev, 6);
         assert_eq!(s.cfg.block_size, 3);
@@ -580,12 +645,70 @@ mod tests {
         assert_eq!(s.cfg.tol, 1e-8);
         assert_eq!(s.cfg.seed, 9);
         assert!(!s.em);
+        assert!(s.cfg.compute_eigenvectors);
+        assert!(s.warm);
         let d = JobSpec::parse("").unwrap();
         assert_eq!((d.cfg.nev, d.cfg.block_size), (4, 2));
         assert!(d.em);
+        assert!(!d.warm && !d.cfg.compute_eigenvectors);
         assert_eq!(d.name, "nev4");
         assert!(JobSpec::parse("nev").is_err());
         assert!(JobSpec::parse("zzz=1").is_err());
         assert!(JobSpec::parse("nev=x").is_err());
+        assert!(JobSpec::parse("warm=y").is_err());
+    }
+
+    #[test]
+    fn job_spec_parser_rejects_duplicate_keys() {
+        // Last-wins parsing silently dropped the first value; a repeat is
+        // now a hard error naming the key.
+        let err = JobSpec::parse("nev=4 tol=1e-6 nev=8").unwrap_err();
+        assert!(err.contains("duplicate") && err.contains("nev"), "{err}");
+        // Same value twice is still a duplicate (the mistake is the
+        // repeat, not the disagreement).
+        assert!(JobSpec::parse("em=1 em=1").is_err());
+        // A key reused across *different* specs is fine.
+        assert!(JobSpec::parse("nev=4").is_ok());
+    }
+
+    #[test]
+    fn session_update_then_warm_resolve_reconverges_no_slower() {
+        let coo = test_graph(39);
+        let sess = session(&coo);
+        let pool = SolverPool::new(0, 2);
+
+        // A vecs job stashes its converged basis on the session.
+        let mut prior = spec("prior", 80, false);
+        prior.cfg.compute_eigenvectors = true;
+        let r = pool.run(&sess, &[prior]);
+        assert!(r[0].converged);
+        assert!(sess.warm_basis().is_some(), "vecs job must stash a warm basis");
+
+        // Perturb the resident graph (kept symmetric for the eigen
+        // session); the stashed basis survives the update.
+        let mut b = DeltaBatch::new();
+        b.insert_unweighted(0, 9);
+        b.insert_unweighted(9, 0);
+        let st = sess.apply_deltas(&b, 0.0);
+        assert_eq!(st.inserted + st.updated, 2);
+        assert!(sess.warm_basis().is_some());
+
+        // Cold and warm re-solves of the mutated graph agree on the
+        // spectrum; the warm start must not be slower.
+        let cold = spec("cold", 81, false);
+        let mut warm = spec("warm", 81, false);
+        warm.warm = true;
+        let cold_rep = &pool.run(&sess, &[cold])[0];
+        let warm_rep = &pool.run(&sess, &[warm])[0];
+        assert!(cold_rep.converged && warm_rep.converged);
+        for (a, b) in warm_rep.values.iter().zip(&cold_rep.values) {
+            assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0), "{a} vs {b}");
+        }
+        assert!(
+            warm_rep.restarts <= cold_rep.restarts,
+            "warm {} vs cold {}",
+            warm_rep.restarts,
+            cold_rep.restarts
+        );
     }
 }

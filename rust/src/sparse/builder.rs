@@ -169,7 +169,10 @@ pub fn build_matrix_opts(
 ) -> SparseMatrix {
     assert!(tile_dim > 0 && tile_dim <= MAX_TILE_DIM);
     let td = tile_dim as u64;
-    let num_tile_rows = (coo.n_rows.max(1) as usize + tile_dim - 1) / tile_dim;
+    // ceil(n_rows / tile_dim), with **no** floor at 1: a 0-row matrix
+    // (an all-deleted or empty delta compaction) gets a 0-tile-row grid
+    // — a valid zero-sweep image — not a bogus phantom tile row.
+    let num_tile_rows = (coo.n_rows as usize).div_ceil(tile_dim);
 
     // Sort entry *indices* by (tile_row, tile_col, row, col) so values can
     // be gathered without materialising a combined array.
@@ -274,6 +277,8 @@ pub fn build_matrix_opts(
         col_offsets,
         col_ids,
         storage,
+        coo_hybrid,
+        overlay: None,
     }
 }
 
@@ -436,6 +441,48 @@ mod tests {
         let m = build_mem(&coo);
         assert_eq!(m.nnz, 0);
         assert!(m.to_triples().is_empty());
+        // 10 rows at the default tile still make one (empty) tile row.
+        assert_eq!(m.num_tile_rows(), 1);
+        assert_eq!(m.tile_cols(0), &[] as &[u32]);
+    }
+
+    #[test]
+    fn zero_row_coo_builds_a_zero_sweep_matrix() {
+        // The degenerate compaction product: every edge deleted.  Must
+        // be a valid 0-tile-row image, not a phantom `max(1)` grid.
+        let coo = CooMatrix::new(0, 0);
+        let m = build_mem(&coo);
+        assert_eq!(m.num_tile_rows(), 0);
+        assert_eq!(m.storage_bytes(), 0);
+        assert_eq!(m.nnz, 0);
+        assert_eq!(m.col_offsets, vec![0]);
+        assert!(m.to_triples().is_empty());
+        assert_eq!(m.value_sum(), 0.0);
+    }
+
+    #[test]
+    fn single_entry_matrix_roundtrips() {
+        let mut coo = CooMatrix::new(1, 1);
+        coo.push(0, 0);
+        let m = build_matrix(&coo, 16, BuildTarget::Mem);
+        assert_eq!(m.num_tile_rows(), 1);
+        assert_eq!(m.to_triples(), vec![(0, 0, 1.0)]);
+        assert_eq!(m.tile_cols(0), &[0u32]);
+    }
+
+    #[test]
+    fn exact_tile_multiple_has_no_ragged_row() {
+        // n_rows % tile_dim == 0: the grid must be exactly n/td rows,
+        // and the last row must cover the full tile height.
+        for (n, td, want) in [(64u64, 16usize, 4usize), (128, 64, 2), (16, 16, 1)] {
+            let mut rng = Rng::new(7 + n);
+            let coo = random_coo(&mut rng, n, 4 * n as usize, false);
+            let m = build_matrix(&coo, td, BuildTarget::Mem);
+            assert_eq!(m.num_tile_rows(), want, "n={n} td={td}");
+            let (start, end) = m.tile_row_range(want - 1);
+            assert_eq!(end - start, td as u64, "last row covers a full tile");
+            assert_eq!(m.to_triples().len(), coo.nnz());
+        }
     }
 
     #[test]

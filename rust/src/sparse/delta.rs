@@ -1,0 +1,562 @@
+//! Delta overlays: mutating a built tile image without rebuilding it.
+//!
+//! A [`DeltaBatch`] of edge insertions/deletions is merged into a
+//! [`SparseMatrix`] by [`SparseMatrix::apply_delta`], which keeps the
+//! base image untouched and parks the mutated tile rows in a
+//! [`DeltaOverlay`].  `A·X` then runs as **base sweep + delta sweep
+//! fused per tile row**: every SpMM path (eager, streamed, batched)
+//! keeps reading the base image's byte ranges — walk geometry, byte
+//! accounting, image-cache residency and read-ahead are all unchanged —
+//! and substitutes the overlay's patched bytes at compute time for the
+//! tile rows the deltas touched (deletions subtract by being absent
+//! from the patched row).
+//!
+//! # Merge contract (normative)
+//!
+//! - Deltas share the base tile geometry: `tile_dim`, the tile-row
+//!   grid, `value_elem` and the `coo_hybrid` encoding flag are fixed by
+//!   the base build and every patched row is re-encoded with exactly
+//!   those parameters.  A patched tile row is therefore **byte-identical**
+//!   to the same tile row of a from-scratch [`build_matrix_opts`] of the
+//!   mutated edge list — the overlay-vs-rebuilt differential props in
+//!   `tests/props.rs` pin this bitwise, per SpMM path.
+//! - Within one batch, deletions apply before insertions.  Deleting an
+//!   absent edge is a counted no-op ([`DeltaStats::missed_deletes`]);
+//!   inserting over an existing edge replaces its value
+//!   ([`DeltaStats::updated`]).
+//! - Unweighted images (`value_elem == 0`) only accept inserts with
+//!   value exactly `1.0`; weighted images narrow inserted values to the
+//!   image's stored width at encode time, exactly as the builder does.
+//! - The in-RAM matrix index stays truthful: per-row and total `nnz`
+//!   track the effective matrix, and the tile-column index extension
+//!   (`col_offsets`/`col_ids`) is rebuilt from the patched rows so
+//!   demand schedules see the mutated tile structure.  Per-row byte
+//!   `offset`/`len` keep describing the **base** image — they are what
+//!   the SEM walks read.
+//!
+//! # Compaction contract (normative)
+//!
+//! [`SparseMatrix::compact`] folds the overlay into a fresh base image:
+//! the effective matrix is re-staged as COO and rebuilt with the same
+//! `tile_dim`/`coo_hybrid`/value-width parameters, onto the same
+//! storage (in-memory, or re-creating the same SAFS file — which
+//! retires the old image's bytes and invalidates its cache entries).
+//! Compaction is **bitwise-invariant**: `A·X` before and after compact
+//! produce identical bits, and the compacted image equals a
+//! from-scratch build of the mutated graph byte for byte.
+//! [`SparseMatrix::maybe_compact`] triggers it once the cumulative
+//! delta volume exceeds a tunable fraction of the base nnz
+//! (`SafsConfig::delta_compact_frac`, `--delta-compact`,
+//! `FLASHEIGEN_DELTA_COMPACT`; `0` disables).
+//!
+//! [`build_matrix_opts`]: super::builder::build_matrix_opts
+
+use super::builder::{build_matrix_opts, BuildTarget, CooMatrix};
+use super::matrix::{assemble_tile_row, SparseMatrix, Storage, TileRowView};
+use super::tile::encode_tile_opts;
+use std::collections::BTreeMap;
+
+/// One batch of edge mutations against a built tile image.  Deletions
+/// apply before insertions (see the module-level merge contract).
+#[derive(Clone, Debug, Default)]
+pub struct DeltaBatch {
+    /// `(row, col, value)` — value must be `1.0` for unweighted images.
+    pub inserts: Vec<(u32, u32, f64)>,
+    /// `(row, col)` — deleting an absent edge is a counted no-op.
+    pub deletes: Vec<(u32, u32)>,
+}
+
+impl DeltaBatch {
+    pub fn new() -> DeltaBatch {
+        DeltaBatch::default()
+    }
+
+    pub fn insert(&mut self, r: u32, c: u32, v: f64) {
+        self.inserts.push((r, c, v));
+    }
+
+    /// Insert into an unweighted image (value 1.0).
+    pub fn insert_unweighted(&mut self, r: u32, c: u32) {
+        self.inserts.push((r, c, 1.0));
+    }
+
+    pub fn delete(&mut self, r: u32, c: u32) {
+        self.deletes.push((r, c));
+    }
+
+    pub fn len(&self) -> usize {
+        self.inserts.len() + self.deletes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inserts.is_empty() && self.deletes.is_empty()
+    }
+
+    /// The transposed batch (for SVD sessions, which hold images of both
+    /// `A` and `Aᵀ` and must mutate them in lockstep).
+    pub fn transpose(&self) -> DeltaBatch {
+        DeltaBatch {
+            inserts: self.inserts.iter().map(|&(r, c, v)| (c, r, v)).collect(),
+            deletes: self.deletes.iter().map(|&(r, c)| (c, r)).collect(),
+        }
+    }
+}
+
+/// What one [`SparseMatrix::apply_delta`] call did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeltaStats {
+    /// Edges newly added.
+    pub inserted: u64,
+    /// Inserts that replaced an existing edge's value.
+    pub updated: u64,
+    /// Edges removed.
+    pub deleted: u64,
+    /// Deletes of absent edges (no-ops).
+    pub missed_deletes: u64,
+}
+
+/// The mutated tile rows parked over a base image, plus the compaction
+/// accounting.  See the module docs for the merge/compaction contract.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaOverlay {
+    /// Patched tile-row images, byte-identical to a from-scratch build's
+    /// rows for the mutated graph.  Keyed by tile-row index.
+    pub rows: BTreeMap<usize, Vec<u8>>,
+    /// Cumulative mutation volume (inserted + updated + deleted) across
+    /// all applied batches — the compaction trigger numerator.
+    pub delta_nnz: u64,
+    /// `nnz` of the base image when the overlay was created.
+    pub base_nnz: u64,
+    /// Batches merged so far.
+    pub batches: u64,
+}
+
+impl SparseMatrix {
+    /// Merge one [`DeltaBatch`] into the overlay (see the module-level
+    /// merge contract).  The base image bytes are not touched; every
+    /// tile row the batch mutates is re-encoded into
+    /// [`DeltaOverlay::rows`] and the in-RAM matrix index (`nnz`,
+    /// tile-column extension) is updated to the effective matrix.
+    pub fn apply_delta(&mut self, batch: &DeltaBatch) -> DeltaStats {
+        let td = self.tile_dim as u64;
+        let weighted = self.value_elem != 0;
+        for &(r, c, v) in &batch.inserts {
+            assert!(
+                (r as u64) < self.n_rows && (c as u64) < self.n_cols,
+                "delta insert ({r},{c}) out of bounds for {}x{}",
+                self.n_rows,
+                self.n_cols
+            );
+            assert!(
+                weighted || v == 1.0,
+                "unweighted image: insert value must be 1.0, got {v}"
+            );
+        }
+        for &(r, c) in &batch.deletes {
+            assert!(
+                (r as u64) < self.n_rows && (c as u64) < self.n_cols,
+                "delta delete ({r},{c}) out of bounds for {}x{}",
+                self.n_rows,
+                self.n_cols
+            );
+        }
+
+        // Group mutations by tile row; within a row, deletes before
+        // inserts (batch semantics).
+        type RowOps = (Vec<(u32, u32)>, Vec<(u32, u32, f64)>);
+        let mut by_row: BTreeMap<usize, RowOps> = BTreeMap::new();
+        for &(r, c) in &batch.deletes {
+            by_row.entry((r as u64 / td) as usize).or_default().0.push((r, c));
+        }
+        for &(r, c, v) in &batch.inserts {
+            by_row.entry((r as u64 / td) as usize).or_default().1.push((r, c, v));
+        }
+        let mut stats = DeltaStats::default();
+        if by_row.is_empty() {
+            return stats;
+        }
+        if self.overlay.is_none() {
+            self.overlay = Some(DeltaOverlay {
+                rows: BTreeMap::new(),
+                delta_nnz: 0,
+                base_nnz: self.nnz,
+                batches: 0,
+            });
+        }
+
+        let tile_dim = self.tile_dim;
+        let coo_hybrid = self.coo_hybrid;
+        let enc_elem = self.value_elem.max(4);
+        let mut buf = Vec::new();
+        for (tr, (dels, ins)) in by_row {
+            // Decode the current effective row (a prior patch wins over
+            // the base bytes) into builder key order: (tile_col, row,
+            // col) — the exact order `build_matrix_opts` encodes in.
+            self.read_tile_row(tr, &mut buf);
+            let mut cells: BTreeMap<(u32, u16, u16), f64> = BTreeMap::new();
+            for (tile_col, view) in TileRowView::new(&buf, self.value_elem) {
+                view.for_each(|r, c, v| {
+                    cells.insert((tile_col, r, c), v);
+                });
+            }
+            for (r, c) in dels {
+                let key =
+                    ((c as u64 / td) as u32, (r as u64 % td) as u16, (c as u64 % td) as u16);
+                match cells.remove(&key) {
+                    Some(_) => stats.deleted += 1,
+                    None => stats.missed_deletes += 1,
+                }
+            }
+            for (r, c, v) in ins {
+                let key =
+                    ((c as u64 / td) as u32, (r as u64 % td) as u16, (c as u64 % td) as u16);
+                match cells.insert(key, v) {
+                    Some(_) => stats.updated += 1,
+                    None => stats.inserted += 1,
+                }
+            }
+            // Re-encode with the base build's exact encoder parameters:
+            // patched bytes == the same row of a from-scratch build.
+            let mut tiles: Vec<(u32, Vec<u8>)> = Vec::new();
+            let mut local: Vec<(u16, u16)> = Vec::new();
+            let mut local_vals: Vec<f64> = Vec::new();
+            let mut cur: Option<u32> = None;
+            for (&(tc, r, c), &v) in &cells {
+                if cur != Some(tc) {
+                    if let Some(prev) = cur {
+                        tiles.push((
+                            prev,
+                            encode_tile_opts(
+                                &local,
+                                weighted.then_some(&local_vals[..]),
+                                tile_dim,
+                                coo_hybrid,
+                                enc_elem,
+                            ),
+                        ));
+                        local.clear();
+                        local_vals.clear();
+                    }
+                    cur = Some(tc);
+                }
+                local.push((r, c));
+                if weighted {
+                    local_vals.push(v);
+                }
+            }
+            if let Some(prev) = cur {
+                tiles.push((
+                    prev,
+                    encode_tile_opts(
+                        &local,
+                        weighted.then_some(&local_vals[..]),
+                        tile_dim,
+                        coo_hybrid,
+                        enc_elem,
+                    ),
+                ));
+            }
+            let new_bytes = assemble_tile_row(&tiles);
+            let old_nnz = self.index[tr].nnz;
+            self.index[tr].nnz = cells.len() as u64;
+            self.nnz = self.nnz + cells.len() as u64 - old_nnz;
+            self.overlay.as_mut().unwrap().rows.insert(tr, new_bytes);
+        }
+        let ov = self.overlay.as_mut().unwrap();
+        ov.delta_nnz += stats.inserted + stats.updated + stats.deleted;
+        ov.batches += 1;
+        self.rebuild_col_index();
+        stats
+    }
+
+    /// Rebuild the flat tile-column index extension from the overlay's
+    /// patched rows (unpatched rows copy their old slices).
+    fn rebuild_col_index(&mut self) {
+        let Some(ov) = &self.overlay else { return };
+        let old_offsets = std::mem::take(&mut self.col_offsets);
+        let old_ids = std::mem::take(&mut self.col_ids);
+        let mut offsets: Vec<usize> = Vec::with_capacity(old_offsets.len());
+        let mut ids: Vec<u32> = Vec::with_capacity(old_ids.len());
+        offsets.push(0);
+        for tr in 0..self.index.len() {
+            match ov.rows.get(&tr) {
+                Some(bytes) => {
+                    ids.extend(TileRowView::new(bytes, self.value_elem).map(|(c, _)| c))
+                }
+                None => ids.extend_from_slice(&old_ids[old_offsets[tr]..old_offsets[tr + 1]]),
+            }
+            offsets.push(ids.len());
+        }
+        self.col_offsets = offsets;
+        self.col_ids = ids;
+    }
+
+    /// Fold the overlay into a fresh base image (see the module-level
+    /// compaction contract).  No-op without an overlay.  For SEM
+    /// matrices this re-creates the same SAFS file, retiring the old
+    /// image's bytes and invalidating its cache entries.
+    pub fn compact(&mut self) {
+        if self.overlay.is_none() {
+            return;
+        }
+        let triples = self.to_triples();
+        let mut coo = CooMatrix::new(self.n_rows, self.n_cols);
+        coo.entries = triples.iter().map(|&(r, c, _)| (r as u32, c as u32)).collect();
+        if self.value_elem != 0 {
+            coo.values = Some(triples.iter().map(|&(_, _, v)| v).collect());
+            coo.wide_values = self.value_elem == 8;
+        }
+        let rebuilt = match &self.storage {
+            Storage::Mem(_) => {
+                build_matrix_opts(&coo, self.tile_dim, BuildTarget::Mem, self.coo_hybrid)
+            }
+            Storage::Safs { fs, file } => {
+                let fs = fs.clone();
+                let name = file.name.clone();
+                build_matrix_opts(
+                    &coo,
+                    self.tile_dim,
+                    BuildTarget::Safs(&fs, &name),
+                    self.coo_hybrid,
+                )
+            }
+        };
+        *self = rebuilt;
+    }
+
+    /// [`compact`](SparseMatrix::compact) once the cumulative delta
+    /// volume reaches `frac` of the base nnz (`frac <= 0` disables).
+    /// Returns whether compaction ran.
+    pub fn maybe_compact(&mut self, frac: f64) -> bool {
+        if frac <= 0.0 {
+            return false;
+        }
+        let Some(ov) = &self.overlay else { return false };
+        if (ov.delta_nnz as f64) < frac * ov.base_nnz.max(1) as f64 {
+            return false;
+        }
+        self.compact();
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::safs::{Safs, SafsConfig};
+    use crate::sparse::builder::build_matrix;
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, n: u64, nnz: usize, weighted: bool) -> CooMatrix {
+        let mut coo = CooMatrix::new(n, n);
+        for _ in 0..nnz {
+            let r = rng.gen_range(n) as u32;
+            let c = rng.gen_range(n) as u32;
+            if weighted {
+                coo.push_weighted(r, c, (r % 13) as f32 + 0.5);
+            } else {
+                coo.push(r, c);
+            }
+        }
+        coo.sort_dedup();
+        coo
+    }
+
+    /// The mutated edge list: coo minus deletes plus inserts.
+    fn mutate_coo(coo: &CooMatrix, batch: &DeltaBatch) -> CooMatrix {
+        let mut map: BTreeMap<(u32, u32), f64> = BTreeMap::new();
+        for (i, &(r, c)) in coo.entries.iter().enumerate() {
+            let v = coo.values.as_ref().map_or(1.0, |vs| vs[i]);
+            map.insert((r, c), v);
+        }
+        for &(r, c) in &batch.deletes {
+            map.remove(&(r, c));
+        }
+        for &(r, c, v) in &batch.inserts {
+            map.insert((r, c), v);
+        }
+        let mut out = CooMatrix::new(coo.n_rows, coo.n_cols);
+        out.wide_values = coo.wide_values;
+        for (&(r, c), &v) in &map {
+            out.entries.push((r, c));
+            if coo.values.is_some() {
+                out.values.get_or_insert_with(Vec::new).push(v);
+            }
+        }
+        out
+    }
+
+    fn churn_batch(rng: &mut Rng, coo: &CooMatrix, ins: usize, dels: usize) -> DeltaBatch {
+        let n = coo.n_rows;
+        let mut b = DeltaBatch::new();
+        for _ in 0..ins {
+            let r = rng.gen_range(n) as u32;
+            let c = rng.gen_range(n) as u32;
+            if coo.values.is_some() {
+                b.insert(r, c, (c % 7) as f32 as f64 + 0.25);
+            } else {
+                b.insert_unweighted(r, c);
+            }
+        }
+        for _ in 0..dels {
+            // Delete a mix of present and absent edges.
+            if rng.gen_range(2) == 0 && !coo.entries.is_empty() {
+                let i = rng.gen_range(coo.entries.len() as u64) as usize;
+                b.delete(coo.entries[i].0, coo.entries[i].1);
+            } else {
+                b.delete(rng.gen_range(n) as u32, rng.gen_range(n) as u32);
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn patched_rows_match_rebuilt_rows_bytewise() {
+        for weighted in [false, true] {
+            let mut rng = Rng::new(41);
+            let coo = random_coo(&mut rng, 200, 1200, weighted);
+            let mut m = build_matrix(&coo, 32, BuildTarget::Mem);
+            let batch = churn_batch(&mut rng, &coo, 80, 60);
+            m.apply_delta(&batch);
+            let rebuilt = build_matrix(&mutate_coo(&coo, &batch), 32, BuildTarget::Mem);
+            assert_eq!(m.nnz, rebuilt.nnz, "effective nnz (weighted={weighted})");
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            for tr in 0..m.num_tile_rows() {
+                m.read_tile_row(tr, &mut a);
+                rebuilt.read_tile_row(tr, &mut b);
+                assert_eq!(a, b, "tile row {tr} bytes (weighted={weighted})");
+                assert_eq!(m.index[tr].nnz, rebuilt.index[tr].nnz, "row {tr} nnz");
+                assert_eq!(m.tile_cols(tr), rebuilt.tile_cols(tr), "row {tr} col index");
+            }
+            assert_eq!(m.to_triples(), rebuilt.to_triples());
+        }
+    }
+
+    #[test]
+    fn delta_stats_count_each_outcome() {
+        let mut coo = CooMatrix::new(64, 64);
+        coo.push_weighted(1, 2, 1.5);
+        coo.push_weighted(3, 4, 2.5);
+        coo.sort_dedup();
+        let mut m = build_matrix(&coo, 16, BuildTarget::Mem);
+        let mut b = DeltaBatch::new();
+        b.insert(5, 6, 3.0); // new
+        b.insert(1, 2, 9.0); // update
+        b.delete(3, 4); // present
+        b.delete(7, 8); // absent
+        let st = m.apply_delta(&b);
+        assert_eq!(
+            st,
+            DeltaStats { inserted: 1, updated: 1, deleted: 1, missed_deletes: 1 }
+        );
+        assert_eq!(m.nnz, 2);
+        assert_eq!(
+            m.to_triples(),
+            vec![(1, 2, 9.0), (5, 6, 3.0)]
+        );
+    }
+
+    #[test]
+    fn all_deleted_row_yields_valid_empty_row() {
+        let mut coo = CooMatrix::new(40, 40);
+        coo.push(0, 1);
+        coo.push(0, 2);
+        coo.sort_dedup();
+        let mut m = build_matrix(&coo, 16, BuildTarget::Mem);
+        let mut b = DeltaBatch::new();
+        b.delete(0, 1);
+        b.delete(0, 2);
+        m.apply_delta(&b);
+        assert_eq!(m.nnz, 0);
+        assert_eq!(m.index[0].nnz, 0);
+        assert!(m.tile_cols(0).is_empty());
+        assert!(m.to_triples().is_empty());
+        // The patched row is the 8-byte empty tile row — still walkable.
+        let mut buf = Vec::new();
+        m.read_tile_row(0, &mut buf);
+        assert_eq!(TileRowView::new(&buf, 0).count(), 0);
+    }
+
+    #[test]
+    fn compaction_is_bitwise_invariant_and_equals_rebuild() {
+        let mut rng = Rng::new(43);
+        let coo = random_coo(&mut rng, 150, 900, true);
+        let mut m = build_matrix(&coo, 32, BuildTarget::Mem);
+        let batch = churn_batch(&mut rng, &coo, 50, 50);
+        m.apply_delta(&batch);
+        let before = m.to_triples();
+        m.compact();
+        assert!(m.overlay.is_none(), "compaction clears the overlay");
+        assert_eq!(m.to_triples(), before, "compaction is value-invariant");
+        let rebuilt = build_matrix(&mutate_coo(&coo, &batch), 32, BuildTarget::Mem);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for tr in 0..m.num_tile_rows() {
+            m.read_tile_row(tr, &mut a);
+            rebuilt.read_tile_row(tr, &mut b);
+            assert_eq!(a, b, "compacted row {tr} == from-scratch row");
+        }
+        assert_eq!(m.storage_bytes(), rebuilt.storage_bytes());
+    }
+
+    #[test]
+    fn compaction_recreates_the_safs_file_exactly() {
+        let fs = Safs::new(SafsConfig::untimed());
+        let mut rng = Rng::new(44);
+        let coo = random_coo(&mut rng, 120, 800, false);
+        let mut m = build_matrix(&coo, 32, BuildTarget::Safs(&fs, "img"));
+        let batch = churn_batch(&mut rng, &coo, 40, 40);
+        m.apply_delta(&batch);
+        let written_before_compact = fs.stats().bytes_written;
+        m.compact();
+        assert!(m.is_external(), "compaction preserves the storage kind");
+        // Attribution stays exact across the truncation: the old
+        // image's counters fold into the retired map, so the per-name
+        // sum still reproduces the array ledger.
+        let s = fs.stats();
+        assert_eq!(fs.file_bytes("img"), (s.bytes_read, s.bytes_written));
+        assert!(
+            s.bytes_written >= written_before_compact + m.storage_bytes(),
+            "the compacted image was written to the array"
+        );
+        let rebuilt = build_matrix(&mutate_coo(&coo, &batch), 32, BuildTarget::Mem);
+        assert_eq!(m.to_triples(), rebuilt.to_triples());
+    }
+
+    #[test]
+    fn maybe_compact_honors_threshold_and_disable() {
+        let mut rng = Rng::new(45);
+        let coo = random_coo(&mut rng, 100, 500, false);
+        let mut m = build_matrix(&coo, 32, BuildTarget::Mem);
+        let batch = churn_batch(&mut rng, &coo, 30, 0);
+        m.apply_delta(&batch);
+        let applied = m.overlay.as_ref().unwrap().delta_nnz;
+        assert!(applied > 0);
+        assert!(!m.maybe_compact(0.0), "0 disables compaction");
+        assert!(!m.maybe_compact(1.0), "below threshold");
+        assert!(m.overlay.is_some());
+        let frac = applied as f64 / m.overlay.as_ref().unwrap().base_nnz as f64;
+        assert!(m.maybe_compact(frac * 0.5), "above threshold compacts");
+        assert!(m.overlay.is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "insert value must be 1.0")]
+    fn unweighted_rejects_weighted_insert() {
+        let mut coo = CooMatrix::new(10, 10);
+        coo.push(0, 0);
+        let mut m = build_matrix(&coo, 16, BuildTarget::Mem);
+        let mut b = DeltaBatch::new();
+        b.insert(1, 1, 2.0);
+        m.apply_delta(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_bounds_insert_is_rejected() {
+        let coo = CooMatrix::new(10, 10);
+        let mut m = build_matrix(&coo, 16, BuildTarget::Mem);
+        let mut b = DeltaBatch::new();
+        b.insert_unweighted(10, 0);
+        m.apply_delta(&b);
+    }
+}

@@ -12,6 +12,7 @@
 //! per tile: u32 tile_col, u32 payload_len, payload…(4-byte aligned)
 //! ```
 
+use super::delta::DeltaOverlay;
 use super::tile::TileView;
 use crate::safs::{FileHandle, Safs};
 use std::sync::Arc;
@@ -55,6 +56,13 @@ pub struct SparseMatrix {
     pub col_offsets: Vec<usize>,
     pub col_ids: Vec<u32>,
     pub storage: Storage,
+    /// Tile encoding flag the image was built with (the Fig. 6 ablation
+    /// axis); delta patches must re-encode with the same flag.
+    pub coo_hybrid: bool,
+    /// Pending edge mutations over the base image — see
+    /// [`crate::sparse::delta`] for the merge/compaction contract.
+    /// `None` until the first [`apply_delta`](SparseMatrix::apply_delta).
+    pub overlay: Option<DeltaOverlay>,
 }
 
 impl SparseMatrix {
@@ -83,8 +91,12 @@ impl SparseMatrix {
         (start, (start + self.tile_dim as u64).min(self.n_rows))
     }
 
-    /// Borrow the bytes of tile row `i` if the image is in memory.
+    /// Borrow the bytes of tile row `i` if they are in memory: a delta
+    /// patch when the overlay holds the row, the base image otherwise.
     pub fn tile_row_mem(&self, i: usize) -> Option<&[u8]> {
+        if let Some(bytes) = self.overlay.as_ref().and_then(|ov| ov.rows.get(&i)) {
+            return Some(bytes);
+        }
         match &self.storage {
             Storage::Mem(buf) => {
                 let m = self.index[i];
@@ -94,10 +106,28 @@ impl SparseMatrix {
         }
     }
 
-    /// Synchronously read tile row `i` into `buf` (resized as needed).
-    /// Works for both storage kinds; the SEM engine uses async reads via
-    /// the SAFS handle instead.
+    /// The effective image bytes of tile row `tr` given its base-image
+    /// bytes `base`: the overlay's patched row when one exists, `base`
+    /// otherwise.  The SEM walks read the base byte ranges (walk
+    /// geometry and byte accounting are overlay-invariant) and call this
+    /// at compute time — the "base sweep + delta sweep" fusion point.
+    pub fn effective_row_image<'a>(&'a self, tr: usize, base: &'a [u8]) -> &'a [u8] {
+        match self.overlay.as_ref().and_then(|ov| ov.rows.get(&tr)) {
+            Some(patched) => patched,
+            None => base,
+        }
+    }
+
+    /// Synchronously read the effective bytes of tile row `i` into `buf`
+    /// (resized as needed): the overlay's patched row when one exists,
+    /// the base image otherwise.  Works for both storage kinds; the SEM
+    /// engine uses async reads via the SAFS handle instead.
     pub fn read_tile_row(&self, i: usize, buf: &mut Vec<u8>) {
+        if let Some(bytes) = self.overlay.as_ref().and_then(|ov| ov.rows.get(&i)) {
+            buf.clear();
+            buf.extend_from_slice(bytes);
+            return;
+        }
         let m = self.index[i];
         match &self.storage {
             Storage::Mem(image) => {

@@ -3,10 +3,12 @@
 
 pub mod builder;
 pub mod csr;
+pub mod delta;
 pub mod matrix;
 pub mod tile;
 
 pub use builder::{build_matrix, build_matrix_opts, build_mem, BuildTarget, CooMatrix};
 pub use csr::CsrMatrix;
+pub use delta::{DeltaBatch, DeltaOverlay, DeltaStats};
 pub use matrix::{SparseMatrix, Storage, TileRowMeta, TileRowView};
 pub use tile::{TileValues, TileView, DEFAULT_TILE_DIM, MAX_TILE_DIM};

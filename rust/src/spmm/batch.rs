@@ -35,11 +35,11 @@ use crate::dense::{conv_layout_from_rowmajor, conv_layout_to_rowmajor, DenseCtx,
 use crate::eigen::Operator;
 use crate::metrics::{Counter, MemGuard, PhaseTimers};
 use crate::safs::{FeedMode, ReadRange, WalkScheduler};
-use crate::sparse::SparseMatrix;
+use crate::sparse::{DeltaBatch, DeltaStats, SparseMatrix};
 use crate::util::threadpool::OwnedQueues;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock, RwLockReadGuard};
 
 /// `outputs[i] = matrix × inputs[i]` for every job `i`, in **one** sweep
 /// over the image: each tile-row partition read (or in-memory slice) is
@@ -162,11 +162,13 @@ pub fn spmm_batch(
                             let part = parts[pi];
                             let Some(buf) = sched.acquire(pi) else { continue };
                             let base = matrix.index[part.0].offset;
+                            // Base bytes from the walk; overlay-patched
+                            // rows substitute at compute time.
                             let images: Vec<&[u8]> = (part.0..part.1)
                                 .map(|tr| {
                                     let m = matrix.index[tr];
                                     let s = (m.offset - base) as usize;
-                                    &buf[s..s + m.len as usize]
+                                    matrix.effective_row_image(tr, &buf[s..s + m.len as usize])
                                 })
                                 .collect();
                             for (input, out) in inputs.iter().zip(outs.iter()) {
@@ -259,10 +261,15 @@ struct BatchState {
 /// shares sum to the shared ledger exactly
 /// ([`SpmmBatcher::image_share`]).
 pub struct SpmmBatcher {
-    a: SparseMatrix,
+    /// The resident matrix.  Behind a `RwLock` so dynamic-graph sessions
+    /// can mutate it between admission waves
+    /// ([`SpmmBatcher::apply_delta`]); sweeps and applies hold read
+    /// guards, so a writer blocks until in-flight work drains and new
+    /// sweeps then see the patched tile rows.
+    a: RwLock<SparseMatrix>,
     /// Gram (SVD) mode: `Aᵀ`, making each batched apply the two-hop
     /// `Aᵀ(A·X)` — two batched sweeps, one per hop.
-    at: Option<SparseMatrix>,
+    at: Option<RwLock<SparseMatrix>>,
     opts: SpmmOpts,
     threads: usize,
     state: Mutex<BatchState>,
@@ -274,7 +281,7 @@ impl SpmmBatcher {
     pub fn new(matrix: SparseMatrix, opts: SpmmOpts, threads: usize) -> Arc<SpmmBatcher> {
         assert_eq!(matrix.n_rows, matrix.n_cols, "eigenproblem needs square A");
         Arc::new(SpmmBatcher {
-            a: matrix,
+            a: RwLock::new(matrix),
             at: None,
             opts,
             threads,
@@ -298,8 +305,8 @@ impl SpmmBatcher {
         assert_eq!(a.n_rows, at.n_cols);
         assert_eq!(a.n_cols, at.n_rows);
         Arc::new(SpmmBatcher {
-            a,
-            at: Some(at),
+            a: RwLock::new(a),
+            at: Some(RwLock::new(at)),
             opts,
             threads,
             state: Mutex::new(BatchState {
@@ -312,24 +319,48 @@ impl SpmmBatcher {
         })
     }
 
-    /// The shared matrix (`A`).
-    pub fn matrix(&self) -> &SparseMatrix {
-        &self.a
+    /// Read access to the shared matrix (`A`).  The guard blocks
+    /// [`SpmmBatcher::apply_delta`] while held.
+    pub fn matrix(&self) -> RwLockReadGuard<'_, SparseMatrix> {
+        self.a.read().unwrap()
     }
 
     /// Rows of the operator this batcher applies (`A` rows, or `A`
     /// columns in Gram mode).
     pub fn dim(&self) -> usize {
+        let a = self.a.read().unwrap();
         match &self.at {
-            None => self.a.n_rows as usize,
-            Some(_) => self.a.n_cols as usize,
+            None => a.n_rows as usize,
+            Some(_) => a.n_cols as usize,
         }
     }
 
     /// Total on-array bytes of the image(s) one cold sweep reads (`A`,
     /// plus `Aᵀ` in Gram mode).
     pub fn image_storage_bytes(&self) -> u64 {
-        self.a.storage_bytes() + self.at.as_ref().map_or(0, |m| m.storage_bytes())
+        self.a.read().unwrap().storage_bytes()
+            + self.at.as_ref().map_or(0, |m| m.read().unwrap().storage_bytes())
+    }
+
+    /// Mutate the resident matrix (and its transpose in Gram mode) with
+    /// an edge-delta batch, then fold the overlay into a fresh base
+    /// image once delta nnz exceeds `compact_frac` of the base (see
+    /// [`SparseMatrix::maybe_compact`]; `0.0` disables).  The write
+    /// lock drains in-flight sweeps first, and every later sweep
+    /// substitutes the patched tile rows — callers should mutate at an
+    /// admission-wave boundary so no co-resident job observes a matrix
+    /// change mid-solve.  Returns the per-edge outcome counts of the
+    /// forward batch (`A`'s side; the transpose mirrors them).
+    pub fn apply_delta(&self, batch: &DeltaBatch, compact_frac: f64) -> DeltaStats {
+        let mut a = self.a.write().unwrap();
+        let stats = a.apply_delta(batch);
+        a.maybe_compact(compact_frac);
+        if let Some(at_lock) = &self.at {
+            let mut at = at_lock.write().unwrap();
+            at.apply_delta(&batch.transpose());
+            at.maybe_compact(compact_frac);
+        }
+        stats
     }
 
     /// Register one job and get its operator handle.  Register **all**
@@ -400,7 +431,8 @@ impl SpmmBatcher {
     /// leader deltas across a sweep for exact attribution.
     fn image_bytes_read(&self) -> u64 {
         let one = |m: &SparseMatrix| m.safs_handle().map_or(0, |(_, file)| file.bytes_read());
-        one(&self.a) + self.at.as_ref().map_or(0, &one)
+        one(&self.a.read().unwrap())
+            + self.at.as_ref().map_or(0, |m| one(&m.read().unwrap()))
     }
 
     /// Run one batched sweep (two for Gram mode) for `batch`, post the
@@ -408,7 +440,11 @@ impl SpmmBatcher {
     fn run_sweep(&self, mut batch: Vec<(usize, Box<PendingApply>)>) {
         let width = batch.len();
         let before = self.image_bytes_read();
-        match &self.at {
+        // Read guards held across both hops: a concurrent apply_delta
+        // waits for this sweep, and the whole sweep sees one matrix
+        // incarnation.
+        let a = self.a.read().unwrap();
+        match self.at.as_ref().map(|l| l.read().unwrap()) {
             None => {
                 // Disjoint-field split borrows: inputs shared, outputs
                 // exclusive, out of the same owned batch.
@@ -419,7 +455,7 @@ impl SpmmBatcher {
                         (&p.input, &mut p.output)
                     })
                     .unzip();
-                spmm_batch(&self.a, &inputs, &mut outputs, &self.opts, self.threads);
+                spmm_batch(&a, &inputs, &mut outputs, &self.opts, self.threads);
             }
             Some(at) => {
                 // Hop 1: mid_i = A · input_i.
@@ -431,7 +467,7 @@ impl SpmmBatcher {
                             (&p.input, p.mid.as_mut().expect("gram apply needs mid"))
                         })
                         .unzip();
-                    spmm_batch(&self.a, &inputs, &mut mids, &self.opts, self.threads);
+                    spmm_batch(&a, &inputs, &mut mids, &self.opts, self.threads);
                 }
                 // Hop 2: output_i = Aᵀ · mid_i.
                 {
@@ -442,10 +478,11 @@ impl SpmmBatcher {
                             (&*p.mid.as_ref().unwrap(), &mut p.output)
                         })
                         .unzip();
-                    spmm_batch(at, &mids, &mut outputs, &self.opts, self.threads);
+                    spmm_batch(&at, &mids, &mut outputs, &self.opts, self.threads);
                 }
             }
         }
+        drop(a);
         let delta = self.image_bytes_read() - before;
         let mut st = self.state.lock().unwrap();
         // Exact split: delta = k·q + r, first r participants (by slot
@@ -554,18 +591,27 @@ impl Operator for BatchedOperator {
     fn apply(&self, ctx: &Arc<DenseCtx>, x: &TasMatrix) -> TasMatrix {
         self.count.inc();
         let b = &*self.batcher;
-        let input = self.timers.scope("conv_layout", || {
-            conv_layout_to_rowmajor(x, b.a.tile_dim, b.opts.numa)
-        });
+        // Panel geometry from brief read locks; the sweep itself holds
+        // its own guard, so a delta applied between these reads and the
+        // sweep still multiplies against one consistent incarnation
+        // (compaction preserves tile_dim and shape).
+        let (a_tile, a_rows) = {
+            let a = b.a.read().unwrap();
+            (a.tile_dim, a.n_rows)
+        };
+        let input = self
+            .timers
+            .scope("conv_layout", || conv_layout_to_rowmajor(x, a_tile, b.opts.numa));
         let _mg_in = MemGuard::new(&ctx.mem, (input.n_rows * input.n_cols * 8) as u64);
-        let mid = b.at.as_ref().map(|_| {
-            DenseBlock::new(b.a.n_rows as usize, x.n_cols, b.a.tile_dim, b.opts.numa)
-        });
+        let mid = b
+            .at
+            .as_ref()
+            .map(|_| DenseBlock::new(a_rows as usize, x.n_cols, a_tile, b.opts.numa));
         let _mg_mid = mid
             .as_ref()
             .map(|m| MemGuard::new(&ctx.mem, (m.n_rows * m.n_cols * 8) as u64));
         let out_rows = self.dim();
-        let out_tile = b.at.as_ref().map_or(b.a.tile_dim, |at| at.tile_dim);
+        let out_tile = b.at.as_ref().map_or(a_tile, |at| at.read().unwrap().tile_dim);
         let output = DenseBlock::new(out_rows, x.n_cols, out_tile, b.opts.numa);
         let _mg_out = MemGuard::new(&ctx.mem, (output.n_rows * output.n_cols * 8) as u64);
         let done = self.timers.scope("spmm", || {
@@ -769,6 +815,94 @@ mod tests {
             });
         });
         assert_eq!(batcher.sweeps(), 2);
+    }
+
+    #[test]
+    fn batcher_delta_patches_the_shared_matrix() {
+        let mut rng = Rng::new(96);
+        let mut coo = random_graph(&mut rng, 300, 2500, false);
+        coo.symmetrize();
+        let n = coo.n_rows as usize;
+        let m = build_matrix_opts(&coo, 64, BuildTarget::Mem, true);
+        let batcher = SpmmBatcher::new(m, SpmmOpts::default(), 2);
+        let op = batcher.register();
+        let ctx = DenseCtx::mem_for_tests(64);
+        let x = TasMatrix::from_fn(&ctx, n, 2, |r, c| ((r * 3 + c) % 9) as f64 - 4.0);
+        let before = op.apply(&ctx, &x).to_colmajor();
+
+        let mut b = DeltaBatch::new();
+        b.insert_unweighted(0, 5);
+        b.insert_unweighted(5, 0);
+        // Delete an edge disjoint from the inserts so the batch is never
+        // a net no-op.
+        let del = *coo.entries.iter().find(|&&(r, _)| r > 5).unwrap();
+        b.delete(del.0, del.1);
+        let stats = batcher.apply_delta(&b, 0.0);
+        assert!(stats.inserted + stats.updated == 2 && stats.deleted == 1);
+
+        // The next apply through the SAME operator must match a solo run
+        // against an independently delta-patched matrix, bitwise.
+        let got = op.apply(&ctx, &x).to_colmajor();
+        assert_ne!(got, before, "the delta must change the product");
+        let mut solo = build_matrix_opts(&coo, 64, BuildTarget::Mem, true);
+        solo.apply_delta(&b);
+        let input = conv_layout_to_rowmajor(&x, 64, true);
+        let mut out = DenseBlock::new(n, x.n_cols, 64, true);
+        spmm(&solo, &input, &mut out, &SpmmOpts::default(), 2);
+        let got_cm = {
+            let t = conv_layout_from_rowmajor(&ctx, &out);
+            t.to_colmajor()
+        };
+        assert_eq!(got, got_cm, "batched post-delta apply not bitwise vs solo");
+
+        // A generous threshold folds the overlay into a new base.
+        assert!(batcher.matrix().overlay.is_some());
+        batcher.apply_delta(&DeltaBatch::default(), 0.0); // no-op batch, no compact
+        assert!(batcher.matrix().overlay.is_some());
+        let mut b2 = DeltaBatch::new();
+        b2.insert_unweighted(1, 7);
+        b2.insert_unweighted(7, 1);
+        batcher.apply_delta(&b2, 1e-9);
+        assert!(batcher.matrix().overlay.is_none(), "threshold crossed: compacted");
+        let after_compact = op.apply(&ctx, &x).to_colmajor();
+        solo.apply_delta(&b2);
+        let mut out2 = DenseBlock::new(n, x.n_cols, 64, true);
+        spmm(&solo, &input, &mut out2, &SpmmOpts::default(), 2);
+        let want2 = conv_layout_from_rowmajor(&ctx, &out2).to_colmajor();
+        assert_eq!(after_compact, want2, "post-compaction apply not bitwise");
+    }
+
+    #[test]
+    fn gram_batcher_delta_mutates_both_images_in_lockstep() {
+        use crate::eigen::GramOperator;
+        let mut rng = Rng::new(97);
+        let coo = random_graph(&mut rng, 200, 1500, false);
+        let at_coo = coo.transpose();
+        let n = coo.n_cols as usize;
+        let build = || {
+            (
+                build_matrix_opts(&coo, 64, BuildTarget::Mem, true),
+                build_matrix_opts(&at_coo, 64, BuildTarget::Mem, true),
+            )
+        };
+        let mut b = DeltaBatch::new();
+        b.insert_unweighted(2, 9);
+        b.delete(coo.entries[0].0, coo.entries[0].1);
+
+        let (a, at) = build();
+        let batcher = SpmmBatcher::new_gram(a, at, SpmmOpts::default(), 2);
+        let op = batcher.register();
+        batcher.apply_delta(&b, 0.0);
+        let ctx = DenseCtx::mem_for_tests(64);
+        let x = TasMatrix::from_fn(&ctx, n, 2, |r, c| ((r + 2 * c) % 7) as f64 - 3.0);
+        let got = op.apply(&ctx, &x).to_colmajor();
+
+        let (mut a, mut at) = build();
+        a.apply_delta(&b);
+        at.apply_delta(&b.transpose());
+        let solo = GramOperator::new(a, at, SpmmOpts::default(), 2);
+        let want = solo.apply(&ctx, &x).to_colmajor();
+        assert_eq!(got, want, "gram batcher delta diverged from solo gram on patched images");
     }
 
     #[test]

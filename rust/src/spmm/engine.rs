@@ -149,11 +149,14 @@ pub fn spmm(
                             let part = parts[pi];
                             let Some(buf) = sched.acquire(pi) else { continue };
                             let base = matrix.index[part.0].offset;
+                            // The walk reads the base byte ranges; any
+                            // delta-patched tile row substitutes its
+                            // overlay bytes at compute time.
                             let images: Vec<&[u8]> = (part.0..part.1)
                                 .map(|tr| {
                                     let m = matrix.index[tr];
                                     let s = (m.offset - base) as usize;
-                                    &buf[s..s + m.len as usize]
+                                    matrix.effective_row_image(tr, &buf[s..s + m.len as usize])
                                 })
                                 .collect();
                             multiply_partition(

@@ -251,11 +251,14 @@ fn interval_product_rowmajor(
         Some(pref) => {
             if let Some(buf) = pref.acquire(iv) {
                 let base = matrix.index[tr0].offset;
+                // The stream reads the base byte ranges; delta-patched
+                // tile rows substitute their overlay bytes at compute
+                // time (base sweep + delta sweep, fused per tile row).
                 let views: Vec<&[u8]> = (tr0..tr1)
                     .map(|tr| {
                         let m = matrix.index[tr];
                         let s = (m.offset - base) as usize;
-                        &buf[s..s + m.len as usize]
+                        matrix.effective_row_image(tr, &buf[s..s + m.len as usize])
                     })
                     .collect();
                 multiply_rows_from_source(matrix, &views, input, &mut out, b, vectorize);

@@ -40,6 +40,7 @@ fn friendster_sem_eight_eigenvalues() {
         seed: 1,
         compute_eigenvectors: false,
         refine_steps: 0,
+        warm_start: None,
     };
     let res = solve(&op, &ctx, &cfg);
     assert!(res.converged, "history {:?}", res.history);
@@ -77,6 +78,7 @@ fn page_svd_end_to_end() {
         seed: 2,
         compute_eigenvectors: false,
         refine_steps: 0,
+        warm_start: None,
     };
     let before = fs.stats();
     let res = svd(&op, &ctx, &cfg);
@@ -127,6 +129,7 @@ fn xla_and_native_kernels_agree_on_eigenvalues() {
             seed: 4,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         solve(&op, &ctx, &cfg)
     };
@@ -169,6 +172,7 @@ fn knn_weighted_eigenvalues() {
         seed: 6,
         compute_eigenvectors: false,
         refine_steps: 0,
+        warm_start: None,
     };
     let res = solve(&op, &ctx, &cfg);
     assert!(res.converged, "history {:?}", res.history);

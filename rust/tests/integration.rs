@@ -49,6 +49,7 @@ fn eigensolver_storage_and_threads_invariance() {
         seed: 42,
         compute_eigenvectors: false,
         refine_steps: 0,
+        warm_start: None,
     };
     let mut results = Vec::new();
     for (em, threads) in [(false, 1), (false, 4), (true, 2), (true, 4)] {
@@ -105,6 +106,7 @@ fn matrix_cache_changes_io_not_results() {
             seed: 9,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let res = solve(&op, &ctx, &cfg);
         (res.eigenvalues, fs.stats().bytes_written)
@@ -185,6 +187,7 @@ fn throttling_does_not_change_results() {
             seed: 4,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         solve(&op, &ctx, &cfg).eigenvalues
     };
@@ -219,6 +222,7 @@ fn subspace_files_are_cleaned_up() {
         seed: 11,
         compute_eigenvectors: false,
         refine_steps: 0,
+        warm_start: None,
     };
     let res = solve(&op, &ctx, &cfg);
     assert!(res.converged);

@@ -95,6 +95,7 @@ fn em_eigensolve_fused_beats_eager_within_budget() {
             seed: 5,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let res = solve(&op, &ctx, &cfg);
         assert!(res.converged, "fused={fused}: {:?}", res.history);
@@ -151,6 +152,7 @@ fn per_device_skew_stays_balanced() {
         seed: 9,
         compute_eigenvectors: false,
         refine_steps: 0,
+        warm_start: None,
     };
     let res = solve(&op, &ctx, &ecfg);
     assert!(res.converged);
@@ -258,6 +260,7 @@ fn em_eigensolve_peak_dense_bounded_by_group() {
             seed: 5,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let _ = solve(&op, &ctx, &cfg);
         ctx.io_phases.dense_peaks_snapshot()
@@ -431,6 +434,7 @@ fn em_svd_peak_dense_bounded_by_group_and_staging() {
             seed: 5,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let _ = svd(&op, &ctx, &cfg);
         (ctx.io_phases.dense_peaks_snapshot(), ctx.io_phases.dense_peak("spmm.stage"))
@@ -923,6 +927,7 @@ fn f32_storage_halves_subspace_bytes_at_equal_iterations() {
             seed: 5,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let res = solve(&op, &ctx, &ecfg);
         (res.operator_applies, fs.stats())
@@ -1034,6 +1039,7 @@ fn f32_em_eigensolve_meets_55_percent_byte_acceptance() {
             seed: 5,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let before = fs.stats();
         let res = solve(&op, &ctx, &ecfg);
@@ -1085,6 +1091,7 @@ fn four_batched_em_solves_share_one_cold_image_sweep() {
         .map(|j| JobSpec {
             name: format!("j{j}"),
             em: true,
+            warm: false,
             cfg: EigenConfig {
                 nev: 4,
                 block_size: 2,
@@ -1095,6 +1102,7 @@ fn four_batched_em_solves_share_one_cold_image_sweep() {
                 seed: 5,
                 compute_eigenvectors: false,
                 refine_steps: 0,
+                warm_start: None,
             },
         })
         .collect();
@@ -1157,6 +1165,7 @@ fn batched_per_job_ledgers_sum_to_the_device_ledger_exactly() {
         .map(|j| JobSpec {
             name: format!("j{j}"),
             em: true,
+            warm: false,
             cfg: EigenConfig {
                 nev: 3,
                 block_size: 2,
@@ -1167,6 +1176,7 @@ fn batched_per_job_ledgers_sum_to_the_device_ledger_exactly() {
                 seed: 41 + j as u64, // distinct jobs: real interleaving
                 compute_eigenvectors: false,
                 refine_steps: 0,
+                warm_start: None,
             },
         })
         .collect();

@@ -122,6 +122,7 @@ fn prop_f32_eigensolve_residuals_and_orthogonality_within_bounds() {
             seed: g.u64(),
             compute_eigenvectors: true,
             refine_steps: 0,
+            warm_start: None,
         };
         let r64 = run_eig(&coo, StoragePrecision::F64, em, &ecfg);
         if !r64.converged {
@@ -242,6 +243,7 @@ fn prop_f32_svd_gram_residuals_within_bounds() {
             seed: g.u64(),
             compute_eigenvectors: true,
             refine_steps: 0,
+            warm_start: None,
         };
         let r64 = run_svd(&coo, &at_coo, StoragePrecision::F64, em, &ecfg);
         if !r64.converged {
@@ -303,6 +305,7 @@ fn refinement_under_f32_storage_tightens_residuals_monotonically() {
             seed: 19,
             compute_eigenvectors: true,
             refine_steps: 3,
+            warm_start: None,
         };
         let res = solve(&op, &ctx, &ecfg);
         assert!(res.converged, "em {em}: {:?}", res.history);
@@ -350,6 +353,7 @@ fn f32_solves_are_bitwise_reproducible_run_to_run() {
             seed: 31,
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let res = solve(&op, &ctx, &ecfg);
         (res.eigenvalues, res.residuals)

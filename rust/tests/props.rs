@@ -10,8 +10,10 @@ use flasheigen::eigen::ortho::{normalize_block_eager, ortho_against_eager};
 use flasheigen::eigen::{ortho_normalize_with, sym_eig, GramOperator, Operator, SpmmOperator};
 use flasheigen::graph::{gnm, gnm_undirected, rmat, RmatParams};
 use flasheigen::safs::{IoBackend, Safs, SafsConfig, StoragePrecision, StripeMap, WaitMode};
-use flasheigen::sparse::{build_matrix, build_matrix_opts, BuildTarget, CsrMatrix};
-use flasheigen::spmm::{spmm, spmm_csr, DenseBlock, SpmmOpts};
+use flasheigen::sparse::{
+    build_matrix, build_matrix_opts, BuildTarget, CooMatrix, CsrMatrix, DeltaBatch,
+};
+use flasheigen::spmm::{spmm, spmm_csr, DenseBlock, SpmmBatcher, SpmmOpts};
 use flasheigen::util::prop::{assert_close, run_prop};
 use flasheigen::util::rng::Rng;
 use flasheigen::util::threadpool::{parallel_for, split_ranges};
@@ -525,6 +527,7 @@ fn prop_read_ahead_depths_bitwise_for_em_svd() {
                 seed: solver_seed,
                 compute_eigenvectors: false,
                 refine_steps: 0,
+                warm_start: None,
             };
             let res = flasheigen::eigen::svd(&op, &ctx, &ecfg);
             match &reference {
@@ -669,6 +672,7 @@ fn prop_image_cache_budgets_bitwise_for_em_eigensolve_and_svd() {
                 seed: solver_seed,
                 compute_eigenvectors: false,
                 refine_steps: 0,
+                warm_start: None,
             };
             let vals = if svd_path {
                 let a = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "pa"), true);
@@ -761,6 +765,7 @@ fn prop_unified_scheduler_grid_bitwise_and_no_worse_bytes() {
                 seed: solver_seed,
                 compute_eigenvectors: false,
                 refine_steps: 0,
+                warm_start: None,
             };
             let vals = if svd_path {
                 let a = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "ua"), true);
@@ -853,6 +858,7 @@ fn prop_io_backend_grid_bitwise_and_per_device_bytes() {
                 seed: solver_seed,
                 compute_eigenvectors: false,
                 refine_steps: 0,
+                warm_start: None,
             };
             let vals = if svd_path {
                 let a = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "ba"), true);
@@ -1011,6 +1017,7 @@ fn prop_batched_serving_bitwise_matches_sequential_and_saves_bytes() {
             .map(|j| JobSpec {
                 name: format!("j{j}"),
                 em,
+                warm: false,
                 cfg: flasheigen::eigen::EigenConfig {
                     nev: 2,
                     block_size: 2,
@@ -1021,6 +1028,7 @@ fn prop_batched_serving_bitwise_matches_sequential_and_saves_bytes() {
                     seed: solver_seed,
                     compute_eigenvectors: false,
                     refine_steps: 0,
+                    warm_start: None,
                 },
             })
             .collect();
@@ -1059,6 +1067,259 @@ fn prop_batched_serving_bitwise_matches_sequential_and_saves_bytes() {
     });
 }
 
+/// Random unweighted churn against `coo`: fresh inserts plus deletes of
+/// a mix of present and absent edges (absent deletes are counted
+/// no-ops, part of the contract under test).
+fn churn(rng: &mut Rng, coo: &CooMatrix, ins: usize, dels: usize) -> DeltaBatch {
+    let n = coo.n_rows;
+    let mut b = DeltaBatch::new();
+    for _ in 0..ins {
+        b.insert_unweighted(rng.gen_range(n) as u32, rng.gen_range(n) as u32);
+    }
+    for _ in 0..dels {
+        if rng.gen_range(2) == 0 && !coo.entries.is_empty() {
+            let i = rng.gen_range(coo.entries.len() as u64) as usize;
+            b.delete(coo.entries[i].0, coo.entries[i].1);
+        } else {
+            b.delete(rng.gen_range(n) as u32, rng.gen_range(n) as u32);
+        }
+    }
+    b
+}
+
+/// The mutated edge list `coo − deletes + inserts` (deletes first, the
+/// batch semantics), for from-scratch rebuild references.
+fn mutated(coo: &CooMatrix, batch: &DeltaBatch) -> CooMatrix {
+    let mut set: std::collections::BTreeSet<(u32, u32)> = coo.entries.iter().copied().collect();
+    for &(r, c) in &batch.deletes {
+        set.remove(&(r, c));
+    }
+    for &(r, c, _) in &batch.inserts {
+        set.insert((r, c));
+    }
+    let mut out = CooMatrix::new(coo.n_rows, coo.n_cols);
+    for (r, c) in set {
+        out.push(r, c);
+    }
+    out.sort_dedup();
+    out
+}
+
+#[test]
+fn prop_delta_overlay_matches_rebuilt_bitwise_across_spmm_paths() {
+    // The delta-overlay merge contract (`sparse/delta.rs`), end to end:
+    // A·X through an overlay-patched image must be BITWISE identical to
+    // A·X through a from-scratch build of the mutated edge list, on
+    // every SpMM path — the eager engine's spmm(), the streamed
+    // operator apply and the multi-tenant batched apply — over memory-
+    // and SSD-backed subspaces and matrix images.
+    run_prop("delta-overlay-bitwise", 6, |g| {
+        let n = g.usize_in(2, 400) as u64;
+        let nnz = g.usize_in(0, 3000) as u64;
+        let tile = *g.choose(&[16usize, 32, 64]);
+        let b = g.usize_in(1, 3);
+        let em = g.bool();
+        let sem = g.bool();
+        let threads = g.usize_in(1, 3);
+        let mut rng = Rng::new(g.u64());
+        let coo = gnm(n, nnz.min(n * n.saturating_sub(1)), &mut rng);
+        let batch = churn(&mut rng, &coo, g.usize_in(1, 60), g.usize_in(0, 60));
+        let rebuilt_coo = mutated(&coo, &batch);
+        let nn = coo.n_rows as usize;
+        let x_seed = g.u64();
+        // One variant = (eager bits, streamed bits, batched bits).
+        let run_paths = |patched: bool, tag: &str| {
+            let fs = Safs::new(SafsConfig::untimed());
+            let ctx = DenseCtx::with(fs.clone(), em, 64, threads, 3, 1, Arc::new(NativeKernels));
+            let build = |name: &str| {
+                let src = if patched { &coo } else { &rebuilt_coo };
+                let mut m = if sem {
+                    build_matrix_opts(src, tile, BuildTarget::Safs(&fs, name), true)
+                } else {
+                    build_matrix_opts(src, tile, BuildTarget::Mem, true)
+                };
+                if patched {
+                    m.apply_delta(&batch);
+                }
+                m
+            };
+            let m = build(&format!("{tag}a"));
+            let input =
+                DenseBlock::from_fn(nn, b, tile, true, |r, c| ((r * 7 + c) % 19) as f64 - 9.0);
+            let mut out = DenseBlock::new(nn, b, tile, true);
+            spmm(&m, &input, &mut out, &SpmmOpts::default(), threads);
+            let eager = out.to_vec();
+            let op = SpmmOperator::new(m, SpmmOpts::default(), threads);
+            let x = TasMatrix::zeros(&ctx, nn, b);
+            mv_random(&x, x_seed);
+            let streamed = op.apply_streamed(&ctx, &x).to_colmajor();
+            let batcher = SpmmBatcher::new(build(&format!("{tag}b")), SpmmOpts::default(), threads);
+            let bop = batcher.register();
+            let batched = bop.apply(&ctx, &x).to_colmajor();
+            (eager, streamed, batched)
+        };
+        let (oe, os, ob) = run_paths(true, "ov");
+        let (re, rs, rb) = run_paths(false, "rb");
+        if oe != re {
+            return Err("eager spmm() bits differ: overlay vs rebuilt".into());
+        }
+        if os != rs {
+            return Err("streamed apply bits differ: overlay vs rebuilt".into());
+        }
+        if ob != rb {
+            return Err("batched apply bits differ: overlay vs rebuilt".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_warm_restart_spectrum_matches_cold_and_reconverges_no_slower() {
+    // The warm-start contract (`eigen/krylov_schur.rs` + `service/`):
+    // after a small symmetric churn, a warm re-solve seeded from the
+    // pre-churn converged basis must find the SAME spectrum as a cold
+    // solve of the mutated graph, in no more restarts — with and
+    // without compaction between the stash and the re-solve, over
+    // memory- and SSD-backed job subspaces.
+    run_prop("warm-vs-cold-restart", 3, |g| {
+        use flasheigen::service::{GraphSession, JobSpec, SolverPool};
+        let n = g.usize_in(80, 240) as u64;
+        let nnz = g.usize_in(n as usize, 1600) as u64;
+        let em = g.bool();
+        let compact = g.bool();
+        let solver_seed = g.u64();
+        let mut rng = Rng::new(g.u64());
+        let mut coo = gnm_undirected(n, nnz.min(n * n.saturating_sub(1) / 2), &mut rng);
+        coo.symmetrize();
+        let fs = Safs::new(SafsConfig::untimed());
+        let m = build_matrix_opts(&coo, 32, BuildTarget::Safs(&fs, "wm"), true);
+        let sess = GraphSession::eigen("w", fs, m, SpmmOpts::default(), 2, 64);
+        let job = |name: &str, warm: bool, vecs: bool| JobSpec {
+            name: name.into(),
+            em,
+            warm,
+            cfg: flasheigen::eigen::EigenConfig {
+                nev: 2,
+                block_size: 2,
+                num_blocks: 6,
+                tol: 1e-6,
+                max_restarts: 200,
+                which: flasheigen::eigen::Which::LargestMagnitude,
+                seed: solver_seed,
+                compute_eigenvectors: vecs,
+                refine_steps: 0,
+                warm_start: None,
+            },
+        };
+        let pool = SolverPool::new(0, 1);
+        pool.run(&sess, &[job("prior", false, true)]);
+        // A small symmetric churn: one fresh edge pair in, one pair out.
+        let mut batch = DeltaBatch::new();
+        let (u, v) = loop {
+            let u = rng.gen_range(n) as u32;
+            let v = rng.gen_range(n) as u32;
+            if u != v && !coo.entries.contains(&(u, v)) {
+                break (u, v);
+            }
+        };
+        batch.insert_unweighted(u, v);
+        batch.insert_unweighted(v, u);
+        if let Some(&(r, c)) = coo
+            .entries
+            .iter()
+            .find(|&&(r, c)| r < c && (r, c) != (u.min(v), u.max(v)))
+        {
+            batch.delete(r, c);
+            batch.delete(c, r);
+        }
+        sess.apply_deltas(&batch, if compact { 1e-9 } else { 0.0 });
+        if compact != sess.batcher().matrix().overlay.is_none() {
+            return Err(format!("unexpected overlay state for compact={compact}"));
+        }
+        let cold = pool.run(&sess, &[job("cold", false, false)]).pop().unwrap();
+        let warm = pool.run(&sess, &[job("warm", true, false)]).pop().unwrap();
+        assert_close(&warm.values, &cold.values, 1e-5, 1e-5, "warm vs cold spectrum")?;
+        if warm.restarts > cold.restarts {
+            return Err(format!(
+                "warm re-solve took {} restarts, cold took {}",
+                warm.restarts, cold.restarts
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compaction_bitwise_invariant_under_live_image_cache() {
+    // The compaction contract (`sparse/delta.rs`) composed with the
+    // cross-apply image cache: warm the cache on the base incarnation,
+    // mutate, then compact — which re-creates the SAFS file and bumps
+    // the image incarnation.  Every subsequent read must see the NEW
+    // image — bitwise equal to the overlay result before compaction and
+    // to a from-scratch build of the mutated graph — never a stale
+    // cached tile row of the retired incarnation.
+    run_prop("compaction-cache-bitwise", 5, |g| {
+        let n = g.usize_in(2, 300) as u64;
+        let nnz = g.usize_in(0, 2500) as u64;
+        let tile = *g.choose(&[16usize, 32]);
+        let b = g.usize_in(1, 3);
+        let threads = g.usize_in(1, 3);
+        let depth = *g.choose(&[0usize, 2]);
+        let mut rng = Rng::new(g.u64());
+        let coo = gnm(n, nnz.min(n * n.saturating_sub(1)), &mut rng);
+        let batch = churn(&mut rng, &coo, g.usize_in(1, 40), g.usize_in(0, 40));
+        let nn = coo.n_rows as usize;
+        let input = DenseBlock::from_fn(nn, b, tile, true, |r, c| ((r * 11 + c) % 17) as f64 - 8.0);
+        let image_bytes = build_matrix_opts(&coo, tile, BuildTarget::Mem, true).storage_bytes();
+        let mut cfg = SafsConfig::untimed();
+        cfg.read_ahead = depth;
+        cfg.image_cache_bytes = image_bytes + 4096;
+        let fs = Safs::new(cfg.clone());
+        let mut m = build_matrix_opts(&coo, tile, BuildTarget::Safs(&fs, "cc"), true);
+        let mut out = DenseBlock::new(nn, b, tile, true);
+        // Warm the image cache on the base incarnation.
+        spmm(&m, &input, &mut out, &SpmmOpts::default(), threads);
+        m.apply_delta(&batch);
+        spmm(&m, &input, &mut out, &SpmmOpts::default(), threads);
+        let overlay_vals = out.to_vec();
+        if !m.maybe_compact(1e-9) {
+            return Err("compaction threshold should have triggered".into());
+        }
+        if m.overlay.is_some() {
+            return Err("overlay must be folded after compaction".into());
+        }
+        spmm(&m, &input, &mut out, &SpmmOpts::default(), threads);
+        if out.to_vec() != overlay_vals {
+            return Err("A·X bits changed across compaction under a live image cache".into());
+        }
+        // From-scratch reference for the mutated graph, same config.
+        let fs2 = Safs::new(cfg);
+        let m2 =
+            build_matrix_opts(&mutated(&coo, &batch), tile, BuildTarget::Safs(&fs2, "cc"), true);
+        let mut out2 = DenseBlock::new(nn, b, tile, true);
+        spmm(&m2, &input, &mut out2, &SpmmOpts::default(), threads);
+        if out2.to_vec() != overlay_vals {
+            return Err("compacted image drifted from a from-scratch rebuild".into());
+        }
+        // The streamed operator boundary over the compacted image agrees.
+        let ctx = DenseCtx::with(fs, false, 64, threads, 3, 1, Arc::new(NativeKernels));
+        let ctx2 = DenseCtx::with(fs2, false, 64, threads, 3, 1, Arc::new(NativeKernels));
+        let x_seed = g.u64();
+        let op = SpmmOperator::new(m, SpmmOpts::default(), threads);
+        let x = TasMatrix::zeros(&ctx, nn, b);
+        mv_random(&x, x_seed);
+        let compacted_stream = op.apply_streamed(&ctx, &x).to_colmajor();
+        let op2 = SpmmOperator::new(m2, SpmmOpts::default(), threads);
+        let x2 = TasMatrix::zeros(&ctx2, nn, b);
+        mv_random(&x2, x_seed);
+        let rebuilt_stream = op2.apply_streamed(&ctx2, &x2).to_colmajor();
+        if compacted_stream != rebuilt_stream {
+            return Err("streamed apply bits differ: compacted vs from-scratch".into());
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_eigenvalues_within_gershgorin() {
     // All Ritz values of an adjacency matrix lie within [-Δ, Δ] where Δ
@@ -1087,6 +1348,7 @@ fn prop_eigenvalues_within_gershgorin() {
             seed: g.u64(),
             compute_eigenvectors: false,
             refine_steps: 0,
+            warm_start: None,
         };
         let res = flasheigen::eigen::solve(&op, &ctx, &cfg);
         for &ev in &res.eigenvalues {
